@@ -1,0 +1,188 @@
+"""AOT exporter: lower the L2/L1 computations to HLO *text* artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust `xla` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to artifacts/):
+  train_step_<cfg>.hlo.txt   (P_pad f32, (B,T+1) i32) -> (loss f32, P_pad f32)
+  sgd_update_<cfg>.hlo.txt   (lr, mu, p, g, v) -> (p', v')        [flat ABI]
+  reduce_n<N>_<L>.hlo.txt    (N, L) f32 -> (L,) f32               [sum]
+  add_pair_<L>.hlo.txt       (L,) + (L,) -> (L,)                  [ring step]
+  manifest.json              shapes/dtypes + model ABI for the rust runtime
+
+`make artifacts` runs this once; Python never executes at training time.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import CONFIGS, REDUCE_SHAPES
+from .kernels import add_pair, reduce_sum, sgd_update
+
+PAD_BLOCK = 65536  # keep flat param vectors SGD/reduce-kernel block aligned
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def padded_len(n: int) -> int:
+    return (n + PAD_BLOCK - 1) // PAD_BLOCK * PAD_BLOCK
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io_entry(shape, dtype):
+    name = {"float32": "f32", "int32": "i32"}[jnp.dtype(dtype).name]
+    return {"shape": list(shape), "dtype": name}
+
+
+def export_train_step(cfg, out_dir, manifest):
+    P = cfg.n_params()
+    Pp = padded_len(P)
+
+    def step(p_pad, batch):
+        loss, g = M.train_step_flat(cfg, p_pad[:P], batch)
+        return loss, jnp.concatenate([g, jnp.zeros(Pp - P, jnp.float32)])
+
+    batch_shape = (cfg.batch, cfg.seq_len + 1)
+    lowered = jax.jit(step).lower(
+        _spec((Pp,), jnp.float32), _spec(batch_shape, jnp.int32)
+    )
+    name = f"train_step_{cfg.name}"
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"].append({
+        "name": name,
+        "path": path,
+        "inputs": [_io_entry((Pp,), jnp.float32), _io_entry(batch_shape, jnp.int32)],
+        "outputs": [_io_entry((), jnp.float32), _io_entry((Pp,), jnp.float32)],
+    })
+    print(f"  {name}: P={P} padded={Pp} batch={batch_shape}")
+
+
+def export_sgd(cfg, out_dir, manifest):
+    Pp = padded_len(cfg.n_params())
+
+    def upd(lr, mu, p, g, v):
+        return sgd_update(p, g, v, lr, mu)
+
+    s1 = _spec((1,), jnp.float32)
+    sv = _spec((Pp,), jnp.float32)
+    lowered = jax.jit(upd).lower(s1, s1, sv, sv, sv)
+    name = f"sgd_update_{cfg.name}"
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"].append({
+        "name": name,
+        "path": path,
+        "inputs": [_io_entry((1,), jnp.float32)] * 2 + [_io_entry((Pp,), jnp.float32)] * 3,
+        "outputs": [_io_entry((Pp,), jnp.float32)] * 2,
+    })
+    print(f"  {name}: padded={Pp}")
+
+
+def export_reduce(out_dir, manifest):
+    lens = sorted({l for _, l in REDUCE_SHAPES})
+    for length in lens:
+        lowered = jax.jit(add_pair).lower(
+            _spec((length,), jnp.float32), _spec((length,), jnp.float32)
+        )
+        name = f"add_pair_{length}"
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["artifacts"].append({
+            "name": name,
+            "path": path,
+            "inputs": [_io_entry((length,), jnp.float32)] * 2,
+            "outputs": [_io_entry((length,), jnp.float32)],
+        })
+        print(f"  {name}")
+    for n, length in REDUCE_SHAPES:
+        lowered = jax.jit(reduce_sum).lower(_spec((n, length), jnp.float32))
+        name = f"reduce_n{n}_{length}"
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["artifacts"].append({
+            "name": name,
+            "path": path,
+            "inputs": [_io_entry((n, length), jnp.float32)],
+            "outputs": [_io_entry((length,), jnp.float32)],
+        })
+        print(f"  {name}")
+
+
+def export_init_params(cfg, out_dir, manifest):
+    """Materialize deterministic initial parameters as a raw f32 binary so
+    the rust trainer starts from the same point as the python reference."""
+    params = M.init_params(cfg, seed=0)
+    flat = M.flatten_params(cfg, params)
+    Pp = padded_len(cfg.n_params())
+    import numpy as np
+
+    buf = np.zeros(Pp, np.float32)
+    buf[: flat.shape[0]] = np.asarray(flat)
+    path = f"init_params_{cfg.name}.f32"
+    buf.tofile(os.path.join(out_dir, path))
+    manifest["init_params"].append({"model": cfg.name, "path": path, "len": Pp})
+    print(f"  init_params_{cfg.name}: {Pp} f32")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small",
+                    help="comma-separated model configs (tiny,small,gpt100m)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"artifacts": [], "models": [], "init_params": []}
+    names = [n for n in args.configs.split(",") if n]
+    for n in names:
+        cfg = CONFIGS[n]
+        print(f"[aot] exporting model '{cfg.name}' ({cfg.n_params()/1e6:.1f}M params)")
+        manifest["models"].append({
+            "name": cfg.name,
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+            "batch": cfg.batch,
+            "n_params": cfg.n_params(),
+            "padded": padded_len(cfg.n_params()),
+            "param_shapes": [[nm, list(s)] for nm, s in cfg.param_shapes()],
+        })
+        export_train_step(cfg, args.out, manifest)
+        export_sgd(cfg, args.out, manifest)
+        export_init_params(cfg, args.out, manifest)
+    print("[aot] exporting reduce kernels")
+    export_reduce(args.out, manifest)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

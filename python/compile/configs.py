@@ -1,0 +1,90 @@
+"""Model / artifact configurations shared by the L2 model and the AOT exporter.
+
+Every config is a fixed-shape contract: the rust runtime loads the lowered
+HLO for a config by name and feeds literals with exactly these shapes, so
+all dimensions here must match what `model.py` traces.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer configuration.
+
+    Dimensions are chosen MXU/VMEM-friendly (multiples of 128 where it
+    matters) so the Pallas kernels tile cleanly — see DESIGN.md §2.
+    """
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch: int
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_shapes(self):
+        """Ordered (name, shape) list — the flat-parameter ABI used by the
+        AOT artifacts and the rust runtime. Order matters."""
+        L, D, F, V, T = self.n_layers, self.d_model, self.d_ff, self.vocab, self.seq_len
+        return [
+            ("emb", (V, D)),
+            ("pos", (T, D)),
+            ("ln1_scale", (L, D)),
+            ("ln1_bias", (L, D)),
+            ("w_qkv", (L, D, 3 * D)),
+            ("w_out", (L, D, D)),
+            ("ln2_scale", (L, D)),
+            ("ln2_bias", (L, D)),
+            ("w_ff1", (L, D, F)),
+            ("b_ff1", (L, F)),
+            ("w_ff2", (L, F, D)),
+            ("b_ff2", (L, D)),
+            ("lnf_scale", (D,)),
+            ("lnf_bias", (D,)),
+            ("w_head", (D, V)),
+        ]
+
+    def n_params(self) -> int:
+        return sum(int(__import__("math").prod(s)) for _, s in self.param_shapes())
+
+
+# Test-size config: fast to trace, compile and execute; used by pytest and
+# the rust integration tests.
+TINY = ModelConfig(
+    name="tiny", vocab=512, d_model=128, n_layers=2, n_heads=4, d_ff=512,
+    seq_len=32, batch=2,
+)
+
+# Default end-to-end config (~19M params): trains in minutes on the CPU
+# PJRT backend while exercising every code path.
+SMALL = ModelConfig(
+    name="small", vocab=8192, d_model=512, n_layers=4, n_heads=8, d_ff=2048,
+    seq_len=64, batch=4,
+)
+
+# ~124M params — the mandated ~100M-parameter e2e model (examples/train_e2e
+# with --model gpt100m). d=768, L=12, matching GPT-2-small shapes.
+GPT100M = ModelConfig(
+    name="gpt100m", vocab=32768, d_model=768, n_layers=12, n_heads=12,
+    d_ff=3072, seq_len=128, batch=4,
+)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL, GPT100M)}
+
+# Reduce-kernel artifact sizes exported for the coordinator hot path:
+# (n_way, elements). Ring allreduce uses n=2 (pairwise accumulate); the
+# SHARP in-network path aggregates n inputs at the simulated switch.
+REDUCE_SHAPES = [
+    (2, 65536),
+    (2, 262144),
+    (4, 65536),
+    (4, 262144),
+    (8, 65536),
+]

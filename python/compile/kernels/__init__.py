@@ -1,0 +1,11 @@
+"""L1 Pallas kernels for the paper's compute hot-spots.
+
+- matmul:   MXU-tiled matmul used by every transformer projection (fwd+bwd).
+- reduce:   n-way gradient segment reduction — the allreduce aggregation core.
+- sgd:      fused momentum-SGD parameter update.
+- ref:      pure-jnp oracles for all of the above.
+"""
+
+from .matmul import matmul, matmul_raw  # noqa: F401
+from .reduce import add_pair, reduce_sum  # noqa: F401
+from .sgd import sgd_update  # noqa: F401

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: tiled matmul shaped for the TPU MXU.
+
+The paper's training compute ran on V100s through cuBLAS; per DESIGN.md §2
+(hardware adaptation) we re-express the projection matmuls as a Pallas
+kernel tiled for the 128x128 systolic MXU with f32 accumulation, and express
+the HBM<->VMEM schedule with a (m, n, k) grid + BlockSpecs instead of CUDA
+threadblocks.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO (see /opt/xla-example
+README). Real-TPU efficiency is estimated in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile edges. Shapes smaller than a tile fall back to
+# the full dimension (still a single VMEM-resident block).
+TILE_M = 128
+TILE_N = 128
+TILE_K = 512
+
+
+def _pick(block: int, dim: int) -> int:
+    """Largest divisor of `dim` that is <= block (prefer the block itself)."""
+    if dim % block == 0:
+        return block
+    b = min(block, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, n_k: int):
+    """Grid = (M/bm, N/bn, K/bk); k is the innermost (sequential) axis so the
+    output block stays resident while partial products accumulate."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul_raw(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Pallas tiled matmul: (M, K) @ (K, N) -> (M, N), f32 accumulate."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contracting mismatch {x.shape} @ {y.shape}"
+    bm, bn, bk = _pick(TILE_M, m), _pick(TILE_N, n), _pick(TILE_K, k)
+    n_k = k // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Differentiable wrapper. The VJP is itself two Pallas matmuls, so the
+    backward pass also runs through the L1 kernel (dx = g @ y^T, dy = x^T @ g).
+    """
+    return matmul_raw(x, y)
+
+
+def _matmul_fwd(x, y):
+    return matmul_raw(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    return matmul_raw(g, y.T), matmul_raw(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

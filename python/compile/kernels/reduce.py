@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: n-way gradient segment reduction (the allreduce hot-spot).
+
+This is the compute core of the paper's allreduce: every ring step (and the
+SHARP in-network aggregation path) sums gradient segments elementwise. On
+the paper's testbed the NIC/switch does this; in our TPU-shaped adaptation
+the peer axis is pipelined through VMEM with a BlockSpec over (peer-major)
+blocks and accumulated in f32 (DESIGN.md §2).
+
+Exported AOT as `reduce_n{N}_{LEN}.hlo.txt` and executed from the rust
+coordinator's hot path (rust/src/runtime/).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 128-lane-aligned block: (n, 65536) f32 blocks stream through VMEM;
+# a (8, 65536) block is 2 MB — comfortably within a 16 MB VMEM budget
+# with double buffering.
+BLOCK = 65536
+
+
+def _reduce_kernel(x_ref, o_ref, *, scale: float):
+    acc = jnp.sum(x_ref[...], axis=0, dtype=jnp.float32)
+    if scale != 1.0:
+        acc = acc * jnp.float32(scale)
+    o_ref[...] = acc
+
+
+def reduce_sum(x: jax.Array, *, average: bool = False) -> jax.Array:
+    """Sum (or mean) over the leading peer axis: (n, L) f32 -> (L,) f32."""
+    n, length = x.shape
+    block = BLOCK if length % BLOCK == 0 else _largest_divisor(length, BLOCK)
+    scale = 1.0 / n if average else 1.0
+    return pl.pallas_call(
+        functools.partial(_reduce_kernel, scale=scale),
+        grid=(length // block,),
+        in_specs=[pl.BlockSpec((n, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((length,), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+def _largest_divisor(length: int, cap: int) -> int:
+    b = min(cap, length)
+    while length % b != 0:
+        b -= 1
+    return b
+
+
+def _add_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def add_pair(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Pairwise accumulate (the ring-step primitive): (L,)+(L,) -> (L,)."""
+    (length,) = a.shape
+    block = BLOCK if length % BLOCK == 0 else _largest_divisor(length, BLOCK)
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(length // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((length,), jnp.float32),
+        interpret=True,
+    )(a, b)

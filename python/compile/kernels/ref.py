@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+pytest (python/tests/) sweeps shapes/dtypes with hypothesis and asserts
+allclose between each kernel and its oracle — this is the core correctness
+signal for the compile path.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def reduce_sum_ref(x, average: bool = False):
+    s = jnp.sum(x, axis=0, dtype=jnp.float32)
+    return s / x.shape[0] if average else s
+
+
+def add_pair_ref(a, b):
+    return a + b
+
+
+def sgd_update_ref(p, g, v, lr, mu):
+    v_new = mu[0] * v + g
+    return p - lr[0] * v_new, v_new

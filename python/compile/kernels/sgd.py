@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: fused momentum-SGD parameter update.
+
+One pass over (param, grad, momentum) per block — no intermediate HBM
+round-trips, replacing the framework optimizer the paper's training stack
+used. lr/momentum arrive as (1,) f32 operands so a single AOT artifact
+serves any schedule.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 65536
+
+
+def _largest_divisor(length: int, cap: int) -> int:
+    b = min(cap, length)
+    while length % b != 0:
+        b -= 1
+    return b
+
+
+def _sgd_kernel(lr_ref, mu_ref, p_ref, g_ref, v_ref, po_ref, vo_ref):
+    lr = lr_ref[0]
+    mu = mu_ref[0]
+    v_new = mu * v_ref[...] + g_ref[...]
+    vo_ref[...] = v_new
+    po_ref[...] = p_ref[...] - lr * v_new
+
+
+def sgd_update(p: jax.Array, g: jax.Array, v: jax.Array,
+               lr: jax.Array, mu: jax.Array):
+    """Fused momentum SGD on flat f32 vectors.
+
+    v' = mu * v + g ;  p' = p - lr * v'.  Returns (p', v').
+    """
+    (length,) = p.shape
+    block = BLOCK if length % BLOCK == 0 else _largest_divisor(length, BLOCK)
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    vec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _sgd_kernel,
+        grid=(length // block,),
+        in_specs=[scalar, scalar, vec, vec, vec],
+        out_specs=(vec, vec),
+        out_shape=(
+            jax.ShapeDtypeStruct((length,), jnp.float32),
+            jax.ShapeDtypeStruct((length,), jnp.float32),
+        ),
+        interpret=True,
+    )(lr, mu, p, g, v)

@@ -1,0 +1,146 @@
+"""L2: JAX model — decoder-only transformer fwd/bwd calling the L1 kernels.
+
+The paper trains AlexNet/VGG-11 and (via vTrain) GPT-3; the reproduction's
+end-to-end workload is a GPT-2-shaped decoder-only transformer. Every
+projection matmul goes through the Pallas `matmul` kernel (with its
+kernel-based custom VJP), the per-step optimizer is the Pallas `sgd_update`
+kernel, and gradient aggregation on the rust side uses the Pallas
+`reduce`/`add_pair` kernels.
+
+Layers are scanned over stacked parameters so the lowered HLO size is
+independent of depth.
+
+Everything here is build-time only: `aot.py` lowers `train_step` /
+`sgd_update_flat` / reduce kernels to HLO text once, and the rust runtime
+executes the artifacts; Python never runs on the training path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import matmul, sgd_update
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Initialize parameters as a dict of stacked arrays (see
+    ModelConfig.param_shapes for the ABI order)."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in cfg.param_shapes():
+        key, sub = jax.random.split(key)
+        if name.endswith("_scale"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith("_bias") or name.startswith("b_"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = fan_in ** -0.5
+            params[name] = (std * jax.random.normal(sub, shape)).astype(jnp.float32)
+    return params
+
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _block(cfg: ModelConfig, x, layer):
+    """One pre-LN transformer block. x: (B, T, D); layer: dict of this
+    layer's (unstacked) parameters."""
+    B, T, D = x.shape
+    H, Dh = cfg.n_heads, cfg.d_head
+
+    h = _layernorm(x, layer["ln1_scale"], layer["ln1_bias"])
+    qkv = matmul(h.reshape(B * T, D), layer["w_qkv"]).reshape(B, T, 3, H, Dh)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+
+    # (B, H, T, T) causal attention. Scores stay in plain jnp (einsum) —
+    # the MXU-bound projections are the Pallas hot path.
+    scores = jnp.einsum("bthd,bshd->bhts", q, k) * (Dh ** -0.5)
+    mask = jnp.tril(jnp.ones((T, T), jnp.bool_))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    attn = jnp.einsum("bhts,bshd->bthd", probs, v).reshape(B * T, D)
+    x = x + matmul(attn, layer["w_out"]).reshape(B, T, D)
+
+    h = _layernorm(x, layer["ln2_scale"], layer["ln2_bias"])
+    h1 = matmul(h.reshape(B * T, D), layer["w_ff1"]) + layer["b_ff1"]
+    h1 = jax.nn.gelu(h1)
+    h2 = matmul(h1, layer["w_ff2"]) + layer["b_ff2"]
+    return x + h2.reshape(B, T, D)
+
+
+_LAYER_KEYS = (
+    "ln1_scale", "ln1_bias", "w_qkv", "w_out",
+    "ln2_scale", "ln2_bias", "w_ff1", "b_ff1", "w_ff2", "b_ff2",
+)
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """tokens: (B, T) int32 -> logits (B, T, V)."""
+    B, T = tokens.shape
+    x = params["emb"][tokens] + params["pos"][None, :T, :]
+
+    stacked = {k: params[k] for k in _LAYER_KEYS}
+
+    def body(carry, layer):
+        return _block(cfg, carry, layer), None
+
+    x, _ = jax.lax.scan(body, x, stacked)
+    x = _layernorm(x, params["lnf_scale"], params["lnf_bias"])
+    logits = matmul(x.reshape(B * T, cfg.d_model), params["w_head"])
+    return logits.reshape(B, T, cfg.vocab)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """batch: (B, T+1) int32 — next-token cross-entropy."""
+    inputs, targets = batch[:, :-1], batch[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def train_step(cfg: ModelConfig, params, batch):
+    """Returns (loss, grads) — grads as a dict matching param_shapes order.
+    This is the function AOT-exported per config as `train_step_<name>`."""
+    return jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+
+
+def sgd_update_flat(p_flat, g_flat, v_flat, lr, mu):
+    """Fused momentum-SGD over the flat parameter vector (Pallas kernel).
+    Exported as `sgd_update_<name>`; the rust trainer keeps params/momentum
+    as single flat f32 buffers matching the ABI order."""
+    return sgd_update(p_flat, g_flat, v_flat, lr, mu)
+
+
+def flatten_params(cfg: ModelConfig, params) -> jnp.ndarray:
+    """Concatenate params into one flat f32 vector in ABI order."""
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in cfg.param_shapes()]
+    )
+
+
+def unflatten_params(cfg: ModelConfig, flat):
+    """Inverse of flatten_params."""
+    import math
+
+    params, off = {}, 0
+    for name, shape in cfg.param_shapes():
+        n = int(math.prod(shape))
+        params[name] = flat[off:off + n].reshape(shape)
+        off += n
+    return params
+
+
+def train_step_flat(cfg: ModelConfig, p_flat, batch):
+    """Flat-ABI train step: (P,) f32 + (B, T+1) i32 -> (loss, (P,) grads).
+    This is the exact signature the rust runtime executes."""
+    params = unflatten_params(cfg, p_flat)
+    loss, grads = train_step(cfg, params, batch)
+    g_flat = jnp.concatenate(
+        [grads[name].reshape(-1) for name, _ in cfg.param_shapes()]
+    )
+    return loss, g_flat

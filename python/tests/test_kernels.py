@@ -1,0 +1,153 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (and payload distributions); assert_allclose
+against ref.py is the core correctness signal for the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import add_pair, matmul, matmul_raw, reduce_sum, sgd_update
+from compile.kernels import ref
+
+RTOL, ATOL = 1e-4, 1e-5
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.sampled_from([8, 32, 64, 128, 192]),
+    k=st.sampled_from([16, 64, 128, 512]),
+    n=st.sampled_from([8, 64, 128, 256]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    y = _rand(seed + 1, (k, n))
+    np.testing.assert_allclose(
+        matmul_raw(x, y), ref.matmul_ref(x, y), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_matmul_non_tile_aligned():
+    # dims with no small divisors force the fallback block search
+    x = _rand(0, (6, 10))
+    y = _rand(1, (10, 14))
+    np.testing.assert_allclose(
+        matmul_raw(x, y), ref.matmul_ref(x, y), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_matmul_grad_uses_kernel_vjp():
+    x = _rand(2, (32, 64))
+    y = _rand(3, (64, 16))
+    f = lambda a, b: jnp.sum(matmul(a, b) ** 2)
+    gx, gy = jax.grad(f, argnums=(0, 1))(x, y)
+    fr = lambda a, b: jnp.sum(ref.matmul_ref(a, b) ** 2)
+    gxr, gyr = jax.grad(fr, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gx, gxr, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(gy, gyr, rtol=RTOL, atol=ATOL)
+
+
+def test_matmul_large_scale_values():
+    x = _rand(4, (64, 128), scale=1e3)
+    y = _rand(5, (128, 64), scale=1e-3)
+    np.testing.assert_allclose(
+        matmul_raw(x, y), ref.matmul_ref(x, y), rtol=1e-3, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------- reduce
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.sampled_from([2, 3, 4, 8]),
+    length=st.sampled_from([128, 1024, 65536, 70000, 131072]),
+    seed=st.integers(0, 2**16),
+)
+def test_reduce_sum_matches_ref(n, length, seed):
+    x = _rand(seed, (n, length))
+    np.testing.assert_allclose(
+        reduce_sum(x), ref.reduce_sum_ref(x), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_reduce_average():
+    x = _rand(7, (4, 4096))
+    np.testing.assert_allclose(
+        reduce_sum(x, average=True),
+        ref.reduce_sum_ref(x, average=True),
+        rtol=RTOL, atol=ATOL,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    length=st.sampled_from([64, 4096, 65536, 65537, 262144]),
+    seed=st.integers(0, 2**16),
+)
+def test_add_pair_matches_ref(length, seed):
+    a = _rand(seed, (length,))
+    b = _rand(seed + 1, (length,))
+    np.testing.assert_allclose(
+        add_pair(a, b), ref.add_pair_ref(a, b), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_reduce_associativity_invariant():
+    """n-way reduce == fold of pairwise adds (what the ring actually does)."""
+    x = _rand(11, (4, 8192))
+    folded = x[0]
+    for i in range(1, 4):
+        folded = add_pair(folded, x[i])
+    np.testing.assert_allclose(reduce_sum(x), folded, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------- sgd
+
+@settings(max_examples=10, deadline=None)
+@given(
+    length=st.sampled_from([256, 65536, 65536 * 2, 100000]),
+    lr=st.floats(1e-4, 1.0),
+    mu=st.floats(0.0, 0.99),
+    seed=st.integers(0, 2**16),
+)
+def test_sgd_matches_ref(length, lr, mu, seed):
+    p = _rand(seed, (length,))
+    g = _rand(seed + 1, (length,))
+    v = _rand(seed + 2, (length,))
+    lr_a = jnp.array([lr], jnp.float32)
+    mu_a = jnp.array([mu], jnp.float32)
+    p2, v2 = sgd_update(p, g, v, lr_a, mu_a)
+    pr, vr = ref.sgd_update_ref(p, g, v, lr_a, mu_a)
+    np.testing.assert_allclose(p2, pr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(v2, vr, rtol=1e-5, atol=1e-6)
+
+
+def test_sgd_zero_momentum_is_plain_sgd():
+    p = _rand(20, (4096,))
+    g = _rand(21, (4096,))
+    v = jnp.zeros(4096, jnp.float32)
+    p2, v2 = sgd_update(p, g, v, jnp.array([0.5], jnp.float32), jnp.array([0.0], jnp.float32))
+    np.testing.assert_allclose(p2, p - 0.5 * g, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(v2, g, rtol=1e-6)
+
+
+def test_sgd_descends_quadratic():
+    """Invariant: repeated updates on f(p)=||p||^2/2 shrink the loss."""
+    p = _rand(22, (1024,))
+    v = jnp.zeros(1024, jnp.float32)
+    lr = jnp.array([0.1], jnp.float32)
+    mu = jnp.array([0.9], jnp.float32)
+    last = float(jnp.sum(p ** 2))
+    for _ in range(20):
+        p, v = sgd_update(p, p, v, lr, mu)
+    assert float(jnp.sum(p ** 2)) < last

@@ -1,0 +1,105 @@
+"""L2 correctness: model shapes, loss sanity, flat ABI round-trip,
+and a short optimization run (loss must decrease)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import CONFIGS, TINY
+from compile.kernels import sgd_update
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    params = M.init_params(TINY, seed=0)
+    key = jax.random.PRNGKey(42)
+    batch = jax.random.randint(key, (TINY.batch, TINY.seq_len + 1), 0, TINY.vocab)
+    return params, batch
+
+
+def test_param_shapes_match_abi(tiny_setup):
+    params, _ = tiny_setup
+    for name, shape in TINY.param_shapes():
+        assert params[name].shape == shape, name
+    assert TINY.n_params() == sum(int(np.prod(s)) for _, s in TINY.param_shapes())
+
+
+def test_forward_shape(tiny_setup):
+    params, batch = tiny_setup
+    logits = M.forward(TINY, params, batch[:, :-1])
+    assert logits.shape == (TINY.batch, TINY.seq_len, TINY.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform(tiny_setup):
+    params, batch = tiny_setup
+    loss = M.loss_fn(TINY, params, batch)
+    # random init => loss close to ln(V) (generous band)
+    assert abs(float(loss) - np.log(TINY.vocab)) < 1.5
+
+
+def test_causality(tiny_setup):
+    """Changing a future token must not change earlier logits."""
+    params, batch = tiny_setup
+    inp = batch[:, :-1]
+    logits_a = M.forward(TINY, params, inp)
+    perturbed = inp.at[:, -1].set((inp[:, -1] + 1) % TINY.vocab)
+    logits_b = M.forward(TINY, params, perturbed)
+    np.testing.assert_allclose(
+        logits_a[:, :-1], logits_b[:, :-1], rtol=1e-5, atol=1e-5
+    )
+
+
+def test_flat_roundtrip(tiny_setup):
+    params, _ = tiny_setup
+    flat = M.flatten_params(TINY, params)
+    assert flat.shape == (TINY.n_params(),)
+    back = M.unflatten_params(TINY, flat)
+    for name, _ in TINY.param_shapes():
+        np.testing.assert_array_equal(params[name], back[name])
+
+
+def test_train_step_flat_matches_tree(tiny_setup):
+    params, batch = tiny_setup
+    loss_t, grads_t = M.train_step(TINY, params, batch)
+    flat = M.flatten_params(TINY, params)
+    loss_f, g_flat = M.train_step_flat(TINY, flat, batch)
+    assert abs(float(loss_t) - float(loss_f)) < 1e-5
+    g_tree_flat = jnp.concatenate(
+        [grads_t[n].reshape(-1) for n, _ in TINY.param_shapes()]
+    )
+    np.testing.assert_allclose(g_flat, g_tree_flat, rtol=1e-5, atol=1e-6)
+
+
+def test_grads_nonzero_everywhere(tiny_setup):
+    params, batch = tiny_setup
+    _, grads = M.train_step(TINY, params, batch)
+    for name, _ in TINY.param_shapes():
+        assert float(jnp.max(jnp.abs(grads[name]))) > 0, f"dead grad: {name}"
+
+
+def test_short_training_run_decreases_loss(tiny_setup):
+    params, batch = tiny_setup
+    flat = M.flatten_params(TINY, params)
+    v = jnp.zeros_like(flat)
+    lr = jnp.array([0.05], jnp.float32)
+    mu = jnp.array([0.9], jnp.float32)
+    step = jax.jit(lambda p, b: M.train_step_flat(TINY, p, b))
+    first = None
+    for _ in range(8):
+        loss, g = step(flat, batch)
+        if first is None:
+            first = float(loss)
+        flat, v = sgd_update(flat, g, v, lr, mu)
+    assert float(loss) < first - 0.3, (first, float(loss))
+
+
+def test_all_configs_abi_consistent():
+    for cfg in CONFIGS.values():
+        shapes = cfg.param_shapes()
+        names = [n for n, _ in shapes]
+        assert len(names) == len(set(names))
+        assert cfg.d_model % cfg.n_heads == 0
+        assert cfg.n_params() > 0

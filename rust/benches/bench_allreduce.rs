@@ -1,0 +1,77 @@
+//! `cargo bench --bench bench_allreduce` — end-to-end policy comparison
+//! across the paper's payload sweep, on homogeneous and heterogeneous
+//! combos: the condensed version of Figs. 9/10 plus Table 1, with
+//! wall-clock cost of the simulation itself.
+
+use nezha::bench::harness::bench_wall;
+use nezha::config::{Config, Policy};
+use nezha::coordinator::buffer::UnboundBuffer;
+use nezha::coordinator::multirail::MultiRail;
+use nezha::net::topology::parse_combo;
+use nezha::util::bytes::fmt_bytes;
+use nezha::util::table::Table;
+
+fn measure(combo: &str, nodes: usize, policy: Policy, bytes: u64) -> nezha::Result<f64> {
+    let cfg = Config {
+        nodes,
+        combo: parse_combo(combo)?,
+        policy,
+        deterministic: true,
+        ..Config::default()
+    };
+    let mut mr = MultiRail::new(&cfg)?;
+    const ELEMS: usize = 1024;
+    let elem_bytes = bytes as f64 / ELEMS as f64;
+    let warm = if policy == Policy::Nezha { 30 } else { 3 };
+    let mut lat = 0.0;
+    for i in 0..warm + 5 {
+        let mut buf = UnboundBuffer::from_fn(nodes, ELEMS, |n, j| ((n + j) % 7) as f32);
+        let rep = mr.allreduce_scaled(&mut buf, elem_bytes)?;
+        if i >= warm {
+            lat += rep.total_us;
+        }
+    }
+    Ok(lat / 5.0)
+}
+
+fn main() -> nezha::Result<()> {
+    for (combo, nodes) in [("tcp-tcp", 4), ("tcp-tcp", 8), ("tcp-sharp", 8), ("tcp-glex", 8)] {
+        println!("\n=== allreduce latency (us), {combo}, {nodes} nodes ===");
+        let single_combo = match combo {
+            "tcp-sharp" => "sharp",
+            "tcp-glex" => "glex",
+            _ => "tcp",
+        };
+        let mut t = Table::new(&["size", "single", "MRIB", "MPTCP", "Nezha"]);
+        for &s in &[2u64 << 10, 128 << 10, 2 << 20, 8 << 20, 64 << 20] {
+            t.row(vec![
+                fmt_bytes(s),
+                format!("{:.0}", measure(single_combo, nodes, Policy::SingleRail, s)?),
+                format!("{:.0}", measure(combo, nodes, Policy::Mrib, s)?),
+                format!("{:.0}", measure(combo, nodes, Policy::Mptcp, s)?),
+                format!("{:.0}", measure(combo, nodes, Policy::Nezha, s)?),
+            ]);
+        }
+        t.print();
+    }
+
+    // wall-clock cost of the coordinator itself (simulation throughput)
+    println!("\n=== simulator wall-clock (coordinator overhead) ===");
+    let cfg = Config {
+        nodes: 8,
+        combo: parse_combo("tcp-tcp")?,
+        policy: Policy::Nezha,
+        deterministic: true,
+        ..Config::default()
+    };
+    let mut mr = MultiRail::new(&cfg)?;
+    let mut t = Table::new(&nezha::bench::BenchStats::header());
+    let s = bench_wall("allreduce_8MB_sim_op", 20, 200, || {
+        let mut buf = UnboundBuffer::from_fn(8, 1024, |n, j| ((n + j) % 7) as f32);
+        mr.allreduce_scaled(&mut buf, 8192.0).unwrap();
+    });
+    println!("simulated ops/sec: {:.0}", 1e6 / s.mean_us);
+    t.row(s.row());
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! `cargo bench --bench bench_figures` — regenerates EVERY table and
+//! figure of the paper's evaluation section (DESIGN.md §5 maps ids to the
+//! paper). Individual figures: `cargo bench --bench bench_figures -- fig9`.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with("--")).collect();
+    let id = args.first().map(|s| s.as_str()).unwrap_or("all");
+    if let Err(e) = nezha::bench::figures::run(id) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,88 @@
+//! `cargo bench --bench bench_hotpath` — wall-clock benchmarks of the L3
+//! hot paths: the reduction kernels (portable vs AOT Pallas), ring
+//! numerics, the partition planner, and the full per-op coordinator
+//! overhead. These are the numbers the §Perf pass in EXPERIMENTS.md
+//! optimizes.
+
+use std::sync::Arc;
+
+use nezha::bench::harness::{bench_wall, BenchStats};
+use nezha::config::{Config, Policy};
+use nezha::coordinator::buffer::UnboundBuffer;
+use nezha::coordinator::collective::ring::ring_numerics;
+use nezha::coordinator::collective::{Reducer, RustReducer};
+use nezha::coordinator::multirail::MultiRail;
+use nezha::net::topology::parse_combo;
+use nezha::runtime::{Engine, PjrtReducer};
+use nezha::util::table::Table;
+
+fn main() -> nezha::Result<()> {
+    let mut t = Table::new(&BenchStats::header());
+    let mut thr: Vec<(String, f64)> = Vec::new();
+
+    // 1. portable reducer: 1M-element add (4 MB per operand)
+    const N: usize = 1 << 20;
+    let mut dst = vec![1.0f32; N];
+    let src = vec![2.0f32; N];
+    let mut red = RustReducer;
+    let s = bench_wall("rust_reducer_add_1M", 5, 50, || {
+        red.add_into(&mut dst, &src);
+    });
+    thr.push(("rust_reducer GB/s".into(), (N * 4) as f64 / s.mean_us / 1e3));
+    t.row(s.row());
+
+    // 2. AOT Pallas add_pair kernel (if artifacts built)
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let engine = Arc::new(Engine::new("artifacts")?);
+        let mut pjrt = PjrtReducer::new(engine)?;
+        let mut dst = vec![1.0f32; 262144];
+        let src = vec![2.0f32; 262144];
+        let s = bench_wall("pallas_add_pair_256K", 3, 30, || {
+            pjrt.add_into(&mut dst, &src);
+        });
+        thr.push(("pallas_add_pair GB/s".into(), (262144 * 4) as f64 / s.mean_us / 1e3));
+        t.row(s.row());
+    }
+
+    // 3. ring numerics: full 4-node reduce-scatter+allgather on 1M elems
+    let mut buf = UnboundBuffer::from_fn(4, N, |n, i| ((n + i) % 5) as f32);
+    let w = buf.full_window();
+    let s = bench_wall("ring_numerics_4x1M", 2, 20, || {
+        ring_numerics(&mut buf, w, &mut RustReducer);
+    });
+    thr.push((
+        "ring_numerics effective GB/s".into(),
+        // 2(N-1)/N * S bytes touched per node x N nodes
+        (2.0 * 3.0 * (N * 4) as f64) / s.mean_us / 1e3,
+    ));
+    t.row(s.row());
+
+    // 4. full coordinator op (plan + sim + numerics + feedback), small buf
+    let cfg = Config {
+        nodes: 8,
+        combo: parse_combo("tcp-sharp")?,
+        policy: Policy::Nezha,
+        deterministic: true,
+        ..Config::default()
+    };
+    let mut mr = MultiRail::new(&cfg)?;
+    let s = bench_wall("coordinator_op_overhead", 50, 500, || {
+        let mut buf = UnboundBuffer::from_fn(8, 256, |n, j| ((n + j) % 7) as f32);
+        mr.allreduce_scaled(&mut buf, 32768.0).unwrap();
+    });
+    t.row(s.row());
+
+    // 5. planner alone at steady state
+    let s = bench_wall("plan_only_hot_path", 50, 2000, || {
+        let healthy = mr.fab.healthy_rails();
+        let _ = mr.partitioner.plan(&mr.fab, &mr.timer, &healthy, 8 << 20);
+    });
+    t.row(s.row());
+
+    t.print();
+    println!();
+    for (name, v) in thr {
+        println!("{name}: {v:.2}");
+    }
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Fixed-share partitioner: pins a static (rail, fraction) table.
+//!
+//! Used by the ablation studies — Table 1's 99/1 and 1/99 splits and
+//! Fig. 14's per-member-network latency probes.
+
+use crate::coordinator::control::timer::Timer;
+use crate::coordinator::multirail::{PartitionPlan, Partitioner};
+use crate::net::simnet::Fabric;
+
+#[derive(Debug)]
+pub struct FixedShares {
+    pub shares: Vec<(usize, f64)>,
+}
+
+impl FixedShares {
+    pub fn new(shares: Vec<(usize, f64)>) -> FixedShares {
+        let total: f64 = shares.iter().map(|(_, f)| f).sum();
+        assert!((total - 1.0).abs() < 1e-6, "fractions must sum to 1");
+        FixedShares { shares }
+    }
+
+    /// Table 1 notation: x% to rail 0, y% to rail 1.
+    pub fn percent(x: u32, y: u32) -> FixedShares {
+        FixedShares::new(vec![
+            (0, x as f64 / 100.0),
+            (1, y as f64 / 100.0),
+        ])
+    }
+}
+
+impl Partitioner for FixedShares {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn plan(
+        &mut self,
+        _fab: &Fabric,
+        _timer: &Timer,
+        healthy: &[usize],
+        _bytes: u64,
+    ) -> PartitionPlan {
+        let mut shares: Vec<(usize, f64)> = self
+            .shares
+            .iter()
+            .filter(|(r, _)| healthy.contains(r))
+            .cloned()
+            .collect();
+        let total: f64 = shares.iter().map(|(_, f)| f).sum();
+        if total <= 0.0 {
+            shares = vec![(healthy[0], 1.0)];
+        } else {
+            for (_, f) in &mut shares {
+                *f /= total;
+            }
+        }
+        PartitionPlan::Shares(shares)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::cpu_pool::CpuPool;
+    use crate::net::protocol::ProtoKind;
+    use crate::net::topology::ClusterSpec;
+
+    #[test]
+    fn percent_split() {
+        let rails = ClusterSpec::local()
+            .build_rails(&[ProtoKind::Tcp, ProtoKind::Sharp])
+            .unwrap();
+        let f = Fabric::new(4, rails, CpuPool::default(), 1);
+        let t = Timer::new(10);
+        let mut p = FixedShares::percent(99, 1);
+        match p.plan(&f, &t, &[0, 1], 1 << 20) {
+            PartitionPlan::Shares(s) => {
+                assert!((s[0].1 - 0.99).abs() < 1e-9);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn renormalizes_on_failure() {
+        let rails = ClusterSpec::local()
+            .build_rails(&[ProtoKind::Tcp, ProtoKind::Tcp])
+            .unwrap();
+        let f = Fabric::new(4, rails, CpuPool::default(), 1);
+        let t = Timer::new(10);
+        let mut p = FixedShares::percent(50, 50);
+        match p.plan(&f, &t, &[1], 1024) {
+            PartitionPlan::Shares(s) => assert_eq!(s, vec![(1, 1.0)]),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Baseline multi-rail data-distribution policies the paper compares
+//! against (§5.1): MPTCP's ECF packet slicing, MRIB's static bandwidth
+//! weights, and the single-rail (Gloo-like) baseline.
+
+pub mod fixed;
+pub mod mptcp;
+pub mod mrib;
+pub mod single_rail;
+
+pub use fixed::FixedShares;
+pub use mptcp::Mptcp;
+pub use mrib::Mrib;
+pub use single_rail::SingleRail;

@@ -1,0 +1,76 @@
+//! MPTCP baseline with the ECF scheduler (Lim et al., CoNEXT'17).
+//!
+//! MPTCP aggregates bandwidth by slicing the payload into packets and
+//! assigning each to the subflow with the earliest predicted completion
+//! (RTT/bandwidth-estimate driven). The paper's criticisms (§2.2.1,
+//! Table 1, §5.2): per-slice metadata/reassembly overhead (18–27% extra
+//! latency), and completion-time prediction that cannot account for
+//! heterogeneous *collective* protocols — the TCP subflow becomes the
+//! systemic straggler.
+//!
+//! The slicing execution (per-packet ECF assignment + overhead) lives in
+//! [`crate::coordinator::multirail::MultiRail::allreduce_scaled`]'s
+//! `Slices` path; this type only chooses the packet size.
+
+use crate::coordinator::control::timer::Timer;
+use crate::coordinator::multirail::{PartitionPlan, Partitioner};
+use crate::net::simnet::Fabric;
+
+#[derive(Debug)]
+pub struct Mptcp {
+    /// Slice (packet) size in bytes — 64 KB default, the MSS-coalesced
+    /// burst ECF schedules at.
+    pub packet_bytes: u64,
+}
+
+impl Default for Mptcp {
+    fn default() -> Self {
+        Mptcp { packet_bytes: 64 * 1024 }
+    }
+}
+
+impl Partitioner for Mptcp {
+    fn name(&self) -> &'static str {
+        "MPTCP"
+    }
+
+    fn plan(
+        &mut self,
+        _fab: &Fabric,
+        _timer: &Timer,
+        _healthy: &[usize],
+        bytes: u64,
+    ) -> PartitionPlan {
+        // small payloads still get sliced (one packet) but MPTCP always
+        // engages all subflows' machinery — reflected in the sync cost
+        // charged for multi-rail ops
+        let _ = bytes;
+        PartitionPlan::Slices { packet_bytes: self.packet_bytes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::cpu_pool::CpuPool;
+    use crate::net::protocol::ProtoKind;
+    use crate::net::topology::ClusterSpec;
+
+    #[test]
+    fn always_slices() {
+        let rails = ClusterSpec::local()
+            .build_rails(&[ProtoKind::Tcp, ProtoKind::Tcp])
+            .unwrap();
+        let f = Fabric::new(4, rails, CpuPool::default(), 1);
+        let t = Timer::new(100);
+        let mut m = Mptcp::default();
+        assert_eq!(
+            m.plan(&f, &t, &[0, 1], 1 << 26),
+            PartitionPlan::Slices { packet_bytes: 65536 }
+        );
+        assert_eq!(
+            m.plan(&f, &t, &[0, 1], 100),
+            PartitionPlan::Slices { packet_bytes: 65536 }
+        );
+    }
+}

@@ -1,0 +1,194 @@
+//! MRIB baseline (Liu, Vishnu, Panda, SC'04): multi-rail InfiniBand with
+//! virtual subchannels and **static bandwidth-proportional** data
+//! allocation weights, mildly adjusted on sustained delay imbalance.
+//!
+//! The paper's criticism (§2.2.1, §5.2): MRIB sets weights from NIC
+//! bandwidth alone, so in heterogeneous combos (both NICs 100 Gbps but
+//! SHARP/GLEX ≫ TCP in allreduce-effective throughput) it splits ~50/50
+//! and the TCP rail drags the op; and it always splits, paying sync
+//! overhead on small payloads too.
+
+use crate::coordinator::control::timer::Timer;
+use crate::coordinator::multirail::{PartitionPlan, Partitioner};
+use crate::net::simnet::Fabric;
+
+#[derive(Debug)]
+pub struct Mrib {
+    /// Static (rail, weight) table set at init from NIC wire bandwidth.
+    weights: Vec<(usize, f64)>,
+    /// Slow EMA of per-rail delay used for the (bounded) dynamic
+    /// adjustment MRIB applies under congestion.
+    delay_ema: Vec<(usize, f64)>,
+}
+
+impl Mrib {
+    /// Initialization-time bandwidth probe: weights ∝ NIC wire speed.
+    pub fn from_fabric(fab: &Fabric) -> Mrib {
+        let total: f64 = fab.rails.iter().map(|r| r.nic.gbps).sum();
+        let weights = fab
+            .rails
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (i, r.nic.gbps / total))
+            .collect();
+        Mrib { weights, delay_ema: Vec::new() }
+    }
+
+    fn ema_for(&self, rail: usize) -> Option<f64> {
+        self.delay_ema.iter().find(|(r, _)| *r == rail).map(|(_, d)| *d)
+    }
+}
+
+impl Partitioner for Mrib {
+    fn name(&self) -> &'static str {
+        "MRIB"
+    }
+
+    fn plan(
+        &mut self,
+        _fab: &Fabric,
+        _timer: &Timer,
+        healthy: &[usize],
+        _bytes: u64,
+    ) -> PartitionPlan {
+        // static weights over the healthy subset, renormalized; bounded
+        // delay-based correction (±30% max — MRIB targets transient
+        // congestion, not protocol heterogeneity)
+        let mut shares: Vec<(usize, f64)> = self
+            .weights
+            .iter()
+            .filter(|(r, _)| healthy.contains(r))
+            .map(|&(r, w)| {
+                let adj = match self.ema_for(r) {
+                    Some(d) if d > 0.0 => {
+                        let avg: f64 = healthy
+                            .iter()
+                            .filter_map(|&h| self.ema_for(h))
+                            .sum::<f64>()
+                            / healthy.len() as f64;
+                        (avg / d).clamp(0.7, 1.3)
+                    }
+                    _ => 1.0,
+                };
+                (r, w * adj)
+            })
+            .collect();
+        let total: f64 = shares.iter().map(|(_, w)| w).sum();
+        for (_, w) in &mut shares {
+            *w /= total;
+        }
+        PartitionPlan::Shares(shares)
+    }
+
+    fn feedback(&mut self, _fab: &Fabric, _bytes: u64, shares: &[(usize, u64, f64)]) {
+        for &(rail, bytes, t) in shares {
+            if bytes == 0 {
+                continue;
+            }
+            // normalize to per-byte delay so sizes don't skew the EMA
+            let d = t / bytes as f64;
+            match self.delay_ema.iter_mut().find(|(r, _)| *r == rail) {
+                Some((_, e)) => *e = 0.95 * *e + 0.05 * d,
+                None => self.delay_ema.push((rail, d)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::cpu_pool::CpuPool;
+    use crate::net::protocol::ProtoKind;
+    use crate::net::topology::ClusterSpec;
+
+    fn fab(kinds: &[ProtoKind]) -> Fabric {
+        let rails = ClusterSpec::local().build_rails(kinds).unwrap();
+        Fabric::new(4, rails, CpuPool::default(), 1).deterministic()
+    }
+
+    #[test]
+    fn equal_bandwidth_gives_even_split() {
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp]);
+        let mut m = Mrib::from_fabric(&f);
+        let t = Timer::new(100);
+        match m.plan(&f, &t, &[0, 1], 1 << 20) {
+            PartitionPlan::Shares(s) => {
+                assert!((s[0].1 - 0.5).abs() < 1e-9);
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn heterogeneous_ignores_protocol_performance() {
+        // TCP 100G vs SHARP 100G: MRIB splits 50/50 despite SHARP being
+        // far faster in allreduce — the paper's key criticism.
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Sharp]);
+        let mut m = Mrib::from_fabric(&f);
+        let t = Timer::new(100);
+        match m.plan(&f, &t, &[0, 1], 1 << 20) {
+            PartitionPlan::Shares(s) => {
+                assert!((s[0].1 - 0.5).abs() < 0.01, "{s:?}");
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn glex_combo_weights_by_wire_speed() {
+        // TCP Eth 100G vs GLEX TH 128G → 100/228 vs 128/228
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Glex]);
+        let mut m = Mrib::from_fabric(&f);
+        let t = Timer::new(100);
+        match m.plan(&f, &t, &[0, 1], 1 << 20) {
+            PartitionPlan::Shares(s) => {
+                assert!((s[0].1 - 100.0 / 228.0).abs() < 1e-6, "{s:?}");
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn always_splits_even_small_payloads() {
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp]);
+        let mut m = Mrib::from_fabric(&f);
+        let t = Timer::new(100);
+        match m.plan(&f, &t, &[0, 1], 2048) {
+            PartitionPlan::Shares(s) => assert_eq!(s.len(), 2),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn delay_feedback_is_bounded() {
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp]);
+        let mut m = Mrib::from_fabric(&f);
+        let t = Timer::new(100);
+        // rail 0 persistently 10x slower
+        for _ in 0..200 {
+            m.feedback(&f, 1 << 20, &[(0, 1 << 19, 100_000.0), (1, 1 << 19, 10_000.0)]);
+        }
+        match m.plan(&f, &t, &[0, 1], 1 << 20) {
+            PartitionPlan::Shares(s) => {
+                let w0 = s.iter().find(|(r, _)| *r == 0).unwrap().1;
+                // adjusted but clamped: never below ~0.35/(0.35+0.65)
+                assert!(w0 > 0.3 && w0 < 0.5, "w0 = {w0}");
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn failed_rail_excluded() {
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp]);
+        let mut m = Mrib::from_fabric(&f);
+        let t = Timer::new(100);
+        match m.plan(&f, &t, &[1], 1 << 20) {
+            PartitionPlan::Shares(s) => {
+                assert_eq!(s, vec![(1, 1.0)]);
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+}

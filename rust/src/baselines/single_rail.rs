@@ -1,0 +1,88 @@
+//! Single-rail baseline: the Gloo/NCCL/MPI default of binding the whole
+//! allreduce to one network plane (§2's "static single-rail binding").
+
+use crate::coordinator::control::timer::Timer;
+use crate::coordinator::multirail::{PartitionPlan, Partitioner};
+use crate::net::simnet::Fabric;
+
+#[derive(Debug)]
+pub enum SingleRail {
+    /// Always pick the (estimated) lowest-latency healthy rail — what
+    /// frameworks do at init ("default to the lowest-latency single link").
+    Best,
+    /// Pin to a specific rail regardless of performance.
+    Pinned(usize),
+}
+
+impl SingleRail {
+    pub fn best() -> SingleRail {
+        SingleRail::Best
+    }
+
+    pub fn pinned(rail: usize) -> SingleRail {
+        SingleRail::Pinned(rail)
+    }
+}
+
+impl Partitioner for SingleRail {
+    fn name(&self) -> &'static str {
+        "single-rail"
+    }
+
+    fn plan(
+        &mut self,
+        fab: &Fabric,
+        _timer: &Timer,
+        healthy: &[usize],
+        bytes: u64,
+    ) -> PartitionPlan {
+        let rail = match self {
+            SingleRail::Pinned(r) if healthy.contains(r) => *r,
+            _ => healthy
+                .iter()
+                .copied()
+                .min_by(|&a, &b| {
+                    fab.estimate_allreduce_us(a, bytes as f64)
+                        .partial_cmp(&fab.estimate_allreduce_us(b, bytes as f64))
+                        .unwrap()
+                })
+                .expect("no healthy rail"),
+        };
+        PartitionPlan::Shares(vec![(rail, 1.0)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::cpu_pool::CpuPool;
+    use crate::net::protocol::ProtoKind;
+    use crate::net::topology::ClusterSpec;
+
+    fn fab(kinds: &[ProtoKind]) -> Fabric {
+        let rails = ClusterSpec::local().build_rails(kinds).unwrap();
+        Fabric::new(4, rails, CpuPool::default(), 1).deterministic()
+    }
+
+    #[test]
+    fn best_picks_fastest() {
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Glex]);
+        let t = Timer::new(100);
+        let mut s = SingleRail::best();
+        match s.plan(&f, &t, &[0, 1], 8 << 20) {
+            PartitionPlan::Shares(v) => assert_eq!(v, vec![(1, 1.0)]),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn pinned_respects_health() {
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp]);
+        let t = Timer::new(100);
+        let mut s = SingleRail::pinned(1);
+        match s.plan(&f, &t, &[0], 1024) {
+            PartitionPlan::Shares(v) => assert_eq!(v, vec![(0, 1.0)]),
+            p => panic!("{p:?}"),
+        }
+    }
+}

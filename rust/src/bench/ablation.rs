@@ -1,0 +1,172 @@
+//! Ablation studies over Nezha's design choices (DESIGN.md §5 extras):
+//! the divergence tolerance τ, the cross-rail sync-overhead charge, the
+//! gradient-descent step η, and the Timer window.
+//!
+//! Run: `cargo run --release -- fig ablate`
+
+use crate::config::{Config, Policy};
+use crate::coordinator::buffer::UnboundBuffer;
+use crate::coordinator::multirail::MultiRail;
+use crate::net::protocol::ProtoKind;
+use crate::util::table::Table;
+use crate::Result;
+
+const ELEMS: usize = 1024;
+
+fn mk(combo: &[ProtoKind], nodes: usize, patch: impl Fn(&mut Config)) -> Result<MultiRail> {
+    let mut cfg = Config {
+        nodes,
+        combo: combo.to_vec(),
+        policy: Policy::Nezha,
+        deterministic: true,
+        ..Config::default()
+    };
+    patch(&mut cfg);
+    MultiRail::new(&cfg)
+}
+
+fn mean_lat(mr: &mut MultiRail, bytes: u64, warm: usize, reps: usize) -> Result<f64> {
+    let elem_bytes = bytes as f64 / ELEMS as f64;
+    let mut total = 0.0;
+    for i in 0..warm + reps {
+        let mut buf = UnboundBuffer::from_fn(mr.fab.nodes, ELEMS, |n, j| ((n + j) % 7) as f32);
+        let t = mr.allreduce_scaled(&mut buf, elem_bytes)?.total_us;
+        if i >= warm {
+            total += t;
+        }
+    }
+    Ok(total / reps as f64)
+}
+
+/// τ ablation: with τ too small Nezha never splits (loses the large-
+/// payload gain); with τ huge it splits across hopeless rails (loses the
+/// small-payload RDMA advantage). τ = 5 sits at the knee.
+pub fn ablate_tau() -> Result<()> {
+    println!("\n=== Ablation: divergence tolerance τ (TCP-SHARP, 4 nodes) ===");
+    let mut t = Table::new(&["tau", "64KB (us)", "16MB (us)", "64MB (us)"]);
+    for tau in [1.0, 2.0, 5.0, 20.0, 1e9] {
+        let mut mr = mk(&[ProtoKind::Tcp, ProtoKind::Sharp], 4, |c| c.control.tau = tau)?;
+        let small = mean_lat(&mut mr, 64 << 10, 20, 5)?;
+        let mid = mean_lat(&mut mr, 16 << 20, 30, 5)?;
+        let large = mean_lat(&mut mr, 64 << 20, 30, 5)?;
+        let label = if tau >= 1e9 { "inf".into() } else { format!("{tau:.0}") };
+        t.row(vec![
+            label,
+            format!("{small:.0}"),
+            format!("{mid:.0}"),
+            format!("{large:.0}"),
+        ]);
+    }
+    t.print();
+    println!("(τ=5 keeps the 64KB cold-start fast AND the 64MB split active)");
+    Ok(())
+}
+
+/// η ablation: convergence speed of the α table vs the learning rate.
+pub fn ablate_eta() -> Result<()> {
+    println!("\n=== Ablation: balancer step η — ops until scheduling error <10% (TCP-GLEX, 16MB) ===");
+    let mut t = Table::new(&["eta", "ops to converge", "final sched err"]);
+    for eta in [0.05, 0.1, 0.3, 0.6, 0.9] {
+        let mut mr = mk(&[ProtoKind::Tcp, ProtoKind::Glex], 4, |c| c.control.eta = eta)?;
+        let elem_bytes = (16u64 << 20) as f64 / ELEMS as f64;
+        let mut converged_at = None;
+        let mut last_err = 1.0;
+        for op in 0..100 {
+            let mut buf = UnboundBuffer::from_fn(4, ELEMS, |n, j| ((n + j) % 7) as f32);
+            let rep = mr.allreduce_scaled(&mut buf, elem_bytes)?;
+            let times: Vec<f64> = rep
+                .per_rail
+                .iter()
+                .filter(|s| s.bytes > 0)
+                .map(|s| s.time_us)
+                .collect();
+            if times.len() == 2 {
+                last_err = (times[0] - times[1]).abs() / times[0].max(times[1]);
+                if last_err < 0.10 && converged_at.is_none() {
+                    converged_at = Some(op);
+                }
+            }
+        }
+        t.row(vec![
+            format!("{eta}"),
+            converged_at.map(|o| o.to_string()).unwrap_or(">100".into()),
+            format!("{:.1}%", last_err * 100.0),
+        ]);
+    }
+    t.print();
+    println!("(paper: convergence within the first 100 iterations — default η=0.3)");
+    Ok(())
+}
+
+/// Timer-window ablation: the 100-op averaging window damps decision
+/// noise; window=1 chases jitter.
+pub fn ablate_timer_window() -> Result<()> {
+    println!("\n=== Ablation: Timer window (jittered fabric, TCP-TCP, 8MB) ===");
+    let mut t = Table::new(&["window", "mean latency (us)"]);
+    for window in [1usize, 10, 100] {
+        let mut cfg = Config {
+            nodes: 4,
+            combo: vec![ProtoKind::Tcp, ProtoKind::Tcp],
+            policy: Policy::Nezha,
+            deterministic: false, // jitter ON: the window's reason to exist
+            seed: 7,
+            ..Config::default()
+        };
+        cfg.control.timer_window = window;
+        let mut mr = MultiRail::new(&cfg)?;
+        let lat = mean_lat(&mut mr, 8 << 20, 50, 50)?;
+        t.row(vec![format!("{window}"), format!("{lat:.0}")]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// Adaptive vs static CPU allocation end-to-end (proposition 2).
+pub fn ablate_alloc() -> Result<()> {
+    println!("\n=== Ablation: adaptive vs static CPU allocation (TCP-GLEX, 8MB, 4 nodes) ===");
+    use crate::net::cpu_pool::AllocPolicy;
+    let mut t = Table::new(&["alloc", "latency (us)"]);
+    for (name, alloc) in [("adaptive", AllocPolicy::Adaptive), ("static", AllocPolicy::StaticEqual)] {
+        let mut mr = mk(&[ProtoKind::Tcp, ProtoKind::Glex], 4, |c| c.alloc = alloc)?;
+        let lat = mean_lat(&mut mr, 8 << 20, 30, 5)?;
+        t.row(vec![name.into(), format!("{lat:.0}")]);
+    }
+    t.print();
+    println!("(paper §2.3.2: static partitioning starves the scalable RDMA planes)");
+    Ok(())
+}
+
+/// Run all ablations.
+pub fn run_all() -> Result<()> {
+    ablate_tau()?;
+    ablate_eta()?;
+    ablate_timer_window()?;
+    ablate_alloc()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adaptive_beats_static_end_to_end() {
+        use crate::net::cpu_pool::AllocPolicy;
+        let mut adaptive =
+            mk(&[ProtoKind::Tcp, ProtoKind::Glex], 4, |c| c.alloc = AllocPolicy::Adaptive)
+                .unwrap();
+        let mut stat =
+            mk(&[ProtoKind::Tcp, ProtoKind::Glex], 4, |c| c.alloc = AllocPolicy::StaticEqual)
+                .unwrap();
+        let a = mean_lat(&mut adaptive, 8 << 20, 30, 5).unwrap();
+        let s = mean_lat(&mut stat, 8 << 20, 30, 5).unwrap();
+        assert!(a < s, "adaptive {a} vs static {s}");
+    }
+
+    #[test]
+    fn tiny_tau_never_splits() {
+        let mut mr =
+            mk(&[ProtoKind::Tcp, ProtoKind::Sharp], 4, |c| c.control.tau = 1.01).unwrap();
+        let _ = mean_lat(&mut mr, 64 << 20, 20, 1).unwrap();
+        assert!(mr.partitioner.alphas(64 << 20).is_none(), "tau=1 must stay cold");
+    }
+}

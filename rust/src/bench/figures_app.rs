@@ -1,0 +1,309 @@
+//! Application-level figure generators (paper §5.3): model training
+//! speed, per-network latency during training, communication profiles,
+//! GPU/NIC scaling grids, scalability, and the GPT-3 vTrain replays.
+
+use crate::baselines::FixedShares;
+use crate::config::{Config, Policy};
+use crate::coordinator::buffer::UnboundBuffer;
+use crate::coordinator::multirail::MultiRail;
+use crate::net::topology::parse_combo;
+use crate::trainer::{CommProfile, DdpSim, GptModel, VtrainSim};
+use crate::util::bytes::{fmt_bytes, fmt_us};
+use crate::util::table::Table;
+use crate::Result;
+
+fn cfg(combo: &str, nodes: usize, policy: Policy) -> Result<Config> {
+    Ok(Config {
+        nodes,
+        combo: parse_combo(combo)?,
+        policy,
+        deterministic: true,
+        ..Config::default()
+    })
+}
+
+fn speed(combo: &str, nodes: usize, policy: Policy, model: &CommProfile, gpus: usize, bs: usize) -> Result<f64> {
+    let mut sim = DdpSim::new(&cfg(combo, nodes, policy)?, model.clone(), gpus, bs)?;
+    sim.warmup(5)?;
+    sim.samples_per_sec_per_node()
+}
+
+// ----------------------------------------------------------------- fig12
+
+/// Fig. 12: AlexNet/VGG-11 training speed per backend×network.
+pub fn fig12() -> Result<()> {
+    println!("\n=== Fig. 12: average model training speed (samples/s/node) ===");
+    let nets: [(&str, &str, Policy); 6] = [
+        ("TCP (Gloo)", "tcp", Policy::SingleRail),
+        ("SHARP", "sharp", Policy::SingleRail),
+        ("GLEX", "glex", Policy::SingleRail),
+        ("TCP-TCP", "tcp-tcp", Policy::Nezha),
+        ("TCP-SHARP", "tcp-sharp", Policy::Nezha),
+        ("TCP-GLEX", "tcp-glex", Policy::Nezha),
+    ];
+    for (model, bs) in [("alexnet", 32), ("vgg11", 64)] {
+        let prof = CommProfile::by_name(model).unwrap();
+        println!("--- {} (bs={bs}) ---", prof.name);
+        let mut t = Table::new(&["network", "N=4", "N=8"]);
+        for (label, combo, policy) in nets {
+            let s4 = speed(combo, 4, policy, &prof, 1, bs)?;
+            let s8 = speed(combo, 8, policy, &prof, 1, bs)?;
+            t.row(vec![label.into(), format!("{s4:.1}"), format!("{s8:.1}")]);
+        }
+        t.print();
+    }
+    println!("(paper: TCP-TCP +19.9%/+50.4% over Gloo TCP for VGG-11 bs64 at 4/8 nodes)");
+    Ok(())
+}
+
+// ----------------------------------------------------------------- fig14
+
+/// Fig. 14: per-member-network allreduce latency during AlexNet training
+/// (4 nodes): optimal allocation vs 99:1 probes vs single-rail.
+pub fn fig14() -> Result<()> {
+    println!("\n=== Fig. 14: member-network latency during AlexNet (4 nodes, 4MB ops) ===");
+    let bytes = 4u64 << 20;
+    let combos = [("TCP-TCP", "tcp-tcp"), ("TCP-SHARP", "tcp-sharp"), ("TCP-GLEX", "tcp-glex")];
+    let mut t = Table::new(&[
+        "combo", "rail0 (opt)", "rail1 (opt)", "rail0 (99%)", "rail1 (1%)", "sched err",
+    ]);
+    for (label, combo) in combos {
+        // optimal (Nezha) allocation, converged
+        let mut mr = MultiRail::new(&cfg(combo, 4, Policy::Nezha)?)?;
+        let mut last = None;
+        for _ in 0..40 {
+            let mut buf = UnboundBuffer::from_fn(4, 1024, |n, i| ((n + i) % 5) as f32);
+            last = Some(mr.allreduce_scaled(&mut buf, bytes as f64 / 1024.0)?);
+        }
+        let rep = last.unwrap();
+        let t0 = rep.per_rail.iter().find(|s| s.rail == 0).map(|s| s.time_us).unwrap_or(0.0);
+        let t1 = rep.per_rail.iter().find(|s| s.rail == 1).map(|s| s.time_us).unwrap_or(0.0);
+        let err = if t0 > 0.0 && t1 > 0.0 {
+            (t0 - t1).abs() / t0.max(t1)
+        } else {
+            0.0
+        };
+        // 99:1 probe
+        let mut mr99 = MultiRail::new(&cfg(combo, 4, Policy::Nezha)?)?;
+        mr99.partitioner = Box::new(FixedShares::percent(99, 1));
+        let mut buf = UnboundBuffer::from_fn(4, 1024, |n, i| ((n + i) % 5) as f32);
+        let rep99 = mr99.allreduce_scaled(&mut buf, bytes as f64 / 1024.0)?;
+        let p0 = rep99.per_rail.iter().find(|s| s.rail == 0).map(|s| s.time_us).unwrap_or(0.0);
+        let p1 = rep99.per_rail.iter().find(|s| s.rail == 1).map(|s| s.time_us).unwrap_or(0.0);
+        t.row(vec![
+            label.into(),
+            fmt_us(t0),
+            fmt_us(t1),
+            fmt_us(p0),
+            fmt_us(p1),
+            format!("{:.1}%", err * 100.0),
+        ]);
+    }
+    t.print();
+    println!("(paper: balanced latency across members; average scheduling error within 9.3%)");
+    Ok(())
+}
+
+// ----------------------------------------------------------------- fig15
+
+/// Fig. 15: allreduce count & data size per training epoch.
+pub fn fig15() -> Result<()> {
+    println!("\n=== Fig. 15: allreduce count & volume per epoch (global batch 256) ===");
+    for prof in [CommProfile::alexnet(), CommProfile::vgg11()] {
+        println!("--- {} ({} ops/iter, {} / iter) ---",
+            prof.name,
+            prof.ops.len(),
+            fmt_bytes(prof.bytes_per_iter()),
+        );
+        let h = prof.epoch_histogram(256);
+        let mut t = Table::new(&["size bucket", "count/epoch", "volume/epoch"]);
+        for (lb, count, bytes) in h.rows() {
+            t.row(vec![
+                format!(">={}", fmt_bytes(lb)),
+                format!("{count}"),
+                fmt_bytes(bytes),
+            ]);
+        }
+        t.print();
+    }
+    println!("(paper: AlexNet traffic <4MB; VGG-11 intensive in 2–16MB)");
+    Ok(())
+}
+
+// ----------------------------------------------------------------- fig16
+
+/// Fig. 16: GxNy training-speed grid (GPUs × NICs per node).
+pub fn fig16() -> Result<()> {
+    println!("\n=== Fig. 16: training speed grid, values = samples/s/node (ratio vs G1N1) ===");
+    let grid: [(&str, usize, &str); 5] = [
+        ("G1N1", 1, "tcp"),
+        ("G1N2", 1, "tcp-tcp"),
+        ("G1N3", 1, "tcp-tcp-tcp"),
+        ("G2N1", 2, "tcp"),
+        ("G2N2", 2, "tcp-tcp"),
+    ];
+    for nodes in [4usize, 6] {
+        println!("--- {nodes} nodes ---");
+        let mut t = Table::new(&["model", "G1N1", "G1N2", "G1N3", "G2N1", "G2N2"]);
+        for (model, bs) in [("alexnet", 32), ("alexnet", 64), ("vgg11", 32), ("vgg11", 64)] {
+            let prof = CommProfile::by_name(model).unwrap();
+            let mut row = vec![format!("{}_{bs}", prof.name)];
+            let mut base = 0.0;
+            for (label, gpus, combo) in grid {
+                let policy = if combo == "tcp" { Policy::SingleRail } else { Policy::Nezha };
+                let s = speed(combo, nodes, policy, &prof, gpus, bs)?;
+                if label == "G1N1" {
+                    base = s;
+                    row.push(format!("{s:.1}"));
+                } else {
+                    row.push(format!("{s:.1} ({:.2})", s / base));
+                }
+            }
+            t.row(row);
+        }
+        t.print();
+    }
+    println!("(paper: G2N2 ≈ 2.4–2.6× G1N1; G1N2 ≈ 1.4–1.5×; multi-rail complements multi-GPU)");
+    Ok(())
+}
+
+// ----------------------------------------------------------------- fig17
+
+/// Fig. 17: AlexNet training-speed scalability (TCP-TCP vs TCP).
+pub fn fig17() -> Result<()> {
+    println!("\n=== Fig. 17: AlexNet scalability: Nezha TCP-TCP vs Gloo TCP ===");
+    let prof = CommProfile::alexnet();
+    let mut t = Table::new(&["nodes", "TCP (Gloo)", "TCP-TCP (Nezha)", "ratio"]);
+    for nodes in [4usize, 6, 8, 10, 12, 16] {
+        let single = speed("tcp", nodes, Policy::SingleRail, &prof, 1, 32)?;
+        let dual = speed("tcp-tcp", nodes, Policy::Nezha, &prof, 1, 32)?;
+        t.row(vec![
+            format!("{nodes}"),
+            format!("{single:.1}"),
+            format!("{dual:.1}"),
+            format!("{:.2}x", dual / single),
+        ]);
+    }
+    t.print();
+    println!("(paper: improvement ratio grows with node count — 1.51x..1.54x band)");
+    Ok(())
+}
+
+// ------------------------------------------------------------- fig18/19
+
+fn gpt_figure(chunk: Option<u64>, label: &str) -> Result<()> {
+    println!("\n=== {label} ===");
+    for model in [GptModel::Gpt2_7B, GptModel::Gpt30B] {
+        println!("--- {} ---", model.name());
+        let mut t = Table::new(&["nodes", "Gloo TCP (s)", "Nezha TCP-TCP (s)", "speedup"]);
+        for nodes in [16usize, 32, 64, 128] {
+            let mut gloo = VtrainSim::new(model, nodes, Policy::SingleRail, chunk)?;
+            let mut nezha = VtrainSim::new(model, nodes, Policy::Nezha, chunk)?;
+            let tg = gloo.iteration_time_s()?;
+            let tn = nezha.iteration_time_s()?;
+            t.row(vec![
+                format!("{nodes}"),
+                format!("{tg:.1}"),
+                format!("{tn:.1}"),
+                format!("{:.2}x", tg / tn),
+            ]);
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+/// Fig. 18: GPT-3 iteration time, Ring allreduce, 16–128 nodes.
+pub fn fig18() -> Result<()> {
+    gpt_figure(None, "Fig. 18: GPT-3 training iteration time (Ring allreduce)")?;
+    println!("(paper: Nezha 2.38x at 128 nodes, exceeding the theoretical 2x)");
+    Ok(())
+}
+
+/// Fig. 19: same with Ring_Chunked (64 MB pipeline chunks).
+pub fn fig19() -> Result<()> {
+    gpt_figure(
+        Some(64 * 1024 * 1024),
+        "Fig. 19: GPT-3 training iteration time (Ring_Chunked allreduce)",
+    )?;
+    println!("(paper: chunking flattens iteration growth below 128 nodes)");
+    Ok(())
+}
+
+// ---------------------------------------------------------------- headline
+
+/// The abstract's headline claims, measured on this reproduction.
+pub fn headline() -> Result<()> {
+    println!("\n=== Headline claims (abstract) ===");
+    // throughput claims live at bandwidth-bound sizes (>=512KB); tiny
+    // payloads produce degenerate ratios (SHARP 13us vs TCP ~1ms)
+    let sizes: Vec<u64> = super::figures::SIZES
+        .iter()
+        .copied()
+        .filter(|s| *s >= 512 << 10)
+        .collect();
+    // 1. +74% over MPTCP homogeneous (8 nodes)
+    let mut best = (0.0f64, 0u64);
+    for &s in &sizes {
+        let mptcp = probe("tcp-tcp", 8, Policy::Mptcp, s, 3)?;
+        let nezha = probe("tcp-tcp", 8, Policy::Nezha, s, 10)?;
+        let gain = mptcp / nezha - 1.0;
+        if gain > best.0 {
+            best = (gain, s);
+        }
+    }
+    println!(
+        "Nezha vs MPTCP, homogeneous TCP-TCP, 8 nodes: +{:.0}% (paper: +74%) at {}",
+        best.0 * 100.0,
+        fmt_bytes(best.1)
+    );
+    // 2. +80% over MPTCP heterogeneous
+    let mut best = (0.0f64, 0u64);
+    for &s in &sizes {
+        let mptcp = probe("tcp-sharp", 8, Policy::Mptcp, s, 3)?;
+        let nezha = probe("tcp-sharp", 8, Policy::Nezha, s, 10)?;
+        let gain = mptcp / nezha - 1.0;
+        if gain > best.0 {
+            best = (gain, s);
+        }
+    }
+    println!(
+        "Nezha vs MPTCP, heterogeneous TCP-SHARP, 8 nodes: +{:.0}% (paper: +80%) at {}",
+        best.0 * 100.0,
+        fmt_bytes(best.1)
+    );
+    // 3. 2.36x training efficiency vs Gloo at 128 nodes
+    let mut gloo = VtrainSim::new(GptModel::Gpt2_7B, 128, Policy::SingleRail, None)?;
+    let mut nezha = VtrainSim::new(GptModel::Gpt2_7B, 128, Policy::Nezha, None)?;
+    let ratio = gloo.iteration_time_s()? / nezha.iteration_time_s()?;
+    println!("Nezha vs Gloo, GPT-3 2.7B @128 nodes: {ratio:.2}x (paper: 2.36x)");
+    Ok(())
+}
+
+fn probe(combo: &str, nodes: usize, policy: Policy, bytes: u64, reps: usize) -> Result<f64> {
+    let mut mr = MultiRail::new(&cfg(combo, nodes, policy)?)?;
+    let elem_bytes = bytes as f64 / 1024.0;
+    let warm = if policy == Policy::Nezha { 30 } else { 2 };
+    for _ in 0..warm {
+        let mut buf = UnboundBuffer::from_fn(nodes, 1024, |n, i| ((n + i) % 7) as f32);
+        mr.allreduce_scaled(&mut buf, elem_bytes)?;
+    }
+    let mut total = 0.0;
+    for _ in 0..reps {
+        let mut buf = UnboundBuffer::from_fn(nodes, 1024, |n, i| ((n + i) % 7) as f32);
+        total += mr.allreduce_scaled(&mut buf, elem_bytes)?.total_us;
+    }
+    Ok(total / reps as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speed_helper_runs() {
+        let prof = CommProfile::alexnet();
+        let s = speed("tcp-tcp", 4, Policy::Nezha, &prof, 1, 32).unwrap();
+        assert!(s > 0.0);
+    }
+}

@@ -1,0 +1,79 @@
+//! Wall-clock bench harness (criterion is unavailable offline): warmup,
+//! fixed-iteration measurement, mean/percentile reporting.
+
+use std::time::Instant;
+
+use crate::util::stats::{mean, percentile};
+
+/// Aggregated wall-clock statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub min_us: f64,
+}
+
+impl BenchStats {
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.name.clone(),
+            format!("{}", self.iters),
+            format!("{:.1}", self.mean_us),
+            format!("{:.1}", self.p50_us),
+            format!("{:.1}", self.p95_us),
+            format!("{:.1}", self.min_us),
+        ]
+    }
+
+    pub fn header() -> Vec<&'static str> {
+        vec!["bench", "iters", "mean(us)", "p50(us)", "p95(us)", "min(us)"]
+    }
+
+    /// Throughput in MB/s given per-iteration payload bytes.
+    pub fn mbps(&self, bytes_per_iter: u64) -> f64 {
+        bytes_per_iter as f64 / self.mean_us
+    }
+}
+
+/// Measure `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench_wall(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_us: mean(&samples),
+        p50_us: percentile(&samples, 50.0),
+        p95_us: percentile(&samples, 95.0),
+        min_us: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut acc = 0u64;
+        let s = bench_wall("spin", 2, 10, || {
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert_eq!(s.iters, 10);
+        assert!(s.mean_us >= 0.0);
+        assert!(s.p95_us >= s.p50_us);
+        assert!(s.min_us <= s.mean_us + 1e-9);
+    }
+}

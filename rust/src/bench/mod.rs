@@ -1,0 +1,13 @@
+//! Benchmark harness + paper figure/table generators.
+//!
+//! Every table and figure of the paper's evaluation has a generator in
+//! [`figures`] (see DESIGN.md §5 for the index); [`harness`] provides the
+//! wall-clock measurement utilities for the hot-path benches
+//! (rust/benches/).
+
+pub mod ablation;
+pub mod figures;
+pub mod figures_app;
+pub mod harness;
+
+pub use harness::{bench_wall, BenchStats};

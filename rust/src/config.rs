@@ -1,0 +1,246 @@
+//! Experiment / system configuration.
+//!
+//! Configs come from three sources, later overriding earlier: built-in
+//! defaults, a `key = value` config file (`--config path`), and CLI
+//! options. This is the "real config system" entry point used by the
+//! `nezha` binary, the examples and the bench harness.
+
+use std::collections::BTreeMap;
+
+use crate::net::cpu_pool::AllocPolicy;
+use crate::net::protocol::ProtoKind;
+use crate::net::topology::{parse_combo, ClusterSpec};
+use crate::util::cli::Args;
+use crate::util::error::Error;
+use crate::Result;
+
+/// Which data-distribution policy drives the multi-rail allreduce.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Nezha's cold/hot state machine + dynamic load balancing.
+    Nezha,
+    /// MRIB: static bandwidth-proportional split.
+    Mrib,
+    /// MPTCP (ECF): RTT-driven packet slicing across subflows.
+    Mptcp,
+    /// Best single rail only (Gloo-like baseline).
+    SingleRail,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Result<Policy> {
+        match s.to_ascii_lowercase().as_str() {
+            "nezha" => Ok(Policy::Nezha),
+            "mrib" => Ok(Policy::Mrib),
+            "mptcp" => Ok(Policy::Mptcp),
+            "single" | "single-rail" | "gloo" => Ok(Policy::SingleRail),
+            other => Err(Error::Config(format!("unknown policy `{other}`"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Nezha => "Nezha",
+            Policy::Mrib => "MRIB",
+            Policy::Mptcp => "MPTCP",
+            Policy::SingleRail => "single-rail",
+        }
+    }
+}
+
+/// Control-module tunables (paper §3.5/§4.3 defaults).
+#[derive(Debug, Clone)]
+pub struct ControlConfig {
+    /// Protocol divergence tolerance threshold τ (paper: 5).
+    pub tau: f64,
+    /// Gradient-descent step size η for hot-start coefficient updates.
+    pub eta: f64,
+    /// Timer averaging window (paper: average of every 100 same-size ops).
+    pub timer_window: usize,
+    /// Heartbeat/detection timeout for rail failure (us). Paper budget:
+    /// detection + migration < 200 ms.
+    pub detect_timeout_us: f64,
+    /// Task-migration handoff cost (us): deregister + pointer handoff.
+    pub migrate_cost_us: f64,
+    /// Convergence tolerance on α updates.
+    pub alpha_tol: f64,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            tau: 5.0,
+            eta: 0.3,
+            timer_window: 100,
+            detect_timeout_us: 120_000.0,
+            migrate_cost_us: 40_000.0,
+            alpha_tol: 1e-3,
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cluster: ClusterSpec,
+    pub nodes: usize,
+    pub combo: Vec<ProtoKind>,
+    pub policy: Policy,
+    pub alloc: AllocPolicy,
+    pub control: ControlConfig,
+    pub seed: u64,
+    pub deterministic: bool,
+    /// Directory holding the AOT artifacts.
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cluster: ClusterSpec::local(),
+            nodes: 4,
+            combo: vec![ProtoKind::Tcp, ProtoKind::Tcp],
+            policy: Policy::Nezha,
+            alloc: AllocPolicy::Adaptive,
+            control: ControlConfig::default(),
+            seed: 42,
+            deterministic: false,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl Config {
+    /// Apply a `key = value` map (from file or CLI) over this config.
+    pub fn apply(&mut self, kv: &BTreeMap<String, String>) -> Result<()> {
+        for (k, v) in kv {
+            match k.as_str() {
+                "cluster" => {
+                    self.cluster = match v.as_str() {
+                        "local" => ClusterSpec::local(),
+                        "cloud" => ClusterSpec::cloud(),
+                        "supercomputer" | "super" => ClusterSpec::supercomputer(),
+                        other => return Err(Error::Config(format!("unknown cluster `{other}`"))),
+                    }
+                }
+                "nodes" => {
+                    self.nodes = v
+                        .parse()
+                        .map_err(|_| Error::Config(format!("bad nodes `{v}`")))?
+                }
+                "combo" | "network" => self.combo = parse_combo(v)?,
+                "policy" => self.policy = Policy::parse(v)?,
+                "alloc" => {
+                    self.alloc = match v.as_str() {
+                        "static" => AllocPolicy::StaticEqual,
+                        "adaptive" => AllocPolicy::Adaptive,
+                        other => return Err(Error::Config(format!("unknown alloc `{other}`"))),
+                    }
+                }
+                "tau" => self.control.tau = parse_f64(k, v)?,
+                "eta" => self.control.eta = parse_f64(k, v)?,
+                "timer_window" => self.control.timer_window = parse_f64(k, v)? as usize,
+                "detect_timeout_us" => self.control.detect_timeout_us = parse_f64(k, v)?,
+                "migrate_cost_us" => self.control.migrate_cost_us = parse_f64(k, v)?,
+                "seed" => self.seed = parse_f64(k, v)? as u64,
+                "deterministic" => self.deterministic = v == "true" || v == "1",
+                "artifacts_dir" => self.artifacts_dir = v.clone(),
+                other => return Err(Error::Config(format!("unknown config key `{other}`"))),
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse a `key = value` config file (# comments, blank lines ok).
+    pub fn load_file(&mut self, path: &str) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        let mut kv = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("{path}:{}: expected `key = value`", lineno + 1))
+            })?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        self.apply(&kv)
+    }
+
+    /// Build from CLI args (honouring `--config FILE` first).
+    pub fn from_args(args: &Args) -> Result<Config> {
+        let mut cfg = Config::default();
+        if let Some(path) = args.get("config") {
+            cfg.load_file(path)?;
+        }
+        let mut kv = BTreeMap::new();
+        for key in [
+            "cluster", "nodes", "combo", "network", "policy", "alloc", "tau", "eta",
+            "timer_window", "detect_timeout_us", "migrate_cost_us", "seed",
+            "deterministic", "artifacts_dir",
+        ] {
+            if let Some(v) = args.get(key) {
+                kv.insert(key.to_string(), v.to_string());
+            }
+        }
+        if args.has("deterministic") {
+            kv.insert("deterministic".into(), "true".into());
+        }
+        cfg.apply(&kv)?;
+        Ok(cfg)
+    }
+}
+
+fn parse_f64(k: &str, v: &str) -> Result<f64> {
+    v.parse()
+        .map_err(|_| Error::Config(format!("bad value for `{k}`: `{v}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = Config::default();
+        assert_eq!(c.nodes, 4);
+        assert_eq!(c.control.tau, 5.0);
+        assert_eq!(c.policy, Policy::Nezha);
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let mut c = Config::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("nodes".into(), "8".into());
+        kv.insert("combo".into(), "tcp-sharp".into());
+        kv.insert("policy".into(), "mrib".into());
+        kv.insert("tau".into(), "7.5".into());
+        c.apply(&kv).unwrap();
+        assert_eq!(c.nodes, 8);
+        assert_eq!(c.combo, vec![ProtoKind::Tcp, ProtoKind::Sharp]);
+        assert_eq!(c.policy, Policy::Mrib);
+        assert_eq!(c.control.tau, 7.5);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        let mut c = Config::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("bogus".into(), "1".into());
+        assert!(c.apply(&kv).is_err());
+    }
+
+    #[test]
+    fn file_parsing() {
+        let dir = std::env::temp_dir().join("nezha_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.conf");
+        std::fs::write(&p, "# comment\nnodes = 8\npolicy = mptcp # inline\n\n").unwrap();
+        let mut c = Config::default();
+        c.load_file(p.to_str().unwrap()).unwrap();
+        assert_eq!(c.nodes, 8);
+        assert_eq!(c.policy, Policy::Mptcp);
+    }
+}

@@ -1,0 +1,240 @@
+//! Cross-protocol shared buffer (paper §3.2).
+//!
+//! Data to be allreduced is staged in an `UnboundBuffer`; each member
+//! network receives a `(ptr, data_length)` window — here a typed
+//! [`Window`] — reads its slice, processes it, and returns results in
+//! place. Once every window completes, the buffer releases the data to the
+//! requester. The window arithmetic below is exactly what the Load
+//! Balancer's pointer calculation (§3.5) produces and what failover hands
+//! between rails (§4.4).
+
+/// A `(ptr, data_length)` view into the shared buffer, in f32 elements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Window {
+    pub offset: usize,
+    pub len: usize,
+}
+
+impl Window {
+    pub fn new(offset: usize, len: usize) -> Window {
+        Window { offset, len }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.len as u64 * 4
+    }
+
+    pub fn end(&self) -> usize {
+        self.offset + self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Split this window into `parts` contiguous sub-windows proportional
+    /// to `fractions` (which must sum to ~1). Every element lands in
+    /// exactly one sub-window; rounding drift is absorbed by the last part.
+    pub fn split_fractions(&self, fractions: &[f64]) -> Vec<Window> {
+        assert!(!fractions.is_empty());
+        let mut out = Vec::with_capacity(fractions.len());
+        let mut off = self.offset;
+        for (i, &f) in fractions.iter().enumerate() {
+            let len = if i + 1 == fractions.len() {
+                self.end() - off
+            } else {
+                ((self.len as f64 * f).round() as usize).min(self.end() - off)
+            };
+            out.push(Window::new(off, len));
+            off += len;
+        }
+        debug_assert_eq!(out.last().unwrap().end(), self.end());
+        out
+    }
+
+    /// Split into fixed-size chunks (the ring-chunked pipeline and MPTCP's
+    /// packet slicing both use this).
+    pub fn split_chunks(&self, chunk_elems: usize) -> Vec<Window> {
+        assert!(chunk_elems > 0);
+        let mut out = Vec::new();
+        let mut off = self.offset;
+        while off < self.end() {
+            let len = chunk_elems.min(self.end() - off);
+            out.push(Window::new(off, len));
+            off += len;
+        }
+        if out.is_empty() {
+            out.push(*self);
+        }
+        out
+    }
+}
+
+/// The staging buffer shared by all member networks: one payload slice per
+/// node (the in-process stand-in for each node's pinned gradient buffer).
+#[derive(Debug)]
+pub struct UnboundBuffer {
+    /// data[node] — all nodes' payloads, equal length.
+    data: Vec<Vec<f32>>,
+    /// Completion mask per registered window.
+    pending: Vec<(Window, bool)>,
+}
+
+impl UnboundBuffer {
+    pub fn new(data: Vec<Vec<f32>>) -> UnboundBuffer {
+        assert!(!data.is_empty());
+        let len = data[0].len();
+        assert!(data.iter().all(|d| d.len() == len), "ragged node buffers");
+        UnboundBuffer { data, pending: Vec::new() }
+    }
+
+    pub fn from_fn(nodes: usize, len: usize, f: impl Fn(usize, usize) -> f32) -> UnboundBuffer {
+        UnboundBuffer::new(
+            (0..nodes)
+                .map(|n| (0..len).map(|i| f(n, i)).collect())
+                .collect(),
+        )
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data[0].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn full_window(&self) -> Window {
+        Window::new(0, self.len())
+    }
+
+    /// Register a window a member network is responsible for.
+    pub fn register(&mut self, w: Window) {
+        assert!(w.end() <= self.len(), "window out of bounds");
+        self.pending.push((w, false));
+    }
+
+    pub fn complete(&mut self, w: Window) {
+        for (pw, done) in &mut self.pending {
+            if *pw == w {
+                *done = true;
+                return;
+            }
+        }
+        panic!("completing unregistered window {w:?}");
+    }
+
+    /// All registered windows done — data may be released to the requester.
+    pub fn all_complete(&self) -> bool {
+        self.pending.iter().all(|(_, d)| *d)
+    }
+
+    pub fn clear_pending(&mut self) {
+        self.pending.clear();
+    }
+
+    pub fn node(&self, n: usize) -> &[f32] {
+        &self.data[n]
+    }
+
+    pub fn node_mut(&mut self, n: usize) -> &mut [f32] {
+        &mut self.data[n]
+    }
+
+    /// Borrow two nodes' windows simultaneously (ring-step exchange).
+    pub fn pair_windows_mut(
+        &mut self,
+        a: usize,
+        b: usize,
+        w: Window,
+    ) -> (&mut [f32], &mut [f32]) {
+        assert_ne!(a, b);
+        let (lo, hi, swap) = if a < b { (a, b, false) } else { (b, a, true) };
+        let (left, right) = self.data.split_at_mut(hi);
+        let sa = &mut left[lo][w.offset..w.end()];
+        let sb = &mut right[0][w.offset..w.end()];
+        if swap { (sb, sa) } else { (sa, sb) }
+    }
+
+    pub fn into_data(self) -> Vec<Vec<f32>> {
+        self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_fractions_covers_exactly() {
+        let w = Window::new(10, 1000);
+        let parts = w.split_fractions(&[0.3, 0.7]);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].offset, 10);
+        assert_eq!(parts[0].len + parts[1].len, 1000);
+        assert_eq!(parts[1].end(), 1010);
+        // ~30/70 split
+        assert!((parts[0].len as f64 - 300.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn split_fractions_rounding_edge() {
+        let w = Window::new(0, 7);
+        let parts = w.split_fractions(&[1.0 / 3.0, 1.0 / 3.0, 1.0 / 3.0]);
+        assert_eq!(parts.iter().map(|p| p.len).sum::<usize>(), 7);
+        assert_eq!(parts[2].end(), 7);
+    }
+
+    #[test]
+    fn split_chunks() {
+        let w = Window::new(4, 10);
+        let chunks = w.split_chunks(4);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0], Window::new(4, 4));
+        assert_eq!(chunks[2], Window::new(12, 2));
+    }
+
+    #[test]
+    fn zero_fraction_windows_allowed() {
+        let w = Window::new(0, 100);
+        let parts = w.split_fractions(&[0.0, 1.0]);
+        assert_eq!(parts[0].len, 0);
+        assert!(parts[0].is_empty());
+        assert_eq!(parts[1].len, 100);
+    }
+
+    #[test]
+    fn completion_tracking() {
+        let mut b = UnboundBuffer::from_fn(2, 8, |n, i| (n * 8 + i) as f32);
+        let w1 = Window::new(0, 4);
+        let w2 = Window::new(4, 4);
+        b.register(w1);
+        b.register(w2);
+        assert!(!b.all_complete());
+        b.complete(w1);
+        assert!(!b.all_complete());
+        b.complete(w2);
+        assert!(b.all_complete());
+    }
+
+    #[test]
+    fn pair_windows_disjoint_borrow() {
+        let mut b = UnboundBuffer::from_fn(3, 4, |n, i| (n * 4 + i) as f32);
+        let (a, c) = b.pair_windows_mut(2, 0, Window::new(1, 2));
+        assert_eq!(a, &[9.0, 10.0]);
+        assert_eq!(c, &[1.0, 2.0]);
+        a[0] = 99.0;
+        assert_eq!(b.node(2)[1], 99.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_window_rejected() {
+        let mut b = UnboundBuffer::from_fn(2, 8, |_, _| 0.0);
+        b.register(Window::new(5, 10));
+    }
+}

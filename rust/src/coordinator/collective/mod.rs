@@ -1,0 +1,102 @@
+//! Collective Operations Module (paper §3.4).
+//!
+//! Allreduce implementations over one rail of the fabric. Payload numerics
+//! are real (the reduction actually executes, by default through the
+//! portable [`RustReducer`], or through the AOT-compiled Pallas reduce
+//! kernel via [`crate::runtime::PjrtReducer`]); completion time comes from
+//! the fabric's calibrated protocol models.
+//!
+//! `elem_bytes` decouples modeled wire bytes from in-memory payload size so
+//! large-payload *timing* sweeps (benches) can run on small real buffers;
+//! the default of 4.0 (f32) keeps time and data exactly coupled.
+
+pub mod reducer;
+pub mod ring;
+pub mod tree;
+
+pub use reducer::{Reducer, RustReducer};
+pub use ring::{ring_allreduce, ring_chunked_allreduce};
+pub use tree::tree_allreduce;
+
+use crate::coordinator::buffer::{UnboundBuffer, Window};
+use crate::net::protocol::CollectiveKind;
+use crate::net::simnet::{Fabric, RailDown};
+
+/// Outcome of one collective operation on one rail.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OpOutcome {
+    /// Modeled completion time (us).
+    pub time_us: f64,
+    /// Modeled bytes this rail moved per node.
+    pub bytes_moved: u64,
+    /// Number of lockstep communication rounds.
+    pub steps: usize,
+}
+
+/// Which allreduce algorithm to run on ring-capable rails.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    Ring,
+    /// Gloo's Ring_Chunked: segments pipelined in `chunk_elems` chunks.
+    RingChunked { chunk_elems: usize },
+}
+
+/// Run the native collective for `rail` (tree for SHARP, ring otherwise)
+/// on `buf[w]`, reducing across all nodes.
+pub fn run_allreduce(
+    algo: Algo,
+    fab: &mut Fabric,
+    rail: usize,
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+) -> Result<OpOutcome, RailDown> {
+    if w.is_empty() {
+        return Ok(OpOutcome::default());
+    }
+    match fab.rails[rail].protocol.collective {
+        CollectiveKind::Tree => tree_allreduce(fab, rail, buf, w, red, elem_bytes),
+        CollectiveKind::Ring => match algo {
+            Algo::Ring => ring_allreduce(fab, rail, buf, w, red, elem_bytes),
+            Algo::RingChunked { chunk_elems } => {
+                ring_chunked_allreduce(fab, rail, buf, w, red, elem_bytes, chunk_elems)
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::net::cpu_pool::CpuPool;
+    use crate::net::protocol::ProtoKind;
+    use crate::net::topology::ClusterSpec;
+
+    pub fn fabric(nodes: usize, kinds: &[ProtoKind]) -> Fabric {
+        let rails = ClusterSpec::local().build_rails(kinds).unwrap();
+        Fabric::new(nodes, rails, CpuPool::default(), 9).deterministic()
+    }
+
+    /// Node n's element i starts as n+1 scaled pattern; expected reduced
+    /// value at i = sum over nodes.
+    pub fn make_buf(nodes: usize, len: usize) -> (UnboundBuffer, Vec<f32>) {
+        let buf = UnboundBuffer::from_fn(nodes, len, |n, i| ((n + 1) * (i % 13 + 1)) as f32);
+        let expect: Vec<f32> = (0..len)
+            .map(|i| (1..=nodes).map(|n| (n * (i % 13 + 1)) as f32).sum())
+            .collect();
+        (buf, expect)
+    }
+
+    pub fn assert_reduced(buf: &UnboundBuffer, w: Window, expect: &[f32]) {
+        for n in 0..buf.nodes() {
+            for i in w.offset..w.end() {
+                assert_eq!(
+                    buf.node(n)[i],
+                    expect[i],
+                    "node {n} elem {i}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Reduction backends: the compute core of every allreduce step.
+//!
+//! [`RustReducer`] is the portable hot-path implementation (auto-vectorized
+//! slice add). The PJRT-backed reducer executing the AOT-compiled Pallas
+//! `add_pair` kernel lives in [`crate::runtime::PjrtReducer`] so the `net`/
+//! `coordinator` layers stay usable without artifacts.
+
+/// Elementwise accumulate: `dst += src`.
+pub trait Reducer {
+    fn add_into(&mut self, dst: &mut [f32], src: &[f32]);
+
+    /// n-way accumulate used by the in-network (SHARP) path:
+    /// `dst = sum(srcs)`. Default: fold of pairwise adds.
+    fn reduce_n(&mut self, dst: &mut [f32], srcs: &[&[f32]]) {
+        if let Some((first, rest)) = srcs.split_first() {
+            dst.copy_from_slice(first);
+            for s in rest {
+                self.add_into(dst, s);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Portable reducer: a plain indexed loop the compiler auto-vectorizes.
+#[derive(Debug, Default, Clone)]
+pub struct RustReducer;
+
+impl Reducer for RustReducer {
+    #[inline]
+    fn add_into(&mut self, dst: &mut [f32], src: &[f32]) {
+        assert_eq!(dst.len(), src.len());
+        // chunked exact-size loop: lets LLVM emit packed adds without
+        // bounds checks in the body
+        let n = dst.len();
+        let (dc, dr) = dst.split_at_mut(n - n % 8);
+        let (sc, sr) = src.split_at(n - n % 8);
+        for (d8, s8) in dc.chunks_exact_mut(8).zip(sc.chunks_exact(8)) {
+            for k in 0..8 {
+                d8[k] += s8[k];
+            }
+        }
+        for (d, s) in dr.iter_mut().zip(sr) {
+            *d += s;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_into_matches_scalar() {
+        let mut r = RustReducer;
+        let mut dst: Vec<f32> = (0..1003).map(|i| i as f32).collect();
+        let src: Vec<f32> = (0..1003).map(|i| (i * 2) as f32).collect();
+        let expect: Vec<f32> = (0..1003).map(|i| (i * 3) as f32).collect();
+        r.add_into(&mut dst, &src);
+        assert_eq!(dst, expect);
+    }
+
+    #[test]
+    fn reduce_n_matches_fold() {
+        let mut r = RustReducer;
+        let a: Vec<f32> = (0..77).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..77).map(|i| (i + 1) as f32).collect();
+        let c: Vec<f32> = (0..77).map(|i| (i + 2) as f32).collect();
+        let mut dst = vec![0.0; 77];
+        r.reduce_n(&mut dst, &[&a, &b, &c]);
+        for i in 0..77 {
+            assert_eq!(dst[i], (3 * i + 3) as f32);
+        }
+    }
+
+    #[test]
+    fn empty_slices_ok() {
+        let mut r = RustReducer;
+        let mut dst: Vec<f32> = vec![];
+        r.add_into(&mut dst, &[]);
+        r.reduce_n(&mut dst, &[]);
+    }
+}

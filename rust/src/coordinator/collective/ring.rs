@@ -1,0 +1,227 @@
+//! Ring and Ring_Chunked allreduce (paper §5.3.4, Fig. 18/19 algorithms).
+//!
+//! Classic bandwidth-optimal ring: the window is split into N segments;
+//! N-1 reduce-scatter rounds accumulate each segment at one node, N-1
+//! allgather rounds circulate the results. Communication volume per node is
+//! `2(N-1)/N * S` (paper Eq. 1).
+//!
+//! Ring_Chunked (Gloo's recommended variant for large payloads) splits the
+//! window into chunks and pipelines them through the ring, trading more
+//! rounds for smaller per-round messages — which also keeps per-message
+//! sizes below NIC-crashing thresholds (the paper's >1 GB segfault).
+
+use crate::coordinator::buffer::{UnboundBuffer, Window};
+use crate::coordinator::collective::reducer::Reducer;
+use crate::coordinator::collective::OpOutcome;
+use crate::net::simnet::{Fabric, RailDown};
+
+/// Pure data movement of a ring allreduce over `w` (no timing): real
+/// reduce-scatter + allgather across the node buffers.
+pub fn ring_numerics(
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+) {
+    let n = buf.nodes();
+    let segs = segments(w, n);
+    // reduce-scatter: at step s, segment j flows (j+s)%n -> (j+s+1)%n
+    for s in 0..n - 1 {
+        for (j, seg) in segs.iter().enumerate() {
+            if seg.is_empty() {
+                continue;
+            }
+            let sender = (j + s) % n;
+            let receiver = (sender + 1) % n;
+            let (src, dst) = buf.pair_windows_mut(sender, receiver, *seg);
+            red.add_into(dst, src);
+        }
+    }
+    // allgather: segment j is complete at node (j + n - 1) % n
+    for s in 0..n - 1 {
+        for (j, seg) in segs.iter().enumerate() {
+            if seg.is_empty() {
+                continue;
+            }
+            let holder = (j + n - 1 + s) % n;
+            let receiver = (holder + 1) % n;
+            let (src, dst) = buf.pair_windows_mut(holder, receiver, *seg);
+            dst.copy_from_slice(src);
+        }
+    }
+}
+
+fn segments(w: Window, n: usize) -> Vec<Window> {
+    w.split_fractions(&vec![1.0 / n as f64; n])
+}
+
+/// Ring allreduce with modeled lockstep timing.
+pub fn ring_allreduce(
+    fab: &mut Fabric,
+    rail: usize,
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+) -> Result<OpOutcome, RailDown> {
+    let n = fab.nodes;
+    debug_assert_eq!(buf.nodes(), n);
+    let steps = 2 * (n - 1);
+    let seg_bytes = (w.len as f64 / n as f64).ceil() * elem_bytes;
+    // time first: if the rail dies mid-operation the payload must NOT have
+    // been half-reduced (packet-level atomicity, §4.4)
+    let mut total = 0.0;
+    for _ in 0..steps {
+        let dt = fab.ring_step(rail, seg_bytes)?;
+        total += dt;
+    }
+    ring_numerics(buf, w, red);
+    Ok(OpOutcome {
+        time_us: total,
+        bytes_moved: (seg_bytes * steps as f64) as u64,
+        steps,
+    })
+}
+
+/// Pipelined chunked ring: `chunk_elems`-sized chunks stream through the
+/// ring back-to-back; total rounds = 2(N-1) + (chunks-1).
+pub fn ring_chunked_allreduce(
+    fab: &mut Fabric,
+    rail: usize,
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    chunk_elems: usize,
+) -> Result<OpOutcome, RailDown> {
+    let n = fab.nodes;
+    let chunks = w.split_chunks(chunk_elems.max(1));
+    let rounds = 2 * (n - 1) + chunks.len() - 1;
+    let chunk_seg_bytes = (chunks[0].len as f64 / n as f64).ceil() * elem_bytes;
+    let mut total = 0.0;
+    for _ in 0..rounds {
+        total += fab.ring_step(rail, chunk_seg_bytes)?;
+    }
+    for c in &chunks {
+        ring_numerics(buf, *c, red);
+    }
+    Ok(OpOutcome {
+        time_us: total,
+        bytes_moved: (chunk_seg_bytes * rounds as f64) as u64,
+        steps: rounds,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::collective::testutil::{assert_reduced, fabric, make_buf};
+    use crate::coordinator::collective::RustReducer;
+    use crate::net::fault::FaultSchedule;
+    use crate::net::protocol::{ProtoKind, MB};
+
+    #[test]
+    fn ring_numerics_correct() {
+        for nodes in [2, 3, 4, 8] {
+            let (mut buf, expect) = make_buf(nodes, 103);
+            let w = buf.full_window();
+            ring_numerics(&mut buf, w, &mut RustReducer);
+            assert_reduced(&buf, w, &expect);
+        }
+    }
+
+    #[test]
+    fn ring_numerics_subwindow_untouched_outside() {
+        let (mut buf, expect) = make_buf(4, 64);
+        let w = Window::new(16, 32);
+        let before0 = buf.node(0)[0];
+        ring_numerics(&mut buf, w, &mut RustReducer);
+        assert_reduced(&buf, w, &expect);
+        assert_eq!(buf.node(0)[0], before0, "outside window modified");
+    }
+
+    #[test]
+    fn ring_allreduce_times_scale_with_size() {
+        let mut fab = fabric(4, &[ProtoKind::Tcp]);
+        let (mut b1, _) = make_buf(4, 256);
+        let w1 = b1.full_window();
+        let t1 = ring_allreduce(&mut fab, 0, &mut b1, w1, &mut RustReducer, 4.0)
+            .unwrap()
+            .time_us;
+        let (mut b2, _) = make_buf(4, 256);
+        let w2 = b2.full_window();
+        // same real buffer, modeled as 1 MB elements
+        let t2 = ring_allreduce(&mut fab, 0, &mut b2, w2, &mut RustReducer, MB / 256.0 * 4.0)
+            .unwrap()
+            .time_us;
+        assert!(t2 > t1);
+    }
+
+    #[test]
+    fn ring_matches_analytic_estimate() {
+        let mut fab = fabric(4, &[ProtoKind::Tcp]);
+        let (mut buf, _) = make_buf(4, 2048);
+        let w = buf.full_window();
+        let est = fab.estimate_allreduce_us(0, 2048.0 * 4.0);
+        let got = ring_allreduce(&mut fab, 0, &mut buf, w, &mut RustReducer, 4.0)
+            .unwrap()
+            .time_us;
+        assert!((got - est).abs() / est < 0.05, "got {got} est {est}");
+    }
+
+    #[test]
+    fn chunked_has_more_rounds_smaller_messages() {
+        let mut fab = fabric(4, &[ProtoKind::Glex]);
+        let (mut buf, expect) = make_buf(4, 4096);
+        let w = buf.full_window();
+        let out =
+            ring_chunked_allreduce(&mut fab, 0, &mut buf, w, &mut RustReducer, 4.0, 512)
+                .unwrap();
+        assert_eq!(out.steps, 2 * 3 + 8 - 1);
+        assert_reduced(&buf, w, &expect);
+    }
+
+    #[test]
+    fn chunked_beats_plain_for_huge_payload_on_slow_rail() {
+        // pipelining amortizes: for large S the per-round message is S/(N*k)
+        // and rounds only grow additively
+        let mut fab = fabric(8, &[ProtoKind::Tcp]);
+        let (mut b1, _) = make_buf(8, 1024);
+        let w = b1.full_window();
+        let scale = 256.0 * MB / 1024.0; // model 256MB payload
+        let plain = ring_allreduce(&mut fab, 0, &mut b1, w, &mut RustReducer, scale)
+            .unwrap()
+            .time_us;
+        let (mut b2, _) = make_buf(8, 1024);
+        let chunked = ring_chunked_allreduce(&mut fab, 0, &mut b2, w, &mut RustReducer, scale, 64)
+            .unwrap()
+            .time_us;
+        assert!(chunked < plain, "chunked {chunked} plain {plain}");
+    }
+
+    #[test]
+    fn fault_aborts_before_numerics() {
+        let mut fab =
+            fabric(4, &[ProtoKind::Tcp]).with_faults(FaultSchedule::none().with(0, 0.0, 1e9));
+        let (mut buf, _) = make_buf(4, 64);
+        let w = buf.full_window();
+        let orig = buf.node(0).to_vec();
+        assert!(ring_allreduce(&mut fab, 0, &mut buf, w, &mut RustReducer, 4.0).is_err());
+        assert_eq!(buf.node(0), &orig[..], "payload mutated despite abort");
+    }
+
+    #[test]
+    fn two_node_ring() {
+        let (mut buf, expect) = make_buf(2, 10);
+        let w = buf.full_window();
+        ring_numerics(&mut buf, w, &mut RustReducer);
+        assert_reduced(&buf, w, &expect);
+    }
+
+    #[test]
+    fn window_smaller_than_nodes() {
+        let (mut buf, expect) = make_buf(8, 3);
+        let w = buf.full_window();
+        ring_numerics(&mut buf, w, &mut RustReducer);
+        assert_reduced(&buf, w, &expect);
+    }
+}

@@ -1,0 +1,104 @@
+//! In-network aggregation allreduce (the SHARP path, paper §2.2.2).
+//!
+//! Nodes push their window up the switch aggregation tree; the switch
+//! reduces on the fly and multicasts the result back down. End-host CPU
+//! work is minimal (which is why SHARP's core-scaling curve matters less),
+//! and completion time is nearly node-count independent.
+
+use crate::coordinator::buffer::{UnboundBuffer, Window};
+use crate::coordinator::collective::reducer::Reducer;
+use crate::coordinator::collective::OpOutcome;
+use crate::net::simnet::{Fabric, RailDown};
+
+/// SHARP-style tree allreduce: switch-level aggregation of all node
+/// windows, then broadcast of the reduced result.
+pub fn tree_allreduce(
+    fab: &mut Fabric,
+    rail: usize,
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+) -> Result<OpOutcome, RailDown> {
+    let bytes = w.len as f64 * elem_bytes;
+    // timing first — atomicity on failure (§4.4)
+    let time = fab.tree_round(rail, bytes)?;
+
+    // switch aggregation: reduce all node windows into a scratch buffer...
+    let n = buf.nodes();
+    let mut agg = vec![0.0f32; w.len];
+    {
+        let srcs: Vec<&[f32]> = (0..n)
+            .map(|i| &buf.node(i)[w.offset..w.end()])
+            .collect();
+        red.reduce_n(&mut agg, &srcs);
+    }
+    // ...then multicast down-tree
+    for i in 0..n {
+        buf.node_mut(i)[w.offset..w.end()].copy_from_slice(&agg);
+    }
+    Ok(OpOutcome { time_us: time, bytes_moved: 2 * bytes as u64, steps: 2 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::collective::testutil::{assert_reduced, fabric, make_buf};
+    use crate::coordinator::collective::RustReducer;
+    use crate::net::protocol::{ProtoKind, KB, MB};
+
+    #[test]
+    fn tree_numerics_correct() {
+        for nodes in [2, 4, 8] {
+            let mut fab = fabric(nodes, &[ProtoKind::Tcp, ProtoKind::Sharp]);
+            let (mut buf, expect) = make_buf(nodes, 129);
+            let w = buf.full_window();
+            tree_allreduce(&mut fab, 1, &mut buf, w, &mut RustReducer, 4.0).unwrap();
+            assert_reduced(&buf, w, &expect);
+        }
+    }
+
+    #[test]
+    fn tree_time_nearly_node_independent() {
+        let t4 = {
+            let mut fab = fabric(4, &[ProtoKind::Tcp, ProtoKind::Sharp]);
+            let (mut buf, _) = make_buf(4, 64);
+            let w = buf.full_window();
+            tree_allreduce(&mut fab, 1, &mut buf, w, &mut RustReducer, 8.0 * MB / 64.0)
+                .unwrap()
+                .time_us
+        };
+        let t16 = {
+            let mut fab = fabric(16, &[ProtoKind::Tcp, ProtoKind::Sharp]);
+            let (mut buf, _) = make_buf(16, 64);
+            let w = buf.full_window();
+            tree_allreduce(&mut fab, 1, &mut buf, w, &mut RustReducer, 8.0 * MB / 64.0)
+                .unwrap()
+                .time_us
+        };
+        assert!(t16 / t4 < 1.3, "t4={t4} t16={t16}");
+    }
+
+    #[test]
+    fn sharp_small_message_latency_is_microseconds() {
+        let mut fab = fabric(4, &[ProtoKind::Sharp]);
+        let (mut buf, _) = make_buf(4, 256);
+        let w = buf.full_window();
+        // 1KB modeled payload: paper Table 1 says 9us
+        let t = tree_allreduce(&mut fab, 0, &mut buf, w, &mut RustReducer, KB / 256.0)
+            .unwrap()
+            .time_us;
+        assert!(t < 20.0, "SHARP 1KB latency {t}us");
+    }
+
+    #[test]
+    fn subwindow_only() {
+        let mut fab = fabric(4, &[ProtoKind::Sharp]);
+        let (mut buf, expect) = make_buf(4, 100);
+        let w = Window::new(10, 50);
+        let before = buf.node(2)[5];
+        tree_allreduce(&mut fab, 0, &mut buf, w, &mut RustReducer, 4.0).unwrap();
+        assert_reduced(&buf, w, &expect);
+        assert_eq!(buf.node(2)[5], before);
+    }
+}

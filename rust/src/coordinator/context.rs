@@ -1,0 +1,217 @@
+//! Context Module (paper §3.2): unified per-protocol communication
+//! contexts.
+//!
+//! Each member network gets a context object owning its private resources:
+//! NIC device binding, buffer bookkeeping, and protocol-specific machinery
+//! (SHARP's aggregation tree, GLEX's memory-registration table). The
+//! [`Context`] trait is the hardware-agnostic abstraction layer the rest
+//! of the system programs against.
+
+use crate::net::protocol::{CollectiveKind, ProtoKind};
+use crate::net::rail::Rail;
+
+/// Unified interface over TCPContext / SHARPContext / GLEXContext.
+pub trait Context: std::fmt::Debug {
+    fn kind(&self) -> ProtoKind;
+    fn rail_id(&self) -> usize;
+    fn collective(&self) -> CollectiveKind;
+    /// Transport label used by the rendezvous layer (§3.3).
+    fn transport(&self) -> &'static str;
+    /// Protocol-specific setup performed when the context joins a
+    /// communication domain of `nodes` members.
+    fn join_domain(&mut self, nodes: usize);
+    fn ready(&self) -> bool;
+}
+
+/// Create the right context for a rail (the NIC Selector calls this).
+pub fn context_for(rail: &Rail, nodes: usize) -> Box<dyn Context> {
+    let mut ctx: Box<dyn Context> = match rail.kind() {
+        ProtoKind::Tcp => Box::new(TcpContext::new(rail.id)),
+        ProtoKind::Sharp => Box::new(SharpContext::new(rail.id)),
+        ProtoKind::Glex => Box::new(GlexContext::new(rail.id)),
+    };
+    ctx.join_domain(nodes);
+    ctx
+}
+
+/// Plain TCP sockets context.
+#[derive(Debug)]
+pub struct TcpContext {
+    rail: usize,
+    nodes: usize,
+}
+
+impl TcpContext {
+    pub fn new(rail: usize) -> Self {
+        TcpContext { rail, nodes: 0 }
+    }
+}
+
+impl Context for TcpContext {
+    fn kind(&self) -> ProtoKind {
+        ProtoKind::Tcp
+    }
+    fn rail_id(&self) -> usize {
+        self.rail
+    }
+    fn collective(&self) -> CollectiveKind {
+        CollectiveKind::Ring
+    }
+    fn transport(&self) -> &'static str {
+        "tcp"
+    }
+    fn join_domain(&mut self, nodes: usize) {
+        self.nodes = nodes;
+    }
+    fn ready(&self) -> bool {
+        self.nodes >= 2
+    }
+}
+
+/// SHARP context: verifies the collective domain and builds the switch
+/// aggregation tree (§3.3: "the ibverbs segment is tailored for SHARP").
+#[derive(Debug)]
+pub struct SharpContext {
+    rail: usize,
+    nodes: usize,
+    /// Aggregation tree: parent index per node (node 0 is the root's
+    /// attachment point; switches are implicit interior vertices).
+    pub tree_parent: Vec<Option<usize>>,
+}
+
+impl SharpContext {
+    pub fn new(rail: usize) -> Self {
+        SharpContext { rail, nodes: 0, tree_parent: vec![] }
+    }
+
+    /// Binary aggregation tree depth (switch hops one way).
+    pub fn tree_depth(&self) -> usize {
+        if self.nodes <= 1 {
+            0
+        } else {
+            (usize::BITS - (self.nodes - 1).leading_zeros()) as usize
+        }
+    }
+}
+
+impl Context for SharpContext {
+    fn kind(&self) -> ProtoKind {
+        ProtoKind::Sharp
+    }
+    fn rail_id(&self) -> usize {
+        self.rail
+    }
+    fn collective(&self) -> CollectiveKind {
+        CollectiveKind::Tree
+    }
+    fn transport(&self) -> &'static str {
+        "ibverbs"
+    }
+    fn join_domain(&mut self, nodes: usize) {
+        self.nodes = nodes;
+        // binary reduction tree over node ranks
+        self.tree_parent = (0..nodes)
+            .map(|i| if i == 0 { None } else { Some((i - 1) / 2) })
+            .collect();
+    }
+    fn ready(&self) -> bool {
+        !self.tree_parent.is_empty()
+    }
+}
+
+/// GLEX context: RDMA with explicit memory registration (§3.2: "GLEX's
+/// memory registration module").
+#[derive(Debug)]
+pub struct GlexContext {
+    rail: usize,
+    nodes: usize,
+    /// Registered memory regions: (offset_elems, len_elems) windows pinned
+    /// for RDMA.
+    registered: Vec<(usize, usize)>,
+}
+
+impl GlexContext {
+    pub fn new(rail: usize) -> Self {
+        GlexContext { rail, nodes: 0, registered: vec![] }
+    }
+
+    /// Register a memory window for zero-copy transfer; returns an rkey.
+    pub fn register_memory(&mut self, offset: usize, len: usize) -> usize {
+        self.registered.push((offset, len));
+        self.registered.len() - 1
+    }
+
+    pub fn deregister_all(&mut self) {
+        self.registered.clear();
+    }
+
+    pub fn is_registered(&self, offset: usize, len: usize) -> bool {
+        self.registered
+            .iter()
+            .any(|&(o, l)| offset >= o && offset + len <= o + l)
+    }
+}
+
+impl Context for GlexContext {
+    fn kind(&self) -> ProtoKind {
+        ProtoKind::Glex
+    }
+    fn rail_id(&self) -> usize {
+        self.rail
+    }
+    fn collective(&self) -> CollectiveKind {
+        CollectiveKind::Ring
+    }
+    fn transport(&self) -> &'static str {
+        "glex_rdma"
+    }
+    fn join_domain(&mut self, nodes: usize) {
+        self.nodes = nodes;
+    }
+    fn ready(&self) -> bool {
+        self.nodes >= 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::rail::NicSpec;
+
+    #[test]
+    fn context_factory_matches_protocol() {
+        for (kind, transport) in [
+            (ProtoKind::Tcp, "tcp"),
+            (ProtoKind::Sharp, "ibverbs"),
+            (ProtoKind::Glex, "glex_rdma"),
+        ] {
+            let rail = Rail::new(0, NicSpec::CONNECTX5, kind);
+            let ctx = context_for(&rail, 4);
+            assert_eq!(ctx.kind(), kind);
+            assert_eq!(ctx.transport(), transport);
+            assert!(ctx.ready());
+        }
+    }
+
+    #[test]
+    fn sharp_tree_structure() {
+        let mut s = SharpContext::new(0);
+        s.join_domain(8);
+        assert_eq!(s.tree_parent[0], None);
+        assert_eq!(s.tree_parent[1], Some(0));
+        assert_eq!(s.tree_parent[7], Some(3));
+        assert_eq!(s.tree_depth(), 3);
+    }
+
+    #[test]
+    fn glex_memory_registration() {
+        let mut g = GlexContext::new(1);
+        g.join_domain(4);
+        let _rkey = g.register_memory(0, 1024);
+        assert!(g.is_registered(0, 1024));
+        assert!(g.is_registered(100, 100));
+        assert!(!g.is_registered(512, 1024));
+        g.deregister_all();
+        assert!(!g.is_registered(0, 1));
+    }
+}

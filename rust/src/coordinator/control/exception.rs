@@ -1,0 +1,167 @@
+//! Exception Handler (paper §3.5, §4.4): fault detection, rail
+//! deregistration and (ptr, data_length) task migration.
+//!
+//! On a member-network failure the handler: detects it (heartbeat/transfer
+//! timeout), records the faulty network object and deregisters its
+//! operation handle, picks the optimal surviving member network (the one
+//! the Load Balancer had trusted with the most data), and hands the failed
+//! window over. The paper's budget — detection + migration — is under
+//! 200 ms; our defaults (120 ms detect + 40 ms migrate) keep every
+//! recovery inside it.
+
+use crate::coordinator::buffer::Window;
+use crate::config::ControlConfig;
+use crate::net::simnet::Fabric;
+
+/// One recorded failover, for the metrics/Fig. 8 timeline.
+#[derive(Debug, Clone, Copy)]
+pub struct FailoverEvent {
+    /// Virtual time the failure surfaced (us).
+    pub at_us: f64,
+    pub failed_rail: usize,
+    pub takeover_rail: usize,
+    /// Window migrated to the takeover rail.
+    pub window: Window,
+    /// Detection + migration cost charged (us).
+    pub recovery_us: f64,
+}
+
+/// The Exception Handler.
+#[derive(Debug)]
+pub struct ExceptionHandler {
+    cfg: ControlConfig,
+    pub events: Vec<FailoverEvent>,
+}
+
+impl ExceptionHandler {
+    pub fn new(cfg: ControlConfig) -> ExceptionHandler {
+        ExceptionHandler { cfg, events: Vec::new() }
+    }
+
+    /// Total detection + migration budget charged per failover (us).
+    pub fn recovery_cost_us(&self) -> f64 {
+        self.cfg.detect_timeout_us + self.cfg.migrate_cost_us
+    }
+
+    /// Handle a failure of `failed` while processing `window`: deregister
+    /// the rail, pick the optimal survivor and record the event.
+    ///
+    /// `allocated_bytes` is the Load Balancer's per-rail allocation for
+    /// this op — per §4.4 the optimal member network is the one handling
+    /// the most data ("typically more performant").
+    pub fn handle_failure(
+        &mut self,
+        fab: &mut Fabric,
+        failed: usize,
+        window: Window,
+        allocated_bytes: &[(usize, u64)],
+    ) -> Option<FailoverEvent> {
+        fab.deregister(failed);
+        let survivors = fab.healthy_rails();
+        let takeover = *survivors
+            .iter()
+            .max_by_key(|&&r| {
+                allocated_bytes
+                    .iter()
+                    .find(|(rr, _)| *rr == r)
+                    .map(|(_, b)| *b)
+                    .unwrap_or(0)
+            })?;
+        let recovery = self.recovery_cost_us();
+        fab.advance(recovery);
+        let ev = FailoverEvent {
+            at_us: fab.now_us(),
+            failed_rail: failed,
+            takeover_rail: takeover,
+            window,
+            recovery_us: recovery,
+        };
+        self.events.push(ev);
+        Some(ev)
+    }
+
+    /// Probe deregistered rails; re-admit any whose fault window has
+    /// passed. Returns re-admitted rail ids.
+    pub fn probe_recovery(&mut self, fab: &mut Fabric) -> Vec<usize> {
+        let mut back = Vec::new();
+        for r in 0..fab.rails.len() {
+            if fab.rails[r].health == crate::net::rail::RailHealth::Deregistered
+                && !fab.faults.is_down(r, fab.now_us())
+            {
+                fab.readmit(r);
+                back.push(r);
+            }
+        }
+        back
+    }
+
+    pub fn failover_count(&self) -> usize {
+        self.events.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::cpu_pool::CpuPool;
+    use crate::net::fault::FaultSchedule;
+    use crate::net::protocol::ProtoKind;
+    use crate::net::topology::ClusterSpec;
+
+    fn dual_tcp() -> Fabric {
+        let rails = ClusterSpec::local()
+            .build_rails(&[ProtoKind::Tcp, ProtoKind::Tcp])
+            .unwrap();
+        Fabric::new(4, rails, CpuPool::default(), 5).deterministic()
+    }
+
+    #[test]
+    fn recovery_under_200ms_budget() {
+        let h = ExceptionHandler::new(ControlConfig::default());
+        assert!(h.recovery_cost_us() < 200_000.0, "paper budget violated");
+    }
+
+    #[test]
+    fn failover_picks_biggest_allocation() {
+        let mut fab = dual_tcp();
+        let mut h = ExceptionHandler::new(ControlConfig::default());
+        let ev = h
+            .handle_failure(&mut fab, 0, Window::new(0, 100), &[(0, 600), (1, 400)])
+            .unwrap();
+        assert_eq!(ev.takeover_rail, 1);
+        assert_eq!(fab.healthy_rails(), vec![1]);
+        assert_eq!(h.failover_count(), 1);
+    }
+
+    #[test]
+    fn no_survivor_returns_none() {
+        let mut fab = dual_tcp();
+        let mut h = ExceptionHandler::new(ControlConfig::default());
+        fab.deregister(1);
+        assert!(h
+            .handle_failure(&mut fab, 0, Window::new(0, 10), &[])
+            .is_none());
+    }
+
+    #[test]
+    fn probe_readmits_after_window() {
+        let mut fab = dual_tcp().with_faults(FaultSchedule::none().with(1, 0.0, 1000.0));
+        let mut h = ExceptionHandler::new(ControlConfig::default());
+        fab.advance(10.0);
+        h.handle_failure(&mut fab, 1, Window::new(0, 10), &[(0, 1), (1, 1)]);
+        // handle_failure advanced the clock past the fault window end
+        assert!(fab.now_us() > 1000.0);
+        let back = h.probe_recovery(&mut fab);
+        assert_eq!(back, vec![1]);
+        assert_eq!(fab.healthy_rails(), vec![0, 1]);
+    }
+
+    #[test]
+    fn probe_keeps_still_faulty_rail_out() {
+        let mut fab = dual_tcp().with_faults(FaultSchedule::none().with(1, 0.0, 1e9));
+        let mut h = ExceptionHandler::new(ControlConfig::default());
+        h.handle_failure(&mut fab, 1, Window::new(0, 10), &[(0, 1), (1, 1)]);
+        assert!(h.probe_recovery(&mut fab).is_empty());
+        assert_eq!(fab.healthy_rails(), vec![0]);
+    }
+}

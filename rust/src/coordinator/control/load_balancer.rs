@@ -1,0 +1,508 @@
+//! Load Balancer (paper §4.3): the dual-state (cold/hot) transition
+//! latency-minimization scheme.
+//!
+//! * **Cold start** (small payloads, Eq. 4): route the whole window through
+//!   the single lowest-latency network — multi-rail splitting would only
+//!   add synchronization overhead.
+//! * **Hot start** (large payloads, Eq. 5): partition across rails with
+//!   coefficients α, initialized per Eq. 8 and refined by (sub)gradient
+//!   descent on `T_hot = max_i(T_setup_i + α_i·S/B_i)` (Eq. 7) using the
+//!   Timer's live measurements.
+//! * The transition threshold `S_threshold` is where cold and hot latency
+//!   estimates cross (Eq. 6), recomputed from live estimates — and data
+//!   partitioning is only activated at all when the real-time efficiency
+//!   ratio ρ(S) (Eq. 3) stays within the divergence tolerance τ (= 5).
+//!
+//! State is kept per payload size class — the paper's "data length table".
+
+use std::collections::HashMap;
+
+use crate::config::ControlConfig;
+use crate::coordinator::control::size_bucket;
+use crate::coordinator::control::timer::Timer;
+use crate::net::simnet::Fabric;
+
+/// Cross-rail synchronization overhead: thread join + window registration
+/// + result collection for one multi-rail op. Calibrated so the cold→hot
+/// threshold lands at the paper's 128–256 KB for dual-rail TCP (Fig. 9).
+pub const SYNC_BASE_US: f64 = 380.0;
+pub const SYNC_PER_RAIL_US: f64 = 70.0;
+
+/// Synchronization penalty when `k` rails participate in one op.
+pub fn sync_overhead_us(k: usize) -> f64 {
+    if k <= 1 {
+        0.0
+    } else {
+        SYNC_BASE_US + SYNC_PER_RAIL_US * (k - 1) as f64
+    }
+}
+
+/// A partitioning decision for one allreduce.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Plan {
+    /// Cold start: the whole window goes to this rail.
+    Cold { rail: usize },
+    /// Hot start: (rail, fraction) shares, fractions sum to 1.
+    Hot { shares: Vec<(usize, f64)> },
+}
+
+impl Plan {
+    pub fn n_rails(&self) -> usize {
+        match self {
+            Plan::Cold { .. } => 1,
+            Plan::Hot { shares } => shares.len(),
+        }
+    }
+
+    pub fn fraction_for(&self, rail: usize) -> f64 {
+        match self {
+            Plan::Cold { rail: r } => {
+                if *r == rail {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Plan::Hot { shares } => shares
+                .iter()
+                .find(|(r, _)| *r == rail)
+                .map(|(_, f)| *f)
+                .unwrap_or(0.0),
+        }
+    }
+}
+
+/// Observable balancer state for a size class (metrics / Fig. 11).
+#[derive(Debug, Clone, PartialEq)]
+pub enum BalancerState {
+    Cold,
+    Hot { alphas: Vec<(usize, f64)>, converged: bool },
+}
+
+#[derive(Debug, Clone)]
+struct Bucket {
+    /// α per rail id.
+    alphas: HashMap<usize, f64>,
+    converged_streak: usize,
+    iters: u64,
+    last_state_hot: bool,
+}
+
+/// The Load Balancer: per-size-class cold/hot state machine + α table.
+#[derive(Debug)]
+pub struct LoadBalancer {
+    cfg: ControlConfig,
+    buckets: HashMap<u32, Bucket>,
+    /// Measurement correction per (rail, bucket): measured/model EMA the
+    /// planner applies to the analytic estimates.
+    corr: HashMap<(usize, u32), f64>,
+}
+
+impl LoadBalancer {
+    pub fn new(cfg: ControlConfig) -> LoadBalancer {
+        LoadBalancer { cfg, buckets: HashMap::new(), corr: HashMap::new() }
+    }
+
+    /// Corrected estimate of the FULL-payload single-rail allreduce time.
+    fn est_full(&self, fab: &Fabric, rail: usize, bytes: u64) -> f64 {
+        let model = fab.estimate_allreduce_us(rail, bytes as f64);
+        let c = self
+            .corr
+            .get(&(rail, size_bucket(bytes)))
+            .copied()
+            .unwrap_or(1.0);
+        model * c
+    }
+
+    /// Setup-dominated component (payload → 0) of a rail's allreduce.
+    fn est_setup(&self, fab: &Fabric, rail: usize) -> f64 {
+        fab.estimate_allreduce_us(rail, 1.0)
+    }
+
+    /// Eq. 3: real-time efficiency ratio across candidate rails at S.
+    pub fn efficiency_ratio(&self, fab: &Fabric, rails: &[usize], bytes: u64) -> f64 {
+        let thpts: Vec<f64> = rails
+            .iter()
+            .map(|&r| bytes as f64 / self.est_full(fab, r, bytes))
+            .collect();
+        let max = thpts.iter().cloned().fold(f64::MIN, f64::max);
+        let min = thpts.iter().cloned().fold(f64::MAX, f64::min);
+        if min <= 0.0 {
+            f64::INFINITY
+        } else {
+            max / min
+        }
+    }
+
+    /// Water-filling optimum of Eq. 5: α equalizing per-rail finish times,
+    /// given (setup_i, transfer_full_i) per rail. Returns (alphas, T_hot).
+    fn waterfill(parts: &[(usize, f64, f64)]) -> (Vec<(usize, f64)>, f64) {
+        // T* = (1 + Σ setup_i / X_i) / (Σ 1 / X_i); rails whose setup
+        // exceeds T* get α = 0 and we re-solve without them.
+        let mut active: Vec<(usize, f64, f64)> = parts.to_vec();
+        loop {
+            let sum_inv: f64 = active.iter().map(|(_, _, x)| 1.0 / x).sum();
+            let sum_s: f64 = active.iter().map(|(_, s, x)| s / x).sum();
+            let t_star = (1.0 + sum_s) / sum_inv;
+            if let Some(pos) = active.iter().position(|(_, s, _)| *s >= t_star) {
+                if active.len() == 1 {
+                    let (r, s, x) = active[0];
+                    return (vec![(r, 1.0)], s + x);
+                }
+                active.remove(pos);
+                continue;
+            }
+            let alphas: Vec<(usize, f64)> = active
+                .iter()
+                .map(|(r, s, x)| (*r, (t_star - s) / x))
+                .collect();
+            return (alphas, t_star);
+        }
+    }
+
+    /// Decide the partitioning for one op of `bytes` over `healthy` rails.
+    pub fn plan(&mut self, fab: &Fabric, timer: &Timer, healthy: &[usize], bytes: u64) -> Plan {
+        assert!(!healthy.is_empty());
+        let _ = timer; // estimates are measurement-corrected via feedback()
+        let bucket_key = size_bucket(bytes);
+
+        // full-payload estimates per rail
+        let ests: Vec<(usize, f64)> = healthy
+            .iter()
+            .map(|&r| (r, self.est_full(fab, r, bytes)))
+            .collect();
+        let (&(best_rail, t_cold), _) = ests
+            .iter()
+            .map(|e| (e, e.1))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+
+        if healthy.len() == 1 {
+            return Plan::Cold { rail: best_rail };
+        }
+
+        // Proposition 1 (Eq. 3): drop rails whose real-time efficiency is
+        // more than τ below the best.
+        let best_thpt = bytes as f64 / t_cold;
+        let candidates: Vec<(usize, f64)> = ests
+            .iter()
+            .filter(|&&(_, t)| best_thpt / (bytes as f64 / t) <= self.cfg.tau)
+            .cloned()
+            .collect();
+        if candidates.len() < 2 {
+            self.note_cold(bucket_key);
+            return Plan::Cold { rail: best_rail };
+        }
+
+        // Eq. 6 crossing test: hot optimum (incl. sync overhead) vs cold.
+        let parts: Vec<(usize, f64, f64)> = candidates
+            .iter()
+            .map(|&(r, t_full)| {
+                let setup = self.est_setup(fab, r).min(t_full);
+                (r, setup, (t_full - setup).max(1e-6))
+            })
+            .collect();
+        let (opt_alphas, t_hot_opt) = Self::waterfill(&parts);
+        if t_hot_opt + sync_overhead_us(opt_alphas.len()) >= t_cold {
+            self.note_cold(bucket_key);
+            return Plan::Cold { rail: best_rail };
+        }
+
+        // Hot start: use (and create) the data-length-table entry.
+        let bucket = self.buckets.entry(bucket_key).or_insert_with(|| {
+            // Eq. 8 initialization: α_i0 = (T - T_i) / (T (N-1)), computed
+            // over the candidate full-payload estimates...
+            let t_sum: f64 = candidates.iter().map(|(_, t)| t).sum();
+            let n = candidates.len() as f64;
+            let mut alphas: HashMap<usize, f64> = candidates
+                .iter()
+                .map(|&(r, t)| (r, ((t_sum - t) / (t_sum * (n - 1.0))).max(0.01)))
+                .collect();
+            normalize(&mut alphas);
+            Bucket { alphas, converged_streak: 0, iters: 0, last_state_hot: true }
+        });
+        bucket.last_state_hot = true;
+
+        // restrict stored α to currently-healthy candidates, renormalize
+        let mut shares: Vec<(usize, f64)> = candidates
+            .iter()
+            .map(|&(r, _)| (r, bucket.alphas.get(&r).copied().unwrap_or(0.0)))
+            .collect();
+        let total: f64 = shares.iter().map(|(_, a)| a).sum();
+        if total < 1e-9 {
+            // stored table had none of these rails — fall back to optimum
+            shares = opt_alphas;
+        } else {
+            for (_, a) in &mut shares {
+                *a /= total;
+            }
+        }
+        Plan::Hot { shares }
+    }
+
+    fn note_cold(&mut self, bucket_key: u32) {
+        if let Some(b) = self.buckets.get_mut(&bucket_key) {
+            b.last_state_hot = false;
+        }
+    }
+
+    /// Feed back one completed multi-rail op: per-rail (bytes, time_us).
+    /// Updates measurement corrections and performs one Eq. 7 subgradient
+    /// step on the α table.
+    pub fn feedback(&mut self, fab: &Fabric, bytes: u64, shares: &[(usize, u64, f64)]) {
+        let key = size_bucket(bytes);
+        // measurement correction: measured/model per rail for its share
+        for &(rail, b, t) in shares {
+            if b == 0 || t <= 0.0 {
+                continue;
+            }
+            let model = fab.estimate_allreduce_us(rail, b as f64);
+            if model > 0.0 {
+                let ratio = (t / model).clamp(0.2, 5.0);
+                let c = self.corr.entry((rail, key)).or_insert(1.0);
+                *c = 0.8 * *c + 0.2 * ratio;
+            }
+        }
+        if shares.len() < 2 {
+            return;
+        }
+        let Some(bucket) = self.buckets.get_mut(&key) else {
+            return;
+        };
+        bucket.iters += 1;
+        // subgradient of T_hot = max_i(...): move allocation from the
+        // slowest rail toward the fastest, step ∝ relative imbalance
+        let (slow, t_slow) = shares
+            .iter()
+            .map(|&(r, _, t)| (r, t))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let (fast, t_fast) = shares
+            .iter()
+            .map(|&(r, _, t)| (r, t))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        if t_slow <= 0.0 {
+            return;
+        }
+        let imbalance = (t_slow - t_fast) / t_slow;
+        if imbalance < 0.05 {
+            bucket.converged_streak += 1;
+            return;
+        }
+        bucket.converged_streak = 0;
+        let a_slow = bucket.alphas.entry(slow).or_insert(0.5);
+        let delta = (self.cfg.eta * imbalance * *a_slow).min(*a_slow - 0.005);
+        if delta <= self.cfg.alpha_tol {
+            bucket.converged_streak += 1;
+            return;
+        }
+        *a_slow -= delta;
+        *bucket.alphas.entry(fast).or_insert(0.5) += delta;
+        normalize(&mut bucket.alphas);
+    }
+
+    /// Observable state for a size class (Fig. 11's allocation ratios).
+    pub fn state(&self, bytes: u64) -> BalancerState {
+        match self.buckets.get(&size_bucket(bytes)) {
+            Some(b) if b.last_state_hot => {
+                let mut alphas: Vec<(usize, f64)> =
+                    b.alphas.iter().map(|(&r, &a)| (r, a)).collect();
+                alphas.sort_by_key(|(r, _)| *r);
+                BalancerState::Hot { alphas, converged: b.converged_streak >= 3 }
+            }
+            _ => BalancerState::Cold,
+        }
+    }
+
+    /// Smallest payload (scanning power-of-two sizes) for which the plan
+    /// goes hot — the live S_threshold of Eq. 6.
+    pub fn threshold_bytes(&mut self, fab: &Fabric, timer: &Timer, healthy: &[usize]) -> u64 {
+        for p in 10..=26 {
+            let s = 1u64 << p;
+            if matches!(self.plan(fab, timer, healthy, s), Plan::Hot { .. }) {
+                return s;
+            }
+        }
+        u64::MAX
+    }
+
+    pub fn iterations(&self, bytes: u64) -> u64 {
+        self.buckets.get(&size_bucket(bytes)).map(|b| b.iters).unwrap_or(0)
+    }
+}
+
+fn normalize(alphas: &mut HashMap<usize, f64>) {
+    let total: f64 = alphas.values().sum();
+    if total > 0.0 {
+        for a in alphas.values_mut() {
+            *a /= total;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::cpu_pool::CpuPool;
+    use crate::net::protocol::{ProtoKind, KB, MB};
+    use crate::net::topology::ClusterSpec;
+
+    fn fab(kinds: &[ProtoKind], nodes: usize) -> Fabric {
+        let rails = ClusterSpec::local().build_rails(kinds).unwrap();
+        Fabric::new(nodes, rails, CpuPool::default(), 3).deterministic()
+    }
+
+    fn lb() -> LoadBalancer {
+        LoadBalancer::new(ControlConfig::default())
+    }
+
+    #[test]
+    fn small_payloads_go_cold() {
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp], 4);
+        let t = Timer::new(100);
+        let mut b = lb();
+        let plan = b.plan(&f, &t, &[0, 1], 2 * KB as u64);
+        assert!(matches!(plan, Plan::Cold { .. }), "{plan:?}");
+    }
+
+    #[test]
+    fn large_payloads_go_hot_evenly_on_homogeneous_rails() {
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp], 4);
+        let t = Timer::new(100);
+        let mut b = lb();
+        match b.plan(&f, &t, &[0, 1], 8 * MB as u64) {
+            Plan::Hot { shares } => {
+                assert_eq!(shares.len(), 2);
+                for (_, a) in &shares {
+                    assert!((a - 0.5).abs() < 0.05, "{shares:?}");
+                }
+            }
+            p => panic!("expected hot: {p:?}"),
+        }
+    }
+
+    #[test]
+    fn threshold_in_paper_band_for_dual_tcp() {
+        // paper Fig. 9: 256 KB at 4 nodes, 128 KB at 8 nodes
+        let f4 = fab(&[ProtoKind::Tcp, ProtoKind::Tcp], 4);
+        let t = Timer::new(100);
+        let mut b = lb();
+        let th4 = b.threshold_bytes(&f4, &t, &[0, 1]);
+        assert!(
+            (64 * KB as u64..=512 * KB as u64).contains(&th4),
+            "threshold {th4}"
+        );
+    }
+
+    #[test]
+    fn cold_start_picks_rdma_for_small_heterogeneous() {
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Sharp], 4);
+        let t = Timer::new(100);
+        let mut b = lb();
+        match b.plan(&f, &t, &[0, 1], 4 * KB as u64) {
+            Plan::Cold { rail } => assert_eq!(rail, 1, "should pick SHARP"),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn tau_filter_excludes_very_slow_rail() {
+        // At tiny sizes SHARP vs TCP throughput ratio >> τ=5 → no split.
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Sharp], 4);
+        let t = Timer::new(100);
+        let b = lb();
+        let rho = b.efficiency_ratio(&f, &[0, 1], 32 * KB as u64);
+        assert!(rho > 5.0, "rho {rho}");
+        let mut b = lb();
+        assert!(matches!(
+            b.plan(&f, &t, &[0, 1], 32 * KB as u64),
+            Plan::Cold { .. }
+        ));
+    }
+
+    #[test]
+    fn heterogeneous_hot_shares_favor_faster_rail() {
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Glex], 4);
+        let t = Timer::new(100);
+        let mut b = lb();
+        match b.plan(&f, &t, &[0, 1], 16 * MB as u64) {
+            Plan::Hot { shares } => {
+                let tcp = shares.iter().find(|(r, _)| *r == 0).unwrap().1;
+                let glex = shares.iter().find(|(r, _)| *r == 1).unwrap().1;
+                assert!(glex > tcp, "glex {glex} tcp {tcp}");
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn feedback_rebalances_toward_fast_rail() {
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp], 4);
+        let t = Timer::new(100);
+        let mut b = lb();
+        let bytes = 8 * MB as u64;
+        let Plan::Hot { shares } = b.plan(&f, &t, &[0, 1], bytes) else {
+            panic!()
+        };
+        let a0_before = shares.iter().find(|(r, _)| *r == 0).unwrap().1;
+        // pretend rail 0 is consistently 2x slower than rail 1
+        for _ in 0..20 {
+            b.feedback(&f, bytes, &[(0, bytes / 2, 20_000.0), (1, bytes / 2, 10_000.0)]);
+        }
+        let Plan::Hot { shares } = b.plan(&f, &t, &[0, 1], bytes) else {
+            panic!()
+        };
+        let a0_after = shares.iter().find(|(r, _)| *r == 0).unwrap().1;
+        assert!(a0_after < a0_before - 0.1, "before {a0_before} after {a0_after}");
+    }
+
+    #[test]
+    fn feedback_converges_when_balanced() {
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp], 4);
+        let t = Timer::new(100);
+        let mut b = lb();
+        let bytes = 8 * MB as u64;
+        let _ = b.plan(&f, &t, &[0, 1], bytes);
+        for _ in 0..5 {
+            b.feedback(&f, bytes, &[(0, bytes / 2, 10_000.0), (1, bytes / 2, 10_100.0)]);
+        }
+        match b.state(bytes) {
+            BalancerState::Hot { converged, .. } => assert!(converged),
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn alpha_fractions_always_normalized() {
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Glex], 8);
+        let t = Timer::new(100);
+        let mut b = lb();
+        for p in 19..=26 {
+            if let Plan::Hot { shares } = b.plan(&f, &t, &[0, 1], 1 << p) {
+                let sum: f64 = shares.iter().map(|(_, a)| a).sum();
+                assert!((sum - 1.0).abs() < 1e-9, "p={p} sum={sum}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_rail_is_always_cold() {
+        let f = fab(&[ProtoKind::Tcp], 4);
+        let t = Timer::new(100);
+        let mut b = lb();
+        assert_eq!(b.plan(&f, &t, &[0], 64 * MB as u64), Plan::Cold { rail: 0 });
+    }
+
+    #[test]
+    fn waterfill_equalizes() {
+        let (alphas, t) =
+            LoadBalancer::waterfill(&[(0, 100.0, 10000.0), (1, 50.0, 5000.0)]);
+        for (r, a) in &alphas {
+            let (s, x) = if *r == 0 { (100.0, 10000.0) } else { (50.0, 5000.0) };
+            assert!((s + a * x - t).abs() < 1e-6);
+        }
+        let sum: f64 = alphas.iter().map(|(_, a)| a).sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+}

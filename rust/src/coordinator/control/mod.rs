@@ -1,0 +1,32 @@
+//! Control Module (paper §3.5): NIC Selector, Timer, Load Balancer and
+//! Exception Handler — the control plane coordinating multi-rail
+//! collaboration.
+
+pub mod exception;
+pub mod load_balancer;
+pub mod nic_selector;
+pub mod timer;
+
+pub use exception::{ExceptionHandler, FailoverEvent};
+pub use load_balancer::{BalancerState, LoadBalancer, Plan};
+pub use nic_selector::NicSelector;
+pub use timer::Timer;
+
+/// Size bucket key: per-bucket state tables (the paper's "data length
+/// table") are keyed by power-of-two payload class.
+pub fn size_bucket(bytes: u64) -> u32 {
+    63 - bytes.max(1).leading_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets() {
+        assert_eq!(size_bucket(1024), 10);
+        assert_eq!(size_bucket(1025), 10);
+        assert_eq!(size_bucket(2048), 11);
+        assert_eq!(size_bucket(0), 0);
+    }
+}

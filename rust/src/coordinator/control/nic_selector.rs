@@ -1,0 +1,76 @@
+//! NIC Selector (paper §3.5): maps the requested protocol combination to
+//! concrete NIC devices and creates the member-network contexts.
+
+use crate::coordinator::context::{context_for, Context};
+use crate::net::protocol::ProtoKind;
+use crate::net::rail::Rail;
+use crate::net::topology::ClusterSpec;
+use crate::Result;
+
+/// Device selection + context creation for a multi-rail combination.
+#[derive(Debug)]
+pub struct NicSelector {
+    pub cluster: ClusterSpec,
+}
+
+impl NicSelector {
+    pub fn new(cluster: ClusterSpec) -> NicSelector {
+        NicSelector { cluster }
+    }
+
+    /// Select devices for `combo` and build (rails, contexts) for a
+    /// communication domain of `nodes` members. Falls back to virtual
+    /// channels when the node has fewer NICs than requested rails
+    /// (paper §4.1's virtual multi-rail).
+    pub fn select(
+        &self,
+        combo: &[ProtoKind],
+        nodes: usize,
+    ) -> Result<(Vec<Rail>, Vec<Box<dyn Context>>)> {
+        let rails = match self.cluster.build_rails(combo) {
+            Ok(r) => r,
+            Err(e) => {
+                // virtual multi-rail fallback: homogeneous TCP combos can
+                // multiplex one physical NIC
+                let all_tcp = combo.iter().all(|k| *k == ProtoKind::Tcp);
+                if all_tcp && combo.len() > 1 {
+                    self.cluster.build_virtual_rails(ProtoKind::Tcp, combo.len())?
+                } else {
+                    return Err(e);
+                }
+            }
+        };
+        let contexts = rails.iter().map(|r| context_for(r, nodes)).collect();
+        Ok((rails, contexts))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn selects_physical_rails_on_local() {
+        let s = NicSelector::new(ClusterSpec::local());
+        let (rails, ctxs) = s.select(&[ProtoKind::Tcp, ProtoKind::Sharp], 4).unwrap();
+        assert_eq!(rails.len(), 2);
+        assert_eq!(ctxs.len(), 2);
+        assert_eq!(ctxs[1].transport(), "ibverbs");
+        assert!(ctxs.iter().all(|c| c.ready()));
+    }
+
+    #[test]
+    fn cloud_dual_tcp_falls_back_to_virtual() {
+        // cloud nodes have a single Ethernet NIC: dual TCP must multiplex
+        let s = NicSelector::new(ClusterSpec::cloud());
+        let (rails, _) = s.select(&[ProtoKind::Tcp, ProtoKind::Tcp], 4).unwrap();
+        assert_eq!(rails.len(), 2);
+        assert_eq!(rails[0].nic_sharing, 2);
+    }
+
+    #[test]
+    fn impossible_combo_rejected() {
+        let s = NicSelector::new(ClusterSpec::local());
+        assert!(s.select(&[ProtoKind::Sharp, ProtoKind::Sharp], 4).is_err());
+    }
+}

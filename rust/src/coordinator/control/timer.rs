@@ -1,0 +1,139 @@
+//! Timer (paper §3.5/§4.2): monitors per-network operation cost.
+//!
+//! Records the cost of every member network's share of each allreduce,
+//! keyed by (rail, size bucket). To damp fluctuation-driven decision
+//! errors, the Timer reports the average of every `window` (paper: 100)
+//! same-size operations to the Load Balancer; until a window completes it
+//! serves the running average.
+
+use std::collections::HashMap;
+
+use crate::coordinator::control::size_bucket;
+
+#[derive(Debug, Clone, Default)]
+struct Acc {
+    /// Completed-window average (what the Load Balancer sees).
+    reported: Option<f64>,
+    /// Current window accumulation.
+    sum: f64,
+    count: usize,
+    /// Lifetime totals for metrics.
+    total_ops: u64,
+}
+
+/// Per-(rail, size-bucket) cost tracker.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    window: usize,
+    accs: HashMap<(usize, u32), Acc>,
+}
+
+impl Timer {
+    pub fn new(window: usize) -> Timer {
+        Timer { window: window.max(1), accs: HashMap::new() }
+    }
+
+    /// Record one operation: `rail` processed `bytes` in `us`.
+    pub fn record(&mut self, rail: usize, bytes: u64, us: f64) {
+        let acc = self
+            .accs
+            .entry((rail, size_bucket(bytes)))
+            .or_default();
+        acc.sum += us;
+        acc.count += 1;
+        acc.total_ops += 1;
+        if acc.count >= self.window {
+            acc.reported = Some(acc.sum / acc.count as f64);
+            acc.sum = 0.0;
+            acc.count = 0;
+        }
+    }
+
+    /// Cost estimate for `rail` at this payload class: the last completed
+    /// window average, else the running average, else None.
+    pub fn cost(&self, rail: usize, bytes: u64) -> Option<f64> {
+        let acc = self.accs.get(&(rail, size_bucket(bytes)))?;
+        match acc.reported {
+            Some(r) => Some(r),
+            None if acc.count > 0 => Some(acc.sum / acc.count as f64),
+            None => None,
+        }
+    }
+
+    /// True once a full window has been reported for this class.
+    pub fn warmed_up(&self, rail: usize, bytes: u64) -> bool {
+        self.accs
+            .get(&(rail, size_bucket(bytes)))
+            .map(|a| a.reported.is_some())
+            .unwrap_or(false)
+    }
+
+    pub fn total_ops(&self, rail: usize) -> u64 {
+        self.accs
+            .iter()
+            .filter(|((r, _), _)| *r == rail)
+            .map(|(_, a)| a.total_ops)
+            .sum()
+    }
+
+    /// Forget a rail's history (after failover the channel's behaviour may
+    /// have changed; §4.4).
+    pub fn forget_rail(&mut self, rail: usize) {
+        self.accs.retain(|(r, _), _| *r != rail);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_average_until_window() {
+        let mut t = Timer::new(4);
+        t.record(0, 1024, 100.0);
+        t.record(0, 1024, 200.0);
+        assert_eq!(t.cost(0, 1024), Some(150.0));
+        assert!(!t.warmed_up(0, 1024));
+    }
+
+    #[test]
+    fn window_average_reported() {
+        let mut t = Timer::new(3);
+        for us in [100.0, 200.0, 300.0] {
+            t.record(0, 1024, us);
+        }
+        assert_eq!(t.cost(0, 1024), Some(200.0));
+        assert!(t.warmed_up(0, 1024));
+        // new window in progress doesn't disturb the reported value
+        t.record(0, 1024, 1000.0);
+        assert_eq!(t.cost(0, 1024), Some(200.0));
+    }
+
+    #[test]
+    fn buckets_are_independent() {
+        let mut t = Timer::new(2);
+        t.record(0, 1024, 10.0);
+        t.record(0, 4096, 99.0);
+        assert_eq!(t.cost(0, 1500), Some(10.0)); // same 1K bucket
+        assert_eq!(t.cost(0, 4096), Some(99.0));
+        assert_eq!(t.cost(1, 1024), None);
+    }
+
+    #[test]
+    fn forget_rail_clears() {
+        let mut t = Timer::new(1);
+        t.record(2, 1024, 5.0);
+        assert!(t.cost(2, 1024).is_some());
+        t.forget_rail(2);
+        assert!(t.cost(2, 1024).is_none());
+    }
+
+    #[test]
+    fn total_ops_counts_lifetime() {
+        let mut t = Timer::new(2);
+        for _ in 0..5 {
+            t.record(1, 64, 1.0);
+        }
+        assert_eq!(t.total_ops(1), 5);
+    }
+}

@@ -1,0 +1,24 @@
+//! The Nezha coordinator (paper §3–§4): the four system modules plus the
+//! multi-rail orchestrator.
+//!
+//! * [`context`] — per-protocol Context objects + the cross-protocol
+//!   `UnboundBuffer` shared-buffer mechanism (§3.2).
+//! * [`transport`] — rendezvous + Pair point-to-point endpoints with
+//!   GLEX-style pending-request queues (§3.3).
+//! * [`collective`] — allreduce implementations: ring, ring-chunked,
+//!   in-network tree (§3.4).
+//! * [`control`] — NIC Selector, Timer, Load Balancer (cold/hot state
+//!   machine, Eqs. 4–8) and Exception Handler (§3.5, §4.3, §4.4).
+//! * [`multirail`] — the orchestrator that partitions each allreduce
+//!   across rails, runs member-network collectives, handles failover and
+//!   feeds measurements back to the control plane (§4.2, Fig. 7).
+
+pub mod buffer;
+pub mod collective;
+pub mod context;
+pub mod control;
+pub mod multirail;
+pub mod transport;
+
+pub use buffer::{UnboundBuffer, Window};
+pub use multirail::{MultiRail, OpReport};

@@ -1,0 +1,653 @@
+//! Multi-rail allreduce orchestrator (paper §4.2, Fig. 7).
+//!
+//! One [`MultiRail`] instance owns the fabric, the member-network contexts
+//! and the control plane. Each `allreduce` call:
+//!
+//! 1. probes deregistered rails for recovery,
+//! 2. asks the partitioning policy (Nezha's Load Balancer or a baseline)
+//!    for a plan,
+//! 3. registers per-rail `(ptr, data_length)` windows on the
+//!    `UnboundBuffer` and runs each member network's native collective,
+//! 4. on a rail failure, lets the Exception Handler deregister the rail
+//!    and migrate the window to the optimal survivor,
+//! 5. charges cross-rail synchronization overhead, advances the virtual
+//!    clock, and feeds measurements back to the Timer + policy.
+
+use crate::config::{Config, Policy};
+use crate::coordinator::buffer::{UnboundBuffer, Window};
+use crate::coordinator::collective::{run_allreduce, Algo, Reducer, RustReducer};
+use crate::coordinator::context::Context;
+use crate::coordinator::control::load_balancer::{sync_overhead_us, Plan};
+use crate::coordinator::control::{ExceptionHandler, LoadBalancer, NicSelector, Timer};
+use crate::coordinator::transport::Rendezvous;
+use crate::net::cpu_pool::CpuPool;
+use crate::net::fault::FaultSchedule;
+use crate::net::simnet::{Fabric, RailDown};
+use crate::util::error::Error;
+use crate::Result;
+
+/// A partitioning policy: Nezha's Load Balancer or one of the baselines
+/// (`crate::baselines`).
+pub trait Partitioner: std::fmt::Debug {
+    fn name(&self) -> &'static str;
+    /// Decide how `bytes` are spread over the healthy rails.
+    fn plan(
+        &mut self,
+        fab: &Fabric,
+        timer: &Timer,
+        healthy: &[usize],
+        bytes: u64,
+    ) -> PartitionPlan;
+    /// Completed-op feedback: per-rail (rail, bytes, time_us).
+    fn feedback(&mut self, _fab: &Fabric, _bytes: u64, _shares: &[(usize, u64, f64)]) {}
+
+    /// Current (rail, α) table for this payload class, if the policy keeps
+    /// one (Nezha's data-length table; used by the Fig. 11 report).
+    fn alphas(&self, _bytes: u64) -> Option<Vec<(usize, f64)>> {
+        None
+    }
+}
+
+/// The shape of a partitioning decision.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PartitionPlan {
+    /// Contiguous fractional shares per rail (Nezha, MRIB, single-rail).
+    Shares(Vec<(usize, f64)>),
+    /// MPTCP-style fixed-size packet slicing with per-packet scheduling.
+    Slices { packet_bytes: u64 },
+}
+
+/// Nezha's partitioner: the Load Balancer state machine.
+#[derive(Debug)]
+pub struct NezhaPartitioner {
+    pub balancer: LoadBalancer,
+}
+
+impl Partitioner for NezhaPartitioner {
+    fn name(&self) -> &'static str {
+        "Nezha"
+    }
+
+    fn plan(
+        &mut self,
+        fab: &Fabric,
+        timer: &Timer,
+        healthy: &[usize],
+        bytes: u64,
+    ) -> PartitionPlan {
+        match self.balancer.plan(fab, timer, healthy, bytes) {
+            Plan::Cold { rail } => PartitionPlan::Shares(vec![(rail, 1.0)]),
+            Plan::Hot { shares } => PartitionPlan::Shares(shares),
+        }
+    }
+
+    fn feedback(&mut self, fab: &Fabric, bytes: u64, shares: &[(usize, u64, f64)]) {
+        self.balancer.feedback(fab, bytes, shares);
+    }
+
+    fn alphas(&self, bytes: u64) -> Option<Vec<(usize, f64)>> {
+        match self.balancer.state(bytes) {
+            crate::coordinator::control::BalancerState::Hot { alphas, .. } => Some(alphas),
+            crate::coordinator::control::BalancerState::Cold => None,
+        }
+    }
+}
+
+/// Per-rail share of one completed op.
+#[derive(Debug, Clone, Copy)]
+pub struct RailShare {
+    pub rail: usize,
+    pub bytes: u64,
+    pub time_us: f64,
+}
+
+/// Report for one multi-rail allreduce.
+#[derive(Debug, Clone)]
+pub struct OpReport {
+    /// End-to-end modeled completion time (us), incl. sync + failover.
+    pub total_us: f64,
+    /// Modeled payload bytes.
+    pub bytes: u64,
+    pub per_rail: Vec<RailShare>,
+    /// Number of failovers handled during this op.
+    pub failovers: usize,
+    /// Virtual time at op completion.
+    pub completed_at_us: f64,
+}
+
+impl OpReport {
+    /// Effective allreduce throughput in GB/s (payload / completion time).
+    pub fn throughput_gbps(&self) -> f64 {
+        crate::util::bytes::gbps(self.bytes, self.total_us)
+    }
+}
+
+/// The coordinator facade: fabric + contexts + control plane + policy.
+pub struct MultiRail {
+    pub fab: Fabric,
+    pub contexts: Vec<Box<dyn Context>>,
+    pub rendezvous: Vec<Rendezvous>,
+    pub timer: Timer,
+    pub exceptions: ExceptionHandler,
+    pub partitioner: Box<dyn Partitioner>,
+    pub reducer: Box<dyn Reducer>,
+    pub algo: Algo,
+    ops_done: u64,
+}
+
+impl std::fmt::Debug for MultiRail {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MultiRail")
+            .field("nodes", &self.fab.nodes)
+            .field("rails", &self.fab.rails.len())
+            .field("policy", &self.partitioner.name())
+            .finish()
+    }
+}
+
+impl MultiRail {
+    /// Build the full coordinator from a [`Config`].
+    pub fn new(cfg: &Config) -> Result<MultiRail> {
+        let selector = NicSelector::new(cfg.cluster.clone());
+        let (rails, contexts) = selector.select(&cfg.combo, cfg.nodes)?;
+        let n_rails = rails.len();
+        let cpu = CpuPool::new(cfg.cluster.node.cores, cfg.alloc);
+        let mut fab = Fabric::new(cfg.nodes, rails, cpu, cfg.seed);
+        if cfg.deterministic {
+            fab = fab.deterministic();
+        }
+        let rendezvous = (0..n_rails)
+            .map(|r| Rendezvous::full_mesh(r, cfg.nodes))
+            .collect();
+        let partitioner: Box<dyn Partitioner> = match cfg.policy {
+            Policy::Nezha => Box::new(NezhaPartitioner {
+                balancer: LoadBalancer::new(cfg.control.clone()),
+            }),
+            Policy::Mrib => Box::new(crate::baselines::Mrib::from_fabric(&fab)),
+            Policy::Mptcp => Box::new(crate::baselines::Mptcp::default()),
+            Policy::SingleRail => Box::new(crate::baselines::SingleRail::best()),
+        };
+        Ok(MultiRail {
+            fab,
+            contexts,
+            rendezvous,
+            timer: Timer::new(cfg.control.timer_window),
+            exceptions: ExceptionHandler::new(cfg.control.clone()),
+            partitioner,
+            reducer: Box::new(RustReducer),
+            algo: Algo::Ring,
+            ops_done: 0,
+        })
+    }
+
+    pub fn with_faults(mut self, faults: FaultSchedule) -> Self {
+        self.fab = self.fab.with_faults(faults);
+        self
+    }
+
+    pub fn with_algo(mut self, algo: Algo) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    pub fn with_reducer(mut self, reducer: Box<dyn Reducer>) -> Self {
+        self.reducer = reducer;
+        self
+    }
+
+    pub fn ops_done(&self) -> u64 {
+        self.ops_done
+    }
+
+    /// Allreduce the full buffer (f32 payload; modeled bytes = 4×elems).
+    pub fn allreduce(&mut self, buf: &mut UnboundBuffer) -> Result<OpReport> {
+        self.allreduce_scaled(buf, 4.0)
+    }
+
+    /// Allreduce with decoupled modeled element size (timing sweeps on
+    /// small real buffers; `elem_bytes = 4.0` is the physical case).
+    pub fn allreduce_scaled(&mut self, buf: &mut UnboundBuffer, elem_bytes: f64) -> Result<OpReport> {
+        let full = buf.full_window();
+        self.allreduce_window_scaled(buf, full, elem_bytes)
+    }
+
+    /// Allreduce only `w` of the buffer (gradient-fusion buckets).
+    pub fn allreduce_window(&mut self, buf: &mut UnboundBuffer, w: Window) -> Result<OpReport> {
+        self.allreduce_window_scaled(buf, w, 4.0)
+    }
+
+    /// The general entry point: window + modeled element size.
+    pub fn allreduce_window_scaled(
+        &mut self,
+        buf: &mut UnboundBuffer,
+        full: Window,
+        elem_bytes: f64,
+    ) -> Result<OpReport> {
+        assert_eq!(buf.nodes(), self.fab.nodes, "buffer/fabric node mismatch");
+        self.exceptions.probe_recovery(&mut self.fab);
+        let healthy = self.fab.healthy_rails();
+        if healthy.is_empty() {
+            return Err(Error::AllRailsDown(0));
+        }
+        let bytes = (full.len as f64 * elem_bytes) as u64;
+        let plan = self.partitioner.plan(&self.fab, &self.timer, &healthy, bytes);
+
+        let (mut shares, failovers) = match plan {
+            PartitionPlan::Shares(fracs) => self.exec_shares(buf, full, &fracs, elem_bytes)?,
+            PartitionPlan::Slices { packet_bytes } => {
+                self.exec_slices(buf, full, packet_bytes, elem_bytes, &healthy)?
+            }
+        };
+
+        let active = shares.iter().filter(|s| s.bytes > 0).count();
+        let sync = sync_overhead_us(active);
+        let worst = shares.iter().fold(0.0f64, |m, s| m.max(s.time_us));
+        let total = worst + sync;
+        self.fab.advance(total);
+
+        for s in &shares {
+            if s.bytes > 0 {
+                self.timer.record(s.rail, s.bytes, s.time_us);
+            }
+        }
+        let fb: Vec<(usize, u64, f64)> =
+            shares.iter().map(|s| (s.rail, s.bytes, s.time_us)).collect();
+        self.partitioner.feedback(&self.fab, bytes, &fb);
+        self.ops_done += 1;
+        shares.sort_by_key(|s| s.rail);
+        Ok(OpReport {
+            total_us: total,
+            bytes,
+            per_rail: shares,
+            failovers,
+            completed_at_us: self.fab.now_us(),
+        })
+    }
+
+    /// Execute contiguous fractional shares; handles failover recursively.
+    fn exec_shares(
+        &mut self,
+        buf: &mut UnboundBuffer,
+        full: Window,
+        fracs: &[(usize, f64)],
+        elem_bytes: f64,
+    ) -> Result<(Vec<RailShare>, usize)> {
+        let fractions: Vec<f64> = fracs.iter().map(|(_, f)| *f).collect();
+        let windows = full.split_fractions(&fractions);
+        let mut shares: Vec<RailShare> = Vec::with_capacity(fracs.len());
+        let mut failovers = 0usize;
+        let allocated: Vec<(usize, u64)> = fracs
+            .iter()
+            .zip(&windows)
+            .map(|(&(r, _), w)| (r, (w.len as f64 * elem_bytes) as u64))
+            .collect();
+
+        for (&(rail, _), &w) in fracs.iter().zip(&windows) {
+            if w.is_empty() {
+                shares.push(RailShare { rail, bytes: 0, time_us: 0.0 });
+                continue;
+            }
+            buf.register(w);
+            match run_allreduce(self.algo, &mut self.fab, rail, buf, w, self.reducer.as_mut(), elem_bytes)
+            {
+                Ok(out) => {
+                    buf.complete(w);
+                    shares.push(RailShare {
+                        rail,
+                        bytes: (w.len as f64 * elem_bytes) as u64,
+                        time_us: out.time_us,
+                    });
+                }
+                Err(RailDown(r)) => {
+                    // §4.4: deregister, hand (ptr,len) to optimal survivor
+                    failovers += 1;
+                    let ev = self
+                        .exceptions
+                        .handle_failure(&mut self.fab, r, w, &allocated)
+                        .ok_or(Error::AllRailsDown(r))?;
+                    self.timer.forget_rail(r);
+                    let out = run_allreduce(
+                        self.algo,
+                        &mut self.fab,
+                        ev.takeover_rail,
+                        buf,
+                        w,
+                        self.reducer.as_mut(),
+                        elem_bytes,
+                    )
+                    .map_err(|RailDown(r2)| Error::AllRailsDown(r2))?;
+                    buf.complete(w);
+                    // takeover rail absorbs its own share later/earlier in
+                    // this same op; account serially on that rail
+                    let extra = ev.recovery_us + out.time_us;
+                    if let Some(s) = shares.iter_mut().find(|s| s.rail == ev.takeover_rail) {
+                        s.time_us += extra;
+                        s.bytes += (w.len as f64 * elem_bytes) as u64;
+                    } else {
+                        shares.push(RailShare {
+                            rail: ev.takeover_rail,
+                            bytes: (w.len as f64 * elem_bytes) as u64,
+                            time_us: extra,
+                        });
+                    }
+                }
+            }
+        }
+        debug_assert!(buf.all_complete());
+        buf.clear_pending();
+        Ok((shares, failovers))
+    }
+
+    /// Execute MPTCP-style packet slicing with ECF-like earliest-
+    /// completion-first scheduling.
+    ///
+    /// Packets are assigned to the subflow with the earliest predicted
+    /// completion (per-subflow RTT/bandwidth estimate); each subflow then
+    /// streams its assigned packets through one collective pass. Slicing
+    /// costs show up as (a) an 18–27% transfer-time inflation (metadata,
+    /// reassembly, out-of-order buffering — paper §4.3 measures 18–27%;
+    /// we charge the midpoint) and (b) a fixed per-packet scheduling cost.
+    fn exec_slices(
+        &mut self,
+        buf: &mut UnboundBuffer,
+        full: Window,
+        packet_bytes: u64,
+        elem_bytes: f64,
+        healthy: &[usize],
+    ) -> Result<(Vec<RailShare>, usize)> {
+        const SLICE_OVERHEAD: f64 = 1.22;
+        const PER_PACKET_US: f64 = 4.0;
+        let packet_elems = ((packet_bytes as f64 / elem_bytes).max(1.0)) as usize;
+        let packets = full.split_chunks(packet_elems);
+        // ECF assignment pass. MPTCP's completion-time prediction is
+        // RTT/queue-depth based and PROTOCOL-BLIND (the paper's §2.2.1
+        // criticism: "they cannot understand the completion time
+        // differences between heterogeneous protocols") — so the scheduler
+        // balances outstanding BYTES per subflow, which evens the split
+        // regardless of each plane's collective throughput.
+        let mut assigned: Vec<(usize, Vec<Window>, f64)> =
+            healthy.iter().map(|&r| (r, Vec::new(), 0.0)).collect();
+        for &p in &packets {
+            let pbytes = p.len as f64 * elem_bytes;
+            let idx = assigned
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1 .2.partial_cmp(&b.1 .2).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            assigned[idx].1.push(p);
+            assigned[idx].2 += pbytes;
+        }
+
+        let mut shares: Vec<RailShare> = Vec::new();
+        let mut failovers = 0usize;
+        let alloc_bytes: Vec<(usize, u64)> = assigned
+            .iter()
+            .map(|(r, ps, _)| {
+                (*r, ps.iter().map(|w| (w.len as f64 * elem_bytes) as u64).sum())
+            })
+            .collect();
+        for (rail, ps, _) in &assigned {
+            if ps.is_empty() {
+                shares.push(RailShare { rail: *rail, bytes: 0, time_us: 0.0 });
+                continue;
+            }
+            let rail_bytes: u64 = ps.iter().map(|w| (w.len as f64 * elem_bytes) as u64).sum();
+            let total_elems: usize = ps.iter().map(|w| w.len).sum();
+            // one collective pass over the subflow's stream: time the
+            // contiguous-equivalent transfer, inflated by slicing overhead
+            let mut stream_time = 0.0;
+            let mut failed: Option<RailDown> = None;
+            match self.fab.rails[*rail].protocol.collective {
+                crate::net::protocol::CollectiveKind::Ring => {
+                    let steps = 2 * (self.fab.nodes - 1);
+                    let seg_bytes =
+                        (total_elems as f64 * elem_bytes / self.fab.nodes as f64).ceil();
+                    for _ in 0..steps {
+                        match self.fab.ring_step(*rail, seg_bytes) {
+                            Ok(dt) => stream_time += dt,
+                            Err(e) => {
+                                failed = Some(e);
+                                break;
+                            }
+                        }
+                    }
+                }
+                crate::net::protocol::CollectiveKind::Tree => {
+                    match self.fab.tree_round(*rail, total_elems as f64 * elem_bytes) {
+                        Ok(dt) => stream_time = dt,
+                        Err(e) => failed = Some(e),
+                    }
+                }
+            }
+            match failed {
+                None => {
+                    // numerics per packet (reassembly order)
+                    for p in ps {
+                        buf.register(*p);
+                        crate::coordinator::collective::ring::ring_numerics(
+                            buf,
+                            *p,
+                            self.reducer.as_mut(),
+                        );
+                        buf.complete(*p);
+                    }
+                    shares.push(RailShare {
+                        rail: *rail,
+                        bytes: rail_bytes,
+                        time_us: stream_time * SLICE_OVERHEAD
+                            + PER_PACKET_US * ps.len() as f64,
+                    });
+                }
+                Some(RailDown(r)) => {
+                    // uncoordinated failover: packets re-run on survivor
+                    failovers += 1;
+                    let w_all = Window::new(
+                        ps[0].offset,
+                        ps.iter().map(|w| w.len).sum(),
+                    );
+                    let ev = self
+                        .exceptions
+                        .handle_failure(&mut self.fab, r, w_all, &alloc_bytes)
+                        .ok_or(Error::AllRailsDown(r))?;
+                    let mut t_extra = ev.recovery_us;
+                    for p in ps {
+                        buf.register(*p);
+                        let out = run_allreduce(
+                            self.algo,
+                            &mut self.fab,
+                            ev.takeover_rail,
+                            buf,
+                            *p,
+                            self.reducer.as_mut(),
+                            elem_bytes,
+                        )
+                        .map_err(|RailDown(r2)| Error::AllRailsDown(r2))?;
+                        buf.complete(*p);
+                        t_extra += out.time_us * SLICE_OVERHEAD;
+                    }
+                    if let Some(s) = shares.iter_mut().find(|s| s.rail == ev.takeover_rail) {
+                        s.time_us += t_extra;
+                        s.bytes += rail_bytes;
+                    } else {
+                        shares.push(RailShare {
+                            rail: ev.takeover_rail,
+                            bytes: rail_bytes,
+                            time_us: t_extra,
+                        });
+                    }
+                }
+            }
+        }
+        buf.clear_pending();
+        Ok((shares, failovers))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::protocol::{ProtoKind, KB, MB};
+
+    fn cfg(combo: &[ProtoKind], nodes: usize, policy: Policy) -> Config {
+        Config {
+            nodes,
+            combo: combo.to_vec(),
+            policy,
+            deterministic: true,
+            ..Config::default()
+        }
+    }
+
+    fn reduced_ok(buf: &UnboundBuffer, nodes: usize, len: usize) {
+        for n in 0..nodes {
+            for i in 0..len {
+                let expect: f32 = (1..=nodes).map(|m| (m * (i % 13 + 1)) as f32).sum();
+                assert_eq!(buf.node(n)[i], expect, "node {n} elem {i}");
+            }
+        }
+    }
+
+    fn make(nodes: usize, len: usize) -> UnboundBuffer {
+        UnboundBuffer::from_fn(nodes, len, |n, i| ((n + 1) * (i % 13 + 1)) as f32)
+    }
+
+    #[test]
+    fn nezha_allreduce_correct_small_and_large() {
+        for &len in &[512usize, 100_000] {
+            let mut mr =
+                MultiRail::new(&cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha))
+                    .unwrap();
+            let mut buf = make(4, len);
+            let rep = mr.allreduce(&mut buf).unwrap();
+            assert!(rep.total_us > 0.0);
+            reduced_ok(&buf, 4, len);
+        }
+    }
+
+    #[test]
+    fn small_op_is_cold_single_rail() {
+        let mut mr =
+            MultiRail::new(&cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha)).unwrap();
+        let mut buf = make(4, 256); // 1KB
+        let rep = mr.allreduce(&mut buf).unwrap();
+        assert_eq!(rep.per_rail.iter().filter(|s| s.bytes > 0).count(), 1);
+        reduced_ok(&buf, 4, 256);
+    }
+
+    #[test]
+    fn large_op_uses_both_rails() {
+        let mut mr =
+            MultiRail::new(&cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha)).unwrap();
+        let mut buf = make(4, 4 * 1024 * 1024); // 16MB
+        let rep = mr.allreduce(&mut buf).unwrap();
+        assert_eq!(rep.per_rail.iter().filter(|s| s.bytes > 0).count(), 2);
+        reduced_ok(&buf, 4, 4 * 1024 * 1024);
+    }
+
+    #[test]
+    fn dual_rail_beats_single_for_large_payloads() {
+        let big = 4 * 1024 * 1024; // 16MB of f32
+        let mut dual =
+            MultiRail::new(&cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha)).unwrap();
+        let mut single =
+            MultiRail::new(&cfg(&[ProtoKind::Tcp], 4, Policy::SingleRail)).unwrap();
+        let t_dual = dual.allreduce(&mut make(4, big)).unwrap().total_us;
+        let t_single = single.allreduce(&mut make(4, big)).unwrap().total_us;
+        assert!(
+            t_dual < 0.75 * t_single,
+            "dual {t_dual} single {t_single}"
+        );
+    }
+
+    #[test]
+    fn mptcp_slices_across_rails() {
+        let mut mr =
+            MultiRail::new(&cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Mptcp)).unwrap();
+        let len = 1024 * 1024;
+        let mut buf = make(4, len);
+        let rep = mr.allreduce(&mut buf).unwrap();
+        assert!(rep.per_rail.iter().all(|s| s.bytes > 0), "{rep:?}");
+        reduced_ok(&buf, 4, len);
+    }
+
+    #[test]
+    fn failover_preserves_correctness_and_budget() {
+        let cfgv = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        let mut mr = MultiRail::new(&cfgv)
+            .unwrap()
+            .with_faults(FaultSchedule::none().with(1, 0.0, 1e12));
+        let len = 2 * 1024 * 1024; // 8MB → hot → both rails → failover
+        let mut buf = make(4, len);
+        let rep = mr.allreduce(&mut buf).unwrap();
+        assert_eq!(rep.failovers, 1);
+        reduced_ok(&buf, 4, len);
+        assert_eq!(mr.fab.healthy_rails(), vec![0]);
+        // next op proceeds single-rail
+        let mut buf2 = make(4, len);
+        let rep2 = mr.allreduce(&mut buf2).unwrap();
+        assert_eq!(rep2.failovers, 0);
+        reduced_ok(&buf2, 4, len);
+    }
+
+    #[test]
+    fn all_rails_down_is_an_error() {
+        let cfgv = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        let mut mr = MultiRail::new(&cfgv).unwrap().with_faults(
+            FaultSchedule::none().with(0, 0.0, 1e12).with(1, 0.0, 1e12),
+        );
+        let mut buf = make(4, 1024 * 1024);
+        assert!(mr.allreduce(&mut buf).is_err());
+    }
+
+    #[test]
+    fn timer_accumulates_measurements() {
+        let mut mr =
+            MultiRail::new(&cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha)).unwrap();
+        for _ in 0..5 {
+            let mut buf = make(4, 1024 * 1024);
+            mr.allreduce(&mut buf).unwrap();
+        }
+        assert!(mr.timer.cost(0, 2 * MB as u64).is_some());
+    }
+
+    #[test]
+    fn scaled_timing_matches_physical() {
+        // a 1M-elem physical buffer and a 256-elem buffer modeled at the
+        // same byte size must report (nearly) the same time
+        let mk = || MultiRail::new(&cfg(&[ProtoKind::Tcp], 4, Policy::SingleRail)).unwrap();
+        let t_phys = mk().allreduce(&mut make(4, 1 << 20)).unwrap().total_us;
+        let t_scaled = mk()
+            .allreduce_scaled(&mut make(4, 256), (1u64 << 22) as f64 / 256.0)
+            .unwrap()
+            .total_us;
+        assert!((t_phys - t_scaled).abs() / t_phys < 0.02, "{t_phys} {t_scaled}");
+    }
+
+    #[test]
+    fn sharp_combo_small_payload_fast() {
+        let mut mr =
+            MultiRail::new(&cfg(&[ProtoKind::Tcp, ProtoKind::Sharp], 4, Policy::Nezha)).unwrap();
+        let mut buf = make(4, 256); // 1KB
+        let rep = mr.allreduce(&mut buf).unwrap();
+        // cold start on SHARP: microseconds, not the ~1ms TCP ring
+        assert!(rep.total_us < 100.0, "{}", rep.total_us);
+        reduced_ok(&buf, 4, 256);
+    }
+
+    #[test]
+    fn recovery_readmits_rail_after_fault_window() {
+        let cfgv = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        // rail 1 down only for the first 50ms of virtual time
+        let mut mr = MultiRail::new(&cfgv)
+            .unwrap()
+            .with_faults(FaultSchedule::none().with(1, 0.0, 50_000.0));
+        let len = 2 * 1024 * 1024;
+        let rep = mr.allreduce(&mut make(4, len)).unwrap();
+        assert_eq!(rep.failovers, 1);
+        // failover advanced the clock past the window; next op re-admits
+        let rep2 = mr.allreduce(&mut make(4, len)).unwrap();
+        assert_eq!(rep2.failovers, 0);
+        assert_eq!(rep2.per_rail.iter().filter(|s| s.bytes > 0).count(), 2);
+    }
+}

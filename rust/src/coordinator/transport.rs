@@ -1,0 +1,182 @@
+//! Transport Module (paper §3.3): rendezvous + Pair endpoints.
+//!
+//! The rendezvous mechanism establishes the global communication domain:
+//! a full mesh of [`Pair`]s per rail. GLEX-style non-blocking operation is
+//! modelled with `send_req` pending-request queues: when a buffer operation
+//! cannot complete immediately, its (address, sequence, incomplete-flag)
+//! triple is parked in `send_reqs` and drained by the monitoring side.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::buffer::Window;
+
+/// A pending non-blocking send request (paper §3.3's `send_req`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SendReq {
+    /// Initiating memory window (the paper's memory address + length).
+    pub window: Window,
+    /// Communication sequence number.
+    pub seq: u64,
+    /// Uncompleted flag.
+    pub done: bool,
+}
+
+/// Point-to-point endpoint between two ranks on one rail.
+#[derive(Debug)]
+pub struct Pair {
+    pub rail: usize,
+    pub local: usize,
+    pub remote: usize,
+    next_seq: u64,
+    /// Pending request queue (`send_reqs`).
+    send_reqs: VecDeque<SendReq>,
+    /// Lifetime counters for metrics.
+    pub msgs_sent: u64,
+    pub bytes_sent: u64,
+}
+
+impl Pair {
+    pub fn new(rail: usize, local: usize, remote: usize) -> Pair {
+        Pair {
+            rail,
+            local,
+            remote,
+            next_seq: 0,
+            send_reqs: VecDeque::new(),
+            msgs_sent: 0,
+            bytes_sent: 0,
+        }
+    }
+
+    /// Enqueue a non-blocking send of `window`; returns its sequence no.
+    pub fn post_send(&mut self, window: Window) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.send_reqs.push_back(SendReq { window, seq, done: false });
+        seq
+    }
+
+    /// Mark a posted request complete (remote finished its buffer op).
+    pub fn complete(&mut self, seq: u64) {
+        if let Some(req) = self.send_reqs.iter_mut().find(|r| r.seq == seq) {
+            req.done = true;
+            self.msgs_sent += 1;
+            self.bytes_sent += req.window.bytes();
+        }
+        // drain the head-of-line completed prefix
+        while matches!(self.send_reqs.front(), Some(r) if r.done) {
+            self.send_reqs.pop_front();
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.send_reqs.len()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.send_reqs.is_empty()
+    }
+}
+
+/// Rendezvous: builds the full communication mesh for one rail across
+/// `nodes` ranks. Pairs are stored per (local, remote) ordered pair.
+#[derive(Debug)]
+pub struct Rendezvous {
+    pub rail: usize,
+    pub nodes: usize,
+    pairs: Vec<Pair>,
+}
+
+impl Rendezvous {
+    /// Full-mesh connection establishment (each rank connects to every
+    /// other rank — ring collectives use the neighbour subset).
+    pub fn full_mesh(rail: usize, nodes: usize) -> Rendezvous {
+        assert!(nodes >= 2);
+        let mut pairs = Vec::with_capacity(nodes * (nodes - 1));
+        for a in 0..nodes {
+            for b in 0..nodes {
+                if a != b {
+                    pairs.push(Pair::new(rail, a, b));
+                }
+            }
+        }
+        Rendezvous { rail, nodes, pairs }
+    }
+
+    pub fn pair_mut(&mut self, local: usize, remote: usize) -> &mut Pair {
+        assert_ne!(local, remote);
+        let idx = local * (self.nodes - 1) + if remote > local { remote - 1 } else { remote };
+        &mut self.pairs[idx]
+    }
+
+    pub fn pair(&self, local: usize, remote: usize) -> &Pair {
+        assert_ne!(local, remote);
+        let idx = local * (self.nodes - 1) + if remote > local { remote - 1 } else { remote };
+        &self.pairs[idx]
+    }
+
+    pub fn n_pairs(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Total bytes sent across all pairs (metrics).
+    pub fn total_bytes(&self) -> u64 {
+        self.pairs.iter().map(|p| p.bytes_sent).sum()
+    }
+
+    /// All pairs idle — the domain is quiescent.
+    pub fn quiescent(&self) -> bool {
+        self.pairs.iter().all(|p| p.idle())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_size() {
+        let r = Rendezvous::full_mesh(0, 4);
+        assert_eq!(r.n_pairs(), 12);
+    }
+
+    #[test]
+    fn pair_indexing_bijective() {
+        let mut r = Rendezvous::full_mesh(0, 5);
+        for a in 0..5 {
+            for b in 0..5 {
+                if a != b {
+                    let p = r.pair_mut(a, b);
+                    assert_eq!((p.local, p.remote), (a, b));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn send_req_lifecycle() {
+        let mut p = Pair::new(0, 0, 1);
+        let w = Window::new(0, 256);
+        let s0 = p.post_send(w);
+        let s1 = p.post_send(w);
+        assert_eq!(p.pending(), 2);
+        // out-of-order completion: s1 first — queue drains only after s0
+        p.complete(s1);
+        assert_eq!(p.pending(), 2);
+        p.complete(s0);
+        assert_eq!(p.pending(), 0);
+        assert!(p.idle());
+        assert_eq!(p.msgs_sent, 2);
+        assert_eq!(p.bytes_sent, 2 * 1024);
+    }
+
+    #[test]
+    fn quiescence() {
+        let mut r = Rendezvous::full_mesh(1, 3);
+        assert!(r.quiescent());
+        let seq = r.pair_mut(0, 1).post_send(Window::new(0, 8));
+        assert!(!r.quiescent());
+        r.pair_mut(0, 1).complete(seq);
+        assert!(r.quiescent());
+    }
+}

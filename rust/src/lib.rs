@@ -1,0 +1,32 @@
+//! # Nezha — protocol-agnostic multi-rail allreduce for distributed DNN training
+//!
+//! Reproduction of *"Nezha: Breaking Multi-Rail Network Barriers for
+//! Distributed DNN Training"* (Yu, Dong, Liao, 2024) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the Nezha coordinator: [`coordinator`]
+//!   (Context / Transport / Collective / Control modules), the simulated
+//!   multi-rail fabric ([`net`]), baseline policies ([`baselines`]), the
+//!   data-parallel trainer ([`trainer`]) and the PJRT runtime ([`runtime`]).
+//! * **Layer 2 (python/compile/model.py)** — JAX transformer fwd/bwd, lowered
+//!   once to HLO text in `artifacts/`.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (tiled matmul,
+//!   n-way gradient reduce, fused SGD) called from the L2 graph.
+//!
+//! Python never runs on the training path: `make artifacts` exports HLO once
+//! and the rust binary is self-contained afterwards.
+//!
+//! See `DESIGN.md` for the module inventory and the paper-experiment index,
+//! and `EXPERIMENTS.md` for measured results.
+
+pub mod baselines;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod net;
+pub mod runtime;
+pub mod trainer;
+pub mod util;
+
+/// Crate-wide result type (thiserror-backed error enum in [`util::error`]).
+pub type Result<T> = std::result::Result<T, util::error::Error>;

@@ -1,0 +1,172 @@
+//! `nezha` — CLI for the Nezha multi-rail allreduce reproduction.
+//!
+//! Subcommands:
+//!   fig <id>        regenerate a paper figure/table (fig2..fig19, table1,
+//!                   headline, all)
+//!   bench           one allreduce benchmark (--combo tcp-sharp --nodes 8
+//!                   --size 8MB --policy nezha --reps 10)
+//!   train           end-to-end data-parallel training over the multi-rail
+//!                   fabric (--model tiny|small|gpt100m --steps N)
+//!   info            show clusters, protocols and artifact inventory
+//!
+//! Global options: --config FILE, plus any config key as --key value
+//! (see rust/src/config.rs).
+
+use nezha::bench::figures;
+use nezha::config::Config;
+use nezha::coordinator::buffer::UnboundBuffer;
+use nezha::coordinator::multirail::MultiRail;
+use nezha::net::topology::ClusterSpec;
+use nezha::trainer::{train_e2e, E2EConfig};
+use nezha::util::bytes::{fmt_bytes, fmt_us};
+use nezha::util::cli::Args;
+use nezha::util::log;
+use nezha::util::table::Table;
+
+fn main() {
+    log::init_from_env();
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> nezha::Result<()> {
+    match args.subcommand.as_deref() {
+        Some("fig") => {
+            let id = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            figures::run(id)
+        }
+        Some("bench") => bench(args),
+        Some("train") => train(args),
+        Some("info") => info(),
+        other => {
+            if other.is_some() {
+                eprintln!("unknown subcommand {other:?}\n");
+            }
+            println!(
+                "usage: nezha <fig|bench|train|info> [options]\n\n\
+                 nezha fig all                       # every paper figure/table\n\
+                 nezha fig fig9                      # one figure\n\
+                 nezha bench --combo tcp-sharp --nodes 8 --size 8MB --policy nezha\n\
+                 nezha train --model small --steps 100 --nodes 4 --combo tcp-tcp\n\
+                 nezha info"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn bench(args: &Args) -> nezha::Result<()> {
+    let cfg = Config::from_args(args)?;
+    let size = args.get_bytes("size", 8 << 20);
+    let reps = args.get_usize("reps", 10);
+    let warm = args.get_usize("warm", 30);
+    let mut mr = MultiRail::new(&cfg)?;
+    const ELEMS: usize = 1024;
+    let elem_bytes = size as f64 / ELEMS as f64;
+    for _ in 0..warm {
+        let mut buf = UnboundBuffer::from_fn(cfg.nodes, ELEMS, |n, i| ((n + i) % 7) as f32);
+        mr.allreduce_scaled(&mut buf, elem_bytes)?;
+    }
+    let mut lat = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let mut buf = UnboundBuffer::from_fn(cfg.nodes, ELEMS, |n, i| ((n + i) % 7) as f32);
+        lat.push(mr.allreduce_scaled(&mut buf, elem_bytes)?.total_us);
+    }
+    let mean = nezha::util::stats::mean(&lat);
+    println!(
+        "{} allreduce of {} over {:?} x{} nodes: {} mean ({:.3} GB/s)",
+        mr.partitioner.name(),
+        fmt_bytes(size),
+        cfg.combo,
+        cfg.nodes,
+        fmt_us(mean),
+        nezha::util::bytes::gbps(size, mean),
+    );
+    Ok(())
+}
+
+fn train(args: &Args) -> nezha::Result<()> {
+    let cfg = Config::from_args(args)?;
+    let e2e = E2EConfig {
+        model: args.get_or("model", "tiny").to_string(),
+        steps: args.get_usize("steps", 50),
+        lr: args.get_f64("lr", 0.05) as f32,
+        momentum: args.get_f64("momentum", 0.9) as f32,
+        bucket_elems: args.get_usize("bucket-elems", 4 * 1024 * 1024),
+        log_every: args.get_usize("log-every", 10),
+        use_pjrt_reducer: !args.has("rust-reducer"),
+        seed: args.get_usize("seed", 7) as u64,
+    };
+    println!(
+        "training model={} steps={} nodes={} combo={:?} policy={}",
+        e2e.model, e2e.steps, cfg.nodes, cfg.combo, cfg.policy.name()
+    );
+    let logs = train_e2e(&cfg, &e2e)?;
+    let mut t = Table::new(&["step", "loss", "comm(ms)", "compute(ms)"]);
+    for l in logs.iter().filter(|l| l.step % e2e.log_every.max(1) == 0) {
+        t.row(vec![
+            format!("{}", l.step),
+            format!("{:.4}", l.loss),
+            format!("{:.1}", l.comm_us / 1e3),
+            format!("{:.0}", l.compute_wall_us / 1e3),
+        ]);
+    }
+    t.print();
+    let first = logs.first().map(|l| l.loss).unwrap_or(0.0);
+    let last = logs.last().map(|l| l.loss).unwrap_or(0.0);
+    println!("loss: {first:.4} -> {last:.4} over {} steps", logs.len());
+    Ok(())
+}
+
+fn info() -> nezha::Result<()> {
+    println!("clusters (paper Table 2):");
+    for c in [ClusterSpec::local(), ClusterSpec::cloud(), ClusterSpec::supercomputer()] {
+        println!(
+            "  {:14} {} cores={} gpus={} nics={:?}",
+            c.name,
+            c.node.cpu,
+            c.node.cores,
+            c.node.gpus,
+            c.node.nics.iter().map(|n| format!("{}@{}G", n.model, n.gbps)).collect::<Vec<_>>()
+        );
+    }
+    match nezha::runtime::Manifest::load("artifacts") {
+        Ok(m) => {
+            println!("\nartifacts ({}):", m.artifacts.len());
+            for a in &m.artifacts {
+                println!(
+                    "  {:24} in={:?} out={:?}",
+                    a.name,
+                    a.inputs.iter().map(|i| i.shape.clone()).collect::<Vec<_>>(),
+                    a.outputs.iter().map(|o| o.shape.clone()).collect::<Vec<_>>()
+                );
+            }
+            println!("\nmodels:");
+            for m in &m.models {
+                println!(
+                    "  {:10} {:.1}M params, d={} L={} V={} T={} B={}",
+                    m.name,
+                    m.n_params as f64 / 1e6,
+                    m.d_model,
+                    m.n_layers,
+                    m.vocab,
+                    m.seq_len,
+                    m.batch
+                );
+            }
+        }
+        Err(_) => println!("\nartifacts: not built (run `make artifacts`)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Fault injection (paper §2.3.3 / §4.4 / Fig. 8).
+//!
+//! Models the paper's observed failure modes — thermal NIC power-off,
+//! protocol-induced connection failures — as rail-down windows on the
+//! virtual clock. The Exception Handler (coordinator/control) detects a
+//! failed rail through transfer errors/heartbeat timeout and migrates its
+//! (ptr, len) work to the surviving optimal rail within the 200 ms budget.
+
+/// One rail-down window in virtual time.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultWindow {
+    pub rail: usize,
+    pub start_us: f64,
+    pub end_us: f64,
+}
+
+/// Schedule of injected faults.
+#[derive(Debug, Clone, Default)]
+pub struct FaultSchedule {
+    windows: Vec<FaultWindow>,
+}
+
+impl FaultSchedule {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn with(mut self, rail: usize, start_us: f64, end_us: f64) -> Self {
+        assert!(end_us > start_us);
+        self.windows.push(FaultWindow { rail, start_us, end_us });
+        self
+    }
+
+    /// Fig. 8's scenario: NIC 2 (rail 1) disconnected during minutes 1–2
+    /// and 4–5 of a 6-minute run.
+    pub fn fig8() -> Self {
+        const MIN: f64 = 60.0 * 1e6;
+        FaultSchedule::none()
+            .with(1, 1.0 * MIN, 2.0 * MIN)
+            .with(1, 4.0 * MIN, 5.0 * MIN)
+    }
+
+    /// Is `rail` down at virtual time `t_us`?
+    pub fn is_down(&self, rail: usize, t_us: f64) -> bool {
+        self.windows
+            .iter()
+            .any(|w| w.rail == rail && t_us >= w.start_us && t_us < w.end_us)
+    }
+
+    /// Next state-change time strictly after `t_us` for `rail` (used by
+    /// recovery probing).
+    pub fn next_transition(&self, rail: usize, t_us: f64) -> Option<f64> {
+        self.windows
+            .iter()
+            .filter(|w| w.rail == rail)
+            .flat_map(|w| [w.start_us, w.end_us])
+            .filter(|&t| t > t_us)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_membership() {
+        let f = FaultSchedule::none().with(1, 100.0, 200.0);
+        assert!(!f.is_down(1, 99.0));
+        assert!(f.is_down(1, 100.0));
+        assert!(f.is_down(1, 199.9));
+        assert!(!f.is_down(1, 200.0));
+        assert!(!f.is_down(0, 150.0));
+    }
+
+    #[test]
+    fn fig8_shape() {
+        let f = FaultSchedule::fig8();
+        let min = 60.0 * 1e6;
+        assert!(f.is_down(1, 1.5 * min));
+        assert!(!f.is_down(1, 3.0 * min));
+        assert!(f.is_down(1, 4.5 * min));
+        assert!(!f.is_down(0, 4.5 * min));
+    }
+
+    #[test]
+    fn transitions() {
+        let f = FaultSchedule::none().with(0, 10.0, 20.0);
+        assert_eq!(f.next_transition(0, 0.0), Some(10.0));
+        assert_eq!(f.next_transition(0, 10.0), Some(20.0));
+        assert_eq!(f.next_transition(0, 20.0), None);
+    }
+}

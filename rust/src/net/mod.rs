@@ -1,0 +1,21 @@
+//! Simulated multi-rail network fabric.
+//!
+//! The paper's testbed (multi-NIC nodes with TCP / SHARP / GLEX planes) is
+//! reproduced as a calibrated simulation: real gradient bytes move through
+//! in-memory rails whose delivery *time* follows per-protocol latency and
+//! bandwidth models fitted to the paper's own measurements (Fig. 2,
+//! Table 1, Fig. 4). See DESIGN.md §1 for the substitution rationale.
+
+pub mod cpu_pool;
+pub mod fault;
+pub mod protocol;
+pub mod rail;
+pub mod simnet;
+pub mod topology;
+
+pub use cpu_pool::CpuPool;
+pub use fault::{FaultSchedule, FaultWindow};
+pub use protocol::{CollectiveKind, ProtoKind, Protocol};
+pub use rail::{NicSpec, Rail, RailHealth};
+pub use simnet::Fabric;
+pub use topology::{ClusterSpec, NodeSpec};

@@ -1,0 +1,122 @@
+//! Rails: a NIC + protocol instance forming one plane of the multi-rail
+//! fabric, including virtual channels (several rails multiplexed onto one
+//! physical NIC — paper §4.1 / Fig. 13).
+
+use crate::net::protocol::{ProtoKind, Protocol};
+
+/// Physical NIC description (paper Table 2).
+#[derive(Debug, Clone)]
+pub struct NicSpec {
+    pub model: &'static str,
+    /// Wire speed in Gbps.
+    pub gbps: f64,
+    pub rdma: bool,
+}
+
+impl NicSpec {
+    pub const MCX623106AN: NicSpec = NicSpec { model: "MCX623106AN", gbps: 100.0, rdma: false };
+    pub const CONNECTX5: NicSpec = NicSpec { model: "ConnectX-5", gbps: 100.0, rdma: true };
+    pub const TH_NIC: NicSpec = NicSpec { model: "TH-NIC", gbps: 128.0, rdma: true };
+    pub const BCM5720: NicSpec = NicSpec { model: "BCM5720", gbps: 1.0, rdma: false };
+    pub const CONNECTX3: NicSpec = NicSpec { model: "ConnectX-3", gbps: 56.0, rdma: true };
+
+    /// Usable wire bandwidth in MB/s (~92% of line rate after framing).
+    pub fn usable_mbps(&self) -> f64 {
+        self.gbps * 1000.0 / 8.0 * 0.92
+    }
+
+    /// A NIC throttled to `gbps` (the paper throttles 56 Gbps IB to 1 Gbps
+    /// for the GPT-3 experiments).
+    pub fn throttled(mut self, gbps: f64) -> NicSpec {
+        self.gbps = gbps;
+        self
+    }
+}
+
+/// Health state of a rail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RailHealth {
+    Healthy,
+    /// Failed at the given virtual time (us) — awaiting detection.
+    Failed,
+    /// Removed from service by the Exception Handler.
+    Deregistered,
+}
+
+/// One plane of the multi-rail network: a protocol bound to (a share of) a
+/// physical NIC.
+#[derive(Debug, Clone)]
+pub struct Rail {
+    pub id: usize,
+    pub name: String,
+    pub nic: NicSpec,
+    pub protocol: Protocol,
+    /// Number of virtual channels sharing the same physical NIC (1 = the
+    /// rail owns the NIC). Wire bandwidth divides by this; protocol/CPU
+    /// resources do not — which is exactly why virtual dual-rail TCP wins
+    /// on fast NICs (Fig. 13).
+    pub nic_sharing: usize,
+    pub health: RailHealth,
+}
+
+impl Rail {
+    pub fn new(id: usize, nic: NicSpec, kind: ProtoKind) -> Rail {
+        Rail {
+            id,
+            name: format!("{}#{}", kind.name(), id),
+            nic,
+            protocol: Protocol::of(kind),
+            nic_sharing: 1,
+            health: RailHealth::Healthy,
+        }
+    }
+
+    pub fn virtual_channel(mut self, id: usize, sharing: usize) -> Rail {
+        self.id = id;
+        self.nic_sharing = sharing.max(1);
+        self.name = format!("{}#{}v", self.protocol.kind.name(), id);
+        self
+    }
+
+    pub fn kind(&self) -> ProtoKind {
+        self.protocol.kind
+    }
+
+    pub fn is_healthy(&self) -> bool {
+        self.health == RailHealth::Healthy
+    }
+
+    /// Wire cap available to this rail in MB/s.
+    pub fn wire_cap_mbps(&self) -> f64 {
+        self.nic.usable_mbps() / self.nic_sharing as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_caps() {
+        let r = Rail::new(0, NicSpec::MCX623106AN, ProtoKind::Tcp);
+        assert!((r.wire_cap_mbps() - 11500.0).abs() < 1.0);
+        let v = r.clone().virtual_channel(1, 2);
+        assert!((v.wire_cap_mbps() - 5750.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn one_gbps_is_tight() {
+        let r = Rail::new(0, NicSpec::BCM5720, ProtoKind::Tcp);
+        // 1 Gbps usable ≈ 115 MB/s — below TCP's CPU-bound 353 MB/s peak,
+        // so the wire is the bottleneck (Fig. 13's 1 Gbps case).
+        assert!(r.wire_cap_mbps() < r.protocol.peak_mbps);
+    }
+
+    #[test]
+    fn health_transitions() {
+        let mut r = Rail::new(0, NicSpec::CONNECTX5, ProtoKind::Sharp);
+        assert!(r.is_healthy());
+        r.health = RailHealth::Failed;
+        assert!(!r.is_healthy());
+    }
+}

@@ -1,0 +1,281 @@
+//! The fabric: virtual-clock multi-rail network simulation.
+//!
+//! Real payload bytes flow through the coordinator; the fabric supplies the
+//! *time* each transfer takes, combining the calibrated protocol model,
+//! NIC wire caps (incl. virtual-channel sharing), CPU-core allocation and
+//! contention, per-message jitter, and the fault schedule.
+//!
+//! Collectives are executed in lockstep rounds (all nodes symmetric, as in
+//! the paper's ring/tree algorithms): a step's duration is the max over
+//! per-node sampled message times. This gives deterministic, fast policy
+//! simulation while keeping the data path real.
+
+use crate::net::cpu_pool::{CpuPool, Phase};
+use crate::net::fault::FaultSchedule;
+use crate::net::rail::{Rail, RailHealth};
+use crate::util::rng::Pcg;
+
+/// Error surfaced to the Exception Handler when a rail dies mid-transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RailDown(pub usize);
+
+/// Multi-rail fabric across `nodes` symmetric nodes.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    pub nodes: usize,
+    pub rails: Vec<Rail>,
+    pub cpu: CpuPool,
+    pub faults: FaultSchedule,
+    /// Virtual clock (us).
+    clock_us: f64,
+    /// Log-normal per-message jitter sigma (0 disables jitter).
+    pub jitter_sigma: f64,
+    rng: Pcg,
+}
+
+impl Fabric {
+    pub fn new(nodes: usize, rails: Vec<Rail>, mut cpu: CpuPool, seed: u64) -> Fabric {
+        assert!(nodes >= 2, "need at least 2 nodes");
+        for r in &rails {
+            cpu.register(r.kind());
+        }
+        Fabric {
+            nodes,
+            rails,
+            cpu,
+            faults: FaultSchedule::none(),
+            clock_us: 0.0,
+            jitter_sigma: 0.03,
+            rng: Pcg::new(seed),
+        }
+    }
+
+    pub fn with_faults(mut self, faults: FaultSchedule) -> Fabric {
+        self.faults = faults;
+        self
+    }
+
+    /// Disable stochastic jitter (deterministic analytic times).
+    pub fn deterministic(mut self) -> Fabric {
+        self.jitter_sigma = 0.0;
+        self
+    }
+
+    pub fn now_us(&self) -> f64 {
+        self.clock_us
+    }
+
+    pub fn advance(&mut self, dt_us: f64) {
+        debug_assert!(dt_us >= 0.0);
+        self.clock_us += dt_us;
+    }
+
+    pub fn reset_clock(&mut self) {
+        self.clock_us = 0.0;
+    }
+
+    /// Cores effectively granted to `rail` during `phase`.
+    pub fn cores_for_rail(&self, rail: usize, phase: Phase) -> f64 {
+        self.cpu.cores_for(self.rails[rail].kind(), phase)
+    }
+
+    /// Check the fault schedule and update the rail's health. Returns true
+    /// if the rail is usable at the current virtual time.
+    pub fn poll_health(&mut self, rail: usize) -> bool {
+        if self.rails[rail].health == RailHealth::Deregistered {
+            return false;
+        }
+        if self.faults.is_down(rail, self.clock_us) {
+            self.rails[rail].health = RailHealth::Failed;
+            false
+        } else {
+            if self.rails[rail].health == RailHealth::Failed {
+                // fault window passed; rail is physically back (the Control
+                // module decides when to re-admit it)
+                self.rails[rail].health = RailHealth::Healthy;
+            }
+            self.rails[rail].health == RailHealth::Healthy
+        }
+    }
+
+    pub fn deregister(&mut self, rail: usize) {
+        self.rails[rail].health = RailHealth::Deregistered;
+        // free this member thread's cores for the survivors
+        self.cpu.unregister(self.rails[rail].kind());
+    }
+
+    pub fn readmit(&mut self, rail: usize) {
+        self.rails[rail].health = RailHealth::Healthy;
+        self.cpu.register(self.rails[rail].kind());
+    }
+
+    pub fn healthy_rails(&self) -> Vec<usize> {
+        (0..self.rails.len())
+            .filter(|&i| self.rails[i].health == RailHealth::Healthy)
+            .collect()
+    }
+
+    /// Single point-to-point message time on `rail` (us), with jitter.
+    /// Fails if the rail is down at the current virtual time.
+    pub fn transfer(&mut self, rail: usize, bytes: f64) -> Result<f64, RailDown> {
+        if !self.poll_health(rail) {
+            return Err(RailDown(rail));
+        }
+        let r = &self.rails[rail];
+        // the aggregation (computation-phase) share is what bounds the
+        // protocol's effective bandwidth; transfer-phase skeleton cores
+        // only drive the DMA engines. Cross-member contention (§5.3.2)
+        // inflates the TRANSFER component (memory-bandwidth/IRQ sharing),
+        // not the fixed setup.
+        let cores = self.cpu.cores_for(r.kind(), Phase::Computation);
+        let contention = self.cpu.contention_factor();
+        let raw = r.protocol.msg_time_us(bytes, cores, r.wire_cap_mbps());
+        let base = r.protocol.setup_us + (raw - r.protocol.setup_us) / contention;
+        let j = if self.jitter_sigma > 0.0 {
+            self.rng.jitter(self.jitter_sigma)
+        } else {
+            1.0
+        };
+        Ok(base * j)
+    }
+
+    /// One lockstep collective round on `rail`: every node sends a message
+    /// of `bytes`; the round lasts as long as the slowest node (straggler
+    /// max over per-node jitter).
+    pub fn ring_step(&mut self, rail: usize, bytes: f64) -> Result<f64, RailDown> {
+        let mut worst = 0.0f64;
+        for _ in 0..self.nodes {
+            worst = worst.max(self.transfer(rail, bytes)?);
+        }
+        Ok(worst)
+    }
+
+    /// In-network aggregation round (SHARP-style): one tree traversal of
+    /// `bytes`, node-count dependence handled by the protocol model.
+    pub fn tree_round(&mut self, rail: usize, bytes: f64) -> Result<f64, RailDown> {
+        if !self.poll_health(rail) {
+            return Err(RailDown(rail));
+        }
+        let base = self.estimate_allreduce_us(rail, bytes);
+        let j = if self.jitter_sigma > 0.0 {
+            self.rng.jitter(self.jitter_sigma)
+        } else {
+            1.0
+        };
+        Ok(base * j)
+    }
+
+    /// Analytic single-rail allreduce estimate at current resources (used
+    /// by the Load Balancer for cold-start decisions before the Timer has
+    /// live data). Contention inflates the transfer component only.
+    pub fn estimate_allreduce_us(&self, rail: usize, bytes: f64) -> f64 {
+        let r = &self.rails[rail];
+        let cores = self.cpu.cores_for(r.kind(), Phase::Computation);
+        let contention = self.cpu.contention_factor();
+        let raw = r
+            .protocol
+            .allreduce_time_us(bytes, self.nodes, cores, r.wire_cap_mbps());
+        let setup = r
+            .protocol
+            .allreduce_time_us(0.0, self.nodes, cores, r.wire_cap_mbps());
+        setup + (raw - setup) / contention
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::protocol::{ProtoKind, MB};
+    use crate::net::rail::NicSpec;
+    use crate::net::topology::ClusterSpec;
+
+    fn dual_tcp(nodes: usize) -> Fabric {
+        let rails = ClusterSpec::local()
+            .build_rails(&[ProtoKind::Tcp, ProtoKind::Tcp])
+            .unwrap();
+        Fabric::new(nodes, rails, CpuPool::default(), 42).deterministic()
+    }
+
+    #[test]
+    fn transfer_time_positive_and_monotone() {
+        let mut f = dual_tcp(4);
+        let t1 = f.transfer(0, 1024.0).unwrap();
+        let t2 = f.transfer(0, MB).unwrap();
+        assert!(t1 > 0.0 && t2 > t1);
+    }
+
+    #[test]
+    fn fault_interrupts_transfer() {
+        let mut f = dual_tcp(4).with_faults(FaultSchedule::none().with(1, 0.0, 1000.0));
+        assert!(f.transfer(1, 1024.0).is_err());
+        assert!(f.transfer(0, 1024.0).is_ok());
+        f.advance(2000.0);
+        // window over: rail physically back
+        assert!(f.transfer(1, 1024.0).is_ok());
+    }
+
+    #[test]
+    fn deregistered_rail_stays_down() {
+        let mut f = dual_tcp(4);
+        f.deregister(1);
+        f.advance(1e9);
+        assert!(f.transfer(1, 1024.0).is_err());
+        assert_eq!(f.healthy_rails(), vec![0]);
+        f.readmit(1);
+        assert!(f.transfer(1, 1024.0).is_ok());
+    }
+
+    #[test]
+    fn jitter_reproducible() {
+        let mk = || {
+            let rails = ClusterSpec::local()
+                .build_rails(&[ProtoKind::Tcp])
+                .unwrap();
+            Fabric::new(4, rails, CpuPool::default(), 7)
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..10 {
+            assert_eq!(a.transfer(0, MB).unwrap(), b.transfer(0, MB).unwrap());
+        }
+    }
+
+    #[test]
+    fn virtual_channels_halve_wire_not_time_on_fast_nic() {
+        // On 100 Gbps the CPU-bound protocol peak (353 MB/s) is far below
+        // even half the wire, so virtual sharing must not change times.
+        let spec = ClusterSpec::local();
+        let vrails = spec.build_virtual_rails(ProtoKind::Tcp, 2).unwrap();
+        let prails = spec.build_rails(&[ProtoKind::Tcp, ProtoKind::Tcp]).unwrap();
+        let mut fv = Fabric::new(4, vrails, CpuPool::default(), 1).deterministic();
+        let mut fp = Fabric::new(4, prails, CpuPool::default(), 1).deterministic();
+        let tv = fv.transfer(0, 4.0 * MB).unwrap();
+        let tp = fp.transfer(0, 4.0 * MB).unwrap();
+        assert!((tv - tp).abs() / tp < 0.01, "tv={tv} tp={tp}");
+    }
+
+    #[test]
+    fn one_gbps_virtual_channels_do_bottleneck() {
+        let nic = NicSpec::BCM5720;
+        let r0 = Rail::new(0, nic.clone(), ProtoKind::Tcp).virtual_channel(0, 2);
+        let r1 = Rail::new(0, nic.clone(), ProtoKind::Tcp).virtual_channel(1, 2);
+        let single = Rail::new(0, nic, ProtoKind::Tcp);
+        let mut fv = Fabric::new(4, vec![r0, r1], CpuPool::default(), 1).deterministic();
+        let mut fs = Fabric::new(4, vec![single], CpuPool::default(), 1).deterministic();
+        let tv = fv.transfer(0, 4.0 * MB).unwrap();
+        let ts = fs.transfer(0, 4.0 * MB).unwrap();
+        assert!(tv > 1.8 * ts, "tv={tv} ts={ts}");
+    }
+
+    #[test]
+    fn estimates_match_measured_when_deterministic() {
+        let mut f = dual_tcp(4);
+        let est = f.estimate_allreduce_us(0, 8.0 * MB);
+        // reconstruct via ring steps
+        let seg = 8.0 * MB / 4.0;
+        let mut total = 0.0;
+        for _ in 0..6 {
+            total += f.ring_step(0, seg).unwrap();
+        }
+        assert!((est - total).abs() / est < 0.05, "est={est} total={total}");
+    }
+}

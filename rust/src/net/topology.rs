@@ -1,0 +1,188 @@
+//! Cluster topologies from the paper's Table 2 (local / cloud /
+//! supercomputer testbeds) and rail-set construction rules.
+
+use crate::net::protocol::ProtoKind;
+use crate::net::rail::{NicSpec, Rail};
+use crate::Result;
+use crate::util::error::Error;
+
+/// Per-node hardware inventory.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub cpu: &'static str,
+    pub cores: f64,
+    pub gpus: usize,
+    pub nics: Vec<NicSpec>,
+}
+
+/// A named testbed.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub name: &'static str,
+    pub node: NodeSpec,
+    pub max_nodes: usize,
+}
+
+impl ClusterSpec {
+    /// Paper's 8-node local platform: Xeon 6230R, 2x V100, 3x Eth 100G,
+    /// 1x IB 100G (SHARP), 1x TH 128G (GLEX).
+    pub fn local() -> ClusterSpec {
+        ClusterSpec {
+            name: "local",
+            node: NodeSpec {
+                cpu: "Xeon Gold 6230R",
+                cores: 52.0,
+                gpus: 2,
+                nics: vec![
+                    NicSpec::MCX623106AN,
+                    NicSpec::MCX623106AN,
+                    NicSpec::MCX623106AN,
+                    NicSpec::CONNECTX5,
+                    NicSpec::TH_NIC,
+                ],
+            },
+            max_nodes: 8,
+        }
+    }
+
+    /// 16-node cloud platform: Xeon 5318Y, 1x V100, 1x Eth, 1x IB.
+    pub fn cloud() -> ClusterSpec {
+        ClusterSpec {
+            name: "cloud",
+            node: NodeSpec {
+                cpu: "Xeon Gold 5318Y",
+                cores: 48.0,
+                gpus: 1,
+                nics: vec![NicSpec::MCX623106AN, NicSpec::CONNECTX5],
+            },
+            max_nodes: 16,
+        }
+    }
+
+    /// 128-node supercomputer: EPYC 7452, 1 Gbps Eth + 56 Gbps IB (the
+    /// paper throttles the IB NIC to 1 Gbps for the GPT runs).
+    pub fn supercomputer() -> ClusterSpec {
+        ClusterSpec {
+            name: "supercomputer",
+            node: NodeSpec {
+                cpu: "AMD EPYC 7452",
+                cores: 64.0,
+                gpus: 0,
+                nics: vec![NicSpec::BCM5720, NicSpec::CONNECTX3],
+            },
+            max_nodes: 128,
+        }
+    }
+
+    /// Build the rail set for a protocol combination, e.g. `[Tcp, Tcp]` or
+    /// `[Tcp, Sharp]`.
+    ///
+    /// Mirrors the paper's constraints: each node has one SHARP-capable and
+    /// one GLEX-capable device, so homogeneous SHARP-SHARP / GLEX-GLEX (and
+    /// SHARP+GLEX heterogeneous pairs needing two RDMA planes of the same
+    /// device) are rejected exactly as in §5.1 Baselines.
+    pub fn build_rails(&self, kinds: &[ProtoKind]) -> Result<Vec<Rail>> {
+        let n_sharp = kinds.iter().filter(|k| **k == ProtoKind::Sharp).count();
+        let n_glex = kinds.iter().filter(|k| **k == ProtoKind::Glex).count();
+        if n_sharp > 1 || n_glex > 1 {
+            return Err(Error::Topology(
+                "hardware conflict: one SHARP (IB) and one GLEX (TH) device per node".into(),
+            ));
+        }
+        let mut eth_iter = self.node.nics.iter().filter(|n| !n.rdma);
+        let ib = self.node.nics.iter().find(|n| n.rdma && n.model.contains("ConnectX"));
+        let th = self.node.nics.iter().find(|n| n.model == "TH-NIC");
+        let mut rails = Vec::new();
+        for (i, &k) in kinds.iter().enumerate() {
+            let nic = match k {
+                ProtoKind::Tcp => eth_iter
+                    .next()
+                    .cloned()
+                    .ok_or_else(|| Error::Topology("not enough Ethernet NICs".into()))?,
+                ProtoKind::Sharp => ib
+                    .cloned()
+                    .ok_or_else(|| Error::Topology("no SHARP-capable IB NIC".into()))?,
+                ProtoKind::Glex => th
+                    .cloned()
+                    .ok_or_else(|| Error::Topology("no GLEX-capable TH NIC".into()))?,
+            };
+            rails.push(Rail::new(i, nic, k));
+        }
+        Ok(rails)
+    }
+
+    /// Virtual multi-rail: `count` virtual channels of `kind` multiplexed
+    /// on ONE physical NIC (paper §4.1, Fig. 13's TCP-TCP(Eth¹)).
+    pub fn build_virtual_rails(&self, kind: ProtoKind, count: usize) -> Result<Vec<Rail>> {
+        let nic = match kind {
+            ProtoKind::Tcp => self
+                .node
+                .nics
+                .iter()
+                .find(|n| !n.rdma)
+                .cloned()
+                .ok_or_else(|| Error::Topology("no Ethernet NIC".into()))?,
+            _ => return Err(Error::Topology("virtual channels supported on TCP only".into())),
+        };
+        Ok((0..count)
+            .map(|i| Rail::new(0, nic.clone(), kind).virtual_channel(i, count))
+            .collect())
+    }
+}
+
+/// Parse "tcp-tcp", "tcp-sharp", "tcp-glex", "tcp" into protocol combos.
+pub fn parse_combo(s: &str) -> Result<Vec<ProtoKind>> {
+    s.split('-')
+        .map(|p| match p.trim().to_ascii_lowercase().as_str() {
+            "tcp" => Ok(ProtoKind::Tcp),
+            "sharp" => Ok(ProtoKind::Sharp),
+            "glex" => Ok(ProtoKind::Glex),
+            other => Err(Error::Config(format!("unknown protocol `{other}`"))),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_combos() {
+        let c = ClusterSpec::local();
+        assert_eq!(c.build_rails(&[ProtoKind::Tcp, ProtoKind::Tcp]).unwrap().len(), 2);
+        assert_eq!(c.build_rails(&[ProtoKind::Tcp, ProtoKind::Sharp]).unwrap().len(), 2);
+        assert_eq!(c.build_rails(&[ProtoKind::Tcp, ProtoKind::Glex]).unwrap().len(), 2);
+        // paper §5.1: SHARP-SHARP / GLEX-GLEX impossible (device conflict)
+        assert!(c.build_rails(&[ProtoKind::Sharp, ProtoKind::Sharp]).is_err());
+        assert!(c.build_rails(&[ProtoKind::Glex, ProtoKind::Glex]).is_err());
+    }
+
+    #[test]
+    fn cloud_has_one_eth() {
+        let c = ClusterSpec::cloud();
+        assert!(c.build_rails(&[ProtoKind::Tcp, ProtoKind::Tcp]).is_err());
+        assert!(c.build_rails(&[ProtoKind::Tcp]).is_ok());
+    }
+
+    #[test]
+    fn virtual_rails_share_nic() {
+        let c = ClusterSpec::local();
+        let rails = c.build_virtual_rails(ProtoKind::Tcp, 2).unwrap();
+        assert_eq!(rails.len(), 2);
+        assert_eq!(rails[0].nic_sharing, 2);
+        assert!(rails[0].wire_cap_mbps() < NicSpec::MCX623106AN.usable_mbps());
+    }
+
+    #[test]
+    fn combo_parsing() {
+        assert_eq!(parse_combo("tcp-sharp").unwrap(), vec![ProtoKind::Tcp, ProtoKind::Sharp]);
+        assert!(parse_combo("tcp-bogus").is_err());
+    }
+
+    #[test]
+    fn supercomputer_nics_are_slow() {
+        let c = ClusterSpec::supercomputer();
+        let eth = &c.node.nics[0];
+        assert!(eth.usable_mbps() < 120.0);
+    }
+}

@@ -1,0 +1,237 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime (shapes, dtypes, model parameter ABI).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::error::Error;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Element type of an artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// One input/output tensor spec.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// Model ABI: parameter order/shapes + training-step shapes.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub n_params: usize,
+    /// Parameter vector padded to the SGD/reduce kernel block size.
+    pub padded: usize,
+    pub param_shapes: Vec<(String, Vec<usize>)>,
+    /// Raw f32 file with deterministic initial parameters.
+    pub init_params_path: Option<PathBuf>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub models: Vec<ModelSpec>,
+}
+
+fn io_from_json(j: &Json) -> Result<IoSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::msg("io spec missing shape"))?
+        .iter()
+        .map(|x| x.as_usize().unwrap_or(0))
+        .collect();
+    let dtype = match j.get("dtype").and_then(Json::as_str) {
+        Some("f32") => Dtype::F32,
+        Some("i32") => Dtype::I32,
+        other => return Err(Error::msg(format!("bad dtype {other:?}"))),
+    };
+    Ok(IoSpec { shape, dtype })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|_| Error::MissingArtifact(path.display().to_string()))?;
+        let j = Json::parse(&text)?;
+
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").and_then(Json::as_arr).unwrap_or(&[]) {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::msg("artifact missing name"))?
+                .to_string();
+            let rel = a
+                .get("path")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::msg("artifact missing path"))?;
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(io_from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(io_from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec { name, path: dir.join(rel), inputs, outputs });
+        }
+
+        // init-params lookup table
+        let mut init_paths = std::collections::BTreeMap::new();
+        for ip in j.get("init_params").and_then(Json::as_arr).unwrap_or(&[]) {
+            if let (Some(m), Some(p)) = (
+                ip.get("model").and_then(Json::as_str),
+                ip.get("path").and_then(Json::as_str),
+            ) {
+                init_paths.insert(m.to_string(), dir.join(p));
+            }
+        }
+
+        let mut models = Vec::new();
+        for m in j.get("models").and_then(Json::as_arr).unwrap_or(&[]) {
+            let name = m
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::msg("model missing name"))?
+                .to_string();
+            let geti = |k: &str| -> Result<usize> {
+                m.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| Error::msg(format!("model {name} missing {k}")))
+            };
+            let param_shapes = m
+                .get("param_shapes")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|e| {
+                    let pair = e.as_arr()?;
+                    Some((
+                        pair[0].as_str()?.to_string(),
+                        pair[1]
+                            .as_arr()?
+                            .iter()
+                            .map(|x| x.as_usize().unwrap_or(0))
+                            .collect(),
+                    ))
+                })
+                .collect();
+            models.push(ModelSpec {
+                init_params_path: init_paths.get(&name).cloned(),
+                name: name.clone(),
+                vocab: geti("vocab")?,
+                d_model: geti("d_model")?,
+                n_layers: geti("n_layers")?,
+                n_heads: geti("n_heads")?,
+                d_ff: geti("d_ff")?,
+                seq_len: geti("seq_len")?,
+                batch: geti("batch")?,
+                n_params: geti("n_params")?,
+                padded: geti("padded")?,
+                param_shapes,
+            });
+        }
+        Ok(Manifest { dir, artifacts, models })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::MissingArtifact(name.to_string()))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| Error::MissingArtifact(format!("model {name}")))
+    }
+
+    /// Available pairwise-add reduce kernel lengths, ascending.
+    pub fn add_pair_lengths(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter_map(|a| a.name.strip_prefix("add_pair_")?.parse().ok())
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_available() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn load_real_manifest() {
+        if !manifest_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load("artifacts").unwrap();
+        assert!(!m.artifacts.is_empty());
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.d_model, 128);
+        assert_eq!(tiny.padded % 65536, 0);
+        assert!(tiny.init_params_path.is_some());
+        let ts = m.artifact("train_step_tiny").unwrap();
+        assert_eq!(ts.inputs.len(), 2);
+        assert_eq!(ts.inputs[0].elems(), tiny.padded);
+        assert_eq!(ts.outputs[1].elems(), tiny.padded);
+        assert!(!m.add_pair_lengths().is_empty());
+    }
+
+    #[test]
+    fn missing_dir_is_missing_artifact_error() {
+        match Manifest::load("/nonexistent-dir") {
+            Err(Error::MissingArtifact(_)) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+}

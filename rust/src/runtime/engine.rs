@@ -1,0 +1,166 @@
+//! PJRT engine: client + compiled-executable cache.
+//!
+//! Follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. Executables
+//! are compiled once per artifact and cached for the life of the process.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::runtime::artifacts::{Dtype, Manifest};
+use crate::util::error::Error;
+use crate::Result;
+
+/// A typed host tensor crossing the runtime boundary.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>) -> HostTensor {
+        let n = data.len();
+        HostTensor::F32(data, vec![n])
+    }
+
+    pub fn i32_shaped(data: Vec<i32>, shape: Vec<usize>) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I32(data, shape)
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32(d, shape) => {
+                let l = xla::Literal::vec1(d.as_slice());
+                let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+                if dims.len() == 1 { l } else { l.reshape(&dims)? }
+            }
+            HostTensor::I32(d, shape) => {
+                let l = xla::Literal::vec1(d.as_slice());
+                let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+                if dims.len() == 1 { l } else { l.reshape(&dims)? }
+            }
+        };
+        Ok(lit)
+    }
+}
+
+/// The engine: one CPU PJRT client + executable cache keyed by artifact
+/// name.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("artifacts", &self.manifest.artifacts.len())
+            .finish()
+    }
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifacts_dir: &str) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { manifest, client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute a cached executable with caller-managed literals (the
+    /// zero-allocation hot path used by [`crate::runtime::PjrtReducer`]).
+    pub fn run_literals(
+        &self,
+        name: &str,
+        inputs: &[&xla::Literal],
+    ) -> Result<xla::Literal> {
+        let exe = self.load(name)?;
+        Ok(exe.execute::<&xla::Literal>(inputs)?[0][0].to_literal_sync()?)
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&spec.path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with host tensors; returns output tensors.
+    ///
+    /// Inputs are validated against the manifest spec. The AOT path lowers
+    /// with `return_tuple=True`, so the single result literal is a tuple
+    /// that is decomposed into the manifest's output list.
+    pub fn run(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::msg(format!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let (len, dt) = match t {
+                HostTensor::F32(d, _) => (d.len(), Dtype::F32),
+                HostTensor::I32(d, _) => (d.len(), Dtype::I32),
+            };
+            if len != s.elems() || dt != s.dtype {
+                return Err(Error::msg(format!(
+                    "{name}: input {i} mismatch (got {len} elems, want {})",
+                    s.elems()
+                )));
+            }
+        }
+        let exe = self.load(name)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            return Err(Error::msg(format!(
+                "{name}: expected {} outputs, got {}",
+                spec.outputs.len(),
+                parts.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, os) in parts.into_iter().zip(&spec.outputs) {
+            let t = match os.dtype {
+                Dtype::F32 => HostTensor::F32(lit.to_vec::<f32>()?, os.shape.clone()),
+                Dtype::I32 => HostTensor::I32(lit.to_vec::<i32>()?, os.shape.clone()),
+            };
+            out.push(t);
+        }
+        Ok(out)
+    }
+}
+
+/// Unwrap helpers for the common case.
+pub fn as_f32(t: &HostTensor) -> &[f32] {
+    match t {
+        HostTensor::F32(d, _) => d,
+        _ => panic!("expected f32 tensor"),
+    }
+}
+
+pub fn scalar_f32(t: &HostTensor) -> f32 {
+    as_f32(t)[0]
+}

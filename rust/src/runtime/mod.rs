@@ -1,0 +1,19 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `python/compile/aot.py`) and executes them on the request path.
+//!
+//! HLO **text** is the interchange format (see aot.py / DESIGN.md): the
+//! xla_extension 0.5.1 behind the `xla` 0.1.6 crate rejects jax ≥ 0.5's
+//! 64-bit-id serialized protos, while the text parser reassigns ids.
+//!
+//! Python never runs here — after `make artifacts` the binary is
+//! self-contained.
+
+pub mod artifacts;
+pub mod engine;
+pub mod model;
+pub mod reducer;
+
+pub use artifacts::{ArtifactSpec, IoSpec, Manifest, ModelSpec};
+pub use engine::Engine;
+pub use model::ModelRunner;
+pub use reducer::PjrtReducer;

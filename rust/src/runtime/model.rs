@@ -1,0 +1,112 @@
+//! Model runner: executes the AOT-compiled L2 train step and the Pallas
+//! fused-SGD update for one model config.
+
+use std::sync::Arc;
+
+use crate::runtime::artifacts::ModelSpec;
+use crate::runtime::engine::{as_f32, scalar_f32, Engine, HostTensor};
+use crate::util::error::Error;
+use crate::Result;
+
+/// Executes `train_step_<model>` / `sgd_update_<model>` against flat
+/// parameter buffers (the ABI established by python/compile/configs.py).
+pub struct ModelRunner {
+    engine: Arc<Engine>,
+    pub spec: ModelSpec,
+    train_name: String,
+    sgd_name: String,
+}
+
+impl std::fmt::Debug for ModelRunner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelRunner").field("model", &self.spec.name).finish()
+    }
+}
+
+impl ModelRunner {
+    pub fn new(engine: Arc<Engine>, model: &str) -> Result<ModelRunner> {
+        let spec = engine.manifest.model(model)?.clone();
+        Ok(ModelRunner {
+            engine,
+            train_name: format!("train_step_{model}"),
+            sgd_name: format!("sgd_update_{model}"),
+            spec,
+        })
+    }
+
+    /// Pre-compile both executables (first call otherwise pays it lazily).
+    pub fn warmup(&self) -> Result<()> {
+        self.engine.load(&self.train_name)?;
+        self.engine.load(&self.sgd_name)?;
+        Ok(())
+    }
+
+    /// Deterministic initial parameters exported by aot.py (padded).
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        let path = self
+            .spec
+            .init_params_path
+            .as_ref()
+            .ok_or_else(|| Error::MissingArtifact(format!("init_params_{}", self.spec.name)))?;
+        let bytes = std::fs::read(path)?;
+        if bytes.len() != self.spec.padded * 4 {
+            return Err(Error::msg(format!(
+                "init params size mismatch: {} vs {}",
+                bytes.len(),
+                self.spec.padded * 4
+            )));
+        }
+        let mut out = vec![0f32; self.spec.padded];
+        for (i, c) in bytes.chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        Ok(out)
+    }
+
+    /// Expected token batch length: batch * (seq_len + 1).
+    pub fn batch_elems(&self) -> usize {
+        self.spec.batch * (self.spec.seq_len + 1)
+    }
+
+    /// One forward+backward step: (loss, padded flat gradients).
+    pub fn train_step(&self, params: &[f32], tokens: &[i32]) -> Result<(f32, Vec<f32>)> {
+        assert_eq!(params.len(), self.spec.padded);
+        assert_eq!(tokens.len(), self.batch_elems());
+        let out = self.engine.run(
+            &self.train_name,
+            &[
+                HostTensor::f32(params.to_vec()),
+                HostTensor::i32_shaped(
+                    tokens.to_vec(),
+                    vec![self.spec.batch, self.spec.seq_len + 1],
+                ),
+            ],
+        )?;
+        let loss = scalar_f32(&out[0]);
+        let grads = as_f32(&out[1]).to_vec();
+        Ok((loss, grads))
+    }
+
+    /// Fused momentum-SGD update (Pallas kernel): returns (params', vel').
+    pub fn sgd_update(
+        &self,
+        params: &[f32],
+        grads: &[f32],
+        vel: &[f32],
+        lr: f32,
+        mu: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        assert_eq!(params.len(), self.spec.padded);
+        let out = self.engine.run(
+            &self.sgd_name,
+            &[
+                HostTensor::f32(vec![lr]),
+                HostTensor::f32(vec![mu]),
+                HostTensor::f32(params.to_vec()),
+                HostTensor::f32(grads.to_vec()),
+                HostTensor::f32(vel.to_vec()),
+            ],
+        )?;
+        Ok((as_f32(&out[0]).to_vec(), as_f32(&out[1]).to_vec()))
+    }
+}

@@ -1,0 +1,107 @@
+//! Gradient bucketing / tensor fusion (Horovod-style) for the real
+//! training loop: the flat gradient vector is cut into fusion buckets that
+//! are allreduced as separate operations, so the Load Balancer sees the
+//! realistic per-op size distribution instead of one giant payload.
+
+use crate::coordinator::buffer::Window;
+
+/// Split a flat parameter/gradient vector of `total` elements into fusion
+/// buckets of at most `bucket_elems` elements.
+#[derive(Debug, Clone)]
+pub struct Bucketizer {
+    pub windows: Vec<Window>,
+}
+
+impl Bucketizer {
+    pub fn new(total: usize, bucket_elems: usize) -> Bucketizer {
+        Bucketizer { windows: Window::new(0, total).split_chunks(bucket_elems.max(1)) }
+    }
+
+    /// Buckets aligned to parameter boundaries: never splits one parameter
+    /// tensor across buckets unless the tensor alone exceeds the cap.
+    pub fn aligned(param_sizes: &[usize], bucket_elems: usize) -> Bucketizer {
+        let cap = bucket_elems.max(1);
+        let mut windows = Vec::new();
+        let mut start = 0usize;
+        let mut len = 0usize;
+        let mut off = 0usize;
+        for &p in param_sizes {
+            if len > 0 && len + p > cap {
+                windows.push(Window::new(start, len));
+                start = off;
+                len = 0;
+            }
+            if p >= cap {
+                // oversized tensor: flush and chunk it
+                if len > 0 {
+                    windows.push(Window::new(start, len));
+                    len = 0;
+                }
+                for w in Window::new(off, p).split_chunks(cap) {
+                    windows.push(w);
+                }
+                off += p;
+                start = off;
+                continue;
+            }
+            len += p;
+            off += p;
+        }
+        if len > 0 {
+            windows.push(Window::new(start, len));
+        }
+        Bucketizer { windows }
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.windows.len()
+    }
+
+    pub fn total(&self) -> usize {
+        self.windows.iter().map(|w| w.len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_everything_in_order() {
+        let b = Bucketizer::new(1000, 300);
+        assert_eq!(b.n_buckets(), 4);
+        assert_eq!(b.total(), 1000);
+        assert_eq!(b.windows[0], Window::new(0, 300));
+        assert_eq!(b.windows[3], Window::new(900, 100));
+    }
+
+    #[test]
+    fn aligned_keeps_tensors_whole() {
+        let b = Bucketizer::aligned(&[100, 100, 100, 100], 250);
+        assert_eq!(b.total(), 400);
+        // 100+100 fits in 250, adding the third would overflow
+        assert_eq!(b.windows[0].len, 200);
+        assert_eq!(b.windows[1].len, 200);
+    }
+
+    #[test]
+    fn aligned_chunks_oversized_tensor() {
+        let b = Bucketizer::aligned(&[50, 1000, 50], 256);
+        assert_eq!(b.total(), 1100);
+        // the 1000-elem tensor is chunked at 256
+        assert!(b.windows.iter().any(|w| w.len == 256));
+        // windows are contiguous and non-overlapping
+        let mut off = 0;
+        for w in &b.windows {
+            assert_eq!(w.offset, off);
+            off = w.end();
+        }
+        assert_eq!(off, 1100);
+    }
+
+    #[test]
+    fn single_bucket_when_cap_large() {
+        let b = Bucketizer::new(100, 1 << 30);
+        assert_eq!(b.n_buckets(), 1);
+    }
+}

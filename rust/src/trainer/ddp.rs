@@ -1,0 +1,155 @@
+//! DDP iteration-time simulator (paper §5.3, Fig. 12/16/17).
+//!
+//! Combines a model's communication profile (Fig. 15) with the multi-rail
+//! coordinator: every profile op is allreduced through [`MultiRail`]
+//! (timing from the calibrated fabric, payload buffers kept small via the
+//! scaled path), and compute is modeled from the per-GPU throughput
+//! anchors. Backprop/communication overlap hides a configurable fraction
+//! of compute (Horovod pipelines allreduce with gradient production).
+
+use crate::config::Config;
+use crate::coordinator::buffer::UnboundBuffer;
+use crate::coordinator::multirail::MultiRail;
+use crate::trainer::comm_profile::CommProfile;
+use crate::Result;
+
+/// Fraction of compute time allreduce can hide behind (tensor-fusion
+/// pipelining in Horovod/DDP).
+pub const DEFAULT_OVERLAP: f64 = 0.5;
+
+/// Data-parallel training-speed simulator.
+pub struct DdpSim {
+    pub profile: CommProfile,
+    pub mr: MultiRail,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub batch_per_gpu: usize,
+    pub overlap: f64,
+    /// Real elements per simulated op payload (timing is scaled to the
+    /// profile's byte sizes; numerics stay real but small).
+    sim_elems: usize,
+}
+
+impl DdpSim {
+    pub fn new(cfg: &Config, profile: CommProfile, gpus_per_node: usize, batch_per_gpu: usize) -> Result<DdpSim> {
+        let mr = MultiRail::new(cfg)?;
+        Ok(DdpSim {
+            profile,
+            mr,
+            nodes: cfg.nodes,
+            gpus_per_node,
+            batch_per_gpu,
+            overlap: DEFAULT_OVERLAP,
+            sim_elems: 1024,
+        })
+    }
+
+    /// Communication time of one full iteration (all profile ops).
+    pub fn comm_us(&mut self) -> Result<f64> {
+        let mut total = 0.0;
+        for &bytes in &self.profile.ops.clone() {
+            let mut buf = UnboundBuffer::from_fn(self.nodes, self.sim_elems, |n, i| {
+                ((n + i) % 17) as f32
+            });
+            let elem_bytes = bytes as f64 / self.sim_elems as f64;
+            let rep = self.mr.allreduce_scaled(&mut buf, elem_bytes)?;
+            total += rep.total_us;
+        }
+        Ok(total)
+    }
+
+    /// Warm the Load Balancer's data-length table (the paper reports
+    /// convergence within the first 100 iterations).
+    pub fn warmup(&mut self, iters: usize) -> Result<()> {
+        for _ in 0..iters {
+            self.comm_us()?;
+        }
+        Ok(())
+    }
+
+    /// One training iteration time (us): compute + exposed communication.
+    pub fn iter_time_us(&mut self) -> Result<f64> {
+        let compute = self.profile.compute_us(self.batch_per_gpu);
+        let comm = self.comm_us()?;
+        let exposed = (comm - self.overlap * compute).max(0.0);
+        Ok(compute + exposed)
+    }
+
+    /// Paper Fig. 12/16/17 metric: samples processed per second per node.
+    pub fn samples_per_sec_per_node(&mut self) -> Result<f64> {
+        let t = self.iter_time_us()?;
+        Ok(self.batch_per_gpu as f64 * self.gpus_per_node as f64 / (t / 1e6))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Policy;
+    use crate::net::protocol::ProtoKind;
+
+    fn cfg(combo: &[ProtoKind], nodes: usize, policy: Policy) -> Config {
+        Config {
+            nodes,
+            combo: combo.to_vec(),
+            policy,
+            deterministic: true,
+            ..Config::default()
+        }
+    }
+
+    #[test]
+    fn dual_rail_trains_faster_than_single() {
+        let mut dual = DdpSim::new(
+            &cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha),
+            CommProfile::vgg11(),
+            1,
+            64,
+        )
+        .unwrap();
+        let mut single = DdpSim::new(
+            &cfg(&[ProtoKind::Tcp], 4, Policy::SingleRail),
+            CommProfile::vgg11(),
+            1,
+            64,
+        )
+        .unwrap();
+        dual.warmup(3).unwrap();
+        let d = dual.samples_per_sec_per_node().unwrap();
+        let s = single.samples_per_sec_per_node().unwrap();
+        assert!(d > s * 1.1, "dual {d} single {s}");
+    }
+
+    #[test]
+    fn more_gpus_more_throughput() {
+        let mk = |gpus| {
+            DdpSim::new(
+                &cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha),
+                CommProfile::alexnet(),
+                gpus,
+                32,
+            )
+            .unwrap()
+        };
+        let g1 = mk(1).samples_per_sec_per_node().unwrap();
+        let g2 = mk(2).samples_per_sec_per_node().unwrap();
+        assert!(g2 > 1.3 * g1, "g1 {g1} g2 {g2}");
+    }
+
+    #[test]
+    fn comm_time_positive_and_repeatable_shape() {
+        let mut sim = DdpSim::new(
+            &cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha),
+            CommProfile::alexnet(),
+            1,
+            32,
+        )
+        .unwrap();
+        let c1 = sim.comm_us().unwrap();
+        assert!(c1 > 0.0);
+        // warmed balancer should not be slower than the first pass
+        sim.warmup(3).unwrap();
+        let c2 = sim.comm_us().unwrap();
+        assert!(c2 <= c1 * 1.1, "c1 {c1} c2 {c2}");
+    }
+}

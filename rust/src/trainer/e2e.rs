@@ -1,0 +1,173 @@
+//! REAL end-to-end data-parallel training (the mandated e2e validation).
+//!
+//! All three layers compose here, with Python nowhere on the path:
+//!
+//! 1. each simulated worker runs the AOT-compiled L2 train step
+//!    (`train_step_<model>.hlo.txt`, containing the L1 Pallas matmul
+//!    kernels) on its own synthetic token batch via PJRT;
+//! 2. the per-worker gradient vectors are allreduced **through Nezha's
+//!    multi-rail coordinator** bucket by bucket — real bytes, reduced by
+//!    the Pallas `add_pair` kernel when `use_pjrt_reducer` is set;
+//! 3. the averaged gradient feeds the AOT Pallas fused-SGD update.
+//!
+//! Because every replica starts from identical parameters and applies the
+//! identical averaged gradient, replicas stay bit-identical; we exploit
+//! that to store one parameter copy (standard DDP-simulation trick) while
+//! still executing the N per-worker forward/backward passes.
+
+use std::sync::Arc;
+
+use crate::config::Config;
+use crate::coordinator::buffer::UnboundBuffer;
+use crate::coordinator::multirail::MultiRail;
+use crate::runtime::{Engine, ModelRunner, PjrtReducer};
+use crate::trainer::bucket::Bucketizer;
+use crate::util::rng::Pcg;
+use crate::Result;
+
+/// End-to-end run configuration.
+#[derive(Debug, Clone)]
+pub struct E2EConfig {
+    pub model: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    /// Gradient fusion bucket size (elements).
+    pub bucket_elems: usize,
+    pub log_every: usize,
+    /// Reduce through the AOT Pallas kernel (vs portable rust loop).
+    pub use_pjrt_reducer: bool,
+    pub seed: u64,
+}
+
+impl Default for E2EConfig {
+    fn default() -> Self {
+        E2EConfig {
+            model: "tiny".into(),
+            steps: 50,
+            lr: 0.05,
+            momentum: 0.9,
+            bucket_elems: 4 * 1024 * 1024,
+            log_every: 10,
+            use_pjrt_reducer: true,
+            seed: 7,
+        }
+    }
+}
+
+/// One logged step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepLog {
+    pub step: usize,
+    /// Mean loss across workers.
+    pub loss: f32,
+    /// Modeled multi-rail communication time for this step (us).
+    pub comm_us: f64,
+    /// Wall-clock compute time for the N train-step executions (us).
+    pub compute_wall_us: f64,
+    pub failovers: usize,
+}
+
+/// Synthetic corpus: a deterministic zipf-ish token stream with local
+/// correlations (so the model has something learnable).
+pub fn synth_batch(rng: &mut Pcg, batch: usize, seq1: usize, vocab: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(batch * seq1);
+    for _ in 0..batch {
+        let mut prev: i32 = rng.below(vocab as u64) as i32;
+        for t in 0..seq1 {
+            // markov-ish: repeat/increment previous token often
+            let u = rng.f64();
+            let tok = if u < 0.35 {
+                prev
+            } else if u < 0.6 {
+                (prev + 1) % vocab as i32
+            } else {
+                let z = rng.f64();
+                ((z * z * (vocab as f64 - 1.0)) as i32).min(vocab as i32 - 1)
+            };
+            out.push(tok);
+            prev = tok;
+            let _ = t;
+        }
+    }
+    out
+}
+
+/// Run the end-to-end training loop; returns the per-step log.
+pub fn train_e2e(cfg: &Config, e2e: &E2EConfig) -> Result<Vec<StepLog>> {
+    let engine = Arc::new(Engine::new(&cfg.artifacts_dir)?);
+    let runner = ModelRunner::new(engine.clone(), &e2e.model)?;
+    runner.warmup()?;
+    let mut mr = MultiRail::new(cfg)?;
+    if e2e.use_pjrt_reducer {
+        mr = mr.with_reducer(Box::new(PjrtReducer::new(engine.clone())?));
+    }
+    let n = cfg.nodes;
+    let padded = runner.spec.padded;
+    let buckets = Bucketizer::new(padded, e2e.bucket_elems);
+
+    let mut params = runner.init_params()?;
+    let mut vel = vec![0.0f32; padded];
+    let mut rng = Pcg::new(e2e.seed);
+    let mut logs = Vec::with_capacity(e2e.steps);
+
+    for step in 0..e2e.steps {
+        // 1. per-worker forward/backward (real PJRT executions)
+        let t0 = std::time::Instant::now();
+        let mut losses = Vec::with_capacity(n);
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for w in 0..n {
+            let mut wrng = rng.split(w as u64 + 1);
+            let tokens = synth_batch(
+                &mut wrng,
+                runner.spec.batch,
+                runner.spec.seq_len + 1,
+                runner.spec.vocab,
+            );
+            let (loss, g) = runner.train_step(&params, &tokens)?;
+            losses.push(loss);
+            grads.push(g);
+        }
+        let compute_wall_us = t0.elapsed().as_secs_f64() * 1e6;
+
+        // 2. multi-rail allreduce, bucket by bucket (real bytes)
+        let mut buf = UnboundBuffer::new(std::mem::take(&mut grads));
+        let mut comm_us = 0.0;
+        let mut failovers = 0;
+        for w in &buckets.windows {
+            // carve a sub-buffer view via the shared window; MultiRail
+            // operates on full buffers, so allreduce the window by
+            // temporarily treating it as the op payload
+            let rep = mr.allreduce_window(&mut buf, *w)?;
+            comm_us += rep.total_us;
+            failovers += rep.failovers;
+        }
+        let mut reduced = buf.into_data();
+
+        // 3. average + fused Pallas SGD update (identical on all replicas)
+        let g_avg = {
+            let g0 = &mut reduced[0];
+            let inv = 1.0 / n as f32;
+            for v in g0.iter_mut() {
+                *v *= inv;
+            }
+            g0.clone()
+        };
+        let (p2, v2) = runner.sgd_update(&params, &g_avg, &vel, e2e.lr, e2e.momentum)?;
+        params = p2;
+        vel = v2;
+
+        // advance the data stream
+        rng = rng.split(0xABCD + step as u64);
+        let loss = losses.iter().sum::<f32>() / n as f32;
+        logs.push(StepLog { step, loss, comm_us, compute_wall_us, failovers });
+        if e2e.log_every > 0 && step % e2e.log_every == 0 {
+            crate::info!(
+                "step {step:4}  loss {loss:.4}  comm {:.1}ms  compute {:.0}ms",
+                comm_us / 1e3,
+                compute_wall_us / 1e3
+            );
+        }
+    }
+    Ok(logs)
+}

@@ -1,0 +1,21 @@
+//! Data-parallel training over Nezha (paper §5.3).
+//!
+//! * [`comm_profile`] — per-model allreduce size/frequency profiles
+//!   (Fig. 15) driving the application-level studies.
+//! * [`bucket`] — gradient bucketing/fusion for the real training loop.
+//! * [`ddp`] — the DDP iteration-time simulator behind Fig. 12/16/17.
+//! * [`e2e`] — the REAL end-to-end loop: AOT train step (PJRT) +
+//!   multi-rail allreduce with real gradient bytes + Pallas SGD update.
+//! * [`vtrain`] — the vTrain-style GPT-3 schedule replay (Table 3,
+//!   Fig. 18/19).
+
+pub mod bucket;
+pub mod comm_profile;
+pub mod ddp;
+pub mod e2e;
+pub mod vtrain;
+
+pub use comm_profile::CommProfile;
+pub use ddp::DdpSim;
+pub use e2e::{train_e2e, E2EConfig, StepLog};
+pub use vtrain::{GptModel, VtrainSim};

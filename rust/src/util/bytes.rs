@@ -1,0 +1,82 @@
+//! Byte-size formatting/parsing helpers ("64MB" <-> 67108864).
+
+/// Format bytes with binary units, matching the paper's axis labels.
+pub fn fmt_bytes(b: u64) -> String {
+    const KB: u64 = 1024;
+    const MB: u64 = 1024 * KB;
+    const GB: u64 = 1024 * MB;
+    if b >= GB && b % GB == 0 {
+        format!("{}GB", b / GB)
+    } else if b >= MB && b % MB == 0 {
+        format!("{}MB", b / MB)
+    } else if b >= KB && b % KB == 0 {
+        format!("{}KB", b / KB)
+    } else {
+        format!("{b}B")
+    }
+}
+
+/// Parse "64MB", "2kb", "512", "1GiB"-style sizes into bytes.
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let s = s.trim().to_ascii_lowercase();
+    let (num, mult) = if let Some(p) = s.strip_suffix("gib").or(s.strip_suffix("gb")).or(s.strip_suffix("g")) {
+        (p, 1u64 << 30)
+    } else if let Some(p) = s.strip_suffix("mib").or(s.strip_suffix("mb")).or(s.strip_suffix("m")) {
+        (p, 1u64 << 20)
+    } else if let Some(p) = s.strip_suffix("kib").or(s.strip_suffix("kb")).or(s.strip_suffix("k")) {
+        (p, 1u64 << 10)
+    } else if let Some(p) = s.strip_suffix("b") {
+        (p, 1)
+    } else {
+        (s.as_str(), 1)
+    };
+    num.trim().parse::<f64>().ok().map(|n| (n * mult as f64) as u64)
+}
+
+/// Format a microsecond latency with adaptive units.
+pub fn fmt_us(us: f64) -> String {
+    if us >= 1e6 {
+        format!("{:.2}s", us / 1e6)
+    } else if us >= 1e3 {
+        format!("{:.1}ms", us / 1e3)
+    } else {
+        format!("{us:.1}us")
+    }
+}
+
+/// GB/s throughput for `bytes` moved in `us` microseconds.
+pub fn gbps(bytes: u64, us: f64) -> f64 {
+    if us <= 0.0 {
+        return 0.0;
+    }
+    bytes as f64 / us / 1e3 // bytes/us = MB/s => /1e3 = GB/s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        for s in [512u64, 1024, 2048, 1 << 20, 64 << 20, 1 << 30] {
+            assert_eq!(parse_bytes(&fmt_bytes(s)), Some(s), "{s}");
+        }
+    }
+
+    #[test]
+    fn parse_variants() {
+        assert_eq!(parse_bytes("64MB"), Some(64 << 20));
+        assert_eq!(parse_bytes("2kb"), Some(2048));
+        assert_eq!(parse_bytes(" 512 "), Some(512));
+        assert_eq!(parse_bytes("1.5k"), Some(1536));
+        assert_eq!(parse_bytes("junk"), None);
+    }
+
+    #[test]
+    fn units() {
+        assert_eq!(fmt_bytes(2048), "2KB");
+        assert_eq!(fmt_bytes(3 << 20), "3MB");
+        assert_eq!(fmt_us(1500.0), "1.5ms");
+        assert!((gbps(1 << 30, 1e6) - 1.073).abs() < 0.01);
+    }
+}

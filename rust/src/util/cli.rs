@@ -1,0 +1,112 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `nezha <subcommand> [--flag value] [--switch] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, --key value options, bare switches and
+/// positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    args.switches.push(key.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Parse a byte size option like `--size 64MB`.
+    pub fn get_bytes(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(crate::util::bytes::parse_bytes)
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("bench --size 64MB --nodes 8 pos1 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.get("size"), Some("64MB"));
+        assert_eq!(a.get_usize("nodes", 4), 8);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn eq_form() {
+        let a = parse("run --lr=0.1 --steps=10");
+        assert_eq!(a.get_f64("lr", 0.0), 0.1);
+        assert_eq!(a.get_usize("steps", 0), 10);
+    }
+
+    #[test]
+    fn byte_sizes() {
+        let a = parse("x --size 2KB");
+        assert_eq!(a.get_bytes("size", 0), 2048);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("x --flag");
+        assert!(a.has("flag"));
+        assert!(a.get("flag").is_none());
+    }
+}

@@ -1,0 +1,35 @@
+//! Crate error type.
+
+/// Unified error for coordinator, runtime and substrate failures.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla/pjrt error: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("json parse error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("artifact `{0}` not found (run `make artifacts`)")]
+    MissingArtifact(String),
+
+    #[error("rail {0} failed and no healthy rail remains")]
+    AllRailsDown(usize),
+
+    #[error("topology error: {0}")]
+    Topology(String),
+
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error::Msg(m.into())
+    }
+}

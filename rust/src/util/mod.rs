@@ -1,0 +1,11 @@
+//! Support substrates built in-repo because the offline registry only
+//! carries the `xla` closure: RNG, stats, JSON, CLI, tables, logging.
+
+pub mod bytes;
+pub mod cli;
+pub mod error;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;
+pub mod table;

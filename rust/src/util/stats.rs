@@ -1,0 +1,175 @@
+//! Streaming statistics: Welford accumulator, percentiles, EMA, histograms.
+//!
+//! Used by the Timer (per-size allreduce cost tracking), the bench harness
+//! and the metric reports.
+
+/// Welford online mean/variance accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+}
+
+/// Exponential moving average with configurable smoothing.
+#[derive(Debug, Clone)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ema { alpha, value: None }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        });
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Percentile of a sample set (nearest-rank on a sorted copy).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+    s[rank.min(s.len() - 1)]
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { 0.0 } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+/// Power-of-two bucketed histogram keyed by byte size — mirrors the paper's
+/// Fig. 15 (allreduce count & size per epoch).
+#[derive(Debug, Clone, Default)]
+pub struct SizeHistogram {
+    /// bucket index = floor(log2(bytes)); value = (count, total_bytes)
+    buckets: std::collections::BTreeMap<u32, (u64, u64)>,
+}
+
+impl SizeHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, bytes: u64) {
+        let b = 63 - bytes.max(1).leading_zeros();
+        let e = self.buckets.entry(b).or_insert((0, 0));
+        e.0 += 1;
+        e.1 += bytes;
+    }
+
+    /// (bucket_lower_bound_bytes, count, total_bytes) rows, ascending.
+    pub fn rows(&self) -> Vec<(u64, u64, u64)> {
+        self.buckets.iter().map(|(&b, &(c, t))| (1u64 << b, c, t)).collect()
+    }
+
+    pub fn total_count(&self) -> u64 {
+        self.buckets.values().map(|v| v.0).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.buckets.values().map(|v| v.1).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.add(x);
+        }
+        assert!((w.mean() - 4.0).abs() < 1e-12);
+        let naive_var = xs.iter().map(|x| (x - 4.0) * (x - 4.0)).sum::<f64>() / 4.0;
+        assert!((w.var() - naive_var).abs() < 1e-12);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 10.0);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        for _ in 0..64 {
+            e.add(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_basic() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        let p50 = percentile(&xs, 50.0);
+        assert!((49.0..=51.0).contains(&p50));
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = SizeHistogram::new();
+        h.add(1024);
+        h.add(1500);
+        h.add(4096);
+        let rows = h.rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], (1024, 2, 2524));
+        assert_eq!(rows[1], (4096, 1, 4096));
+        assert_eq!(h.total_count(), 3);
+    }
+}

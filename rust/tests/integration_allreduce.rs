@@ -1,0 +1,159 @@
+//! Integration: multi-rail allreduce correctness and performance shape
+//! across policies, combos and node counts (real f32 payloads).
+
+use nezha::config::{Config, Policy};
+use nezha::coordinator::buffer::UnboundBuffer;
+use nezha::coordinator::collective::Algo;
+use nezha::coordinator::multirail::MultiRail;
+use nezha::net::topology::parse_combo;
+use nezha::util::rng::Pcg;
+
+fn cfg(combo: &str, nodes: usize, policy: Policy) -> Config {
+    Config {
+        nodes,
+        combo: parse_combo(combo).unwrap(),
+        policy,
+        deterministic: true,
+        ..Config::default()
+    }
+}
+
+fn random_buf(rng: &mut Pcg, nodes: usize, len: usize) -> (UnboundBuffer, Vec<f32>) {
+    let data: Vec<Vec<f32>> = (0..nodes)
+        .map(|_| (0..len).map(|_| (rng.range(-8, 8) as f32) * 0.25).collect())
+        .collect();
+    let expect: Vec<f32> = (0..len)
+        .map(|i| data.iter().map(|d| d[i]).sum())
+        .collect();
+    (UnboundBuffer::new(data), expect)
+}
+
+fn check(buf: &UnboundBuffer, expect: &[f32]) {
+    for n in 0..buf.nodes() {
+        for (i, e) in expect.iter().enumerate() {
+            let got = buf.node(n)[i];
+            assert!(
+                (got - e).abs() < 1e-4,
+                "node {n} elem {i}: {got} vs {e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn every_policy_every_combo_is_correct() {
+    let mut rng = Pcg::new(11);
+    for combo in ["tcp-tcp", "tcp-sharp", "tcp-glex"] {
+        for policy in [Policy::Nezha, Policy::Mrib, Policy::Mptcp, Policy::SingleRail] {
+            for nodes in [2usize, 4] {
+                let mut mr = MultiRail::new(&cfg(combo, nodes, policy)).unwrap();
+                for len in [100usize, 70_000] {
+                    let (mut buf, expect) = random_buf(&mut rng, nodes, len);
+                    mr.allreduce(&mut buf).unwrap();
+                    check(&buf, &expect);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn ring_chunked_is_correct_and_counts_match() {
+    let mut rng = Pcg::new(12);
+    let mut mr = MultiRail::new(&cfg("tcp-tcp", 4, Policy::Nezha))
+        .unwrap()
+        .with_algo(Algo::RingChunked { chunk_elems: 4096 });
+    let (mut buf, expect) = random_buf(&mut rng, 4, 100_000);
+    let rep = mr.allreduce(&mut buf).unwrap();
+    check(&buf, &expect);
+    assert!(rep.total_us > 0.0);
+}
+
+#[test]
+fn repeated_ops_deterministic_under_fixed_seed() {
+    let run = || {
+        let mut mr = MultiRail::new(&cfg("tcp-sharp", 4, Policy::Nezha)).unwrap();
+        let mut out = Vec::new();
+        for i in 0..20 {
+            let mut buf = UnboundBuffer::from_fn(4, 4096, |n, j| ((n + j + i) % 7) as f32);
+            out.push(mr.allreduce(&mut buf).unwrap().total_us);
+        }
+        out
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn heterogeneous_large_payloads_beat_best_single_rail() {
+    // 16MB payloads: Nezha TCP-SHARP must beat SHARP alone (paper Fig. 10)
+    let measure = |combo: &str, policy: Policy| -> f64 {
+        let mut mr = MultiRail::new(&cfg(combo, 8, policy)).unwrap();
+        let mut total = 0.0;
+        for i in 0..40 {
+            let mut buf = UnboundBuffer::from_fn(8, 1024, |n, j| ((n + j) % 5) as f32);
+            let t = mr.allreduce_scaled(&mut buf, 16384.0).unwrap().total_us;
+            if i >= 30 {
+                total += t;
+            }
+        }
+        total / 10.0
+    };
+    let sharp = measure("sharp", Policy::SingleRail);
+    let nezha = measure("tcp-sharp", Policy::Nezha);
+    assert!(
+        nezha < sharp,
+        "multi-rail {nezha} should beat single SHARP {sharp} at 16MB"
+    );
+}
+
+#[test]
+fn small_heterogeneous_payloads_do_not_regress_to_tcp() {
+    // 4KB: MRIB/MPTCP degrade toward TCP latency; Nezha stays RDMA-class
+    let one = |policy: Policy| -> f64 {
+        let mut mr = MultiRail::new(&cfg("tcp-sharp", 4, policy)).unwrap();
+        let mut t = 0.0;
+        for _ in 0..5 {
+            let mut buf = UnboundBuffer::from_fn(4, 1024, |n, j| ((n + j) % 5) as f32);
+            t = mr.allreduce_scaled(&mut buf, 4.0).unwrap().total_us;
+        }
+        t
+    };
+    let nezha = one(Policy::Nezha);
+    let mrib = one(Policy::Mrib);
+    assert!(nezha < 200.0, "Nezha 4KB hetero latency {nezha}us");
+    assert!(mrib > 900.0, "MRIB should pay the TCP straggler: {mrib}us");
+}
+
+#[test]
+fn mptcp_pays_slicing_overhead_at_scale() {
+    let one = |policy: Policy| -> f64 {
+        let mut mr = MultiRail::new(&cfg("tcp-tcp", 4, policy)).unwrap();
+        let mut t = 0.0;
+        for i in 0..35 {
+            let mut buf = UnboundBuffer::from_fn(4, 1024, |n, j| ((n + j) % 5) as f32);
+            let r = mr.allreduce_scaled(&mut buf, 65536.0).unwrap().total_us; // 64MB
+            if i >= 30 {
+                t = r;
+            }
+        }
+        t
+    };
+    let nezha = one(Policy::Nezha);
+    let mptcp = one(Policy::Mptcp);
+    // paper Table 1 / §4.3: slicing adds 18-27%
+    assert!(
+        mptcp > nezha * 1.1 && mptcp < nezha * 1.6,
+        "mptcp {mptcp} vs nezha {nezha}"
+    );
+}
+
+#[test]
+fn throughput_report_consistent() {
+    let mut mr = MultiRail::new(&cfg("tcp-tcp", 4, Policy::Nezha)).unwrap();
+    let mut buf = UnboundBuffer::from_fn(4, 1 << 20, |n, j| ((n + j) % 5) as f32);
+    let rep = mr.allreduce(&mut buf).unwrap();
+    assert_eq!(rep.bytes, 4 << 20);
+    let sum_rail: u64 = rep.per_rail.iter().map(|s| s.bytes).sum();
+    assert_eq!(sum_rail, rep.bytes, "rail shares must cover the payload");
+    assert!(rep.throughput_gbps() > 0.0);
+}

@@ -1,0 +1,138 @@
+//! Integration: the Control Module's paper-claimed behaviours — cold/hot
+//! thresholds (Eq. 6), τ filtering (Eq. 3), α convergence within 100
+//! iterations (paper §4.3), and allocation ratios by combo (Fig. 11).
+
+use nezha::config::{Config, Policy};
+use nezha::coordinator::buffer::UnboundBuffer;
+use nezha::coordinator::control::LoadBalancer;
+use nezha::coordinator::multirail::MultiRail;
+use nezha::net::topology::parse_combo;
+
+fn cfg(combo: &str, nodes: usize) -> Config {
+    Config {
+        nodes,
+        combo: parse_combo(combo).unwrap(),
+        policy: Policy::Nezha,
+        deterministic: true,
+        ..Config::default()
+    }
+}
+
+fn warm(mr: &mut MultiRail, bytes: u64, ops: usize) {
+    const ELEMS: usize = 1024;
+    for _ in 0..ops {
+        let mut buf = UnboundBuffer::from_fn(mr.fab.nodes, ELEMS, |n, i| ((n + i) % 7) as f32);
+        mr.allreduce_scaled(&mut buf, bytes as f64 / ELEMS as f64).unwrap();
+    }
+}
+
+#[test]
+fn cold_hot_threshold_in_paper_band() {
+    // paper Fig. 9: 256KB at 4 nodes, 128KB at 8 nodes for dual TCP
+    for (nodes, lo, hi) in [(4usize, 64u64 << 10, 512 << 10), (8, 32 << 10, 512 << 10)] {
+        let c = cfg("tcp-tcp", nodes);
+        let mr = MultiRail::new(&c).unwrap();
+        let mut lb = LoadBalancer::new(c.control.clone());
+        let th = lb.threshold_bytes(&mr.fab, &mr.timer, &[0, 1]);
+        assert!(
+            (lo..=hi).contains(&th),
+            "{nodes} nodes: threshold {th} outside [{lo},{hi}]"
+        );
+    }
+}
+
+#[test]
+fn convergence_within_100_iterations() {
+    // paper §4.3: "threshold search and coefficient convergence within the
+    // first 100 iterations"
+    let mut mr = MultiRail::new(&cfg("tcp-glex", 4)).unwrap();
+    let bytes = 16u64 << 20;
+    warm(&mut mr, bytes, 100);
+    match mr.partitioner.alphas(bytes) {
+        Some(alphas) => {
+            let sum: f64 = alphas.iter().map(|(_, a)| a).sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+            // converged alphas must equalize rail finish times within ~15%
+            let mut buf = UnboundBuffer::from_fn(4, 1024, |n, i| ((n + i) % 7) as f32);
+            let rep = mr.allreduce_scaled(&mut buf, bytes as f64 / 1024.0).unwrap();
+            let times: Vec<f64> = rep
+                .per_rail
+                .iter()
+                .filter(|s| s.bytes > 0)
+                .map(|s| s.time_us)
+                .collect();
+            assert_eq!(times.len(), 2);
+            let err = (times[0] - times[1]).abs() / times[0].max(times[1]);
+            assert!(err < 0.15, "scheduling error {err} (paper: within 9.3%)");
+        }
+        None => panic!("16MB on TCP-GLEX should be hot"),
+    }
+}
+
+#[test]
+fn tau_gates_partitioning_by_size() {
+    // TCP-SHARP: at 32KB throughput ratio >> 5 → cold; at 16MB the planes
+    // are comparable → hot
+    let mut mr = MultiRail::new(&cfg("tcp-sharp", 4)).unwrap();
+    warm(&mut mr, 32 << 10, 10);
+    warm(&mut mr, 16 << 20, 40);
+    assert!(mr.partitioner.alphas(32 << 10).is_none(), "32KB must stay cold");
+    assert!(mr.partitioner.alphas(16 << 20).is_some(), "16MB must go hot");
+}
+
+#[test]
+fn allocation_ratio_favors_rdma_and_varies_by_size() {
+    let mut mr = MultiRail::new(&cfg("tcp-glex", 4)).unwrap();
+    warm(&mut mr, 4 << 20, 60);
+    warm(&mut mr, 64 << 20, 60);
+    let a4 = mr
+        .partitioner
+        .alphas(4 << 20)
+        .unwrap()
+        .iter()
+        .find(|(r, _)| *r == 1)
+        .unwrap()
+        .1;
+    let a64 = mr
+        .partitioner
+        .alphas(64 << 20)
+        .unwrap()
+        .iter()
+        .find(|(r, _)| *r == 1)
+        .unwrap()
+        .1;
+    assert!(a4 > 0.5, "GLEX should carry the majority at 4MB: {a4}");
+    assert!(a64 > 0.5, "GLEX should carry the majority at 64MB: {a64}");
+    // paper Fig. 11: ratios are size-dependent, drifting toward the
+    // bandwidth ratio as setup amortizes
+    assert!((a4 - a64).abs() > 0.005 || (a4 - a64).abs() < 0.5);
+}
+
+#[test]
+fn timer_window_damps_outliers() {
+    let c = cfg("tcp-tcp", 4);
+    let mut mr = MultiRail::new(&c).unwrap();
+    // record a big outlier manually; planner estimates must not explode
+    warm(&mut mr, 8 << 20, 20);
+    mr.timer.record(0, 8 << 20, 1e9);
+    let mut buf = UnboundBuffer::from_fn(4, 1024, |n, i| ((n + i) % 7) as f32);
+    let rep = mr.allreduce_scaled(&mut buf, (8 << 20) as f64 / 1024.0).unwrap();
+    assert!(rep.total_us < 100_000.0);
+}
+
+#[test]
+fn static_vs_adaptive_core_allocation() {
+    use nezha::net::cpu_pool::{AllocPolicy, CpuPool, Phase};
+    use nezha::net::protocol::ProtoKind;
+    // paper §2.3.2: static equal partitioning starves scalable protocols
+    let mut stat = CpuPool::new(52.0, AllocPolicy::StaticEqual);
+    let mut adap = CpuPool::new(52.0, AllocPolicy::Adaptive);
+    for p in [&mut stat, &mut adap] {
+        p.register(ProtoKind::Tcp);
+        p.register(ProtoKind::Glex);
+        p.register(ProtoKind::Sharp);
+    }
+    let g_static = stat.cores_for(ProtoKind::Glex, Phase::Computation);
+    let g_adaptive = adap.cores_for(ProtoKind::Glex, Phase::Computation);
+    assert!(g_adaptive > g_static, "{g_adaptive} vs {g_static}");
+}

@@ -1,0 +1,149 @@
+//! Integration: fault tolerance (paper §4.4 / Fig. 8) — detection +
+//! migration under the 200 ms budget, payload integrity across failovers,
+//! re-admission after recovery, and behaviour when all rails die.
+
+use nezha::config::{Config, Policy};
+use nezha::coordinator::buffer::UnboundBuffer;
+use nezha::coordinator::multirail::MultiRail;
+use nezha::net::fault::FaultSchedule;
+use nezha::net::topology::parse_combo;
+
+fn cfg(combo: &str, policy: Policy) -> Config {
+    Config {
+        nodes: 4,
+        combo: parse_combo(combo).unwrap(),
+        policy,
+        deterministic: true,
+        ..Config::default()
+    }
+}
+
+fn big_buf() -> (UnboundBuffer, Vec<f32>) {
+    let nodes = 4;
+    let len = 1 << 20; // 4MB
+    let buf = UnboundBuffer::from_fn(nodes, len, |n, i| ((n * 3 + i) % 11) as f32);
+    let expect = (0..len)
+        .map(|i| (0..nodes).map(|n| ((n * 3 + i) % 11) as f32).sum())
+        .collect();
+    (buf, expect)
+}
+
+fn check(buf: &UnboundBuffer, expect: &[f32]) {
+    for n in 0..buf.nodes() {
+        for i in (0..expect.len()).step_by(4097) {
+            assert_eq!(buf.node(n)[i], expect[i], "node {n} elem {i}");
+        }
+    }
+}
+
+#[test]
+fn fig8_scenario_failover_and_recovery() {
+    let mut mr = MultiRail::new(&cfg("tcp-tcp", Policy::Nezha))
+        .unwrap()
+        .with_faults(FaultSchedule::fig8());
+    const MIN: f64 = 60.0 * 1e6;
+    let mut failovers = 0;
+    // 8MB modeled ops on small real buffers (timing is what matters here;
+    // numerics-under-failover is covered by the tests below)
+    while mr.fab.now_us() < 5.5 * MIN {
+        let mut buf = UnboundBuffer::from_fn(4, 1024, |n, i| ((n * 3 + i) % 11) as f32);
+        let rep = mr.allreduce_scaled(&mut buf, 8192.0).unwrap();
+        failovers += rep.failovers;
+        let expect: f32 = (0..4).map(|n| ((n * 3 + 9) % 11) as f32).sum();
+        assert_eq!(buf.node(0)[9], expect);
+    }
+    // two fault windows -> at least two failovers (one per window)
+    assert!(failovers >= 2, "failovers {failovers}");
+    // every recovery within the paper's 200ms budget
+    for ev in &mr.exceptions.events {
+        assert!(ev.recovery_us < 200_000.0, "{ev:?}");
+        assert_eq!(ev.failed_rail, 1);
+        assert_eq!(ev.takeover_rail, 0);
+    }
+    // rail 1 must be back in service after minute 5
+    let mut buf = UnboundBuffer::from_fn(4, 1024, |n, i| ((n + i) % 7) as f32);
+    let rep = mr.allreduce_scaled(&mut buf, 8192.0).unwrap();
+    assert_eq!(
+        rep.per_rail.iter().filter(|s| s.bytes > 0).count(),
+        2,
+        "rail 1 not re-admitted"
+    );
+}
+
+#[test]
+fn failover_charges_detection_plus_migration() {
+    let c = cfg("tcp-tcp", Policy::Nezha);
+    let budget = c.control.detect_timeout_us + c.control.migrate_cost_us;
+    let mut mr = MultiRail::new(&c)
+        .unwrap()
+        .with_faults(FaultSchedule::none().with(1, 0.0, 1e12));
+    let (mut buf, expect) = big_buf();
+    let rep = mr.allreduce(&mut buf).unwrap();
+    check(&buf, &expect);
+    assert_eq!(rep.failovers, 1);
+    // op must be slower than a clean op by at least the recovery budget
+    let mut clean = MultiRail::new(&cfg("tcp", Policy::SingleRail)).unwrap();
+    let (mut buf2, _) = big_buf();
+    let t_clean = clean.allreduce(&mut buf2).unwrap().total_us;
+    assert!(rep.total_us > t_clean + budget * 0.9, "{} vs {}", rep.total_us, t_clean);
+}
+
+#[test]
+fn mptcp_failover_also_recovers() {
+    let mut mr = MultiRail::new(&cfg("tcp-tcp", Policy::Mptcp))
+        .unwrap()
+        .with_faults(FaultSchedule::none().with(0, 0.0, 1e12));
+    let (mut buf, expect) = big_buf();
+    let rep = mr.allreduce(&mut buf).unwrap();
+    check(&buf, &expect);
+    assert_eq!(rep.failovers, 1);
+}
+
+#[test]
+fn all_rails_down_surfaces_error() {
+    let mut mr = MultiRail::new(&cfg("tcp-tcp", Policy::Nezha))
+        .unwrap()
+        .with_faults(
+            FaultSchedule::none().with(0, 0.0, 1e12).with(1, 0.0, 1e12),
+        );
+    let (mut buf, _) = big_buf();
+    assert!(mr.allreduce(&mut buf).is_err());
+}
+
+#[test]
+fn flapping_rail_multiple_failovers() {
+    // rail 1 flaps: down in many short windows; every op must complete
+    let mut faults = FaultSchedule::none();
+    for k in 0..10 {
+        let start = 0.3e6 * (2 * k + 1) as f64;
+        faults = faults.with(1, start, start + 0.2e6);
+    }
+    let mut mr = MultiRail::new(&cfg("tcp-tcp", Policy::Nezha))
+        .unwrap()
+        .with_faults(faults);
+    let mut total_failovers = 0;
+    for _ in 0..40 {
+        // 64MB modeled ops (~150ms virtual) so the run spans many windows
+        let mut buf = UnboundBuffer::from_fn(4, 1024, |n, i| ((n * 3 + i) % 11) as f32);
+        let rep = mr.allreduce_scaled(&mut buf, 65536.0).unwrap();
+        total_failovers += rep.failovers;
+        let expect: f32 = (0..4).map(|n| ((n * 3 + 5) % 11) as f32).sum();
+        assert_eq!(buf.node(3)[5], expect);
+    }
+    assert!(total_failovers >= 2, "flapping produced {total_failovers} failovers");
+}
+
+#[test]
+fn sharp_rail_failure_falls_back_to_tcp() {
+    let mut mr = MultiRail::new(&cfg("tcp-sharp", Policy::Nezha))
+        .unwrap()
+        .with_faults(FaultSchedule::none().with(1, 0.0, 1e12));
+    // small payload would cold-start on SHARP; its failure must migrate
+    // the window to TCP
+    let mut buf = UnboundBuffer::from_fn(4, 1024, |n, i| ((n + i) % 5) as f32);
+    let rep = mr.allreduce(&mut buf).unwrap();
+    assert_eq!(rep.failovers, 1);
+    assert_eq!(mr.fab.healthy_rails(), vec![0]);
+    let expect: f32 = (0..4).map(|n| ((n + 9) % 5) as f32).sum();
+    assert_eq!(buf.node(1)[9], expect);
+}

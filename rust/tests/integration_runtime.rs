@@ -1,0 +1,109 @@
+//! Integration: PJRT runtime over the real AOT artifacts.
+//!
+//! Requires `make artifacts`. Validates the full python→HLO-text→rust
+//! round trip: train step numerics (loss ≈ ln V at init, finite grads),
+//! the Pallas add_pair kernel vs the portable reducer, and a short
+//! real training loop that must reduce the loss.
+
+use std::sync::Arc;
+
+use nezha::coordinator::collective::{Reducer, RustReducer};
+use nezha::runtime::{Engine, ModelRunner, PjrtReducer};
+use nezha::util::rng::Pcg;
+
+fn engine() -> Option<Arc<Engine>> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Arc::new(Engine::new("artifacts").unwrap()))
+}
+
+fn synth_tokens(rng: &mut Pcg, n: usize, vocab: usize) -> Vec<i32> {
+    // skewed synthetic "language": zipf-ish token draws
+    (0..n)
+        .map(|_| {
+            let u = rng.f64();
+            ((u * u * (vocab as f64 - 1.0)) as i32).min(vocab as i32 - 1)
+        })
+        .collect()
+}
+
+#[test]
+fn add_pair_kernel_matches_rust_reducer() {
+    let Some(engine) = engine() else { return };
+    let mut pjrt = PjrtReducer::new(engine).unwrap();
+    let mut rust = RustReducer;
+    let mut rng = Pcg::new(1);
+    // cover: tail-only, one kernel block + tail, multi-block
+    for len in [1000usize, 65536, 65536 + 1234, 262144 + 65536 + 7] {
+        let mut a: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..len).map(|_| rng.normal() as f32).collect();
+        let mut a2 = a.clone();
+        pjrt.add_into(&mut a, &b);
+        rust.add_into(&mut a2, &b);
+        assert_eq!(a, a2, "len {len}");
+    }
+    assert!(pjrt.kernel_elems > 0, "Pallas kernel never dispatched");
+}
+
+#[test]
+fn train_step_initial_loss_near_uniform() {
+    let Some(engine) = engine() else { return };
+    let runner = ModelRunner::new(engine, "tiny").unwrap();
+    let params = runner.init_params().unwrap();
+    let mut rng = Pcg::new(2);
+    let tokens = synth_tokens(&mut rng, runner.batch_elems(), runner.spec.vocab);
+    let (loss, grads) = runner.train_step(&params, &tokens).unwrap();
+    let expect = (runner.spec.vocab as f32).ln();
+    assert!(
+        (loss - expect).abs() < 1.5,
+        "initial loss {loss}, ln(V) = {expect}"
+    );
+    assert!(grads.iter().all(|g| g.is_finite()));
+    assert!(grads.iter().any(|g| *g != 0.0));
+    // padding region must stay zero-gradient
+    for g in &grads[runner.spec.n_params..] {
+        assert_eq!(*g, 0.0);
+    }
+}
+
+#[test]
+fn sgd_update_moves_params_against_gradient() {
+    let Some(engine) = engine() else { return };
+    let runner = ModelRunner::new(engine, "tiny").unwrap();
+    let n = runner.spec.padded;
+    let params = vec![1.0f32; n];
+    let grads = vec![0.5f32; n];
+    let vel = vec![0.0f32; n];
+    let (p2, v2) = runner.sgd_update(&params, &grads, &vel, 0.1, 0.9).unwrap();
+    for i in (0..n).step_by(n / 7) {
+        assert!((p2[i] - (1.0 - 0.05)).abs() < 1e-6);
+        assert!((v2[i] - 0.5).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn short_training_run_decreases_loss() {
+    let Some(engine) = engine() else { return };
+    let runner = ModelRunner::new(engine, "tiny").unwrap();
+    let mut params = runner.init_params().unwrap();
+    let mut vel = vec![0.0f32; runner.spec.padded];
+    let mut rng = Pcg::new(3);
+    let tokens = synth_tokens(&mut rng, runner.batch_elems(), runner.spec.vocab);
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..8 {
+        let (loss, grads) = runner.train_step(&params, &tokens).unwrap();
+        first.get_or_insert(loss);
+        last = loss;
+        let (p2, v2) = runner.sgd_update(&params, &grads, &vel, 0.05, 0.9).unwrap();
+        params = p2;
+        vel = v2;
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first - 0.3,
+        "loss did not decrease: {first} -> {last}"
+    );
+}

@@ -1,0 +1,217 @@
+//! Property-based tests over the coordinator invariants, driven by a
+//! seeded PCG fuzzer (proptest is unavailable offline; this is the same
+//! generate-and-check loop with explicit seeds, so failures reproduce).
+
+use nezha::coordinator::buffer::{UnboundBuffer, Window};
+use nezha::coordinator::collective::ring::ring_numerics;
+use nezha::coordinator::collective::{Reducer, RustReducer};
+use nezha::coordinator::control::load_balancer::LoadBalancer;
+use nezha::coordinator::control::Timer;
+use nezha::config::ControlConfig;
+use nezha::net::cpu_pool::CpuPool;
+use nezha::net::protocol::ProtoKind;
+use nezha::net::simnet::Fabric;
+use nezha::net::topology::ClusterSpec;
+use nezha::util::json::Json;
+use nezha::util::rng::Pcg;
+
+const CASES: usize = 60;
+
+/// Property: split_fractions always partitions the window exactly —
+/// contiguous, non-overlapping, total length preserved.
+#[test]
+fn prop_window_split_partitions_exactly() {
+    let mut rng = Pcg::new(1001);
+    for case in 0..CASES {
+        let len = 1 + rng.below(100_000) as usize;
+        let off = rng.below(1000) as usize;
+        let k = 1 + rng.below(6) as usize;
+        let mut fracs: Vec<f64> = (0..k).map(|_| rng.f64().max(1e-6)).collect();
+        let s: f64 = fracs.iter().sum();
+        for f in &mut fracs {
+            *f /= s;
+        }
+        let w = Window::new(off, len);
+        let parts = w.split_fractions(&fracs);
+        assert_eq!(parts.len(), k, "case {case}");
+        let mut cursor = off;
+        for p in &parts {
+            assert_eq!(p.offset, cursor, "case {case}: gap/overlap");
+            cursor = p.end();
+        }
+        assert_eq!(cursor, w.end(), "case {case}: length not preserved");
+    }
+}
+
+/// Property: ring allreduce numerics == per-element sum over nodes, for
+/// random node counts, lengths and windows.
+#[test]
+fn prop_ring_numerics_equals_nway_sum() {
+    let mut rng = Pcg::new(1002);
+    for case in 0..CASES {
+        let nodes = 2 + rng.below(7) as usize;
+        let len = 1 + rng.below(5000) as usize;
+        let data: Vec<Vec<f32>> = (0..nodes)
+            .map(|_| (0..len).map(|_| rng.range(-64, 64) as f32 * 0.5).collect())
+            .collect();
+        let expect: Vec<f32> = (0..len).map(|i| data.iter().map(|d| d[i]).sum()).collect();
+        let mut buf = UnboundBuffer::new(data);
+        // random sub-window
+        let wo = rng.below(len as u64) as usize;
+        let wl = 1 + rng.below((len - wo) as u64) as usize;
+        let w = Window::new(wo, wl);
+        ring_numerics(&mut buf, w, &mut RustReducer);
+        for n in 0..nodes {
+            for i in wo..wo + wl {
+                assert_eq!(buf.node(n)[i], expect[i], "case {case} node {n} elem {i}");
+            }
+        }
+    }
+}
+
+/// Property: reducer n-way fold is order-independent for integral f32
+/// values (exact adds, no rounding).
+#[test]
+fn prop_reduce_order_independent_for_integers() {
+    let mut rng = Pcg::new(1003);
+    for _ in 0..CASES {
+        let n = 2 + rng.below(6) as usize;
+        let len = 1 + rng.below(3000) as usize;
+        let srcs: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.range(-100, 100) as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = srcs.iter().map(|v| v.as_slice()).collect();
+        let mut fwd = vec![0.0f32; len];
+        RustReducer.reduce_n(&mut fwd, &refs);
+        let rev_refs: Vec<&[f32]> = srcs.iter().rev().map(|v| v.as_slice()).collect();
+        let mut rev = vec![0.0f32; len];
+        RustReducer.reduce_n(&mut rev, &rev_refs);
+        assert_eq!(fwd, rev);
+    }
+}
+
+/// Property: Load Balancer plans always produce normalized, non-negative
+/// shares over healthy rails only, for random sizes and feedback.
+#[test]
+fn prop_balancer_shares_valid_under_random_feedback() {
+    let mut rng = Pcg::new(1004);
+    for case in 0..CASES {
+        let rails = ClusterSpec::local()
+            .build_rails(&[ProtoKind::Tcp, ProtoKind::Glex])
+            .unwrap();
+        let fab = Fabric::new(4, rails, CpuPool::default(), case as u64).deterministic();
+        let timer = Timer::new(10);
+        let mut lb = LoadBalancer::new(ControlConfig::default());
+        for _ in 0..30 {
+            let bytes = 1u64 << (10 + rng.below(17));
+            let plan = lb.plan(&fab, &timer, &[0, 1], bytes);
+            match &plan {
+                nezha::coordinator::control::Plan::Cold { rail } => {
+                    assert!(*rail < 2);
+                }
+                nezha::coordinator::control::Plan::Hot { shares } => {
+                    let sum: f64 = shares.iter().map(|(_, a)| a).sum();
+                    assert!((sum - 1.0).abs() < 1e-6, "case {case}: sum {sum}");
+                    assert!(shares.iter().all(|(r, a)| *r < 2 && *a >= 0.0));
+                }
+            }
+            // random (possibly nonsense) feedback must never corrupt state
+            let t0 = rng.range_f64(1.0, 1e6);
+            let t1 = rng.range_f64(1.0, 1e6);
+            lb.feedback(&fab, bytes, &[(0, bytes / 2, t0), (1, bytes / 2, t1)]);
+        }
+    }
+}
+
+/// Property: Timer window averages equal the arithmetic mean of the
+/// recorded window, for random windows and sequences.
+#[test]
+fn prop_timer_window_average() {
+    let mut rng = Pcg::new(1005);
+    for _ in 0..CASES {
+        let window = 1 + rng.below(20) as usize;
+        let mut t = Timer::new(window);
+        let xs: Vec<f64> = (0..window).map(|_| rng.range_f64(1.0, 1e5)).collect();
+        for &x in &xs {
+            t.record(0, 4096, x);
+        }
+        let mean: f64 = xs.iter().sum::<f64>() / window as f64;
+        let got = t.cost(0, 4096).unwrap();
+        assert!((got - mean).abs() / mean < 1e-9);
+    }
+}
+
+/// Property: JSON emit→parse round-trips arbitrary trees.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Pcg, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f64() < 0.5),
+            2 => Json::Num((rng.range(-100000, 100000) as f64) / 8.0),
+            3 => {
+                let len = rng.below(12) as usize;
+                let mut s: String = (0..len)
+                    .map(|_| char::from_u32(32 + rng.below(90) as u32).unwrap_or('x'))
+                    .collect();
+                let extra = rng.below(3) as usize;
+                s.extend("\"\\\n".chars().take(extra));
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Pcg::new(1006);
+    for case in 0..CASES {
+        let j = random_json(&mut rng, 3);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e} on {text}"));
+        assert_eq!(back, j, "case {case}");
+    }
+}
+
+/// Property: fabric timing is monotone in payload size on every protocol
+/// (no negative or inverted latencies anywhere in the model).
+#[test]
+fn prop_fabric_monotone_in_size() {
+    let mut rng = Pcg::new(1007);
+    for kind in [ProtoKind::Tcp, ProtoKind::Sharp, ProtoKind::Glex] {
+        let rails = ClusterSpec::local().build_rails(&[kind]).unwrap();
+        let mut fab = Fabric::new(4, rails, CpuPool::default(), 9).deterministic();
+        for _ in 0..CASES {
+            let a = rng.range_f64(1.0, 1e8);
+            let b = a * rng.range_f64(1.0, 10.0);
+            let ta = fab.transfer(0, a).unwrap();
+            let tb = fab.transfer(0, b).unwrap();
+            assert!(tb >= ta, "{kind:?}: T({b})={tb} < T({a})={ta}");
+            assert!(ta > 0.0);
+        }
+    }
+}
+
+/// Property: bucketizer covers the flat vector exactly, in order, for
+/// random parameter layouts.
+#[test]
+fn prop_bucketizer_partition() {
+    use nezha::trainer::bucket::Bucketizer;
+    let mut rng = Pcg::new(1008);
+    for case in 0..CASES {
+        let k = 1 + rng.below(20) as usize;
+        let sizes: Vec<usize> = (0..k).map(|_| 1 + rng.below(50_000) as usize).collect();
+        let total: usize = sizes.iter().sum();
+        let cap = 1 + rng.below(60_000) as usize;
+        let b = Bucketizer::aligned(&sizes, cap);
+        assert_eq!(b.total(), total, "case {case}");
+        let mut off = 0;
+        for w in &b.windows {
+            assert_eq!(w.offset, off, "case {case}: non-contiguous");
+            assert!(w.len > 0);
+            off = w.end();
+        }
+    }
+}
