@@ -1,14 +1,17 @@
 //! `cargo bench --bench bench_allreduce` — end-to-end policy comparison
 //! across the paper's payload sweep, on homogeneous and heterogeneous
 //! combos: the condensed version of Figs. 9/10 plus Table 1, with
-//! wall-clock cost of the simulation itself.
+//! wall-clock cost of the simulation itself — plus the collective-planner
+//! vs fixed-dispatch sweep (64 KiB → 256 MiB), emitted in the bench
+//! harness's JSON result format.
 
-use nezha::bench::harness::bench_wall;
-use nezha::config::{Config, Policy};
+use nezha::bench::harness::{bench_wall, planner_mode_latency};
+use nezha::config::{Config, PlannerMode, Policy};
 use nezha::coordinator::buffer::UnboundBuffer;
 use nezha::coordinator::multirail::MultiRail;
-use nezha::net::topology::parse_combo;
+use nezha::net::topology::{parse_combo, ClusterSpec};
 use nezha::util::bytes::fmt_bytes;
+use nezha::util::json::Json;
 use nezha::util::table::Table;
 
 fn measure(combo: &str, nodes: usize, policy: Policy, bytes: u64) -> nezha::Result<f64> {
@@ -20,18 +23,55 @@ fn measure(combo: &str, nodes: usize, policy: Policy, bytes: u64) -> nezha::Resu
         ..Config::default()
     };
     let mut mr = MultiRail::new(&cfg)?;
-    const ELEMS: usize = 1024;
-    let elem_bytes = bytes as f64 / ELEMS as f64;
     let warm = if policy == Policy::Nezha { 30 } else { 3 };
-    let mut lat = 0.0;
-    for i in 0..warm + 5 {
-        let mut buf = UnboundBuffer::from_fn(nodes, ELEMS, |n, j| ((n + j) % 7) as f32);
-        let rep = mr.allreduce_scaled(&mut buf, elem_bytes)?;
-        if i >= warm {
-            lat += rep.total_us;
+    nezha::bench::mean_allreduce_us(&mut mr, bytes, warm, 5)
+}
+
+/// Planner-vs-fixed-dispatch sweep, 64 KiB → 256 MiB, on the flat local
+/// testbed and the grouped pods topology. Emits one JSON document in the
+/// bench result format (`util::json`).
+fn planner_vs_fixed_json() -> nezha::Result<()> {
+    println!("\n=== collective planner vs fixed dispatch (JSON) ===");
+    let cases: [(&str, ClusterSpec, &str, usize); 2] = [
+        ("local", ClusterSpec::local(), "tcp-tcp", 8),
+        ("pods", ClusterSpec::pods(4), "tcp-tcp-tcp-glex", 16),
+    ];
+    let sizes: [u64; 7] = [
+        64 << 10,
+        256 << 10,
+        1 << 20,
+        8 << 20,
+        32 << 20,
+        64 << 20,
+        256 << 20,
+    ];
+    let mut rows = Vec::new();
+    for (cluster_name, cluster, combo, nodes) in &cases {
+        for &bytes in &sizes {
+            let (fixed_us, _) =
+                planner_mode_latency(cluster, combo, *nodes, PlannerMode::Flat, bytes, 30, 5)?;
+            let (planner_us, plan) =
+                planner_mode_latency(cluster, combo, *nodes, PlannerMode::Auto, bytes, 30, 5)?;
+            rows.push(Json::obj(vec![
+                ("cluster", Json::from(*cluster_name)),
+                ("combo", Json::from(*combo)),
+                ("nodes", Json::from(*nodes)),
+                ("bytes", Json::from(bytes as f64)),
+                ("size", Json::from(fmt_bytes(bytes))),
+                ("fixed_us", Json::from(fixed_us)),
+                ("planner_us", Json::from(planner_us)),
+                ("speedup", Json::from(fixed_us / planner_us)),
+                ("plan", Json::from(plan)),
+            ]));
         }
     }
-    Ok(lat / 5.0)
+    let doc = Json::obj(vec![
+        ("bench", Json::from("planner_vs_fixed_dispatch")),
+        ("policy", Json::from("nezha")),
+        ("results", Json::Arr(rows)),
+    ]);
+    println!("{}", doc.to_string());
+    Ok(())
 }
 
 fn main() -> nezha::Result<()> {
@@ -73,5 +113,6 @@ fn main() -> nezha::Result<()> {
     println!("simulated ops/sec: {:.0}", 1e6 / s.mean_us);
     t.row(s.row());
     t.print();
-    Ok(())
+
+    planner_vs_fixed_json()
 }

@@ -31,8 +31,8 @@ fn main() -> nezha::Result<()> {
     thr.push(("rust_reducer GB/s".into(), (N * 4) as f64 / s.mean_us / 1e3));
     t.row(s.row());
 
-    // 2. AOT Pallas add_pair kernel (if artifacts built)
-    if std::path::Path::new("artifacts/manifest.json").exists() {
+    // 2. AOT Pallas add_pair kernel (pjrt feature + artifacts built)
+    if cfg!(feature = "pjrt") && std::path::Path::new("artifacts/manifest.json").exists() {
         let engine = Arc::new(Engine::new("artifacts")?);
         let mut pjrt = PjrtReducer::new(engine)?;
         let mut dst = vec![1.0f32; 262144];

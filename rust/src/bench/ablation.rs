@@ -1,13 +1,17 @@
 //! Ablation studies over Nezha's design choices (DESIGN.md §5 extras):
 //! the divergence tolerance τ, the cross-rail sync-overhead charge, the
-//! gradient-descent step η, and the Timer window.
+//! gradient-descent step η, the Timer window, and the collective planner
+//! vs the seed's fixed flat-ring dispatch.
 //!
 //! Run: `cargo run --release -- fig ablate`
 
-use crate::config::{Config, Policy};
+use crate::config::{Config, PlannerMode, Policy};
 use crate::coordinator::buffer::UnboundBuffer;
 use crate::coordinator::multirail::MultiRail;
 use crate::net::protocol::ProtoKind;
+use crate::net::topology::{parse_combo, ClusterSpec};
+use crate::trainer::bucket::Bucketizer;
+use crate::util::bytes::fmt_bytes;
 use crate::util::table::Table;
 use crate::Result;
 
@@ -26,16 +30,7 @@ fn mk(combo: &[ProtoKind], nodes: usize, patch: impl Fn(&mut Config)) -> Result<
 }
 
 fn mean_lat(mr: &mut MultiRail, bytes: u64, warm: usize, reps: usize) -> Result<f64> {
-    let elem_bytes = bytes as f64 / ELEMS as f64;
-    let mut total = 0.0;
-    for i in 0..warm + reps {
-        let mut buf = UnboundBuffer::from_fn(mr.fab.nodes, ELEMS, |n, j| ((n + j) % 7) as f32);
-        let t = mr.allreduce_scaled(&mut buf, elem_bytes)?.total_us;
-        if i >= warm {
-            total += t;
-        }
-    }
-    Ok(total / reps as f64)
+    crate::bench::harness::mean_allreduce_us(mr, bytes, warm, reps)
 }
 
 /// τ ablation: with τ too small Nezha never splits (loses the large-
@@ -136,12 +131,71 @@ pub fn ablate_alloc() -> Result<()> {
     Ok(())
 }
 
+/// Collective planner ablation: the topology-aware planner against the
+/// seed's fixed flat-ring dispatch, on the paper's flat local testbed and
+/// on the grouped 16-node × 4-rail pods topology where the hierarchical
+/// two-level schedule engages.
+pub fn ablate_planner() -> Result<()> {
+    println!("\n=== Ablation: collective planner vs fixed flat-ring dispatch ===");
+    let mut t = Table::new(&["topology", "size", "fixed (us)", "planner (us)", "gain", "plan"]);
+    let cases: [(&str, ClusterSpec, &str, usize); 2] = [
+        ("local 8n x 2r", ClusterSpec::local(), "tcp-tcp", 8),
+        ("pods 16n x 4r", ClusterSpec::pods(4), "tcp-tcp-tcp-glex", 16),
+    ];
+    for (label, cluster, combo, nodes) in cases {
+        for &bytes in &[512u64 << 10, 8 << 20, 64 << 20] {
+            let run = |mode| {
+                crate::bench::harness::planner_mode_latency(
+                    &cluster, combo, nodes, mode, bytes, 30, 5,
+                )
+            };
+            let (fixed, _) = run(PlannerMode::Flat)?;
+            let (auto, plan) = run(PlannerMode::Auto)?;
+            t.row(vec![
+                label.into(),
+                fmt_bytes(bytes),
+                format!("{fixed:.0}"),
+                format!("{auto:.0}"),
+                format!("{:+.0}%", (fixed / auto - 1.0) * 100.0),
+                plan,
+            ]);
+        }
+    }
+    t.print();
+
+    // bucket plan annotations: what a VGG-sized flat gradient's fusion
+    // buckets would each run (pods topology, 4MB buckets)
+    let cfg = Config {
+        cluster: ClusterSpec::pods(4),
+        nodes: 16,
+        combo: parse_combo("tcp-tcp-tcp-glex")?,
+        policy: Policy::Nezha,
+        deterministic: true,
+        ..Config::default()
+    };
+    let mut mr = MultiRail::new(&cfg)?;
+    let buckets = Bucketizer::new(32 << 20, 8 << 20); // 128MB grads, 32MB buckets
+    println!("\nbucket plan annotations (128MB flat gradient, 32MB fusion buckets):");
+    for bp in buckets.annotate(&mut mr, 4.0) {
+        println!(
+            "  [{:>9} elems @ {:>9}] multirail={} plan: {}",
+            bp.window.len,
+            bp.window.offset,
+            bp.is_multirail(),
+            bp.plan.as_ref().map(|p| p.label()).unwrap_or_else(|| "-".into()),
+        );
+    }
+    println!("(two-level engages on the pods topology; flat clusters keep seed behaviour)");
+    Ok(())
+}
+
 /// Run all ablations.
 pub fn run_all() -> Result<()> {
     ablate_tau()?;
     ablate_eta()?;
     ablate_timer_window()?;
-    ablate_alloc()
+    ablate_alloc()?;
+    ablate_planner()
 }
 
 #[cfg(test)]

@@ -1,9 +1,70 @@
 //! Wall-clock bench harness (criterion is unavailable offline): warmup,
-//! fixed-iteration measurement, mean/percentile reporting.
+//! fixed-iteration measurement, mean/percentile reporting — plus the
+//! shared modeled-latency measurement loop used by the benches, the
+//! ablations and the planner tests.
 
 use std::time::Instant;
 
+use crate::config::{Config, PlannerMode, Policy};
+use crate::coordinator::buffer::UnboundBuffer;
+use crate::coordinator::multirail::MultiRail;
+use crate::net::topology::{parse_combo, ClusterSpec};
 use crate::util::stats::{mean, percentile};
+
+/// Mean modeled completion latency (us) of `reps` allreduces of `bytes`
+/// after `warm` warmup ops, on 1024-element scaled buffers.
+pub fn mean_allreduce_us(
+    mr: &mut MultiRail,
+    bytes: u64,
+    warm: usize,
+    reps: usize,
+) -> crate::Result<f64> {
+    const ELEMS: usize = 1024;
+    let elem_bytes = bytes as f64 / ELEMS as f64;
+    let mut total = 0.0;
+    for i in 0..warm + reps {
+        let mut buf =
+            UnboundBuffer::from_fn(mr.fab.nodes, ELEMS, |n, j| ((n + j) % 7) as f32);
+        let t = mr.allreduce_scaled(&mut buf, elem_bytes)?.total_us;
+        if i >= warm {
+            total += t;
+        }
+    }
+    Ok(total / reps.max(1) as f64)
+}
+
+/// Mean Nezha-policy latency of `bytes`-sized allreduces under a planner
+/// mode on an explicit cluster, plus the executed plan's label (`"-"`
+/// under fixed dispatch, where no planner schedule runs). Shared by the
+/// planner-vs-fixed bench sweep and the planner ablation.
+#[allow(clippy::too_many_arguments)]
+pub fn planner_mode_latency(
+    cluster: &ClusterSpec,
+    combo: &str,
+    nodes: usize,
+    mode: PlannerMode,
+    bytes: u64,
+    warm: usize,
+    reps: usize,
+) -> crate::Result<(f64, String)> {
+    let mut cfg = Config {
+        cluster: cluster.clone(),
+        nodes,
+        combo: parse_combo(combo)?,
+        policy: Policy::Nezha,
+        deterministic: true,
+        ..Config::default()
+    };
+    cfg.planner = mode;
+    let mut mr = MultiRail::new(&cfg)?;
+    let lat = mean_allreduce_us(&mut mr, bytes, warm, reps)?;
+    let plan = mr
+        .last_plan
+        .as_ref()
+        .map(|p| p.label())
+        .unwrap_or_else(|| "-".into());
+    Ok((lat, plan))
+}
 
 /// Aggregated wall-clock statistics for one benchmark.
 #[derive(Debug, Clone)]

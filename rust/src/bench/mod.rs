@@ -10,4 +10,4 @@ pub mod figures;
 pub mod figures_app;
 pub mod harness;
 
-pub use harness::{bench_wall, BenchStats};
+pub use harness::{bench_wall, mean_allreduce_us, planner_mode_latency, BenchStats};

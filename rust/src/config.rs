@@ -48,6 +48,34 @@ impl Policy {
     }
 }
 
+/// How the coordinator turns Load-Balancer shares into per-rail schedules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlannerMode {
+    /// Topology-aware collective planner: per-rail schedule chosen by the
+    /// α-β cost model (flat/chunked ring, halving-doubling, two-level).
+    Auto,
+    /// The seed's fixed dispatch: flat single-level ring on every
+    /// ring-capable rail (tree on SHARP) — the planner-ablation baseline.
+    Flat,
+}
+
+impl PlannerMode {
+    pub fn parse(s: &str) -> Result<PlannerMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" | "on" => Ok(PlannerMode::Auto),
+            "flat" | "fixed" | "off" => Ok(PlannerMode::Flat),
+            other => Err(Error::Config(format!("unknown planner mode `{other}`"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlannerMode::Auto => "auto",
+            PlannerMode::Flat => "flat",
+        }
+    }
+}
+
 /// Control-module tunables (paper §3.5/§4.3 defaults).
 #[derive(Debug, Clone)]
 pub struct ControlConfig {
@@ -86,6 +114,7 @@ pub struct Config {
     pub nodes: usize,
     pub combo: Vec<ProtoKind>,
     pub policy: Policy,
+    pub planner: PlannerMode,
     pub alloc: AllocPolicy,
     pub control: ControlConfig,
     pub seed: u64,
@@ -101,6 +130,7 @@ impl Default for Config {
             nodes: 4,
             combo: vec![ProtoKind::Tcp, ProtoKind::Tcp],
             policy: Policy::Nezha,
+            planner: PlannerMode::Auto,
             alloc: AllocPolicy::Adaptive,
             control: ControlConfig::default(),
             seed: 42,
@@ -120,6 +150,7 @@ impl Config {
                         "local" => ClusterSpec::local(),
                         "cloud" => ClusterSpec::cloud(),
                         "supercomputer" | "super" => ClusterSpec::supercomputer(),
+                        "pods" => ClusterSpec::pods(4),
                         other => return Err(Error::Config(format!("unknown cluster `{other}`"))),
                     }
                 }
@@ -130,6 +161,7 @@ impl Config {
                 }
                 "combo" | "network" => self.combo = parse_combo(v)?,
                 "policy" => self.policy = Policy::parse(v)?,
+                "planner" => self.planner = PlannerMode::parse(v)?,
                 "alloc" => {
                     self.alloc = match v.as_str() {
                         "static" => AllocPolicy::StaticEqual,
@@ -176,7 +208,7 @@ impl Config {
         }
         let mut kv = BTreeMap::new();
         for key in [
-            "cluster", "nodes", "combo", "network", "policy", "alloc", "tau", "eta",
+            "cluster", "nodes", "combo", "network", "policy", "planner", "alloc", "tau", "eta",
             "timer_window", "detect_timeout_us", "migrate_cost_us", "seed",
             "deterministic", "artifacts_dir",
         ] {
@@ -222,6 +254,20 @@ mod tests {
         assert_eq!(c.combo, vec![ProtoKind::Tcp, ProtoKind::Sharp]);
         assert_eq!(c.policy, Policy::Mrib);
         assert_eq!(c.control.tau, 7.5);
+    }
+
+    #[test]
+    fn planner_mode_parses() {
+        let mut c = Config::default();
+        assert_eq!(c.planner, PlannerMode::Auto);
+        let mut kv = BTreeMap::new();
+        kv.insert("planner".into(), "flat".into());
+        kv.insert("cluster".into(), "pods".into());
+        c.apply(&kv).unwrap();
+        assert_eq!(c.planner, PlannerMode::Flat);
+        assert!(c.cluster.intra.is_some());
+        assert!(PlannerMode::parse("bogus").is_err());
+        assert_eq!(PlannerMode::parse("on").unwrap(), PlannerMode::Auto);
     }
 
     #[test]

@@ -9,6 +9,10 @@
 //!   in-network tree (§3.4).
 //! * [`control`] — NIC Selector, Timer, Load Balancer (cold/hot state
 //!   machine, Eqs. 4–8) and Exception Handler (§3.5, §4.3, §4.4).
+//! * [`planner`] — the topology-aware collective planner: turns the Load
+//!   Balancer's per-rail shares into an executable [`CollectivePlan`]
+//!   (flat ring / chunk-pipelined ring / halving-doubling / hierarchical
+//!   two-level / tree) via an α-β cost model.
 //! * [`multirail`] — the orchestrator that partitions each allreduce
 //!   across rails, runs member-network collectives, handles failover and
 //!   feeds measurements back to the control plane (§4.2, Fig. 7).
@@ -18,7 +22,9 @@ pub mod collective;
 pub mod context;
 pub mod control;
 pub mod multirail;
+pub mod planner;
 pub mod transport;
 
 pub use buffer::{UnboundBuffer, Window};
 pub use multirail::{MultiRail, OpReport};
+pub use planner::{CollectivePlan, Planner, Schedule};

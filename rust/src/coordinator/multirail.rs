@@ -5,20 +5,30 @@
 //!
 //! 1. probes deregistered rails for recovery,
 //! 2. asks the partitioning policy (Nezha's Load Balancer or a baseline)
-//!    for a plan,
-//! 3. registers per-rail `(ptr, data_length)` windows on the
-//!    `UnboundBuffer` and runs each member network's native collective,
-//! 4. on a rail failure, lets the Exception Handler deregister the rail
-//!    and migrate the window to the optimal survivor,
-//! 5. charges cross-rail synchronization overhead, advances the virtual
+//!    for the per-rail shares,
+//! 3. hands the shares to the topology-aware collective planner, which
+//!    emits an executable [`CollectivePlan`] (per-rail schedule: flat or
+//!    chunk-pipelined ring, halving-doubling, hierarchical two-level, or
+//!    in-network tree),
+//! 4. registers per-rail `(ptr, data_length)` windows on the
+//!    `UnboundBuffer` and runs each member network's planned collective,
+//! 5. on a rail failure, lets the Exception Handler deregister the rail
+//!    and migrate the window to the optimal survivor (re-planned for the
+//!    takeover rail),
+//! 6. charges cross-rail synchronization overhead, advances the virtual
 //!    clock, and feeds measurements back to the Timer + policy.
+//!
+//! `with_algo` / `force_algo` pin the seed's fixed `Algo` dispatch instead
+//! of the planner — the planner-ablation baseline and the legacy
+//! Ring/Ring_Chunked API used by the GPT replays.
 
-use crate::config::{Config, Policy};
+use crate::config::{Config, PlannerMode, Policy};
 use crate::coordinator::buffer::{UnboundBuffer, Window};
 use crate::coordinator::collective::{run_allreduce, Algo, Reducer, RustReducer};
 use crate::coordinator::context::Context;
 use crate::coordinator::control::load_balancer::{sync_overhead_us, Plan};
 use crate::coordinator::control::{ExceptionHandler, LoadBalancer, NicSelector, Timer};
+use crate::coordinator::planner::{run_plan, CollectivePlan, Planner, Schedule};
 use crate::coordinator::transport::Rendezvous;
 use crate::net::cpu_pool::CpuPool;
 use crate::net::fault::FaultSchedule;
@@ -131,7 +141,15 @@ pub struct MultiRail {
     pub exceptions: ExceptionHandler,
     pub partitioner: Box<dyn Partitioner>,
     pub reducer: Box<dyn Reducer>,
-    pub algo: Algo,
+    /// The topology-aware collective planner (schedules per-rail windows).
+    pub planner: Planner,
+    /// When set, bypasses the planner with the seed's fixed dispatch
+    /// (`Algo::Ring` / `Algo::RingChunked`) on every ring-capable rail.
+    forced_algo: Option<Algo>,
+    /// The plan behind the most recent planner-scheduled op (None after
+    /// MPTCP slicing ops and after forced-dispatch ops, where no planner
+    /// schedule executed) — for benches, ablation reports and tests.
+    pub last_plan: Option<CollectivePlan>,
     ops_done: u64,
 }
 
@@ -167,6 +185,10 @@ impl MultiRail {
             Policy::Mptcp => Box::new(crate::baselines::Mptcp::default()),
             Policy::SingleRail => Box::new(crate::baselines::SingleRail::best()),
         };
+        let forced_algo = match cfg.planner {
+            PlannerMode::Auto => None,
+            PlannerMode::Flat => Some(Algo::Ring),
+        };
         Ok(MultiRail {
             fab,
             contexts,
@@ -175,7 +197,9 @@ impl MultiRail {
             exceptions: ExceptionHandler::new(cfg.control.clone()),
             partitioner,
             reducer: Box::new(RustReducer),
-            algo: Algo::Ring,
+            planner: Planner::from_cluster(&cfg.cluster),
+            forced_algo,
+            last_plan: None,
             ops_done: 0,
         })
     }
@@ -185,9 +209,15 @@ impl MultiRail {
         self
     }
 
+    /// Pin the seed's fixed dispatch (bypasses the planner).
     pub fn with_algo(mut self, algo: Algo) -> Self {
-        self.algo = algo;
+        self.forced_algo = Some(algo);
         self
+    }
+
+    /// Pin (`Some`) or release (`None`) the fixed dispatch at runtime.
+    pub fn force_algo(&mut self, algo: Option<Algo>) {
+        self.forced_algo = algo;
     }
 
     pub fn with_reducer(mut self, reducer: Box<dyn Reducer>) -> Self {
@@ -197,6 +227,25 @@ impl MultiRail {
 
     pub fn ops_done(&self) -> u64 {
         self.ops_done
+    }
+
+    /// The collective plan the coordinator would execute for a `bytes`-
+    /// sized op right now (None when the policy slices MPTCP-style or no
+    /// rail is healthy). Used by bucket annotation and the benches.
+    ///
+    /// Nothing executes and the clock does not advance, but the policy IS
+    /// consulted for real: for Nezha this warms the Load Balancer's
+    /// data-length table for this size class exactly as the planning phase
+    /// of a real op would (later real ops refine it through feedback).
+    pub fn plan_for(&mut self, bytes: u64) -> Option<CollectivePlan> {
+        let healthy = self.fab.healthy_rails();
+        if healthy.is_empty() {
+            return None;
+        }
+        match self.partitioner.plan(&self.fab, &self.timer, &healthy, bytes) {
+            PartitionPlan::Shares(fracs) => Some(self.planner.plan(&self.fab, &fracs, bytes)),
+            PartitionPlan::Slices { .. } => None,
+        }
     }
 
     /// Allreduce the full buffer (f32 payload; modeled bytes = 4×elems).
@@ -233,8 +282,27 @@ impl MultiRail {
         let plan = self.partitioner.plan(&self.fab, &self.timer, &healthy, bytes);
 
         let (mut shares, failovers) = match plan {
-            PartitionPlan::Shares(fracs) => self.exec_shares(buf, full, &fracs, elem_bytes)?,
+            PartitionPlan::Shares(fracs) => {
+                if self.forced_algo.is_some() {
+                    // fixed dispatch: no cost-model work, and last_plan is
+                    // cleared so nobody mistakes a planner prediction for
+                    // what actually ran
+                    let cplan = CollectivePlan::unplanned(&fracs, bytes);
+                    let res = self.exec_plan(buf, full, &cplan, elem_bytes)?;
+                    self.last_plan = None;
+                    res
+                } else {
+                    // the balancer's split is the planner's input, not the
+                    // final word on execution: each rail's window gets the
+                    // schedule the cost model picks for it
+                    let cplan = self.planner.plan(&self.fab, &fracs, bytes);
+                    let res = self.exec_plan(buf, full, &cplan, elem_bytes)?;
+                    self.last_plan = Some(cplan);
+                    res
+                }
+            }
             PartitionPlan::Slices { packet_bytes } => {
+                self.last_plan = None;
                 self.exec_slices(buf, full, packet_bytes, elem_bytes, &healthy)?
             }
         };
@@ -264,32 +332,72 @@ impl MultiRail {
         })
     }
 
-    /// Execute contiguous fractional shares; handles failover recursively.
-    fn exec_shares(
+    /// Run one rail's slice under either the forced seed dispatch or the
+    /// planned schedule.
+    fn run_rail(
+        &mut self,
+        schedule: Schedule,
+        rail: usize,
+        buf: &mut UnboundBuffer,
+        w: Window,
+        elem_bytes: f64,
+    ) -> std::result::Result<crate::coordinator::collective::OpOutcome, RailDown> {
+        match self.forced_algo {
+            Some(algo) => run_allreduce(
+                algo,
+                &mut self.fab,
+                rail,
+                buf,
+                w,
+                self.reducer.as_mut(),
+                elem_bytes,
+            ),
+            None => run_plan(
+                schedule,
+                &mut self.fab,
+                rail,
+                buf,
+                w,
+                self.reducer.as_mut(),
+                elem_bytes,
+                self.planner.intra.as_ref(),
+            ),
+        }
+    }
+
+    /// Schedule to run on a failover's takeover rail.
+    fn takeover_schedule(&self, rail: usize, w: Window, elem_bytes: f64) -> Schedule {
+        self.planner
+            .schedule_for(&self.fab, rail, w.len as f64 * elem_bytes)
+            .0
+    }
+
+    /// Execute a collective plan's per-rail windows; handles failover.
+    fn exec_plan(
         &mut self,
         buf: &mut UnboundBuffer,
         full: Window,
-        fracs: &[(usize, f64)],
+        cplan: &CollectivePlan,
         elem_bytes: f64,
     ) -> Result<(Vec<RailShare>, usize)> {
-        let fractions: Vec<f64> = fracs.iter().map(|(_, f)| *f).collect();
-        let windows = full.split_fractions(&fractions);
-        let mut shares: Vec<RailShare> = Vec::with_capacity(fracs.len());
+        let windows = cplan.windows(full);
+        let mut shares: Vec<RailShare> = Vec::with_capacity(cplan.assignments.len());
         let mut failovers = 0usize;
-        let allocated: Vec<(usize, u64)> = fracs
+        let allocated: Vec<(usize, u64)> = cplan
+            .assignments
             .iter()
             .zip(&windows)
-            .map(|(&(r, _), w)| (r, (w.len as f64 * elem_bytes) as u64))
+            .map(|(a, w)| (a.rail, (w.len as f64 * elem_bytes) as u64))
             .collect();
 
-        for (&(rail, _), &w) in fracs.iter().zip(&windows) {
+        for (assign, &w) in cplan.assignments.iter().zip(&windows) {
+            let rail = assign.rail;
             if w.is_empty() {
                 shares.push(RailShare { rail, bytes: 0, time_us: 0.0 });
                 continue;
             }
             buf.register(w);
-            match run_allreduce(self.algo, &mut self.fab, rail, buf, w, self.reducer.as_mut(), elem_bytes)
-            {
+            match self.run_rail(assign.schedule, rail, buf, w, elem_bytes) {
                 Ok(out) => {
                     buf.complete(w);
                     shares.push(RailShare {
@@ -306,16 +414,11 @@ impl MultiRail {
                         .handle_failure(&mut self.fab, r, w, &allocated)
                         .ok_or(Error::AllRailsDown(r))?;
                     self.timer.forget_rail(r);
-                    let out = run_allreduce(
-                        self.algo,
-                        &mut self.fab,
-                        ev.takeover_rail,
-                        buf,
-                        w,
-                        self.reducer.as_mut(),
-                        elem_bytes,
-                    )
-                    .map_err(|RailDown(r2)| Error::AllRailsDown(r2))?;
+                    // re-plan the migrated window for the takeover rail
+                    let sched = self.takeover_schedule(ev.takeover_rail, w, elem_bytes);
+                    let out = self
+                        .run_rail(sched, ev.takeover_rail, buf, w, elem_bytes)
+                        .map_err(|RailDown(r2)| Error::AllRailsDown(r2))?;
                     buf.complete(w);
                     // takeover rail absorbs its own share later/earlier in
                     // this same op; account serially on that rail
@@ -451,10 +554,11 @@ impl MultiRail {
                         .handle_failure(&mut self.fab, r, w_all, &alloc_bytes)
                         .ok_or(Error::AllRailsDown(r))?;
                     let mut t_extra = ev.recovery_us;
+                    let algo = self.forced_algo.unwrap_or(Algo::Ring);
                     for p in ps {
                         buf.register(*p);
                         let out = run_allreduce(
-                            self.algo,
+                            algo,
                             &mut self.fab,
                             ev.takeover_rail,
                             buf,

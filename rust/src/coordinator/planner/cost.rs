@@ -1,0 +1,164 @@
+//! α-β (latency/bandwidth) cost model for candidate schedules.
+//!
+//! Calibrated from the same per-protocol tables the fabric uses
+//! (`net/protocol.rs`: setup latency α, size-dependent effective bandwidth
+//! β(S), core-scaling and cross-member contention), so cost-model
+//! predictions and deterministic fabric measurements agree by
+//! construction. All estimates are jitter-free: the planner must be
+//! deterministic for a given fabric state.
+
+use crate::net::simnet::Fabric;
+use crate::net::topology::IntraLink;
+
+/// Deterministic point-to-point message time on `rail` (us) at the current
+/// core allocation and contention — the α + S/β kernel every schedule cost
+/// composes. Delegates to the fabric's own jitter-free transfer kernel so
+/// predictions match deterministic measurements by construction.
+pub fn msg_us(fab: &Fabric, rail: usize, bytes: f64) -> f64 {
+    fab.transfer_det_us(rail, bytes)
+}
+
+/// Single-level flat ring: `2(N-1)` rounds of `S/N`-byte messages.
+pub fn flat_ring_us(fab: &Fabric, rail: usize, bytes: f64, n: usize) -> f64 {
+    let steps = 2 * (n - 1);
+    steps as f64 * msg_us(fab, rail, bytes / n as f64)
+}
+
+/// Chunk-pipelined ring: `2(N-1) + chunks - 1` rounds. Pipelining hides
+/// latency, never volume — the per-node wire volume stays the ring's
+/// `2(N-1)·S/N` and is spread evenly over the pipeline rounds, so deeper
+/// pipelines pay more setups but move smaller messages that ride the
+/// pre-decline part of the bandwidth curve (and stay below NIC-crashing
+/// sizes, the paper's >1 GB segfault).
+pub fn ring_chunked_us(fab: &Fabric, rail: usize, bytes: f64, n: usize, chunks: usize) -> f64 {
+    let chunks = chunks.max(1);
+    if chunks == 1 {
+        // exact flat-ring degenerate (avoids (k*x)/k float round-trip)
+        return flat_ring_us(fab, rail, bytes, n);
+    }
+    let rounds = 2 * (n - 1) + chunks - 1;
+    let volume = 2.0 * (n - 1) as f64 * (bytes / n as f64);
+    rounds as f64 * msg_us(fab, rail, volume / rounds as f64)
+}
+
+/// Recursive halving/doubling: `log2(N)` reduce-scatter rounds of
+/// `S/2, S/4, …, S/N` bytes plus the mirrored allgather — same `2S(N-1)/N`
+/// volume as the ring in `2*log2(N)` rounds. Caller guarantees `N` is a
+/// power of two ≥ 2.
+pub fn halving_doubling_us(fab: &Fabric, rail: usize, bytes: f64, n: usize) -> f64 {
+    debug_assert!(n.is_power_of_two() && n >= 2);
+    let mut total = 0.0;
+    let mut divisor = 2.0;
+    for _ in 0..n.trailing_zeros() {
+        total += 2.0 * msg_us(fab, rail, bytes / divisor);
+        divisor *= 2.0;
+    }
+    total
+}
+
+/// One intra-group phase (reduce-scatter or allgather): a `(g-1)`-step
+/// ring over `S/g`-byte segments on the local fabric. Zero when grouping
+/// is degenerate — the two-level cost then collapses to the flat/chunked
+/// ring exactly.
+pub fn intra_phase_us(intra: &IntraLink, bytes: f64) -> f64 {
+    if intra.group_size <= 1 {
+        return 0.0;
+    }
+    let g = intra.group_size as f64;
+    (g - 1.0) * (intra.setup_us + (bytes / g) / intra.bw_mbps)
+}
+
+/// Hierarchical two-level schedule on one rail:
+/// intra-group reduce-scatter + `2(N/g - 1) + chunks - 1` chunk-pipelined
+/// inter-group rounds + intra-group allgather.
+///
+/// The win: `2S(g-1)/g` of the volume moves on the intra-group fabric and
+/// the rail only carries `~2S/g`, in `g×` fewer rounds than the flat ring.
+/// With `group_size == 1` this is bit-for-bit the (chunked) flat ring.
+pub fn two_level_us(
+    fab: &Fabric,
+    rail: usize,
+    bytes: f64,
+    n: usize,
+    intra: &IntraLink,
+    chunks: usize,
+) -> f64 {
+    let g = intra.group_size.max(1);
+    if g == 1 {
+        return ring_chunked_us(fab, rail, bytes, n, chunks);
+    }
+    debug_assert!(n % g == 0 && n / g >= 2, "caller must validate grouping");
+    let groups = n / g;
+    let chunks = chunks.max(1);
+    let rounds = 2 * (groups - 1) + chunks - 1;
+    // per-node inter-group wire volume: 2(G-1)/G of the S/g slice
+    let volume = 2.0 * (groups - 1) as f64 * (bytes / n as f64);
+    let inter = rounds as f64 * msg_us(fab, rail, volume / rounds as f64);
+    2.0 * intra_phase_us(intra, bytes) + inter
+}
+
+/// In-network tree aggregation (SHARP): the fabric's analytic estimate.
+pub fn tree_us(fab: &Fabric, rail: usize, bytes: f64) -> f64 {
+    fab.estimate_allreduce_us(rail, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::cpu_pool::CpuPool;
+    use crate::net::protocol::{ProtoKind, MB};
+    use crate::net::topology::ClusterSpec;
+
+    fn fab(kinds: &[ProtoKind], nodes: usize) -> Fabric {
+        let rails = ClusterSpec::local().build_rails(kinds).unwrap();
+        Fabric::new(nodes, rails, CpuPool::default(), 3).deterministic()
+    }
+
+    #[test]
+    fn flat_ring_matches_fabric_estimate() {
+        let f = fab(&[ProtoKind::Tcp], 4);
+        let est = f.estimate_allreduce_us(0, 8.0 * MB);
+        let got = flat_ring_us(&f, 0, 8.0 * MB, 4);
+        assert!((got - est).abs() / est < 0.01, "got {got} est {est}");
+    }
+
+    #[test]
+    fn chunked_with_one_chunk_is_flat() {
+        let f = fab(&[ProtoKind::Tcp], 8);
+        let s = 16.0 * MB;
+        assert_eq!(ring_chunked_us(&f, 0, s, 8, 1), flat_ring_us(&f, 0, s, 8));
+    }
+
+    #[test]
+    fn halving_doubling_beats_flat_on_latency_bound_payloads() {
+        let f = fab(&[ProtoKind::Tcp], 8);
+        let s = 256.0 * 1024.0;
+        assert!(halving_doubling_us(&f, 0, s, 8) < flat_ring_us(&f, 0, s, 8));
+    }
+
+    #[test]
+    fn two_level_degenerates_to_flat_ring_exactly() {
+        let f = fab(&[ProtoKind::Tcp], 8);
+        let link = IntraLink { group_size: 1, bw_mbps: 5000.0, setup_us: 15.0 };
+        for s in [64.0 * 1024.0, 8.0 * MB] {
+            assert_eq!(two_level_us(&f, 0, s, 8, &link, 1), flat_ring_us(&f, 0, s, 8));
+            assert_eq!(intra_phase_us(&link, s), 0.0);
+        }
+    }
+
+    #[test]
+    fn two_level_beats_flat_on_grouped_16_nodes() {
+        let f = fab(&[ProtoKind::Tcp], 16);
+        let link = IntraLink { group_size: 4, bw_mbps: 5000.0, setup_us: 15.0 };
+        let s = 16.0 * MB;
+        let flat = flat_ring_us(&f, 0, s, 16);
+        let two = two_level_us(&f, 0, s, 16, &link, 1);
+        assert!(two < 0.6 * flat, "two-level {two} vs flat {flat}");
+    }
+
+    #[test]
+    fn tree_cost_is_fabric_estimate() {
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Sharp], 4);
+        assert_eq!(tree_us(&f, 1, MB), f.estimate_allreduce_us(1, MB));
+    }
+}

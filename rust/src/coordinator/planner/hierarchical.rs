@@ -1,0 +1,199 @@
+//! Executable hierarchical / logarithmic schedules.
+//!
+//! Timing runs through the fabric (so jitter, contention and the fault
+//! schedule apply round by round, and a mid-operation rail death aborts
+//! BEFORE numerics — the §4.4 atomicity rule the seed collectives follow);
+//! payload numerics always run the seed's `ring_numerics` over the whole
+//! rail window, so results are bit-identical to the seed reducer for every
+//! schedule family.
+
+use crate::coordinator::buffer::{UnboundBuffer, Window};
+use crate::coordinator::collective::reducer::Reducer;
+use crate::coordinator::collective::ring::ring_numerics;
+use crate::coordinator::collective::OpOutcome;
+use crate::coordinator::planner::cost;
+use crate::net::simnet::{Fabric, RailDown};
+use crate::net::topology::IntraLink;
+
+/// Recursive halving/doubling allreduce: `log2(N)` reduce-scatter rounds
+/// with geometrically shrinking exchanges plus the mirrored allgather.
+/// Caller guarantees `fab.nodes` is a power of two ≥ 2.
+pub fn halving_doubling_allreduce(
+    fab: &mut Fabric,
+    rail: usize,
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+) -> Result<OpOutcome, RailDown> {
+    let n = fab.nodes;
+    debug_assert!(n.is_power_of_two() && n >= 2);
+    if w.is_empty() {
+        return Ok(OpOutcome::default());
+    }
+    let bytes = w.len as f64 * elem_bytes;
+    let mut total = 0.0;
+    let mut moved = 0.0;
+    let mut steps = 0;
+    let mut divisor = 2.0;
+    // time first: reduce-scatter halving, then allgather doubling (same
+    // per-round byte ladder, mirrored)
+    for _ in 0..n.trailing_zeros() {
+        let b = bytes / divisor;
+        total += fab.ring_step(rail, b)?;
+        total += fab.ring_step(rail, b)?;
+        moved += 2.0 * b;
+        steps += 2;
+        divisor *= 2.0;
+    }
+    ring_numerics(buf, w, red);
+    Ok(OpOutcome { time_us: total, bytes_moved: moved as u64, steps })
+}
+
+/// Hierarchical two-level allreduce: intra-group reduce-scatter on the
+/// local fabric, chunk-pipelined inter-group ring over the rail (every
+/// node leads the ring for its own `1/g` slice, so all nodes stay active
+/// each round), intra-group allgather.
+pub fn two_level_allreduce(
+    fab: &mut Fabric,
+    rail: usize,
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    intra: &IntraLink,
+    chunks: usize,
+) -> Result<OpOutcome, RailDown> {
+    let n = fab.nodes;
+    let g = intra.group_size.max(1);
+    debug_assert!(g > 1 && n % g == 0 && n / g >= 2, "caller must validate grouping");
+    if w.is_empty() {
+        return Ok(OpOutcome::default());
+    }
+    let groups = n / g;
+    let chunks = chunks.max(1);
+    let bytes = w.len as f64 * elem_bytes;
+
+    // intra-group phases are local-fabric only: deterministic, cannot fail
+    let mut total = 2.0 * cost::intra_phase_us(intra, bytes);
+
+    // inter-group rounds on the rail — fallible, timed before numerics.
+    // Chunk pipelining spreads the phase's full wire volume over the
+    // extended round count (latency hiding, volume preserved).
+    let rounds = 2 * (groups - 1) + (chunks - 1);
+    let volume = 2.0 * (groups - 1) as f64 * (bytes / n as f64);
+    let msg = volume / rounds as f64;
+    for _ in 0..rounds {
+        total += fab.ring_step(rail, msg)?;
+    }
+    ring_numerics(buf, w, red);
+    Ok(OpOutcome {
+        time_us: total,
+        bytes_moved: (msg * rounds as f64) as u64,
+        steps: rounds + 2 * (g - 1),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::collective::ring::ring_allreduce;
+    use crate::coordinator::collective::testutil::{assert_reduced, fabric, make_buf};
+    use crate::coordinator::collective::RustReducer;
+    use crate::net::fault::FaultSchedule;
+    use crate::net::protocol::{ProtoKind, MB};
+
+    fn link(g: usize) -> IntraLink {
+        IntraLink { group_size: g, bw_mbps: 5000.0, setup_us: 15.0 }
+    }
+
+    #[test]
+    fn halving_doubling_numerics_correct() {
+        for nodes in [2usize, 4, 8, 16] {
+            let mut fab = fabric(nodes, &[ProtoKind::Tcp]);
+            let (mut buf, expect) = make_buf(nodes, 257);
+            let w = buf.full_window();
+            let out =
+                halving_doubling_allreduce(&mut fab, 0, &mut buf, w, &mut RustReducer, 4.0)
+                    .unwrap();
+            assert_eq!(out.steps, 2 * nodes.trailing_zeros() as usize);
+            assert_reduced(&buf, w, &expect);
+        }
+    }
+
+    #[test]
+    fn two_level_numerics_correct_and_faster_than_flat_at_16() {
+        let scale = 16.0 * MB / 1024.0;
+        let t_two = {
+            let mut fab = fabric(16, &[ProtoKind::Tcp]);
+            let (mut buf, expect) = make_buf(16, 1024);
+            let w = buf.full_window();
+            let out = two_level_allreduce(
+                &mut fab,
+                0,
+                &mut buf,
+                w,
+                &mut RustReducer,
+                scale,
+                &link(4),
+                1,
+            )
+            .unwrap();
+            assert_reduced(&buf, w, &expect);
+            out.time_us
+        };
+        let t_flat = {
+            let mut fab = fabric(16, &[ProtoKind::Tcp]);
+            let (mut buf, _) = make_buf(16, 1024);
+            let w = buf.full_window();
+            ring_allreduce(&mut fab, 0, &mut buf, w, &mut RustReducer, scale)
+                .unwrap()
+                .time_us
+        };
+        assert!(t_two < 0.6 * t_flat, "two-level {t_two} vs flat {t_flat}");
+    }
+
+    #[test]
+    fn two_level_matches_numerics_of_flat_bitwise() {
+        // same window, same reducer, same data → identical f32 results
+        let mut fab_a = fabric(8, &[ProtoKind::Tcp]);
+        let mut fab_b = fabric(8, &[ProtoKind::Tcp]);
+        let (mut a, _) = make_buf(8, 333);
+        let (mut b, _) = make_buf(8, 333);
+        let w = a.full_window();
+        two_level_allreduce(&mut fab_a, 0, &mut a, w, &mut RustReducer, 4.0, &link(2), 4)
+            .unwrap();
+        ring_allreduce(&mut fab_b, 0, &mut b, w, &mut RustReducer, 4.0).unwrap();
+        for n in 0..8 {
+            assert_eq!(a.node(n), b.node(n), "node {n} diverged");
+        }
+    }
+
+    #[test]
+    fn fault_aborts_before_numerics() {
+        let mut fab = fabric(16, &[ProtoKind::Tcp])
+            .with_faults(FaultSchedule::none().with(0, 0.0, 1e9));
+        let (mut buf, _) = make_buf(16, 64);
+        let w = buf.full_window();
+        let orig = buf.node(0).to_vec();
+        assert!(two_level_allreduce(
+            &mut fab,
+            0,
+            &mut buf,
+            w,
+            &mut RustReducer,
+            4.0,
+            &link(4),
+            2
+        )
+        .is_err());
+        assert_eq!(buf.node(0), &orig[..], "payload mutated despite abort");
+        let (mut buf2, _) = make_buf(16, 64);
+        let orig2 = buf2.node(0).to_vec();
+        assert!(
+            halving_doubling_allreduce(&mut fab, 0, &mut buf2, w, &mut RustReducer, 4.0)
+                .is_err()
+        );
+        assert_eq!(buf2.node(0), &orig2[..]);
+    }
+}

@@ -1,0 +1,286 @@
+//! Topology-aware collective planner.
+//!
+//! The Load Balancer (paper §4.3) decides *how much* of each allreduce
+//! rides each rail; this subsystem decides *how* each rail should move its
+//! slice. Given the fabric state, the cluster's (optional) intra-group
+//! interconnect and the balancer's shares, [`Planner::plan`] emits an
+//! executable [`CollectivePlan`] choosing per rail among:
+//!
+//! * flat ring (the seed's fixed dispatch),
+//! * chunk-pipelined ring ([`pipeline`]),
+//! * recursive halving/doubling ([`hierarchical`]),
+//! * hierarchical two-level intra/inter-group schedule ([`hierarchical`]),
+//! * in-network tree (SHARP rails).
+//!
+//! Selection is by the deterministic α-β cost model ([`cost`]), calibrated
+//! from the same protocol tables as the fabric. Numerics are schedule
+//! independent: every ring-rail schedule executes the seed's
+//! `ring_numerics` over the same windows, so results stay bit-identical to
+//! the seed reducer across all plan types.
+
+pub mod cost;
+pub mod hierarchical;
+pub mod pipeline;
+pub mod plan;
+
+pub use plan::{CollectivePlan, RailPlan, Schedule};
+
+use crate::coordinator::buffer::{UnboundBuffer, Window};
+use crate::coordinator::collective::reducer::Reducer;
+use crate::coordinator::collective::ring::ring_allreduce;
+use crate::coordinator::collective::tree::tree_allreduce;
+use crate::coordinator::collective::OpOutcome;
+use crate::coordinator::control::load_balancer::sync_overhead_us;
+use crate::net::protocol::CollectiveKind;
+use crate::net::simnet::{Fabric, RailDown};
+use crate::net::topology::{ClusterSpec, IntraLink};
+
+/// Pipeline depths the planner evaluates for chunked schedules.
+pub const CHUNK_CANDIDATES: [usize; 4] = [2, 4, 8, 16];
+
+/// The collective planner: stateless apart from the topology description.
+#[derive(Debug, Clone, Default)]
+pub struct Planner {
+    /// Intra-group interconnect, when the cluster declares one. `None`
+    /// (all the paper's flat testbeds) disables two-level candidates.
+    pub intra: Option<IntraLink>,
+}
+
+impl Planner {
+    pub fn new(intra: Option<IntraLink>) -> Planner {
+        Planner { intra }
+    }
+
+    pub fn from_cluster(cluster: &ClusterSpec) -> Planner {
+        Planner { intra: cluster.intra.clone() }
+    }
+
+    /// Valid grouping for `n` nodes, if any: >1 nodes per group and ≥2
+    /// groups.
+    fn grouping(&self, n: usize) -> Option<&IntraLink> {
+        let link = self.intra.as_ref()?;
+        let g = link.group_size;
+        if g > 1 && n % g == 0 && n / g >= 2 {
+            Some(link)
+        } else {
+            None
+        }
+    }
+
+    /// Best (schedule, predicted time) for `bytes` modeled bytes on
+    /// `rail`, at the fabric's current resource state.
+    pub fn schedule_for(&self, fab: &Fabric, rail: usize, bytes: f64) -> (Schedule, f64) {
+        if bytes <= 0.0 {
+            return (Schedule::FlatRing, 0.0);
+        }
+        match fab.rails[rail].protocol.collective {
+            CollectiveKind::Tree => (Schedule::Tree, cost::tree_us(fab, rail, bytes)),
+            CollectiveKind::Ring => {
+                let n = fab.nodes;
+                let mut best = (Schedule::FlatRing, cost::flat_ring_us(fab, rail, bytes, n));
+                for &c in &CHUNK_CANDIDATES {
+                    let t = cost::ring_chunked_us(fab, rail, bytes, n, c);
+                    if t < best.1 {
+                        best = (Schedule::RingChunked { chunks: c }, t);
+                    }
+                }
+                if n.is_power_of_two() && n >= 4 {
+                    let t = cost::halving_doubling_us(fab, rail, bytes, n);
+                    if t < best.1 {
+                        best = (Schedule::HalvingDoubling, t);
+                    }
+                }
+                if let Some(link) = self.grouping(n) {
+                    for c in std::iter::once(1).chain(CHUNK_CANDIDATES) {
+                        let t = cost::two_level_us(fab, rail, bytes, n, link, c);
+                        if t < best.1 {
+                            best = (
+                                Schedule::TwoLevel { group: link.group_size, chunks: c },
+                                t,
+                            );
+                        }
+                    }
+                }
+                (best.0.normalized(), best.1)
+            }
+        }
+    }
+
+    /// Build the executable plan from the Load Balancer's `(rail, α)`
+    /// shares — the balancer's split is the input; the planner picks each
+    /// rail's schedule and predicts the op's completion time.
+    pub fn plan(&self, fab: &Fabric, shares: &[(usize, f64)], bytes: u64) -> CollectivePlan {
+        assert!(!shares.is_empty(), "planner needs at least one share");
+        let mut assignments = Vec::with_capacity(shares.len());
+        for &(rail, share) in shares {
+            let rail_bytes = bytes as f64 * share;
+            let (schedule, predicted_us) = self.schedule_for(fab, rail, rail_bytes);
+            assignments.push(RailPlan {
+                rail,
+                share,
+                bytes: rail_bytes as u64,
+                schedule,
+                predicted_us,
+            });
+        }
+        let active = assignments.iter().filter(|a| a.bytes > 0).count();
+        let worst = assignments.iter().fold(0.0f64, |m, a| m.max(a.predicted_us));
+        CollectivePlan {
+            bytes,
+            assignments,
+            predicted_us: worst + sync_overhead_us(active),
+        }
+    }
+}
+
+/// Execute one rail's schedule on `buf[w]`.
+///
+/// Timing follows the schedule (through the fabric, so jitter/faults
+/// apply); numerics follow the seed paths (`ring_numerics` for every
+/// ring-family schedule, switch aggregation for trees), keeping results
+/// bit-identical to the seed reducer across plan types.
+#[allow(clippy::too_many_arguments)]
+pub fn run_plan(
+    schedule: Schedule,
+    fab: &mut Fabric,
+    rail: usize,
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    intra: Option<&IntraLink>,
+) -> Result<OpOutcome, RailDown> {
+    if w.is_empty() {
+        return Ok(OpOutcome::default());
+    }
+    match schedule.normalized() {
+        Schedule::Tree => tree_allreduce(fab, rail, buf, w, red, elem_bytes),
+        Schedule::FlatRing => ring_allreduce(fab, rail, buf, w, red, elem_bytes),
+        Schedule::RingChunked { chunks } => {
+            pipeline::pipelined_ring_allreduce(fab, rail, buf, w, red, elem_bytes, chunks)
+        }
+        Schedule::HalvingDoubling => {
+            if fab.nodes.is_power_of_two() {
+                hierarchical::halving_doubling_allreduce(fab, rail, buf, w, red, elem_bytes)
+            } else {
+                ring_allreduce(fab, rail, buf, w, red, elem_bytes)
+            }
+        }
+        Schedule::TwoLevel { group, chunks } => match intra {
+            Some(link)
+                if link.group_size == group
+                    && group > 1
+                    && fab.nodes % group == 0
+                    && fab.nodes / group >= 2 =>
+            {
+                hierarchical::two_level_allreduce(
+                    fab, rail, buf, w, red, elem_bytes, link, chunks,
+                )
+            }
+            // defensive: an invalid grouping falls back to the seed ring
+            _ => ring_allreduce(fab, rail, buf, w, red, elem_bytes),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::cpu_pool::CpuPool;
+    use crate::net::protocol::{ProtoKind, KB, MB};
+
+    fn fab(kinds: &[ProtoKind], nodes: usize, cluster: &ClusterSpec) -> Fabric {
+        let rails = cluster.build_rails(kinds).unwrap();
+        Fabric::new(nodes, rails, CpuPool::default(), 5).deterministic()
+    }
+
+    #[test]
+    fn sharp_rail_always_schedules_tree() {
+        let c = ClusterSpec::local();
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Sharp], 4, &c);
+        let p = Planner::from_cluster(&c);
+        let (s, t) = p.schedule_for(&f, 1, 8.0 * MB);
+        assert_eq!(s, Schedule::Tree);
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn flat_cluster_never_schedules_two_level() {
+        let c = ClusterSpec::local();
+        let p = Planner::from_cluster(&c);
+        assert!(p.intra.is_none());
+        let f = fab(&[ProtoKind::Tcp], 16, &c);
+        for kb in [4.0, 256.0, 16384.0, 262144.0] {
+            let (s, _) = p.schedule_for(&f, 0, kb * KB);
+            assert!(
+                !matches!(s, Schedule::TwoLevel { .. }),
+                "{kb}KB chose {s:?} on a flat cluster"
+            );
+        }
+    }
+
+    #[test]
+    fn pods_cluster_schedules_two_level_for_large_payloads() {
+        let c = ClusterSpec::pods(4);
+        let p = Planner::from_cluster(&c);
+        let f = fab(&[ProtoKind::Tcp], 16, &c);
+        let (s, t_two) = p.schedule_for(&f, 0, 16.0 * MB);
+        assert!(matches!(s, Schedule::TwoLevel { group: 4, .. }), "{s:?}");
+        let flat = cost::flat_ring_us(&f, 0, 16.0 * MB, 16);
+        assert!(t_two < flat, "two-level {t_two} vs flat {flat}");
+    }
+
+    #[test]
+    fn grouping_rejects_non_divisible_node_counts() {
+        let c = ClusterSpec::pods(4);
+        let p = Planner::from_cluster(&c);
+        // 6 nodes don't divide into groups of 4 → no two-level candidates
+        let f = fab(&[ProtoKind::Tcp], 6, &c);
+        let (s, _) = p.schedule_for(&f, 0, 64.0 * MB);
+        assert!(!matches!(s, Schedule::TwoLevel { .. }), "{s:?}");
+    }
+
+    #[test]
+    fn plan_covers_shares_and_predicts_sync() {
+        let c = ClusterSpec::local();
+        let p = Planner::from_cluster(&c);
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Glex], 8, &c);
+        let shares = vec![(0usize, 0.4), (1usize, 0.6)];
+        let plan = p.plan(&f, &shares, 16 << 20);
+        assert_eq!(plan.rails(), vec![0, 1]);
+        assert_eq!(plan.active_rails(), 2);
+        assert!(plan.conserves(Window::new(0, 4096)));
+        let worst = plan
+            .assignments
+            .iter()
+            .fold(0.0f64, |m, a| m.max(a.predicted_us));
+        assert!((plan.predicted_us - worst - sync_overhead_us(2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_share_assignment_is_inert() {
+        let c = ClusterSpec::local();
+        let p = Planner::from_cluster(&c);
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, &c);
+        let plan = p.plan(&f, &[(0, 1.0), (1, 0.0)], 1 << 20);
+        assert_eq!(plan.active_rails(), 1);
+        assert_eq!(plan.assignments[1].bytes, 0);
+        assert_eq!(plan.assignments[1].predicted_us, 0.0);
+    }
+
+    #[test]
+    fn schedule_choice_is_size_dependent_on_ring_rails() {
+        // latency-bound sizes prefer fewer rounds (halving/doubling);
+        // bandwidth-bound sizes prefer chunked/flat rings
+        let c = ClusterSpec::local();
+        let p = Planner::from_cluster(&c);
+        let f = fab(&[ProtoKind::Tcp], 8, &c);
+        let (s_small, _) = p.schedule_for(&f, 0, 256.0 * KB);
+        assert_eq!(s_small, Schedule::HalvingDoubling, "256KB");
+        let (s_big, _) = p.schedule_for(&f, 0, 256.0 * MB);
+        assert!(
+            matches!(s_big, Schedule::RingChunked { .. } | Schedule::FlatRing),
+            "256MB chose {s_big:?}"
+        );
+    }
+}

@@ -1,0 +1,147 @@
+//! Chunk pipelining: per-rail chunk streaming and cross-bucket overlap.
+//!
+//! Within one rail, chunk *k+1* streams while chunk *k* is still reducing:
+//! a `chunks`-deep pipeline over a `base_rounds`-round collective costs
+//! `base_rounds + chunks - 1` rounds of `1/chunks`-size messages instead
+//! of `base_rounds` full-size ones. Across gradient-fusion buckets, the
+//! same mechanism lets bucket *i+1*'s transfer phase overlap bucket *i*'s
+//! tail reduce when both buckets run multi-rail chunked plans — the
+//! trainer models that with a bounded overlap credit.
+
+use crate::coordinator::buffer::{UnboundBuffer, Window};
+use crate::coordinator::collective::reducer::Reducer;
+use crate::coordinator::collective::ring::ring_numerics;
+use crate::coordinator::collective::OpOutcome;
+use crate::net::simnet::{Fabric, RailDown};
+
+/// Rounds of a `chunks`-deep pipeline over a `base_rounds`-round schedule.
+pub fn pipelined_rounds(base_rounds: usize, chunks: usize) -> usize {
+    base_rounds + chunks.max(1) - 1
+}
+
+/// Fraction of the shorter neighbour op hidden by cross-bucket chunk
+/// pipelining (tail reduce of bucket *i* overlaps head transfer of *i+1*).
+pub const BUCKET_OVERLAP: f64 = 0.30;
+
+/// Planner-scheduled chunk-pipelined ring allreduce on one rail.
+///
+/// Timing: `2(N-1) + chunks - 1` fabric rounds carrying the ring's full
+/// `2(N-1)·S/N` per-node wire volume in equal slices — pipelining hides
+/// latency, never volume (fallible, timed before numerics per the §4.4
+/// atomicity rule). Numerics: the seed's whole-window `ring_numerics`, so
+/// results are bit-identical to the flat ring for any payload.
+pub fn pipelined_ring_allreduce(
+    fab: &mut Fabric,
+    rail: usize,
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    chunks: usize,
+) -> Result<OpOutcome, RailDown> {
+    if w.is_empty() {
+        return Ok(OpOutcome::default());
+    }
+    let n = fab.nodes;
+    let chunks = chunks.max(1);
+    let rounds = pipelined_rounds(2 * (n - 1), chunks);
+    let bytes = w.len as f64 * elem_bytes;
+    let volume = 2.0 * (n - 1) as f64 * (bytes / n as f64);
+    let msg = volume / rounds as f64;
+    let mut total = 0.0;
+    for _ in 0..rounds {
+        total += fab.ring_step(rail, msg)?;
+    }
+    ring_numerics(buf, w, red);
+    Ok(OpOutcome {
+        time_us: total,
+        bytes_moved: (msg * rounds as f64) as u64,
+        steps: rounds,
+    })
+}
+
+/// Total communication time of a sequence of bucket ops under cross-bucket
+/// pipelining. Each op is `(time_us, multi_rail)`; consecutive multi-rail
+/// ops earn an `overlap` credit bounded by the shorter of the pair, and
+/// the result can never drop below the longest single op.
+pub fn pipelined_total_us(ops: &[(f64, bool)], overlap: f64) -> f64 {
+    if ops.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = ops.iter().map(|(t, _)| *t).sum();
+    let mut credit = 0.0;
+    for pair in ops.windows(2) {
+        if pair[0].1 && pair[1].1 {
+            credit += overlap * pair[0].0.min(pair[1].0);
+        }
+    }
+    let floor = ops.iter().map(|(t, _)| *t).fold(0.0f64, f64::max);
+    (sum - credit).max(floor)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::collective::ring::ring_allreduce;
+    use crate::coordinator::collective::testutil::{assert_reduced, fabric, make_buf};
+    use crate::coordinator::collective::RustReducer;
+    use crate::net::protocol::{ProtoKind, MB};
+
+    #[test]
+    fn rounds_arithmetic() {
+        assert_eq!(pipelined_rounds(6, 1), 6);
+        assert_eq!(pipelined_rounds(6, 8), 13);
+        assert_eq!(pipelined_rounds(6, 0), 6);
+    }
+
+    #[test]
+    fn pipelined_ring_numerics_match_flat_bitwise() {
+        let mut fa = fabric(4, &[ProtoKind::Tcp]);
+        let mut fb = fabric(4, &[ProtoKind::Tcp]);
+        let (mut a, expect) = make_buf(4, 1003);
+        let (mut b, _) = make_buf(4, 1003);
+        let w = a.full_window();
+        pipelined_ring_allreduce(&mut fa, 0, &mut a, w, &mut RustReducer, 4.0, 8).unwrap();
+        ring_allreduce(&mut fb, 0, &mut b, w, &mut RustReducer, 4.0).unwrap();
+        assert_reduced(&a, w, &expect);
+        for n in 0..4 {
+            assert_eq!(a.node(n), b.node(n));
+        }
+    }
+
+    #[test]
+    fn pipelining_helps_huge_payloads() {
+        let scale = 256.0 * MB / 1024.0;
+        let t_flat = {
+            let mut fab = fabric(8, &[ProtoKind::Tcp]);
+            let (mut buf, _) = make_buf(8, 1024);
+            let w = buf.full_window();
+            ring_allreduce(&mut fab, 0, &mut buf, w, &mut RustReducer, scale)
+                .unwrap()
+                .time_us
+        };
+        let t_pipe = {
+            let mut fab = fabric(8, &[ProtoKind::Tcp]);
+            let (mut buf, _) = make_buf(8, 1024);
+            let w = buf.full_window();
+            pipelined_ring_allreduce(&mut fab, 0, &mut buf, w, &mut RustReducer, scale, 16)
+                .unwrap()
+                .time_us
+        };
+        assert!(t_pipe < t_flat, "pipelined {t_pipe} vs flat {t_flat}");
+    }
+
+    #[test]
+    fn bucket_pipeline_credit_bounded() {
+        let ops = [(100.0, true), (50.0, true), (80.0, false), (40.0, true)];
+        let t = pipelined_total_us(&ops, BUCKET_OVERLAP);
+        let serial: f64 = ops.iter().map(|(t, _)| *t).sum();
+        // only the first adjacent multi-rail pair earns credit
+        assert!((t - (serial - 0.30 * 50.0)).abs() < 1e-9, "t={t}");
+        assert!(t >= 100.0);
+        assert_eq!(pipelined_total_us(&[], BUCKET_OVERLAP), 0.0);
+        // single-rail sequences get no credit
+        let ops1 = [(10.0, false), (20.0, false)];
+        assert_eq!(pipelined_total_us(&ops1, BUCKET_OVERLAP), 30.0);
+    }
+}

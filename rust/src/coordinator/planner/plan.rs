@@ -1,0 +1,211 @@
+//! Executable collective plans.
+//!
+//! A [`CollectivePlan`] is what the planner hands the orchestrator: one
+//! [`RailPlan`] per rail the Load Balancer assigned data to, each carrying
+//! the schedule the member network should run for its window plus the cost
+//! model's predicted completion time. Window arithmetic reuses the shared
+//! buffer's `split_fractions`, so plan windows are exactly the windows the
+//! seed's share execution produced — numerics stay on the same code path
+//! regardless of the schedule chosen (see `planner::run_plan`).
+
+use crate::coordinator::buffer::Window;
+
+/// The per-rail schedule families the planner chooses among.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Single-level bandwidth-optimal ring (the seed's fixed dispatch).
+    FlatRing,
+    /// Ring with `chunks` pipelined chunks streaming back-to-back:
+    /// `2(N-1) + chunks - 1` rounds of `S/(N*chunks)`-byte messages.
+    RingChunked { chunks: usize },
+    /// Recursive halving/doubling: `2*log2(N)` rounds with geometrically
+    /// shrinking messages — fewer setups than the ring for latency-bound
+    /// payloads (power-of-two node counts only).
+    HalvingDoubling,
+    /// Hierarchical two-level schedule over an intra-group interconnect:
+    /// intra-group reduce-scatter → inter-group ring allreduce of the
+    /// rail-partitioned slice (chunk-pipelined) → intra-group allgather.
+    TwoLevel { group: usize, chunks: usize },
+    /// In-network aggregation (SHARP rails).
+    Tree,
+}
+
+impl Schedule {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Schedule::FlatRing => "flat-ring",
+            Schedule::RingChunked { .. } => "ring-chunked",
+            Schedule::HalvingDoubling => "halving-doubling",
+            Schedule::TwoLevel { .. } => "two-level",
+            Schedule::Tree => "tree",
+        }
+    }
+
+    /// Collapse degenerate parameterisations: a two-level schedule over
+    /// single-node groups IS a (possibly chunked) flat ring, and one chunk
+    /// is no pipeline at all.
+    pub fn normalized(self) -> Schedule {
+        match self {
+            Schedule::TwoLevel { group: 0 | 1, chunks: 0 | 1 } => Schedule::FlatRing,
+            Schedule::TwoLevel { group: 0 | 1, chunks } => Schedule::RingChunked { chunks },
+            Schedule::TwoLevel { group, chunks: 0 } => Schedule::TwoLevel { group, chunks: 1 },
+            Schedule::RingChunked { chunks: 0 | 1 } => Schedule::FlatRing,
+            s => s,
+        }
+    }
+}
+
+/// One rail's slice of the op: fraction of the window, modeled bytes, and
+/// the schedule + predicted time the cost model selected.
+#[derive(Debug, Clone)]
+pub struct RailPlan {
+    pub rail: usize,
+    /// Fraction of the op window (the Load Balancer's α for this rail).
+    pub share: f64,
+    /// Modeled payload bytes on this rail.
+    pub bytes: u64,
+    pub schedule: Schedule,
+    /// Cost-model completion estimate for this rail alone (us).
+    pub predicted_us: f64,
+}
+
+/// The full multi-rail plan for one allreduce.
+#[derive(Debug, Clone)]
+pub struct CollectivePlan {
+    /// Total modeled payload bytes.
+    pub bytes: u64,
+    pub assignments: Vec<RailPlan>,
+    /// Predicted end-to-end time: slowest rail + cross-rail sync (us).
+    pub predicted_us: f64,
+}
+
+impl CollectivePlan {
+    /// A window-carrier plan for forced fixed-dispatch execution: shares
+    /// only, no schedule selection or cost prediction (the orchestrator
+    /// ignores the schedules and runs the forced `Algo`).
+    pub fn unplanned(shares: &[(usize, f64)], bytes: u64) -> CollectivePlan {
+        assert!(!shares.is_empty(), "plan needs at least one share");
+        let assignments = shares
+            .iter()
+            .map(|&(rail, share)| RailPlan {
+                rail,
+                share,
+                bytes: (bytes as f64 * share) as u64,
+                schedule: Schedule::FlatRing,
+                predicted_us: 0.0,
+            })
+            .collect();
+        CollectivePlan { bytes, assignments, predicted_us: 0.0 }
+    }
+
+    /// Carve the op window into per-assignment windows — identical
+    /// arithmetic to the seed's share execution (contiguous, exact cover).
+    pub fn windows(&self, full: Window) -> Vec<Window> {
+        assert!(!self.assignments.is_empty(), "plan with no assignments");
+        let fractions: Vec<f64> = self.assignments.iter().map(|a| a.share).collect();
+        full.split_fractions(&fractions)
+    }
+
+    /// Rails this plan claims (in assignment order).
+    pub fn rails(&self) -> Vec<usize> {
+        self.assignments.iter().map(|a| a.rail).collect()
+    }
+
+    /// Rails that actually carry payload.
+    pub fn active_rails(&self) -> usize {
+        self.assignments.iter().filter(|a| a.bytes > 0).count()
+    }
+
+    /// Human-readable summary, e.g. `"0:two-level 1:tree"`.
+    pub fn label(&self) -> String {
+        self.assignments
+            .iter()
+            .filter(|a| a.bytes > 0)
+            .map(|a| format!("{}:{}", a.rail, a.schedule.label()))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Invariant check used by the property tests: the plan's windows
+    /// partition `full` exactly and its shares are a distribution.
+    pub fn conserves(&self, full: Window) -> bool {
+        let ws = self.windows(full);
+        let mut cursor = full.offset;
+        for w in &ws {
+            if w.offset != cursor {
+                return false;
+            }
+            cursor = w.end();
+        }
+        if cursor != full.end() {
+            return false;
+        }
+        let sum: f64 = self.assignments.iter().map(|a| a.share).sum();
+        (sum - 1.0).abs() < 1e-6 && self.assignments.iter().all(|a| a.share >= 0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan2() -> CollectivePlan {
+        CollectivePlan {
+            bytes: 1000,
+            assignments: vec![
+                RailPlan {
+                    rail: 0,
+                    share: 0.25,
+                    bytes: 250,
+                    schedule: Schedule::FlatRing,
+                    predicted_us: 10.0,
+                },
+                RailPlan {
+                    rail: 1,
+                    share: 0.75,
+                    bytes: 750,
+                    schedule: Schedule::TwoLevel { group: 4, chunks: 2 },
+                    predicted_us: 20.0,
+                },
+            ],
+            predicted_us: 20.0,
+        }
+    }
+
+    #[test]
+    fn windows_partition_exactly() {
+        let p = plan2();
+        let full = Window::new(8, 1001);
+        assert!(p.conserves(full));
+        let ws = p.windows(full);
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].offset, 8);
+        assert_eq!(ws[1].end(), 1009);
+    }
+
+    #[test]
+    fn labels_and_counters() {
+        let p = plan2();
+        assert_eq!(p.rails(), vec![0, 1]);
+        assert_eq!(p.active_rails(), 2);
+        assert_eq!(p.label(), "0:flat-ring 1:two-level");
+    }
+
+    #[test]
+    fn degenerate_schedules_normalize() {
+        assert_eq!(
+            Schedule::TwoLevel { group: 1, chunks: 1 }.normalized(),
+            Schedule::FlatRing
+        );
+        assert_eq!(
+            Schedule::TwoLevel { group: 1, chunks: 4 }.normalized(),
+            Schedule::RingChunked { chunks: 4 }
+        );
+        assert_eq!(Schedule::RingChunked { chunks: 1 }.normalized(), Schedule::FlatRing);
+        assert_eq!(
+            Schedule::TwoLevel { group: 4, chunks: 2 }.normalized(),
+            Schedule::TwoLevel { group: 4, chunks: 2 }
+        );
+        assert_eq!(Schedule::Tree.normalized(), Schedule::Tree);
+    }
+}

@@ -5,9 +5,11 @@
 //! Rust + JAX + Pallas system:
 //!
 //! * **Layer 3 (this crate)** — the Nezha coordinator: [`coordinator`]
-//!   (Context / Transport / Collective / Control modules), the simulated
-//!   multi-rail fabric ([`net`]), baseline policies ([`baselines`]), the
-//!   data-parallel trainer ([`trainer`]) and the PJRT runtime ([`runtime`]).
+//!   (Context / Transport / Collective / Control modules plus the
+//!   topology-aware collective planner), the simulated multi-rail fabric
+//!   ([`net`]), baseline policies ([`baselines`]), the data-parallel
+//!   trainer ([`trainer`]) and the PJRT runtime ([`runtime`], behind the
+//!   `pjrt` feature).
 //! * **Layer 2 (python/compile/model.py)** — JAX transformer fwd/bwd, lowered
 //!   once to HLO text in `artifacts/`.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (tiled matmul,

@@ -115,22 +115,31 @@ impl Fabric {
             .collect()
     }
 
+    /// Deterministic (jitter-free) point-to-point message time on `rail`
+    /// (us) at the current resource state — the α-β kernel shared by live
+    /// transfers and the collective planner's cost model, so predictions
+    /// and deterministic measurements agree by construction.
+    ///
+    /// The aggregation (computation-phase) share is what bounds the
+    /// protocol's effective bandwidth; transfer-phase skeleton cores only
+    /// drive the DMA engines. Cross-member contention (§5.3.2) inflates
+    /// the TRANSFER component (memory-bandwidth/IRQ sharing), not the
+    /// fixed setup.
+    pub fn transfer_det_us(&self, rail: usize, bytes: f64) -> f64 {
+        let r = &self.rails[rail];
+        let cores = self.cpu.cores_for(r.kind(), Phase::Computation);
+        let contention = self.cpu.contention_factor();
+        let raw = r.protocol.msg_time_us(bytes, cores, r.wire_cap_mbps());
+        r.protocol.setup_us + (raw - r.protocol.setup_us) / contention
+    }
+
     /// Single point-to-point message time on `rail` (us), with jitter.
     /// Fails if the rail is down at the current virtual time.
     pub fn transfer(&mut self, rail: usize, bytes: f64) -> Result<f64, RailDown> {
         if !self.poll_health(rail) {
             return Err(RailDown(rail));
         }
-        let r = &self.rails[rail];
-        // the aggregation (computation-phase) share is what bounds the
-        // protocol's effective bandwidth; transfer-phase skeleton cores
-        // only drive the DMA engines. Cross-member contention (§5.3.2)
-        // inflates the TRANSFER component (memory-bandwidth/IRQ sharing),
-        // not the fixed setup.
-        let cores = self.cpu.cores_for(r.kind(), Phase::Computation);
-        let contention = self.cpu.contention_factor();
-        let raw = r.protocol.msg_time_us(bytes, cores, r.wire_cap_mbps());
-        let base = r.protocol.setup_us + (raw - r.protocol.setup_us) / contention;
+        let base = self.transfer_det_us(rail, bytes);
         let j = if self.jitter_sigma > 0.0 {
             self.rng.jitter(self.jitter_sigma)
         } else {

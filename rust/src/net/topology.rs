@@ -15,12 +15,32 @@ pub struct NodeSpec {
     pub nics: Vec<NicSpec>,
 }
 
+/// An intra-group interconnect: nodes are organised in groups of
+/// `group_size` (a rack / pod / chassis) joined by a full-bisection local
+/// fabric that is much faster than the inter-group rails. The collective
+/// planner (`coordinator::planner`) exploits it with hierarchical
+/// two-level schedules; topologies without one (`intra: None`) always run
+/// single-level collectives, preserving the paper's flat-cluster
+/// behaviour.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntraLink {
+    /// Nodes per group; 1 disables grouping (degenerates to flat).
+    pub group_size: usize,
+    /// Effective intra-group bandwidth per node (MB/s).
+    pub bw_mbps: f64,
+    /// Per-message setup latency on the local fabric (us).
+    pub setup_us: f64,
+}
+
 /// A named testbed.
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {
     pub name: &'static str,
     pub node: NodeSpec,
     pub max_nodes: usize,
+    /// Optional intra-group fast interconnect (None on the paper's flat
+    /// testbeds).
+    pub intra: Option<IntraLink>,
 }
 
 impl ClusterSpec {
@@ -42,7 +62,27 @@ impl ClusterSpec {
                 ],
             },
             max_nodes: 8,
+            intra: None,
         }
+    }
+
+    /// Rack-pod variant of the local testbed: same per-node NIC inventory,
+    /// nodes organised in racks of `group` with a full-bisection intra-rack
+    /// interconnect (NVLink-class pooled bandwidth, far faster than any
+    /// single rail). This is the topology the hierarchical two-level
+    /// planner targets; `group <= 1` keeps it flat.
+    pub fn pods(group: usize) -> ClusterSpec {
+        let mut c = ClusterSpec::local();
+        c.name = "pods";
+        c.max_nodes = 64;
+        if group > 1 {
+            c.intra = Some(IntraLink {
+                group_size: group,
+                bw_mbps: 5000.0,
+                setup_us: 15.0,
+            });
+        }
+        c
     }
 
     /// 16-node cloud platform: Xeon 5318Y, 1x V100, 1x Eth, 1x IB.
@@ -56,6 +96,7 @@ impl ClusterSpec {
                 nics: vec![NicSpec::MCX623106AN, NicSpec::CONNECTX5],
             },
             max_nodes: 16,
+            intra: None,
         }
     }
 
@@ -71,6 +112,7 @@ impl ClusterSpec {
                 nics: vec![NicSpec::BCM5720, NicSpec::CONNECTX3],
             },
             max_nodes: 128,
+            intra: None,
         }
     }
 
@@ -177,6 +219,24 @@ mod tests {
     fn combo_parsing() {
         assert_eq!(parse_combo("tcp-sharp").unwrap(), vec![ProtoKind::Tcp, ProtoKind::Sharp]);
         assert!(parse_combo("tcp-bogus").is_err());
+    }
+
+    #[test]
+    fn pods_topology_declares_intra_link() {
+        let c = ClusterSpec::pods(4);
+        let link = c.intra.as_ref().expect("pods must have an intra link");
+        assert_eq!(link.group_size, 4);
+        assert!(link.bw_mbps > NicSpec::MCX623106AN.usable_mbps() / 4.0);
+        // same NIC inventory as local: a 4-rail heterogeneous combo builds
+        assert_eq!(
+            c.build_rails(&[ProtoKind::Tcp, ProtoKind::Tcp, ProtoKind::Tcp, ProtoKind::Glex])
+                .unwrap()
+                .len(),
+            4
+        );
+        // degenerate group stays flat
+        assert!(ClusterSpec::pods(1).intra.is_none());
+        assert!(ClusterSpec::local().intra.is_none());
     }
 
     #[test]

@@ -7,6 +7,12 @@
 //!
 //! Python never runs here — after `make artifacts` the binary is
 //! self-contained.
+//!
+//! The `xla`-backed engine/reducer are gated behind the `pjrt` cargo
+//! feature (the only external dependency of the crate); the default build
+//! substitutes API-compatible stubs whose `Engine::new` fails cleanly, so
+//! artifact-gated tests and benches skip exactly as when artifacts are
+//! missing. See DESIGN.md §runtime.
 
 pub mod artifacts;
 pub mod engine;

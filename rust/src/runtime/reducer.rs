@@ -6,6 +6,10 @@
 //! sizes exported by aot.py); the tail shorter than the smallest kernel
 //! block falls back to the portable rust loop (identical f32 adds, so
 //! numerics are bit-equal).
+//!
+//! Without the `pjrt` feature this compiles as a thin wrapper over
+//! [`RustReducer`] (same API, same numerics) so the rest of the system
+//! builds dependency-free.
 
 use std::sync::Arc;
 
@@ -13,6 +17,7 @@ use crate::coordinator::collective::reducer::{Reducer, RustReducer};
 use crate::runtime::engine::Engine;
 use crate::Result;
 
+#[cfg(feature = "pjrt")]
 pub struct PjrtReducer {
     engine: Arc<Engine>,
     /// Per available kernel block length (descending): (len, name,
@@ -26,6 +31,7 @@ pub struct PjrtReducer {
     pub fallback_elems: u64,
 }
 
+#[cfg(feature = "pjrt")]
 impl std::fmt::Debug for PjrtReducer {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         let lens: Vec<usize> = self.blocks.iter().map(|b| b.0).collect();
@@ -33,6 +39,7 @@ impl std::fmt::Debug for PjrtReducer {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtReducer {
     pub fn new(engine: Arc<Engine>) -> Result<PjrtReducer> {
         let mut lens = engine.manifest.add_pair_lengths();
@@ -65,6 +72,7 @@ impl PjrtReducer {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Reducer for PjrtReducer {
     fn add_into(&mut self, dst: &mut [f32], src: &[f32]) {
         assert_eq!(dst.len(), src.len());
@@ -92,5 +100,36 @@ impl Reducer for PjrtReducer {
 
     fn name(&self) -> &'static str {
         "pjrt-pallas"
+    }
+}
+
+/// Stub reducer compiled without the `pjrt` feature: every add runs the
+/// portable rust loop. In practice unreachable through the public API
+/// (the stub [`Engine::new`] fails first), but it keeps artifact-gated
+/// call sites compiling unchanged.
+#[cfg(not(feature = "pjrt"))]
+#[derive(Debug)]
+pub struct PjrtReducer {
+    fallback: RustReducer,
+    pub kernel_elems: u64,
+    pub fallback_elems: u64,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtReducer {
+    pub fn new(_engine: Arc<Engine>) -> Result<PjrtReducer> {
+        Ok(PjrtReducer { fallback: RustReducer, kernel_elems: 0, fallback_elems: 0 })
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Reducer for PjrtReducer {
+    fn add_into(&mut self, dst: &mut [f32], src: &[f32]) {
+        self.fallback_elems += dst.len() as u64;
+        self.fallback.add_into(dst, src);
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
     }
 }

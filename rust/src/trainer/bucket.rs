@@ -2,8 +2,16 @@
 //! training loop: the flat gradient vector is cut into fusion buckets that
 //! are allreduced as separate operations, so the Load Balancer sees the
 //! realistic per-op size distribution instead of one giant payload.
+//!
+//! Buckets can be annotated with the collective plan the coordinator
+//! would execute for each window ([`Bucketizer::annotate`]): overlapping
+//! buckets whose plans are multi-rail and chunked pipeline across rails
+//! (see `coordinator::planner::pipeline` and `DdpSim`'s bucket
+//! pipelining).
 
 use crate::coordinator::buffer::Window;
+use crate::coordinator::multirail::MultiRail;
+use crate::coordinator::planner::CollectivePlan;
 
 /// Split a flat parameter/gradient vector of `total` elements into fusion
 /// buckets of at most `bucket_elems` elements.
@@ -60,6 +68,35 @@ impl Bucketizer {
     pub fn total(&self) -> usize {
         self.windows.iter().map(|w| w.len).sum()
     }
+
+    /// Annotate every bucket with the collective plan the coordinator
+    /// would execute for it right now (`elem_bytes` scales window elements
+    /// to modeled wire bytes; 4.0 = physical f32). Plans are `None` under
+    /// MPTCP-style slicing policies.
+    pub fn annotate(&self, mr: &mut MultiRail, elem_bytes: f64) -> Vec<BucketPlan> {
+        self.windows
+            .iter()
+            .map(|w| BucketPlan {
+                window: *w,
+                plan: mr.plan_for((w.len as f64 * elem_bytes) as u64),
+            })
+            .collect()
+    }
+}
+
+/// One fusion bucket + the plan the coordinator would run for it.
+#[derive(Debug, Clone)]
+pub struct BucketPlan {
+    pub window: Window,
+    pub plan: Option<CollectivePlan>,
+}
+
+impl BucketPlan {
+    /// Would this bucket engage ≥2 rails (and thus pipeline with its
+    /// neighbours under cross-bucket chunk pipelining)?
+    pub fn is_multirail(&self) -> bool {
+        self.plan.as_ref().map(|p| p.active_rails() >= 2).unwrap_or(false)
+    }
 }
 
 #[cfg(test)]
@@ -103,5 +140,47 @@ mod tests {
     fn single_bucket_when_cap_large() {
         let b = Bucketizer::new(100, 1 << 30);
         assert_eq!(b.n_buckets(), 1);
+    }
+
+    #[test]
+    fn annotate_covers_all_buckets_with_plans() {
+        use crate::config::{Config, Policy};
+        use crate::net::protocol::ProtoKind;
+        let cfg = Config {
+            nodes: 4,
+            combo: vec![ProtoKind::Tcp, ProtoKind::Tcp],
+            policy: Policy::Nezha,
+            deterministic: true,
+            ..Config::default()
+        };
+        let mut mr = MultiRail::new(&cfg).unwrap();
+        // 16M elements (64MB modeled) in 4M-element buckets
+        let b = Bucketizer::new(16 << 20, 4 << 20);
+        let annotated = b.annotate(&mut mr, 4.0);
+        assert_eq!(annotated.len(), b.n_buckets());
+        for bp in &annotated {
+            let plan = bp.plan.as_ref().expect("share policy must yield a plan");
+            assert!(plan.conserves(bp.window));
+            // 16MB hot buckets split across both rails
+            assert!(bp.is_multirail(), "{plan:?}");
+        }
+    }
+
+    #[test]
+    fn annotate_under_mptcp_yields_none() {
+        use crate::config::{Config, Policy};
+        use crate::net::protocol::ProtoKind;
+        let cfg = Config {
+            nodes: 4,
+            combo: vec![ProtoKind::Tcp, ProtoKind::Tcp],
+            policy: Policy::Mptcp,
+            deterministic: true,
+            ..Config::default()
+        };
+        let mut mr = MultiRail::new(&cfg).unwrap();
+        let b = Bucketizer::new(1 << 20, 1 << 19);
+        let annotated = b.annotate(&mut mr, 4.0);
+        assert!(annotated.iter().all(|bp| bp.plan.is_none()));
+        assert!(!annotated[0].is_multirail());
     }
 }

@@ -10,6 +10,7 @@
 use crate::config::Config;
 use crate::coordinator::buffer::UnboundBuffer;
 use crate::coordinator::multirail::MultiRail;
+use crate::coordinator::planner::pipeline::{pipelined_total_us, BUCKET_OVERLAP};
 use crate::trainer::comm_profile::CommProfile;
 use crate::Result;
 
@@ -25,6 +26,10 @@ pub struct DdpSim {
     pub gpus_per_node: usize,
     pub batch_per_gpu: usize,
     pub overlap: f64,
+    /// Cross-bucket chunk pipelining: consecutive multi-rail bucket ops
+    /// overlap (bucket k+1 streams while bucket k's tail reduces). Off by
+    /// default — the paper's Fig. 12/16/17 shapes are serial-bucket.
+    pub bucket_pipelining: bool,
     /// Real elements per simulated op payload (timing is scaled to the
     /// profile's byte sizes; numerics stay real but small).
     sim_elems: usize,
@@ -40,22 +45,43 @@ impl DdpSim {
             gpus_per_node,
             batch_per_gpu,
             overlap: DEFAULT_OVERLAP,
+            bucket_pipelining: false,
             sim_elems: 1024,
         })
     }
 
-    /// Communication time of one full iteration (all profile ops).
+    /// Enable/disable cross-bucket chunk pipelining.
+    pub fn with_bucket_pipelining(mut self, on: bool) -> DdpSim {
+        self.bucket_pipelining = on;
+        self
+    }
+
+    /// Communication time of one full iteration (all profile ops). Each
+    /// bucket op reports `(time, planner-scheduled across ≥2 rails)`; with
+    /// bucket pipelining on, adjacent such ops earn the planner's overlap
+    /// credit. Forced-dispatch and MPTCP-sliced ops never qualify
+    /// (`last_plan` is None there — nothing chunk-pipelines).
     pub fn comm_us(&mut self) -> Result<f64> {
-        let mut total = 0.0;
+        let mut ops: Vec<(f64, bool)> = Vec::with_capacity(self.profile.ops.len());
         for &bytes in &self.profile.ops.clone() {
             let mut buf = UnboundBuffer::from_fn(self.nodes, self.sim_elems, |n, i| {
                 ((n + i) % 17) as f32
             });
             let elem_bytes = bytes as f64 / self.sim_elems as f64;
             let rep = self.mr.allreduce_scaled(&mut buf, elem_bytes)?;
-            total += rep.total_us;
+            let planned_multirail = self
+                .mr
+                .last_plan
+                .as_ref()
+                .map(|p| p.active_rails() >= 2)
+                .unwrap_or(false);
+            ops.push((rep.total_us, planned_multirail));
         }
-        Ok(total)
+        if self.bucket_pipelining {
+            Ok(pipelined_total_us(&ops, BUCKET_OVERLAP))
+        } else {
+            Ok(ops.iter().map(|(t, _)| *t).sum())
+        }
     }
 
     /// Warm the Load Balancer's data-length table (the paper reports
@@ -134,6 +160,62 @@ mod tests {
         let g1 = mk(1).samples_per_sec_per_node().unwrap();
         let g2 = mk(2).samples_per_sec_per_node().unwrap();
         assert!(g2 > 1.3 * g1, "g1 {g1} g2 {g2}");
+    }
+
+    #[test]
+    fn bucket_pipelining_helps_multirail_and_is_bounded() {
+        let mk = |pipelined| {
+            DdpSim::new(
+                &cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha),
+                CommProfile::vgg11(),
+                1,
+                64,
+            )
+            .unwrap()
+            .with_bucket_pipelining(pipelined)
+        };
+        let mut serial = mk(false);
+        let mut pipe = mk(true);
+        serial.warmup(3).unwrap();
+        pipe.warmup(3).unwrap();
+        let cs = serial.comm_us().unwrap();
+        let cp = pipe.comm_us().unwrap();
+        assert!(cp < cs, "pipelined {cp} vs serial {cs}");
+        // the credit is bounded: never better than a 50% cut
+        assert!(cp > 0.5 * cs, "pipelined {cp} vs serial {cs}");
+    }
+
+    #[test]
+    fn forced_flat_dispatch_gets_no_pipeline_credit() {
+        // fixed dispatch has no chunk streams, so pipelining must be inert
+        use crate::config::PlannerMode;
+        let mut c = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        c.planner = PlannerMode::Flat;
+        let mk = |pipelined| {
+            DdpSim::new(&c, CommProfile::alexnet(), 1, 32)
+                .unwrap()
+                .with_bucket_pipelining(pipelined)
+        };
+        let cs = mk(false).comm_us().unwrap();
+        let cp = mk(true).comm_us().unwrap();
+        assert_eq!(cs, cp);
+    }
+
+    #[test]
+    fn single_rail_gets_no_pipeline_credit() {
+        let mk = |pipelined| {
+            DdpSim::new(
+                &cfg(&[ProtoKind::Tcp], 4, Policy::SingleRail),
+                CommProfile::alexnet(),
+                1,
+                32,
+            )
+            .unwrap()
+            .with_bucket_pipelining(pipelined)
+        };
+        let cs = mk(false).comm_us().unwrap();
+        let cp = mk(true).comm_us().unwrap();
+        assert_eq!(cs, cp);
     }
 
     #[test]

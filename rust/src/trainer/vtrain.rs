@@ -152,13 +152,15 @@ impl VtrainSim {
                 ((n * 31 + i) % 11) as f32
             });
             let elem_bytes = bytes as f64 / self.sim_elems as f64;
-            // translate the modeled chunk size into real-buffer elements
-            self.mr.algo = match self.chunk_bytes {
+            // translate the modeled chunk size into real-buffer elements;
+            // the replay pins the seed's fixed Ring/Ring_Chunked dispatch
+            // (the paper's Fig. 18/19 algorithms), bypassing the planner
+            self.mr.force_algo(Some(match self.chunk_bytes {
                 None => Algo::Ring,
                 Some(cb) => Algo::RingChunked {
                     chunk_elems: ((cb as f64 / elem_bytes).ceil() as usize).max(1),
                 },
-            };
+            }));
             total += self.mr.allreduce_scaled(&mut buf, elem_bytes)?.total_us;
         }
         Ok(total * self.congestion_penalty())

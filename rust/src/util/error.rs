@@ -1,35 +1,107 @@
 //! Crate error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (the offline registry does not carry
+//! `thiserror`); the XLA variant only exists when the `pjrt` feature pulls
+//! in the `xla` crate.
 
 /// Unified error for coordinator, runtime and substrate failures.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error("xla/pjrt error: {0}")]
-    Xla(#[from] xla::Error),
+    #[cfg(feature = "pjrt")]
+    Xla(xla::Error),
 
-    #[error("json parse error at byte {offset}: {msg}")]
     Json { offset: usize, msg: String },
 
-    #[error("config error: {0}")]
     Config(String),
 
-    #[error("artifact `{0}` not found (run `make artifacts`)")]
     MissingArtifact(String),
 
-    #[error("rail {0} failed and no healthy rail remains")]
     AllRailsDown(usize),
 
-    #[error("topology error: {0}")]
     Topology(String),
 
-    #[error("{0}")]
     Msg(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            #[cfg(feature = "pjrt")]
+            Error::Xla(e) => write!(f, "xla/pjrt error: {e}"),
+            Error::Json { offset, msg } => {
+                write!(f, "json parse error at byte {offset}: {msg}")
+            }
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::MissingArtifact(a) => {
+                write!(f, "artifact `{a}` not found (run `make artifacts`)")
+            }
+            Error::AllRailsDown(r) => {
+                write!(f, "rail {r} failed and no healthy rail remains")
+            }
+            Error::Topology(m) => write!(f, "topology error: {m}"),
+            Error::Msg(m) => f.write_str(m),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            #[cfg(feature = "pjrt")]
+            Error::Xla(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
 }
 
 impl Error {
     pub fn msg(m: impl Into<String>) -> Self {
         Error::Msg(m.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages_stable() {
+        assert_eq!(
+            Error::AllRailsDown(3).to_string(),
+            "rail 3 failed and no healthy rail remains"
+        );
+        assert_eq!(Error::Config("x".into()).to_string(), "config error: x");
+        assert_eq!(
+            Error::MissingArtifact("m".into()).to_string(),
+            "artifact `m` not found (run `make artifacts`)"
+        );
+        assert_eq!(
+            Error::Json { offset: 4, msg: "bad".into() }.to_string(),
+            "json parse error at byte 4: bad"
+        );
+    }
+
+    #[test]
+    fn io_error_converts_and_sources() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().starts_with("io error:"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -12,6 +12,10 @@ use nezha::runtime::{Engine, ModelRunner, PjrtReducer};
 use nezha::util::rng::Pcg;
 
 fn engine() -> Option<Arc<Engine>> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the `pjrt` feature (xla-backed runtime stubbed)");
+        return None;
+    }
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         eprintln!("skipping: run `make artifacts` first");
         return None;

@@ -104,6 +104,10 @@ fn gpt30b_splits_oversized_packets() {
 
 #[test]
 fn e2e_training_reduces_loss_through_multirail() {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return;
+    }
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         eprintln!("skipping: artifacts not built");
         return;
@@ -129,6 +133,10 @@ fn e2e_training_reduces_loss_through_multirail() {
 
 #[test]
 fn e2e_pjrt_and_rust_reducers_agree() {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return;
+    }
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         eprintln!("skipping: artifacts not built");
         return;

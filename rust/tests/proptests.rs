@@ -7,11 +7,12 @@ use nezha::coordinator::collective::ring::ring_numerics;
 use nezha::coordinator::collective::{Reducer, RustReducer};
 use nezha::coordinator::control::load_balancer::LoadBalancer;
 use nezha::coordinator::control::Timer;
+use nezha::coordinator::planner::{cost, pipeline, Planner, Schedule};
 use nezha::config::ControlConfig;
 use nezha::net::cpu_pool::CpuPool;
 use nezha::net::protocol::ProtoKind;
 use nezha::net::simnet::Fabric;
-use nezha::net::topology::ClusterSpec;
+use nezha::net::topology::{ClusterSpec, IntraLink};
 use nezha::util::json::Json;
 use nezha::util::rng::Pcg;
 
@@ -191,6 +192,105 @@ fn prop_fabric_monotone_in_size() {
             assert!(tb >= ta, "{kind:?}: T({b})={tb} < T({a})={ta}");
             assert!(ta > 0.0);
         }
+    }
+}
+
+/// Property: every CollectivePlan conserves bytes (its windows partition
+/// the op window exactly, shares form a distribution) and covers exactly
+/// the healthy rails it claims, for random combos, node counts, groupings
+/// and share splits.
+#[test]
+fn prop_collective_plan_conserves_bytes_and_claimed_rails() {
+    let combos: [&[ProtoKind]; 3] = [
+        &[ProtoKind::Tcp, ProtoKind::Tcp],
+        &[ProtoKind::Tcp, ProtoKind::Glex],
+        &[ProtoKind::Tcp, ProtoKind::Sharp],
+    ];
+    let mut rng = Pcg::new(2001);
+    for case in 0..CASES {
+        let combo = combos[rng.below(3) as usize];
+        let nodes = [2usize, 4, 8, 16][rng.below(4) as usize];
+        let group = [1usize, 2, 4][rng.below(3) as usize];
+        let rails = ClusterSpec::local().build_rails(combo).unwrap();
+        let fab = Fabric::new(nodes, rails, CpuPool::default(), case as u64).deterministic();
+        let planner = Planner::new(if group > 1 {
+            Some(IntraLink { group_size: group, bw_mbps: 5000.0, setup_us: 15.0 })
+        } else {
+            None
+        });
+        // random normalized shares over the two rails (one may be zero)
+        let a = rng.f64();
+        let shares = vec![(0usize, a), (1usize, 1.0 - a)];
+        let bytes = 1u64 << (10 + rng.below(19)); // 1KB..256MB
+        let plan = planner.plan(&fab, &shares, bytes);
+        let full = Window::new(rng.below(512) as usize, 1 + rng.below(1 << 20) as usize);
+        assert!(plan.conserves(full), "case {case}: {plan:?}");
+        assert_eq!(plan.rails(), vec![0, 1], "case {case}");
+        // per-rail byte split matches the shares (within rounding)
+        let total: u64 = plan.assignments.iter().map(|p| p.bytes).sum();
+        assert!(
+            (total as f64 - bytes as f64).abs() <= 2.0,
+            "case {case}: {total} vs {bytes}"
+        );
+        // predicted time is positive whenever payload is
+        assert!(plan.predicted_us > 0.0, "case {case}");
+        // two-level schedules only appear with a valid grouping
+        for p in &plan.assignments {
+            if let Schedule::TwoLevel { group: g, .. } = p.schedule {
+                assert!(g > 1 && nodes % g == 0 && nodes / g >= 2, "case {case}: {p:?}");
+            }
+        }
+    }
+}
+
+/// Property: hierarchical two-level cost collapses exactly to the flat
+/// ring on single-node-per-group topologies, for random sizes and node
+/// counts — and the planner never emits a TwoLevel schedule there.
+#[test]
+fn prop_hierarchical_reduces_to_flat_ring_on_degenerate_groups() {
+    let mut rng = Pcg::new(2002);
+    let g1 = IntraLink { group_size: 1, bw_mbps: 5000.0, setup_us: 15.0 };
+    for case in 0..CASES {
+        let nodes = 2 + rng.below(15) as usize;
+        let rails = ClusterSpec::local().build_rails(&[ProtoKind::Tcp]).unwrap();
+        let fab = Fabric::new(nodes, rails, CpuPool::default(), case as u64).deterministic();
+        let bytes = rng.range_f64(1024.0, 2.68e8);
+        assert_eq!(
+            cost::two_level_us(&fab, 0, bytes, nodes, &g1, 1),
+            cost::flat_ring_us(&fab, 0, bytes, nodes),
+            "case {case}: degenerate two-level must equal flat ring"
+        );
+        assert_eq!(cost::intra_phase_us(&g1, bytes), 0.0);
+        let planner = Planner::new(Some(g1.clone()));
+        let (s, _) = planner.schedule_for(&fab, 0, bytes);
+        assert!(
+            !matches!(s, Schedule::TwoLevel { .. }),
+            "case {case}: degenerate grouping emitted {s:?}"
+        );
+    }
+    // the schedule normalizer agrees
+    assert_eq!(
+        Schedule::TwoLevel { group: 1, chunks: 1 }.normalized(),
+        Schedule::FlatRing
+    );
+}
+
+/// Property: cross-bucket pipelining is bounded — never worse than the
+/// serial sum, never better than the longest single op.
+#[test]
+fn prop_pipelined_total_bounded() {
+    let mut rng = Pcg::new(2003);
+    for case in 0..CASES {
+        let k = 1 + rng.below(12) as usize;
+        let ops: Vec<(f64, bool)> = (0..k)
+            .map(|_| (rng.range_f64(1.0, 1e5), rng.f64() < 0.6))
+            .collect();
+        let serial: f64 = ops.iter().map(|(t, _)| *t).sum();
+        let longest = ops.iter().map(|(t, _)| *t).fold(0.0f64, f64::max);
+        let overlap = rng.range_f64(0.0, 1.0);
+        let t = pipeline::pipelined_total_us(&ops, overlap);
+        assert!(t <= serial + 1e-9, "case {case}: {t} > serial {serial}");
+        assert!(t >= longest - 1e-9, "case {case}: {t} < longest {longest}");
     }
 }
 
