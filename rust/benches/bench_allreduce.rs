@@ -5,7 +5,9 @@
 //! vs fixed-dispatch sweep (64 KiB → 256 MiB), emitted in the bench
 //! harness's JSON result format.
 
-use nezha::bench::harness::{bench_wall, planner_mode_latency};
+use nezha::bench::harness::{
+    bench_wall, plan_quality_fig, planner_mode_latency, straggler_sweep, straggler_sweep_json,
+};
 use nezha::config::{Config, PlannerMode, Policy};
 use nezha::coordinator::buffer::UnboundBuffer;
 use nezha::coordinator::multirail::MultiRail;
@@ -114,5 +116,21 @@ fn main() -> nezha::Result<()> {
     t.row(s.row());
     t.print();
 
-    planner_vs_fixed_json()
+    planner_vs_fixed_json()?;
+    straggler_corrections_json()?;
+
+    // per-plan predicted vs measured across the deterministic sweeps —
+    // the plan-quality dashboard document (CI uploads this artifact)
+    plan_quality_fig()
+}
+
+/// Corrections-vs-static-cost comparison under a persistent straggler on
+/// rail 0 of the pods topology (the straggler-replanning acceptance
+/// sweep), in the bench JSON format — the canonical sweep shared with
+/// `bench::ablation::ablate_straggler`.
+fn straggler_corrections_json() -> nezha::Result<()> {
+    println!("\n=== straggler corrections: auto vs static-cost (JSON) ===");
+    let rows = straggler_sweep()?;
+    println!("{}", straggler_sweep_json(&rows).to_string());
+    Ok(())
 }

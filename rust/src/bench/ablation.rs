@@ -189,13 +189,44 @@ pub fn ablate_planner() -> Result<()> {
     Ok(())
 }
 
+/// Straggler-correction ablation: planner=auto (Timer-corrected costs,
+/// straggler-aware replanning) against planner=static-cost (a-priori α-β
+/// model only) with a persistent per-message straggler injected on one
+/// rail of the grouped pods topology. Emits the comparison as a JSON doc
+/// in the bench result format (the acceptance artifact for the
+/// straggler-replanning milestone).
+pub fn ablate_straggler() -> Result<()> {
+    use crate::bench::harness::{straggler_sweep, straggler_sweep_json};
+    println!("\n=== Ablation: measurement-corrected planner vs static cost under a straggler ===");
+    println!("(pods 16n x 2r TCP, persistent per-message stall on rail 0)");
+    let rows = straggler_sweep()?;
+    let mut t = Table::new(&[
+        "size", "stall", "static-cost (us)", "auto (us)", "gain", "auto plan",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            fmt_bytes(r.bytes),
+            format!("{:.0}us", r.stall_us),
+            format!("{:.0}", r.static_us),
+            format!("{:.0}", r.auto_us),
+            format!("{:+.1}%", (r.static_us / r.auto_us - 1.0) * 100.0),
+            r.auto_plan.clone(),
+        ]);
+    }
+    t.print();
+    println!("{}", straggler_sweep_json(&rows).to_string());
+    println!("(corrections shift the straggler rail to fewer-round schedules; static cost cannot)");
+    Ok(())
+}
+
 /// Run all ablations.
 pub fn run_all() -> Result<()> {
     ablate_tau()?;
     ablate_eta()?;
     ablate_timer_window()?;
     ablate_alloc()?;
-    ablate_planner()
+    ablate_planner()?;
+    ablate_straggler()
 }
 
 #[cfg(test)]

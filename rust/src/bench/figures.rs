@@ -443,18 +443,19 @@ pub fn run(id: &str) -> Result<()> {
         "fig19" => super::figures_app::fig19(),
         "headline" => super::figures_app::headline(),
         "ablate" => super::ablation::run_all(),
+        "plan-quality" | "plan_quality" | "planq" => super::harness::plan_quality_fig(),
         "all" => {
             for id in [
                 "fig2", "fig3", "fig4", "table1", "fig8", "fig9", "fig10", "fig11", "fig12",
                 "fig13", "fig14", "fig15", "fig16", "fig17", "fig18", "fig19", "headline",
-                "ablate",
+                "ablate", "plan-quality",
             ] {
                 run(id)?;
             }
             Ok(())
         }
         other => Err(crate::util::error::Error::Config(format!(
-            "unknown figure `{other}` (fig2..fig19, table1, headline, all)"
+            "unknown figure `{other}` (fig2..fig19, table1, headline, plan-quality, all)"
         ))),
     }
 }

@@ -8,8 +8,19 @@ use std::time::Instant;
 use crate::config::{Config, PlannerMode, Policy};
 use crate::coordinator::buffer::UnboundBuffer;
 use crate::coordinator::multirail::MultiRail;
+use crate::coordinator::planner::PlanQualityReport;
 use crate::net::topology::{parse_combo, ClusterSpec};
+use crate::util::json::Json;
 use crate::util::stats::{mean, percentile};
+
+/// Committed ceiling for the plan-quality regression: the deterministic
+/// sweep's median relative |predicted − measured| / measured error. The
+/// tier-1 regression test fails the build when cost-model drift pushes the
+/// sweep past this.
+pub const PLAN_QUALITY_MEDIAN_ERR_MAX: f64 = 0.05;
+
+/// Payload sweep the plan-quality regression and report run over.
+pub const PLAN_QUALITY_SIZES: [u64; 5] = [256 << 10, 1 << 20, 8 << 20, 64 << 20, 256 << 20];
 
 /// Mean modeled completion latency (us) of `reps` allreduces of `bytes`
 /// after `warm` warmup ops, on 1024-element scaled buffers.
@@ -64,6 +75,187 @@ pub fn planner_mode_latency(
         .map(|p| p.label())
         .unwrap_or_else(|| "-".into());
     Ok((lat, plan))
+}
+
+/// Run the deterministic Nezha sweep over [`PLAN_QUALITY_SIZES`] on an
+/// explicit cluster and hand back the coordinator's accumulated
+/// [`PlanQualityReport`] (per-rail predicted vs measured for every
+/// planner-scheduled op).
+pub fn plan_quality_sweep(
+    cluster: &ClusterSpec,
+    combo: &str,
+    nodes: usize,
+    warm: usize,
+    reps: usize,
+) -> crate::Result<PlanQualityReport> {
+    let cfg = Config {
+        cluster: cluster.clone(),
+        nodes,
+        combo: parse_combo(combo)?,
+        policy: Policy::Nezha,
+        deterministic: true,
+        ..Config::default()
+    };
+    let mut mr = MultiRail::new(&cfg)?;
+    for &bytes in &PLAN_QUALITY_SIZES {
+        mean_allreduce_us(&mut mr, bytes, warm, reps)?;
+    }
+    Ok(mr.quality.clone())
+}
+
+/// The standard plan-quality sweep cases — shared by the JSON report
+/// (`plan_quality_json`) and the tier-1 regression test so they can never
+/// silently diverge in coverage.
+pub fn plan_quality_cases() -> Vec<(&'static str, ClusterSpec, &'static str, usize)> {
+    vec![
+        ("local", ClusterSpec::local(), "tcp-tcp", 8),
+        ("pods", ClusterSpec::pods(4), "tcp-tcp-tcp-glex", 16),
+    ]
+}
+
+/// The PlanQualityReport JSON document for the standard local + pods
+/// sweeps — what `nezha fig plan-quality` and `bench_allreduce` emit (and
+/// CI uploads as a workflow artifact).
+pub fn plan_quality_json() -> crate::Result<Json> {
+    let mut sweeps = Vec::new();
+    for (name, cluster, combo, nodes) in plan_quality_cases() {
+        let report = plan_quality_sweep(&cluster, combo, nodes, 10, 5)?;
+        sweeps.push(Json::obj(vec![
+            ("cluster", Json::from(name)),
+            ("combo", Json::from(combo)),
+            ("nodes", Json::from(nodes as f64)),
+            ("quality", report.to_json()),
+        ]));
+    }
+    Ok(Json::obj(vec![
+        ("bench", Json::from("plan_quality")),
+        ("policy", Json::from("nezha")),
+        ("threshold_median_rel_err", Json::from(PLAN_QUALITY_MEDIAN_ERR_MAX)),
+        ("sweeps", Json::Arr(sweeps)),
+    ]))
+}
+
+/// Print the plan-quality report document (the `fig plan-quality` id).
+pub fn plan_quality_fig() -> crate::Result<()> {
+    println!("\n=== plan quality: predicted vs measured (JSON) ===");
+    println!("{}", plan_quality_json()?.to_string());
+    Ok(())
+}
+
+/// Mean Nezha latency under `mode` with a persistent straggler injected on
+/// `rail` (per-message `stall_us`) — the corrections-vs-static-cost
+/// comparison the straggler ablation and acceptance tests run. Returns
+/// (mean latency, executed plan label).
+#[allow(clippy::too_many_arguments)]
+pub fn straggler_mode_latency(
+    cluster: &ClusterSpec,
+    combo: &str,
+    nodes: usize,
+    mode: PlannerMode,
+    rail: usize,
+    stall_us: f64,
+    bytes: u64,
+    warm: usize,
+    reps: usize,
+) -> crate::Result<(f64, String)> {
+    let mut cfg = Config {
+        cluster: cluster.clone(),
+        nodes,
+        combo: parse_combo(combo)?,
+        policy: Policy::Nezha,
+        deterministic: true,
+        ..Config::default()
+    };
+    cfg.planner = mode;
+    cfg.control.timer_window = 5;
+    let mut mr = MultiRail::new(&cfg)?.with_straggler(rail, stall_us, 0.0);
+    let lat = mean_allreduce_us(&mut mr, bytes, warm, reps)?;
+    let plan = mr
+        .last_plan
+        .as_ref()
+        .map(|p| p.label())
+        .unwrap_or_else(|| "-".into());
+    Ok((lat, plan))
+}
+
+/// The canonical straggler-corrections sweep: pods topology, dual TCP,
+/// 16 nodes, persistent per-message stall on rail 0, `(bytes, stall_us)`
+/// per case. Shared by the ablation table and the bench JSON so the two
+/// artifacts cannot drift apart.
+pub const STRAGGLER_SWEEP_RAIL: usize = 0;
+pub const STRAGGLER_SWEEP_CASES: [(u64, f64); 2] = [(256 << 20, 8_000.0), (1 << 30, 15_000.0)];
+
+/// One straggler-sweep comparison: planner=auto (corrections) vs
+/// planner=static-cost (a-priori model only) under the same injected
+/// straggler.
+#[derive(Debug, Clone)]
+pub struct StragglerRow {
+    pub bytes: u64,
+    pub stall_us: f64,
+    pub static_us: f64,
+    pub static_plan: String,
+    pub auto_us: f64,
+    pub auto_plan: String,
+}
+
+/// Run the canonical straggler sweep (see [`STRAGGLER_SWEEP_CASES`]).
+pub fn straggler_sweep() -> crate::Result<Vec<StragglerRow>> {
+    let cluster = ClusterSpec::pods(4);
+    let mut rows = Vec::new();
+    for &(bytes, stall_us) in &STRAGGLER_SWEEP_CASES {
+        let (static_us, static_plan) = straggler_mode_latency(
+            &cluster,
+            "tcp-tcp",
+            16,
+            PlannerMode::StaticCost,
+            STRAGGLER_SWEEP_RAIL,
+            stall_us,
+            bytes,
+            25,
+            5,
+        )?;
+        let (auto_us, auto_plan) = straggler_mode_latency(
+            &cluster,
+            "tcp-tcp",
+            16,
+            PlannerMode::Auto,
+            STRAGGLER_SWEEP_RAIL,
+            stall_us,
+            bytes,
+            25,
+            5,
+        )?;
+        rows.push(StragglerRow { bytes, stall_us, static_us, static_plan, auto_us, auto_plan });
+    }
+    Ok(rows)
+}
+
+/// The straggler-corrections JSON document for a sweep's rows (bench
+/// result format).
+pub fn straggler_sweep_json(rows: &[StragglerRow]) -> Json {
+    let results: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("bytes", Json::from(r.bytes as f64)),
+                ("size", Json::from(crate::util::bytes::fmt_bytes(r.bytes))),
+                ("stall_us", Json::from(r.stall_us)),
+                ("static_cost_us", Json::from(r.static_us)),
+                ("static_plan", Json::from(r.static_plan.clone())),
+                ("auto_us", Json::from(r.auto_us)),
+                ("auto_plan", Json::from(r.auto_plan.clone())),
+                ("speedup", Json::from(r.static_us / r.auto_us)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::from("straggler_corrections")),
+        ("cluster", Json::from("pods")),
+        ("combo", Json::from("tcp-tcp")),
+        ("nodes", Json::from(16.0)),
+        ("straggler_rail", Json::from(STRAGGLER_SWEEP_RAIL as f64)),
+        ("results", Json::Arr(results)),
+    ])
 }
 
 /// Aggregated wall-clock statistics for one benchmark.

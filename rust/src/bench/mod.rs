@@ -10,4 +10,7 @@ pub mod figures;
 pub mod figures_app;
 pub mod harness;
 
-pub use harness::{bench_wall, mean_allreduce_us, planner_mode_latency, BenchStats};
+pub use harness::{
+    bench_wall, mean_allreduce_us, plan_quality_json, plan_quality_sweep, planner_mode_latency,
+    straggler_mode_latency, BenchStats, PLAN_QUALITY_MEDIAN_ERR_MAX,
+};

@@ -52,8 +52,14 @@ impl Policy {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PlannerMode {
     /// Topology-aware collective planner: per-rail schedule chosen by the
-    /// α-β cost model (flat/chunked ring, halving-doubling, two-level).
+    /// α-β cost model (flat/chunked ring, halving-doubling, two-level),
+    /// corrected by the Timer's live measurements (straggler-aware
+    /// replanning).
     Auto,
+    /// The planner with measurement corrections disabled: schedules come
+    /// from the a-priori α-β model only — the corrections-ablation
+    /// baseline.
+    StaticCost,
     /// The seed's fixed dispatch: flat single-level ring on every
     /// ring-capable rail (tree on SHARP) — the planner-ablation baseline.
     Flat,
@@ -63,6 +69,7 @@ impl PlannerMode {
     pub fn parse(s: &str) -> Result<PlannerMode> {
         match s.to_ascii_lowercase().as_str() {
             "auto" | "on" => Ok(PlannerMode::Auto),
+            "static-cost" | "static_cost" | "staticcost" => Ok(PlannerMode::StaticCost),
             "flat" | "fixed" | "off" => Ok(PlannerMode::Flat),
             other => Err(Error::Config(format!("unknown planner mode `{other}`"))),
         }
@@ -71,6 +78,7 @@ impl PlannerMode {
     pub fn name(self) -> &'static str {
         match self {
             PlannerMode::Auto => "auto",
+            PlannerMode::StaticCost => "static-cost",
             PlannerMode::Flat => "flat",
         }
     }
@@ -92,6 +100,11 @@ pub struct ControlConfig {
     pub migrate_cost_us: f64,
     /// Convergence tolerance on α updates.
     pub alpha_tol: f64,
+    /// Replan trigger: when a rail's EWMA'd |predicted − measured| /
+    /// measured error for a size class exceeds this, the coordinator
+    /// re-runs schedule selection between ops (buckets) instead of reusing
+    /// the cached plan.
+    pub replan_error: f64,
 }
 
 impl Default for ControlConfig {
@@ -103,6 +116,7 @@ impl Default for ControlConfig {
             detect_timeout_us: 120_000.0,
             migrate_cost_us: 40_000.0,
             alpha_tol: 1e-3,
+            replan_error: 0.25,
         }
     }
 }
@@ -174,6 +188,7 @@ impl Config {
                 "timer_window" => self.control.timer_window = parse_f64(k, v)? as usize,
                 "detect_timeout_us" => self.control.detect_timeout_us = parse_f64(k, v)?,
                 "migrate_cost_us" => self.control.migrate_cost_us = parse_f64(k, v)?,
+                "replan_error" => self.control.replan_error = parse_f64(k, v)?,
                 "seed" => self.seed = parse_f64(k, v)? as u64,
                 "deterministic" => self.deterministic = v == "true" || v == "1",
                 "artifacts_dir" => self.artifacts_dir = v.clone(),
@@ -209,8 +224,8 @@ impl Config {
         let mut kv = BTreeMap::new();
         for key in [
             "cluster", "nodes", "combo", "network", "policy", "planner", "alloc", "tau", "eta",
-            "timer_window", "detect_timeout_us", "migrate_cost_us", "seed",
-            "deterministic", "artifacts_dir",
+            "timer_window", "detect_timeout_us", "migrate_cost_us", "replan_error",
+            "seed", "deterministic", "artifacts_dir",
         ] {
             if let Some(v) = args.get(key) {
                 kv.insert(key.to_string(), v.to_string());
@@ -268,6 +283,20 @@ mod tests {
         assert!(c.cluster.intra.is_some());
         assert!(PlannerMode::parse("bogus").is_err());
         assert_eq!(PlannerMode::parse("on").unwrap(), PlannerMode::Auto);
+        assert_eq!(PlannerMode::parse("static-cost").unwrap(), PlannerMode::StaticCost);
+        assert_eq!(PlannerMode::StaticCost.name(), "static-cost");
+    }
+
+    #[test]
+    fn replan_error_configurable() {
+        let mut c = Config::default();
+        assert_eq!(c.control.replan_error, 0.25);
+        let mut kv = BTreeMap::new();
+        kv.insert("replan_error".into(), "0.1".into());
+        kv.insert("planner".into(), "static_cost".into());
+        c.apply(&kv).unwrap();
+        assert_eq!(c.control.replan_error, 0.1);
+        assert_eq!(c.planner, PlannerMode::StaticCost);
     }
 
     #[test]

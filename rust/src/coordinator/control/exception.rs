@@ -26,6 +26,10 @@ pub struct FailoverEvent {
     pub recovery_us: f64,
 }
 
+/// The paper's end-to-end self-recovery budget (§4.4): detection plus
+/// task migration must complete within 200 ms.
+pub const PAPER_RECOVERY_BUDGET_US: f64 = 200_000.0;
+
 /// The Exception Handler.
 #[derive(Debug)]
 pub struct ExceptionHandler {
@@ -41,6 +45,14 @@ impl ExceptionHandler {
     /// Total detection + migration budget charged per failover (us).
     pub fn recovery_cost_us(&self) -> f64 {
         self.cfg.detect_timeout_us + self.cfg.migrate_cost_us
+    }
+
+    /// True when every recorded recovery stayed inside the paper's 200 ms
+    /// self-recovery budget.
+    pub fn all_within_budget(&self) -> bool {
+        self.events
+            .iter()
+            .all(|ev| ev.recovery_us < PAPER_RECOVERY_BUDGET_US)
     }
 
     /// Handle a failure of `failed` while processing `window`: deregister
@@ -118,7 +130,8 @@ mod tests {
     #[test]
     fn recovery_under_200ms_budget() {
         let h = ExceptionHandler::new(ControlConfig::default());
-        assert!(h.recovery_cost_us() < 200_000.0, "paper budget violated");
+        assert!(h.recovery_cost_us() < PAPER_RECOVERY_BUDGET_US, "paper budget violated");
+        assert!(h.all_within_budget(), "no events yet");
     }
 
     #[test]

@@ -302,6 +302,18 @@ impl LoadBalancer {
         normalize(&mut bucket.alphas);
     }
 
+    /// The balancer's own measured/model correction for a (rail, size
+    /// class), 1.0 until feedback arrives — exposed so reports and the
+    /// straggler tests can see that a slow rail's estimates inflated
+    /// (share adaptation), independently of the planner's schedule-level
+    /// corrections.
+    pub fn correction(&self, rail: usize, bytes: u64) -> f64 {
+        self.corr
+            .get(&(rail, size_bucket(bytes)))
+            .copied()
+            .unwrap_or(1.0)
+    }
+
     /// Observable state for a size class (Fig. 11's allocation ratios).
     pub fn state(&self, bytes: u64) -> BalancerState {
         match self.buckets.get(&size_bucket(bytes)) {
@@ -455,6 +467,21 @@ mod tests {
         };
         let a0_after = shares.iter().find(|(r, _)| *r == 0).unwrap().1;
         assert!(a0_after < a0_before - 0.1, "before {a0_before} after {a0_after}");
+    }
+
+    #[test]
+    fn correction_learns_slow_rail() {
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp], 4);
+        let mut b = lb();
+        let bytes = 8 * MB as u64;
+        assert_eq!(b.correction(0, bytes), 1.0, "no feedback yet");
+        // rail 0 consistently measures 2x its model estimate
+        let model = f.estimate_allreduce_us(0, (bytes / 2) as f64);
+        for _ in 0..30 {
+            b.feedback(&f, bytes, &[(0, bytes / 2, 2.0 * model), (1, bytes / 2, model)]);
+        }
+        assert!(b.correction(0, bytes) > 1.5, "c0 {}", b.correction(0, bytes));
+        assert!((b.correction(1, bytes) - 1.0).abs() < 0.1, "c1 {}", b.correction(1, bytes));
     }
 
     #[test]

@@ -81,6 +81,19 @@ impl Timer {
     pub fn forget_rail(&mut self, rail: usize) {
         self.accs.retain(|(r, _), _| *r != rail);
     }
+
+    /// Forget one (rail, size-class) history — used when a replan switches
+    /// the rail's schedule for that class: the old schedule's window
+    /// averages no longer describe what will run, so the class re-warms
+    /// under the new schedule before corrections re-engage.
+    pub fn forget_class(&mut self, rail: usize, bytes: u64) {
+        self.accs.remove(&(rail, size_bucket(bytes)));
+    }
+
+    /// The averaging window length (paper default: 100).
+    pub fn window(&self) -> usize {
+        self.window
+    }
 }
 
 #[cfg(test)]
@@ -126,6 +139,17 @@ mod tests {
         assert!(t.cost(2, 1024).is_some());
         t.forget_rail(2);
         assert!(t.cost(2, 1024).is_none());
+    }
+
+    #[test]
+    fn forget_class_clears_only_that_class() {
+        let mut t = Timer::new(1);
+        t.record(0, 1024, 5.0);
+        t.record(0, 4096, 9.0);
+        t.forget_class(0, 1500); // same 1K bucket as the first record
+        assert!(t.cost(0, 1024).is_none());
+        assert_eq!(t.cost(0, 4096), Some(9.0));
+        assert_eq!(t.window(), 1);
     }
 
     #[test]

@@ -27,4 +27,4 @@ pub mod transport;
 
 pub use buffer::{UnboundBuffer, Window};
 pub use multirail::{MultiRail, OpReport};
-pub use planner::{CollectivePlan, Planner, Schedule};
+pub use planner::{CollectivePlan, CorrectedCost, PlanQualityReport, Planner, Schedule};

@@ -22,13 +22,17 @@
 //! of the planner — the planner-ablation baseline and the legacy
 //! Ring/Ring_Chunked API used by the GPT replays.
 
+use std::collections::HashMap;
+
 use crate::config::{Config, PlannerMode, Policy};
 use crate::coordinator::buffer::{UnboundBuffer, Window};
 use crate::coordinator::collective::{run_allreduce, Algo, Reducer, RustReducer};
 use crate::coordinator::context::Context;
 use crate::coordinator::control::load_balancer::{sync_overhead_us, Plan};
-use crate::coordinator::control::{ExceptionHandler, LoadBalancer, NicSelector, Timer};
-use crate::coordinator::planner::{run_plan, CollectivePlan, Planner, Schedule};
+use crate::coordinator::control::{size_bucket, ExceptionHandler, LoadBalancer, NicSelector, Timer};
+use crate::coordinator::planner::{
+    run_plan, CollectivePlan, PlanQualityReport, Planner, RailPlan, Schedule,
+};
 use crate::coordinator::transport::Rendezvous;
 use crate::net::cpu_pool::CpuPool;
 use crate::net::fault::FaultSchedule;
@@ -150,6 +154,15 @@ pub struct MultiRail {
     /// MPTCP slicing ops and after forced-dispatch ops, where no planner
     /// schedule executed) — for benches, ablation reports and tests.
     pub last_plan: Option<CollectivePlan>,
+    /// Per-plan predicted-vs-measured samples (planner-scheduled rail-ops
+    /// only) — the plan-quality dashboard source.
+    pub quality: PlanQualityReport,
+    /// Cached schedule selections keyed by (size bucket, participating
+    /// rails). Reused until a replan trigger fires: prediction error above
+    /// `replan_error`, or a failover changes the rail set.
+    plan_cache: HashMap<(u32, Vec<usize>), Vec<(usize, Schedule)>>,
+    /// The `replan_error` config threshold.
+    replan_error: f64,
     ops_done: u64,
 }
 
@@ -186,9 +199,11 @@ impl MultiRail {
             Policy::SingleRail => Box::new(crate::baselines::SingleRail::best()),
         };
         let forced_algo = match cfg.planner {
-            PlannerMode::Auto => None,
+            PlannerMode::Auto | PlannerMode::StaticCost => None,
             PlannerMode::Flat => Some(Algo::Ring),
         };
+        let mut planner = Planner::from_cluster(&cfg.cluster);
+        planner.use_corrections = cfg.planner != PlannerMode::StaticCost;
         Ok(MultiRail {
             fab,
             contexts,
@@ -197,15 +212,25 @@ impl MultiRail {
             exceptions: ExceptionHandler::new(cfg.control.clone()),
             partitioner,
             reducer: Box::new(RustReducer),
-            planner: Planner::from_cluster(&cfg.cluster),
+            planner,
             forced_algo,
             last_plan: None,
+            quality: PlanQualityReport::default(),
+            plan_cache: HashMap::new(),
+            replan_error: cfg.control.replan_error,
             ops_done: 0,
         })
     }
 
     pub fn with_faults(mut self, faults: FaultSchedule) -> Self {
         self.fab = self.fab.with_faults(faults);
+        self
+    }
+
+    /// Inject a persistent straggler on `rail` (see
+    /// [`Fabric::inject_straggler`]).
+    pub fn with_straggler(mut self, rail: usize, stall_us: f64, sigma: f64) -> Self {
+        self.fab.inject_straggler(rail, stall_us, sigma);
         self
     }
 
@@ -229,23 +254,77 @@ impl MultiRail {
         self.ops_done
     }
 
+    /// Current schedule-selection epoch: bumps on every fresh selection
+    /// pass, including mid-op failover replans. Stable while cached plans
+    /// are reused.
+    pub fn plan_epoch(&self) -> u64 {
+        self.planner.epoch()
+    }
+
     /// The collective plan the coordinator would execute for a `bytes`-
     /// sized op right now (None when the policy slices MPTCP-style or no
     /// rail is healthy). Used by bucket annotation and the benches.
     ///
-    /// Nothing executes and the clock does not advance, but the policy IS
-    /// consulted for real: for Nezha this warms the Load Balancer's
-    /// data-length table for this size class exactly as the planning phase
-    /// of a real op would (later real ops refine it through feedback).
+    /// Nothing executes, the clock does not advance and no selection epoch
+    /// starts, but the policy IS consulted for real: for Nezha this warms
+    /// the Load Balancer's data-length table for this size class exactly
+    /// as the planning phase of a real op would (later real ops refine it
+    /// through feedback).
     pub fn plan_for(&mut self, bytes: u64) -> Option<CollectivePlan> {
         let healthy = self.fab.healthy_rails();
         if healthy.is_empty() {
             return None;
         }
         match self.partitioner.plan(&self.fab, &self.timer, &healthy, bytes) {
-            PartitionPlan::Shares(fracs) => Some(self.planner.plan(&self.fab, &fracs, bytes)),
+            PartitionPlan::Shares(fracs) => {
+                Some(self.planner.preview(&self.fab, &self.timer, &fracs, bytes))
+            }
             PartitionPlan::Slices { .. } => None,
         }
+    }
+
+    /// Schedule selection with plan caching: reuse the cached selection
+    /// for this (size class, rail set) unless a participating rail's
+    /// predicted-vs-measured error exceeded `replan_error` — the
+    /// straggler-aware replan trigger that fires *between* ops/buckets.
+    fn plan_shares(&mut self, fracs: &[(usize, f64)], bytes: u64) -> CollectivePlan {
+        let mut rails: Vec<usize> = fracs.iter().map(|&(r, _)| r).collect();
+        rails.sort_unstable();
+        let key = (size_bucket(bytes), rails);
+        // Timer/correction classes are keyed by each rail's OWN share
+        // size (that's what it measures), so the trigger checks per-rail
+        // byte counts, not the op total.
+        if let Some(cached) = self.plan_cache.get(&key) {
+            let trigger = fracs.iter().any(|&(r, share)| {
+                let rail_bytes = (bytes as f64 * share) as u64;
+                self.planner
+                    .needs_replan(&self.timer, r, rail_bytes, self.replan_error)
+            });
+            if !trigger {
+                return self
+                    .planner
+                    .plan_cached(&self.fab, &self.timer, fracs, bytes, cached);
+            }
+        }
+        let plan = self.planner.plan(&self.fab, &self.timer, fracs, bytes);
+        // a replan that switches a rail's schedule invalidates that
+        // class's Timer history: the old schedule's window averages no
+        // longer describe what will run
+        if let Some(old) = self.plan_cache.get(&key) {
+            for a in &plan.assignments {
+                let switched = old
+                    .iter()
+                    .any(|&(r, s)| r == a.rail && s != a.schedule);
+                if switched {
+                    self.timer.forget_class(a.rail, a.bytes);
+                }
+            }
+        }
+        self.plan_cache.insert(
+            key,
+            plan.assignments.iter().map(|a| (a.rail, a.schedule)).collect(),
+        );
+        plan
     }
 
     /// Allreduce the full buffer (f32 payload; modeled bytes = 4×elems).
@@ -294,8 +373,9 @@ impl MultiRail {
                 } else {
                     // the balancer's split is the planner's input, not the
                     // final word on execution: each rail's window gets the
-                    // schedule the cost model picks for it
-                    let cplan = self.planner.plan(&self.fab, &fracs, bytes);
+                    // schedule the (measurement-corrected) cost model
+                    // picks for it, cached until a replan trigger fires
+                    let cplan = self.plan_shares(&fracs, bytes);
                     let res = self.exec_plan(buf, full, &cplan, elem_bytes)?;
                     self.last_plan = Some(cplan);
                     res
@@ -314,9 +394,21 @@ impl MultiRail {
         self.fab.advance(total);
 
         for s in &shares {
-            if s.bytes > 0 {
-                self.timer.record(s.rail, s.bytes, s.time_us);
+            if s.bytes == 0 {
+                continue;
             }
+            // Planner-scheduled ops key the Timer by the plan's share-based
+            // byte count — the exact value `plan_shares`' replan trigger
+            // and the corrections warm-up gate look up. (Window-derived
+            // bytes can round across a power-of-two bucket boundary and
+            // strand the gate in a class that never warms.)
+            let key_bytes = self
+                .last_plan
+                .as_ref()
+                .and_then(|p| p.assignments.iter().find(|a| a.rail == s.rail && a.bytes > 0))
+                .map(|a| a.bytes)
+                .unwrap_or(s.bytes);
+            self.timer.record(s.rail, key_bytes, s.time_us);
         }
         let fb: Vec<(usize, u64, f64)> =
             shares.iter().map(|s| (s.rail, s.bytes, s.time_us)).collect();
@@ -365,14 +457,22 @@ impl MultiRail {
         }
     }
 
-    /// Schedule to run on a failover's takeover rail.
+    /// Schedule to run on a failover's takeover rail (corrected costs at
+    /// the post-failover fabric state).
     fn takeover_schedule(&self, rail: usize, w: Window, elem_bytes: f64) -> Schedule {
         self.planner
-            .schedule_for(&self.fab, rail, w.len as f64 * elem_bytes)
+            .schedule_for(&self.fab, &self.timer, rail, w.len as f64 * elem_bytes)
             .0
     }
 
     /// Execute a collective plan's per-rail windows; handles failover.
+    ///
+    /// On a mid-op failover the Exception Handler migrates the failed
+    /// window to the optimal survivor AND the not-yet-executed windows of
+    /// the surviving rails are re-planned at the post-failover fabric
+    /// state (freed cores change contention, hence optimal schedules) — a
+    /// fresh selection epoch, not just a re-schedule of the migrated
+    /// window.
     fn exec_plan(
         &mut self,
         buf: &mut UnboundBuffer,
@@ -381,16 +481,19 @@ impl MultiRail {
         elem_bytes: f64,
     ) -> Result<(Vec<RailShare>, usize)> {
         let windows = cplan.windows(full);
-        let mut shares: Vec<RailShare> = Vec::with_capacity(cplan.assignments.len());
+        let mut assigns: Vec<RailPlan> = cplan.assignments.clone();
+        let mut shares: Vec<RailShare> = Vec::with_capacity(assigns.len());
         let mut failovers = 0usize;
-        let allocated: Vec<(usize, u64)> = cplan
-            .assignments
+        let planner_scheduled = self.forced_algo.is_none();
+        let allocated: Vec<(usize, u64)> = assigns
             .iter()
             .zip(&windows)
             .map(|(a, w)| (a.rail, (w.len as f64 * elem_bytes) as u64))
             .collect();
 
-        for (assign, &w) in cplan.assignments.iter().zip(&windows) {
+        for idx in 0..assigns.len() {
+            let assign = assigns[idx].clone();
+            let w = windows[idx];
             let rail = assign.rail;
             if w.is_empty() {
                 shares.push(RailShare { rail, bytes: 0, time_us: 0.0 });
@@ -400,11 +503,38 @@ impl MultiRail {
             match self.run_rail(assign.schedule, rail, buf, w, elem_bytes) {
                 Ok(out) => {
                     buf.complete(w);
-                    shares.push(RailShare {
-                        rail,
-                        bytes: (w.len as f64 * elem_bytes) as u64,
-                        time_us: out.time_us,
-                    });
+                    let rail_bytes = (w.len as f64 * elem_bytes) as u64;
+                    shares.push(RailShare { rail, bytes: rail_bytes, time_us: out.time_us });
+                    if planner_scheduled {
+                        // feed the corrected-cost layer and the plan-
+                        // quality dashboard. Corrections EWMA the raw
+                        // samples themselves; the Timer's completed
+                        // averaging window is the activation gate
+                        // (`Planner::corrections_active`), so decisions
+                        // stay damped the way the paper's Timer damps the
+                        // Load Balancer's. Keyed by the plan's share-based
+                        // byte count — the exact value the replan trigger
+                        // in `plan_shares` looks up.
+                        self.planner.observe(
+                            rail,
+                            assign.bytes,
+                            assign.rounds,
+                            assign.model_us,
+                            assign.predicted_us,
+                            out.time_us,
+                        );
+                        // current epoch, not the plan's: a mid-op failover
+                        // earlier in this loop bumped it and re-selected
+                        // the remaining schedules
+                        self.quality.record(
+                            rail,
+                            assign.bytes,
+                            assign.schedule,
+                            assign.predicted_us,
+                            out.time_us,
+                            self.planner.epoch(),
+                        );
+                    }
                 }
                 Err(RailDown(r)) => {
                     // §4.4: deregister, hand (ptr,len) to optimal survivor
@@ -414,12 +544,37 @@ impl MultiRail {
                         .handle_failure(&mut self.fab, r, w, &allocated)
                         .ok_or(Error::AllRailsDown(r))?;
                     self.timer.forget_rail(r);
+                    self.planner.corrections.forget_rail(r);
+                    // every cached selection assumed the old rail set
+                    self.plan_cache.clear();
+                    self.planner.bump_epoch();
                     // re-plan the migrated window for the takeover rail
                     let sched = self.takeover_schedule(ev.takeover_rail, w, elem_bytes);
                     let out = self
                         .run_rail(sched, ev.takeover_rail, buf, w, elem_bytes)
                         .map_err(|RailDown(r2)| Error::AllRailsDown(r2))?;
                     buf.complete(w);
+                    // ... and the surviving rails' pending windows at the
+                    // post-failover fabric state
+                    for j in idx + 1..assigns.len() {
+                        let wj = windows[j];
+                        let (rail_j, share_j) = (assigns[j].rail, assigns[j].share);
+                        if wj.is_empty() || rail_j == r {
+                            continue;
+                        }
+                        // keep the plan's share-based byte count as the
+                        // sizing/keying value so the replanned assignment
+                        // observes into the same class the replan trigger
+                        // and warm-up gate consult
+                        let rail_bytes = assigns[j].bytes as f64;
+                        assigns[j] = self.planner.rail_plan(
+                            &self.fab,
+                            &self.timer,
+                            rail_j,
+                            share_j,
+                            rail_bytes,
+                        );
+                    }
                     // takeover rail absorbs its own share later/earlier in
                     // this same op; account serially on that rail
                     let extra = ev.recovery_us + out.time_us;
@@ -737,6 +892,75 @@ mod tests {
         // cold start on SHARP: microseconds, not the ~1ms TCP ring
         assert!(rep.total_us < 100.0, "{}", rep.total_us);
         reduced_ok(&buf, 4, 256);
+    }
+
+    #[test]
+    fn plan_epoch_stable_while_predictions_hold() {
+        // clean deterministic fabric: the model matches measurements, so
+        // the cached plan is reused and no replan epochs start
+        let mut mr =
+            MultiRail::new(&cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha)).unwrap();
+        let elem_bytes = (16u64 << 20) as f64 / 1024.0;
+        let mut buf = make(4, 1024);
+        mr.allreduce_scaled(&mut buf, elem_bytes).unwrap();
+        let e = mr.plan_epoch();
+        assert!(e >= 1);
+        for _ in 0..8 {
+            let mut buf = make(4, 1024);
+            mr.allreduce_scaled(&mut buf, elem_bytes).unwrap();
+        }
+        assert_eq!(mr.plan_epoch(), e, "replanned without a trigger");
+        assert!(!mr.quality.is_empty());
+        assert!(mr.quality.median_rel_error().unwrap() < 0.05);
+    }
+
+    #[test]
+    fn straggler_triggers_replan_and_cuts_rounds() {
+        let mut c = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        c.control.timer_window = 3;
+        c.control.replan_error = 0.1;
+        // per-message stalls on rail 0; fixed 50/50 shares keep the size
+        // class stable so the test isolates the schedule-level response
+        let mut mr = MultiRail::new(&c).unwrap().with_straggler(0, 5_000.0, 0.0);
+        mr.partitioner = Box::new(crate::baselines::FixedShares::percent(50, 50));
+        let elem_bytes = (256u64 << 20) as f64 / 1024.0;
+        let mut buf = make(4, 1024);
+        mr.allreduce_scaled(&mut buf, elem_bytes).unwrap();
+        let first = mr.last_plan.clone().unwrap();
+        let rounds_before = first.assignments.iter().find(|a| a.rail == 0).unwrap().rounds;
+        let e_before = mr.plan_epoch();
+        for _ in 0..14 {
+            let mut buf = make(4, 1024);
+            mr.allreduce_scaled(&mut buf, elem_bytes).unwrap();
+        }
+        assert!(mr.plan_epoch() > e_before, "straggler must trigger a replan");
+        let last = mr.last_plan.clone().unwrap();
+        let rounds_after = last.assignments.iter().find(|a| a.rail == 0).unwrap().rounds;
+        assert!(
+            rounds_after < rounds_before,
+            "straggler rail should drop to a fewer-round schedule: {rounds_before} -> {rounds_after}"
+        );
+    }
+
+    #[test]
+    fn static_cost_mode_never_reacts_to_stragglers() {
+        let mut c = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        c.control.timer_window = 3;
+        c.planner = PlannerMode::StaticCost;
+        let mut mr = MultiRail::new(&c).unwrap().with_straggler(0, 5_000.0, 0.0);
+        mr.partitioner = Box::new(crate::baselines::FixedShares::percent(50, 50));
+        let elem_bytes = (256u64 << 20) as f64 / 1024.0;
+        let mut schedules = Vec::new();
+        for _ in 0..10 {
+            let mut buf = make(4, 1024);
+            mr.allreduce_scaled(&mut buf, elem_bytes).unwrap();
+            let p = mr.last_plan.as_ref().unwrap();
+            schedules.push(p.assignments.iter().find(|a| a.rail == 0).unwrap().schedule);
+        }
+        assert!(
+            schedules.windows(2).all(|w| w[0] == w[1]),
+            "static-cost schedules must not drift: {schedules:?}"
+        );
     }
 
     #[test]

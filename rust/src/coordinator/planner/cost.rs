@@ -1,12 +1,29 @@
-//! α-β (latency/bandwidth) cost model for candidate schedules.
+//! α-β (latency/bandwidth) cost model for candidate schedules, plus the
+//! measurement-corrected layer on top of it.
 //!
-//! Calibrated from the same per-protocol tables the fabric uses
-//! (`net/protocol.rs`: setup latency α, size-dependent effective bandwidth
-//! β(S), core-scaling and cross-member contention), so cost-model
-//! predictions and deterministic fabric measurements agree by
+//! The base model is calibrated from the same per-protocol tables the
+//! fabric uses (`net/protocol.rs`: setup latency α, size-dependent
+//! effective bandwidth β(S), core-scaling and cross-member contention), so
+//! cost-model predictions and deterministic fabric measurements agree by
 //! construction. All estimates are jitter-free: the planner must be
 //! deterministic for a given fabric state.
+//!
+//! [`CorrectedCost`] blends that a-priori model with the Timer's live
+//! observations ("Is Network the Bottleneck?" shows measured link
+//! performance routinely diverges from nominal specs): each completed
+//! rail-op feeds back (a) a per-round additive excess — the signature of a
+//! straggling rail stalling every lockstep round — and (b) a multiplicative
+//! residual of measured over corrected-predicted time. Candidate schedules
+//! then pay `rounds × round_extra`, so a persistently slow rail changes
+//! not just its share (Load Balancer) but its *schedule*: round-heavy
+//! deep-chunk pipelines lose to few-round schedules once per-round stalls
+//! dominate. With zero observations the corrected cost IS the pure α-β
+//! model, exactly (property-tested).
 
+use std::collections::HashMap;
+
+use crate::coordinator::control::size_bucket;
+use crate::coordinator::planner::plan::Schedule;
 use crate::net::simnet::Fabric;
 use crate::net::topology::IntraLink;
 
@@ -102,6 +119,155 @@ pub fn tree_us(fab: &Fabric, rail: usize, bytes: f64) -> f64 {
     fab.estimate_allreduce_us(rail, bytes)
 }
 
+/// Lockstep fabric rounds a schedule executes **on the rail** for `n`
+/// nodes — the unit the per-round straggler correction multiplies. Matches
+/// the executable schedules exactly: two-level counts only its inter-group
+/// rounds (intra phases ride the local fabric, not the rail), and
+/// halving-doubling on a non-power-of-two falls back to the flat ring just
+/// like `run_plan` does.
+pub fn schedule_rounds(s: Schedule, n: usize) -> usize {
+    match s.normalized() {
+        Schedule::Tree => 1,
+        Schedule::FlatRing => 2 * (n - 1),
+        Schedule::RingChunked { chunks } => 2 * (n - 1) + chunks - 1,
+        Schedule::HalvingDoubling => {
+            if n.is_power_of_two() {
+                2 * n.trailing_zeros() as usize
+            } else {
+                2 * (n - 1)
+            }
+        }
+        Schedule::TwoLevel { group, chunks } => {
+            let g = group.max(1);
+            if g > 1 && n % g == 0 && n / g >= 2 {
+                2 * (n / g - 1) + chunks.max(1) - 1
+            } else {
+                // invalid grouping executes as the seed's flat ring
+                2 * (n - 1)
+            }
+        }
+    }
+}
+
+/// EWMA weight for new correction observations.
+const CORR_EWMA: f64 = 0.25;
+/// Clamp band for the multiplicative residual (measured / predicted).
+const RATIO_MIN: f64 = 0.2;
+const RATIO_MAX: f64 = 10.0;
+/// Corrected costs never drop below this fraction of the pure model (a
+/// rail can measure faster than spec, but not implausibly so).
+const FLOOR_FRAC: f64 = 0.1;
+
+#[derive(Debug, Clone)]
+struct ClassCorr {
+    /// Additive per-round excess (us/round): straggler stalls.
+    round_extra_us: f64,
+    /// Multiplicative residual of measured over corrected-predicted time.
+    ratio: f64,
+    /// EWMA of the relative |predicted − measured| / measured error — the
+    /// replan trigger signal.
+    rel_err: f64,
+    obs: u64,
+}
+
+impl Default for ClassCorr {
+    fn default() -> Self {
+        ClassCorr { round_extra_us: 0.0, ratio: 1.0, rel_err: 0.0, obs: 0 }
+    }
+}
+
+/// Measurement-corrected cost layer: per-(rail, size-bucket) EWMA
+/// corrections over the pure α-β model, learned from completed rail-ops.
+#[derive(Debug, Clone, Default)]
+pub struct CorrectedCost {
+    classes: HashMap<(usize, u32), ClassCorr>,
+}
+
+impl CorrectedCost {
+    pub fn new() -> CorrectedCost {
+        CorrectedCost::default()
+    }
+
+    /// Feed back one completed rail-op: the schedule ran `rounds` fabric
+    /// rounds, the pure model said `model_us`, the (then-current) corrected
+    /// prediction said `predicted_us`, and the fabric measured
+    /// `measured_us`.
+    pub fn observe(
+        &mut self,
+        rail: usize,
+        bytes: u64,
+        rounds: usize,
+        model_us: f64,
+        predicted_us: f64,
+        measured_us: f64,
+    ) {
+        if rounds == 0 || model_us <= 0.0 || measured_us <= 0.0 {
+            return;
+        }
+        let c = self.classes.entry((rail, size_bucket(bytes))).or_default();
+        let extra = (measured_us - model_us) / rounds as f64;
+        c.round_extra_us += CORR_EWMA * (extra - c.round_extra_us);
+        if predicted_us > 0.0 {
+            let r = (measured_us / predicted_us).clamp(RATIO_MIN, RATIO_MAX);
+            c.ratio += CORR_EWMA * (r - c.ratio);
+            let e = (predicted_us - measured_us).abs() / measured_us;
+            c.rel_err += CORR_EWMA * (e - c.rel_err);
+        }
+        c.obs += 1;
+    }
+
+    /// Corrected cost of a candidate that the pure model prices at
+    /// `model_us` over `rounds` rail rounds. Exactly `model_us` when this
+    /// class has no observations.
+    pub fn corrected_us(&self, rail: usize, bytes: u64, rounds: usize, model_us: f64) -> f64 {
+        match self.classes.get(&(rail, size_bucket(bytes))) {
+            None => model_us,
+            Some(c) => {
+                let t = (model_us + rounds as f64 * c.round_extra_us) * c.ratio;
+                t.max(FLOOR_FRAC * model_us)
+            }
+        }
+    }
+
+    /// Learned per-round excess for this class (0 with no observations).
+    pub fn round_extra_us(&self, rail: usize, bytes: u64) -> f64 {
+        self.classes
+            .get(&(rail, size_bucket(bytes)))
+            .map(|c| c.round_extra_us)
+            .unwrap_or(0.0)
+    }
+
+    /// Learned multiplicative residual (1 with no observations).
+    pub fn ratio(&self, rail: usize, bytes: u64) -> f64 {
+        self.classes
+            .get(&(rail, size_bucket(bytes)))
+            .map(|c| c.ratio)
+            .unwrap_or(1.0)
+    }
+
+    /// EWMA'd relative prediction error for this class — the replan
+    /// trigger signal. `None` until the class has observations.
+    pub fn error(&self, rail: usize, bytes: u64) -> Option<f64> {
+        self.classes
+            .get(&(rail, size_bucket(bytes)))
+            .filter(|c| c.obs > 0)
+            .map(|c| c.rel_err)
+    }
+
+    pub fn observations(&self, rail: usize, bytes: u64) -> u64 {
+        self.classes
+            .get(&(rail, size_bucket(bytes)))
+            .map(|c| c.obs)
+            .unwrap_or(0)
+    }
+
+    /// Forget a rail's corrections (after failover the channel's behaviour
+    /// may have changed; §4.4 — mirrors `Timer::forget_rail`).
+    pub fn forget_rail(&mut self, rail: usize) {
+        self.classes.retain(|(r, _), _| *r != rail);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,5 +326,65 @@ mod tests {
     fn tree_cost_is_fabric_estimate() {
         let f = fab(&[ProtoKind::Tcp, ProtoKind::Sharp], 4);
         assert_eq!(tree_us(&f, 1, MB), f.estimate_allreduce_us(1, MB));
+    }
+
+    #[test]
+    fn schedule_rounds_match_executable_schedules() {
+        assert_eq!(schedule_rounds(Schedule::FlatRing, 8), 14);
+        assert_eq!(schedule_rounds(Schedule::RingChunked { chunks: 4 }, 8), 17);
+        assert_eq!(schedule_rounds(Schedule::HalvingDoubling, 8), 6);
+        // non-power-of-two halving-doubling executes as the flat ring
+        assert_eq!(schedule_rounds(Schedule::HalvingDoubling, 6), 10);
+        // two-level counts only inter-group rail rounds
+        assert_eq!(schedule_rounds(Schedule::TwoLevel { group: 4, chunks: 1 }, 16), 6);
+        assert_eq!(schedule_rounds(Schedule::TwoLevel { group: 4, chunks: 16 }, 16), 21);
+        // degenerate grouping normalizes to the (chunked) flat ring
+        assert_eq!(schedule_rounds(Schedule::TwoLevel { group: 1, chunks: 1 }, 8), 14);
+        assert_eq!(schedule_rounds(Schedule::Tree, 8), 1);
+    }
+
+    #[test]
+    fn corrections_start_as_the_pure_model() {
+        let c = CorrectedCost::new();
+        for (rounds, model) in [(1usize, 42.0), (14, 9_000.0), (29, 1.5e6)] {
+            assert_eq!(c.corrected_us(0, 8 << 20, rounds, model), model);
+        }
+        assert_eq!(c.round_extra_us(0, 1024), 0.0);
+        assert_eq!(c.ratio(0, 1024), 1.0);
+        assert!(c.error(0, 1024).is_none());
+    }
+
+    #[test]
+    fn straggler_stalls_learned_as_per_round_excess() {
+        let mut c = CorrectedCost::new();
+        // 14-round schedule, model 10ms, measured 10ms + 14×500us stalls
+        for _ in 0..40 {
+            c.observe(0, 8 << 20, 14, 10_000.0, 10_000.0, 17_000.0);
+        }
+        let extra = c.round_extra_us(0, 8 << 20);
+        assert!((extra - 500.0).abs() < 10.0, "extra {extra}");
+        // a 6-round candidate is now penalized far less than a 29-round one
+        let few = c.corrected_us(0, 8 << 20, 6, 10_000.0);
+        let many = c.corrected_us(0, 8 << 20, 29, 10_000.0);
+        assert!(many - few > 10_000.0, "few {few} many {many}");
+        // other classes stay pure
+        assert_eq!(c.corrected_us(1, 8 << 20, 14, 10_000.0), 10_000.0);
+        assert_eq!(c.corrected_us(0, 1 << 10, 14, 10_000.0), 10_000.0);
+    }
+
+    #[test]
+    fn error_tracks_prediction_quality_and_forgets() {
+        let mut c = CorrectedCost::new();
+        c.observe(2, 1 << 20, 10, 1_000.0, 1_000.0, 1_500.0);
+        let e = c.error(2, 1 << 20).unwrap();
+        assert!(e > 0.0, "err {e}");
+        assert_eq!(c.observations(2, 1 << 20), 1);
+        // accurate predictions drive the error back down
+        for _ in 0..60 {
+            c.observe(2, 1 << 20, 10, 1_000.0, 1_500.0, 1_500.0);
+        }
+        assert!(c.error(2, 1 << 20).unwrap() < 0.01);
+        c.forget_rail(2);
+        assert!(c.error(2, 1 << 20).is_none());
     }
 }

@@ -13,17 +13,23 @@
 //! * in-network tree (SHARP rails).
 //!
 //! Selection is by the deterministic α-β cost model ([`cost`]), calibrated
-//! from the same protocol tables as the fabric. Numerics are schedule
-//! independent: every ring-rail schedule executes the seed's
-//! `ring_numerics` over the same windows, so results stay bit-identical to
-//! the seed reducer across all plan types.
+//! from the same protocol tables as the fabric — *corrected* by the
+//! Timer's live measurements through [`cost::CorrectedCost`] once a
+//! (rail, size-class) has warmed up, so a persistently slow rail changes
+//! not just its share but its schedule (ROADMAP: straggler-aware
+//! replanning). Numerics are schedule independent: every ring-rail
+//! schedule executes the seed's `ring_numerics` over the same windows, so
+//! results stay bit-identical to the seed reducer across all plan types.
 
 pub mod cost;
 pub mod hierarchical;
 pub mod pipeline;
 pub mod plan;
+pub mod quality;
 
+pub use cost::CorrectedCost;
 pub use plan::{CollectivePlan, RailPlan, Schedule};
+pub use quality::PlanQualityReport;
 
 use crate::coordinator::buffer::{UnboundBuffer, Window};
 use crate::coordinator::collective::reducer::Reducer;
@@ -31,6 +37,7 @@ use crate::coordinator::collective::ring::ring_allreduce;
 use crate::coordinator::collective::tree::tree_allreduce;
 use crate::coordinator::collective::OpOutcome;
 use crate::coordinator::control::load_balancer::sync_overhead_us;
+use crate::coordinator::control::Timer;
 use crate::net::protocol::CollectiveKind;
 use crate::net::simnet::{Fabric, RailDown};
 use crate::net::topology::{ClusterSpec, IntraLink};
@@ -38,21 +45,88 @@ use crate::net::topology::{ClusterSpec, IntraLink};
 /// Pipeline depths the planner evaluates for chunked schedules.
 pub const CHUNK_CANDIDATES: [usize; 4] = [2, 4, 8, 16];
 
-/// The collective planner: stateless apart from the topology description.
-#[derive(Debug, Clone, Default)]
+/// The collective planner: topology description + the measurement-
+/// corrected cost state fed back from completed ops.
+#[derive(Debug, Clone)]
 pub struct Planner {
     /// Intra-group interconnect, when the cluster declares one. `None`
     /// (all the paper's flat testbeds) disables two-level candidates.
     pub intra: Option<IntraLink>,
+    /// Timer-fed measurement corrections over the α-β model.
+    pub corrections: CorrectedCost,
+    /// `false` under `planner = static-cost`: schedules stick to the
+    /// a-priori model (the corrections ablation baseline).
+    pub use_corrections: bool,
+    /// Monotone count of schedule-selection passes (plan epochs).
+    epoch: u64,
+}
+
+impl Default for Planner {
+    fn default() -> Planner {
+        Planner::new(None)
+    }
 }
 
 impl Planner {
     pub fn new(intra: Option<IntraLink>) -> Planner {
-        Planner { intra }
+        Planner {
+            intra,
+            corrections: CorrectedCost::new(),
+            use_corrections: true,
+            epoch: 0,
+        }
     }
 
     pub fn from_cluster(cluster: &ClusterSpec) -> Planner {
-        Planner { intra: cluster.intra.clone() }
+        Planner::new(cluster.intra.clone())
+    }
+
+    /// Current schedule-selection epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Start a new selection epoch (fresh plan, or mid-op failover
+    /// replan). Returns the new epoch.
+    pub fn bump_epoch(&mut self) -> u64 {
+        self.epoch += 1;
+        self.epoch
+    }
+
+    /// True once this (rail, size-class) applies measurement corrections:
+    /// corrections enabled, the Timer's averaging window has completed
+    /// (warm-up gate), and observations exist.
+    pub fn corrections_active(&self, timer: &Timer, rail: usize, bytes: u64) -> bool {
+        self.use_corrections
+            && timer.warmed_up(rail, bytes)
+            && self.corrections.observations(rail, bytes) > 0
+    }
+
+    /// Feed back one completed rail-op into the corrected-cost layer.
+    pub fn observe(
+        &mut self,
+        rail: usize,
+        bytes: u64,
+        rounds: usize,
+        model_us: f64,
+        predicted_us: f64,
+        measured_us: f64,
+    ) {
+        self.corrections
+            .observe(rail, bytes, rounds, model_us, predicted_us, measured_us);
+    }
+
+    /// Replan trigger: the EWMA'd predicted-vs-measured error for this
+    /// (rail, size-class) exceeds `threshold` (the `replan_error` config
+    /// key) while corrections are active.
+    pub fn needs_replan(&self, timer: &Timer, rail: usize, bytes: u64, threshold: f64) -> bool {
+        if !self.corrections_active(timer, rail, bytes) {
+            return false;
+        }
+        match self.corrections.error(rail, bytes) {
+            Some(e) => e > threshold,
+            None => false,
+        }
     }
 
     /// Valid grouping for `n` nodes, if any: >1 nodes per group and ≥2
@@ -67,69 +141,213 @@ impl Planner {
         }
     }
 
-    /// Best (schedule, predicted time) for `bytes` modeled bytes on
-    /// `rail`, at the fabric's current resource state.
-    pub fn schedule_for(&self, fab: &Fabric, rail: usize, bytes: f64) -> (Schedule, f64) {
+    /// Pure α-β model cost of one *specific* schedule for `bytes` on
+    /// `rail` — matching `run_plan`'s execution (incl. its defensive
+    /// fallbacks), so predictions and deterministic measurements agree.
+    pub fn model_us(&self, fab: &Fabric, rail: usize, bytes: f64, schedule: Schedule) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        let n = fab.nodes;
+        match schedule.normalized() {
+            Schedule::Tree => cost::tree_us(fab, rail, bytes),
+            Schedule::FlatRing => cost::flat_ring_us(fab, rail, bytes, n),
+            Schedule::RingChunked { chunks } => cost::ring_chunked_us(fab, rail, bytes, n, chunks),
+            Schedule::HalvingDoubling => {
+                if n.is_power_of_two() {
+                    cost::halving_doubling_us(fab, rail, bytes, n)
+                } else {
+                    cost::flat_ring_us(fab, rail, bytes, n)
+                }
+            }
+            Schedule::TwoLevel { group, chunks } => match self.grouping(n) {
+                Some(link) if link.group_size == group => {
+                    cost::two_level_us(fab, rail, bytes, n, link, chunks)
+                }
+                _ => cost::flat_ring_us(fab, rail, bytes, n),
+            },
+        }
+    }
+
+    /// Measurement-corrected cost of `schedule`, given its pure model cost
+    /// — the pure model verbatim until the class's corrections are active.
+    fn corrected_us(
+        &self,
+        timer: &Timer,
+        fab: &Fabric,
+        rail: usize,
+        bytes: f64,
+        schedule: Schedule,
+        model_us: f64,
+    ) -> f64 {
+        let b = bytes as u64;
+        if !self.corrections_active(timer, rail, b) {
+            return model_us;
+        }
+        let rounds = cost::schedule_rounds(schedule, fab.nodes);
+        self.corrections.corrected_us(rail, b, rounds, model_us)
+    }
+
+    /// Best (schedule, corrected predicted time) for `bytes` modeled bytes
+    /// on `rail`, at the fabric's current resource state and the current
+    /// measurement corrections.
+    pub fn schedule_for(
+        &self,
+        fab: &Fabric,
+        timer: &Timer,
+        rail: usize,
+        bytes: f64,
+    ) -> (Schedule, f64) {
         if bytes <= 0.0 {
             return (Schedule::FlatRing, 0.0);
         }
         match fab.rails[rail].protocol.collective {
-            CollectiveKind::Tree => (Schedule::Tree, cost::tree_us(fab, rail, bytes)),
+            CollectiveKind::Tree => {
+                let m = cost::tree_us(fab, rail, bytes);
+                let t = self.corrected_us(timer, fab, rail, bytes, Schedule::Tree, m);
+                (Schedule::Tree, t)
+            }
             CollectiveKind::Ring => {
                 let n = fab.nodes;
-                let mut best = (Schedule::FlatRing, cost::flat_ring_us(fab, rail, bytes, n));
+                let mut candidates: Vec<Schedule> = Vec::with_capacity(10);
+                candidates.push(Schedule::FlatRing);
                 for &c in &CHUNK_CANDIDATES {
-                    let t = cost::ring_chunked_us(fab, rail, bytes, n, c);
-                    if t < best.1 {
-                        best = (Schedule::RingChunked { chunks: c }, t);
-                    }
+                    candidates.push(Schedule::RingChunked { chunks: c });
                 }
                 if n.is_power_of_two() && n >= 4 {
-                    let t = cost::halving_doubling_us(fab, rail, bytes, n);
-                    if t < best.1 {
-                        best = (Schedule::HalvingDoubling, t);
-                    }
+                    candidates.push(Schedule::HalvingDoubling);
                 }
                 if let Some(link) = self.grouping(n) {
                     for c in std::iter::once(1).chain(CHUNK_CANDIDATES) {
-                        let t = cost::two_level_us(fab, rail, bytes, n, link, c);
-                        if t < best.1 {
-                            best = (
-                                Schedule::TwoLevel { group: link.group_size, chunks: c },
-                                t,
-                            );
-                        }
+                        candidates.push(Schedule::TwoLevel { group: link.group_size, chunks: c });
                     }
                 }
-                (best.0.normalized(), best.1)
+                let mut best: Option<(Schedule, f64)> = None;
+                for s in candidates {
+                    let m = self.model_us(fab, rail, bytes, s);
+                    let t = self.corrected_us(timer, fab, rail, bytes, s, m);
+                    let better = match best {
+                        Some((_, bt)) => t < bt,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((s, t));
+                    }
+                }
+                let (s, t) = best.expect("ring rails always have candidates");
+                (s.normalized(), t)
             }
         }
     }
 
-    /// Build the executable plan from the Load Balancer's `(rail, α)`
-    /// shares — the balancer's split is the input; the planner picks each
-    /// rail's schedule and predicts the op's completion time.
-    pub fn plan(&self, fab: &Fabric, shares: &[(usize, f64)], bytes: u64) -> CollectivePlan {
-        assert!(!shares.is_empty(), "planner needs at least one share");
-        let mut assignments = Vec::with_capacity(shares.len());
-        for &(rail, share) in shares {
-            let rail_bytes = bytes as f64 * share;
-            let (schedule, predicted_us) = self.schedule_for(fab, rail, rail_bytes);
-            assignments.push(RailPlan {
-                rail,
-                share,
-                bytes: rail_bytes as u64,
-                schedule,
-                predicted_us,
-            });
+    /// Full [`RailPlan`] for one rail's slice: selected schedule, corrected
+    /// prediction, pure model estimate and rail round count.
+    pub fn rail_plan(
+        &self,
+        fab: &Fabric,
+        timer: &Timer,
+        rail: usize,
+        share: f64,
+        rail_bytes: f64,
+    ) -> RailPlan {
+        let (schedule, predicted_us) = self.schedule_for(fab, timer, rail, rail_bytes);
+        let model_us = self.model_us(fab, rail, rail_bytes, schedule);
+        let rounds = if rail_bytes <= 0.0 {
+            0
+        } else {
+            cost::schedule_rounds(schedule, fab.nodes)
+        };
+        RailPlan {
+            rail,
+            share,
+            bytes: rail_bytes as u64,
+            schedule,
+            predicted_us,
+            model_us,
+            rounds,
         }
+    }
+
+    fn finish(bytes: u64, assignments: Vec<RailPlan>, epoch: u64) -> CollectivePlan {
         let active = assignments.iter().filter(|a| a.bytes > 0).count();
         let worst = assignments.iter().fold(0.0f64, |m, a| m.max(a.predicted_us));
         CollectivePlan {
             bytes,
             assignments,
             predicted_us: worst + sync_overhead_us(active),
+            epoch,
         }
+    }
+
+    /// What a fresh selection pass would pick right now, WITHOUT starting
+    /// a new epoch — introspection/annotation (`MultiRail::plan_for`).
+    pub fn preview(
+        &self,
+        fab: &Fabric,
+        timer: &Timer,
+        shares: &[(usize, f64)],
+        bytes: u64,
+    ) -> CollectivePlan {
+        assert!(!shares.is_empty(), "planner needs at least one share");
+        let assignments = shares
+            .iter()
+            .map(|&(rail, share)| self.rail_plan(fab, timer, rail, share, bytes as f64 * share))
+            .collect();
+        Self::finish(bytes, assignments, self.epoch)
+    }
+
+    /// Build the executable plan from the Load Balancer's `(rail, α)`
+    /// shares — the balancer's split is the input; the planner picks each
+    /// rail's schedule (under the corrected cost model) and predicts the
+    /// op's completion time. Starts a new selection epoch.
+    pub fn plan(
+        &mut self,
+        fab: &Fabric,
+        timer: &Timer,
+        shares: &[(usize, f64)],
+        bytes: u64,
+    ) -> CollectivePlan {
+        self.bump_epoch();
+        self.preview(fab, timer, shares, bytes)
+    }
+
+    /// Re-price a previously selected schedule set against fresh shares
+    /// and the current corrections, without re-running selection (the
+    /// coordinator's plan-cache fast path). Rails missing from `cached`
+    /// fall back to fresh selection.
+    pub fn plan_cached(
+        &self,
+        fab: &Fabric,
+        timer: &Timer,
+        shares: &[(usize, f64)],
+        bytes: u64,
+        cached: &[(usize, Schedule)],
+    ) -> CollectivePlan {
+        assert!(!shares.is_empty(), "planner needs at least one share");
+        let assignments = shares
+            .iter()
+            .map(|&(rail, share)| {
+                let rail_bytes = bytes as f64 * share;
+                match cached.iter().find(|&&(r, _)| r == rail) {
+                    Some(&(_, schedule)) if rail_bytes > 0.0 => {
+                        let model_us = self.model_us(fab, rail, rail_bytes, schedule);
+                        let predicted_us =
+                            self.corrected_us(timer, fab, rail, rail_bytes, schedule, model_us);
+                        RailPlan {
+                            rail,
+                            share,
+                            bytes: rail_bytes as u64,
+                            schedule,
+                            predicted_us,
+                            model_us,
+                            rounds: cost::schedule_rounds(schedule, fab.nodes),
+                        }
+                    }
+                    _ => self.rail_plan(fab, timer, rail, share, rail_bytes),
+                }
+            })
+            .collect();
+        Self::finish(bytes, assignments, self.epoch)
     }
 }
 
@@ -194,12 +412,16 @@ mod tests {
         Fabric::new(nodes, rails, CpuPool::default(), 5).deterministic()
     }
 
+    fn cold_timer() -> Timer {
+        Timer::new(100)
+    }
+
     #[test]
     fn sharp_rail_always_schedules_tree() {
         let c = ClusterSpec::local();
         let f = fab(&[ProtoKind::Tcp, ProtoKind::Sharp], 4, &c);
         let p = Planner::from_cluster(&c);
-        let (s, t) = p.schedule_for(&f, 1, 8.0 * MB);
+        let (s, t) = p.schedule_for(&f, &cold_timer(), 1, 8.0 * MB);
         assert_eq!(s, Schedule::Tree);
         assert!(t > 0.0);
     }
@@ -211,7 +433,7 @@ mod tests {
         assert!(p.intra.is_none());
         let f = fab(&[ProtoKind::Tcp], 16, &c);
         for kb in [4.0, 256.0, 16384.0, 262144.0] {
-            let (s, _) = p.schedule_for(&f, 0, kb * KB);
+            let (s, _) = p.schedule_for(&f, &cold_timer(), 0, kb * KB);
             assert!(
                 !matches!(s, Schedule::TwoLevel { .. }),
                 "{kb}KB chose {s:?} on a flat cluster"
@@ -224,7 +446,7 @@ mod tests {
         let c = ClusterSpec::pods(4);
         let p = Planner::from_cluster(&c);
         let f = fab(&[ProtoKind::Tcp], 16, &c);
-        let (s, t_two) = p.schedule_for(&f, 0, 16.0 * MB);
+        let (s, t_two) = p.schedule_for(&f, &cold_timer(), 0, 16.0 * MB);
         assert!(matches!(s, Schedule::TwoLevel { group: 4, .. }), "{s:?}");
         let flat = cost::flat_ring_us(&f, 0, 16.0 * MB, 16);
         assert!(t_two < flat, "two-level {t_two} vs flat {flat}");
@@ -236,17 +458,17 @@ mod tests {
         let p = Planner::from_cluster(&c);
         // 6 nodes don't divide into groups of 4 → no two-level candidates
         let f = fab(&[ProtoKind::Tcp], 6, &c);
-        let (s, _) = p.schedule_for(&f, 0, 64.0 * MB);
+        let (s, _) = p.schedule_for(&f, &cold_timer(), 0, 64.0 * MB);
         assert!(!matches!(s, Schedule::TwoLevel { .. }), "{s:?}");
     }
 
     #[test]
     fn plan_covers_shares_and_predicts_sync() {
         let c = ClusterSpec::local();
-        let p = Planner::from_cluster(&c);
+        let mut p = Planner::from_cluster(&c);
         let f = fab(&[ProtoKind::Tcp, ProtoKind::Glex], 8, &c);
         let shares = vec![(0usize, 0.4), (1usize, 0.6)];
-        let plan = p.plan(&f, &shares, 16 << 20);
+        let plan = p.plan(&f, &cold_timer(), &shares, 16 << 20);
         assert_eq!(plan.rails(), vec![0, 1]);
         assert_eq!(plan.active_rails(), 2);
         assert!(plan.conserves(Window::new(0, 4096)));
@@ -255,17 +477,21 @@ mod tests {
             .iter()
             .fold(0.0f64, |m, a| m.max(a.predicted_us));
         assert!((plan.predicted_us - worst - sync_overhead_us(2)).abs() < 1e-9);
+        // each fresh selection pass starts a new epoch
+        assert_eq!(plan.epoch, 1);
+        assert_eq!(p.plan(&f, &cold_timer(), &shares, 16 << 20).epoch, 2);
     }
 
     #[test]
     fn zero_share_assignment_is_inert() {
         let c = ClusterSpec::local();
-        let p = Planner::from_cluster(&c);
+        let mut p = Planner::from_cluster(&c);
         let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, &c);
-        let plan = p.plan(&f, &[(0, 1.0), (1, 0.0)], 1 << 20);
+        let plan = p.plan(&f, &cold_timer(), &[(0, 1.0), (1, 0.0)], 1 << 20);
         assert_eq!(plan.active_rails(), 1);
         assert_eq!(plan.assignments[1].bytes, 0);
         assert_eq!(plan.assignments[1].predicted_us, 0.0);
+        assert_eq!(plan.assignments[1].rounds, 0);
     }
 
     #[test]
@@ -275,12 +501,66 @@ mod tests {
         let c = ClusterSpec::local();
         let p = Planner::from_cluster(&c);
         let f = fab(&[ProtoKind::Tcp], 8, &c);
-        let (s_small, _) = p.schedule_for(&f, 0, 256.0 * KB);
+        let (s_small, _) = p.schedule_for(&f, &cold_timer(), 0, 256.0 * KB);
         assert_eq!(s_small, Schedule::HalvingDoubling, "256KB");
-        let (s_big, _) = p.schedule_for(&f, 0, 256.0 * MB);
+        let (s_big, _) = p.schedule_for(&f, &cold_timer(), 0, 256.0 * MB);
         assert!(
             matches!(s_big, Schedule::RingChunked { .. } | Schedule::FlatRing),
             "256MB chose {s_big:?}"
         );
+    }
+
+    #[test]
+    fn corrections_switch_schedule_once_warmed() {
+        // per-round stalls on a straggler rail must push selection toward
+        // fewer-round schedules — but only after the Timer warm-up gate
+        let c = ClusterSpec::local();
+        let mut p = Planner::from_cluster(&c);
+        let f = fab(&[ProtoKind::Tcp], 4, &c);
+        let mut timer = Timer::new(2);
+        let bytes = 256.0 * MB;
+        let (s0, t0) = p.schedule_for(&f, &timer, 0, bytes);
+        let rounds0 = cost::schedule_rounds(s0, 4);
+        // report huge per-round stalls for this class
+        let model = p.model_us(&f, 0, bytes, s0);
+        let measured = model + rounds0 as f64 * 200_000.0;
+        for _ in 0..6 {
+            p.observe(0, bytes as u64, rounds0, model, model, measured);
+            timer.record(0, bytes as u64, measured);
+        }
+        assert!(p.corrections_active(&timer, 0, bytes as u64));
+        let (s1, t1) = p.schedule_for(&f, &timer, 0, bytes);
+        let rounds1 = cost::schedule_rounds(s1, 4);
+        assert!(
+            rounds1 < rounds0,
+            "straggler correction should cut rounds: {s0:?}({rounds0}) -> {s1:?}({rounds1})"
+        );
+        assert!(t1 > t0, "corrected cost must reflect the stalls");
+        // static-cost mode ignores the corrections entirely
+        p.use_corrections = false;
+        let (s2, t2) = p.schedule_for(&f, &timer, 0, bytes);
+        assert_eq!(s2, s0);
+        assert_eq!(t2, t0);
+    }
+
+    #[test]
+    fn plan_cached_repricing_keeps_schedules() {
+        let c = ClusterSpec::local();
+        let mut p = Planner::from_cluster(&c);
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp], 8, &c);
+        let t = cold_timer();
+        let shares = vec![(0usize, 0.5), (1usize, 0.5)];
+        let plan = p.plan(&f, &t, &shares, 32 << 20);
+        let cached: Vec<(usize, Schedule)> =
+            plan.assignments.iter().map(|a| (a.rail, a.schedule)).collect();
+        // re-price under shifted shares: schedules stay, bytes/costs move
+        let shifted = vec![(0usize, 0.25), (1usize, 0.75)];
+        let re = p.plan_cached(&f, &t, &shifted, 32 << 20, &cached);
+        assert_eq!(re.epoch, plan.epoch, "repricing must not start an epoch");
+        for (a, b) in plan.assignments.iter().zip(&re.assignments) {
+            assert_eq!(a.schedule, b.schedule);
+        }
+        assert!(re.conserves(Window::new(0, 4096)));
+        assert_eq!(re.assignments[1].bytes, 24 << 20);
     }
 }

@@ -65,8 +65,13 @@ pub struct RailPlan {
     /// Modeled payload bytes on this rail.
     pub bytes: u64,
     pub schedule: Schedule,
-    /// Cost-model completion estimate for this rail alone (us).
+    /// Measurement-corrected completion estimate for this rail alone (us)
+    /// — what the plan-quality report scores against the measurement.
     pub predicted_us: f64,
+    /// Pure (uncorrected) α-β model estimate for this rail (us).
+    pub model_us: f64,
+    /// Lockstep fabric rounds the schedule runs on the rail.
+    pub rounds: usize,
 }
 
 /// The full multi-rail plan for one allreduce.
@@ -77,6 +82,9 @@ pub struct CollectivePlan {
     pub assignments: Vec<RailPlan>,
     /// Predicted end-to-end time: slowest rail + cross-rail sync (us).
     pub predicted_us: f64,
+    /// Schedule-selection epoch this plan was built at (bumps on every
+    /// fresh selection pass, incl. mid-op failover replans).
+    pub epoch: u64,
 }
 
 impl CollectivePlan {
@@ -93,9 +101,11 @@ impl CollectivePlan {
                 bytes: (bytes as f64 * share) as u64,
                 schedule: Schedule::FlatRing,
                 predicted_us: 0.0,
+                model_us: 0.0,
+                rounds: 0,
             })
             .collect();
-        CollectivePlan { bytes, assignments, predicted_us: 0.0 }
+        CollectivePlan { bytes, assignments, predicted_us: 0.0, epoch: 0 }
     }
 
     /// Carve the op window into per-assignment windows — identical
@@ -159,6 +169,8 @@ mod tests {
                     bytes: 250,
                     schedule: Schedule::FlatRing,
                     predicted_us: 10.0,
+                    model_us: 10.0,
+                    rounds: 6,
                 },
                 RailPlan {
                     rail: 1,
@@ -166,9 +178,12 @@ mod tests {
                     bytes: 750,
                     schedule: Schedule::TwoLevel { group: 4, chunks: 2 },
                     predicted_us: 20.0,
+                    model_us: 20.0,
+                    rounds: 7,
                 },
             ],
             predicted_us: 20.0,
+            epoch: 1,
         }
     }
 

@@ -1,0 +1,207 @@
+//! Plan-quality tracking: per-plan predicted vs measured completion time.
+//!
+//! Every planner-scheduled rail-op contributes one sample (the corrected
+//! prediction the plan carried vs the time the fabric measured). The
+//! report closes the ROADMAP's "plan quality dashboard" item: the harness
+//! and `bench_allreduce` emit it in the `util::json` bench result format,
+//! and CI regresses the deterministic sweep's median relative error
+//! against a committed ceiling so cost-model drift fails the build.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::planner::plan::Schedule;
+use crate::util::json::Json;
+use crate::util::stats::percentile;
+
+/// One executed rail-op's prediction vs measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct QualitySample {
+    pub rail: usize,
+    /// Modeled payload bytes on the rail.
+    pub bytes: u64,
+    /// Label of the schedule that executed.
+    pub schedule: &'static str,
+    /// Corrected cost-model prediction at plan time (us).
+    pub predicted_us: f64,
+    /// Fabric-measured completion time (us).
+    pub measured_us: f64,
+    /// Schedule-selection epoch of the plan.
+    pub epoch: u64,
+}
+
+impl QualitySample {
+    /// Relative prediction error |predicted − measured| / measured.
+    pub fn rel_error(&self) -> f64 {
+        if self.measured_us <= 0.0 {
+            0.0
+        } else {
+            (self.predicted_us - self.measured_us).abs() / self.measured_us
+        }
+    }
+}
+
+/// Bounded ring buffer of [`QualitySample`]s plus aggregate accessors.
+#[derive(Debug, Clone)]
+pub struct PlanQualityReport {
+    samples: Vec<QualitySample>,
+    cursor: usize,
+    cap: usize,
+    total: u64,
+}
+
+impl Default for PlanQualityReport {
+    fn default() -> Self {
+        PlanQualityReport::new(16384)
+    }
+}
+
+impl PlanQualityReport {
+    pub fn new(cap: usize) -> PlanQualityReport {
+        PlanQualityReport { samples: Vec::new(), cursor: 0, cap: cap.max(1), total: 0 }
+    }
+
+    pub fn record(
+        &mut self,
+        rail: usize,
+        bytes: u64,
+        schedule: Schedule,
+        predicted_us: f64,
+        measured_us: f64,
+        epoch: u64,
+    ) {
+        let s = QualitySample {
+            rail,
+            bytes,
+            schedule: schedule.label(),
+            predicted_us,
+            measured_us,
+            epoch,
+        };
+        if self.samples.len() < self.cap {
+            self.samples.push(s);
+        } else {
+            self.samples[self.cursor] = s;
+            self.cursor = (self.cursor + 1) % self.cap;
+        }
+        self.total += 1;
+    }
+
+    /// Samples currently retained (≤ cap).
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Lifetime sample count (including evicted ones).
+    pub fn total_recorded(&self) -> u64 {
+        self.total
+    }
+
+    pub fn samples(&self) -> &[QualitySample] {
+        &self.samples
+    }
+
+    pub fn clear(&mut self) {
+        self.samples.clear();
+        self.cursor = 0;
+        self.total = 0;
+    }
+
+    fn rel_errors(&self) -> Vec<f64> {
+        self.samples.iter().map(|s| s.rel_error()).collect()
+    }
+
+    /// Median |predicted − measured| / measured over retained samples —
+    /// the number the CI regression guards.
+    pub fn median_rel_error(&self) -> Option<f64> {
+        let errs = self.rel_errors();
+        if errs.is_empty() {
+            None
+        } else {
+            Some(percentile(&errs, 50.0))
+        }
+    }
+
+    pub fn p95_rel_error(&self) -> Option<f64> {
+        let errs = self.rel_errors();
+        if errs.is_empty() {
+            None
+        } else {
+            Some(percentile(&errs, 95.0))
+        }
+    }
+
+    /// The report document (`util::json` bench result format): overall
+    /// aggregates plus a per-schedule breakdown.
+    pub fn to_json(&self) -> Json {
+        let mut by_schedule: BTreeMap<&'static str, Vec<f64>> = BTreeMap::new();
+        for s in &self.samples {
+            by_schedule.entry(s.schedule).or_default().push(s.rel_error());
+        }
+        let schedules: Vec<Json> = by_schedule
+            .iter()
+            .map(|(label, errs)| {
+                Json::obj(vec![
+                    ("schedule", Json::Str((*label).to_string())),
+                    ("n", Json::from(errs.len() as f64)),
+                    ("median_rel_err", Json::from(percentile(errs, 50.0))),
+                    ("p95_rel_err", Json::from(percentile(errs, 95.0))),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("report", Json::Str("plan_quality".to_string())),
+            ("n", Json::from(self.len() as f64)),
+            ("total_recorded", Json::from(self.total as f64)),
+            (
+                "median_rel_err",
+                self.median_rel_error().map(Json::from).unwrap_or(Json::Null),
+            ),
+            (
+                "p95_rel_err",
+                self.p95_rel_error().map(Json::from).unwrap_or(Json::Null),
+            ),
+            ("schedules", Json::Arr(schedules)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_aggregates() {
+        let mut r = PlanQualityReport::new(8);
+        r.record(0, 1 << 20, Schedule::FlatRing, 100.0, 100.0, 1);
+        r.record(1, 1 << 20, Schedule::HalvingDoubling, 150.0, 100.0, 1);
+        assert_eq!(r.len(), 2);
+        let med = r.median_rel_error().unwrap();
+        assert!(med <= 0.5 && med >= 0.0, "med {med}");
+        let j = r.to_json();
+        assert_eq!(j.get("report").and_then(|v| v.as_str()), Some("plan_quality"));
+        assert_eq!(j.get("n").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("schedules").and_then(|v| v.as_arr()).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn ring_buffer_caps_retained_samples() {
+        let mut r = PlanQualityReport::new(4);
+        for i in 0..10 {
+            r.record(0, 1024, Schedule::FlatRing, i as f64, 1.0, 0);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.total_recorded(), 10);
+    }
+
+    #[test]
+    fn empty_report_has_no_aggregates() {
+        let r = PlanQualityReport::default();
+        assert!(r.is_empty());
+        assert!(r.median_rel_error().is_none());
+        assert_eq!(r.to_json().get("median_rel_err"), Some(&Json::Null));
+    }
+}

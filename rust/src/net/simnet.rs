@@ -19,6 +19,20 @@ use crate::util::rng::Pcg;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RailDown(pub usize);
 
+/// Persistent per-rail straggler: every message on the rail pays an extra
+/// stall (paper §2.3.3's slow-NIC/incast pathologies). `sigma > 0` samples
+/// the stall log-normally around `stall_us`; `sigma == 0` charges it
+/// exactly (reproducible in `deterministic` mode). Deliberately invisible
+/// to the analytic model paths (`transfer_det_us`,
+/// `estimate_allreduce_us`) — stragglers are exactly the measured-vs-
+/// predicted divergence the planner's `CorrectedCost` layer must learn.
+#[derive(Debug, Clone, Copy)]
+pub struct Straggler {
+    pub rail: usize,
+    pub stall_us: f64,
+    pub sigma: f64,
+}
+
 /// Multi-rail fabric across `nodes` symmetric nodes.
 #[derive(Debug, Clone)]
 pub struct Fabric {
@@ -26,6 +40,8 @@ pub struct Fabric {
     pub rails: Vec<Rail>,
     pub cpu: CpuPool,
     pub faults: FaultSchedule,
+    /// Injected per-rail stragglers (unmodeled per-message stalls).
+    stragglers: Vec<Straggler>,
     /// Virtual clock (us).
     clock_us: f64,
     /// Log-normal per-message jitter sigma (0 disables jitter).
@@ -44,6 +60,7 @@ impl Fabric {
             rails,
             cpu,
             faults: FaultSchedule::none(),
+            stragglers: Vec::new(),
             clock_us: 0.0,
             jitter_sigma: 0.03,
             rng: Pcg::new(seed),
@@ -53,6 +70,40 @@ impl Fabric {
     pub fn with_faults(mut self, faults: FaultSchedule) -> Fabric {
         self.faults = faults;
         self
+    }
+
+    /// Builder form of [`Fabric::inject_straggler`].
+    pub fn with_straggler(mut self, rail: usize, stall_us: f64, sigma: f64) -> Fabric {
+        self.inject_straggler(rail, stall_us, sigma);
+        self
+    }
+
+    /// Make `rail` a persistent straggler: every message pays an extra
+    /// `stall_us` stall (log-normal around it when `sigma > 0`). The
+    /// analytic cost model does NOT see the stall — only measurements do.
+    pub fn inject_straggler(&mut self, rail: usize, stall_us: f64, sigma: f64) {
+        self.stragglers.push(Straggler { rail, stall_us, sigma });
+    }
+
+    /// Remove all injected stragglers from `rail` (the fault healed).
+    pub fn clear_straggler(&mut self, rail: usize) {
+        self.stragglers.retain(|s| s.rail != rail);
+    }
+
+    /// Sampled extra stall for one message on `rail` (0 when healthy).
+    fn straggler_stall_us(&mut self, rail: usize) -> f64 {
+        let mut stall = 0.0;
+        // indexed loop: sampling needs `&mut self.rng` while walking the list
+        let mut i = 0;
+        while i < self.stragglers.len() {
+            let s = self.stragglers[i];
+            if s.rail == rail {
+                let j = if s.sigma > 0.0 { self.rng.jitter(s.sigma) } else { 1.0 };
+                stall += s.stall_us * j;
+            }
+            i += 1;
+        }
+        stall
     }
 
     /// Disable stochastic jitter (deterministic analytic times).
@@ -145,7 +196,7 @@ impl Fabric {
         } else {
             1.0
         };
-        Ok(base * j)
+        Ok(base * j + self.straggler_stall_us(rail))
     }
 
     /// One lockstep collective round on `rail`: every node sends a message
@@ -171,7 +222,7 @@ impl Fabric {
         } else {
             1.0
         };
-        Ok(base * j)
+        Ok(base * j + self.straggler_stall_us(rail))
     }
 
     /// Analytic single-rail allreduce estimate at current resources (used
@@ -273,6 +324,38 @@ mod tests {
         let tv = fv.transfer(0, 4.0 * MB).unwrap();
         let ts = fs.transfer(0, 4.0 * MB).unwrap();
         assert!(tv > 1.8 * ts, "tv={tv} ts={ts}");
+    }
+
+    #[test]
+    fn straggler_slows_measurements_but_not_the_model() {
+        let mut f = dual_tcp(4).with_straggler(1, 500.0, 0.0);
+        let clean = f.transfer(0, MB).unwrap();
+        let slow = f.transfer(1, MB).unwrap();
+        // rails are identical TCP planes: the stall is the whole gap
+        assert!((slow - clean - 500.0).abs() < 1e-6, "clean {clean} slow {slow}");
+        // the deterministic model path stays blind to the straggler
+        assert_eq!(f.transfer_det_us(0, MB), f.transfer_det_us(1, MB));
+        assert_eq!(
+            f.estimate_allreduce_us(0, 8.0 * MB),
+            f.estimate_allreduce_us(1, 8.0 * MB)
+        );
+        f.clear_straggler(1);
+        assert_eq!(f.transfer(0, MB).unwrap(), f.transfer(1, MB).unwrap());
+    }
+
+    #[test]
+    fn lognormal_straggler_is_reproducible() {
+        let mk = || dual_tcp(4).with_straggler(0, 300.0, 0.4);
+        let (mut a, mut b) = (mk(), mk());
+        let mut widened = false;
+        for _ in 0..16 {
+            let ta = a.transfer(0, MB).unwrap();
+            assert_eq!(ta, b.transfer(0, MB).unwrap());
+            if (ta - a.transfer_det_us(0, MB) - 300.0).abs() > 1.0 {
+                widened = true; // sigma actually spreads the stall
+            }
+        }
+        assert!(widened);
     }
 
     #[test]

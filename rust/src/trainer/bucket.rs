@@ -97,6 +97,14 @@ impl BucketPlan {
     pub fn is_multirail(&self) -> bool {
         self.plan.as_ref().map(|p| p.active_rails() >= 2).unwrap_or(false)
     }
+
+    /// Schedule-selection epoch the annotation was taken at (None under
+    /// slicing policies). Buckets annotated across a replan boundary —
+    /// e.g. after the coordinator's predicted-vs-measured error tripped
+    /// `replan_error` — carry different epochs.
+    pub fn plan_epoch(&self) -> Option<u64> {
+        self.plan.as_ref().map(|p| p.epoch)
+    }
 }
 
 #[cfg(test)]
@@ -163,6 +171,8 @@ mod tests {
             assert!(plan.conserves(bp.window));
             // 16MB hot buckets split across both rails
             assert!(bp.is_multirail(), "{plan:?}");
+            // annotation previews never start a selection epoch
+            assert_eq!(bp.plan_epoch(), Some(mr.plan_epoch()));
         }
     }
 

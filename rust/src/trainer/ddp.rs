@@ -93,6 +93,13 @@ impl DdpSim {
         Ok(())
     }
 
+    /// The coordinator's schedule-selection epoch: stable while bucket
+    /// plans are reused, bumps when the predicted-vs-measured error trips
+    /// `replan_error` between buckets (straggler-aware replanning).
+    pub fn plan_epoch(&self) -> u64 {
+        self.mr.plan_epoch()
+    }
+
     /// One training iteration time (us): compute + exposed communication.
     pub fn iter_time_us(&mut self) -> Result<f64> {
         let compute = self.profile.compute_us(self.batch_per_gpu);
@@ -216,6 +223,33 @@ mod tests {
         let cs = mk(false).comm_us().unwrap();
         let cp = mk(true).comm_us().unwrap();
         assert_eq!(cs, cp);
+    }
+
+    #[test]
+    fn straggler_mid_training_replans_between_buckets() {
+        let mut c = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        c.control.timer_window = 3;
+        c.control.replan_error = 0.15;
+        // drop the 512KB ops: they sit on the cold/hot threshold, and this
+        // test is about replan triggers, not threshold flips
+        let mut profile = CommProfile::vgg11();
+        profile.ops.retain(|&b| b >= 2 << 20);
+        let mut sim = DdpSim::new(&c, profile, 1, 64).unwrap();
+        // long warmup: balancer corrections converge, all size classes
+        // have cached plans
+        sim.warmup(12).unwrap();
+        let settled = sim.plan_epoch();
+        // without a straggler the cached bucket plans keep being reused
+        sim.warmup(3).unwrap();
+        assert_eq!(sim.plan_epoch(), settled, "replanned without divergence");
+        // a rail turning into a straggler mid-training must trip the
+        // predicted-vs-measured replan trigger between buckets
+        sim.mr.fab.inject_straggler(0, 4_000.0, 0.0);
+        sim.warmup(8).unwrap();
+        assert!(
+            sim.plan_epoch() > settled,
+            "mid-training straggler must force a replan"
+        );
     }
 
     #[test]

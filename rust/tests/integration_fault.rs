@@ -1,12 +1,14 @@
 //! Integration: fault tolerance (paper §4.4 / Fig. 8) — detection +
 //! migration under the 200 ms budget, payload integrity across failovers,
-//! re-admission after recovery, and behaviour when all rails die.
+//! re-admission after recovery, mid-op replanning of surviving rails, and
+//! behaviour when all rails die.
 
 use nezha::config::{Config, Policy};
 use nezha::coordinator::buffer::UnboundBuffer;
+use nezha::coordinator::control::exception::PAPER_RECOVERY_BUDGET_US;
 use nezha::coordinator::multirail::MultiRail;
 use nezha::net::fault::FaultSchedule;
-use nezha::net::topology::parse_combo;
+use nezha::net::topology::{parse_combo, ClusterSpec};
 
 fn cfg(combo: &str, policy: Policy) -> Config {
     Config {
@@ -131,6 +133,60 @@ fn flapping_rail_multiple_failovers() {
         assert_eq!(buf.node(3)[5], expect);
     }
     assert!(total_failovers >= 2, "flapping produced {total_failovers} failovers");
+}
+
+#[test]
+fn mid_op_failover_replans_survivors_within_budget() {
+    // 16-node pods topology, 4 TCP rails; rail 1 dies mid-op. The §4.4
+    // handler must migrate the failed window AND the surviving rails'
+    // pending windows must be re-planned (a fresh selection epoch), with
+    // the recovery inside the paper's 200 ms budget.
+    let mut c = cfg("tcp-tcp-tcp-tcp", Policy::Nezha);
+    c.cluster = ClusterSpec::pods(4);
+    c.nodes = 16;
+    let mut mr = MultiRail::new(&c)
+        .unwrap()
+        .with_faults(FaultSchedule::none().with(1, 0.0, 1e12));
+    let len = 1 << 16;
+    let mut buf = UnboundBuffer::from_fn(16, len, |n, i| ((n * 5 + i) % 13) as f32);
+    // one clean-state probe of what the planner WOULD do (no epoch): all
+    // four rails participate before the fault surfaces
+    let bytes = 256u64 << 20;
+    let preview = mr.plan_for(bytes).unwrap();
+    assert!(preview.active_rails() >= 2, "{preview:?}");
+    let epoch_before = mr.plan_epoch();
+    let rep = mr
+        .allreduce_scaled(&mut buf, bytes as f64 / len as f64)
+        .unwrap();
+    assert_eq!(rep.failovers, 1);
+    // plan epoch bumped at least twice: the op's own selection pass plus
+    // the mid-op failover replan of the surviving rails
+    assert!(
+        mr.plan_epoch() >= epoch_before + 2,
+        "epoch {} -> {} (no mid-op replan?)",
+        epoch_before,
+        mr.plan_epoch()
+    );
+    // recovery within the simulated 200 ms budget of §4.4
+    assert_eq!(mr.exceptions.failover_count(), 1);
+    assert!(mr.exceptions.all_within_budget());
+    for ev in &mr.exceptions.events {
+        assert!(ev.recovery_us < PAPER_RECOVERY_BUDGET_US, "{ev:?}");
+        assert_eq!(ev.failed_rail, 1);
+    }
+    // numerics survive the failover + replan
+    for i in (0..len).step_by(2039) {
+        let expect: f32 = (0..16).map(|n| ((n * 5 + i) % 13) as f32).sum();
+        assert_eq!(buf.node(0)[i], expect, "elem {i}");
+    }
+    // the next op re-plans for the reduced rail set (fresh cache key) and
+    // completes without further failovers
+    let mut buf2 = UnboundBuffer::from_fn(16, 1024, |n, i| ((n + i) % 7) as f32);
+    let rep2 = mr
+        .allreduce_scaled(&mut buf2, bytes as f64 / 1024.0)
+        .unwrap();
+    assert_eq!(rep2.failovers, 0);
+    assert!(mr.plan_epoch() > epoch_before + 2);
 }
 
 #[test]

@@ -143,6 +143,32 @@ fn plan_for_exposes_consistent_plan() {
     assert_eq!(sum, rep.bytes);
 }
 
+/// Plan-quality regression (tier-1): across the deterministic harness
+/// sweep the median relative |predicted − measured| / measured error must
+/// stay under the committed ceiling — cost-model drift fails the build.
+#[test]
+fn plan_quality_median_error_under_committed_threshold() {
+    // same case list as the emitted report/CI artifact — shared via
+    // bench::harness so coverage cannot silently diverge
+    for (name, cluster, combo, nodes) in nezha::bench::harness::plan_quality_cases() {
+        let report = nezha::bench::plan_quality_sweep(&cluster, combo, nodes, 10, 5).unwrap();
+        assert!(!report.is_empty(), "{name}: sweep produced no samples");
+        let median = report.median_rel_error().unwrap();
+        assert!(
+            median <= nezha::bench::PLAN_QUALITY_MEDIAN_ERR_MAX,
+            "{name}: median prediction error {median:.4} exceeds ceiling {}",
+            nezha::bench::PLAN_QUALITY_MEDIAN_ERR_MAX
+        );
+        // the JSON document carries the aggregate (dashboard artifact)
+        let j = report.to_json();
+        assert_eq!(j.get("report").and_then(|v| v.as_str()), Some("plan_quality"));
+        assert!(
+            j.get("median_rel_err").and_then(|v| v.as_f64()).unwrap()
+                <= nezha::bench::PLAN_QUALITY_MEDIAN_ERR_MAX
+        );
+    }
+}
+
 #[test]
 fn failover_replans_onto_survivor_with_planner() {
     let mut mr = MultiRail::new(&cfg(ClusterSpec::pods(4), "tcp-tcp", 16, PlannerMode::Auto))

@@ -1,0 +1,198 @@
+//! Integration: straggler-aware replanning (ROADMAP milestone).
+//!
+//! A persistent log-normal straggler injected on one rail via the Fabric
+//! is invisible to the a-priori α-β model — only measurements see it. The
+//! planner's `CorrectedCost` layer must (a) learn the per-round stalls
+//! once the Timer warm-up gate opens and switch the straggler rail to a
+//! fewer-round schedule, (b) keep allreduce results bit-identical to the
+//! seed's fixed dispatch across the switch, and (c) beat the
+//! corrections-disabled `planner=static-cost` ablation end-to-end.
+
+use nezha::baselines::FixedShares;
+use nezha::config::{Config, PlannerMode, Policy};
+use nezha::coordinator::buffer::UnboundBuffer;
+use nezha::coordinator::multirail::MultiRail;
+use nezha::coordinator::planner::cost::schedule_rounds;
+use nezha::net::topology::{parse_combo, ClusterSpec};
+use nezha::util::rng::Pcg;
+
+const ELEMS: usize = 1024;
+/// 768 MB modeled ops: big enough that deep chunk pipelines win on the
+/// clean model, and a 50% share (384 MB) sits mid-bucket so the size
+/// class is stable.
+const OP_BYTES: u64 = 768 << 20;
+const STALL_US: f64 = 15_000.0;
+
+fn pods_cfg(mode: PlannerMode) -> Config {
+    let mut c = Config {
+        cluster: ClusterSpec::pods(4),
+        nodes: 16,
+        combo: parse_combo("tcp-tcp").unwrap(),
+        policy: Policy::Nezha,
+        deterministic: true,
+        ..Config::default()
+    };
+    c.planner = mode;
+    c.control.timer_window = 4;
+    c.control.replan_error = 0.2;
+    c
+}
+
+fn op(mr: &mut MultiRail, data: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let mut buf = UnboundBuffer::new(data.to_vec());
+    mr.allreduce_scaled(&mut buf, OP_BYTES as f64 / ELEMS as f64)
+        .unwrap();
+    buf.into_data()
+}
+
+fn int_data(seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg::new(seed);
+    (0..16)
+        .map(|_| (0..ELEMS).map(|_| rng.range(-40, 40) as f32).collect())
+        .collect()
+}
+
+/// The satellite's core assertion: the straggler rail's schedule switches
+/// after warm-up (fewer rail rounds), and every op before, during and
+/// after the switch reduces bit-identically to the seed reducer.
+#[test]
+fn straggler_switches_schedule_after_warmup_bit_identical() {
+    let mut mr = MultiRail::new(&pods_cfg(PlannerMode::Auto))
+        .unwrap()
+        // log-normal stalls (sigma 0.4) around 15 ms per message on rail 0
+        .with_straggler(0, STALL_US, 0.4);
+    // fixed 50/50 shares isolate the schedule-level response from the
+    // Load Balancer's share-level one
+    mr.partitioner = Box::new(FixedShares::percent(50, 50));
+
+    // integer-valued payloads sum exactly in f32: equality below is exact
+    let expect = |data: &[Vec<f32>]| -> Vec<f32> {
+        (0..ELEMS)
+            .map(|i| data.iter().map(|d| d[i]).sum())
+            .collect()
+    };
+
+    let first_data = int_data(1);
+    let reduced = op(&mut mr, &first_data);
+    let want = expect(&first_data);
+    for n in 0..16 {
+        assert_eq!(reduced[n], want, "node {n} before warm-up");
+    }
+    let first = mr.last_plan.clone().unwrap();
+    let s_before = first.assignments.iter().find(|a| a.rail == 0).unwrap().schedule;
+    let rounds_before = schedule_rounds(s_before, 16);
+
+    // warm up past the Timer window; the replan trigger must fire
+    for k in 0..16u64 {
+        let data = int_data(100 + k);
+        let reduced = op(&mut mr, &data);
+        let want = expect(&data);
+        for n in 0..16 {
+            assert_eq!(reduced[n], want, "node {n} op {k}: numerics drifted");
+        }
+    }
+
+    let last = mr.last_plan.clone().unwrap();
+    let s_after = last.assignments.iter().find(|a| a.rail == 0).unwrap().schedule;
+    let rounds_after = schedule_rounds(s_after, 16);
+    assert_ne!(s_after, s_before, "planner never switched the straggler rail");
+    assert!(
+        rounds_after < rounds_before,
+        "switch must cut rail rounds: {s_before:?}({rounds_before}) -> {s_after:?}({rounds_after})"
+    );
+    // the corrected prediction owns the stalls: per-round excess learned
+    let share_bytes = OP_BYTES / 2;
+    assert!(
+        mr.planner.corrections.round_extra_us(0, share_bytes) > 0.5 * STALL_US,
+        "round_extra {}",
+        mr.planner.corrections.round_extra_us(0, share_bytes)
+    );
+}
+
+/// Bitwise cross-check against the seed's fixed flat-ring dispatch: same
+/// data, same fixed shares — every node's reduced buffer is identical
+/// bit-for-bit even while the corrected planner switches schedules
+/// (normal-distributed floats, so rounding order matters: this checks
+/// true bitwise identity, not just integer sums).
+#[test]
+fn straggler_run_matches_seed_dispatch_bitwise() {
+    let run = |mode: PlannerMode| -> Vec<Vec<Vec<f32>>> {
+        let mut mr = MultiRail::new(&pods_cfg(mode))
+            .unwrap()
+            .with_straggler(0, STALL_US, 0.4);
+        mr.partitioner = Box::new(FixedShares::percent(50, 50));
+        (0..10u64)
+            .map(|k| {
+                let mut rng = Pcg::new(500 + k);
+                let data: Vec<Vec<f32>> = (0..16)
+                    .map(|_| (0..ELEMS).map(|_| rng.normal() as f32).collect())
+                    .collect();
+                op(&mut mr, &data)
+            })
+            .collect()
+    };
+    let auto = run(PlannerMode::Auto);
+    let seed = run(PlannerMode::Flat);
+    for (k, (a, s)) in auto.iter().zip(&seed).enumerate() {
+        for n in 0..16 {
+            assert_eq!(a[n], s[n], "op {k} node {n} diverged bitwise");
+        }
+    }
+}
+
+#[test]
+fn corrections_beat_static_cost_under_straggler() {
+    // The acceptance criterion: with a straggler on one rail of the pods
+    // topology, planner=auto (corrections) beats planner=auto without
+    // them (static-cost) on end-to-end allreduce time.
+    let cluster = ClusterSpec::pods(4);
+    let (static_us, _) = nezha::bench::straggler_mode_latency(
+        &cluster,
+        "tcp-tcp",
+        16,
+        PlannerMode::StaticCost,
+        0,
+        STALL_US,
+        OP_BYTES,
+        25,
+        6,
+    )
+    .unwrap();
+    let (auto_us, auto_plan) = nezha::bench::straggler_mode_latency(
+        &cluster,
+        "tcp-tcp",
+        16,
+        PlannerMode::Auto,
+        0,
+        STALL_US,
+        OP_BYTES,
+        25,
+        6,
+    )
+    .unwrap();
+    assert!(
+        auto_us < 0.97 * static_us,
+        "corrections must win under a straggler: auto {auto_us}us vs static {static_us}us ({auto_plan})"
+    );
+}
+
+/// The Load Balancer reacts at the share level in parallel: its α table
+/// moves data off the straggler rail (Nezha policy, no fixed shares).
+#[test]
+fn balancer_shares_shift_off_straggler_rail() {
+    let mut mr = MultiRail::new(&pods_cfg(PlannerMode::Auto))
+        .unwrap()
+        .with_straggler(0, STALL_US, 0.0);
+    for _ in 0..20 {
+        let mut buf = UnboundBuffer::from_fn(16, ELEMS, |n, i| ((n + i) % 7) as f32);
+        mr.allreduce_scaled(&mut buf, OP_BYTES as f64 / ELEMS as f64)
+            .unwrap();
+    }
+    let alphas = mr.partitioner.alphas(OP_BYTES).expect("hot class");
+    let a0 = alphas.iter().find(|(r, _)| *r == 0).map(|(_, a)| *a).unwrap_or(0.0);
+    let a1 = alphas.iter().find(|(r, _)| *r == 1).map(|(_, a)| *a).unwrap_or(0.0);
+    assert!(
+        a0 < a1,
+        "straggler rail should carry less: a0 {a0} vs a1 {a1}"
+    );
+}

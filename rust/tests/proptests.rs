@@ -213,7 +213,7 @@ fn prop_collective_plan_conserves_bytes_and_claimed_rails() {
         let group = [1usize, 2, 4][rng.below(3) as usize];
         let rails = ClusterSpec::local().build_rails(combo).unwrap();
         let fab = Fabric::new(nodes, rails, CpuPool::default(), case as u64).deterministic();
-        let planner = Planner::new(if group > 1 {
+        let mut planner = Planner::new(if group > 1 {
             Some(IntraLink { group_size: group, bw_mbps: 5000.0, setup_us: 15.0 })
         } else {
             None
@@ -222,7 +222,7 @@ fn prop_collective_plan_conserves_bytes_and_claimed_rails() {
         let a = rng.f64();
         let shares = vec![(0usize, a), (1usize, 1.0 - a)];
         let bytes = 1u64 << (10 + rng.below(19)); // 1KB..256MB
-        let plan = planner.plan(&fab, &shares, bytes);
+        let plan = planner.plan(&fab, &Timer::new(100), &shares, bytes);
         let full = Window::new(rng.below(512) as usize, 1 + rng.below(1 << 20) as usize);
         assert!(plan.conserves(full), "case {case}: {plan:?}");
         assert_eq!(plan.rails(), vec![0, 1], "case {case}");
@@ -262,7 +262,7 @@ fn prop_hierarchical_reduces_to_flat_ring_on_degenerate_groups() {
         );
         assert_eq!(cost::intra_phase_us(&g1, bytes), 0.0);
         let planner = Planner::new(Some(g1.clone()));
-        let (s, _) = planner.schedule_for(&fab, 0, bytes);
+        let (s, _) = planner.schedule_for(&fab, &Timer::new(100), 0, bytes);
         assert!(
             !matches!(s, Schedule::TwoLevel { .. }),
             "case {case}: degenerate grouping emitted {s:?}"
@@ -273,6 +273,94 @@ fn prop_hierarchical_reduces_to_flat_ring_on_degenerate_groups() {
         Schedule::TwoLevel { group: 1, chunks: 1 }.normalized(),
         Schedule::FlatRing
     );
+}
+
+/// Property: `CorrectedCost` with zero observations equals the pure α-β
+/// model EXACTLY (bit-for-bit), for arbitrary classes, rounds and model
+/// costs — corrections must be invisible until data exists.
+#[test]
+fn prop_corrected_cost_zero_observations_is_identity() {
+    let mut rng = Pcg::new(3001);
+    let c = cost::CorrectedCost::new();
+    for _ in 0..CASES {
+        let rail = rng.below(8) as usize;
+        let bytes = 1u64 << (6 + rng.below(24));
+        let rounds = 1 + rng.below(64) as usize;
+        let model = rng.range_f64(1e-3, 1e9);
+        assert_eq!(c.corrected_us(rail, bytes, rounds, model), model);
+    }
+}
+
+/// Property: corrections never change *how much* a rail carries — planner
+/// invariant 1. For random share splits and arbitrary (even hostile)
+/// observation histories, the corrected plan's shares, windows and
+/// per-rail byte split are identical to the uncorrected plan's.
+#[test]
+fn prop_corrections_preserve_shares() {
+    let mut rng = Pcg::new(3002);
+    for case in 0..CASES {
+        let nodes = [2usize, 4, 8, 16][rng.below(4) as usize];
+        let rails = ClusterSpec::local()
+            .build_rails(&[ProtoKind::Tcp, ProtoKind::Glex])
+            .unwrap();
+        let fab = Fabric::new(nodes, rails, CpuPool::default(), case as u64).deterministic();
+        let mut timer = Timer::new(1); // every class warms instantly
+        let mut planner = Planner::new(None);
+        let bytes = 1u64 << (12 + rng.below(17));
+        let a = rng.f64();
+        let shares = vec![(0usize, a), (1usize, 1.0 - a)];
+        let clean = planner.plan(&fab, &Timer::new(100), &shares, bytes);
+        // hostile feedback: random measurements, warm both classes
+        for &(rail, share) in &shares {
+            let rail_bytes = (bytes as f64 * share) as u64;
+            for _ in 0..5 {
+                let measured = rng.range_f64(1.0, 1e7);
+                planner.observe(rail, rail_bytes, 1 + rng.below(40) as usize, 1_000.0, 1_000.0, measured);
+                timer.record(rail, rail_bytes, measured);
+            }
+        }
+        let corrected = planner.plan(&fab, &timer, &shares, bytes);
+        let full = Window::new(0, 1 + rng.below(1 << 18) as usize);
+        assert!(corrected.conserves(full), "case {case}");
+        assert_eq!(clean.rails(), corrected.rails(), "case {case}");
+        for (x, y) in clean.assignments.iter().zip(&corrected.assignments) {
+            assert_eq!(x.share, y.share, "case {case}: share changed");
+            assert_eq!(x.bytes, y.bytes, "case {case}: byte split changed");
+        }
+        assert_eq!(clean.windows(full), corrected.windows(full), "case {case}");
+    }
+}
+
+/// Property: monotonicity — a rail whose measurements are uniformly
+/// slower (scaled by k ≥ 1) never gets a LOWER corrected cost than the
+/// same rail with the unscaled measurements, for any candidate.
+#[test]
+fn prop_corrected_cost_monotone_in_measured_slowdown() {
+    let mut rng = Pcg::new(3003);
+    for case in 0..CASES {
+        let mut base = cost::CorrectedCost::new();
+        let mut slow = cost::CorrectedCost::new();
+        let bytes = 1u64 << (10 + rng.below(18));
+        let k = rng.range_f64(1.0, 4.0);
+        let n_obs = 1 + rng.below(20);
+        let obs_rounds = 1 + rng.below(40) as usize;
+        let model = rng.range_f64(10.0, 1e6);
+        for _ in 0..n_obs {
+            let measured = model * rng.range_f64(0.5, 3.0);
+            base.observe(0, bytes, obs_rounds, model, model, measured);
+            slow.observe(0, bytes, obs_rounds, model, model, measured * k);
+        }
+        for _ in 0..8 {
+            let cand_rounds = 1 + rng.below(40) as usize;
+            let cand_model = rng.range_f64(10.0, 1e6);
+            let tb = base.corrected_us(0, bytes, cand_rounds, cand_model);
+            let ts = slow.corrected_us(0, bytes, cand_rounds, cand_model);
+            assert!(
+                ts >= tb - 1e-9,
+                "case {case}: slower rail got cheaper ({ts} < {tb}, k={k})"
+            );
+        }
+    }
 }
 
 /// Property: cross-bucket pipelining is bounded — never worse than the
