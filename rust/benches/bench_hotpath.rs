@@ -1,88 +1,61 @@
-//! `cargo bench --bench bench_hotpath` — wall-clock benchmarks of the L3
-//! hot paths: the reduction kernels (portable vs AOT Pallas), ring
-//! numerics, the partition planner, and the full per-op coordinator
-//! overhead. These are the numbers the §Perf pass in EXPERIMENTS.md
-//! optimizes.
-
-use std::sync::Arc;
+//! `cargo bench --bench bench_hotpath [-- quick]` — wall-clock benchmark
+//! of the collective hot path: before/after ops-per-second of the modeled
+//! allreduce sweep (fresh-allocation vs pooled data plane), reduction
+//! kernel GB/s (portable `add_into` + fused `reduce_copy`), and the
+//! coordinator micro-overheads. Writes the tracked `BENCH_hotpath.json`
+//! trajectory at the repo root (uploaded as a CI artifact; see DESIGN.md
+//! for the methodology).
 
 use nezha::bench::harness::{bench_wall, BenchStats};
-use nezha::config::{Config, Policy};
+use nezha::bench::hotpath;
 use nezha::coordinator::buffer::UnboundBuffer;
 use nezha::coordinator::collective::ring::ring_numerics;
 use nezha::coordinator::collective::{Reducer, RustReducer};
-use nezha::coordinator::multirail::MultiRail;
-use nezha::net::topology::parse_combo;
-use nezha::runtime::{Engine, PjrtReducer};
 use nezha::util::table::Table;
 
 fn main() -> nezha::Result<()> {
-    let mut t = Table::new(&BenchStats::header());
-    let mut thr: Vec<(String, f64)> = Vec::new();
+    let quick = std::env::args().any(|a| a == "quick" || a == "--quick");
 
-    // 1. portable reducer: 1M-element add (4 MB per operand)
+    // 1. the tracked sweep + kernel document (writes BENCH_hotpath.json)
+    let doc = hotpath::write_report(quick)?;
+    let mut t = Table::new(&["size", "before ops/s", "after ops/s", "speedup"]);
+    if let Some(rows) = doc.get("sweep").and_then(|s| s.as_arr()) {
+        for r in rows {
+            t.row(vec![
+                r.get("size").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+                format!("{:.0}", r.get("before_ops_per_sec").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+                format!("{:.0}", r.get("after_ops_per_sec").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+                format!("{:.2}x", r.get("speedup").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+            ]);
+        }
+    }
+    t.print();
+    if let Some(k) = doc.get("kernels") {
+        println!(
+            "kernels: add_into {:.2} GB/s, reduce_copy {:.2} GB/s",
+            k.get("add_into_gbps").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            k.get("reduce_copy_gbps").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        );
+    }
+
+    // 2. micro: full 4-node ring numerics on 1M elems (fused kernels)
     const N: usize = 1 << 20;
+    let mut micro = Table::new(&BenchStats::header());
+    let mut buf = UnboundBuffer::from_fn(4, N, |n, i| ((n + i) % 5) as f32);
+    let w = buf.full_window();
+    let s = bench_wall("ring_numerics_4x1M", 2, 20, || {
+        ring_numerics(&mut buf, w, &mut RustReducer);
+    });
+    micro.row(s.row());
     let mut dst = vec![1.0f32; N];
     let src = vec![2.0f32; N];
     let mut red = RustReducer;
     let s = bench_wall("rust_reducer_add_1M", 5, 50, || {
         red.add_into(&mut dst, &src);
     });
-    thr.push(("rust_reducer GB/s".into(), (N * 4) as f64 / s.mean_us / 1e3));
-    t.row(s.row());
+    micro.row(s.row());
+    micro.print();
 
-    // 2. AOT Pallas add_pair kernel (pjrt feature + artifacts built)
-    if cfg!(feature = "pjrt") && std::path::Path::new("artifacts/manifest.json").exists() {
-        let engine = Arc::new(Engine::new("artifacts")?);
-        let mut pjrt = PjrtReducer::new(engine)?;
-        let mut dst = vec![1.0f32; 262144];
-        let src = vec![2.0f32; 262144];
-        let s = bench_wall("pallas_add_pair_256K", 3, 30, || {
-            pjrt.add_into(&mut dst, &src);
-        });
-        thr.push(("pallas_add_pair GB/s".into(), (262144 * 4) as f64 / s.mean_us / 1e3));
-        t.row(s.row());
-    }
-
-    // 3. ring numerics: full 4-node reduce-scatter+allgather on 1M elems
-    let mut buf = UnboundBuffer::from_fn(4, N, |n, i| ((n + i) % 5) as f32);
-    let w = buf.full_window();
-    let s = bench_wall("ring_numerics_4x1M", 2, 20, || {
-        ring_numerics(&mut buf, w, &mut RustReducer);
-    });
-    thr.push((
-        "ring_numerics effective GB/s".into(),
-        // 2(N-1)/N * S bytes touched per node x N nodes
-        (2.0 * 3.0 * (N * 4) as f64) / s.mean_us / 1e3,
-    ));
-    t.row(s.row());
-
-    // 4. full coordinator op (plan + sim + numerics + feedback), small buf
-    let cfg = Config {
-        nodes: 8,
-        combo: parse_combo("tcp-sharp")?,
-        policy: Policy::Nezha,
-        deterministic: true,
-        ..Config::default()
-    };
-    let mut mr = MultiRail::new(&cfg)?;
-    let s = bench_wall("coordinator_op_overhead", 50, 500, || {
-        let mut buf = UnboundBuffer::from_fn(8, 256, |n, j| ((n + j) % 7) as f32);
-        mr.allreduce_scaled(&mut buf, 32768.0).unwrap();
-    });
-    t.row(s.row());
-
-    // 5. planner alone at steady state
-    let s = bench_wall("plan_only_hot_path", 50, 2000, || {
-        let healthy = mr.fab.healthy_rails();
-        let _ = mr.partitioner.plan(&mr.fab, &mr.timer, &healthy, 8 << 20);
-    });
-    t.row(s.row());
-
-    t.print();
-    println!();
-    for (name, v) in thr {
-        println!("{name}: {v:.2}");
-    }
+    println!("\nwrote {}", hotpath::report_path());
     Ok(())
 }

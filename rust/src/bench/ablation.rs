@@ -6,7 +6,7 @@
 //! Run: `cargo run --release -- fig ablate`
 
 use crate::config::{Config, PlannerMode, Policy};
-use crate::coordinator::buffer::UnboundBuffer;
+use crate::coordinator::buffer::BufferPool;
 use crate::coordinator::multirail::MultiRail;
 use crate::net::protocol::ProtoKind;
 use crate::net::topology::{parse_combo, ClusterSpec};
@@ -66,9 +66,11 @@ pub fn ablate_eta() -> Result<()> {
         let elem_bytes = (16u64 << 20) as f64 / ELEMS as f64;
         let mut converged_at = None;
         let mut last_err = 1.0;
+        let mut pool = BufferPool::new();
         for op in 0..100 {
-            let mut buf = UnboundBuffer::from_fn(4, ELEMS, |n, j| ((n + j) % 7) as f32);
+            let mut buf = pool.acquire(4, ELEMS, |n, j| ((n + j) % 7) as f32);
             let rep = mr.allreduce_scaled(&mut buf, elem_bytes)?;
+            pool.release(buf);
             let times: Vec<f64> = rep
                 .per_rail
                 .iter()

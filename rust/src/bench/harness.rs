@@ -6,7 +6,7 @@
 use std::time::Instant;
 
 use crate::config::{Config, PlannerMode, Policy};
-use crate::coordinator::buffer::UnboundBuffer;
+use crate::coordinator::buffer::BufferPool;
 use crate::coordinator::multirail::MultiRail;
 use crate::coordinator::planner::PlanQualityReport;
 use crate::net::topology::{parse_combo, ClusterSpec};
@@ -23,7 +23,10 @@ pub const PLAN_QUALITY_MEDIAN_ERR_MAX: f64 = 0.05;
 pub const PLAN_QUALITY_SIZES: [u64; 5] = [256 << 10, 1 << 20, 8 << 20, 64 << 20, 256 << 20];
 
 /// Mean modeled completion latency (us) of `reps` allreduces of `bytes`
-/// after `warm` warmup ops, on 1024-element scaled buffers.
+/// after `warm` warmup ops, on 1024-element scaled buffers. Buffers are
+/// pooled: one staging buffer is allocated for the whole measurement loop
+/// and re-filled in place per repetition (bit-identical to a fresh
+/// allocation — see [`BufferPool`]).
 pub fn mean_allreduce_us(
     mr: &mut MultiRail,
     bytes: u64,
@@ -32,11 +35,12 @@ pub fn mean_allreduce_us(
 ) -> crate::Result<f64> {
     const ELEMS: usize = 1024;
     let elem_bytes = bytes as f64 / ELEMS as f64;
+    let mut pool = BufferPool::new();
     let mut total = 0.0;
     for i in 0..warm + reps {
-        let mut buf =
-            UnboundBuffer::from_fn(mr.fab.nodes, ELEMS, |n, j| ((n + j) % 7) as f32);
+        let mut buf = pool.acquire(mr.fab.nodes, ELEMS, |n, j| ((n + j) % 7) as f32);
         let t = mr.allreduce_scaled(&mut buf, elem_bytes)?.total_us;
+        pool.release(buf);
         if i >= warm {
             total += t;
         }

@@ -1,0 +1,205 @@
+//! Tracked hot-path benchmark — the `BENCH_hotpath.json` trajectory.
+//!
+//! Measures wall-clock ops/sec of the modeled allreduce sweep twice in the
+//! same process on the same machine:
+//!
+//! * **before** — the seed's per-repetition discipline: a fresh
+//!   `UnboundBuffer::from_fn` (nodes × elems vector allocations plus a
+//!   per-element closure fill) constructed for every op;
+//! * **after** — the pooled data plane: one staging buffer recycled
+//!   through [`BufferPool`] (template `copy_from_slice` re-fill, zero
+//!   steady-state allocation), exercising the same coordinator.
+//!
+//! Both arms run identically-configured deterministic coordinators, so the
+//! recorded `speedup` isolates the hot-path allocation/fill overhead this
+//! perf pass removed. Kernel bandwidth (GB/s of `add_into` and the fused
+//! `reduce_copy`) rides along in the same document.
+//!
+//! Record, don't gate: CI uploads the JSON as a workflow artifact and the
+//! tier-1 smoke test checks only that the benchmark runs and the document
+//! is well-formed — never a wall-clock threshold.
+
+use std::time::Instant;
+
+use crate::bench::harness::bench_wall;
+use crate::config::{Config, Policy};
+use crate::coordinator::buffer::{BufferPool, UnboundBuffer};
+use crate::coordinator::collective::{Reducer, RustReducer};
+use crate::coordinator::multirail::MultiRail;
+use crate::net::topology::parse_combo;
+use crate::util::bytes::fmt_bytes;
+use crate::util::json::Json;
+use crate::Result;
+
+/// Modeled payload sizes of the sweep — the 1 MiB – 64 MiB span the
+/// trajectory's speedup ratio is recorded over.
+pub const HOTPATH_SIZES: [u64; 4] = [1 << 20, 4 << 20, 16 << 20, 64 << 20];
+
+/// Real elements per op payload (the canonical scaled-harness size used
+/// by `mean_allreduce_us`, the trainers and the ablations).
+pub const ELEMS: usize = 1024;
+
+const NODES: usize = 8;
+const COMBO: &str = "tcp-tcp";
+
+/// The committed target for the after/before throughput ratio on the
+/// sweep sizes (recorded in the document, asserted by the PR's acceptance
+/// check — not by CI).
+pub const TARGET_SPEEDUP: f64 = 1.5;
+
+fn fill(n: usize, j: usize) -> f32 {
+    ((n + j) % 7) as f32
+}
+
+fn mk_mr() -> Result<MultiRail> {
+    let cfg = Config {
+        nodes: NODES,
+        combo: parse_combo(COMBO)?,
+        policy: Policy::Nezha,
+        deterministic: true,
+        ..Config::default()
+    };
+    MultiRail::new(&cfg)
+}
+
+/// One sweep row: before/after ops-per-second at one modeled size.
+#[derive(Debug, Clone)]
+pub struct HotpathRow {
+    pub bytes: u64,
+    pub before_ops_per_sec: f64,
+    pub after_ops_per_sec: f64,
+}
+
+impl HotpathRow {
+    pub fn speedup(&self) -> f64 {
+        self.after_ops_per_sec / self.before_ops_per_sec
+    }
+}
+
+/// ops/sec of `reps` modeled allreduces with a FRESH from_fn buffer per
+/// repetition (the seed discipline).
+fn ops_per_sec_fresh(bytes: u64, warm: usize, reps: usize) -> Result<f64> {
+    let mut mr = mk_mr()?;
+    let elem_bytes = bytes as f64 / ELEMS as f64;
+    for _ in 0..warm {
+        let mut buf = UnboundBuffer::from_fn(NODES, ELEMS, fill);
+        mr.allreduce_scaled(&mut buf, elem_bytes)?;
+    }
+    let t = Instant::now();
+    for _ in 0..reps {
+        let mut buf = UnboundBuffer::from_fn(NODES, ELEMS, fill);
+        mr.allreduce_scaled(&mut buf, elem_bytes)?;
+    }
+    Ok(reps as f64 / t.elapsed().as_secs_f64())
+}
+
+/// ops/sec of `reps` modeled allreduces with a pooled, in-place re-filled
+/// buffer (the allocation-free data plane).
+fn ops_per_sec_pooled(bytes: u64, warm: usize, reps: usize) -> Result<f64> {
+    let mut mr = mk_mr()?;
+    let mut pool = BufferPool::new();
+    let elem_bytes = bytes as f64 / ELEMS as f64;
+    for _ in 0..warm {
+        let mut buf = pool.acquire(NODES, ELEMS, fill);
+        mr.allreduce_scaled(&mut buf, elem_bytes)?;
+        pool.release(buf);
+    }
+    let t = Instant::now();
+    for _ in 0..reps {
+        let mut buf = pool.acquire(NODES, ELEMS, fill);
+        mr.allreduce_scaled(&mut buf, elem_bytes)?;
+        pool.release(buf);
+    }
+    Ok(reps as f64 / t.elapsed().as_secs_f64())
+}
+
+/// Run the before/after ops-per-second sweep over [`HOTPATH_SIZES`].
+pub fn sweep(quick: bool) -> Result<Vec<HotpathRow>> {
+    let (warm, reps) = if quick { (30, 300) } else { (100, 3000) };
+    let mut rows = Vec::with_capacity(HOTPATH_SIZES.len());
+    for &bytes in &HOTPATH_SIZES {
+        let before_ops_per_sec = ops_per_sec_fresh(bytes, warm, reps)?;
+        let after_ops_per_sec = ops_per_sec_pooled(bytes, warm, reps)?;
+        rows.push(HotpathRow { bytes, before_ops_per_sec, after_ops_per_sec });
+    }
+    Ok(rows)
+}
+
+/// Reduction-kernel bandwidth in GB/s: (add_into, fused reduce_copy),
+/// payload convention = one operand's bytes per iteration.
+pub fn kernel_gbps() -> (f64, f64) {
+    const N: usize = 1 << 20;
+    let mut red = RustReducer;
+    let mut dst = vec![1.0f32; N];
+    let src = vec![2.0f32; N];
+    let s_add = bench_wall("add_into_1M", 5, 50, || red.add_into(&mut dst, &src));
+    let mut fwd = vec![0.0f32; N];
+    let mut dst2 = vec![1.0f32; N];
+    let s_rc = bench_wall("reduce_copy_1M", 5, 50, || {
+        red.reduce_copy(&mut dst2, &src, &mut fwd)
+    });
+    let gbps = |mean_us: f64| (N * 4) as f64 / mean_us / 1e3;
+    (gbps(s_add.mean_us), gbps(s_rc.mean_us))
+}
+
+/// The full BENCH_hotpath.json document.
+pub fn hotpath_json(quick: bool) -> Result<Json> {
+    let rows = sweep(quick)?;
+    let min_speedup = rows
+        .iter()
+        .map(HotpathRow::speedup)
+        .fold(f64::INFINITY, f64::min);
+    let (add_gbps, rc_gbps) = kernel_gbps();
+    let sweep_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("bytes", Json::from(r.bytes as f64)),
+                ("size", Json::from(fmt_bytes(r.bytes))),
+                ("before_ops_per_sec", Json::from(r.before_ops_per_sec)),
+                ("after_ops_per_sec", Json::from(r.after_ops_per_sec)),
+                ("speedup", Json::from(r.speedup())),
+            ])
+        })
+        .collect();
+    Ok(Json::obj(vec![
+        ("bench", Json::from("hotpath")),
+        ("mode", Json::from(if quick { "quick" } else { "full" })),
+        // provenance: the tier-1 smoke test regenerates this document
+        // unoptimized, the CI bench step in release — absolute ops/sec
+        // differ by profile (the before/after RATIO is meaningful in
+        // both), so the document records which build produced it
+        (
+            "profile",
+            Json::from(if cfg!(debug_assertions) { "debug" } else { "release" }),
+        ),
+        ("nodes", Json::from(NODES)),
+        ("combo", Json::from(COMBO)),
+        ("elems", Json::from(ELEMS)),
+        ("sweep", Json::Arr(sweep_json)),
+        ("min_speedup", Json::from(min_speedup)),
+        ("target_speedup", Json::from(TARGET_SPEEDUP)),
+        (
+            "kernels",
+            Json::obj(vec![
+                ("add_into_gbps", Json::from(add_gbps)),
+                ("reduce_copy_gbps", Json::from(rc_gbps)),
+            ]),
+        ),
+    ]))
+}
+
+/// Repo-root path of the tracked benchmark artifact.
+pub fn report_path() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_hotpath.json")
+}
+
+/// Measure and write `BENCH_hotpath.json` at the repo root; returns the
+/// document. Called by the `bench_hotpath` bench binary, the CI artifact
+/// step and the tier-1 smoke test (quick mode), so the checked-in
+/// trajectory is refreshed by every verified run.
+pub fn write_report(quick: bool) -> Result<Json> {
+    let doc = hotpath_json(quick)?;
+    std::fs::write(report_path(), doc.to_string())?;
+    Ok(doc)
+}

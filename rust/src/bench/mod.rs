@@ -9,6 +9,7 @@ pub mod ablation;
 pub mod figures;
 pub mod figures_app;
 pub mod harness;
+pub mod hotpath;
 
 pub use harness::{
     bench_wall, mean_allreduce_us, plan_quality_json, plan_quality_sweep, planner_mode_latency,

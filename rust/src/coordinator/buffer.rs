@@ -7,6 +7,17 @@
 //! requester. The window arithmetic below is exactly what the Load
 //! Balancer's pointer calculation (§3.5) produces and what failover hands
 //! between rails (§4.4).
+//!
+//! The splitting APIs come in two forms: the original allocating methods
+//! (`split_fractions`, `split_chunks`) and `*_into` scratch-reuse variants
+//! that write into caller-owned vectors — the per-op hot path uses the
+//! latter so steady-state collective execution allocates nothing. The
+//! [`BufferPool`] closes the remaining per-repetition allocation: harness,
+//! trainer and ablation loops recycle staging buffers instead of
+//! constructing `from_fn` (nodes × elems allocations plus a per-element
+//! closure) for every op.
+
+use crate::util::error::Error;
 
 /// A `(ptr, data_length)` view into the shared buffer, in f32 elements.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -36,27 +47,66 @@ impl Window {
     /// to `fractions` (which must sum to ~1). Every element lands in
     /// exactly one sub-window; rounding drift is absorbed by the last part.
     pub fn split_fractions(&self, fractions: &[f64]) -> Vec<Window> {
-        assert!(!fractions.is_empty());
         let mut out = Vec::with_capacity(fractions.len());
+        self.split_fractions_into(fractions, &mut out);
+        out
+    }
+
+    /// The canonical share-split loop behind every proportional splitting
+    /// API (fractions, uniform ring segments, plan windows): `k`
+    /// contiguous parts, part `i` sized `round(len · share(i))` clamped to
+    /// the remainder, the last part absorbing rounding drift. ONE
+    /// implementation so plan windows and ring segments can never
+    /// desynchronize.
+    pub fn split_shares_into(
+        &self,
+        k: usize,
+        share: impl Fn(usize) -> f64,
+        out: &mut Vec<Window>,
+    ) {
+        assert!(k > 0);
+        out.clear();
         let mut off = self.offset;
-        for (i, &f) in fractions.iter().enumerate() {
-            let len = if i + 1 == fractions.len() {
+        for i in 0..k {
+            let len = if i + 1 == k {
                 self.end() - off
             } else {
-                ((self.len as f64 * f).round() as usize).min(self.end() - off)
+                ((self.len as f64 * share(i)).round() as usize).min(self.end() - off)
             };
             out.push(Window::new(off, len));
             off += len;
         }
         debug_assert_eq!(out.last().unwrap().end(), self.end());
-        out
+    }
+
+    /// Scratch-reuse form of [`Window::split_fractions`]: identical
+    /// arithmetic, writing into `out` (cleared first) so steady-state
+    /// callers allocate only until `out`'s capacity stabilizes.
+    pub fn split_fractions_into(&self, fractions: &[f64], out: &mut Vec<Window>) {
+        assert!(!fractions.is_empty());
+        self.split_shares_into(fractions.len(), |i| fractions[i], out);
+    }
+
+    /// Equal `parts`-way split with the exact arithmetic of
+    /// `split_fractions(&[1.0 / parts as f64; parts])`, minus the
+    /// fractions vector — the ring segment computation on the hot path.
+    pub fn split_uniform_into(&self, parts: usize, out: &mut Vec<Window>) {
+        self.split_shares_into(parts, |_| 1.0 / parts as f64, out);
     }
 
     /// Split into fixed-size chunks (the ring-chunked pipeline and MPTCP's
     /// packet slicing both use this).
     pub fn split_chunks(&self, chunk_elems: usize) -> Vec<Window> {
-        assert!(chunk_elems > 0);
         let mut out = Vec::new();
+        self.split_chunks_into(chunk_elems, &mut out);
+        out
+    }
+
+    /// Scratch-reuse form of [`Window::split_chunks`]: identical
+    /// arithmetic, writing into `out` (cleared first).
+    pub fn split_chunks_into(&self, chunk_elems: usize, out: &mut Vec<Window>) {
+        assert!(chunk_elems > 0);
+        out.clear();
         let mut off = self.offset;
         while off < self.end() {
             let len = chunk_elems.min(self.end() - off);
@@ -66,7 +116,6 @@ impl Window {
         if out.is_empty() {
             out.push(*self);
         }
-        out
     }
 }
 
@@ -118,14 +167,17 @@ impl UnboundBuffer {
         self.pending.push((w, false));
     }
 
-    pub fn complete(&mut self, w: Window) {
+    /// Mark a registered window done. A window that was never registered
+    /// (or was migrated/cleared by a concurrent failover) surfaces as a
+    /// recoverable [`Error::UnregisteredWindow`], not a panic.
+    pub fn complete(&mut self, w: Window) -> crate::Result<()> {
         for (pw, done) in &mut self.pending {
             if *pw == w {
                 *done = true;
-                return;
+                return Ok(());
             }
         }
-        panic!("completing unregistered window {w:?}");
+        Err(Error::UnregisteredWindow { offset: w.offset, len: w.len })
     }
 
     /// All registered windows done — data may be released to the requester.
@@ -160,8 +212,185 @@ impl UnboundBuffer {
         if swap { (sb, sa) } else { (sa, sb) }
     }
 
+    /// Borrow three distinct nodes' windows simultaneously — the fused
+    /// final reduce-scatter + first allgather hop (`Reducer::reduce_copy`)
+    /// needs sender, receiver and the receiver's ring successor in one
+    /// pass.
+    pub fn tri_windows_mut(
+        &mut self,
+        a: usize,
+        b: usize,
+        c: usize,
+        w: Window,
+    ) -> (&mut [f32], &mut [f32], &mut [f32]) {
+        assert!(a != b && b != c && a != c, "tri-borrow needs distinct nodes");
+        // order the indices, split the outer Vec twice, then un-permute
+        let mut idx = [(a, 0usize), (b, 1), (c, 2)];
+        idx.sort_unstable_by_key(|&(node, _)| node);
+        let (lo, mid, hi) = (idx[0].0, idx[1].0, idx[2].0);
+        let (left, rest) = self.data.split_at_mut(mid);
+        let (mid_part, right) = rest.split_at_mut(hi - mid);
+        let s_lo = &mut left[lo][w.offset..w.end()];
+        let s_mid = &mut mid_part[0][w.offset..w.end()];
+        let s_hi = &mut right[0][w.offset..w.end()];
+        let mut out: [Option<&mut [f32]>; 3] = [None, None, None];
+        out[idx[0].1] = Some(s_lo);
+        out[idx[1].1] = Some(s_mid);
+        out[idx[2].1] = Some(s_hi);
+        let [x, y, z] = out;
+        (x.unwrap(), y.unwrap(), z.unwrap())
+    }
+
+    /// Overwrite every node's payload from `template` (shapes must match)
+    /// and clear completion state — the pool's in-place re-fill: one
+    /// `copy_from_slice` per node instead of per-element closure calls.
+    pub fn restore_from(&mut self, template: &[Vec<f32>]) {
+        assert_eq!(self.data.len(), template.len(), "pool template node mismatch");
+        for (d, t) in self.data.iter_mut().zip(template) {
+            d.copy_from_slice(t);
+        }
+        self.pending.clear();
+    }
+
     pub fn into_data(self) -> Vec<Vec<f32>> {
         self.data
+    }
+}
+
+/// Reusable staging buffers for the collective hot path.
+///
+/// The harness/trainer/ablation loops used to construct a fresh
+/// [`UnboundBuffer::from_fn`] — nodes × elems vector allocations plus a
+/// per-element closure evaluation — for every repetition. The pool keeps
+/// returned buffers together with a pristine *template* per
+/// (nodes, len, fill) shape: [`BufferPool::acquire`] restores a recycled
+/// buffer with per-node `copy_from_slice` from the template. A sampled
+/// fingerprint guards against a different fill function silently reusing a
+/// stale template (a full template is rebuilt on mismatch), and debug
+/// builds assert the restored buffer is bit-identical to a fresh
+/// allocation.
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    shapes: Vec<PoolShape>,
+}
+
+#[derive(Debug)]
+struct PoolShape {
+    nodes: usize,
+    len: usize,
+    /// Pristine fill pattern: `template[n][i] = f(n, i)`.
+    template: Vec<Vec<f32>>,
+    /// Sampled `(n, i, f(n, i))` probes: cheap fill-function identity
+    /// check on every acquire (bit-compared, so NaN-safe).
+    probes: Vec<(usize, usize, f32)>,
+    free: Vec<UnboundBuffer>,
+    /// Debug builds fully verify the first recycled buffer per shape
+    /// against a fresh allocation; later recycles copy the same template
+    /// bytes, so one check proves the invariant without making every
+    /// debug-mode acquire pay a from_fn reconstruction.
+    #[cfg(debug_assertions)]
+    verified: bool,
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool::default()
+    }
+
+    /// Hand out a buffer filled exactly as `UnboundBuffer::from_fn(nodes,
+    /// len, f)` would fill it, recycling a returned buffer when one of the
+    /// matching shape exists.
+    pub fn acquire(
+        &mut self,
+        nodes: usize,
+        len: usize,
+        f: impl Fn(usize, usize) -> f32,
+    ) -> UnboundBuffer {
+        assert!(nodes > 0, "pool buffers need at least one node");
+        let idx = self.shape_index(nodes, len, &f);
+        let shape = &mut self.shapes[idx];
+        match shape.free.pop() {
+            Some(mut b) => {
+                b.restore_from(&shape.template);
+                #[cfg(debug_assertions)]
+                if !shape.verified {
+                    shape.verified = true;
+                    let fresh = UnboundBuffer::from_fn(nodes, len, &f);
+                    for n in 0..nodes {
+                        debug_assert_eq!(
+                            b.node(n),
+                            fresh.node(n),
+                            "pooled buffer diverged from fresh allocation (node {n})"
+                        );
+                    }
+                }
+                b
+            }
+            None => UnboundBuffer::new(shape.template.clone()),
+        }
+    }
+
+    /// Return a buffer for reuse. Buffers of a shape the pool never served
+    /// are simply dropped.
+    pub fn release(&mut self, buf: UnboundBuffer) {
+        if let Some(s) = self
+            .shapes
+            .iter_mut()
+            .find(|s| s.nodes == buf.nodes() && s.len == buf.len())
+        {
+            s.free.push(buf);
+        }
+    }
+
+    /// Buffers currently parked in the pool (tests/metrics).
+    pub fn pooled(&self) -> usize {
+        self.shapes.iter().map(|s| s.free.len()).sum()
+    }
+
+    fn shape_index(&mut self, nodes: usize, len: usize, f: &impl Fn(usize, usize) -> f32) -> usize {
+        if let Some(i) = self.shapes.iter().position(|s| {
+            s.nodes == nodes
+                && s.len == len
+                && s.probes
+                    .iter()
+                    .all(|&(n, j, v)| f(n, j).to_bits() == v.to_bits())
+        }) {
+            return i;
+        }
+        let template: Vec<Vec<f32>> = (0..nodes)
+            .map(|n| (0..len).map(|j| f(n, j)).collect())
+            .collect();
+        // fingerprint = the three corners plus 13 pseudo-random positions
+        // (deterministically derived from the shape), bit-compared on
+        // every acquire: two honest fill functions of the same shape that
+        // agree on all 16 sampled values but differ elsewhere is not a
+        // realistic collision, so a stale template cannot be served for a
+        // different fill.
+        let probes = if len > 0 {
+            let mut rng = crate::util::rng::Pcg::new(
+                0x9E3779B9 ^ ((nodes as u64) << 32) ^ len as u64,
+            );
+            let mut pts = vec![(0, 0), (nodes - 1, len - 1), (nodes / 2, len / 2)];
+            for _ in 0..13 {
+                pts.push((
+                    rng.below(nodes as u64) as usize,
+                    rng.below(len as u64) as usize,
+                ));
+            }
+            pts.into_iter().map(|(n, j)| (n, j, f(n, j))).collect()
+        } else {
+            Vec::new()
+        };
+        self.shapes.push(PoolShape {
+            nodes,
+            len,
+            template,
+            probes,
+            free: Vec::new(),
+            #[cfg(debug_assertions)]
+            verified: false,
+        });
+        self.shapes.len() - 1
     }
 }
 
@@ -199,6 +428,33 @@ mod tests {
     }
 
     #[test]
+    fn split_into_variants_match_allocating_on_edges() {
+        let mut out = Vec::new();
+        for w in [
+            Window::new(0, 0),
+            Window::new(9, 0),
+            Window::new(0, 1),
+            Window::new(3, 5),
+            Window::new(0, 7),
+            Window::new(2, 1003),
+        ] {
+            for parts in [1usize, 2, 3, 8, 16] {
+                let fracs = vec![1.0 / parts as f64; parts];
+                let alloc = w.split_fractions(&fracs);
+                w.split_fractions_into(&fracs, &mut out);
+                assert_eq!(alloc, out, "{w:?} fractions x{parts}");
+                w.split_uniform_into(parts, &mut out);
+                assert_eq!(alloc, out, "{w:?} uniform x{parts}");
+            }
+            for chunk in [1usize, 4, 1000] {
+                let alloc = w.split_chunks(chunk);
+                w.split_chunks_into(chunk, &mut out);
+                assert_eq!(alloc, out, "{w:?} chunks of {chunk}");
+            }
+        }
+    }
+
+    #[test]
     fn zero_fraction_windows_allowed() {
         let w = Window::new(0, 100);
         let parts = w.split_fractions(&[0.0, 1.0]);
@@ -215,9 +471,20 @@ mod tests {
         b.register(w1);
         b.register(w2);
         assert!(!b.all_complete());
-        b.complete(w1);
+        b.complete(w1).unwrap();
         assert!(!b.all_complete());
-        b.complete(w2);
+        b.complete(w2).unwrap();
+        assert!(b.all_complete());
+    }
+
+    #[test]
+    fn completing_unregistered_window_is_recoverable() {
+        let mut b = UnboundBuffer::from_fn(2, 8, |_, _| 0.0);
+        b.register(Window::new(0, 4));
+        let err = b.complete(Window::new(4, 4)).unwrap_err();
+        assert!(err.to_string().contains("unregistered window"), "{err}");
+        // the registered window still completes fine afterwards
+        b.complete(Window::new(0, 4)).unwrap();
         assert!(b.all_complete());
     }
 
@@ -232,9 +499,55 @@ mod tests {
     }
 
     #[test]
+    fn tri_windows_disjoint_borrow_all_orders() {
+        for (a, b, c) in [(0usize, 1usize, 2usize), (2, 0, 1), (1, 2, 0), (2, 1, 0)] {
+            let mut buf = UnboundBuffer::from_fn(4, 4, |n, i| (n * 4 + i) as f32);
+            let (sa, sb, sc) = buf.tri_windows_mut(a, b, c, Window::new(1, 2));
+            assert_eq!(sa[0], (a * 4 + 1) as f32, "({a},{b},{c})");
+            assert_eq!(sb[0], (b * 4 + 1) as f32, "({a},{b},{c})");
+            assert_eq!(sc[0], (c * 4 + 1) as f32, "({a},{b},{c})");
+            sb[1] = -5.0;
+            assert_eq!(buf.node(b)[2], -5.0);
+        }
+    }
+
+    #[test]
     #[should_panic]
     fn out_of_bounds_window_rejected() {
         let mut b = UnboundBuffer::from_fn(2, 8, |_, _| 0.0);
         b.register(Window::new(5, 10));
+    }
+
+    #[test]
+    fn pool_recycles_and_restores_bit_identical() {
+        let fill = |n: usize, i: usize| ((n * 3 + i) % 7) as f32 * 0.5;
+        let mut pool = BufferPool::new();
+        let mut b1 = pool.acquire(3, 16, fill);
+        let fresh = UnboundBuffer::from_fn(3, 16, fill);
+        for n in 0..3 {
+            assert_eq!(b1.node(n), fresh.node(n));
+        }
+        // dirty the buffer (as an allreduce would), return it, re-acquire
+        b1.node_mut(0)[0] = 1234.0;
+        b1.register(Window::new(0, 4));
+        pool.release(b1);
+        assert_eq!(pool.pooled(), 1);
+        let b2 = pool.acquire(3, 16, fill);
+        assert_eq!(pool.pooled(), 0, "recycled, not re-allocated");
+        for n in 0..3 {
+            assert_eq!(b2.node(n), fresh.node(n), "restore not bit-identical");
+        }
+        assert!(b2.all_complete(), "pending state must be cleared");
+    }
+
+    #[test]
+    fn pool_distinguishes_fill_functions() {
+        let mut pool = BufferPool::new();
+        let a = pool.acquire(2, 8, |_, i| i as f32);
+        pool.release(a);
+        // same shape, different fill: the probe mismatch forces a fresh
+        // template rather than serving stale contents
+        let b = pool.acquire(2, 8, |_, i| -(i as f32));
+        assert_eq!(b.node(0)[3], -3.0);
     }
 }

@@ -41,6 +41,22 @@ pub enum Algo {
     RingChunked { chunk_elems: usize },
 }
 
+/// Reusable scratch for one rail-collective execution: ring segment
+/// windows, chunk windows and the tree switch-aggregation buffer. The
+/// coordinator owns one instance and threads it through every op, so the
+/// steady-state collective path performs no per-op allocation; the
+/// scratch-free public wrappers (tests, examples, replays) create a
+/// throwaway instance instead.
+#[derive(Debug, Default, Clone)]
+pub struct OpScratch {
+    /// Ring segment windows (one per node).
+    pub segs: Vec<Window>,
+    /// Chunk windows for chunked/pipelined schedules.
+    pub chunks: Vec<Window>,
+    /// Tree (SHARP) switch-aggregation buffer.
+    pub agg: Vec<f32>,
+}
+
 /// Run the native collective for `rail` (tree for SHARP, ring otherwise)
 /// on `buf[w]`, reducing across all nodes.
 pub fn run_allreduce(
@@ -52,16 +68,33 @@ pub fn run_allreduce(
     red: &mut dyn Reducer,
     elem_bytes: f64,
 ) -> Result<OpOutcome, RailDown> {
+    let mut scratch = OpScratch::default();
+    run_allreduce_with(algo, fab, rail, buf, w, red, elem_bytes, &mut scratch)
+}
+
+/// Scratch-reuse form of [`run_allreduce`] — the coordinator's per-op
+/// path.
+#[allow(clippy::too_many_arguments)]
+pub fn run_allreduce_with(
+    algo: Algo,
+    fab: &mut Fabric,
+    rail: usize,
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    scratch: &mut OpScratch,
+) -> Result<OpOutcome, RailDown> {
     if w.is_empty() {
         return Ok(OpOutcome::default());
     }
     match fab.rails[rail].protocol.collective {
-        CollectiveKind::Tree => tree_allreduce(fab, rail, buf, w, red, elem_bytes),
+        CollectiveKind::Tree => tree::tree_allreduce_with(fab, rail, buf, w, red, elem_bytes, scratch),
         CollectiveKind::Ring => match algo {
-            Algo::Ring => ring_allreduce(fab, rail, buf, w, red, elem_bytes),
-            Algo::RingChunked { chunk_elems } => {
-                ring_chunked_allreduce(fab, rail, buf, w, red, elem_bytes, chunk_elems)
-            }
+            Algo::Ring => ring::ring_allreduce_with(fab, rail, buf, w, red, elem_bytes, scratch),
+            Algo::RingChunked { chunk_elems } => ring::ring_chunked_allreduce_with(
+                fab, rail, buf, w, red, elem_bytes, chunk_elems, scratch,
+            ),
         },
     }
 }

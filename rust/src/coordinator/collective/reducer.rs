@@ -20,6 +20,16 @@ pub trait Reducer {
         }
     }
 
+    /// Fused reduce + forward: `dst += src` AND `fwd = dst` (the updated
+    /// values). The ring's final reduce-scatter hop and first allgather
+    /// hop collapse into this single pass over memory where the three
+    /// windows are distinct. The default is the safe two-pass form —
+    /// results are bit-identical either way, so backends may fuse freely.
+    fn reduce_copy(&mut self, dst: &mut [f32], src: &[f32], fwd: &mut [f32]) {
+        self.add_into(dst, src);
+        fwd.copy_from_slice(dst);
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -43,6 +53,32 @@ impl Reducer for RustReducer {
         }
         for (d, s) in dr.iter_mut().zip(sr) {
             *d += s;
+        }
+    }
+
+    /// Truly fused single pass: one load of `src`, one read-modify-write
+    /// of `dst`, one store to `fwd` — same chunked exact-size shape as
+    /// `add_into` so LLVM emits packed adds without bounds checks.
+    fn reduce_copy(&mut self, dst: &mut [f32], src: &[f32], fwd: &mut [f32]) {
+        assert_eq!(dst.len(), src.len());
+        assert_eq!(dst.len(), fwd.len());
+        let n = dst.len();
+        let (dc, dr) = dst.split_at_mut(n - n % 8);
+        let (sc, sr) = src.split_at(n - n % 8);
+        let (fc, fr) = fwd.split_at_mut(n - n % 8);
+        for ((d8, s8), f8) in dc
+            .chunks_exact_mut(8)
+            .zip(sc.chunks_exact(8))
+            .zip(fc.chunks_exact_mut(8))
+        {
+            for k in 0..8 {
+                d8[k] += s8[k];
+                f8[k] = d8[k];
+            }
+        }
+        for ((d, s), fo) in dr.iter_mut().zip(sr).zip(fr) {
+            *d += s;
+            *fo = *d;
         }
     }
 
@@ -84,5 +120,22 @@ mod tests {
         let mut dst: Vec<f32> = vec![];
         r.add_into(&mut dst, &[]);
         r.reduce_n(&mut dst, &[]);
+        r.reduce_copy(&mut dst, &[], &mut []);
+    }
+
+    #[test]
+    fn reduce_copy_matches_add_then_copy() {
+        // fused vs two-pass, including non-multiple-of-8 tails
+        for len in [0usize, 1, 7, 8, 9, 64, 1003] {
+            let mut r = RustReducer;
+            let src: Vec<f32> = (0..len).map(|i| (i % 19) as f32 * 0.25).collect();
+            let mut d_fused: Vec<f32> = (0..len).map(|i| (i % 11) as f32).collect();
+            let mut d_plain = d_fused.clone();
+            let mut fwd = vec![0.0f32; len];
+            r.reduce_copy(&mut d_fused, &src, &mut fwd);
+            r.add_into(&mut d_plain, &src);
+            assert_eq!(d_fused, d_plain, "len {len}");
+            assert_eq!(fwd, d_plain, "len {len}: forward copy diverged");
+        }
     }
 }

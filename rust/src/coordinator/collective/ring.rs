@@ -12,32 +12,63 @@
 
 use crate::coordinator::buffer::{UnboundBuffer, Window};
 use crate::coordinator::collective::reducer::Reducer;
-use crate::coordinator::collective::OpOutcome;
+use crate::coordinator::collective::{OpOutcome, OpScratch};
 use crate::net::simnet::{Fabric, RailDown};
 
 /// Pure data movement of a ring allreduce over `w` (no timing): real
-/// reduce-scatter + allgather across the node buffers.
+/// reduce-scatter + allgather across the node buffers. Convenience
+/// wrapper over [`ring_numerics_segs`] that computes the segment split
+/// itself (allocating); hot paths precompute segments into reusable
+/// scratch via [`Window::split_uniform_into`].
 pub fn ring_numerics(
     buf: &mut UnboundBuffer,
     w: Window,
     red: &mut dyn Reducer,
 ) {
+    let mut segs = Vec::new();
+    w.split_uniform_into(buf.nodes(), &mut segs);
+    ring_numerics_segs(buf, &segs, red);
+}
+
+/// Ring numerics over precomputed segments (one per node, from
+/// [`Window::split_uniform_into`]) — the allocation-free core. When
+/// `n ≥ 3` the final reduce-scatter hop is fused with the first allgather
+/// hop through [`Reducer::reduce_copy`]: the completed segment sum is
+/// forwarded to the next ring neighbour in the same pass over memory.
+/// Results are bit-identical to the unfused two-pass form.
+pub fn ring_numerics_segs(buf: &mut UnboundBuffer, segs: &[Window], red: &mut dyn Reducer) {
     let n = buf.nodes();
-    let segs = segments(w, n);
-    // reduce-scatter: at step s, segment j flows (j+s)%n -> (j+s+1)%n
+    if n < 2 {
+        return;
+    }
+    debug_assert_eq!(segs.len(), n, "one ring segment per node");
+    let fused = n >= 3;
+    // reduce-scatter: at step s, segment j flows (j+s)%n -> (j+s+1)%n.
+    // The final step lands the complete sum at (j+n-1)%n; sender, receiver
+    // and the receiver's successor are pairwise distinct for n >= 3, so
+    // that step can forward the sum one hop in the same pass (reduce_copy)
     for s in 0..n - 1 {
+        let fuse_step = fused && s + 1 == n - 1;
         for (j, seg) in segs.iter().enumerate() {
             if seg.is_empty() {
                 continue;
             }
             let sender = (j + s) % n;
             let receiver = (sender + 1) % n;
-            let (src, dst) = buf.pair_windows_mut(sender, receiver, *seg);
-            red.add_into(dst, src);
+            if fuse_step {
+                let next = (receiver + 1) % n;
+                let (src, dst, fwd) = buf.tri_windows_mut(sender, receiver, next, *seg);
+                red.reduce_copy(dst, src, fwd);
+            } else {
+                let (src, dst) = buf.pair_windows_mut(sender, receiver, *seg);
+                red.add_into(dst, src);
+            }
         }
     }
-    // allgather: segment j is complete at node (j + n - 1) % n
-    for s in 0..n - 1 {
+    // allgather: segment j is complete at node (j + n - 1) % n; hop 0 was
+    // already executed by the fused reduce-scatter pass when n >= 3
+    let start = if fused { 1 } else { 0 };
+    for s in start..n - 1 {
         for (j, seg) in segs.iter().enumerate() {
             if seg.is_empty() {
                 continue;
@@ -50,10 +81,6 @@ pub fn ring_numerics(
     }
 }
 
-fn segments(w: Window, n: usize) -> Vec<Window> {
-    w.split_fractions(&vec![1.0 / n as f64; n])
-}
-
 /// Ring allreduce with modeled lockstep timing.
 pub fn ring_allreduce(
     fab: &mut Fabric,
@@ -62,6 +89,21 @@ pub fn ring_allreduce(
     w: Window,
     red: &mut dyn Reducer,
     elem_bytes: f64,
+) -> Result<OpOutcome, RailDown> {
+    let mut scratch = OpScratch::default();
+    ring_allreduce_with(fab, rail, buf, w, red, elem_bytes, &mut scratch)
+}
+
+/// Scratch-reuse form of [`ring_allreduce`].
+#[allow(clippy::too_many_arguments)]
+pub fn ring_allreduce_with(
+    fab: &mut Fabric,
+    rail: usize,
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    scratch: &mut OpScratch,
 ) -> Result<OpOutcome, RailDown> {
     let n = fab.nodes;
     debug_assert_eq!(buf.nodes(), n);
@@ -74,7 +116,8 @@ pub fn ring_allreduce(
         let dt = fab.ring_step(rail, seg_bytes)?;
         total += dt;
     }
-    ring_numerics(buf, w, red);
+    w.split_uniform_into(n, &mut scratch.segs);
+    ring_numerics_segs(buf, &scratch.segs, red);
     Ok(OpOutcome {
         time_us: total,
         bytes_moved: (seg_bytes * steps as f64) as u64,
@@ -93,20 +136,52 @@ pub fn ring_chunked_allreduce(
     elem_bytes: f64,
     chunk_elems: usize,
 ) -> Result<OpOutcome, RailDown> {
+    let mut scratch = OpScratch::default();
+    ring_chunked_allreduce_with(fab, rail, buf, w, red, elem_bytes, chunk_elems, &mut scratch)
+}
+
+/// Scratch-reuse form of [`ring_chunked_allreduce`].
+///
+/// Byte accounting is per-chunk: the pipeline's critical path is chunk 0's
+/// full `2(N-1)` rounds plus one extra round per later chunk, each priced
+/// at that chunk's OWN segment size — a window not divisible by the chunk
+/// size ends in a smaller chunk, and charging every round at `chunks[0]`
+/// overstated both `bytes_moved` and the modeled time. For evenly divided
+/// windows the schedule is identical to the uniform pricing.
+#[allow(clippy::too_many_arguments)]
+pub fn ring_chunked_allreduce_with(
+    fab: &mut Fabric,
+    rail: usize,
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    chunk_elems: usize,
+    scratch: &mut OpScratch,
+) -> Result<OpOutcome, RailDown> {
     let n = fab.nodes;
-    let chunks = w.split_chunks(chunk_elems.max(1));
-    let rounds = 2 * (n - 1) + chunks.len() - 1;
-    let chunk_seg_bytes = (chunks[0].len as f64 / n as f64).ceil() * elem_bytes;
+    w.split_chunks_into(chunk_elems.max(1), &mut scratch.chunks);
+    let rounds = 2 * (n - 1) + scratch.chunks.len() - 1;
+    let seg_bytes = |c: Window| (c.len as f64 / n as f64).ceil() * elem_bytes;
     let mut total = 0.0;
-    for _ in 0..rounds {
-        total += fab.ring_step(rail, chunk_seg_bytes)?;
+    let mut moved = 0.0;
+    let first = seg_bytes(scratch.chunks[0]);
+    for _ in 0..2 * (n - 1) {
+        total += fab.ring_step(rail, first)?;
+        moved += first;
     }
-    for c in &chunks {
-        ring_numerics(buf, *c, red);
+    for c in &scratch.chunks[1..] {
+        let b = seg_bytes(*c);
+        total += fab.ring_step(rail, b)?;
+        moved += b;
+    }
+    for c in &scratch.chunks {
+        c.split_uniform_into(n, &mut scratch.segs);
+        ring_numerics_segs(buf, &scratch.segs, red);
     }
     Ok(OpOutcome {
         time_us: total,
-        bytes_moved: (chunk_seg_bytes * rounds as f64) as u64,
+        bytes_moved: moved as u64,
         steps: rounds,
     })
 }

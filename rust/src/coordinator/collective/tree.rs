@@ -7,7 +7,7 @@
 
 use crate::coordinator::buffer::{UnboundBuffer, Window};
 use crate::coordinator::collective::reducer::Reducer;
-use crate::coordinator::collective::OpOutcome;
+use crate::coordinator::collective::{OpOutcome, OpScratch};
 use crate::net::simnet::{Fabric, RailDown};
 
 /// SHARP-style tree allreduce: switch-level aggregation of all node
@@ -20,22 +20,38 @@ pub fn tree_allreduce(
     red: &mut dyn Reducer,
     elem_bytes: f64,
 ) -> Result<OpOutcome, RailDown> {
+    let mut scratch = OpScratch::default();
+    tree_allreduce_with(fab, rail, buf, w, red, elem_bytes, &mut scratch)
+}
+
+/// Scratch-reuse form of [`tree_allreduce`]: the switch-aggregation
+/// buffer lives in the caller's [`OpScratch`] instead of a per-op `vec!`.
+#[allow(clippy::too_many_arguments)]
+pub fn tree_allreduce_with(
+    fab: &mut Fabric,
+    rail: usize,
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    scratch: &mut OpScratch,
+) -> Result<OpOutcome, RailDown> {
     let bytes = w.len as f64 * elem_bytes;
     // timing first — atomicity on failure (§4.4)
     let time = fab.tree_round(rail, bytes)?;
 
-    // switch aggregation: reduce all node windows into a scratch buffer...
+    // switch aggregation: reduce all node windows into the scratch buffer
+    // (copy-then-fold, bit-identical to the Reducer::reduce_n default)...
     let n = buf.nodes();
-    let mut agg = vec![0.0f32; w.len];
-    {
-        let srcs: Vec<&[f32]> = (0..n)
-            .map(|i| &buf.node(i)[w.offset..w.end()])
-            .collect();
-        red.reduce_n(&mut agg, &srcs);
+    let agg = &mut scratch.agg;
+    agg.clear();
+    agg.extend_from_slice(&buf.node(0)[w.offset..w.end()]);
+    for i in 1..n {
+        red.add_into(agg, &buf.node(i)[w.offset..w.end()]);
     }
     // ...then multicast down-tree
     for i in 0..n {
-        buf.node_mut(i)[w.offset..w.end()].copy_from_slice(&agg);
+        buf.node_mut(i)[w.offset..w.end()].copy_from_slice(agg);
     }
     Ok(OpOutcome { time_us: time, bytes_moved: 2 * bytes as u64, steps: 2 })
 }

@@ -69,10 +69,9 @@ impl ExceptionHandler {
         allocated_bytes: &[(usize, u64)],
     ) -> Option<FailoverEvent> {
         fab.deregister(failed);
-        let survivors = fab.healthy_rails();
-        let takeover = *survivors
-            .iter()
-            .max_by_key(|&&r| {
+        let takeover = fab
+            .healthy_rails_iter()
+            .max_by_key(|&r| {
                 allocated_bytes
                     .iter()
                     .find(|(rr, _)| *rr == r)

@@ -26,12 +26,12 @@ use std::collections::HashMap;
 
 use crate::config::{Config, PlannerMode, Policy};
 use crate::coordinator::buffer::{UnboundBuffer, Window};
-use crate::coordinator::collective::{run_allreduce, Algo, Reducer, RustReducer};
+use crate::coordinator::collective::{run_allreduce_with, Algo, OpScratch, Reducer, RustReducer};
 use crate::coordinator::context::Context;
 use crate::coordinator::control::load_balancer::{sync_overhead_us, Plan};
 use crate::coordinator::control::{size_bucket, ExceptionHandler, LoadBalancer, NicSelector, Timer};
 use crate::coordinator::planner::{
-    run_plan, CollectivePlan, PlanQualityReport, Planner, RailPlan, Schedule,
+    run_plan_with, CollectivePlan, PlanQualityReport, Planner, RailPlan, Schedule,
 };
 use crate::coordinator::transport::Rendezvous;
 use crate::net::cpu_pool::CpuPool;
@@ -158,12 +158,40 @@ pub struct MultiRail {
     /// only) — the plan-quality dashboard source.
     pub quality: PlanQualityReport,
     /// Cached schedule selections keyed by (size bucket, participating
-    /// rails). Reused until a replan trigger fires: prediction error above
-    /// `replan_error`, or a failover changes the rail set.
-    plan_cache: HashMap<(u32, Vec<usize>), Vec<(usize, Schedule)>>,
+    /// rail bitmask). Reused until a replan trigger fires: prediction
+    /// error above `replan_error`, or a failover changes the rail set.
+    /// (The rail set is a u64 bitmask so the per-op cache lookup builds no
+    /// key vector.)
+    plan_cache: HashMap<(u32, u64), Vec<(usize, Schedule)>>,
     /// The `replan_error` config threshold.
     replan_error: f64,
+    /// Reusable per-op scratch (healthy rails, plan windows, assignments,
+    /// per-rail allocations, collective segment/chunk/aggregation lists) —
+    /// taken and restored around execution so the steady-state op path
+    /// performs no per-op allocation.
+    scratch: ExecScratch,
     ops_done: u64,
+}
+
+/// The coordinator's reusable per-op scratch space.
+#[derive(Debug, Default)]
+struct ExecScratch {
+    healthy: Vec<usize>,
+    windows: Vec<Window>,
+    assigns: Vec<RailPlan>,
+    allocated: Vec<(usize, u64)>,
+    op: OpScratch,
+}
+
+/// Bitmask over the rails a share split touches — the allocation-free
+/// plan-cache key component.
+fn rail_mask(fracs: &[(usize, f64)]) -> u64 {
+    let mut mask = 0u64;
+    for &(r, _) in fracs {
+        debug_assert!(r < 64, "rail index {r} exceeds the cache-key mask");
+        mask |= 1u64 << r;
+    }
+    mask
 }
 
 impl std::fmt::Debug for MultiRail {
@@ -218,6 +246,7 @@ impl MultiRail {
             quality: PlanQualityReport::default(),
             plan_cache: HashMap::new(),
             replan_error: cfg.control.replan_error,
+            scratch: ExecScratch::default(),
             ops_done: 0,
         })
     }
@@ -271,11 +300,15 @@ impl MultiRail {
     /// as the planning phase of a real op would (later real ops refine it
     /// through feedback).
     pub fn plan_for(&mut self, bytes: u64) -> Option<CollectivePlan> {
-        let healthy = self.fab.healthy_rails();
+        let mut healthy = std::mem::take(&mut self.scratch.healthy);
+        self.fab.healthy_rails_into(&mut healthy);
         if healthy.is_empty() {
+            self.scratch.healthy = healthy;
             return None;
         }
-        match self.partitioner.plan(&self.fab, &self.timer, &healthy, bytes) {
+        let plan = self.partitioner.plan(&self.fab, &self.timer, &healthy, bytes);
+        self.scratch.healthy = healthy;
+        match plan {
             PartitionPlan::Shares(fracs) => {
                 Some(self.planner.preview(&self.fab, &self.timer, &fracs, bytes))
             }
@@ -288,9 +321,7 @@ impl MultiRail {
     /// predicted-vs-measured error exceeded `replan_error` — the
     /// straggler-aware replan trigger that fires *between* ops/buckets.
     fn plan_shares(&mut self, fracs: &[(usize, f64)], bytes: u64) -> CollectivePlan {
-        let mut rails: Vec<usize> = fracs.iter().map(|&(r, _)| r).collect();
-        rails.sort_unstable();
-        let key = (size_bucket(bytes), rails);
+        let key = (size_bucket(bytes), rail_mask(fracs));
         // Timer/correction classes are keyed by each rail's OWN share
         // size (that's what it measures), so the trigger checks per-rail
         // byte counts, not the op total.
@@ -353,22 +384,28 @@ impl MultiRail {
     ) -> Result<OpReport> {
         assert_eq!(buf.nodes(), self.fab.nodes, "buffer/fabric node mismatch");
         self.exceptions.probe_recovery(&mut self.fab);
-        let healthy = self.fab.healthy_rails();
+        // reusable healthy-rail scratch: taken for the op, restored below
+        // (error paths drop it; the next op simply re-allocates capacity)
+        let mut healthy = std::mem::take(&mut self.scratch.healthy);
+        self.fab.healthy_rails_into(&mut healthy);
         if healthy.is_empty() {
+            self.scratch.healthy = healthy;
             return Err(Error::AllRailsDown(0));
         }
         let bytes = (full.len as f64 * elem_bytes) as u64;
         let plan = self.partitioner.plan(&self.fab, &self.timer, &healthy, bytes);
 
-        let (mut shares, failovers) = match plan {
+        let exec = match plan {
             PartitionPlan::Shares(fracs) => {
                 if self.forced_algo.is_some() {
                     // fixed dispatch: no cost-model work, and last_plan is
                     // cleared so nobody mistakes a planner prediction for
                     // what actually ran
                     let cplan = CollectivePlan::unplanned(&fracs, bytes);
-                    let res = self.exec_plan(buf, full, &cplan, elem_bytes)?;
-                    self.last_plan = None;
+                    let res = self.exec_plan(buf, full, &cplan, elem_bytes);
+                    if res.is_ok() {
+                        self.last_plan = None;
+                    }
                     res
                 } else {
                     // the balancer's split is the planner's input, not the
@@ -376,16 +413,20 @@ impl MultiRail {
                     // schedule the (measurement-corrected) cost model
                     // picks for it, cached until a replan trigger fires
                     let cplan = self.plan_shares(&fracs, bytes);
-                    let res = self.exec_plan(buf, full, &cplan, elem_bytes)?;
-                    self.last_plan = Some(cplan);
+                    let res = self.exec_plan(buf, full, &cplan, elem_bytes);
+                    if res.is_ok() {
+                        self.last_plan = Some(cplan);
+                    }
                     res
                 }
             }
             PartitionPlan::Slices { packet_bytes } => {
                 self.last_plan = None;
-                self.exec_slices(buf, full, packet_bytes, elem_bytes, &healthy)?
+                self.exec_slices(buf, full, packet_bytes, elem_bytes, &healthy)
             }
         };
+        self.scratch.healthy = healthy;
+        let (mut shares, failovers) = exec?;
 
         let active = shares.iter().filter(|s| s.bytes > 0).count();
         let sync = sync_overhead_us(active);
@@ -425,7 +466,8 @@ impl MultiRail {
     }
 
     /// Run one rail's slice under either the forced seed dispatch or the
-    /// planned schedule.
+    /// planned schedule. `scratch` is the op's reusable segment/chunk/
+    /// aggregation space (taken out of `self.scratch` by the caller).
     fn run_rail(
         &mut self,
         schedule: Schedule,
@@ -433,9 +475,10 @@ impl MultiRail {
         buf: &mut UnboundBuffer,
         w: Window,
         elem_bytes: f64,
+        scratch: &mut OpScratch,
     ) -> std::result::Result<crate::coordinator::collective::OpOutcome, RailDown> {
         match self.forced_algo {
-            Some(algo) => run_allreduce(
+            Some(algo) => run_allreduce_with(
                 algo,
                 &mut self.fab,
                 rail,
@@ -443,8 +486,9 @@ impl MultiRail {
                 w,
                 self.reducer.as_mut(),
                 elem_bytes,
+                scratch,
             ),
-            None => run_plan(
+            None => run_plan_with(
                 schedule,
                 &mut self.fab,
                 rail,
@@ -453,6 +497,7 @@ impl MultiRail {
                 self.reducer.as_mut(),
                 elem_bytes,
                 self.planner.intra.as_ref(),
+                scratch,
             ),
         }
     }
@@ -480,19 +525,30 @@ impl MultiRail {
         cplan: &CollectivePlan,
         elem_bytes: f64,
     ) -> Result<(Vec<RailShare>, usize)> {
-        let windows = cplan.windows(full);
-        let mut assigns: Vec<RailPlan> = cplan.assignments.clone();
+        // take the reusable scratch for the duration of the op (restored
+        // on the success path; error paths drop it and the next op
+        // re-grows capacity — errors here are terminal for the op anyway)
+        let mut windows = std::mem::take(&mut self.scratch.windows);
+        cplan.windows_into(full, &mut windows);
+        let mut assigns = std::mem::take(&mut self.scratch.assigns);
+        assigns.clear();
+        assigns.extend_from_slice(&cplan.assignments);
+        let mut allocated = std::mem::take(&mut self.scratch.allocated);
+        allocated.clear();
+        allocated.extend(
+            assigns
+                .iter()
+                .zip(&windows)
+                .map(|(a, w)| (a.rail, (w.len as f64 * elem_bytes) as u64)),
+        );
+        let mut op_scratch = std::mem::take(&mut self.scratch.op);
+
         let mut shares: Vec<RailShare> = Vec::with_capacity(assigns.len());
         let mut failovers = 0usize;
         let planner_scheduled = self.forced_algo.is_none();
-        let allocated: Vec<(usize, u64)> = assigns
-            .iter()
-            .zip(&windows)
-            .map(|(a, w)| (a.rail, (w.len as f64 * elem_bytes) as u64))
-            .collect();
 
         for idx in 0..assigns.len() {
-            let assign = assigns[idx].clone();
+            let assign = assigns[idx];
             let w = windows[idx];
             let rail = assign.rail;
             if w.is_empty() {
@@ -500,9 +556,9 @@ impl MultiRail {
                 continue;
             }
             buf.register(w);
-            match self.run_rail(assign.schedule, rail, buf, w, elem_bytes) {
+            match self.run_rail(assign.schedule, rail, buf, w, elem_bytes, &mut op_scratch) {
                 Ok(out) => {
-                    buf.complete(w);
+                    buf.complete(w)?;
                     let rail_bytes = (w.len as f64 * elem_bytes) as u64;
                     shares.push(RailShare { rail, bytes: rail_bytes, time_us: out.time_us });
                     if planner_scheduled {
@@ -551,9 +607,9 @@ impl MultiRail {
                     // re-plan the migrated window for the takeover rail
                     let sched = self.takeover_schedule(ev.takeover_rail, w, elem_bytes);
                     let out = self
-                        .run_rail(sched, ev.takeover_rail, buf, w, elem_bytes)
+                        .run_rail(sched, ev.takeover_rail, buf, w, elem_bytes, &mut op_scratch)
                         .map_err(|RailDown(r2)| Error::AllRailsDown(r2))?;
-                    buf.complete(w);
+                    buf.complete(w)?;
                     // ... and the surviving rails' pending windows at the
                     // post-failover fabric state
                     for j in idx + 1..assigns.len() {
@@ -593,6 +649,10 @@ impl MultiRail {
         }
         debug_assert!(buf.all_complete());
         buf.clear_pending();
+        self.scratch.windows = windows;
+        self.scratch.assigns = assigns;
+        self.scratch.allocated = allocated;
+        self.scratch.op = op_scratch;
         Ok((shares, failovers))
     }
 
@@ -639,6 +699,8 @@ impl MultiRail {
 
         let mut shares: Vec<RailShare> = Vec::new();
         let mut failovers = 0usize;
+        // per-packet numerics scratch, reused across every packet/subflow
+        let mut op_scratch = std::mem::take(&mut self.scratch.op);
         let alloc_bytes: Vec<(usize, u64)> = assigned
             .iter()
             .map(|(r, ps, _)| {
@@ -683,12 +745,13 @@ impl MultiRail {
                     // numerics per packet (reassembly order)
                     for p in ps {
                         buf.register(*p);
-                        crate::coordinator::collective::ring::ring_numerics(
+                        p.split_uniform_into(buf.nodes(), &mut op_scratch.segs);
+                        crate::coordinator::collective::ring::ring_numerics_segs(
                             buf,
-                            *p,
+                            &op_scratch.segs,
                             self.reducer.as_mut(),
                         );
-                        buf.complete(*p);
+                        buf.complete(*p)?;
                     }
                     shares.push(RailShare {
                         rail: *rail,
@@ -712,7 +775,7 @@ impl MultiRail {
                     let algo = self.forced_algo.unwrap_or(Algo::Ring);
                     for p in ps {
                         buf.register(*p);
-                        let out = run_allreduce(
+                        let out = run_allreduce_with(
                             algo,
                             &mut self.fab,
                             ev.takeover_rail,
@@ -720,9 +783,10 @@ impl MultiRail {
                             *p,
                             self.reducer.as_mut(),
                             elem_bytes,
+                            &mut op_scratch,
                         )
                         .map_err(|RailDown(r2)| Error::AllRailsDown(r2))?;
-                        buf.complete(*p);
+                        buf.complete(*p)?;
                         t_extra += out.time_us * SLICE_OVERHEAD;
                     }
                     if let Some(s) = shares.iter_mut().find(|s| s.rail == ev.takeover_rail) {
@@ -739,6 +803,7 @@ impl MultiRail {
             }
         }
         buf.clear_pending();
+        self.scratch.op = op_scratch;
         Ok((shares, failovers))
     }
 }

@@ -9,8 +9,8 @@
 
 use crate::coordinator::buffer::{UnboundBuffer, Window};
 use crate::coordinator::collective::reducer::Reducer;
-use crate::coordinator::collective::ring::ring_numerics;
-use crate::coordinator::collective::OpOutcome;
+use crate::coordinator::collective::ring::ring_numerics_segs;
+use crate::coordinator::collective::{OpOutcome, OpScratch};
 use crate::coordinator::planner::cost;
 use crate::net::simnet::{Fabric, RailDown};
 use crate::net::topology::IntraLink;
@@ -25,6 +25,21 @@ pub fn halving_doubling_allreduce(
     w: Window,
     red: &mut dyn Reducer,
     elem_bytes: f64,
+) -> Result<OpOutcome, RailDown> {
+    let mut scratch = OpScratch::default();
+    halving_doubling_allreduce_with(fab, rail, buf, w, red, elem_bytes, &mut scratch)
+}
+
+/// Scratch-reuse form of [`halving_doubling_allreduce`].
+#[allow(clippy::too_many_arguments)]
+pub fn halving_doubling_allreduce_with(
+    fab: &mut Fabric,
+    rail: usize,
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    scratch: &mut OpScratch,
 ) -> Result<OpOutcome, RailDown> {
     let n = fab.nodes;
     debug_assert!(n.is_power_of_two() && n >= 2);
@@ -46,7 +61,8 @@ pub fn halving_doubling_allreduce(
         steps += 2;
         divisor *= 2.0;
     }
-    ring_numerics(buf, w, red);
+    w.split_uniform_into(n, &mut scratch.segs);
+    ring_numerics_segs(buf, &scratch.segs, red);
     Ok(OpOutcome { time_us: total, bytes_moved: moved as u64, steps })
 }
 
@@ -63,6 +79,23 @@ pub fn two_level_allreduce(
     elem_bytes: f64,
     intra: &IntraLink,
     chunks: usize,
+) -> Result<OpOutcome, RailDown> {
+    let mut scratch = OpScratch::default();
+    two_level_allreduce_with(fab, rail, buf, w, red, elem_bytes, intra, chunks, &mut scratch)
+}
+
+/// Scratch-reuse form of [`two_level_allreduce`].
+#[allow(clippy::too_many_arguments)]
+pub fn two_level_allreduce_with(
+    fab: &mut Fabric,
+    rail: usize,
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    intra: &IntraLink,
+    chunks: usize,
+    scratch: &mut OpScratch,
 ) -> Result<OpOutcome, RailDown> {
     let n = fab.nodes;
     let g = intra.group_size.max(1);
@@ -86,7 +119,8 @@ pub fn two_level_allreduce(
     for _ in 0..rounds {
         total += fab.ring_step(rail, msg)?;
     }
-    ring_numerics(buf, w, red);
+    w.split_uniform_into(n, &mut scratch.segs);
+    ring_numerics_segs(buf, &scratch.segs, red);
     Ok(OpOutcome {
         time_us: total,
         bytes_moved: (msg * rounds as f64) as u64,

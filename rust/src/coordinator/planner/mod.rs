@@ -33,9 +33,9 @@ pub use quality::PlanQualityReport;
 
 use crate::coordinator::buffer::{UnboundBuffer, Window};
 use crate::coordinator::collective::reducer::Reducer;
-use crate::coordinator::collective::ring::ring_allreduce;
-use crate::coordinator::collective::tree::tree_allreduce;
-use crate::coordinator::collective::OpOutcome;
+use crate::coordinator::collective::ring::ring_allreduce_with;
+use crate::coordinator::collective::tree::tree_allreduce_with;
+use crate::coordinator::collective::{OpOutcome, OpScratch};
 use crate::coordinator::control::load_balancer::sync_overhead_us;
 use crate::coordinator::control::Timer;
 use crate::net::protocol::CollectiveKind;
@@ -368,20 +368,39 @@ pub fn run_plan(
     elem_bytes: f64,
     intra: Option<&IntraLink>,
 ) -> Result<OpOutcome, RailDown> {
+    let mut scratch = OpScratch::default();
+    run_plan_with(schedule, fab, rail, buf, w, red, elem_bytes, intra, &mut scratch)
+}
+
+/// Scratch-reuse form of [`run_plan`] — the coordinator's per-op path.
+#[allow(clippy::too_many_arguments)]
+pub fn run_plan_with(
+    schedule: Schedule,
+    fab: &mut Fabric,
+    rail: usize,
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    intra: Option<&IntraLink>,
+    scratch: &mut OpScratch,
+) -> Result<OpOutcome, RailDown> {
     if w.is_empty() {
         return Ok(OpOutcome::default());
     }
     match schedule.normalized() {
-        Schedule::Tree => tree_allreduce(fab, rail, buf, w, red, elem_bytes),
-        Schedule::FlatRing => ring_allreduce(fab, rail, buf, w, red, elem_bytes),
-        Schedule::RingChunked { chunks } => {
-            pipeline::pipelined_ring_allreduce(fab, rail, buf, w, red, elem_bytes, chunks)
-        }
+        Schedule::Tree => tree_allreduce_with(fab, rail, buf, w, red, elem_bytes, scratch),
+        Schedule::FlatRing => ring_allreduce_with(fab, rail, buf, w, red, elem_bytes, scratch),
+        Schedule::RingChunked { chunks } => pipeline::pipelined_ring_allreduce_with(
+            fab, rail, buf, w, red, elem_bytes, chunks, scratch,
+        ),
         Schedule::HalvingDoubling => {
             if fab.nodes.is_power_of_two() {
-                hierarchical::halving_doubling_allreduce(fab, rail, buf, w, red, elem_bytes)
+                hierarchical::halving_doubling_allreduce_with(
+                    fab, rail, buf, w, red, elem_bytes, scratch,
+                )
             } else {
-                ring_allreduce(fab, rail, buf, w, red, elem_bytes)
+                ring_allreduce_with(fab, rail, buf, w, red, elem_bytes, scratch)
             }
         }
         Schedule::TwoLevel { group, chunks } => match intra {
@@ -391,12 +410,12 @@ pub fn run_plan(
                     && fab.nodes % group == 0
                     && fab.nodes / group >= 2 =>
             {
-                hierarchical::two_level_allreduce(
-                    fab, rail, buf, w, red, elem_bytes, link, chunks,
+                hierarchical::two_level_allreduce_with(
+                    fab, rail, buf, w, red, elem_bytes, link, chunks, scratch,
                 )
             }
             // defensive: an invalid grouping falls back to the seed ring
-            _ => ring_allreduce(fab, rail, buf, w, red, elem_bytes),
+            _ => ring_allreduce_with(fab, rail, buf, w, red, elem_bytes, scratch),
         },
     }
 }

@@ -10,8 +10,8 @@
 
 use crate::coordinator::buffer::{UnboundBuffer, Window};
 use crate::coordinator::collective::reducer::Reducer;
-use crate::coordinator::collective::ring::ring_numerics;
-use crate::coordinator::collective::OpOutcome;
+use crate::coordinator::collective::ring::ring_numerics_segs;
+use crate::coordinator::collective::{OpOutcome, OpScratch};
 use crate::net::simnet::{Fabric, RailDown};
 
 /// Rounds of a `chunks`-deep pipeline over a `base_rounds`-round schedule.
@@ -39,6 +39,22 @@ pub fn pipelined_ring_allreduce(
     elem_bytes: f64,
     chunks: usize,
 ) -> Result<OpOutcome, RailDown> {
+    let mut scratch = OpScratch::default();
+    pipelined_ring_allreduce_with(fab, rail, buf, w, red, elem_bytes, chunks, &mut scratch)
+}
+
+/// Scratch-reuse form of [`pipelined_ring_allreduce`].
+#[allow(clippy::too_many_arguments)]
+pub fn pipelined_ring_allreduce_with(
+    fab: &mut Fabric,
+    rail: usize,
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    chunks: usize,
+    scratch: &mut OpScratch,
+) -> Result<OpOutcome, RailDown> {
     if w.is_empty() {
         return Ok(OpOutcome::default());
     }
@@ -52,7 +68,8 @@ pub fn pipelined_ring_allreduce(
     for _ in 0..rounds {
         total += fab.ring_step(rail, msg)?;
     }
-    ring_numerics(buf, w, red);
+    w.split_uniform_into(n, &mut scratch.segs);
+    ring_numerics_segs(buf, &scratch.segs, red);
     Ok(OpOutcome {
         time_us: total,
         bytes_moved: (msg * rounds as f64) as u64,

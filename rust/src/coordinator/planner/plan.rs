@@ -56,8 +56,9 @@ impl Schedule {
 }
 
 /// One rail's slice of the op: fraction of the window, modeled bytes, and
-/// the schedule + predicted time the cost model selected.
-#[derive(Debug, Clone)]
+/// the schedule + predicted time the cost model selected. `Copy` so the
+/// orchestrator's reusable assignment scratch never clones heap state.
+#[derive(Debug, Clone, Copy)]
 pub struct RailPlan {
     pub rail: usize,
     /// Fraction of the op window (the Load Balancer's α for this rail).
@@ -111,9 +112,17 @@ impl CollectivePlan {
     /// Carve the op window into per-assignment windows — identical
     /// arithmetic to the seed's share execution (contiguous, exact cover).
     pub fn windows(&self, full: Window) -> Vec<Window> {
+        let mut out = Vec::with_capacity(self.assignments.len());
+        self.windows_into(full, &mut out);
+        out
+    }
+
+    /// Scratch-reuse form of [`CollectivePlan::windows`]: delegates to the
+    /// canonical `Window::split_shares_into` loop over the assignment
+    /// shares, without building a fractions vector.
+    pub fn windows_into(&self, full: Window, out: &mut Vec<Window>) {
         assert!(!self.assignments.is_empty(), "plan with no assignments");
-        let fractions: Vec<f64> = self.assignments.iter().map(|a| a.share).collect();
-        full.split_fractions(&fractions)
+        full.split_shares_into(self.assignments.len(), |i| self.assignments[i].share, out);
     }
 
     /// Rails this plan claims (in assignment order).

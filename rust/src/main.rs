@@ -14,7 +14,7 @@
 
 use nezha::bench::figures;
 use nezha::config::Config;
-use nezha::coordinator::buffer::UnboundBuffer;
+use nezha::coordinator::buffer::BufferPool;
 use nezha::coordinator::multirail::MultiRail;
 use nezha::net::topology::ClusterSpec;
 use nezha::trainer::{train_e2e, E2EConfig};
@@ -74,14 +74,17 @@ fn bench(args: &Args) -> nezha::Result<()> {
     let mut mr = MultiRail::new(&cfg)?;
     const ELEMS: usize = 1024;
     let elem_bytes = size as f64 / ELEMS as f64;
+    let mut pool = BufferPool::new();
     for _ in 0..warm {
-        let mut buf = UnboundBuffer::from_fn(cfg.nodes, ELEMS, |n, i| ((n + i) % 7) as f32);
+        let mut buf = pool.acquire(cfg.nodes, ELEMS, |n, i| ((n + i) % 7) as f32);
         mr.allreduce_scaled(&mut buf, elem_bytes)?;
+        pool.release(buf);
     }
     let mut lat = Vec::with_capacity(reps);
     for _ in 0..reps {
-        let mut buf = UnboundBuffer::from_fn(cfg.nodes, ELEMS, |n, i| ((n + i) % 7) as f32);
+        let mut buf = pool.acquire(cfg.nodes, ELEMS, |n, i| ((n + i) % 7) as f32);
         lat.push(mr.allreduce_scaled(&mut buf, elem_bytes)?.total_us);
+        pool.release(buf);
     }
     let mean = nezha::util::stats::mean(&lat);
     println!(

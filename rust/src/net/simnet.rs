@@ -33,6 +33,19 @@ pub struct Straggler {
     pub sigma: f64,
 }
 
+/// Per-rail precomputed straggler stall state, maintained on
+/// inject/clear: the deterministic (`sigma == 0`) component is pre-summed
+/// and the stochastic entries are kept per rail, so the per-message path
+/// is O(stragglers on this rail) — O(1) table reads for healthy rails —
+/// instead of a linear scan over every injected straggler per message.
+#[derive(Debug, Clone, Default)]
+struct RailStall {
+    /// Sum of sigma == 0 stalls (charged exactly).
+    det_us: f64,
+    /// `(stall_us, sigma)` entries with sigma > 0 (sampled per message).
+    stoch: Vec<(f64, f64)>,
+}
+
 /// Multi-rail fabric across `nodes` symmetric nodes.
 #[derive(Debug, Clone)]
 pub struct Fabric {
@@ -40,13 +53,18 @@ pub struct Fabric {
     pub rails: Vec<Rail>,
     pub cpu: CpuPool,
     pub faults: FaultSchedule,
-    /// Injected per-rail stragglers (unmodeled per-message stalls).
+    /// Injected per-rail stragglers (unmodeled per-message stalls) — the
+    /// source of truth behind `stall_table`.
     stragglers: Vec<Straggler>,
+    /// Per-rail precomputed stall state (see [`RailStall`]).
+    stall_table: Vec<RailStall>,
     /// Virtual clock (us).
     clock_us: f64,
     /// Log-normal per-message jitter sigma (0 disables jitter).
     pub jitter_sigma: f64,
     rng: Pcg,
+    /// Reusable per-round jitter multipliers (batched sampling scratch).
+    jitter_buf: Vec<f64>,
 }
 
 impl Fabric {
@@ -55,15 +73,18 @@ impl Fabric {
         for r in &rails {
             cpu.register(r.kind());
         }
+        let n_rails = rails.len();
         Fabric {
             nodes,
             rails,
             cpu,
             faults: FaultSchedule::none(),
             stragglers: Vec::new(),
+            stall_table: vec![RailStall::default(); n_rails],
             clock_us: 0.0,
             jitter_sigma: 0.03,
             rng: Pcg::new(seed),
+            jitter_buf: Vec::new(),
         }
     }
 
@@ -83,25 +104,41 @@ impl Fabric {
     /// analytic cost model does NOT see the stall — only measurements do.
     pub fn inject_straggler(&mut self, rail: usize, stall_us: f64, sigma: f64) {
         self.stragglers.push(Straggler { rail, stall_us, sigma });
+        self.rebuild_stall(rail);
     }
 
     /// Remove all injected stragglers from `rail` (the fault healed).
     pub fn clear_straggler(&mut self, rail: usize) {
         self.stragglers.retain(|s| s.rail != rail);
+        self.rebuild_stall(rail);
     }
 
-    /// Sampled extra stall for one message on `rail` (0 when healthy).
-    fn straggler_stall_us(&mut self, rail: usize) -> f64 {
-        let mut stall = 0.0;
-        // indexed loop: sampling needs `&mut self.rng` while walking the list
-        let mut i = 0;
-        while i < self.stragglers.len() {
-            let s = self.stragglers[i];
-            if s.rail == rail {
-                let j = if s.sigma > 0.0 { self.rng.jitter(s.sigma) } else { 1.0 };
-                stall += s.stall_us * j;
+    /// Recompute `rail`'s precomputed stall entry from the straggler list
+    /// (runs on inject/clear only, never on the per-message path).
+    fn rebuild_stall(&mut self, rail: usize) {
+        let entry = &mut self.stall_table[rail];
+        entry.det_us = 0.0;
+        entry.stoch.clear();
+        for s in self.stragglers.iter().filter(|s| s.rail == rail) {
+            if s.sigma > 0.0 {
+                entry.stoch.push((s.stall_us, s.sigma));
+            } else {
+                entry.det_us += s.stall_us;
             }
-            i += 1;
+        }
+    }
+
+    /// Sampled extra stall for one message on `rail` (0 when healthy):
+    /// table read for the deterministic part, one draw per stochastic
+    /// entry on this rail.
+    fn straggler_stall_us(&mut self, rail: usize) -> f64 {
+        let mut stall = self.stall_table[rail].det_us;
+        // indexed loop: sampling needs `&mut self.rng` while reading the table
+        let mut k = 0;
+        while k < self.stall_table[rail].stoch.len() {
+            let (stall_us, sigma) = self.stall_table[rail].stoch[k];
+            stall += stall_us * self.rng.jitter(sigma);
+            k += 1;
         }
         stall
     }
@@ -160,10 +197,26 @@ impl Fabric {
         self.cpu.register(self.rails[rail].kind());
     }
 
+    /// Allocation-free form of [`Fabric::healthy_rails`] — the
+    /// coordinator's per-op loop uses this (or
+    /// [`Fabric::healthy_rails_into`] when a slice is needed).
+    pub fn healthy_rails_iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.rails
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.health == RailHealth::Healthy)
+            .map(|(i, _)| i)
+    }
+
+    /// Collect the healthy rails into caller-owned scratch (cleared
+    /// first).
+    pub fn healthy_rails_into(&self, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(self.healthy_rails_iter());
+    }
+
     pub fn healthy_rails(&self) -> Vec<usize> {
-        (0..self.rails.len())
-            .filter(|&i| self.rails[i].health == RailHealth::Healthy)
-            .collect()
+        self.healthy_rails_iter().collect()
     }
 
     /// Deterministic (jitter-free) point-to-point message time on `rail`
@@ -202,11 +255,45 @@ impl Fabric {
     /// One lockstep collective round on `rail`: every node sends a message
     /// of `bytes`; the round lasts as long as the slowest node (straggler
     /// max over per-node jitter).
+    ///
+    /// Batched sampling: health is polled and the deterministic base time
+    /// computed ONCE per round (they cannot change mid-round — the clock
+    /// only advances between rounds), all `nodes` jitter multipliers are
+    /// drawn through one [`Pcg::fill_jitter`] pass, and a fully
+    /// deterministic round (no jitter, no stochastic straggler) samples
+    /// nothing at all: its max over identical per-node times IS the single
+    /// deterministic message time.
     pub fn ring_step(&mut self, rail: usize, bytes: f64) -> Result<f64, RailDown> {
-        let mut worst = 0.0f64;
-        for _ in 0..self.nodes {
-            worst = worst.max(self.transfer(rail, bytes)?);
+        if !self.poll_health(rail) {
+            return Err(RailDown(rail));
         }
+        let base = self.transfer_det_us(rail, bytes);
+        let det_stall = self.stall_table[rail].det_us;
+        let n_stoch = self.stall_table[rail].stoch.len();
+        if self.jitter_sigma == 0.0 && n_stoch == 0 {
+            return Ok(base + det_stall);
+        }
+        let nodes = self.nodes;
+        let mut jit = std::mem::take(&mut self.jitter_buf);
+        jit.clear();
+        jit.resize(nodes, 1.0);
+        if self.jitter_sigma > 0.0 {
+            self.rng.fill_jitter(self.jitter_sigma, &mut jit);
+        }
+        let mut worst = 0.0f64;
+        for &j in jit.iter() {
+            let mut t = base * j + det_stall;
+            // indexed loop: sampling needs `&mut self.rng` while reading
+            // the table
+            let mut k = 0;
+            while k < n_stoch {
+                let (stall_us, sigma) = self.stall_table[rail].stoch[k];
+                t += stall_us * self.rng.jitter(sigma);
+                k += 1;
+            }
+            worst = worst.max(t);
+        }
+        self.jitter_buf = jit;
         Ok(worst)
     }
 
@@ -356,6 +443,41 @@ mod tests {
             }
         }
         assert!(widened);
+    }
+
+    #[test]
+    fn ring_step_batched_sampling_reproducible() {
+        // jitter ON: the batched per-round fill must be reproducible
+        // across identically-seeded fabrics
+        let mk = || {
+            let rails = ClusterSpec::local().build_rails(&[ProtoKind::Tcp]).unwrap();
+            Fabric::new(4, rails, CpuPool::default(), 21)
+        };
+        let (mut a, mut b) = (mk(), mk());
+        for _ in 0..10 {
+            assert_eq!(a.ring_step(0, MB).unwrap(), b.ring_step(0, MB).unwrap());
+        }
+        // deterministic mode: the no-sampling fast path equals the
+        // analytic per-message time exactly
+        let mut d = mk().deterministic();
+        let base = d.transfer_det_us(0, MB);
+        assert_eq!(d.ring_step(0, MB).unwrap(), base);
+    }
+
+    #[test]
+    fn straggler_table_tracks_inject_and_clear() {
+        let mut f = dual_tcp(4);
+        f.inject_straggler(1, 200.0, 0.0);
+        f.inject_straggler(1, 300.0, 0.0);
+        let clean = f.transfer(0, MB).unwrap();
+        // stalls stack: the precomputed table sums the deterministic parts
+        assert!((f.transfer(1, MB).unwrap() - clean - 500.0).abs() < 1e-6);
+        // the batched ring step pays the same stall
+        let r0 = f.ring_step(0, MB).unwrap();
+        let r1 = f.ring_step(1, MB).unwrap();
+        assert!((r1 - r0 - 500.0).abs() < 1e-6, "r0={r0} r1={r1}");
+        f.clear_straggler(1);
+        assert_eq!(f.transfer(0, MB).unwrap(), f.transfer(1, MB).unwrap());
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! of compute (Horovod pipelines allreduce with gradient production).
 
 use crate::config::Config;
-use crate::coordinator::buffer::UnboundBuffer;
+use crate::coordinator::buffer::BufferPool;
 use crate::coordinator::multirail::MultiRail;
 use crate::coordinator::planner::pipeline::{pipelined_total_us, BUCKET_OVERLAP};
 use crate::trainer::comm_profile::CommProfile;
@@ -33,6 +33,9 @@ pub struct DdpSim {
     /// Real elements per simulated op payload (timing is scaled to the
     /// profile's byte sizes; numerics stay real but small).
     sim_elems: usize,
+    /// Recycled staging buffers: every bucket op re-fills one pooled
+    /// buffer in place instead of allocating nodes × sim_elems per op.
+    pool: BufferPool,
 }
 
 impl DdpSim {
@@ -47,6 +50,7 @@ impl DdpSim {
             overlap: DEFAULT_OVERLAP,
             bucket_pipelining: false,
             sim_elems: 1024,
+            pool: BufferPool::new(),
         })
     }
 
@@ -64,11 +68,12 @@ impl DdpSim {
     pub fn comm_us(&mut self) -> Result<f64> {
         let mut ops: Vec<(f64, bool)> = Vec::with_capacity(self.profile.ops.len());
         for &bytes in &self.profile.ops.clone() {
-            let mut buf = UnboundBuffer::from_fn(self.nodes, self.sim_elems, |n, i| {
-                ((n + i) % 17) as f32
-            });
+            let mut buf = self
+                .pool
+                .acquire(self.nodes, self.sim_elems, |n, i| ((n + i) % 17) as f32);
             let elem_bytes = bytes as f64 / self.sim_elems as f64;
             let rep = self.mr.allreduce_scaled(&mut buf, elem_bytes)?;
+            self.pool.release(buf);
             let planned_multirail = self
                 .mr
                 .last_plan

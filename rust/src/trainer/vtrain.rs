@@ -15,7 +15,7 @@
 //! penalty growing with the DP group size on saturated rails.
 
 use crate::config::{Config, Policy};
-use crate::coordinator::buffer::UnboundBuffer;
+use crate::coordinator::buffer::BufferPool;
 use crate::coordinator::collective::Algo;
 use crate::coordinator::multirail::MultiRail;
 use crate::net::protocol::ProtoKind;
@@ -93,6 +93,8 @@ pub struct VtrainSim {
     pub chunk_bytes: Option<u64>,
     mr: MultiRail,
     sim_elems: usize,
+    /// Recycled staging buffers for the per-packet replay ops.
+    pool: BufferPool,
 }
 
 /// Packets above this are split (the paper splits >1 GB payloads into
@@ -123,7 +125,15 @@ impl VtrainSim {
         };
         conf.control.timer_window = 10;
         let mr = MultiRail::new(&conf)?;
-        Ok(VtrainSim { model, cfg, policy, chunk_bytes, mr, sim_elems: 512 })
+        Ok(VtrainSim {
+            model,
+            cfg,
+            policy,
+            chunk_bytes,
+            mr,
+            sim_elems: 512,
+            pool: BufferPool::new(),
+        })
     }
 
     /// Congestion/retransmission penalty on a saturated 1 Gbps rail
@@ -148,9 +158,9 @@ impl VtrainSim {
         };
         let mut total = 0.0;
         for bytes in packets {
-            let mut buf = UnboundBuffer::from_fn(self.mr.fab.nodes, self.sim_elems, |n, i| {
-                ((n * 31 + i) % 11) as f32
-            });
+            let mut buf = self
+                .pool
+                .acquire(self.mr.fab.nodes, self.sim_elems, |n, i| ((n * 31 + i) % 11) as f32);
             let elem_bytes = bytes as f64 / self.sim_elems as f64;
             // translate the modeled chunk size into real-buffer elements;
             // the replay pins the seed's fixed Ring/Ring_Chunked dispatch
@@ -162,6 +172,7 @@ impl VtrainSim {
                 },
             }));
             total += self.mr.allreduce_scaled(&mut buf, elem_bytes)?.total_us;
+            self.pool.release(buf);
         }
         Ok(total * self.congestion_penalty())
     }

@@ -20,6 +20,10 @@ pub enum Error {
 
     AllRailsDown(usize),
 
+    /// A member network reported completion for a window the shared buffer
+    /// never registered (stale handle after a failover migration/clear).
+    UnregisteredWindow { offset: usize, len: usize },
+
     Topology(String),
 
     Msg(String),
@@ -41,6 +45,11 @@ impl std::fmt::Display for Error {
             Error::AllRailsDown(r) => {
                 write!(f, "rail {r} failed and no healthy rail remains")
             }
+            Error::UnregisteredWindow { offset, len } => write!(
+                f,
+                "completing unregistered window [offset={offset}, len={len}] \
+                 (migrated or cleared by a concurrent failover?)"
+            ),
             Error::Topology(m) => write!(f, "topology error: {m}"),
             Error::Msg(m) => f.write_str(m),
         }
@@ -88,6 +97,9 @@ mod tests {
             "rail 3 failed and no healthy rail remains"
         );
         assert_eq!(Error::Config("x".into()).to_string(), "config error: x");
+        assert!(Error::UnregisteredWindow { offset: 8, len: 4 }
+            .to_string()
+            .contains("unregistered window [offset=8, len=4]"));
         assert_eq!(
             Error::MissingArtifact("m".into()).to_string(),
             "artifact `m` not found (run `make artifacts`)"

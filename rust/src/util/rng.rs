@@ -79,6 +79,17 @@ impl Pcg {
         (self.normal() * sigma).exp()
     }
 
+    /// Fill `out` with log-normal jitter multipliers in one batched pass —
+    /// the fabric's per-round sampling path draws all of a lockstep
+    /// round's per-node multipliers through this instead of one call per
+    /// message. The draw sequence is identical to repeated [`Pcg::jitter`]
+    /// calls, so batching preserves reproducibility.
+    pub fn fill_jitter(&mut self, sigma: f64, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.jitter(sigma);
+        }
+    }
+
     /// Fill a slice with N(0, scale) f32 values (synthetic gradients).
     pub fn fill_normal_f32(&mut self, out: &mut [f32], scale: f32) {
         for v in out.iter_mut() {
@@ -148,6 +159,17 @@ mod tests {
         for &i in &p {
             assert!(!seen[i]);
             seen[i] = true;
+        }
+    }
+
+    #[test]
+    fn fill_jitter_matches_sequential_draws() {
+        let mut a = Pcg::new(11);
+        let mut b = Pcg::new(11);
+        let mut batch = [0.0f64; 16];
+        a.fill_jitter(0.3, &mut batch);
+        for (i, &v) in batch.iter().enumerate() {
+            assert_eq!(v, b.jitter(0.3), "draw {i}");
         }
     }
 

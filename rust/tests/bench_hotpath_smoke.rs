@@ -1,0 +1,38 @@
+//! Tier-1 smoke test for the tracked hot-path benchmark: quick mode runs
+//! end-to-end and emits well-formed JSON at the repo root. Record, don't
+//! gate — no wall-clock thresholds here (machine speed varies); CI only
+//! uploads the artifact, and regenerating the file on every verified run
+//! keeps the checked-in trajectory honest.
+
+use nezha::bench::hotpath;
+use nezha::util::json::Json;
+
+#[test]
+fn hotpath_bench_quick_mode_emits_wellformed_json() {
+    let doc = hotpath::write_report(true).unwrap();
+
+    // the artifact on disk must parse back to exactly the same document
+    let text = std::fs::read_to_string(hotpath::report_path()).unwrap();
+    let parsed = Json::parse(&text).unwrap();
+    assert_eq!(parsed, doc);
+
+    assert_eq!(parsed.get("bench").unwrap().as_str(), Some("hotpath"));
+    assert_eq!(parsed.get("mode").unwrap().as_str(), Some("quick"));
+    let sweep = parsed.get("sweep").unwrap().as_arr().unwrap();
+    assert_eq!(sweep.len(), hotpath::HOTPATH_SIZES.len());
+    for (row, &bytes) in sweep.iter().zip(&hotpath::HOTPATH_SIZES) {
+        assert_eq!(row.get("bytes").unwrap().as_f64(), Some(bytes as f64));
+        let before = row.get("before_ops_per_sec").unwrap().as_f64().unwrap();
+        let after = row.get("after_ops_per_sec").unwrap().as_f64().unwrap();
+        let speedup = row.get("speedup").unwrap().as_f64().unwrap();
+        assert!(before > 0.0 && after > 0.0, "throughputs must be positive");
+        assert!(
+            (speedup - after / before).abs() < 1e-9,
+            "speedup field inconsistent with the recorded throughputs"
+        );
+    }
+    assert!(parsed.get("min_speedup").unwrap().as_f64().unwrap() > 0.0);
+    let kernels = parsed.get("kernels").unwrap();
+    assert!(kernels.get("add_into_gbps").unwrap().as_f64().unwrap() > 0.0);
+    assert!(kernels.get("reduce_copy_gbps").unwrap().as_f64().unwrap() > 0.0);
+}

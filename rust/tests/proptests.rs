@@ -382,6 +382,119 @@ fn prop_pipelined_total_bounded() {
     }
 }
 
+/// Property: pooled-buffer allreduce results are BIT-IDENTICAL to
+/// fresh-allocation results, across plan types (planner auto / static-cost
+/// / forced flat dispatch), combos (ring-ring, ring-rdma, ring-sharp),
+/// node counts and payload sizes — the pooling/scratch correctness
+/// invariant behind the allocation-free data plane.
+#[test]
+fn prop_pooled_allreduce_bit_identical_to_fresh() {
+    use nezha::config::{Config, PlannerMode, Policy};
+    use nezha::coordinator::buffer::BufferPool;
+    use nezha::coordinator::multirail::MultiRail;
+    let combos: [&[ProtoKind]; 3] = [
+        &[ProtoKind::Tcp, ProtoKind::Tcp],
+        &[ProtoKind::Tcp, ProtoKind::Glex],
+        &[ProtoKind::Tcp, ProtoKind::Sharp],
+    ];
+    let modes = [PlannerMode::Auto, PlannerMode::StaticCost, PlannerMode::Flat];
+    let mut rng = Pcg::new(4001);
+    for case in 0..24 {
+        let combo = combos[rng.below(3) as usize];
+        let nodes = [2usize, 4, 8][rng.below(3) as usize];
+        let len = 64 + rng.below(2000) as usize;
+        let mut cfg = Config {
+            nodes,
+            combo: combo.to_vec(),
+            policy: Policy::Nezha,
+            deterministic: true,
+            ..Config::default()
+        };
+        cfg.planner = modes[rng.below(3) as usize];
+        let elem_bytes = (1u64 << (16 + rng.below(11))) as f64 / len as f64;
+        let mut fresh_mr = MultiRail::new(&cfg).unwrap();
+        let mut pooled_mr = MultiRail::new(&cfg).unwrap();
+        let mut pool = BufferPool::new();
+        let salt = rng.below(13) as usize;
+        let fill = move |n: usize, i: usize| ((n * 7 + i + salt) % 13) as f32;
+        // several ops per case so the pooled arm actually recycles buffers
+        for op in 0..4 {
+            let mut fb = UnboundBuffer::from_fn(nodes, len, fill);
+            fresh_mr.allreduce_scaled(&mut fb, elem_bytes).unwrap();
+            let mut pb = pool.acquire(nodes, len, fill);
+            pooled_mr.allreduce_scaled(&mut pb, elem_bytes).unwrap();
+            for n in 0..nodes {
+                assert_eq!(
+                    fb.node(n),
+                    pb.node(n),
+                    "case {case} op {op} node {n}: pooled result diverged"
+                );
+            }
+            pool.release(pb);
+        }
+    }
+}
+
+/// Regression: the scratch-reuse window splitters (`split_fractions_into`,
+/// `split_chunks_into`, `split_uniform_into`) are bit-identical to their
+/// allocating counterparts on edge windows — empty, len < parts, rounding
+/// drift — and on random windows/fractions.
+#[test]
+fn prop_split_into_matches_allocating_split() {
+    let mut rng = Pcg::new(4002);
+    let mut cases: Vec<(usize, usize)> =
+        vec![(0, 0), (10, 0), (0, 1), (7, 3), (0, 7), (3, 61), (5, 1_000_003)];
+    for _ in 0..CASES {
+        cases.push((rng.below(5000) as usize, rng.below(300_000) as usize));
+    }
+    let mut out = Vec::new();
+    for (off, len) in cases {
+        let w = Window::new(off, len);
+        for parts in [1usize, 2, 3, 5, 8, 16, 61] {
+            let fracs = vec![1.0 / parts as f64; parts];
+            let alloc = w.split_fractions(&fracs);
+            w.split_fractions_into(&fracs, &mut out);
+            assert_eq!(alloc, out, "{w:?} fractions x{parts}");
+            w.split_uniform_into(parts, &mut out);
+            assert_eq!(alloc, out, "{w:?} uniform x{parts}");
+        }
+        for chunk in [1usize, 2, 7, 64, 1023] {
+            let alloc = w.split_chunks(chunk);
+            w.split_chunks_into(chunk, &mut out);
+            assert_eq!(alloc, out, "{w:?} chunks of {chunk}");
+        }
+        // random (normalized) fractions with rounding drift
+        let k = 1 + rng.below(6) as usize;
+        let mut fracs: Vec<f64> = (0..k).map(|_| rng.f64().max(1e-6)).collect();
+        let s: f64 = fracs.iter().sum();
+        for f in &mut fracs {
+            *f /= s;
+        }
+        let alloc = w.split_fractions(&fracs);
+        w.split_fractions_into(&fracs, &mut out);
+        assert_eq!(alloc, out, "{w:?} random fractions {fracs:?}");
+    }
+}
+
+/// Property: the fused `reduce_copy` kernel equals add-then-copy for
+/// random lengths (including non-multiple-of-8 tails) and values.
+#[test]
+fn prop_reduce_copy_equals_add_then_copy() {
+    let mut rng = Pcg::new(4003);
+    for case in 0..CASES {
+        let len = rng.below(4000) as usize;
+        let src: Vec<f32> = (0..len).map(|_| rng.range(-64, 64) as f32 * 0.25).collect();
+        let mut d_fused: Vec<f32> = (0..len).map(|_| rng.range(-64, 64) as f32 * 0.5).collect();
+        let mut d_plain = d_fused.clone();
+        let mut fwd: Vec<f32> = (0..len).map(|_| rng.range(-8, 8) as f32).collect();
+        let mut r = RustReducer;
+        r.reduce_copy(&mut d_fused, &src, &mut fwd);
+        r.add_into(&mut d_plain, &src);
+        assert_eq!(d_fused, d_plain, "case {case} len {len}");
+        assert_eq!(fwd, d_plain, "case {case} len {len}: forward diverged");
+    }
+}
+
 /// Property: bucketizer covers the flat vector exactly, in order, for
 /// random parameter layouts.
 #[test]
