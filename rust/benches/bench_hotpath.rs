@@ -30,11 +30,44 @@ fn main() -> nezha::Result<()> {
         }
     }
     t.print();
+    if let Some(ex) = doc.get("exec") {
+        let mut te = Table::new(&["size", "serial ops/s", "parallel ops/s", "speedup"]);
+        if let Some(rows) = ex.get("sweep").and_then(|s| s.as_arr()) {
+            for r in rows {
+                te.row(vec![
+                    r.get("size").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+                    format!("{:.1}", r.get("serial_ops_per_sec").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+                    format!("{:.1}", r.get("parallel_ops_per_sec").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+                    format!("{:.2}x", r.get("speedup").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+                ]);
+            }
+        }
+        println!("\nserial vs parallel executor (physical payloads):");
+        te.print();
+    }
     if let Some(k) = doc.get("kernels") {
         println!(
-            "kernels: add_into {:.2} GB/s, reduce_copy {:.2} GB/s",
+            "kernels ({} lanes): add_into {:.2} GB/s, reduce_copy {:.2} GB/s",
+            k.get("lanes").and_then(|v| v.as_f64()).unwrap_or(0.0),
             k.get("add_into_gbps").and_then(|v| v.as_f64()).unwrap_or(0.0),
             k.get("reduce_copy_gbps").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        );
+        if let Some(ws) = k.get("width_sweep").and_then(|s| s.as_arr()) {
+            for r in ws {
+                println!(
+                    "  {} lanes: add {:.2} GB/s, reduce_copy {:.2} GB/s",
+                    r.get("lanes").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    r.get("add_into_gbps").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    r.get("reduce_copy_gbps").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                );
+            }
+        }
+    }
+    if let Some(p) = doc.get("policy_sim") {
+        println!(
+            "policy sim: {:.2}s wall, {:.0} modeled ops/s",
+            p.get("wall_seconds").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            p.get("ops_per_sec").and_then(|v| v.as_f64()).unwrap_or(0.0),
         );
     }
 

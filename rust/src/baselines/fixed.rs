@@ -4,7 +4,7 @@
 //! Fig. 14's per-member-network latency probes.
 
 use crate::coordinator::control::timer::Timer;
-use crate::coordinator::multirail::{PartitionPlan, Partitioner};
+use crate::coordinator::multirail::{Partitioner, Shares};
 use crate::net::simnet::Fabric;
 
 #[derive(Debug)]
@@ -39,22 +39,23 @@ impl Partitioner for FixedShares {
         _timer: &Timer,
         healthy: &[usize],
         _bytes: u64,
-    ) -> PartitionPlan {
-        let mut shares: Vec<(usize, f64)> = self
-            .shares
-            .iter()
-            .filter(|(r, _)| healthy.contains(r))
-            .cloned()
-            .collect();
-        let total: f64 = shares.iter().map(|(_, f)| f).sum();
+        out: &mut Shares,
+    ) {
+        out.clear();
+        out.fracs.extend(
+            self.shares
+                .iter()
+                .filter(|(r, _)| healthy.contains(r))
+                .cloned(),
+        );
+        let total: f64 = out.fracs.iter().map(|(_, f)| f).sum();
         if total <= 0.0 {
-            shares = vec![(healthy[0], 1.0)];
+            out.set_single(healthy[0]);
         } else {
-            for (_, f) in &mut shares {
+            for (_, f) in &mut out.fracs {
                 *f /= total;
             }
         }
-        PartitionPlan::Shares(shares)
     }
 }
 
@@ -73,12 +74,10 @@ mod tests {
         let f = Fabric::new(4, rails, CpuPool::default(), 1);
         let t = Timer::new(10);
         let mut p = FixedShares::percent(99, 1);
-        match p.plan(&f, &t, &[0, 1], 1 << 20) {
-            PartitionPlan::Shares(s) => {
-                assert!((s[0].1 - 0.99).abs() < 1e-9);
-            }
-            other => panic!("{other:?}"),
-        }
+        let mut out = Shares::default();
+        p.plan(&f, &t, &[0, 1], 1 << 20, &mut out);
+        assert!(out.packet_bytes.is_none());
+        assert!((out.fracs[0].1 - 0.99).abs() < 1e-9);
     }
 
     #[test]
@@ -89,9 +88,11 @@ mod tests {
         let f = Fabric::new(4, rails, CpuPool::default(), 1);
         let t = Timer::new(10);
         let mut p = FixedShares::percent(50, 50);
-        match p.plan(&f, &t, &[1], 1024) {
-            PartitionPlan::Shares(s) => assert_eq!(s, vec![(1, 1.0)]),
-            other => panic!("{other:?}"),
-        }
+        let mut out = Shares::default();
+        p.plan(&f, &t, &[1], 1024, &mut out);
+        assert_eq!(out.fracs, vec![(1, 1.0)]);
+        // scratch reuse leaves no stale entries behind
+        p.plan(&f, &t, &[0, 1], 1024, &mut out);
+        assert_eq!(out.fracs.len(), 2);
     }
 }

@@ -13,7 +13,7 @@
 //! `Slices` path; this type only chooses the packet size.
 
 use crate::coordinator::control::timer::Timer;
-use crate::coordinator::multirail::{PartitionPlan, Partitioner};
+use crate::coordinator::multirail::{Partitioner, Shares};
 use crate::net::simnet::Fabric;
 
 #[derive(Debug)]
@@ -40,12 +40,13 @@ impl Partitioner for Mptcp {
         _timer: &Timer,
         _healthy: &[usize],
         bytes: u64,
-    ) -> PartitionPlan {
+        out: &mut Shares,
+    ) {
         // small payloads still get sliced (one packet) but MPTCP always
         // engages all subflows' machinery — reflected in the sync cost
         // charged for multi-rail ops
         let _ = bytes;
-        PartitionPlan::Slices { packet_bytes: self.packet_bytes }
+        out.set_slices(self.packet_bytes);
     }
 }
 
@@ -64,13 +65,11 @@ mod tests {
         let f = Fabric::new(4, rails, CpuPool::default(), 1);
         let t = Timer::new(100);
         let mut m = Mptcp::default();
-        assert_eq!(
-            m.plan(&f, &t, &[0, 1], 1 << 26),
-            PartitionPlan::Slices { packet_bytes: 65536 }
-        );
-        assert_eq!(
-            m.plan(&f, &t, &[0, 1], 100),
-            PartitionPlan::Slices { packet_bytes: 65536 }
-        );
+        let mut out = Shares::default();
+        m.plan(&f, &t, &[0, 1], 1 << 26, &mut out);
+        assert_eq!(out.packet_bytes, Some(65536));
+        assert!(out.fracs.is_empty());
+        m.plan(&f, &t, &[0, 1], 100, &mut out);
+        assert_eq!(out.packet_bytes, Some(65536));
     }
 }

@@ -9,7 +9,7 @@
 //! overhead on small payloads too.
 
 use crate::coordinator::control::timer::Timer;
-use crate::coordinator::multirail::{PartitionPlan, Partitioner};
+use crate::coordinator::multirail::{Partitioner, Shares};
 use crate::net::simnet::Fabric;
 
 #[derive(Debug)]
@@ -50,34 +50,35 @@ impl Partitioner for Mrib {
         _timer: &Timer,
         healthy: &[usize],
         _bytes: u64,
-    ) -> PartitionPlan {
+        out: &mut Shares,
+    ) {
         // static weights over the healthy subset, renormalized; bounded
         // delay-based correction (±30% max — MRIB targets transient
         // congestion, not protocol heterogeneity)
-        let mut shares: Vec<(usize, f64)> = self
-            .weights
-            .iter()
-            .filter(|(r, _)| healthy.contains(r))
-            .map(|&(r, w)| {
-                let adj = match self.ema_for(r) {
-                    Some(d) if d > 0.0 => {
-                        let avg: f64 = healthy
-                            .iter()
-                            .filter_map(|&h| self.ema_for(h))
-                            .sum::<f64>()
-                            / healthy.len() as f64;
-                        (avg / d).clamp(0.7, 1.3)
-                    }
-                    _ => 1.0,
-                };
-                (r, w * adj)
-            })
-            .collect();
-        let total: f64 = shares.iter().map(|(_, w)| w).sum();
-        for (_, w) in &mut shares {
+        out.clear();
+        out.fracs.extend(
+            self.weights
+                .iter()
+                .filter(|(r, _)| healthy.contains(r))
+                .map(|&(r, w)| {
+                    let adj = match self.ema_for(r) {
+                        Some(d) if d > 0.0 => {
+                            let avg: f64 = healthy
+                                .iter()
+                                .filter_map(|&h| self.ema_for(h))
+                                .sum::<f64>()
+                                / healthy.len() as f64;
+                            (avg / d).clamp(0.7, 1.3)
+                        }
+                        _ => 1.0,
+                    };
+                    (r, w * adj)
+                }),
+        );
+        let total: f64 = out.fracs.iter().map(|(_, w)| w).sum();
+        for (_, w) in &mut out.fracs {
             *w /= total;
         }
-        PartitionPlan::Shares(shares)
     }
 
     fn feedback(&mut self, _fab: &Fabric, _bytes: u64, shares: &[(usize, u64, f64)]) {
@@ -107,17 +108,20 @@ mod tests {
         Fabric::new(4, rails, CpuPool::default(), 1).deterministic()
     }
 
+    fn shares_of(m: &mut Mrib, f: &Fabric, healthy: &[usize], bytes: u64) -> Vec<(usize, f64)> {
+        let t = Timer::new(100);
+        let mut out = Shares::default();
+        m.plan(f, &t, healthy, bytes, &mut out);
+        assert!(out.packet_bytes.is_none());
+        out.fracs
+    }
+
     #[test]
     fn equal_bandwidth_gives_even_split() {
         let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp]);
         let mut m = Mrib::from_fabric(&f);
-        let t = Timer::new(100);
-        match m.plan(&f, &t, &[0, 1], 1 << 20) {
-            PartitionPlan::Shares(s) => {
-                assert!((s[0].1 - 0.5).abs() < 1e-9);
-            }
-            p => panic!("{p:?}"),
-        }
+        let s = shares_of(&mut m, &f, &[0, 1], 1 << 20);
+        assert!((s[0].1 - 0.5).abs() < 1e-9);
     }
 
     #[test]
@@ -126,13 +130,8 @@ mod tests {
         // far faster in allreduce — the paper's key criticism.
         let f = fab(&[ProtoKind::Tcp, ProtoKind::Sharp]);
         let mut m = Mrib::from_fabric(&f);
-        let t = Timer::new(100);
-        match m.plan(&f, &t, &[0, 1], 1 << 20) {
-            PartitionPlan::Shares(s) => {
-                assert!((s[0].1 - 0.5).abs() < 0.01, "{s:?}");
-            }
-            p => panic!("{p:?}"),
-        }
+        let s = shares_of(&mut m, &f, &[0, 1], 1 << 20);
+        assert!((s[0].1 - 0.5).abs() < 0.01, "{s:?}");
     }
 
     #[test]
@@ -140,55 +139,37 @@ mod tests {
         // TCP Eth 100G vs GLEX TH 128G → 100/228 vs 128/228
         let f = fab(&[ProtoKind::Tcp, ProtoKind::Glex]);
         let mut m = Mrib::from_fabric(&f);
-        let t = Timer::new(100);
-        match m.plan(&f, &t, &[0, 1], 1 << 20) {
-            PartitionPlan::Shares(s) => {
-                assert!((s[0].1 - 100.0 / 228.0).abs() < 1e-6, "{s:?}");
-            }
-            p => panic!("{p:?}"),
-        }
+        let s = shares_of(&mut m, &f, &[0, 1], 1 << 20);
+        assert!((s[0].1 - 100.0 / 228.0).abs() < 1e-6, "{s:?}");
     }
 
     #[test]
     fn always_splits_even_small_payloads() {
         let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp]);
         let mut m = Mrib::from_fabric(&f);
-        let t = Timer::new(100);
-        match m.plan(&f, &t, &[0, 1], 2048) {
-            PartitionPlan::Shares(s) => assert_eq!(s.len(), 2),
-            p => panic!("{p:?}"),
-        }
+        let s = shares_of(&mut m, &f, &[0, 1], 2048);
+        assert_eq!(s.len(), 2);
     }
 
     #[test]
     fn delay_feedback_is_bounded() {
         let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp]);
         let mut m = Mrib::from_fabric(&f);
-        let t = Timer::new(100);
         // rail 0 persistently 10x slower
         for _ in 0..200 {
             m.feedback(&f, 1 << 20, &[(0, 1 << 19, 100_000.0), (1, 1 << 19, 10_000.0)]);
         }
-        match m.plan(&f, &t, &[0, 1], 1 << 20) {
-            PartitionPlan::Shares(s) => {
-                let w0 = s.iter().find(|(r, _)| *r == 0).unwrap().1;
-                // adjusted but clamped: never below ~0.35/(0.35+0.65)
-                assert!(w0 > 0.3 && w0 < 0.5, "w0 = {w0}");
-            }
-            p => panic!("{p:?}"),
-        }
+        let s = shares_of(&mut m, &f, &[0, 1], 1 << 20);
+        let w0 = s.iter().find(|(r, _)| *r == 0).unwrap().1;
+        // adjusted but clamped: never below ~0.35/(0.35+0.65)
+        assert!(w0 > 0.3 && w0 < 0.5, "w0 = {w0}");
     }
 
     #[test]
     fn failed_rail_excluded() {
         let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp]);
         let mut m = Mrib::from_fabric(&f);
-        let t = Timer::new(100);
-        match m.plan(&f, &t, &[1], 1 << 20) {
-            PartitionPlan::Shares(s) => {
-                assert_eq!(s, vec![(1, 1.0)]);
-            }
-            p => panic!("{p:?}"),
-        }
+        let s = shares_of(&mut m, &f, &[1], 1 << 20);
+        assert_eq!(s, vec![(1, 1.0)]);
     }
 }

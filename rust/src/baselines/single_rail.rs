@@ -2,7 +2,7 @@
 //! allreduce to one network plane (§2's "static single-rail binding").
 
 use crate::coordinator::control::timer::Timer;
-use crate::coordinator::multirail::{PartitionPlan, Partitioner};
+use crate::coordinator::multirail::{Partitioner, Shares};
 use crate::net::simnet::Fabric;
 
 #[derive(Debug)]
@@ -35,7 +35,8 @@ impl Partitioner for SingleRail {
         _timer: &Timer,
         healthy: &[usize],
         bytes: u64,
-    ) -> PartitionPlan {
+        out: &mut Shares,
+    ) {
         let rail = match self {
             SingleRail::Pinned(r) if healthy.contains(r) => *r,
             _ => healthy
@@ -48,7 +49,7 @@ impl Partitioner for SingleRail {
                 })
                 .expect("no healthy rail"),
         };
-        PartitionPlan::Shares(vec![(rail, 1.0)])
+        out.set_single(rail);
     }
 }
 
@@ -69,10 +70,9 @@ mod tests {
         let f = fab(&[ProtoKind::Tcp, ProtoKind::Glex]);
         let t = Timer::new(100);
         let mut s = SingleRail::best();
-        match s.plan(&f, &t, &[0, 1], 8 << 20) {
-            PartitionPlan::Shares(v) => assert_eq!(v, vec![(1, 1.0)]),
-            p => panic!("{p:?}"),
-        }
+        let mut out = Shares::default();
+        s.plan(&f, &t, &[0, 1], 8 << 20, &mut out);
+        assert_eq!(out.fracs, vec![(1, 1.0)]);
     }
 
     #[test]
@@ -80,9 +80,8 @@ mod tests {
         let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp]);
         let t = Timer::new(100);
         let mut s = SingleRail::pinned(1);
-        match s.plan(&f, &t, &[0], 1024) {
-            PartitionPlan::Shares(v) => assert_eq!(v, vec![(0, 1.0)]),
-            p => panic!("{p:?}"),
-        }
+        let mut out = Shares::default();
+        s.plan(&f, &t, &[0], 1024, &mut out);
+        assert_eq!(out.fracs, vec![(0, 1.0)]);
     }
 }

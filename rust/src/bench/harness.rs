@@ -39,11 +39,14 @@ pub fn mean_allreduce_us(
     let mut total = 0.0;
     for i in 0..warm + reps {
         let mut buf = pool.acquire(mr.fab.nodes, ELEMS, |n, j| ((n + j) % 7) as f32);
-        let t = mr.allreduce_scaled(&mut buf, elem_bytes)?.total_us;
+        let rep = mr.allreduce_scaled(&mut buf, elem_bytes)?;
         pool.release(buf);
         if i >= warm {
-            total += t;
+            total += rep.total_us;
         }
+        // hand the report vector back so the measured loop allocates
+        // nothing once pool + scratch capacities stabilize
+        mr.recycle(rep);
     }
     Ok(total / reps.max(1) as f64)
 }

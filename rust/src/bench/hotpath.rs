@@ -11,9 +11,19 @@
 //!   steady-state allocation), exercising the same coordinator.
 //!
 //! Both arms run identically-configured deterministic coordinators, so the
-//! recorded `speedup` isolates the hot-path allocation/fill overhead this
-//! perf pass removed. Kernel bandwidth (GB/s of `add_into` and the fused
-//! `reduce_copy`) rides along in the same document.
+//! recorded `speedup` isolates the hot-path allocation/fill overhead the
+//! PR-3 perf pass removed. Three more trajectories ride along:
+//!
+//! * **exec sweep** — serial vs parallel cross-rail execution on PHYSICAL
+//!   payloads (elem_bytes = 4, real reduction work), the PR-4 engine's
+//!   headline number: the parallel executor should beat serial ops/sec on
+//!   multi-rail payloads ≥ 8 MiB, where per-rail numerics dominate the
+//!   scoped-thread dispatch cost;
+//! * **kernel width sweep** — GB/s of `add_into`/`reduce_copy` at 8/16/32
+//!   lanes; the shipped [`KERNEL_LANES`] is the swept winner;
+//! * **policy sim** — wall-clock of the canonical `bench_allreduce`-style
+//!   modeled sweep, so policy-simulation regressions surface in the same
+//!   tracked document as kernel ones.
 //!
 //! Record, don't gate: CI uploads the JSON as a workflow artifact and the
 //! tier-1 smoke test checks only that the benchmark runs and the document
@@ -21,11 +31,14 @@
 
 use std::time::Instant;
 
-use crate::bench::harness::bench_wall;
+use crate::bench::harness::{bench_wall, mean_allreduce_us};
 use crate::config::{Config, Policy};
 use crate::coordinator::buffer::{BufferPool, UnboundBuffer};
-use crate::coordinator::collective::{Reducer, RustReducer};
+use crate::coordinator::collective::reducer::{
+    add_into_lanes, reduce_copy_lanes, KERNEL_LANES,
+};
 use crate::coordinator::multirail::MultiRail;
+use crate::net::cpu_pool::ExecMode;
 use crate::net::topology::parse_combo;
 use crate::util::bytes::fmt_bytes;
 use crate::util::json::Json;
@@ -42,6 +55,28 @@ pub const ELEMS: usize = 1024;
 const NODES: usize = 8;
 const COMBO: &str = "tcp-tcp";
 
+/// Physical payload sizes of the serial-vs-parallel executor sweep
+/// (elem_bytes = 4: the reduction actually chews this much memory, so the
+/// sweep measures real cross-rail compute overlap, not just dispatch).
+pub const EXEC_SIZES: [u64; 3] = [8 << 20, 16 << 20, 32 << 20];
+
+/// The exec-sweep sizes a given mode runs: quick mode (the tier-1 DEBUG
+/// smoke test and the CI quick bench) keeps two ≥ 8 MiB points — enough
+/// to record the parallel engine's win above its dispatch-cost crossover
+/// without minutes of unoptimized physical reduction work per `cargo
+/// test`; the full release bench sweeps all of [`EXEC_SIZES`].
+pub fn exec_sizes(quick: bool) -> &'static [u64] {
+    if quick {
+        &EXEC_SIZES[..2]
+    } else {
+        &EXEC_SIZES
+    }
+}
+
+/// Nodes for the executor sweep (kept small so the physical buffers fit
+/// comfortably: nodes × 32 MiB × 2 resident copies).
+pub const EXEC_NODES: usize = 4;
+
 /// The committed target for the after/before throughput ratio on the
 /// sweep sizes (recorded in the document, asserted by the PR's acceptance
 /// check — not by CI).
@@ -57,6 +92,7 @@ fn mk_mr() -> Result<MultiRail> {
         combo: parse_combo(COMBO)?,
         policy: Policy::Nezha,
         deterministic: true,
+        exec: ExecMode::Serial,
         ..Config::default()
     };
     MultiRail::new(&cfg)
@@ -94,21 +130,23 @@ fn ops_per_sec_fresh(bytes: u64, warm: usize, reps: usize) -> Result<f64> {
 }
 
 /// ops/sec of `reps` modeled allreduces with a pooled, in-place re-filled
-/// buffer (the allocation-free data plane).
+/// buffer (the allocation-free data plane, reports recycled).
 fn ops_per_sec_pooled(bytes: u64, warm: usize, reps: usize) -> Result<f64> {
     let mut mr = mk_mr()?;
     let mut pool = BufferPool::new();
     let elem_bytes = bytes as f64 / ELEMS as f64;
     for _ in 0..warm {
         let mut buf = pool.acquire(NODES, ELEMS, fill);
-        mr.allreduce_scaled(&mut buf, elem_bytes)?;
+        let rep = mr.allreduce_scaled(&mut buf, elem_bytes)?;
         pool.release(buf);
+        mr.recycle(rep);
     }
     let t = Instant::now();
     for _ in 0..reps {
         let mut buf = pool.acquire(NODES, ELEMS, fill);
-        mr.allreduce_scaled(&mut buf, elem_bytes)?;
+        let rep = mr.allreduce_scaled(&mut buf, elem_bytes)?;
         pool.release(buf);
+        mr.recycle(rep);
     }
     Ok(reps as f64 / t.elapsed().as_secs_f64())
 }
@@ -125,21 +163,119 @@ pub fn sweep(quick: bool) -> Result<Vec<HotpathRow>> {
     Ok(rows)
 }
 
-/// Reduction-kernel bandwidth in GB/s: (add_into, fused reduce_copy),
-/// payload convention = one operand's bytes per iteration.
-pub fn kernel_gbps() -> (f64, f64) {
+/// One executor-sweep row: serial/parallel ops-per-second on one PHYSICAL
+/// payload size.
+#[derive(Debug, Clone)]
+pub struct ExecRow {
+    pub bytes: u64,
+    pub serial_ops_per_sec: f64,
+    pub parallel_ops_per_sec: f64,
+}
+
+impl ExecRow {
+    pub fn speedup(&self) -> f64 {
+        self.parallel_ops_per_sec / self.serial_ops_per_sec
+    }
+}
+
+/// ops/sec of physical (`elem_bytes = 4`) allreduces under `mode`, with
+/// pooled buffers and recycled reports.
+fn ops_per_sec_exec(mode: ExecMode, bytes: u64, warm: usize, reps: usize) -> Result<f64> {
+    let cfg = Config {
+        nodes: EXEC_NODES,
+        combo: parse_combo(COMBO)?,
+        policy: Policy::Nezha,
+        deterministic: true,
+        exec: mode,
+        ..Config::default()
+    };
+    let mut mr = MultiRail::new(&cfg)?;
+    let elems = (bytes / 4) as usize;
+    let mut pool = BufferPool::new();
+    for _ in 0..warm {
+        let mut buf = pool.acquire(EXEC_NODES, elems, fill);
+        let rep = mr.allreduce(&mut buf)?;
+        pool.release(buf);
+        mr.recycle(rep);
+    }
+    let t = Instant::now();
+    for _ in 0..reps {
+        let mut buf = pool.acquire(EXEC_NODES, elems, fill);
+        let rep = mr.allreduce(&mut buf)?;
+        pool.release(buf);
+        mr.recycle(rep);
+    }
+    Ok(reps as f64 / t.elapsed().as_secs_f64())
+}
+
+/// The serial-vs-parallel executor sweep over [`EXEC_SIZES`] — real
+/// reduction work on disjoint per-rail windows, so the parallel engine's
+/// cross-rail compute overlap (and its scoped-thread dispatch cost) shows
+/// up in wall-clock ops/sec.
+pub fn exec_sweep(quick: bool) -> Result<Vec<ExecRow>> {
+    // quick mode (the tier-1 DEBUG smoke test + CI quick bench) keeps the
+    // physical sweep to a handful of reps per size/mode — unlike the rest
+    // of the document these ops do real 8–32 MiB reduction work, so rep
+    // counts, not sizes, are where quick mode saves its time (the ≥ 8 MiB
+    // span itself is the point of the trajectory)
+    let (warm, reps) = if quick { (1, 3) } else { (3, 20) };
+    let sizes = exec_sizes(quick);
+    let mut rows = Vec::with_capacity(sizes.len());
+    for &bytes in sizes {
+        let serial_ops_per_sec = ops_per_sec_exec(ExecMode::Serial, bytes, warm, reps)?;
+        let parallel_ops_per_sec = ops_per_sec_exec(ExecMode::Parallel, bytes, warm, reps)?;
+        rows.push(ExecRow { bytes, serial_ops_per_sec, parallel_ops_per_sec });
+    }
+    Ok(rows)
+}
+
+/// Reduction-kernel bandwidth in GB/s at one unroll width:
+/// (add_into, fused reduce_copy), payload convention = one operand's
+/// bytes per iteration.
+fn kernel_gbps_at<const W: usize>() -> (f64, f64) {
     const N: usize = 1 << 20;
-    let mut red = RustReducer;
     let mut dst = vec![1.0f32; N];
     let src = vec![2.0f32; N];
-    let s_add = bench_wall("add_into_1M", 5, 50, || red.add_into(&mut dst, &src));
+    let s_add = bench_wall("add_into_1M", 5, 50, || add_into_lanes::<W>(&mut dst, &src));
     let mut fwd = vec![0.0f32; N];
     let mut dst2 = vec![1.0f32; N];
     let s_rc = bench_wall("reduce_copy_1M", 5, 50, || {
-        red.reduce_copy(&mut dst2, &src, &mut fwd)
+        reduce_copy_lanes::<W>(&mut dst2, &src, &mut fwd)
     });
     let gbps = |mean_us: f64| (N * 4) as f64 / mean_us / 1e3;
     (gbps(s_add.mean_us), gbps(s_rc.mean_us))
+}
+
+/// Shipped-width kernel bandwidth (GB/s of `add_into` and the fused
+/// `reduce_copy` at [`KERNEL_LANES`]).
+pub fn kernel_gbps() -> (f64, f64) {
+    kernel_gbps_at::<KERNEL_LANES>()
+}
+
+/// The 8/16/32-lane width sweep behind [`KERNEL_LANES`]:
+/// `(lanes, add_gbps, reduce_copy_gbps)` per width.
+pub fn kernel_width_sweep() -> Vec<(usize, f64, f64)> {
+    let (a8, r8) = kernel_gbps_at::<8>();
+    let (a16, r16) = kernel_gbps_at::<16>();
+    let (a32, r32) = kernel_gbps_at::<32>();
+    vec![(8, a8, r8), (16, a16, r16), (32, a32, r32)]
+}
+
+/// Wall-clock of the canonical policy-simulation sweep (the
+/// `bench_allreduce` shape: Nezha, dual TCP, modeled sizes on scaled
+/// 1024-element buffers) — `(wall_seconds, modeled ops, ops/sec)`.
+/// Tracked alongside the kernel numbers so a policy-sim slowdown (planner,
+/// balancer, fabric sampling) regresses visibly in the same trajectory.
+pub fn policy_sim_wall(quick: bool) -> Result<(f64, u64, f64)> {
+    let (warm, reps) = if quick { (5, 40) } else { (20, 200) };
+    let mut mr = mk_mr()?;
+    let t = Instant::now();
+    for &bytes in &HOTPATH_SIZES {
+        mean_allreduce_us(&mut mr, bytes, warm, reps)?;
+    }
+    let wall = t.elapsed().as_secs_f64();
+    let ops = mr.ops_done();
+    Ok((wall, ops, ops as f64 / wall))
 }
 
 /// The full BENCH_hotpath.json document.
@@ -149,7 +285,14 @@ pub fn hotpath_json(quick: bool) -> Result<Json> {
         .iter()
         .map(HotpathRow::speedup)
         .fold(f64::INFINITY, f64::min);
+    let exec_rows = exec_sweep(quick)?;
+    let exec_min_speedup = exec_rows
+        .iter()
+        .map(ExecRow::speedup)
+        .fold(f64::INFINITY, f64::min);
+    let widths = kernel_width_sweep();
     let (add_gbps, rc_gbps) = kernel_gbps();
+    let (sim_wall_s, sim_ops, sim_ops_per_sec) = policy_sim_wall(quick)?;
     let sweep_json: Vec<Json> = rows
         .iter()
         .map(|r| {
@@ -159,6 +302,28 @@ pub fn hotpath_json(quick: bool) -> Result<Json> {
                 ("before_ops_per_sec", Json::from(r.before_ops_per_sec)),
                 ("after_ops_per_sec", Json::from(r.after_ops_per_sec)),
                 ("speedup", Json::from(r.speedup())),
+            ])
+        })
+        .collect();
+    let exec_json: Vec<Json> = exec_rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("bytes", Json::from(r.bytes as f64)),
+                ("size", Json::from(fmt_bytes(r.bytes))),
+                ("serial_ops_per_sec", Json::from(r.serial_ops_per_sec)),
+                ("parallel_ops_per_sec", Json::from(r.parallel_ops_per_sec)),
+                ("speedup", Json::from(r.speedup())),
+            ])
+        })
+        .collect();
+    let width_json: Vec<Json> = widths
+        .iter()
+        .map(|&(lanes, a, r)| {
+            Json::obj(vec![
+                ("lanes", Json::from(lanes)),
+                ("add_into_gbps", Json::from(a)),
+                ("reduce_copy_gbps", Json::from(r)),
             ])
         })
         .collect();
@@ -179,11 +344,35 @@ pub fn hotpath_json(quick: bool) -> Result<Json> {
         ("sweep", Json::Arr(sweep_json)),
         ("min_speedup", Json::from(min_speedup)),
         ("target_speedup", Json::from(TARGET_SPEEDUP)),
+        // serial-vs-parallel cross-rail execution engine (physical
+        // payloads, real reduction work; record, don't gate)
+        (
+            "exec",
+            Json::obj(vec![
+                ("nodes", Json::from(EXEC_NODES)),
+                ("combo", Json::from(COMBO)),
+                ("sweep", Json::Arr(exec_json)),
+                ("min_speedup", Json::from(exec_min_speedup)),
+            ]),
+        ),
         (
             "kernels",
             Json::obj(vec![
                 ("add_into_gbps", Json::from(add_gbps)),
                 ("reduce_copy_gbps", Json::from(rc_gbps)),
+                ("lanes", Json::from(KERNEL_LANES)),
+                ("width_sweep", Json::Arr(width_json)),
+            ]),
+        ),
+        // canonical policy-simulation sweep wall-clock (the
+        // bench_allreduce shape) — regressions in planner/balancer/fabric
+        // sampling surface here alongside the kernel numbers
+        (
+            "policy_sim",
+            Json::obj(vec![
+                ("wall_seconds", Json::from(sim_wall_s)),
+                ("modeled_ops", Json::from(sim_ops as f64)),
+                ("ops_per_sec", Json::from(sim_ops_per_sec)),
             ]),
         ),
     ]))

@@ -7,7 +7,7 @@
 
 use std::collections::BTreeMap;
 
-use crate::net::cpu_pool::AllocPolicy;
+use crate::net::cpu_pool::{AllocPolicy, ExecMode};
 use crate::net::protocol::ProtoKind;
 use crate::net::topology::{parse_combo, ClusterSpec};
 use crate::util::cli::Args;
@@ -130,6 +130,12 @@ pub struct Config {
     pub policy: Policy,
     pub planner: PlannerMode,
     pub alloc: AllocPolicy,
+    /// Cross-rail execution engine: `serial` (one rail after another, the
+    /// seed behaviour) or `parallel` (all rails' schedules concurrently on
+    /// scoped worker threads; numerics and modeled times stay
+    /// bit-identical). Ablatable per run; the `NEZHA_EXEC` env var
+    /// overrides the default so CI can run whole suites under either.
+    pub exec: ExecMode,
     pub control: ControlConfig,
     pub seed: u64,
     pub deterministic: bool,
@@ -146,6 +152,7 @@ impl Default for Config {
             policy: Policy::Nezha,
             planner: PlannerMode::Auto,
             alloc: AllocPolicy::Adaptive,
+            exec: ExecMode::from_env(ExecMode::Serial),
             control: ControlConfig::default(),
             seed: 42,
             deterministic: false,
@@ -176,6 +183,7 @@ impl Config {
                 "combo" | "network" => self.combo = parse_combo(v)?,
                 "policy" => self.policy = Policy::parse(v)?,
                 "planner" => self.planner = PlannerMode::parse(v)?,
+                "exec" => self.exec = ExecMode::parse(v)?,
                 "alloc" => {
                     self.alloc = match v.as_str() {
                         "static" => AllocPolicy::StaticEqual,
@@ -223,7 +231,7 @@ impl Config {
         }
         let mut kv = BTreeMap::new();
         for key in [
-            "cluster", "nodes", "combo", "network", "policy", "planner", "alloc", "tau", "eta",
+            "cluster", "nodes", "combo", "network", "policy", "planner", "exec", "alloc", "tau", "eta",
             "timer_window", "detect_timeout_us", "migrate_cost_us", "replan_error",
             "seed", "deterministic", "artifacts_dir",
         ] {
@@ -297,6 +305,20 @@ mod tests {
         c.apply(&kv).unwrap();
         assert_eq!(c.control.replan_error, 0.1);
         assert_eq!(c.planner, PlannerMode::StaticCost);
+    }
+
+    #[test]
+    fn exec_mode_key_parses() {
+        let mut c = Config::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("exec".into(), "parallel".into());
+        c.apply(&kv).unwrap();
+        assert_eq!(c.exec, ExecMode::Parallel);
+        kv.insert("exec".into(), "serial".into());
+        c.apply(&kv).unwrap();
+        assert_eq!(c.exec, ExecMode::Serial);
+        kv.insert("exec".into(), "sideways".into());
+        assert!(c.apply(&kv).is_err());
     }
 
     #[test]

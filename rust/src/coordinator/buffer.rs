@@ -19,6 +19,76 @@
 
 use crate::util::error::Error;
 
+/// Windowed access to per-node payload slices — the buffer abstraction
+/// every collective's numerics run over. Implemented by the full
+/// [`UnboundBuffer`] (global coordinates) and by [`RailView`], the
+/// disjoint per-rail view the parallel executor hands each worker thread.
+/// Windows are always given in GLOBAL buffer coordinates; views translate
+/// internally, so the same segment lists drive both implementations.
+pub trait NodeWindows {
+    /// Number of node payloads.
+    fn nodes(&self) -> usize;
+    /// Node `n`'s slice of window `w` (global coordinates).
+    fn window(&self, n: usize, w: Window) -> &[f32];
+    /// Mutable form of [`NodeWindows::window`].
+    fn window_mut(&mut self, n: usize, w: Window) -> &mut [f32];
+    /// Borrow two distinct nodes' windows simultaneously (ring exchange).
+    fn pair_windows_mut(&mut self, a: usize, b: usize, w: Window)
+        -> (&mut [f32], &mut [f32]);
+    /// Borrow three distinct nodes' windows simultaneously (the fused
+    /// reduce-scatter + allgather hop).
+    fn tri_windows_mut(
+        &mut self,
+        a: usize,
+        b: usize,
+        c: usize,
+        w: Window,
+    ) -> (&mut [f32], &mut [f32], &mut [f32]);
+}
+
+/// Split two distinct per-node slices out of `data` — the shared pair-
+/// borrow core behind both [`NodeWindows`] implementations.
+fn pair_split<S: AsMut<[f32]>>(
+    data: &mut [S],
+    a: usize,
+    b: usize,
+    w: Window,
+) -> (&mut [f32], &mut [f32]) {
+    assert_ne!(a, b);
+    let (lo, hi, swap) = if a < b { (a, b, false) } else { (b, a, true) };
+    let (left, right) = data.split_at_mut(hi);
+    let sa = &mut left[lo].as_mut()[w.offset..w.end()];
+    let sb = &mut right[0].as_mut()[w.offset..w.end()];
+    if swap { (sb, sa) } else { (sa, sb) }
+}
+
+/// Split three distinct per-node slices out of `data` (see
+/// [`pair_split`]): order the indices, split the outer slice twice, then
+/// un-permute.
+fn tri_split<S: AsMut<[f32]>>(
+    data: &mut [S],
+    a: usize,
+    b: usize,
+    c: usize,
+    w: Window,
+) -> (&mut [f32], &mut [f32], &mut [f32]) {
+    assert!(a != b && b != c && a != c, "tri-borrow needs distinct nodes");
+    let mut idx = [(a, 0usize), (b, 1), (c, 2)];
+    idx.sort_unstable_by_key(|&(node, _)| node);
+    let (lo, mid, hi) = (idx[0].0, idx[1].0, idx[2].0);
+    let (left, rest) = data.split_at_mut(mid);
+    let (mid_part, right) = rest.split_at_mut(hi - mid);
+    let s_lo = &mut left[lo].as_mut()[w.offset..w.end()];
+    let s_mid = &mut mid_part[0].as_mut()[w.offset..w.end()];
+    let s_hi = &mut right[0].as_mut()[w.offset..w.end()];
+    let mut out: [Option<&mut [f32]>; 3] = [None, None, None];
+    out[idx[0].1] = Some(s_lo);
+    out[idx[1].1] = Some(s_mid);
+    out[idx[2].1] = Some(s_hi);
+    let [x, y, z] = out;
+    (x.unwrap(), y.unwrap(), z.unwrap())
+}
+
 /// A `(ptr, data_length)` view into the shared buffer, in f32 elements.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Window {
@@ -204,12 +274,7 @@ impl UnboundBuffer {
         b: usize,
         w: Window,
     ) -> (&mut [f32], &mut [f32]) {
-        assert_ne!(a, b);
-        let (lo, hi, swap) = if a < b { (a, b, false) } else { (b, a, true) };
-        let (left, right) = self.data.split_at_mut(hi);
-        let sa = &mut left[lo][w.offset..w.end()];
-        let sb = &mut right[0][w.offset..w.end()];
-        if swap { (sb, sa) } else { (sa, sb) }
+        pair_split(&mut self.data, a, b, w)
     }
 
     /// Borrow three distinct nodes' windows simultaneously — the fused
@@ -223,22 +288,42 @@ impl UnboundBuffer {
         c: usize,
         w: Window,
     ) -> (&mut [f32], &mut [f32], &mut [f32]) {
-        assert!(a != b && b != c && a != c, "tri-borrow needs distinct nodes");
-        // order the indices, split the outer Vec twice, then un-permute
-        let mut idx = [(a, 0usize), (b, 1), (c, 2)];
-        idx.sort_unstable_by_key(|&(node, _)| node);
-        let (lo, mid, hi) = (idx[0].0, idx[1].0, idx[2].0);
-        let (left, rest) = self.data.split_at_mut(mid);
-        let (mid_part, right) = rest.split_at_mut(hi - mid);
-        let s_lo = &mut left[lo][w.offset..w.end()];
-        let s_mid = &mut mid_part[0][w.offset..w.end()];
-        let s_hi = &mut right[0][w.offset..w.end()];
-        let mut out: [Option<&mut [f32]>; 3] = [None, None, None];
-        out[idx[0].1] = Some(s_lo);
-        out[idx[1].1] = Some(s_mid);
-        out[idx[2].1] = Some(s_hi);
-        let [x, y, z] = out;
-        (x.unwrap(), y.unwrap(), z.unwrap())
+        tri_split(&mut self.data, a, b, c, w)
+    }
+
+    /// Disjoint per-rail views over `windows` (which must be sorted,
+    /// non-overlapping sub-windows of this buffer — exactly what
+    /// [`crate::coordinator::planner::CollectivePlan::windows_into`]
+    /// produces). Each view covers ONE window across every node's payload,
+    /// so the parallel executor can hand rails to worker threads with the
+    /// borrow checker proving the rails' numerics never alias. Empty
+    /// windows yield empty views (kept so indices line up with the plan's
+    /// assignment order).
+    pub fn rail_views(&mut self, windows: &[Window]) -> Vec<RailView<'_>> {
+        let nodes = self.data.len();
+        let total = self.len();
+        let mut per_window: Vec<Vec<&mut [f32]>> =
+            windows.iter().map(|_| Vec::with_capacity(nodes)).collect();
+        for node in self.data.iter_mut() {
+            let mut rest: &mut [f32] = node.as_mut_slice();
+            let mut cursor = 0usize;
+            for (i, w) in windows.iter().enumerate() {
+                assert!(
+                    w.offset >= cursor && w.end() <= total,
+                    "rail views need sorted, non-overlapping windows"
+                );
+                let (_gap, tail) = rest.split_at_mut(w.offset - cursor);
+                let (slice, tail) = tail.split_at_mut(w.len);
+                per_window[i].push(slice);
+                rest = tail;
+                cursor = w.end();
+            }
+        }
+        windows
+            .iter()
+            .zip(per_window)
+            .map(|(w, nodes)| RailView { base: w.offset, len: w.len, nodes })
+            .collect()
     }
 
     /// Overwrite every node's payload from `template` (shapes must match)
@@ -254,6 +339,103 @@ impl UnboundBuffer {
 
     pub fn into_data(self) -> Vec<Vec<f32>> {
         self.data
+    }
+}
+
+impl NodeWindows for UnboundBuffer {
+    fn nodes(&self) -> usize {
+        self.data.len()
+    }
+
+    fn window(&self, n: usize, w: Window) -> &[f32] {
+        &self.data[n][w.offset..w.end()]
+    }
+
+    fn window_mut(&mut self, n: usize, w: Window) -> &mut [f32] {
+        &mut self.data[n][w.offset..w.end()]
+    }
+
+    fn pair_windows_mut(&mut self, a: usize, b: usize, w: Window)
+        -> (&mut [f32], &mut [f32]) {
+        pair_split(&mut self.data, a, b, w)
+    }
+
+    fn tri_windows_mut(
+        &mut self,
+        a: usize,
+        b: usize,
+        c: usize,
+        w: Window,
+    ) -> (&mut [f32], &mut [f32], &mut [f32]) {
+        tri_split(&mut self.data, a, b, c, w)
+    }
+}
+
+/// One rail's disjoint view of the shared buffer: the rail's window slice
+/// of EVERY node's payload, borrow-split out of the [`UnboundBuffer`] by
+/// [`UnboundBuffer::rail_views`]. Implements [`NodeWindows`] in global
+/// coordinates (translating internally), so collective numerics run
+/// unchanged over a view — and the borrow checker proves concurrent rails
+/// can never touch each other's elements.
+#[derive(Debug)]
+pub struct RailView<'a> {
+    /// Global offset of this view's window.
+    base: usize,
+    /// Window length in elements.
+    len: usize,
+    /// `nodes[n]` = node n's `[base, base + len)` slice.
+    nodes: Vec<&'a mut [f32]>,
+}
+
+impl RailView<'_> {
+    /// Translate a global window into view-local coordinates (bounds-
+    /// checked: the window must lie inside this view).
+    fn local(&self, w: Window) -> Window {
+        debug_assert!(
+            w.offset >= self.base && w.end() <= self.base + self.len,
+            "window {w:?} escapes rail view [{}, {})",
+            self.base,
+            self.base + self.len
+        );
+        Window::new(w.offset - self.base, w.len)
+    }
+
+    /// The view's own window in global coordinates.
+    pub fn window_of_view(&self) -> Window {
+        Window::new(self.base, self.len)
+    }
+}
+
+impl NodeWindows for RailView<'_> {
+    fn nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    fn window(&self, n: usize, w: Window) -> &[f32] {
+        let lw = self.local(w);
+        &self.nodes[n][lw.offset..lw.end()]
+    }
+
+    fn window_mut(&mut self, n: usize, w: Window) -> &mut [f32] {
+        let lw = self.local(w);
+        &mut self.nodes[n][lw.offset..lw.end()]
+    }
+
+    fn pair_windows_mut(&mut self, a: usize, b: usize, w: Window)
+        -> (&mut [f32], &mut [f32]) {
+        let lw = self.local(w);
+        pair_split(&mut self.nodes, a, b, lw)
+    }
+
+    fn tri_windows_mut(
+        &mut self,
+        a: usize,
+        b: usize,
+        c: usize,
+        w: Window,
+    ) -> (&mut [f32], &mut [f32], &mut [f32]) {
+        let lw = self.local(w);
+        tri_split(&mut self.nodes, a, b, c, lw)
     }
 }
 
@@ -516,6 +698,57 @@ mod tests {
     fn out_of_bounds_window_rejected() {
         let mut b = UnboundBuffer::from_fn(2, 8, |_, _| 0.0);
         b.register(Window::new(5, 10));
+    }
+
+    #[test]
+    fn rail_views_are_disjoint_and_translate_globals() {
+        let mut b = UnboundBuffer::from_fn(3, 12, |n, i| (n * 12 + i) as f32);
+        let windows = [Window::new(0, 5), Window::new(5, 0), Window::new(5, 7)];
+        let mut views = b.rail_views(&windows);
+        assert_eq!(views.len(), 3);
+        assert_eq!(views[1].nodes(), 3);
+        // global-coordinate access through the trait
+        assert_eq!(views[0].window(1, Window::new(2, 2)), &[14.0, 15.0]);
+        assert_eq!(views[2].window(2, Window::new(6, 3)), &[30.0, 31.0, 32.0]);
+        // mutations land in the right global positions
+        views[2].window_mut(0, Window::new(5, 1))[0] = -1.0;
+        let (x, y) = views[0].pair_windows_mut(2, 0, Window::new(1, 2));
+        assert_eq!(x, &[25.0, 26.0]);
+        assert_eq!(y, &[1.0, 2.0]);
+        x[0] = 99.0;
+        drop(views);
+        assert_eq!(b.node(0)[5], -1.0);
+        assert_eq!(b.node(2)[1], 99.0);
+    }
+
+    #[test]
+    fn rail_view_tri_borrow_matches_buffer() {
+        let mut a = UnboundBuffer::from_fn(4, 10, |n, i| (n * 10 + i) as f32);
+        let mut b = UnboundBuffer::from_fn(4, 10, |n, i| (n * 10 + i) as f32);
+        let w = Window::new(4, 3);
+        {
+            let mut views = a.rail_views(&[Window::new(2, 8)]);
+            let (x, y, z) = views[0].tri_windows_mut(3, 1, 2, w);
+            x[0] += 1.0;
+            y[1] += 2.0;
+            z[2] += 3.0;
+        }
+        {
+            let (x, y, z) = b.tri_windows_mut(3, 1, 2, w);
+            x[0] += 1.0;
+            y[1] += 2.0;
+            z[2] += 3.0;
+        }
+        for n in 0..4 {
+            assert_eq!(a.node(n), b.node(n), "node {n}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rail_views_reject_overlap() {
+        let mut b = UnboundBuffer::from_fn(2, 8, |_, _| 0.0);
+        let _ = b.rail_views(&[Window::new(0, 5), Window::new(4, 4)]);
     }
 
     #[test]

@@ -18,9 +18,9 @@ pub use reducer::{Reducer, RustReducer};
 pub use ring::{ring_allreduce, ring_chunked_allreduce};
 pub use tree::tree_allreduce;
 
-use crate::coordinator::buffer::{UnboundBuffer, Window};
+use crate::coordinator::buffer::{NodeWindows, UnboundBuffer, Window};
 use crate::net::protocol::CollectiveKind;
-use crate::net::simnet::{Fabric, RailDown};
+use crate::net::simnet::{Fabric, RailDown, RailTimer};
 
 /// Outcome of one collective operation on one rail.
 #[derive(Debug, Clone, Copy, Default)]
@@ -85,15 +85,31 @@ pub fn run_allreduce_with(
     elem_bytes: f64,
     scratch: &mut OpScratch,
 ) -> Result<OpOutcome, RailDown> {
+    run_allreduce_on(algo, &mut fab.rail_ctx(rail), buf, w, red, elem_bytes, scratch)
+}
+
+/// The generic core of the fixed dispatch: the rail's native collective
+/// (tree for SHARP, the forced ring variant otherwise) over any
+/// ([`RailTimer`], [`NodeWindows`]) pair — shared by the serial path and
+/// the parallel executor's worker threads.
+pub fn run_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
+    algo: Algo,
+    t: &mut T,
+    buf: &mut V,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    scratch: &mut OpScratch,
+) -> Result<OpOutcome, RailDown> {
     if w.is_empty() {
         return Ok(OpOutcome::default());
     }
-    match fab.rails[rail].protocol.collective {
-        CollectiveKind::Tree => tree::tree_allreduce_with(fab, rail, buf, w, red, elem_bytes, scratch),
+    match t.collective_kind() {
+        CollectiveKind::Tree => tree::tree_allreduce_on(t, buf, w, red, elem_bytes, scratch),
         CollectiveKind::Ring => match algo {
-            Algo::Ring => ring::ring_allreduce_with(fab, rail, buf, w, red, elem_bytes, scratch),
-            Algo::RingChunked { chunk_elems } => ring::ring_chunked_allreduce_with(
-                fab, rail, buf, w, red, elem_bytes, chunk_elems, scratch,
+            Algo::Ring => ring::ring_allreduce_on(t, buf, w, red, elem_bytes, scratch),
+            Algo::RingChunked { chunk_elems } => ring::ring_chunked_allreduce_on(
+                t, buf, w, red, elem_bytes, chunk_elems, scratch,
             ),
         },
     }

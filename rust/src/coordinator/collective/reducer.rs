@@ -4,6 +4,67 @@
 //! slice add). The PJRT-backed reducer executing the AOT-compiled Pallas
 //! `add_pair` kernel lives in [`crate::runtime::PjrtReducer`] so the `net`/
 //! `coordinator` layers stay usable without artifacts.
+//!
+//! The kernels are width-parameterized ([`add_into_lanes`],
+//! [`reduce_copy_lanes`]): the exact-size inner block is a const-generic
+//! `W`-lane unroll, so the hot-path bench can sweep 8/16/32 lanes on the
+//! build machine (`kernel_width_sweep` in `BENCH_hotpath.json`) and the
+//! shipped width ([`KERNEL_LANES`]) is the swept winner rather than a
+//! guess. 16 lanes lets LLVM emit two full 256-bit (or one 512-bit)
+//! packed-add chains per iteration with no bounds checks in the body —
+//! ahead of the seed's 8-lane unroll on AVX2-class hardware, while 32
+//! starts to spill on narrower machines; the sweep records all three.
+
+/// Unroll width of the shipped reduction kernels (f32 lanes per exact-size
+/// block). Chosen by the `kernel_width_sweep` recorded in
+/// `BENCH_hotpath.json`.
+pub const KERNEL_LANES: usize = 16;
+
+/// `dst += src` with a `W`-lane exact-size unroll body plus scalar tail.
+/// Results are bit-identical for every `W` (same per-element f32 adds in
+/// the same order); only the instruction mix changes.
+#[inline]
+pub fn add_into_lanes<const W: usize>(dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    let n = dst.len();
+    let (dc, dr) = dst.split_at_mut(n - n % W);
+    let (sc, sr) = src.split_at(n - n % W);
+    for (dw, sw) in dc.chunks_exact_mut(W).zip(sc.chunks_exact(W)) {
+        for k in 0..W {
+            dw[k] += sw[k];
+        }
+    }
+    for (d, s) in dr.iter_mut().zip(sr) {
+        *d += s;
+    }
+}
+
+/// Fused `dst += src; fwd = dst` single pass with a `W`-lane unroll —
+/// bit-identical to [`add_into_lanes`] followed by a copy, in one read-
+/// modify-write sweep over memory.
+#[inline]
+pub fn reduce_copy_lanes<const W: usize>(dst: &mut [f32], src: &[f32], fwd: &mut [f32]) {
+    assert_eq!(dst.len(), src.len());
+    assert_eq!(dst.len(), fwd.len());
+    let n = dst.len();
+    let (dc, dr) = dst.split_at_mut(n - n % W);
+    let (sc, sr) = src.split_at(n - n % W);
+    let (fc, fr) = fwd.split_at_mut(n - n % W);
+    for ((dw, sw), fw) in dc
+        .chunks_exact_mut(W)
+        .zip(sc.chunks_exact(W))
+        .zip(fc.chunks_exact_mut(W))
+    {
+        for k in 0..W {
+            dw[k] += sw[k];
+            fw[k] = dw[k];
+        }
+    }
+    for ((d, s), fo) in dr.iter_mut().zip(sr).zip(fr) {
+        *d += s;
+        *fo = *d;
+    }
+}
 
 /// Elementwise accumulate: `dst += src`.
 pub trait Reducer {
@@ -30,56 +91,37 @@ pub trait Reducer {
         fwd.copy_from_slice(dst);
     }
 
+    /// An independent, `Send` clone of this reducer for a parallel-
+    /// executor worker thread, or `None` when the backend holds state
+    /// that cannot be shared (the coordinator then falls back to serial
+    /// execution for the op). Forks must be numerically identical to the
+    /// parent — the parallel/serial bit-identity guarantee depends on it.
+    fn fork(&self) -> Option<Box<dyn Reducer + Send>> {
+        None
+    }
+
     fn name(&self) -> &'static str;
 }
 
-/// Portable reducer: a plain indexed loop the compiler auto-vectorizes.
+/// Portable reducer: width-parameterized exact-size loops the compiler
+/// auto-vectorizes (see [`KERNEL_LANES`]).
 #[derive(Debug, Default, Clone)]
 pub struct RustReducer;
 
 impl Reducer for RustReducer {
     #[inline]
     fn add_into(&mut self, dst: &mut [f32], src: &[f32]) {
-        assert_eq!(dst.len(), src.len());
-        // chunked exact-size loop: lets LLVM emit packed adds without
-        // bounds checks in the body
-        let n = dst.len();
-        let (dc, dr) = dst.split_at_mut(n - n % 8);
-        let (sc, sr) = src.split_at(n - n % 8);
-        for (d8, s8) in dc.chunks_exact_mut(8).zip(sc.chunks_exact(8)) {
-            for k in 0..8 {
-                d8[k] += s8[k];
-            }
-        }
-        for (d, s) in dr.iter_mut().zip(sr) {
-            *d += s;
-        }
+        add_into_lanes::<KERNEL_LANES>(dst, src);
     }
 
     /// Truly fused single pass: one load of `src`, one read-modify-write
-    /// of `dst`, one store to `fwd` — same chunked exact-size shape as
-    /// `add_into` so LLVM emits packed adds without bounds checks.
+    /// of `dst`, one store to `fwd`.
     fn reduce_copy(&mut self, dst: &mut [f32], src: &[f32], fwd: &mut [f32]) {
-        assert_eq!(dst.len(), src.len());
-        assert_eq!(dst.len(), fwd.len());
-        let n = dst.len();
-        let (dc, dr) = dst.split_at_mut(n - n % 8);
-        let (sc, sr) = src.split_at(n - n % 8);
-        let (fc, fr) = fwd.split_at_mut(n - n % 8);
-        for ((d8, s8), f8) in dc
-            .chunks_exact_mut(8)
-            .zip(sc.chunks_exact(8))
-            .zip(fc.chunks_exact_mut(8))
-        {
-            for k in 0..8 {
-                d8[k] += s8[k];
-                f8[k] = d8[k];
-            }
-        }
-        for ((d, s), fo) in dr.iter_mut().zip(sr).zip(fr) {
-            *d += s;
-            *fo = *d;
-        }
+        reduce_copy_lanes::<KERNEL_LANES>(dst, src, fwd);
+    }
+
+    fn fork(&self) -> Option<Box<dyn Reducer + Send>> {
+        Some(Box::new(RustReducer))
     }
 
     fn name(&self) -> &'static str {
@@ -125,8 +167,8 @@ mod tests {
 
     #[test]
     fn reduce_copy_matches_add_then_copy() {
-        // fused vs two-pass, including non-multiple-of-8 tails
-        for len in [0usize, 1, 7, 8, 9, 64, 1003] {
+        // fused vs two-pass, including non-multiple-of-width tails
+        for len in [0usize, 1, 7, 8, 9, 15, 16, 17, 31, 32, 33, 64, 1003] {
             let mut r = RustReducer;
             let src: Vec<f32> = (0..len).map(|i| (i % 19) as f32 * 0.25).collect();
             let mut d_fused: Vec<f32> = (0..len).map(|i| (i % 11) as f32).collect();
@@ -137,5 +179,43 @@ mod tests {
             assert_eq!(d_fused, d_plain, "len {len}");
             assert_eq!(fwd, d_plain, "len {len}: forward copy diverged");
         }
+    }
+
+    #[test]
+    fn all_widths_bit_identical() {
+        // the sweep's promise: width changes instruction mix, never values
+        for len in [0usize, 1, 7, 15, 16, 17, 33, 255, 1003] {
+            let src: Vec<f32> = (0..len).map(|i| (i % 23) as f32 * 0.125 - 1.0).collect();
+            let base: Vec<f32> = (0..len).map(|i| (i % 13) as f32 * 0.5).collect();
+            let mut d8 = base.clone();
+            let mut d16 = base.clone();
+            let mut d32 = base.clone();
+            add_into_lanes::<8>(&mut d8, &src);
+            add_into_lanes::<16>(&mut d16, &src);
+            add_into_lanes::<32>(&mut d32, &src);
+            assert_eq!(d8, d16, "len {len}: 8 vs 16");
+            assert_eq!(d8, d32, "len {len}: 8 vs 32");
+            let mut f8 = vec![0.0f32; len];
+            let mut f32buf = vec![0.0f32; len];
+            let mut e8 = base.clone();
+            let mut e32 = base.clone();
+            reduce_copy_lanes::<8>(&mut e8, &src, &mut f8);
+            reduce_copy_lanes::<32>(&mut e32, &src, &mut f32buf);
+            assert_eq!(e8, e32, "len {len}: fused 8 vs 32");
+            assert_eq!(f8, f32buf, "len {len}: forwarded 8 vs 32");
+        }
+    }
+
+    #[test]
+    fn fork_is_numerically_identical() {
+        let mut parent = RustReducer;
+        let mut fork = parent.fork().expect("RustReducer forks");
+        let mut a: Vec<f32> = (0..257).map(|i| i as f32 * 0.5).collect();
+        let mut b = a.clone();
+        let src: Vec<f32> = (0..257).map(|i| (i % 7) as f32).collect();
+        parent.add_into(&mut a, &src);
+        fork.add_into(&mut b, &src);
+        assert_eq!(a, b);
+        assert_eq!(fork.name(), "rust");
     }
 }

@@ -9,11 +9,18 @@
 //! window into chunks and pipelines them through the ring, trading more
 //! rounds for smaller per-round messages — which also keeps per-message
 //! sizes below NIC-crashing thresholds (the paper's >1 GB segfault).
+//!
+//! Every collective here has a generic `*_on` core over
+//! ([`RailTimer`], [`NodeWindows`]): the serial coordinator path drives it
+//! through a throwaway [`crate::net::simnet::RailCtx`] on the full
+//! [`UnboundBuffer`], the parallel executor through a long-lived worker
+//! `RailCtx` on a disjoint [`crate::coordinator::buffer::RailView`] — one
+//! implementation, so the two paths cannot diverge.
 
-use crate::coordinator::buffer::{UnboundBuffer, Window};
+use crate::coordinator::buffer::{NodeWindows, UnboundBuffer, Window};
 use crate::coordinator::collective::reducer::Reducer;
 use crate::coordinator::collective::{OpOutcome, OpScratch};
-use crate::net::simnet::{Fabric, RailDown};
+use crate::net::simnet::{Fabric, RailDown, RailTimer};
 
 /// Pure data movement of a ring allreduce over `w` (no timing): real
 /// reduce-scatter + allgather across the node buffers. Convenience
@@ -31,12 +38,18 @@ pub fn ring_numerics(
 }
 
 /// Ring numerics over precomputed segments (one per node, from
-/// [`Window::split_uniform_into`]) — the allocation-free core. When
-/// `n ≥ 3` the final reduce-scatter hop is fused with the first allgather
-/// hop through [`Reducer::reduce_copy`]: the completed segment sum is
-/// forwarded to the next ring neighbour in the same pass over memory.
-/// Results are bit-identical to the unfused two-pass form.
-pub fn ring_numerics_segs(buf: &mut UnboundBuffer, segs: &[Window], red: &mut dyn Reducer) {
+/// [`Window::split_uniform_into`]) — the allocation-free core, generic
+/// over the buffer access so full buffers and disjoint per-rail views run
+/// the identical exchange. When `n ≥ 3` the final reduce-scatter hop is
+/// fused with the first allgather hop through [`Reducer::reduce_copy`]:
+/// the completed segment sum is forwarded to the next ring neighbour in
+/// the same pass over memory. Results are bit-identical to the unfused
+/// two-pass form.
+pub fn ring_numerics_segs<V: NodeWindows + ?Sized>(
+    buf: &mut V,
+    segs: &[Window],
+    red: &mut dyn Reducer,
+) {
     let n = buf.nodes();
     if n < 2 {
         return;
@@ -105,7 +118,19 @@ pub fn ring_allreduce_with(
     elem_bytes: f64,
     scratch: &mut OpScratch,
 ) -> Result<OpOutcome, RailDown> {
-    let n = fab.nodes;
+    ring_allreduce_on(&mut fab.rail_ctx(rail), buf, w, red, elem_bytes, scratch)
+}
+
+/// The generic core of the flat ring (see module docs).
+pub fn ring_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
+    t: &mut T,
+    buf: &mut V,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    scratch: &mut OpScratch,
+) -> Result<OpOutcome, RailDown> {
+    let n = t.nodes();
     debug_assert_eq!(buf.nodes(), n);
     let steps = 2 * (n - 1);
     let seg_bytes = (w.len as f64 / n as f64).ceil() * elem_bytes;
@@ -113,7 +138,7 @@ pub fn ring_allreduce_with(
     // been half-reduced (packet-level atomicity, §4.4)
     let mut total = 0.0;
     for _ in 0..steps {
-        let dt = fab.ring_step(rail, seg_bytes)?;
+        let dt = t.ring_step(seg_bytes)?;
         total += dt;
     }
     w.split_uniform_into(n, &mut scratch.segs);
@@ -141,13 +166,6 @@ pub fn ring_chunked_allreduce(
 }
 
 /// Scratch-reuse form of [`ring_chunked_allreduce`].
-///
-/// Byte accounting is per-chunk: the pipeline's critical path is chunk 0's
-/// full `2(N-1)` rounds plus one extra round per later chunk, each priced
-/// at that chunk's OWN segment size — a window not divisible by the chunk
-/// size ends in a smaller chunk, and charging every round at `chunks[0]`
-/// overstated both `bytes_moved` and the modeled time. For evenly divided
-/// windows the schedule is identical to the uniform pricing.
 #[allow(clippy::too_many_arguments)]
 pub fn ring_chunked_allreduce_with(
     fab: &mut Fabric,
@@ -159,7 +177,36 @@ pub fn ring_chunked_allreduce_with(
     chunk_elems: usize,
     scratch: &mut OpScratch,
 ) -> Result<OpOutcome, RailDown> {
-    let n = fab.nodes;
+    ring_chunked_allreduce_on(
+        &mut fab.rail_ctx(rail),
+        buf,
+        w,
+        red,
+        elem_bytes,
+        chunk_elems,
+        scratch,
+    )
+}
+
+/// The generic core of the chunked ring.
+///
+/// Byte accounting is per-chunk: the pipeline's critical path is chunk 0's
+/// full `2(N-1)` rounds plus one extra round per later chunk, each priced
+/// at that chunk's OWN segment size — a window not divisible by the chunk
+/// size ends in a smaller chunk, and charging every round at `chunks[0]`
+/// overstated both `bytes_moved` and the modeled time. For evenly divided
+/// windows the schedule is identical to the uniform pricing.
+#[allow(clippy::too_many_arguments)]
+pub fn ring_chunked_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
+    t: &mut T,
+    buf: &mut V,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    chunk_elems: usize,
+    scratch: &mut OpScratch,
+) -> Result<OpOutcome, RailDown> {
+    let n = t.nodes();
     w.split_chunks_into(chunk_elems.max(1), &mut scratch.chunks);
     let rounds = 2 * (n - 1) + scratch.chunks.len() - 1;
     let seg_bytes = |c: Window| (c.len as f64 / n as f64).ceil() * elem_bytes;
@@ -167,12 +214,12 @@ pub fn ring_chunked_allreduce_with(
     let mut moved = 0.0;
     let first = seg_bytes(scratch.chunks[0]);
     for _ in 0..2 * (n - 1) {
-        total += fab.ring_step(rail, first)?;
+        total += t.ring_step(first)?;
         moved += first;
     }
     for c in &scratch.chunks[1..] {
         let b = seg_bytes(*c);
-        total += fab.ring_step(rail, b)?;
+        total += t.ring_step(b)?;
         moved += b;
     }
     for c in &scratch.chunks {
@@ -212,6 +259,27 @@ mod tests {
         ring_numerics(&mut buf, w, &mut RustReducer);
         assert_reduced(&buf, w, &expect);
         assert_eq!(buf.node(0)[0], before0, "outside window modified");
+    }
+
+    #[test]
+    fn ring_numerics_on_rail_view_matches_full_buffer() {
+        // the parallel executor's guarantee at the numerics level: a ring
+        // run over a disjoint RailView is bit-identical to the same ring
+        // run over the full buffer
+        let (mut a, expect) = make_buf(4, 91);
+        let (mut b, _) = make_buf(4, 91);
+        let w = Window::new(13, 57);
+        let mut segs = Vec::new();
+        w.split_uniform_into(4, &mut segs);
+        ring_numerics_segs(&mut a, &segs, &mut RustReducer);
+        {
+            let mut views = b.rail_views(&[w]);
+            ring_numerics_segs(&mut views[0], &segs, &mut RustReducer);
+        }
+        assert_reduced(&a, w, &expect);
+        for n in 0..4 {
+            assert_eq!(a.node(n), b.node(n), "node {n} diverged");
+        }
     }
 
     #[test]

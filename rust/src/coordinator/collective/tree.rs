@@ -5,10 +5,10 @@
 //! work is minimal (which is why SHARP's core-scaling curve matters less),
 //! and completion time is nearly node-count independent.
 
-use crate::coordinator::buffer::{UnboundBuffer, Window};
+use crate::coordinator::buffer::{NodeWindows, UnboundBuffer, Window};
 use crate::coordinator::collective::reducer::Reducer;
 use crate::coordinator::collective::{OpOutcome, OpScratch};
-use crate::net::simnet::{Fabric, RailDown};
+use crate::net::simnet::{Fabric, RailDown, RailTimer};
 
 /// SHARP-style tree allreduce: switch-level aggregation of all node
 /// windows, then broadcast of the reduced result.
@@ -36,22 +36,36 @@ pub fn tree_allreduce_with(
     elem_bytes: f64,
     scratch: &mut OpScratch,
 ) -> Result<OpOutcome, RailDown> {
+    tree_allreduce_on(&mut fab.rail_ctx(rail), buf, w, red, elem_bytes, scratch)
+}
+
+/// The generic core of the tree allreduce: timing through any
+/// [`RailTimer`], numerics over any [`NodeWindows`] buffer (full buffer or
+/// a disjoint per-rail view).
+pub fn tree_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
+    t: &mut T,
+    buf: &mut V,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    scratch: &mut OpScratch,
+) -> Result<OpOutcome, RailDown> {
     let bytes = w.len as f64 * elem_bytes;
     // timing first — atomicity on failure (§4.4)
-    let time = fab.tree_round(rail, bytes)?;
+    let time = t.tree_round(bytes)?;
 
     // switch aggregation: reduce all node windows into the scratch buffer
     // (copy-then-fold, bit-identical to the Reducer::reduce_n default)...
     let n = buf.nodes();
     let agg = &mut scratch.agg;
     agg.clear();
-    agg.extend_from_slice(&buf.node(0)[w.offset..w.end()]);
+    agg.extend_from_slice(buf.window(0, w));
     for i in 1..n {
-        red.add_into(agg, &buf.node(i)[w.offset..w.end()]);
+        red.add_into(agg, buf.window(i, w));
     }
     // ...then multicast down-tree
     for i in 0..n {
-        buf.node_mut(i)[w.offset..w.end()].copy_from_slice(agg);
+        buf.window_mut(i, w).copy_from_slice(agg);
     }
     Ok(OpOutcome { time_us: time, bytes_moved: 2 * bytes as u64, steps: 2 })
 }

@@ -37,13 +37,24 @@ pub fn sync_overhead_us(k: usize) -> f64 {
     }
 }
 
-/// A partitioning decision for one allreduce.
+/// A partitioning decision for one allreduce (the allocating form, kept
+/// for tests/introspection — the per-op hot path uses
+/// [`LoadBalancer::plan_into`] and caller-owned scratch instead).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Plan {
     /// Cold start: the whole window goes to this rail.
     Cold { rail: usize },
     /// Hot start: (rail, fraction) shares, fractions sum to 1.
     Hot { shares: Vec<(usize, f64)> },
+}
+
+/// What kind of decision [`LoadBalancer::plan_into`] wrote into the output
+/// buffer (the shares themselves land in the buffer: a cold decision is a
+/// single `(rail, 1.0)` entry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlanKind {
+    Cold,
+    Hot,
 }
 
 impl Plan {
@@ -88,6 +99,17 @@ struct Bucket {
     last_state_hot: bool,
 }
 
+/// Reusable planning-pass scratch (estimates, τ-filtered candidates,
+/// waterfill inputs/working set) — the balancer plans EVERY op, so these
+/// intermediates must not allocate per call.
+#[derive(Debug, Default)]
+struct LbScratch {
+    ests: Vec<(usize, f64)>,
+    candidates: Vec<(usize, f64)>,
+    parts: Vec<(usize, f64, f64)>,
+    active: Vec<(usize, f64, f64)>,
+}
+
 /// The Load Balancer: per-size-class cold/hot state machine + α table.
 #[derive(Debug)]
 pub struct LoadBalancer {
@@ -96,11 +118,17 @@ pub struct LoadBalancer {
     /// Measurement correction per (rail, bucket): measured/model EMA the
     /// planner applies to the analytic estimates.
     corr: HashMap<(usize, u32), f64>,
+    scratch: LbScratch,
 }
 
 impl LoadBalancer {
     pub fn new(cfg: ControlConfig) -> LoadBalancer {
-        LoadBalancer { cfg, buckets: HashMap::new(), corr: HashMap::new() }
+        LoadBalancer {
+            cfg,
+            buckets: HashMap::new(),
+            corr: HashMap::new(),
+            scratch: LbScratch::default(),
+        }
     }
 
     /// Corrected estimate of the FULL-payload single-rail allreduce time.
@@ -135,11 +163,18 @@ impl LoadBalancer {
     }
 
     /// Water-filling optimum of Eq. 5: α equalizing per-rail finish times,
-    /// given (setup_i, transfer_full_i) per rail. Returns (alphas, T_hot).
-    fn waterfill(parts: &[(usize, f64, f64)]) -> (Vec<(usize, f64)>, f64) {
+    /// given (setup_i, transfer_full_i) per rail. Writes the alphas into
+    /// `out` (cleared first) using `active` as the working set, returns
+    /// T_hot — allocation-free once scratch capacities stabilize.
+    fn waterfill_into(
+        parts: &[(usize, f64, f64)],
+        active: &mut Vec<(usize, f64, f64)>,
+        out: &mut Vec<(usize, f64)>,
+    ) -> f64 {
         // T* = (1 + Σ setup_i / X_i) / (Σ 1 / X_i); rails whose setup
         // exceeds T* get α = 0 and we re-solve without them.
-        let mut active: Vec<(usize, f64, f64)> = parts.to_vec();
+        active.clear();
+        active.extend_from_slice(parts);
         loop {
             let sum_inv: f64 = active.iter().map(|(_, _, x)| 1.0 / x).sum();
             let sum_s: f64 = active.iter().map(|(_, s, x)| s / x).sum();
@@ -147,65 +182,101 @@ impl LoadBalancer {
             if let Some(pos) = active.iter().position(|(_, s, _)| *s >= t_star) {
                 if active.len() == 1 {
                     let (r, s, x) = active[0];
-                    return (vec![(r, 1.0)], s + x);
+                    out.clear();
+                    out.push((r, 1.0));
+                    return s + x;
                 }
                 active.remove(pos);
                 continue;
             }
-            let alphas: Vec<(usize, f64)> = active
-                .iter()
-                .map(|(r, s, x)| (*r, (t_star - s) / x))
-                .collect();
-            return (alphas, t_star);
+            out.clear();
+            out.extend(active.iter().map(|(r, s, x)| (*r, (t_star - s) / x)));
+            return t_star;
         }
     }
 
-    /// Decide the partitioning for one op of `bytes` over `healthy` rails.
+    /// Decide the partitioning for one op of `bytes` over `healthy` rails
+    /// — the allocating form (tests / threshold probing). The per-op path
+    /// is [`LoadBalancer::plan_into`].
     pub fn plan(&mut self, fab: &Fabric, timer: &Timer, healthy: &[usize], bytes: u64) -> Plan {
+        let mut out = Vec::new();
+        match self.plan_into(fab, timer, healthy, bytes, &mut out) {
+            PlanKind::Cold => Plan::Cold { rail: out[0].0 },
+            PlanKind::Hot => Plan::Hot { shares: out },
+        }
+    }
+
+    /// Decide the partitioning for one op, writing the shares into `out`
+    /// (cleared first; a cold decision is a single `(rail, 1.0)` entry).
+    /// All intermediates live in the balancer's own scratch, so the
+    /// steady-state planning pass performs no allocation.
+    pub fn plan_into(
+        &mut self,
+        fab: &Fabric,
+        timer: &Timer,
+        healthy: &[usize],
+        bytes: u64,
+        out: &mut Vec<(usize, f64)>,
+    ) -> PlanKind {
         assert!(!healthy.is_empty());
         let _ = timer; // estimates are measurement-corrected via feedback()
+        out.clear();
         let bucket_key = size_bucket(bytes);
 
-        // full-payload estimates per rail
-        let ests: Vec<(usize, f64)> = healthy
+        // full-payload estimates per rail (scratch-resident)
+        let mut ests = std::mem::take(&mut self.scratch.ests);
+        ests.clear();
+        ests.extend(healthy.iter().map(|&r| (r, self.est_full(fab, r, bytes))));
+        let (best_rail, t_cold) = ests
             .iter()
-            .map(|&r| (r, self.est_full(fab, r, bytes)))
-            .collect();
-        let (&(best_rail, t_cold), _) = ests
-            .iter()
-            .map(|e| (e, e.1))
+            .copied()
             .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
             .unwrap();
 
         if healthy.len() == 1 {
-            return Plan::Cold { rail: best_rail };
+            self.scratch.ests = ests;
+            out.push((best_rail, 1.0));
+            return PlanKind::Cold;
         }
 
         // Proposition 1 (Eq. 3): drop rails whose real-time efficiency is
         // more than τ below the best.
         let best_thpt = bytes as f64 / t_cold;
-        let candidates: Vec<(usize, f64)> = ests
-            .iter()
-            .filter(|&&(_, t)| best_thpt / (bytes as f64 / t) <= self.cfg.tau)
-            .cloned()
-            .collect();
+        let mut candidates = std::mem::take(&mut self.scratch.candidates);
+        candidates.clear();
+        candidates.extend(
+            ests.iter()
+                .filter(|&&(_, t)| best_thpt / (bytes as f64 / t) <= self.cfg.tau)
+                .copied(),
+        );
         if candidates.len() < 2 {
+            self.scratch.ests = ests;
+            self.scratch.candidates = candidates;
             self.note_cold(bucket_key);
-            return Plan::Cold { rail: best_rail };
+            out.push((best_rail, 1.0));
+            return PlanKind::Cold;
         }
 
         // Eq. 6 crossing test: hot optimum (incl. sync overhead) vs cold.
-        let parts: Vec<(usize, f64, f64)> = candidates
-            .iter()
-            .map(|&(r, t_full)| {
-                let setup = self.est_setup(fab, r).min(t_full);
-                (r, setup, (t_full - setup).max(1e-6))
-            })
-            .collect();
-        let (opt_alphas, t_hot_opt) = Self::waterfill(&parts);
-        if t_hot_opt + sync_overhead_us(opt_alphas.len()) >= t_cold {
+        let mut parts = std::mem::take(&mut self.scratch.parts);
+        parts.clear();
+        parts.extend(candidates.iter().map(|&(r, t_full)| {
+            let setup = self.est_setup(fab, r).min(t_full);
+            (r, setup, (t_full - setup).max(1e-6))
+        }));
+        let mut active = std::mem::take(&mut self.scratch.active);
+        // the waterfill optimum lands directly in `out` (overwritten below
+        // when the stored α table takes precedence)
+        let t_hot_opt = Self::waterfill_into(&parts, &mut active, out);
+        if t_hot_opt + sync_overhead_us(out.len()) >= t_cold {
+            self.scratch.ests = ests;
+            self.scratch.candidates = candidates;
+            self.scratch.parts = parts;
+            self.scratch.active = active;
             self.note_cold(bucket_key);
-            return Plan::Cold { rail: best_rail };
+            out.clear();
+            out.push((best_rail, 1.0));
+            return PlanKind::Cold;
         }
 
         // Hot start: use (and create) the data-length-table entry.
@@ -223,21 +294,26 @@ impl LoadBalancer {
         });
         bucket.last_state_hot = true;
 
-        // restrict stored α to currently-healthy candidates, renormalize
-        let mut shares: Vec<(usize, f64)> = candidates
+        // restrict stored α to currently-healthy candidates, renormalize;
+        // if the stored table had none of these rails, keep the waterfill
+        // optimum already sitting in `out`
+        let total: f64 = candidates
             .iter()
-            .map(|&(r, _)| (r, bucket.alphas.get(&r).copied().unwrap_or(0.0)))
-            .collect();
-        let total: f64 = shares.iter().map(|(_, a)| a).sum();
-        if total < 1e-9 {
-            // stored table had none of these rails — fall back to optimum
-            shares = opt_alphas;
-        } else {
-            for (_, a) in &mut shares {
-                *a /= total;
-            }
+            .map(|&(r, _)| bucket.alphas.get(&r).copied().unwrap_or(0.0))
+            .sum();
+        if total >= 1e-9 {
+            out.clear();
+            out.extend(
+                candidates
+                    .iter()
+                    .map(|&(r, _)| (r, bucket.alphas.get(&r).copied().unwrap_or(0.0) / total)),
+            );
         }
-        Plan::Hot { shares }
+        self.scratch.ests = ests;
+        self.scratch.candidates = candidates;
+        self.scratch.parts = parts;
+        self.scratch.active = active;
+        PlanKind::Hot
     }
 
     fn note_cold(&mut self, bucket_key: u32) {
@@ -523,13 +599,41 @@ mod tests {
 
     #[test]
     fn waterfill_equalizes() {
-        let (alphas, t) =
-            LoadBalancer::waterfill(&[(0, 100.0, 10000.0), (1, 50.0, 5000.0)]);
+        let mut active = Vec::new();
+        let mut alphas = Vec::new();
+        let t = LoadBalancer::waterfill_into(
+            &[(0, 100.0, 10000.0), (1, 50.0, 5000.0)],
+            &mut active,
+            &mut alphas,
+        );
         for (r, a) in &alphas {
             let (s, x) = if *r == 0 { (100.0, 10000.0) } else { (50.0, 5000.0) };
             assert!((s + a * x - t).abs() < 1e-6);
         }
         let sum: f64 = alphas.iter().map(|(_, a)| a).sum();
         assert!((sum - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plan_into_matches_allocating_plan() {
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Glex], 4);
+        let t = Timer::new(100);
+        let mut a = lb();
+        let mut b = lb();
+        let mut out = Vec::new();
+        for p in 11..=26 {
+            let bytes = 1u64 << p;
+            let plan = a.plan(&f, &t, &[0, 1], bytes);
+            let kind = b.plan_into(&f, &t, &[0, 1], bytes, &mut out);
+            match (plan, kind) {
+                (Plan::Cold { rail }, PlanKind::Cold) => {
+                    assert_eq!(out, vec![(rail, 1.0)], "bytes {bytes}");
+                }
+                (Plan::Hot { shares }, PlanKind::Hot) => {
+                    assert_eq!(out, shares, "bytes {bytes}");
+                }
+                (p, k) => panic!("bytes {bytes}: kind mismatch {p:?} vs {k:?}"),
+            }
+        }
     }
 }

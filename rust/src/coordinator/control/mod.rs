@@ -8,7 +8,7 @@ pub mod nic_selector;
 pub mod timer;
 
 pub use exception::{ExceptionHandler, FailoverEvent};
-pub use load_balancer::{BalancerState, LoadBalancer, Plan};
+pub use load_balancer::{BalancerState, LoadBalancer, Plan, PlanKind};
 pub use nic_selector::NicSelector;
 pub use timer::Timer;
 

@@ -5,18 +5,28 @@
 //!
 //! 1. probes deregistered rails for recovery,
 //! 2. asks the partitioning policy (Nezha's Load Balancer or a baseline)
-//!    for the per-rail shares,
+//!    for the per-rail shares (written into reusable [`Shares`] scratch),
 //! 3. hands the shares to the topology-aware collective planner, which
 //!    emits an executable [`CollectivePlan`] (per-rail schedule: flat or
 //!    chunk-pipelined ring, halving-doubling, hierarchical two-level, or
 //!    in-network tree),
 //! 4. registers per-rail `(ptr, data_length)` windows on the
-//!    `UnboundBuffer` and runs each member network's planned collective,
+//!    `UnboundBuffer` and runs each member network's planned collective —
+//!    serially, or (under `exec = parallel`) concurrently on scoped
+//!    worker threads, each driving a borrow-split `RailCtx` timing view
+//!    and a disjoint `RailView` of the buffer,
 //! 5. on a rail failure, lets the Exception Handler deregister the rail
 //!    and migrate the window to the optimal survivor (re-planned for the
 //!    takeover rail),
 //! 6. charges cross-rail synchronization overhead, advances the virtual
 //!    clock, and feeds measurements back to the Timer + policy.
+//!
+//! Parallel execution is bit-identical to serial: per-rail windows are
+//! disjoint slices (the borrow checker proves the numerics never alias),
+//! per-rail RNG streams are reseeded from `(seed, rail, op_epoch)` at
+//! every [`crate::net::simnet::Fabric::begin_op`] so modeled times cannot
+//! depend on cross-rail execution order, and results are merged in fixed
+//! assignment order.
 //!
 //! `with_algo` / `force_algo` pin the seed's fixed `Algo` dispatch instead
 //! of the planner — the planner-ablation baseline and the legacy
@@ -26,32 +36,68 @@ use std::collections::HashMap;
 
 use crate::config::{Config, PlannerMode, Policy};
 use crate::coordinator::buffer::{UnboundBuffer, Window};
-use crate::coordinator::collective::{run_allreduce_with, Algo, OpScratch, Reducer, RustReducer};
+use crate::coordinator::collective::{
+    run_allreduce_on, run_allreduce_with, Algo, OpOutcome, OpScratch, Reducer, RustReducer,
+};
 use crate::coordinator::context::Context;
-use crate::coordinator::control::load_balancer::{sync_overhead_us, Plan};
+use crate::coordinator::control::load_balancer::sync_overhead_us;
 use crate::coordinator::control::{size_bucket, ExceptionHandler, LoadBalancer, NicSelector, Timer};
 use crate::coordinator::planner::{
-    run_plan_with, CollectivePlan, PlanQualityReport, Planner, RailPlan, Schedule,
+    run_plan_on, run_plan_with, CollectivePlan, PlanQualityReport, Planner, RailPlan, Schedule,
 };
 use crate::coordinator::transport::Rendezvous;
-use crate::net::cpu_pool::CpuPool;
+use crate::net::cpu_pool::{CpuPool, ExecMode, RailExecutor};
 use crate::net::fault::FaultSchedule;
 use crate::net::simnet::{Fabric, RailDown};
 use crate::util::error::Error;
 use crate::Result;
 
+/// Reusable partitioning-decision buffer threaded through
+/// [`Partitioner::plan`]: policies write their decision into caller-owned
+/// scratch instead of returning a fresh vector per op, closing the last
+/// planning-side allocation on the steady-state path.
+#[derive(Debug, Clone, Default)]
+pub struct Shares {
+    /// Contiguous fractional shares per rail (fractions sum to 1).
+    pub fracs: Vec<(usize, f64)>,
+    /// When set, MPTCP-style fixed-size packet slicing overrides `fracs`.
+    pub packet_bytes: Option<u64>,
+}
+
+impl Shares {
+    pub fn clear(&mut self) {
+        self.fracs.clear();
+        self.packet_bytes = None;
+    }
+
+    /// The whole window on one rail (cold start / single survivor).
+    pub fn set_single(&mut self, rail: usize) {
+        self.clear();
+        self.fracs.push((rail, 1.0));
+    }
+
+    /// MPTCP-style slicing decision.
+    pub fn set_slices(&mut self, packet_bytes: u64) {
+        self.clear();
+        self.packet_bytes = Some(packet_bytes);
+    }
+}
+
 /// A partitioning policy: Nezha's Load Balancer or one of the baselines
 /// (`crate::baselines`).
 pub trait Partitioner: std::fmt::Debug {
     fn name(&self) -> &'static str;
-    /// Decide how `bytes` are spread over the healthy rails.
+    /// Decide how `bytes` are spread over the healthy rails, writing the
+    /// decision into `out` (cleared first). Allocation-free once `out`'s
+    /// capacity has stabilized.
     fn plan(
         &mut self,
         fab: &Fabric,
         timer: &Timer,
         healthy: &[usize],
         bytes: u64,
-    ) -> PartitionPlan;
+        out: &mut Shares,
+    );
     /// Completed-op feedback: per-rail (rail, bytes, time_us).
     fn feedback(&mut self, _fab: &Fabric, _bytes: u64, _shares: &[(usize, u64, f64)]) {}
 
@@ -60,15 +106,6 @@ pub trait Partitioner: std::fmt::Debug {
     fn alphas(&self, _bytes: u64) -> Option<Vec<(usize, f64)>> {
         None
     }
-}
-
-/// The shape of a partitioning decision.
-#[derive(Debug, Clone, PartialEq)]
-pub enum PartitionPlan {
-    /// Contiguous fractional shares per rail (Nezha, MRIB, single-rail).
-    Shares(Vec<(usize, f64)>),
-    /// MPTCP-style fixed-size packet slicing with per-packet scheduling.
-    Slices { packet_bytes: u64 },
 }
 
 /// Nezha's partitioner: the Load Balancer state machine.
@@ -88,11 +125,11 @@ impl Partitioner for NezhaPartitioner {
         timer: &Timer,
         healthy: &[usize],
         bytes: u64,
-    ) -> PartitionPlan {
-        match self.balancer.plan(fab, timer, healthy, bytes) {
-            Plan::Cold { rail } => PartitionPlan::Shares(vec![(rail, 1.0)]),
-            Plan::Hot { shares } => PartitionPlan::Shares(shares),
-        }
+        out: &mut Shares,
+    ) {
+        out.clear();
+        self.balancer
+            .plan_into(fab, timer, healthy, bytes, &mut out.fracs);
     }
 
     fn feedback(&mut self, fab: &Fabric, bytes: u64, shares: &[(usize, u64, f64)]) {
@@ -116,6 +153,11 @@ pub struct RailShare {
 }
 
 /// Report for one multi-rail allreduce.
+///
+/// The `per_rail` vector is drawn from the coordinator's report pool;
+/// steady-state callers hand it back through [`MultiRail::recycle`] so
+/// the per-op path performs no allocation once capacities stabilize
+/// (dropping the report instead is always safe — the pool just refills).
 #[derive(Debug, Clone)]
 pub struct OpReport {
     /// End-to-end modeled completion time (us), incl. sync + failover.
@@ -147,6 +189,8 @@ pub struct MultiRail {
     pub reducer: Box<dyn Reducer>,
     /// The topology-aware collective planner (schedules per-rail windows).
     pub planner: Planner,
+    /// The cross-rail execution engine (`exec = serial | parallel`).
+    pub executor: RailExecutor,
     /// When set, bypasses the planner with the seed's fixed dispatch
     /// (`Algo::Ring` / `Algo::RingChunked`) on every ring-capable rail.
     forced_algo: Option<Algo>,
@@ -165,10 +209,11 @@ pub struct MultiRail {
     plan_cache: HashMap<(u32, u64), Vec<(usize, Schedule)>>,
     /// The `replan_error` config threshold.
     replan_error: f64,
-    /// Reusable per-op scratch (healthy rails, plan windows, assignments,
-    /// per-rail allocations, collective segment/chunk/aggregation lists) —
-    /// taken and restored around execution so the steady-state op path
-    /// performs no per-op allocation.
+    /// Reusable per-op scratch (healthy rails, partitioner shares, plan
+    /// windows, assignments, per-rail allocations, collective
+    /// segment/chunk/aggregation lists, per-rail parallel scratch, pooled
+    /// report vectors) — taken and restored around execution so the
+    /// steady-state op path performs no per-op allocation.
     scratch: ExecScratch,
     ops_done: u64,
 }
@@ -177,10 +222,22 @@ pub struct MultiRail {
 #[derive(Debug, Default)]
 struct ExecScratch {
     healthy: Vec<usize>,
+    shares: Shares,
     windows: Vec<Window>,
     assigns: Vec<RailPlan>,
     allocated: Vec<(usize, u64)>,
+    feedback: Vec<(usize, u64, f64)>,
+    /// Parallel path: non-empty windows/assignments/rails in assignment
+    /// order (what the worker jobs are built from).
+    live_windows: Vec<Window>,
+    live_assigns: Vec<RailPlan>,
+    live_rails: Vec<usize>,
+    /// Serial-path collective scratch (also the failover takeover's).
     op: OpScratch,
+    /// One collective scratch per parallel worker slot.
+    rail_ops: Vec<OpScratch>,
+    /// Recycled `OpReport::per_rail` vectors (see [`MultiRail::recycle`]).
+    report_pool: Vec<Vec<RailShare>>,
 }
 
 /// Bitmask over the rails a share split touches — the allocation-free
@@ -200,6 +257,7 @@ impl std::fmt::Debug for MultiRail {
             .field("nodes", &self.fab.nodes)
             .field("rails", &self.fab.rails.len())
             .field("policy", &self.partitioner.name())
+            .field("exec", &self.executor.mode.name())
             .finish()
     }
 }
@@ -241,6 +299,7 @@ impl MultiRail {
             partitioner,
             reducer: Box::new(RustReducer),
             planner,
+            executor: RailExecutor::new(cfg.exec),
             forced_algo,
             last_plan: None,
             quality: PlanQualityReport::default(),
@@ -279,6 +338,12 @@ impl MultiRail {
         self
     }
 
+    /// Switch the cross-rail execution engine at runtime (ablation).
+    pub fn with_exec(mut self, mode: ExecMode) -> Self {
+        self.executor = RailExecutor::new(mode);
+        self
+    }
+
     pub fn ops_done(&self) -> u64 {
         self.ops_done
     }
@@ -288,6 +353,25 @@ impl MultiRail {
     /// are reused.
     pub fn plan_epoch(&self) -> u64 {
         self.planner.epoch()
+    }
+
+    /// Return a finished report's `per_rail` vector to the coordinator's
+    /// pool. Steady-state loops (benches, trainers) recycle reports so the
+    /// per-op path allocates nothing; dropping a report instead is always
+    /// correct — the pool simply refills from fresh vectors.
+    pub fn recycle(&mut self, rep: OpReport) {
+        let mut v = rep.per_rail;
+        v.clear();
+        if self.scratch.report_pool.len() < 8 {
+            self.scratch.report_pool.push(v);
+        }
+    }
+
+    /// Take a pooled (or fresh) report vector.
+    fn take_report_vec(&mut self) -> Vec<RailShare> {
+        let mut v = self.scratch.report_pool.pop().unwrap_or_default();
+        v.clear();
+        v
     }
 
     /// The collective plan the coordinator would execute for a `bytes`-
@@ -306,14 +390,17 @@ impl MultiRail {
             self.scratch.healthy = healthy;
             return None;
         }
-        let plan = self.partitioner.plan(&self.fab, &self.timer, &healthy, bytes);
+        let mut sh = std::mem::take(&mut self.scratch.shares);
+        self.partitioner
+            .plan(&self.fab, &self.timer, &healthy, bytes, &mut sh);
+        let res = if sh.packet_bytes.is_some() {
+            None
+        } else {
+            Some(self.planner.preview(&self.fab, &self.timer, &sh.fracs, bytes))
+        };
+        self.scratch.shares = sh;
         self.scratch.healthy = healthy;
-        match plan {
-            PartitionPlan::Shares(fracs) => {
-                Some(self.planner.preview(&self.fab, &self.timer, &fracs, bytes))
-            }
-            PartitionPlan::Slices { .. } => None,
-        }
+        res
     }
 
     /// Schedule selection with plan caching: reuse the cached selection
@@ -383,6 +470,9 @@ impl MultiRail {
         elem_bytes: f64,
     ) -> Result<OpReport> {
         assert_eq!(buf.nodes(), self.fab.nodes, "buffer/fabric node mismatch");
+        // fresh per-rail sampling streams for this op epoch — the
+        // serial/parallel bit-identity anchor
+        self.fab.begin_op();
         self.exceptions.probe_recovery(&mut self.fab);
         // reusable healthy-rail scratch: taken for the op, restored below
         // (error paths drop it; the next op simply re-allocates capacity)
@@ -393,38 +483,36 @@ impl MultiRail {
             return Err(Error::AllRailsDown(0));
         }
         let bytes = (full.len as f64 * elem_bytes) as u64;
-        let plan = self.partitioner.plan(&self.fab, &self.timer, &healthy, bytes);
+        let mut sh = std::mem::take(&mut self.scratch.shares);
+        self.partitioner
+            .plan(&self.fab, &self.timer, &healthy, bytes, &mut sh);
 
-        let exec = match plan {
-            PartitionPlan::Shares(fracs) => {
-                if self.forced_algo.is_some() {
-                    // fixed dispatch: no cost-model work, and last_plan is
-                    // cleared so nobody mistakes a planner prediction for
-                    // what actually ran
-                    let cplan = CollectivePlan::unplanned(&fracs, bytes);
-                    let res = self.exec_plan(buf, full, &cplan, elem_bytes);
-                    if res.is_ok() {
-                        self.last_plan = None;
-                    }
-                    res
-                } else {
-                    // the balancer's split is the planner's input, not the
-                    // final word on execution: each rail's window gets the
-                    // schedule the (measurement-corrected) cost model
-                    // picks for it, cached until a replan trigger fires
-                    let cplan = self.plan_shares(&fracs, bytes);
-                    let res = self.exec_plan(buf, full, &cplan, elem_bytes);
-                    if res.is_ok() {
-                        self.last_plan = Some(cplan);
-                    }
-                    res
-                }
-            }
-            PartitionPlan::Slices { packet_bytes } => {
+        let exec = if let Some(packet_bytes) = sh.packet_bytes {
+            self.last_plan = None;
+            self.exec_slices(buf, full, packet_bytes, elem_bytes, &healthy)
+        } else if self.forced_algo.is_some() {
+            // fixed dispatch: no cost-model work, and last_plan is
+            // cleared so nobody mistakes a planner prediction for
+            // what actually ran
+            let cplan = CollectivePlan::unplanned(&sh.fracs, bytes);
+            let res = self.exec_plan(buf, full, &cplan, elem_bytes);
+            if res.is_ok() {
                 self.last_plan = None;
-                self.exec_slices(buf, full, packet_bytes, elem_bytes, &healthy)
             }
+            res
+        } else {
+            // the balancer's split is the planner's input, not the
+            // final word on execution: each rail's window gets the
+            // schedule the (measurement-corrected) cost model
+            // picks for it, cached until a replan trigger fires
+            let cplan = self.plan_shares(&sh.fracs, bytes);
+            let res = self.exec_plan(buf, full, &cplan, elem_bytes);
+            if res.is_ok() {
+                self.last_plan = Some(cplan);
+            }
+            res
         };
+        self.scratch.shares = sh;
         self.scratch.healthy = healthy;
         let (mut shares, failovers) = exec?;
 
@@ -451,9 +539,12 @@ impl MultiRail {
                 .unwrap_or(s.bytes);
             self.timer.record(s.rail, key_bytes, s.time_us);
         }
-        let fb: Vec<(usize, u64, f64)> =
-            shares.iter().map(|s| (s.rail, s.bytes, s.time_us)).collect();
+        // pooled feedback vector: the last planning-side per-op allocation
+        let mut fb = std::mem::take(&mut self.scratch.feedback);
+        fb.clear();
+        fb.extend(shares.iter().map(|s| (s.rail, s.bytes, s.time_us)));
         self.partitioner.feedback(&self.fab, bytes, &fb);
+        self.scratch.feedback = fb;
         self.ops_done += 1;
         shares.sort_by_key(|s| s.rail);
         Ok(OpReport {
@@ -476,7 +567,7 @@ impl MultiRail {
         w: Window,
         elem_bytes: f64,
         scratch: &mut OpScratch,
-    ) -> std::result::Result<crate::coordinator::collective::OpOutcome, RailDown> {
+    ) -> std::result::Result<OpOutcome, RailDown> {
         match self.forced_algo {
             Some(algo) => run_allreduce_with(
                 algo,
@@ -510,14 +601,61 @@ impl MultiRail {
             .0
     }
 
+    /// The §4.4 failover core shared by BOTH executors (the serial/
+    /// parallel parity invariant depends on there being exactly one
+    /// implementation): deregister the failed rail and forget its
+    /// Timer/correction state, flush every cached selection (fresh
+    /// epoch), re-plan the migrated window for the optimal survivor at
+    /// the post-failover fabric state, run it there, and merge recovery +
+    /// re-run time into that survivor's share. Returns the event; the
+    /// serial loop additionally replans the surviving rails' still-
+    /// pending windows (in the parallel engine they have already run).
+    #[allow(clippy::too_many_arguments)]
+    fn failover_rail(
+        &mut self,
+        failed: usize,
+        w: Window,
+        buf: &mut UnboundBuffer,
+        elem_bytes: f64,
+        allocated: &[(usize, u64)],
+        op_scratch: &mut OpScratch,
+        shares: &mut Vec<RailShare>,
+    ) -> Result<crate::coordinator::control::FailoverEvent> {
+        let ev = self
+            .exceptions
+            .handle_failure(&mut self.fab, failed, w, allocated)
+            .ok_or(Error::AllRailsDown(failed))?;
+        self.timer.forget_rail(failed);
+        self.planner.corrections.forget_rail(failed);
+        // every cached selection assumed the old rail set
+        self.plan_cache.clear();
+        self.planner.bump_epoch();
+        // re-plan the migrated window for the takeover rail
+        let sched = self.takeover_schedule(ev.takeover_rail, w, elem_bytes);
+        let out = self
+            .run_rail(sched, ev.takeover_rail, buf, w, elem_bytes, op_scratch)
+            .map_err(|RailDown(r2)| Error::AllRailsDown(r2))?;
+        buf.complete(w)?;
+        // takeover rail absorbs its own share elsewhere in this same op;
+        // account serially on that rail
+        let extra = ev.recovery_us + out.time_us;
+        let bytes = (w.len as f64 * elem_bytes) as u64;
+        if let Some(s) = shares.iter_mut().find(|s| s.rail == ev.takeover_rail) {
+            s.time_us += extra;
+            s.bytes += bytes;
+        } else {
+            shares.push(RailShare { rail: ev.takeover_rail, bytes, time_us: extra });
+        }
+        Ok(ev)
+    }
+
     /// Execute a collective plan's per-rail windows; handles failover.
     ///
-    /// On a mid-op failover the Exception Handler migrates the failed
-    /// window to the optimal survivor AND the not-yet-executed windows of
-    /// the surviving rails are re-planned at the post-failover fabric
-    /// state (freed cores change contention, hence optimal schedules) — a
-    /// fresh selection epoch, not just a re-schedule of the migrated
-    /// window.
+    /// Dispatches to the serial loop or, when `exec = parallel`, at least
+    /// two rails carry payload and the reducer can fork, to the scoped-
+    /// thread engine. Both paths produce bit-identical numerics AND
+    /// modeled times (disjoint windows, per-rail RNG streams, fixed merge
+    /// order).
     fn exec_plan(
         &mut self,
         buf: &mut UnboundBuffer,
@@ -541,9 +679,70 @@ impl MultiRail {
                 .zip(&windows)
                 .map(|(a, w)| (a.rail, (w.len as f64 * elem_bytes) as u64)),
         );
-        let mut op_scratch = std::mem::take(&mut self.scratch.op);
+        let mut shares = self.take_report_vec();
 
-        let mut shares: Vec<RailShare> = Vec::with_capacity(assigns.len());
+        // parallel eligibility: ≥2 payload-carrying rails, all distinct,
+        // and a forkable reducer (each worker needs its own)
+        let mut live = 0usize;
+        let mut mask = 0u64;
+        let mut distinct = true;
+        for (a, w) in assigns.iter().zip(&windows) {
+            if w.is_empty() {
+                continue;
+            }
+            live += 1;
+            if a.rail < 64 {
+                if mask & (1u64 << a.rail) != 0 {
+                    distinct = false;
+                }
+                mask |= 1u64 << a.rail;
+            } else {
+                // beyond the mask width we cannot prove distinctness —
+                // route to the (always-correct) serial path
+                distinct = false;
+            }
+        }
+        let forks = if self.executor.mode == ExecMode::Parallel && live >= 2 && distinct {
+            (0..live)
+                .map(|_| self.reducer.fork())
+                .collect::<Option<Vec<_>>>()
+        } else {
+            None
+        };
+
+        let res = match forks {
+            Some(forks) => {
+                self.exec_plan_parallel(buf, &windows, &assigns, &allocated, elem_bytes, forks, &mut shares)
+            }
+            None => self.exec_plan_serial(buf, &windows, &mut assigns, &allocated, elem_bytes, &mut shares),
+        };
+        self.scratch.windows = windows;
+        self.scratch.assigns = assigns;
+        self.scratch.allocated = allocated;
+        let failovers = res?;
+        debug_assert!(buf.all_complete());
+        buf.clear_pending();
+        Ok((shares, failovers))
+    }
+
+    /// The serial execution loop (the seed path).
+    ///
+    /// On a mid-op failover the Exception Handler migrates the failed
+    /// window to the optimal survivor AND the not-yet-executed windows of
+    /// the surviving rails are re-planned at the post-failover fabric
+    /// state (freed cores change contention, hence optimal schedules) — a
+    /// fresh selection epoch, not just a re-schedule of the migrated
+    /// window.
+    fn exec_plan_serial(
+        &mut self,
+        buf: &mut UnboundBuffer,
+        windows: &[Window],
+        assigns: &mut [RailPlan],
+        allocated: &[(usize, u64)],
+        elem_bytes: f64,
+        shares: &mut Vec<RailShare>,
+    ) -> Result<usize> {
+        let mut op_scratch = std::mem::take(&mut self.scratch.op);
         let mut failovers = 0usize;
         let planner_scheduled = self.forced_algo.is_none();
 
@@ -595,21 +794,7 @@ impl MultiRail {
                 Err(RailDown(r)) => {
                     // §4.4: deregister, hand (ptr,len) to optimal survivor
                     failovers += 1;
-                    let ev = self
-                        .exceptions
-                        .handle_failure(&mut self.fab, r, w, &allocated)
-                        .ok_or(Error::AllRailsDown(r))?;
-                    self.timer.forget_rail(r);
-                    self.planner.corrections.forget_rail(r);
-                    // every cached selection assumed the old rail set
-                    self.plan_cache.clear();
-                    self.planner.bump_epoch();
-                    // re-plan the migrated window for the takeover rail
-                    let sched = self.takeover_schedule(ev.takeover_rail, w, elem_bytes);
-                    let out = self
-                        .run_rail(sched, ev.takeover_rail, buf, w, elem_bytes, &mut op_scratch)
-                        .map_err(|RailDown(r2)| Error::AllRailsDown(r2))?;
-                    buf.complete(w)?;
+                    self.failover_rail(r, w, buf, elem_bytes, allocated, &mut op_scratch, shares)?;
                     // ... and the surviving rails' pending windows at the
                     // post-failover fabric state
                     for j in idx + 1..assigns.len() {
@@ -631,29 +816,162 @@ impl MultiRail {
                             rail_bytes,
                         );
                     }
-                    // takeover rail absorbs its own share later/earlier in
-                    // this same op; account serially on that rail
-                    let extra = ev.recovery_us + out.time_us;
-                    if let Some(s) = shares.iter_mut().find(|s| s.rail == ev.takeover_rail) {
-                        s.time_us += extra;
-                        s.bytes += (w.len as f64 * elem_bytes) as u64;
-                    } else {
-                        shares.push(RailShare {
-                            rail: ev.takeover_rail,
-                            bytes: (w.len as f64 * elem_bytes) as u64,
-                            time_us: extra,
-                        });
-                    }
                 }
             }
         }
-        debug_assert!(buf.all_complete());
-        buf.clear_pending();
-        self.scratch.windows = windows;
-        self.scratch.assigns = assigns;
-        self.scratch.allocated = allocated;
         self.scratch.op = op_scratch;
-        Ok((shares, failovers))
+        Ok(failovers)
+    }
+
+    /// The parallel execution engine: every payload-carrying rail's
+    /// schedule runs concurrently on a scoped worker thread, driving its
+    /// borrow-split [`crate::net::simnet::RailCtx`] (timing) over its
+    /// disjoint [`crate::coordinator::buffer::RailView`] (numerics) with
+    /// a forked reducer and its own collective scratch.
+    ///
+    /// Failovers surface at the merge: a failed rail's window never ran
+    /// numerics (timing precedes numerics inside every collective), so it
+    /// migrates to the optimal survivor and re-runs serially after the
+    /// join — the cache/epoch replan state updates exactly as in the
+    /// serial path. Concurrent rails have already completed by then, so
+    /// (unlike serial) there are no pending windows to re-plan mid-op.
+    #[allow(clippy::too_many_arguments)]
+    fn exec_plan_parallel(
+        &mut self,
+        buf: &mut UnboundBuffer,
+        windows: &[Window],
+        assigns: &[RailPlan],
+        allocated: &[(usize, u64)],
+        elem_bytes: f64,
+        mut forks: Vec<Box<dyn Reducer + Send>>,
+        shares: &mut Vec<RailShare>,
+    ) -> Result<usize> {
+        let mut live_w = std::mem::take(&mut self.scratch.live_windows);
+        let mut live_a = std::mem::take(&mut self.scratch.live_assigns);
+        let mut live_r = std::mem::take(&mut self.scratch.live_rails);
+        live_w.clear();
+        live_a.clear();
+        live_r.clear();
+        for (a, w) in assigns.iter().zip(windows) {
+            if !w.is_empty() {
+                live_w.push(*w);
+                live_a.push(*a);
+                live_r.push(a.rail);
+            }
+        }
+        debug_assert_eq!(forks.len(), live_a.len());
+        for w in &live_w {
+            buf.register(*w);
+        }
+        let forced = self.forced_algo;
+        let planner_scheduled = forced.is_none();
+
+        let results: Vec<std::result::Result<OpOutcome, RailDown>> = {
+            // borrow-split the coordinator: fabric → per-rail timing
+            // contexts, buffer → disjoint per-rail views, scratch → one
+            // collective scratch per worker
+            let MultiRail { fab, scratch, planner, executor, .. } = self;
+            while scratch.rail_ops.len() < live_a.len() {
+                scratch.rail_ops.push(OpScratch::default());
+            }
+            let intra = planner.intra.as_ref();
+            let views = buf.rail_views(&live_w);
+            let mut ctxs = fab.rail_ctxs(&live_r);
+            // rail_ctxs returns ascending rail order; re-order to match
+            // the assignment order the views/forks/results use
+            let mut ordered = Vec::with_capacity(live_r.len());
+            for &rail in &live_r {
+                let pos = ctxs
+                    .iter()
+                    .position(|c| c.rail == rail)
+                    .expect("one ctx per live rail");
+                ordered.push(ctxs.swap_remove(pos));
+            }
+            let mut jobs = Vec::with_capacity(live_a.len());
+            for ((((mut view, mut ctx), scr), mut red), a) in views
+                .into_iter()
+                .zip(ordered)
+                .zip(scratch.rail_ops.iter_mut())
+                .zip(forks.drain(..))
+                .zip(live_a.iter().copied())
+            {
+                let w = view.window_of_view();
+                jobs.push(move || match forced {
+                    Some(algo) => run_allreduce_on(
+                        algo,
+                        &mut ctx,
+                        &mut view,
+                        w,
+                        red.as_mut(),
+                        elem_bytes,
+                        scr,
+                    ),
+                    None => run_plan_on(
+                        a.schedule,
+                        &mut ctx,
+                        &mut view,
+                        w,
+                        red.as_mut(),
+                        elem_bytes,
+                        intra,
+                        scr,
+                    ),
+                });
+            }
+            executor.run(jobs)
+        };
+
+        // deterministic merge in assignment order (thread scheduling can
+        // never reorder results — the executor returns submission order).
+        // Empty-window shares are pushed in assignment POSITION, exactly
+        // as the serial loop interleaves them, so both executors emit
+        // identically-shaped per_rail vectors even when a failover merges
+        // into a zero-share takeover rail.
+        let mut failovers = 0usize;
+        let mut op_scratch = std::mem::take(&mut self.scratch.op);
+        let mut results_it = results.into_iter();
+        for (a, w) in assigns.iter().zip(windows) {
+            let (a, w) = (*a, *w);
+            if w.is_empty() {
+                shares.push(RailShare { rail: a.rail, bytes: 0, time_us: 0.0 });
+                continue;
+            }
+            let res = results_it.next().expect("one result per live rail");
+            match res {
+                Ok(out) => {
+                    buf.complete(w)?;
+                    let rail_bytes = (w.len as f64 * elem_bytes) as u64;
+                    shares.push(RailShare { rail: a.rail, bytes: rail_bytes, time_us: out.time_us });
+                    if planner_scheduled {
+                        self.planner.observe(
+                            a.rail,
+                            a.bytes,
+                            a.rounds,
+                            a.model_us,
+                            a.predicted_us,
+                            out.time_us,
+                        );
+                        self.quality.record(
+                            a.rail,
+                            a.bytes,
+                            a.schedule,
+                            a.predicted_us,
+                            out.time_us,
+                            self.planner.epoch(),
+                        );
+                    }
+                }
+                Err(RailDown(r)) => {
+                    failovers += 1;
+                    self.failover_rail(r, w, buf, elem_bytes, allocated, &mut op_scratch, shares)?;
+                }
+            }
+        }
+        self.scratch.op = op_scratch;
+        self.scratch.live_windows = live_w;
+        self.scratch.live_assigns = live_a;
+        self.scratch.live_rails = live_r;
+        Ok(failovers)
     }
 
     /// Execute MPTCP-style packet slicing with ECF-like earliest-
@@ -697,7 +1015,7 @@ impl MultiRail {
             assigned[idx].2 += pbytes;
         }
 
-        let mut shares: Vec<RailShare> = Vec::new();
+        let mut shares = self.take_report_vec();
         let mut failovers = 0usize;
         // per-packet numerics scratch, reused across every packet/subflow
         let mut op_scratch = std::mem::take(&mut self.scratch.op);
@@ -811,7 +1129,7 @@ impl MultiRail {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::net::protocol::{ProtoKind, KB, MB};
+    use crate::net::protocol::{ProtoKind, MB};
 
     fn cfg(combo: &[ProtoKind], nodes: usize, policy: Policy) -> Config {
         Config {
@@ -1042,5 +1360,67 @@ mod tests {
         let rep2 = mr.allreduce(&mut make(4, len)).unwrap();
         assert_eq!(rep2.failovers, 0);
         assert_eq!(rep2.per_rail.iter().filter(|s| s.bytes > 0).count(), 2);
+    }
+
+    #[test]
+    fn parallel_exec_bit_identical_to_serial_with_jitter() {
+        // jitter ON: per-rail streams make even the sampled modeled times
+        // identical across executors, not just the numerics
+        let mut c = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        c.deterministic = false;
+        c.exec = ExecMode::Serial;
+        let mut serial = MultiRail::new(&c).unwrap();
+        c.exec = ExecMode::Parallel;
+        let mut parallel = MultiRail::new(&c).unwrap();
+        let len = 1 << 20; // 4MB: hot → both rails
+        for op in 0..4 {
+            let mut bs = make(4, len);
+            let mut bp = make(4, len);
+            let rs = serial.allreduce(&mut bs).unwrap();
+            let rp = parallel.allreduce(&mut bp).unwrap();
+            assert_eq!(rs.total_us, rp.total_us, "op {op}: modeled time diverged");
+            assert_eq!(rs.per_rail.len(), rp.per_rail.len(), "op {op}");
+            for (a, b) in rs.per_rail.iter().zip(&rp.per_rail) {
+                assert_eq!(a.rail, b.rail, "op {op}");
+                assert_eq!(a.bytes, b.bytes, "op {op}");
+                assert_eq!(a.time_us, b.time_us, "op {op} rail {}", a.rail);
+            }
+            for n in 0..4 {
+                assert_eq!(bs.node(n), bp.node(n), "op {op} node {n} numerics diverged");
+            }
+            reduced_ok(&bp, 4, len);
+        }
+    }
+
+    #[test]
+    fn parallel_exec_correct_on_heterogeneous_combo() {
+        // ring + tree rails concurrently (different schedule families);
+        // fixed 50/50 shares force both planes to carry payload
+        let mut c = cfg(&[ProtoKind::Tcp, ProtoKind::Sharp], 4, Policy::Nezha);
+        c.exec = ExecMode::Parallel;
+        let mut mr = MultiRail::new(&c).unwrap();
+        mr.partitioner = Box::new(crate::baselines::FixedShares::percent(50, 50));
+        let len = 1024 * 1024; // 4MB split across both planes
+        let mut buf = make(4, len);
+        let rep = mr.allreduce(&mut buf).unwrap();
+        assert_eq!(rep.per_rail.iter().filter(|s| s.bytes > 0).count(), 2);
+        reduced_ok(&buf, 4, len);
+    }
+
+    #[test]
+    fn recycled_reports_pool_their_vectors() {
+        let mut mr =
+            MultiRail::new(&cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha)).unwrap();
+        let mut buf = make(4, 1024 * 1024);
+        let rep = mr.allreduce(&mut buf).unwrap();
+        let cap = rep.per_rail.capacity();
+        assert!(cap >= 2);
+        mr.recycle(rep);
+        // the next op draws the same vector back out of the pool
+        let mut buf2 = make(4, 1024 * 1024);
+        let rep2 = mr.allreduce(&mut buf2).unwrap();
+        assert!(rep2.per_rail.capacity() >= 2);
+        assert_eq!(rep2.per_rail.iter().filter(|s| s.bytes > 0).count(), 2);
+        mr.recycle(rep2);
     }
 }

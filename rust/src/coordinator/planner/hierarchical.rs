@@ -7,12 +7,12 @@
 //! rail window, so results are bit-identical to the seed reducer for every
 //! schedule family.
 
-use crate::coordinator::buffer::{UnboundBuffer, Window};
+use crate::coordinator::buffer::{NodeWindows, UnboundBuffer, Window};
 use crate::coordinator::collective::reducer::Reducer;
 use crate::coordinator::collective::ring::ring_numerics_segs;
 use crate::coordinator::collective::{OpOutcome, OpScratch};
 use crate::coordinator::planner::cost;
-use crate::net::simnet::{Fabric, RailDown};
+use crate::net::simnet::{Fabric, RailDown, RailTimer};
 use crate::net::topology::IntraLink;
 
 /// Recursive halving/doubling allreduce: `log2(N)` reduce-scatter rounds
@@ -41,7 +41,20 @@ pub fn halving_doubling_allreduce_with(
     elem_bytes: f64,
     scratch: &mut OpScratch,
 ) -> Result<OpOutcome, RailDown> {
-    let n = fab.nodes;
+    halving_doubling_allreduce_on(&mut fab.rail_ctx(rail), buf, w, red, elem_bytes, scratch)
+}
+
+/// The generic core of recursive halving/doubling (timing through any
+/// [`RailTimer`], numerics over any [`NodeWindows`] buffer).
+pub fn halving_doubling_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
+    t: &mut T,
+    buf: &mut V,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    scratch: &mut OpScratch,
+) -> Result<OpOutcome, RailDown> {
+    let n = t.nodes();
     debug_assert!(n.is_power_of_two() && n >= 2);
     if w.is_empty() {
         return Ok(OpOutcome::default());
@@ -55,8 +68,8 @@ pub fn halving_doubling_allreduce_with(
     // per-round byte ladder, mirrored)
     for _ in 0..n.trailing_zeros() {
         let b = bytes / divisor;
-        total += fab.ring_step(rail, b)?;
-        total += fab.ring_step(rail, b)?;
+        total += t.ring_step(b)?;
+        total += t.ring_step(b)?;
         moved += 2.0 * b;
         steps += 2;
         divisor *= 2.0;
@@ -97,7 +110,23 @@ pub fn two_level_allreduce_with(
     chunks: usize,
     scratch: &mut OpScratch,
 ) -> Result<OpOutcome, RailDown> {
-    let n = fab.nodes;
+    two_level_allreduce_on(&mut fab.rail_ctx(rail), buf, w, red, elem_bytes, intra, chunks, scratch)
+}
+
+/// The generic core of the two-level schedule (timing through any
+/// [`RailTimer`], numerics over any [`NodeWindows`] buffer).
+#[allow(clippy::too_many_arguments)]
+pub fn two_level_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
+    t: &mut T,
+    buf: &mut V,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    intra: &IntraLink,
+    chunks: usize,
+    scratch: &mut OpScratch,
+) -> Result<OpOutcome, RailDown> {
+    let n = t.nodes();
     let g = intra.group_size.max(1);
     debug_assert!(g > 1 && n % g == 0 && n / g >= 2, "caller must validate grouping");
     if w.is_empty() {
@@ -117,7 +146,7 @@ pub fn two_level_allreduce_with(
     let volume = 2.0 * (groups - 1) as f64 * (bytes / n as f64);
     let msg = volume / rounds as f64;
     for _ in 0..rounds {
-        total += fab.ring_step(rail, msg)?;
+        total += t.ring_step(msg)?;
     }
     w.split_uniform_into(n, &mut scratch.segs);
     ring_numerics_segs(buf, &scratch.segs, red);

@@ -31,15 +31,15 @@ pub use cost::CorrectedCost;
 pub use plan::{CollectivePlan, RailPlan, Schedule};
 pub use quality::PlanQualityReport;
 
-use crate::coordinator::buffer::{UnboundBuffer, Window};
+use crate::coordinator::buffer::{NodeWindows, UnboundBuffer, Window};
 use crate::coordinator::collective::reducer::Reducer;
-use crate::coordinator::collective::ring::ring_allreduce_with;
-use crate::coordinator::collective::tree::tree_allreduce_with;
+use crate::coordinator::collective::ring::ring_allreduce_on;
+use crate::coordinator::collective::tree::tree_allreduce_on;
 use crate::coordinator::collective::{OpOutcome, OpScratch};
 use crate::coordinator::control::load_balancer::sync_overhead_us;
 use crate::coordinator::control::Timer;
 use crate::net::protocol::CollectiveKind;
-use crate::net::simnet::{Fabric, RailDown};
+use crate::net::simnet::{Fabric, RailDown, RailTimer};
 use crate::net::topology::{ClusterSpec, IntraLink};
 
 /// Pipeline depths the planner evaluates for chunked schedules.
@@ -372,7 +372,8 @@ pub fn run_plan(
     run_plan_with(schedule, fab, rail, buf, w, red, elem_bytes, intra, &mut scratch)
 }
 
-/// Scratch-reuse form of [`run_plan`] — the coordinator's per-op path.
+/// Scratch-reuse form of [`run_plan`] — the coordinator's serial per-op
+/// path.
 #[allow(clippy::too_many_arguments)]
 pub fn run_plan_with(
     schedule: Schedule,
@@ -385,37 +386,55 @@ pub fn run_plan_with(
     intra: Option<&IntraLink>,
     scratch: &mut OpScratch,
 ) -> Result<OpOutcome, RailDown> {
+    run_plan_on(schedule, &mut fab.rail_ctx(rail), buf, w, red, elem_bytes, intra, scratch)
+}
+
+/// The generic core of schedule execution: timing through any
+/// [`RailTimer`], numerics over any [`NodeWindows`] buffer — what the
+/// parallel executor's worker threads run against their borrow-split
+/// `RailCtx` + `RailView` pairs (and what [`run_plan_with`] drives
+/// serially through a throwaway context).
+#[allow(clippy::too_many_arguments)]
+pub fn run_plan_on<T: RailTimer, V: NodeWindows + ?Sized>(
+    schedule: Schedule,
+    t: &mut T,
+    buf: &mut V,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    intra: Option<&IntraLink>,
+    scratch: &mut OpScratch,
+) -> Result<OpOutcome, RailDown> {
     if w.is_empty() {
         return Ok(OpOutcome::default());
     }
+    let nodes = t.nodes();
     match schedule.normalized() {
-        Schedule::Tree => tree_allreduce_with(fab, rail, buf, w, red, elem_bytes, scratch),
-        Schedule::FlatRing => ring_allreduce_with(fab, rail, buf, w, red, elem_bytes, scratch),
-        Schedule::RingChunked { chunks } => pipeline::pipelined_ring_allreduce_with(
-            fab, rail, buf, w, red, elem_bytes, chunks, scratch,
+        Schedule::Tree => tree_allreduce_on(t, buf, w, red, elem_bytes, scratch),
+        Schedule::FlatRing => ring_allreduce_on(t, buf, w, red, elem_bytes, scratch),
+        Schedule::RingChunked { chunks } => pipeline::pipelined_ring_allreduce_on(
+            t, buf, w, red, elem_bytes, chunks, scratch,
         ),
         Schedule::HalvingDoubling => {
-            if fab.nodes.is_power_of_two() {
-                hierarchical::halving_doubling_allreduce_with(
-                    fab, rail, buf, w, red, elem_bytes, scratch,
-                )
+            if nodes.is_power_of_two() {
+                hierarchical::halving_doubling_allreduce_on(t, buf, w, red, elem_bytes, scratch)
             } else {
-                ring_allreduce_with(fab, rail, buf, w, red, elem_bytes, scratch)
+                ring_allreduce_on(t, buf, w, red, elem_bytes, scratch)
             }
         }
         Schedule::TwoLevel { group, chunks } => match intra {
             Some(link)
                 if link.group_size == group
                     && group > 1
-                    && fab.nodes % group == 0
-                    && fab.nodes / group >= 2 =>
+                    && nodes % group == 0
+                    && nodes / group >= 2 =>
             {
-                hierarchical::two_level_allreduce_with(
-                    fab, rail, buf, w, red, elem_bytes, link, chunks, scratch,
+                hierarchical::two_level_allreduce_on(
+                    t, buf, w, red, elem_bytes, link, chunks, scratch,
                 )
             }
             // defensive: an invalid grouping falls back to the seed ring
-            _ => ring_allreduce_with(fab, rail, buf, w, red, elem_bytes, scratch),
+            _ => ring_allreduce_on(t, buf, w, red, elem_bytes, scratch),
         },
     }
 }

@@ -8,11 +8,11 @@
 //! tail reduce when both buckets run multi-rail chunked plans — the
 //! trainer models that with a bounded overlap credit.
 
-use crate::coordinator::buffer::{UnboundBuffer, Window};
+use crate::coordinator::buffer::{NodeWindows, UnboundBuffer, Window};
 use crate::coordinator::collective::reducer::Reducer;
 use crate::coordinator::collective::ring::ring_numerics_segs;
 use crate::coordinator::collective::{OpOutcome, OpScratch};
-use crate::net::simnet::{Fabric, RailDown};
+use crate::net::simnet::{Fabric, RailDown, RailTimer};
 
 /// Rounds of a `chunks`-deep pipeline over a `base_rounds`-round schedule.
 pub fn pipelined_rounds(base_rounds: usize, chunks: usize) -> usize {
@@ -55,10 +55,25 @@ pub fn pipelined_ring_allreduce_with(
     chunks: usize,
     scratch: &mut OpScratch,
 ) -> Result<OpOutcome, RailDown> {
+    pipelined_ring_allreduce_on(&mut fab.rail_ctx(rail), buf, w, red, elem_bytes, chunks, scratch)
+}
+
+/// The generic core of the chunk-pipelined ring (timing through any
+/// [`RailTimer`], numerics over any [`NodeWindows`] buffer).
+#[allow(clippy::too_many_arguments)]
+pub fn pipelined_ring_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
+    t: &mut T,
+    buf: &mut V,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    chunks: usize,
+    scratch: &mut OpScratch,
+) -> Result<OpOutcome, RailDown> {
     if w.is_empty() {
         return Ok(OpOutcome::default());
     }
-    let n = fab.nodes;
+    let n = t.nodes();
     let chunks = chunks.max(1);
     let rounds = pipelined_rounds(2 * (n - 1), chunks);
     let bytes = w.len as f64 * elem_bytes;
@@ -66,7 +81,7 @@ pub fn pipelined_ring_allreduce_with(
     let msg = volume / rounds as f64;
     let mut total = 0.0;
     for _ in 0..rounds {
-        total += fab.ring_step(rail, msg)?;
+        total += t.ring_step(msg)?;
     }
     w.split_uniform_into(n, &mut scratch.segs);
     ring_numerics_segs(buf, &scratch.segs, red);

@@ -136,6 +136,90 @@ impl Default for CpuPool {
     }
 }
 
+/// How the coordinator drives the per-rail schedules of one op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// One rail after another on the calling thread (the seed behaviour,
+    /// and the fallback when a reducer cannot fork).
+    Serial,
+    /// All healthy rails' schedules run concurrently on scoped worker
+    /// threads — per-rail windows are disjoint buffer slices and per-rail
+    /// RNG streams are independent, so results (numerics AND modeled
+    /// times) are bit-identical to serial execution.
+    Parallel,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> crate::Result<ExecMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "serial" | "seq" | "off" => Ok(ExecMode::Serial),
+            "parallel" | "par" | "on" => Ok(ExecMode::Parallel),
+            other => Err(crate::util::error::Error::Config(format!(
+                "unknown exec mode `{other}`"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecMode::Serial => "serial",
+            ExecMode::Parallel => "parallel",
+        }
+    }
+
+    /// Resolve the default mode, honouring the `NEZHA_EXEC` environment
+    /// override — how CI runs the whole test suite under the parallel
+    /// executor without per-test plumbing. An invalid value panics (just
+    /// as the `exec` config key errors): a typo'd override silently
+    /// falling back to serial would fake parallel coverage.
+    pub fn from_env(default: ExecMode) -> ExecMode {
+        match std::env::var("NEZHA_EXEC") {
+            Ok(v) => ExecMode::parse(&v).unwrap_or_else(|e| panic!("NEZHA_EXEC: {e}")),
+            Err(_) => default,
+        }
+    }
+}
+
+/// The cross-rail execution engine: runs one op's per-rail jobs either
+/// in order on the calling thread or concurrently on scoped worker
+/// threads (one thread per participating rail — rails are the unit of
+/// hardware parallelism here, mirroring the paper's one-protocol-thread-
+/// per-member-network deployment).
+///
+/// Results always come back in job submission order, so the coordinator's
+/// merge (shares, Timer feedback, failover handling) is deterministic
+/// regardless of thread scheduling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RailExecutor {
+    pub mode: ExecMode,
+}
+
+impl RailExecutor {
+    pub fn new(mode: ExecMode) -> RailExecutor {
+        RailExecutor { mode }
+    }
+
+    /// Run the jobs and collect their results in submission order. A
+    /// single job never pays thread-spawn overhead, even in parallel mode.
+    pub fn run<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        match self.mode {
+            _ if jobs.len() <= 1 => jobs.into_iter().map(|j| j()).collect(),
+            ExecMode::Serial => jobs.into_iter().map(|j| j()).collect(),
+            ExecMode::Parallel => std::thread::scope(|s| {
+                let handles: Vec<_> = jobs.into_iter().map(|j| s.spawn(j)).collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("rail worker panicked"))
+                    .collect()
+            }),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,6 +287,51 @@ mod tests {
         assert!((p.contention_factor() - CO_RESIDENT_PENALTY).abs() < 1e-12);
         p.register(ProtoKind::Sharp);
         assert!((p.contention_factor() - CO_RESIDENT_PENALTY * CO_RESIDENT_PENALTY).abs() < 1e-12);
+    }
+
+    #[test]
+    fn executor_preserves_submission_order() {
+        for mode in [ExecMode::Serial, ExecMode::Parallel] {
+            let ex = RailExecutor::new(mode);
+            let jobs: Vec<_> = (0..6)
+                .map(|i| move || i * 10)
+                .collect();
+            assert_eq!(ex.run(jobs), vec![0, 10, 20, 30, 40, 50], "{mode:?}");
+        }
+        // empty and single-job cases short-circuit
+        let ex = RailExecutor::new(ExecMode::Parallel);
+        assert!(ex.run(Vec::<fn() -> i32>::new()).is_empty());
+        assert_eq!(ex.run(vec![|| 7]), vec![7]);
+    }
+
+    #[test]
+    fn executor_jobs_can_mutate_disjoint_borrows() {
+        // the coordinator's use: each job owns &mut into a distinct slice
+        let mut data = vec![0u64; 4];
+        {
+            let ex = RailExecutor::new(ExecMode::Parallel);
+            let jobs: Vec<_> = data
+                .iter_mut()
+                .enumerate()
+                .map(|(i, slot)| {
+                    move || {
+                        *slot = i as u64 + 1;
+                        i
+                    }
+                })
+                .collect();
+            assert_eq!(ex.run(jobs), vec![0, 1, 2, 3]);
+        }
+        assert_eq!(data, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn exec_mode_parses() {
+        assert_eq!(ExecMode::parse("serial").unwrap(), ExecMode::Serial);
+        assert_eq!(ExecMode::parse("parallel").unwrap(), ExecMode::Parallel);
+        assert_eq!(ExecMode::parse("on").unwrap(), ExecMode::Parallel);
+        assert!(ExecMode::parse("bogus").is_err());
+        assert_eq!(ExecMode::Parallel.name(), "parallel");
     }
 
     #[test]

@@ -9,9 +9,23 @@
 //! the paper's ring/tree algorithms): a step's duration is the max over
 //! per-node sampled message times. This gives deterministic, fast policy
 //! simulation while keeping the data path real.
+//!
+//! ## Per-rail sampling streams
+//!
+//! All mutable per-rail sampling state — rail health, the straggler stall
+//! table and the jitter RNG — is split per rail: each rail draws from its
+//! own [`Pcg`] stream reseeded from `(seed, rail, op_epoch)` at every
+//! [`Fabric::begin_op`]. Concurrent rails therefore sample independent,
+//! deterministic sequences whose values cannot depend on cross-rail
+//! execution order, which is what lets the coordinator's parallel executor
+//! produce modeled times bit-identical to serial execution. The
+//! [`RailCtx`] borrow-split view hands one rail's complete timing state to
+//! a worker thread; every [`Fabric`] sampling method delegates to it, so
+//! serial and parallel paths share one implementation by construction.
 
 use crate::net::cpu_pool::{CpuPool, Phase};
 use crate::net::fault::FaultSchedule;
+use crate::net::protocol::CollectiveKind;
 use crate::net::rail::{Rail, RailHealth};
 use crate::util::rng::Pcg;
 
@@ -46,6 +60,16 @@ struct RailStall {
     stoch: Vec<(f64, f64)>,
 }
 
+/// One rail's private sampling stream: jitter RNG plus the reusable
+/// per-round jitter-multiplier scratch. Reseeded from
+/// `(seed, rail, op_epoch)` at every op so draws are a pure function of
+/// that triple, independent of other rails and of prior ops' draw counts.
+#[derive(Debug, Clone)]
+struct RailStream {
+    rng: Pcg,
+    jitter_buf: Vec<f64>,
+}
+
 /// Multi-rail fabric across `nodes` symmetric nodes.
 #[derive(Debug, Clone)]
 pub struct Fabric {
@@ -62,9 +86,12 @@ pub struct Fabric {
     clock_us: f64,
     /// Log-normal per-message jitter sigma (0 disables jitter).
     pub jitter_sigma: f64,
-    rng: Pcg,
-    /// Reusable per-round jitter multipliers (batched sampling scratch).
-    jitter_buf: Vec<f64>,
+    /// Base seed the per-rail streams derive from.
+    seed: u64,
+    /// Bumped by [`Fabric::begin_op`]; stream-derivation coordinate.
+    op_epoch: u64,
+    /// One independent sampling stream per rail.
+    streams: Vec<RailStream>,
 }
 
 impl Fabric {
@@ -83,8 +110,14 @@ impl Fabric {
             stall_table: vec![RailStall::default(); n_rails],
             clock_us: 0.0,
             jitter_sigma: 0.03,
-            rng: Pcg::new(seed),
-            jitter_buf: Vec::new(),
+            seed,
+            op_epoch: 0,
+            streams: (0..n_rails)
+                .map(|r| RailStream {
+                    rng: Pcg::for_stream(seed, r as u64, 0),
+                    jitter_buf: Vec::new(),
+                })
+                .collect(),
         }
     }
 
@@ -128,25 +161,28 @@ impl Fabric {
         }
     }
 
-    /// Sampled extra stall for one message on `rail` (0 when healthy):
-    /// table read for the deterministic part, one draw per stochastic
-    /// entry on this rail.
-    fn straggler_stall_us(&mut self, rail: usize) -> f64 {
-        let mut stall = self.stall_table[rail].det_us;
-        // indexed loop: sampling needs `&mut self.rng` while reading the table
-        let mut k = 0;
-        while k < self.stall_table[rail].stoch.len() {
-            let (stall_us, sigma) = self.stall_table[rail].stoch[k];
-            stall += stall_us * self.rng.jitter(sigma);
-            k += 1;
-        }
-        stall
-    }
-
     /// Disable stochastic jitter (deterministic analytic times).
     pub fn deterministic(mut self) -> Fabric {
         self.jitter_sigma = 0.0;
         self
+    }
+
+    /// Start a new op epoch: every rail's sampling stream is reseeded from
+    /// `(seed, rail, epoch)`. The coordinator calls this once per
+    /// allreduce, making each op's per-rail draw sequences a pure function
+    /// of the epoch — independent of how many draws earlier ops made and
+    /// of whether other rails execute before, after or concurrently.
+    pub fn begin_op(&mut self) -> u64 {
+        self.op_epoch += 1;
+        for (r, s) in self.streams.iter_mut().enumerate() {
+            s.rng = Pcg::for_stream(self.seed, r as u64, self.op_epoch);
+        }
+        self.op_epoch
+    }
+
+    /// The current op epoch (bumped by [`Fabric::begin_op`]).
+    pub fn op_epoch(&self) -> u64 {
+        self.op_epoch
     }
 
     pub fn now_us(&self) -> f64 {
@@ -170,20 +206,7 @@ impl Fabric {
     /// Check the fault schedule and update the rail's health. Returns true
     /// if the rail is usable at the current virtual time.
     pub fn poll_health(&mut self, rail: usize) -> bool {
-        if self.rails[rail].health == RailHealth::Deregistered {
-            return false;
-        }
-        if self.faults.is_down(rail, self.clock_us) {
-            self.rails[rail].health = RailHealth::Failed;
-            false
-        } else {
-            if self.rails[rail].health == RailHealth::Failed {
-                // fault window passed; rail is physically back (the Control
-                // module decides when to re-admit it)
-                self.rails[rail].health = RailHealth::Healthy;
-            }
-            self.rails[rail].health == RailHealth::Healthy
-        }
+        self.rail_ctx(rail).poll_health()
     }
 
     pub fn deregister(&mut self, rail: usize) {
@@ -232,84 +255,25 @@ impl Fabric {
     pub fn transfer_det_us(&self, rail: usize, bytes: f64) -> f64 {
         let r = &self.rails[rail];
         let cores = self.cpu.cores_for(r.kind(), Phase::Computation);
-        let contention = self.cpu.contention_factor();
-        let raw = r.protocol.msg_time_us(bytes, cores, r.wire_cap_mbps());
-        r.protocol.setup_us + (raw - r.protocol.setup_us) / contention
+        det_msg_us(r, bytes, cores, self.cpu.contention_factor())
     }
 
     /// Single point-to-point message time on `rail` (us), with jitter.
     /// Fails if the rail is down at the current virtual time.
     pub fn transfer(&mut self, rail: usize, bytes: f64) -> Result<f64, RailDown> {
-        if !self.poll_health(rail) {
-            return Err(RailDown(rail));
-        }
-        let base = self.transfer_det_us(rail, bytes);
-        let j = if self.jitter_sigma > 0.0 {
-            self.rng.jitter(self.jitter_sigma)
-        } else {
-            1.0
-        };
-        Ok(base * j + self.straggler_stall_us(rail))
+        self.rail_ctx(rail).transfer(bytes)
     }
 
-    /// One lockstep collective round on `rail`: every node sends a message
-    /// of `bytes`; the round lasts as long as the slowest node (straggler
-    /// max over per-node jitter).
-    ///
-    /// Batched sampling: health is polled and the deterministic base time
-    /// computed ONCE per round (they cannot change mid-round — the clock
-    /// only advances between rounds), all `nodes` jitter multipliers are
-    /// drawn through one [`Pcg::fill_jitter`] pass, and a fully
-    /// deterministic round (no jitter, no stochastic straggler) samples
-    /// nothing at all: its max over identical per-node times IS the single
-    /// deterministic message time.
+    /// One lockstep collective round on `rail` (see
+    /// [`RailCtx::ring_step`], which carries the single implementation).
     pub fn ring_step(&mut self, rail: usize, bytes: f64) -> Result<f64, RailDown> {
-        if !self.poll_health(rail) {
-            return Err(RailDown(rail));
-        }
-        let base = self.transfer_det_us(rail, bytes);
-        let det_stall = self.stall_table[rail].det_us;
-        let n_stoch = self.stall_table[rail].stoch.len();
-        if self.jitter_sigma == 0.0 && n_stoch == 0 {
-            return Ok(base + det_stall);
-        }
-        let nodes = self.nodes;
-        let mut jit = std::mem::take(&mut self.jitter_buf);
-        jit.clear();
-        jit.resize(nodes, 1.0);
-        if self.jitter_sigma > 0.0 {
-            self.rng.fill_jitter(self.jitter_sigma, &mut jit);
-        }
-        let mut worst = 0.0f64;
-        for &j in jit.iter() {
-            let mut t = base * j + det_stall;
-            // indexed loop: sampling needs `&mut self.rng` while reading
-            // the table
-            let mut k = 0;
-            while k < n_stoch {
-                let (stall_us, sigma) = self.stall_table[rail].stoch[k];
-                t += stall_us * self.rng.jitter(sigma);
-                k += 1;
-            }
-            worst = worst.max(t);
-        }
-        self.jitter_buf = jit;
-        Ok(worst)
+        self.rail_ctx(rail).ring_step(bytes)
     }
 
     /// In-network aggregation round (SHARP-style): one tree traversal of
     /// `bytes`, node-count dependence handled by the protocol model.
     pub fn tree_round(&mut self, rail: usize, bytes: f64) -> Result<f64, RailDown> {
-        if !self.poll_health(rail) {
-            return Err(RailDown(rail));
-        }
-        let base = self.estimate_allreduce_us(rail, bytes);
-        let j = if self.jitter_sigma > 0.0 {
-            self.rng.jitter(self.jitter_sigma)
-        } else {
-            1.0
-        };
-        Ok(base * j + self.straggler_stall_us(rail))
+        self.rail_ctx(rail).tree_round(bytes)
     }
 
     /// Analytic single-rail allreduce estimate at current resources (used
@@ -318,14 +282,245 @@ impl Fabric {
     pub fn estimate_allreduce_us(&self, rail: usize, bytes: f64) -> f64 {
         let r = &self.rails[rail];
         let cores = self.cpu.cores_for(r.kind(), Phase::Computation);
+        det_allreduce_us(r, bytes, self.nodes, cores, self.cpu.contention_factor())
+    }
+
+    /// Borrow-split per-rail timing view: one rail's mutable sampling
+    /// state (health, RNG stream) plus shared read-only op state (faults,
+    /// clock, frozen CPU shares). Every [`Fabric`] sampling method
+    /// delegates here, so a `RailCtx` driven on a worker thread samples
+    /// exactly what the serial path would.
+    pub fn rail_ctx(&mut self, rail: usize) -> RailCtx<'_> {
+        let kind = self.rails[rail].kind();
+        let cores = self.cpu.cores_for(kind, Phase::Computation);
         let contention = self.cpu.contention_factor();
-        let raw = r
-            .protocol
-            .allreduce_time_us(bytes, self.nodes, cores, r.wire_cap_mbps());
-        let setup = r
-            .protocol
-            .allreduce_time_us(0.0, self.nodes, cores, r.wire_cap_mbps());
-        setup + (raw - setup) / contention
+        RailCtx {
+            rail,
+            state: &mut self.rails[rail],
+            stream: &mut self.streams[rail],
+            stall: &self.stall_table[rail],
+            faults: &self.faults,
+            nodes: self.nodes,
+            clock_us: self.clock_us,
+            jitter_sigma: self.jitter_sigma,
+            cores,
+            contention,
+        }
+    }
+
+    /// Simultaneous borrow-split views for a set of rails (ascending rail
+    /// order) — what the coordinator hands the parallel executor's worker
+    /// threads. Rails not in `wanted` are skipped.
+    pub fn rail_ctxs(&mut self, wanted: &[usize]) -> Vec<RailCtx<'_>> {
+        let contention = self.cpu.contention_factor();
+        let cores: Vec<f64> = self
+            .rails
+            .iter()
+            .map(|r| self.cpu.cores_for(r.kind(), Phase::Computation))
+            .collect();
+        let nodes = self.nodes;
+        let clock_us = self.clock_us;
+        let jitter_sigma = self.jitter_sigma;
+        let faults = &self.faults;
+        let mut out = Vec::with_capacity(wanted.len());
+        for (((i, state), stream), stall) in self
+            .rails
+            .iter_mut()
+            .enumerate()
+            .zip(self.streams.iter_mut())
+            .zip(self.stall_table.iter())
+        {
+            if !wanted.contains(&i) {
+                continue;
+            }
+            out.push(RailCtx {
+                rail: i,
+                state,
+                stream,
+                stall,
+                faults,
+                nodes,
+                clock_us,
+                jitter_sigma,
+                cores: cores[i],
+                contention,
+            });
+        }
+        out
+    }
+}
+
+/// The α-β message-time kernel: protocol model at `cores`, contention
+/// inflating the transfer component only (never the fixed setup).
+fn det_msg_us(rail: &Rail, bytes: f64, cores: f64, contention: f64) -> f64 {
+    let raw = rail.protocol.msg_time_us(bytes, cores, rail.wire_cap_mbps());
+    rail.protocol.setup_us + (raw - rail.protocol.setup_us) / contention
+}
+
+/// The α-β single-rail allreduce kernel (same contention convention).
+fn det_allreduce_us(rail: &Rail, bytes: f64, nodes: usize, cores: f64, contention: f64) -> f64 {
+    let raw = rail
+        .protocol
+        .allreduce_time_us(bytes, nodes, cores, rail.wire_cap_mbps());
+    let setup = rail
+        .protocol
+        .allreduce_time_us(0.0, nodes, cores, rail.wire_cap_mbps());
+    setup + (raw - setup) / contention
+}
+
+/// Per-rail timing source for collective execution. Implemented by
+/// [`RailCtx`]; every collective core is generic over it, so the serial
+/// coordinator path (which builds a throwaway `RailCtx` per call through
+/// [`Fabric::rail_ctx`]) and the parallel executor's long-lived worker
+/// contexts share one timing implementation.
+pub trait RailTimer {
+    /// Nodes participating in the lockstep collective.
+    fn nodes(&self) -> usize;
+    /// The rail's native collective family (ring vs in-network tree).
+    fn collective_kind(&self) -> CollectiveKind;
+    /// One lockstep collective round: every node sends `bytes`.
+    fn ring_step(&mut self, bytes: f64) -> Result<f64, RailDown>;
+    /// One in-network aggregation traversal of `bytes`.
+    fn tree_round(&mut self, bytes: f64) -> Result<f64, RailDown>;
+}
+
+/// One rail's complete timing state, borrow-split out of the [`Fabric`]:
+/// mutable health + RNG stream for THIS rail only, shared read-only fault
+/// schedule, and the CPU shares frozen at construction (the CpuPool is
+/// only re-split between ops — on failover deregistration — never inside
+/// one). `Send`, so the parallel executor can drive disjoint rails from
+/// worker threads while numerics run over disjoint buffer views.
+pub struct RailCtx<'a> {
+    /// Rail id this context drives.
+    pub rail: usize,
+    state: &'a mut Rail,
+    stream: &'a mut RailStream,
+    stall: &'a RailStall,
+    faults: &'a FaultSchedule,
+    nodes: usize,
+    clock_us: f64,
+    jitter_sigma: f64,
+    cores: f64,
+    contention: f64,
+}
+
+impl RailCtx<'_> {
+    /// Fault-schedule health poll at the op's virtual time (same
+    /// transitions as the fabric-level poll).
+    pub fn poll_health(&mut self) -> bool {
+        if self.state.health == RailHealth::Deregistered {
+            return false;
+        }
+        if self.faults.is_down(self.rail, self.clock_us) {
+            self.state.health = RailHealth::Failed;
+            false
+        } else {
+            if self.state.health == RailHealth::Failed {
+                // fault window passed; rail is physically back (the Control
+                // module decides when to re-admit it)
+                self.state.health = RailHealth::Healthy;
+            }
+            self.state.health == RailHealth::Healthy
+        }
+    }
+
+    /// Deterministic point-to-point message time (us) at the frozen
+    /// resource state.
+    pub fn transfer_det_us(&self, bytes: f64) -> f64 {
+        det_msg_us(self.state, bytes, self.cores, self.contention)
+    }
+
+    /// Sampled extra stall for one message (0 when healthy): table read
+    /// for the deterministic part, one draw per stochastic entry.
+    fn straggler_stall_us(&mut self) -> f64 {
+        let mut stall = self.stall.det_us;
+        for &(stall_us, sigma) in &self.stall.stoch {
+            stall += stall_us * self.stream.rng.jitter(sigma);
+        }
+        stall
+    }
+
+    /// Single point-to-point message time (us), with jitter. Fails if the
+    /// rail is down at the op's virtual time.
+    pub fn transfer(&mut self, bytes: f64) -> Result<f64, RailDown> {
+        if !self.poll_health() {
+            return Err(RailDown(self.rail));
+        }
+        let base = self.transfer_det_us(bytes);
+        let j = if self.jitter_sigma > 0.0 {
+            self.stream.rng.jitter(self.jitter_sigma)
+        } else {
+            1.0
+        };
+        Ok(base * j + self.straggler_stall_us())
+    }
+
+    /// Analytic single-rail allreduce estimate at the frozen resources.
+    pub fn estimate_allreduce_us(&self, bytes: f64) -> f64 {
+        det_allreduce_us(self.state, bytes, self.nodes, self.cores, self.contention)
+    }
+}
+
+impl RailTimer for RailCtx<'_> {
+    fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    fn collective_kind(&self) -> CollectiveKind {
+        self.state.protocol.collective
+    }
+
+    /// One lockstep collective round: every node sends a message of
+    /// `bytes`; the round lasts as long as the slowest node (straggler max
+    /// over per-node jitter).
+    ///
+    /// Batched sampling: health is polled and the deterministic base time
+    /// computed ONCE per round (they cannot change mid-round — the clock
+    /// only advances between rounds), all `nodes` jitter multipliers are
+    /// drawn through one [`Pcg::fill_jitter`] pass, and a fully
+    /// deterministic round (no jitter, no stochastic straggler) samples
+    /// nothing at all: its max over identical per-node times IS the single
+    /// deterministic message time.
+    fn ring_step(&mut self, bytes: f64) -> Result<f64, RailDown> {
+        if !self.poll_health() {
+            return Err(RailDown(self.rail));
+        }
+        let base = self.transfer_det_us(bytes);
+        let det_stall = self.stall.det_us;
+        let n_stoch = self.stall.stoch.len();
+        if self.jitter_sigma == 0.0 && n_stoch == 0 {
+            return Ok(base + det_stall);
+        }
+        let nodes = self.nodes;
+        let mut jit = std::mem::take(&mut self.stream.jitter_buf);
+        jit.clear();
+        jit.resize(nodes, 1.0);
+        if self.jitter_sigma > 0.0 {
+            self.stream.rng.fill_jitter(self.jitter_sigma, &mut jit);
+        }
+        let mut worst = 0.0f64;
+        for &j in jit.iter() {
+            let mut t = base * j + det_stall;
+            for &(stall_us, sigma) in &self.stall.stoch {
+                t += stall_us * self.stream.rng.jitter(sigma);
+            }
+            worst = worst.max(t);
+        }
+        self.stream.jitter_buf = jit;
+        Ok(worst)
+    }
+
+    fn tree_round(&mut self, bytes: f64) -> Result<f64, RailDown> {
+        if !self.poll_health() {
+            return Err(RailDown(self.rail));
+        }
+        let base = self.estimate_allreduce_us(bytes);
+        let j = if self.jitter_sigma > 0.0 {
+            self.stream.rng.jitter(self.jitter_sigma)
+        } else {
+            1.0
+        };
+        Ok(base * j + self.straggler_stall_us())
     }
 }
 
@@ -384,6 +579,72 @@ mod tests {
         for _ in 0..10 {
             assert_eq!(a.transfer(0, MB).unwrap(), b.transfer(0, MB).unwrap());
         }
+    }
+
+    #[test]
+    fn per_rail_streams_are_order_independent() {
+        // identical fabrics; draw rails in opposite interleavings — every
+        // rail's sequence must be unaffected by the other rail's draws
+        let (mut a, mut b) = (dual_tcp(4), dual_tcp(4));
+        a.jitter_sigma = 0.05;
+        b.jitter_sigma = 0.05;
+        a.begin_op();
+        b.begin_op();
+        let mut a_seq = Vec::new();
+        for _ in 0..6 {
+            a_seq.push(a.ring_step(0, MB).unwrap());
+            let _ = a.ring_step(1, MB).unwrap();
+        }
+        // b: rail 1 drained first, rail 0 after — same rail-0 sequence
+        let mut b1 = Vec::new();
+        for _ in 0..6 {
+            b1.push(b.ring_step(1, MB).unwrap());
+        }
+        let b_seq: Vec<f64> = (0..6).map(|_| b.ring_step(0, MB).unwrap()).collect();
+        assert_eq!(a_seq, b_seq, "rail 0 stream depends on rail 1 draws");
+        assert!(!b1.is_empty());
+    }
+
+    #[test]
+    fn begin_op_reseeds_streams_per_epoch() {
+        let mut f = dual_tcp(4);
+        f.jitter_sigma = 0.05;
+        f.begin_op();
+        let t1 = f.ring_step(0, MB).unwrap();
+        let e = f.op_epoch();
+        // drawing more does not disturb the next epoch's sequence
+        for _ in 0..5 {
+            let _ = f.ring_step(0, MB).unwrap();
+        }
+        f.begin_op();
+        assert_eq!(f.op_epoch(), e + 1);
+        let t2 = f.ring_step(0, MB).unwrap();
+        // a fresh fabric skipped straight to epoch 2 samples the same t2
+        let mut g = dual_tcp(4);
+        g.jitter_sigma = 0.05;
+        g.begin_op();
+        g.begin_op();
+        assert_eq!(g.ring_step(0, MB).unwrap(), t2);
+        assert!(t1 > 0.0);
+    }
+
+    #[test]
+    fn rail_ctx_samples_exactly_what_fabric_does() {
+        let (mut a, mut b) = (dual_tcp(4), dual_tcp(4));
+        a.jitter_sigma = 0.04;
+        b.jitter_sigma = 0.04;
+        a.inject_straggler(1, 250.0, 0.3);
+        b.inject_straggler(1, 250.0, 0.3);
+        a.begin_op();
+        b.begin_op();
+        let via_fab: Vec<f64> = (0..5).map(|_| a.ring_step(1, MB).unwrap()).collect();
+        let mut ctxs = b.rail_ctxs(&[1]);
+        assert_eq!(ctxs.len(), 1);
+        let ctx = &mut ctxs[0];
+        assert_eq!(ctx.rail, 1);
+        assert_eq!(ctx.nodes(), 4);
+        let via_ctx: Vec<f64> = (0..5).map(|_| ctx.ring_step(MB).unwrap()).collect();
+        assert_eq!(via_fab, via_ctx);
     }
 
     #[test]

@@ -81,6 +81,7 @@ impl DdpSim {
                 .map(|p| p.active_rails() >= 2)
                 .unwrap_or(false);
             ops.push((rep.total_us, planned_multirail));
+            self.mr.recycle(rep);
         }
         if self.bucket_pipelining {
             Ok(pipelined_total_us(&ops, BUCKET_OVERLAP))

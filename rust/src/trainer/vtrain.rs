@@ -171,7 +171,9 @@ impl VtrainSim {
                     chunk_elems: ((cb as f64 / elem_bytes).ceil() as usize).max(1),
                 },
             }));
-            total += self.mr.allreduce_scaled(&mut buf, elem_bytes)?.total_us;
+            let rep = self.mr.allreduce_scaled(&mut buf, elem_bytes)?;
+            total += rep.total_us;
+            self.mr.recycle(rep);
             self.pool.release(buf);
         }
         Ok(total * self.congestion_penalty())

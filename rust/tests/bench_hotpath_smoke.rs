@@ -32,7 +32,46 @@ fn hotpath_bench_quick_mode_emits_wellformed_json() {
         );
     }
     assert!(parsed.get("min_speedup").unwrap().as_f64().unwrap() > 0.0);
+
+    // serial-vs-parallel executor sweep (physical payloads; record, don't
+    // gate the ratio here — machine core counts vary)
+    let exec = parsed.get("exec").unwrap();
+    let exec_sweep = exec.get("sweep").unwrap().as_arr().unwrap();
+    assert_eq!(exec_sweep.len(), hotpath::exec_sizes(true).len());
+    for (row, &bytes) in exec_sweep.iter().zip(hotpath::exec_sizes(true)) {
+        assert_eq!(row.get("bytes").unwrap().as_f64(), Some(bytes as f64));
+        let serial = row.get("serial_ops_per_sec").unwrap().as_f64().unwrap();
+        let parallel = row.get("parallel_ops_per_sec").unwrap().as_f64().unwrap();
+        let speedup = row.get("speedup").unwrap().as_f64().unwrap();
+        assert!(serial > 0.0 && parallel > 0.0, "exec throughputs must be positive");
+        assert!(
+            (speedup - parallel / serial).abs() < 1e-9,
+            "exec speedup field inconsistent with the recorded throughputs"
+        );
+    }
+    assert!(exec.get("min_speedup").unwrap().as_f64().unwrap() > 0.0);
+
     let kernels = parsed.get("kernels").unwrap();
     assert!(kernels.get("add_into_gbps").unwrap().as_f64().unwrap() > 0.0);
     assert!(kernels.get("reduce_copy_gbps").unwrap().as_f64().unwrap() > 0.0);
+    // the 8/16/32-lane width sweep behind the shipped KERNEL_LANES
+    let lanes = kernels.get("lanes").unwrap().as_f64().unwrap() as usize;
+    let widths = kernels.get("width_sweep").unwrap().as_arr().unwrap();
+    assert_eq!(widths.len(), 3);
+    let mut seen = Vec::new();
+    for w in widths {
+        let l = w.get("lanes").unwrap().as_f64().unwrap() as usize;
+        assert!(w.get("add_into_gbps").unwrap().as_f64().unwrap() > 0.0);
+        assert!(w.get("reduce_copy_gbps").unwrap().as_f64().unwrap() > 0.0);
+        seen.push(l);
+    }
+    assert_eq!(seen, vec![8, 16, 32]);
+    assert!(seen.contains(&lanes), "shipped width must be in the sweep");
+
+    // bench_allreduce-style policy-sim wall-clock rides in the same
+    // trajectory (record, don't gate)
+    let sim = parsed.get("policy_sim").unwrap();
+    assert!(sim.get("wall_seconds").unwrap().as_f64().unwrap() > 0.0);
+    assert!(sim.get("modeled_ops").unwrap().as_f64().unwrap() > 0.0);
+    assert!(sim.get("ops_per_sec").unwrap().as_f64().unwrap() > 0.0);
 }

@@ -203,3 +203,48 @@ fn sharp_rail_failure_falls_back_to_tcp() {
     let expect: f32 = (0..4).map(|n| ((n + 9) % 5) as f32).sum();
     assert_eq!(buf.node(1)[9], expect);
 }
+
+#[test]
+fn parallel_executor_mid_op_failover_replans_and_recovers() {
+    use nezha::net::cpu_pool::ExecMode;
+    // rail 1 dies mid-op under the parallel executor: the failed rail's
+    // window (whose numerics never ran — timing precedes numerics) must
+    // migrate to the survivor after the join, the plan cache must flush
+    // (fresh selection epoch), and the payload must still reduce exactly
+    let mut c = cfg("tcp-tcp", Policy::Nezha);
+    c.exec = ExecMode::Parallel;
+    let mut mr = MultiRail::new(&c)
+        .unwrap()
+        .with_faults(FaultSchedule::none().with(1, 0.0, 1e12));
+    let (mut buf, expect) = big_buf();
+    let e_before = mr.plan_epoch();
+    let rep = mr.allreduce(&mut buf).unwrap();
+    assert_eq!(rep.failovers, 1);
+    check(&buf, &expect);
+    assert!(
+        mr.plan_epoch() > e_before,
+        "failover must start a fresh selection epoch"
+    );
+    assert_eq!(mr.fab.healthy_rails(), vec![0]);
+    assert!(mr.exceptions.all_within_budget());
+    // the whole payload was accounted to the survivor
+    let total: u64 = rep.per_rail.iter().map(|s| s.bytes).sum();
+    assert_eq!(total, rep.bytes);
+    // next op proceeds single-rail (serial fallback: one live rail)
+    let (mut buf2, expect2) = big_buf();
+    let rep2 = mr.allreduce(&mut buf2).unwrap();
+    assert_eq!(rep2.failovers, 0);
+    check(&buf2, &expect2);
+}
+
+#[test]
+fn parallel_executor_all_rails_down_is_an_error() {
+    use nezha::net::cpu_pool::ExecMode;
+    let mut c = cfg("tcp-tcp", Policy::Nezha);
+    c.exec = ExecMode::Parallel;
+    let mut mr = MultiRail::new(&c).unwrap().with_faults(
+        FaultSchedule::none().with(0, 0.0, 1e12).with(1, 0.0, 1e12),
+    );
+    let (mut buf, _) = big_buf();
+    assert!(mr.allreduce(&mut buf).is_err());
+}

@@ -516,3 +516,116 @@ fn prop_bucketizer_partition() {
         }
     }
 }
+
+/// Property: the parallel per-rail execution engine is BIT-IDENTICAL to
+/// serial execution — numerics AND modeled times — across plan types
+/// (planner auto / static-cost / forced flat dispatch), combos
+/// (ring-ring, ring-rdma, ring-sharp), clusters (flat and pods: flat /
+/// chunked / halving-doubling / hierarchical two-level schedules all get
+/// exercised), node counts, payload sizes, and with jitter ON (the
+/// per-rail RNG-stream guarantee, not just disjoint windows).
+#[test]
+fn prop_parallel_exec_bit_identical_to_serial() {
+    use nezha::config::{Config, PlannerMode, Policy};
+    use nezha::coordinator::multirail::MultiRail;
+    use nezha::net::cpu_pool::ExecMode;
+    let combos: [&[ProtoKind]; 3] = [
+        &[ProtoKind::Tcp, ProtoKind::Tcp],
+        &[ProtoKind::Tcp, ProtoKind::Glex],
+        &[ProtoKind::Tcp, ProtoKind::Sharp],
+    ];
+    let modes = [PlannerMode::Auto, PlannerMode::StaticCost, PlannerMode::Flat];
+    let mut rng = Pcg::new(5001);
+    for case in 0..16 {
+        let combo = combos[rng.below(3) as usize];
+        // pods clusters (16 nodes, groups of 4) enable two-level
+        // schedules; 8-node flat clusters enable halving-doubling
+        let (cluster, nodes) = if rng.f64() < 0.4 {
+            (ClusterSpec::pods(4), 16usize)
+        } else {
+            (ClusterSpec::local(), [4usize, 8][rng.below(2) as usize])
+        };
+        let len = 64 + rng.below(2000) as usize;
+        let mut cfg = Config {
+            cluster,
+            nodes,
+            combo: combo.to_vec(),
+            policy: Policy::Nezha,
+            deterministic: rng.f64() < 0.5, // half the cases keep jitter ON
+            seed: 1000 + case as u64,
+            exec: ExecMode::Serial,
+            ..Config::default()
+        };
+        cfg.planner = modes[rng.below(3) as usize];
+        let mut serial = MultiRail::new(&cfg).unwrap();
+        cfg.exec = ExecMode::Parallel;
+        let mut parallel = MultiRail::new(&cfg).unwrap();
+        // large modeled payloads keep the balancer hot → ≥2 live rails
+        let elem_bytes = (1u64 << (21 + rng.below(7))) as f64 / len as f64;
+        let salt = rng.below(13) as usize;
+        let fill = move |n: usize, i: usize| ((n * 7 + i + salt) % 13) as f32;
+        for op in 0..3 {
+            let mut sb = UnboundBuffer::from_fn(nodes, len, fill);
+            let mut pb = UnboundBuffer::from_fn(nodes, len, fill);
+            let rs = serial.allreduce_scaled(&mut sb, elem_bytes).unwrap();
+            let rp = parallel.allreduce_scaled(&mut pb, elem_bytes).unwrap();
+            assert_eq!(
+                rs.total_us, rp.total_us,
+                "case {case} op {op}: modeled time diverged"
+            );
+            assert_eq!(rs.per_rail.len(), rp.per_rail.len(), "case {case} op {op}");
+            for (a, b) in rs.per_rail.iter().zip(&rp.per_rail) {
+                assert_eq!(a.rail, b.rail, "case {case} op {op}");
+                assert_eq!(a.bytes, b.bytes, "case {case} op {op} rail {}", a.rail);
+                assert_eq!(a.time_us, b.time_us, "case {case} op {op} rail {}", a.rail);
+            }
+            for n in 0..nodes {
+                assert_eq!(
+                    sb.node(n),
+                    pb.node(n),
+                    "case {case} op {op} node {n}: numerics diverged"
+                );
+            }
+        }
+    }
+}
+
+/// Property: run-to-run determinism of the parallel executor — two
+/// identically-seeded coordinators produce identical modeled-time
+/// sequences under jitter, however the OS schedules the worker threads
+/// (per-rail streams are a pure function of (seed, rail, op_epoch)).
+#[test]
+fn prop_parallel_exec_deterministic_across_runs() {
+    use nezha::config::{Config, Policy};
+    use nezha::coordinator::multirail::MultiRail;
+    use nezha::net::cpu_pool::ExecMode;
+    let mut rng = Pcg::new(5002);
+    for case in 0..8 {
+        let seed = rng.next_u64();
+        let nodes = [4usize, 8][rng.below(2) as usize];
+        let len = 128 + rng.below(1000) as usize;
+        let cfg = Config {
+            nodes,
+            combo: vec![ProtoKind::Tcp, ProtoKind::Tcp],
+            policy: Policy::Nezha,
+            deterministic: false, // jitter ON: the sampled times must match
+            seed,
+            exec: ExecMode::Parallel,
+            ..Config::default()
+        };
+        let run = |cfg: &Config| -> Vec<f64> {
+            let mut mr = MultiRail::new(cfg).unwrap();
+            let elem_bytes = (8u64 << 20) as f64 / len as f64;
+            (0..5)
+                .map(|_| {
+                    let mut buf = UnboundBuffer::from_fn(nodes, len, |n, i| ((n + i) % 7) as f32);
+                    mr.allreduce_scaled(&mut buf, elem_bytes).unwrap().total_us
+                })
+                .collect()
+        };
+        let a = run(&cfg);
+        let b = run(&cfg);
+        assert_eq!(a, b, "case {case} (seed {seed}): runs diverged");
+        assert!(a.iter().all(|t| *t > 0.0), "case {case}");
+    }
+}
