@@ -12,6 +12,7 @@ use crate::net::protocol::ProtoKind;
 use crate::net::topology::{parse_combo, ClusterSpec};
 use crate::trainer::bucket::Bucketizer;
 use crate::util::bytes::fmt_bytes;
+use crate::util::json::Json;
 use crate::util::table::Table;
 use crate::Result;
 
@@ -221,6 +222,105 @@ pub fn ablate_straggler() -> Result<()> {
     Ok(())
 }
 
+/// The canonical multi-level topology sweep: racked-pods supercluster
+/// (32 nodes, racks of 4 inside pods of 16), dual TCP rails, `(bytes)`
+/// cases spanning latency- to bandwidth-bound payloads. Shared by the
+/// ablation table and the JSON artifact so the two cannot drift apart.
+pub const MULTILEVEL_SWEEP_NODES: usize = 32;
+pub const MULTILEVEL_SWEEP_CASES: [u64; 3] = [4 << 20, 64 << 20, 256 << 20];
+
+/// One multi-level-vs-two-level-vs-flat comparison at a payload size.
+#[derive(Debug, Clone)]
+pub struct MultiLevelRow {
+    pub bytes: u64,
+    /// Fixed flat-ring dispatch (`planner = flat`).
+    pub flat_us: f64,
+    /// Auto planner on the rack-only (one-level) view of the same
+    /// cluster — exactly the pre-PR two-level planner's search space.
+    pub two_us: f64,
+    pub two_plan: String,
+    /// Auto planner on the full rack < pod tree.
+    pub multi_us: f64,
+    pub multi_plan: String,
+}
+
+/// Run the canonical multi-level sweep (see [`MULTILEVEL_SWEEP_CASES`]).
+pub fn multilevel_sweep() -> Result<Vec<MultiLevelRow>> {
+    let full = ClusterSpec::racked_pods(4, 16);
+    // the two-level baseline sees only the rack level — the exact search
+    // space the planner had before multi-level cuts existed
+    let mut rack_only = full.clone();
+    rack_only.topo.levels.truncate(1);
+    let nodes = MULTILEVEL_SWEEP_NODES;
+    let combo = "tcp-tcp";
+    let run = crate::bench::harness::planner_mode_latency;
+    let mut rows = Vec::new();
+    for &bytes in &MULTILEVEL_SWEEP_CASES {
+        let (flat_us, _) = run(&full, combo, nodes, PlannerMode::Flat, bytes, 25, 5)?;
+        let (two_us, two_plan) = run(&rack_only, combo, nodes, PlannerMode::Auto, bytes, 25, 5)?;
+        let (multi_us, multi_plan) = run(&full, combo, nodes, PlannerMode::Auto, bytes, 25, 5)?;
+        rows.push(MultiLevelRow { bytes, flat_us, two_us, two_plan, multi_us, multi_plan });
+    }
+    Ok(rows)
+}
+
+/// The multi-level-topology JSON document for a sweep's rows (bench
+/// result format; uploaded as a CI artifact).
+pub fn multilevel_sweep_json(rows: &[MultiLevelRow]) -> Json {
+    let results: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("bytes", Json::from(r.bytes as f64)),
+                ("size", Json::from(fmt_bytes(r.bytes))),
+                ("flat_us", Json::from(r.flat_us)),
+                ("two_level_us", Json::from(r.two_us)),
+                ("two_level_plan", Json::from(r.two_plan.clone())),
+                ("multi_level_us", Json::from(r.multi_us)),
+                ("multi_level_plan", Json::from(r.multi_plan.clone())),
+                ("speedup_vs_flat", Json::from(r.flat_us / r.multi_us)),
+                ("speedup_vs_two_level", Json::from(r.two_us / r.multi_us)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::from("multilevel_topology")),
+        ("cluster", Json::from("racked-pods")),
+        ("combo", Json::from("tcp-tcp")),
+        ("nodes", Json::from(MULTILEVEL_SWEEP_NODES as f64)),
+        ("rack", Json::from(4.0)),
+        ("pod", Json::from(16.0)),
+        ("results", Json::Arr(results)),
+    ])
+}
+
+/// Multi-level topology ablation: the N-level planner against the
+/// two-level (rack-cut-only) planner and the fixed flat ring on the
+/// racked-pods supercluster. The JSON document is the last printed line
+/// (CI captures it as the `multilevel_ablation.json` artifact).
+pub fn ablate_multilevel() -> Result<()> {
+    println!("\n=== Ablation: multi-level vs two-level vs flat (racked-pods 32n, racks of 4, pods of 16, TCP-TCP) ===");
+    let rows = multilevel_sweep()?;
+    let mut t = Table::new(&[
+        "size", "flat (us)", "two-level (us)", "multi-level (us)", "vs flat", "vs two-level", "multi plan",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            fmt_bytes(r.bytes),
+            format!("{:.0}", r.flat_us),
+            format!("{:.0}", r.two_us),
+            format!("{:.0}", r.multi_us),
+            format!("{:+.0}%", (r.flat_us / r.multi_us - 1.0) * 100.0),
+            format!("{:+.1}%", (r.two_us / r.multi_us - 1.0) * 100.0),
+            r.multi_plan.clone(),
+        ]);
+    }
+    t.print();
+    println!("(each extra level moves volume onto a faster local fabric and cuts rail rounds)");
+    println!("{}", multilevel_sweep_json(&rows).to_string());
+    Ok(())
+}
+
 /// Run all ablations.
 pub fn run_all() -> Result<()> {
     ablate_tau()?;
@@ -228,7 +328,8 @@ pub fn run_all() -> Result<()> {
     ablate_timer_window()?;
     ablate_alloc()?;
     ablate_planner()?;
-    ablate_straggler()
+    ablate_straggler()?;
+    ablate_multilevel()
 }
 
 #[cfg(test)]

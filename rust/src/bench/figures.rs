@@ -443,6 +443,9 @@ pub fn run(id: &str) -> Result<()> {
         "fig19" => super::figures_app::fig19(),
         "headline" => super::figures_app::headline(),
         "ablate" => super::ablation::run_all(),
+        "ablate-multilevel" | "ablate_multilevel" | "multilevel" => {
+            super::ablation::ablate_multilevel()
+        }
         "plan-quality" | "plan_quality" | "planq" => super::harness::plan_quality_fig(),
         "all" => {
             for id in [
@@ -455,7 +458,8 @@ pub fn run(id: &str) -> Result<()> {
             Ok(())
         }
         other => Err(crate::util::error::Error::Config(format!(
-            "unknown figure `{other}` (fig2..fig19, table1, headline, plan-quality, all)"
+            "unknown figure `{other}` (fig2..fig19, table1, headline, plan-quality, \
+             ablate-multilevel, all)"
         ))),
     }
 }

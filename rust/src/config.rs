@@ -9,7 +9,7 @@ use std::collections::BTreeMap;
 
 use crate::net::cpu_pool::{AllocPolicy, ExecMode};
 use crate::net::protocol::ProtoKind;
-use crate::net::topology::{parse_combo, ClusterSpec};
+use crate::net::topology::{parse_combo, parse_topology, ClusterSpec};
 use crate::util::cli::Args;
 use crate::util::error::Error;
 use crate::Result;
@@ -172,9 +172,14 @@ impl Config {
                         "cloud" => ClusterSpec::cloud(),
                         "supercomputer" | "super" => ClusterSpec::supercomputer(),
                         "pods" => ClusterSpec::pods(4),
+                        "racked-pods" | "racked_pods" => ClusterSpec::racked_pods(4, 16),
                         other => return Err(Error::Config(format!("unknown cluster `{other}`"))),
                     }
                 }
+                // hierarchical grouping override, applied after `cluster`
+                // (BTreeMap order): e.g. `topology = rack:4<pod:16`,
+                // `topology = group:2+6+4+4`, `topology = flat`
+                "topology" => self.cluster.topo = parse_topology(v)?,
                 "nodes" => {
                     self.nodes = v
                         .parse()
@@ -231,7 +236,8 @@ impl Config {
         }
         let mut kv = BTreeMap::new();
         for key in [
-            "cluster", "nodes", "combo", "network", "policy", "planner", "exec", "alloc", "tau", "eta",
+            "cluster", "topology", "nodes", "combo", "network", "policy", "planner", "exec",
+            "alloc", "tau", "eta",
             "timer_window", "detect_timeout_us", "migrate_cost_us", "replan_error",
             "seed", "deterministic", "artifacts_dir",
         ] {
@@ -288,11 +294,36 @@ mod tests {
         kv.insert("cluster".into(), "pods".into());
         c.apply(&kv).unwrap();
         assert_eq!(c.planner, PlannerMode::Flat);
-        assert!(c.cluster.intra.is_some());
+        assert!(c.cluster.intra().is_some());
         assert!(PlannerMode::parse("bogus").is_err());
         assert_eq!(PlannerMode::parse("on").unwrap(), PlannerMode::Auto);
         assert_eq!(PlannerMode::parse("static-cost").unwrap(), PlannerMode::StaticCost);
         assert_eq!(PlannerMode::StaticCost.name(), "static-cost");
+    }
+
+    #[test]
+    fn topology_key_parses() {
+        use crate::net::topology::GroupShape;
+        let mut c = Config::default();
+        let mut kv = BTreeMap::new();
+        kv.insert("cluster".into(), "racked-pods".into());
+        kv.insert("nodes".into(), "32".into());
+        c.apply(&kv).unwrap();
+        assert_eq!(c.cluster.name, "racked-pods");
+        assert_eq!(c.cluster.topo.depth(), 2);
+        // an explicit topology= overrides the cluster's default tree
+        kv.insert("topology".into(), "group:2+6+4+4".into());
+        c.apply(&kv).unwrap();
+        assert_eq!(c.cluster.topo.depth(), 1);
+        assert_eq!(
+            c.cluster.topo.levels[0].shape,
+            GroupShape::Explicit(vec![2, 6, 4, 4])
+        );
+        kv.insert("topology".into(), "flat".into());
+        c.apply(&kv).unwrap();
+        assert!(c.cluster.topo.is_flat());
+        kv.insert("topology".into(), "rack:bogus".into());
+        assert!(c.apply(&kv).is_err());
     }
 
     #[test]

@@ -35,11 +35,21 @@ pub const PAPER_RECOVERY_BUDGET_US: f64 = 200_000.0;
 pub struct ExceptionHandler {
     cfg: ControlConfig,
     pub events: Vec<FailoverEvent>,
+    /// Rails the topology's per-group affinity masks allow (all-ones
+    /// without affinity constraints): failover takeover targets must
+    /// respect them — migrating a window to a rail some group excludes
+    /// would violate the affinity the planner honoured.
+    rail_mask: u64,
 }
 
 impl ExceptionHandler {
     pub fn new(cfg: ControlConfig) -> ExceptionHandler {
-        ExceptionHandler { cfg, events: Vec::new() }
+        ExceptionHandler { cfg, events: Vec::new(), rail_mask: u64::MAX }
+    }
+
+    /// Restrict takeover targets to `mask` (0 = unconstrained).
+    pub fn set_rail_mask(&mut self, mask: u64) {
+        self.rail_mask = if mask == 0 { u64::MAX } else { mask };
     }
 
     /// Total detection + migration budget charged per failover (us).
@@ -69,8 +79,10 @@ impl ExceptionHandler {
         allocated_bytes: &[(usize, u64)],
     ) -> Option<FailoverEvent> {
         fab.deregister(failed);
+        let mask = self.rail_mask;
         let takeover = fab
             .healthy_rails_iter()
+            .filter(|&r| r >= 64 || mask & (1u64 << r) != 0)
             .max_by_key(|&r| {
                 allocated_bytes
                     .iter()
@@ -143,6 +155,26 @@ mod tests {
         assert_eq!(ev.takeover_rail, 1);
         assert_eq!(fab.healthy_rails(), vec![1]);
         assert_eq!(h.failover_count(), 1);
+    }
+
+    #[test]
+    fn takeover_respects_affinity_rail_mask() {
+        // three TCP rails; the mask excludes rail 1, so even though rail 1
+        // holds the biggest allocation the takeover must go to rail 2
+        let rails = ClusterSpec::local()
+            .build_rails(&[ProtoKind::Tcp, ProtoKind::Tcp, ProtoKind::Tcp])
+            .unwrap();
+        let mut fab = Fabric::new(4, rails, CpuPool::default(), 5).deterministic();
+        let mut h = ExceptionHandler::new(ControlConfig::default());
+        h.set_rail_mask(0b101);
+        let ev = h
+            .handle_failure(&mut fab, 0, Window::new(0, 100), &[(0, 600), (1, 500), (2, 400)])
+            .unwrap();
+        assert_eq!(ev.takeover_rail, 2, "mask must exclude rail 1");
+        // rail 2 failing next leaves only the masked-out rail 1: no target
+        assert!(h
+            .handle_failure(&mut fab, 2, Window::new(0, 10), &[(1, 1)])
+            .is_none());
     }
 
     #[test]

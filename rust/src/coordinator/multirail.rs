@@ -209,6 +209,12 @@ pub struct MultiRail {
     plan_cache: HashMap<(u32, u64), Vec<(usize, Schedule)>>,
     /// The `replan_error` config threshold.
     replan_error: f64,
+    /// Rails allowed by every topology group's affinity mask (all-ones
+    /// without affinity constraints). Rails outside it never carry
+    /// collective payload and are never failover takeover targets: every
+    /// rail-borne schedule spans all nodes, so a rail one group excludes
+    /// is excluded for the whole op.
+    rail_allow_mask: u64,
     /// Reusable per-op scratch (healthy rails, partitioner shares, plan
     /// windows, assignments, per-rail allocations, collective
     /// segment/chunk/aggregation lists, per-rail parallel scratch, pooled
@@ -268,6 +274,19 @@ impl MultiRail {
         let selector = NicSelector::new(cfg.cluster.clone());
         let (rails, contexts) = selector.select(&cfg.combo, cfg.nodes)?;
         let n_rails = rails.len();
+        // bind the topology tree to the concrete cluster: non-dividing
+        // group sizes, broken nesting and rail-emptying affinity masks are
+        // construction errors, not silent flat fallbacks
+        cfg.cluster.topo.validate(cfg.nodes, n_rails)?;
+        // all-ones (not rails_mask-wide) when unconstrained, so the per-op
+        // filter's fast path actually skips on affinity-free clusters
+        let rail_allow_mask = if cfg.cluster.topo.has_affinity() {
+            cfg.cluster.topo.allowed_rail_mask(n_rails)
+        } else {
+            u64::MAX
+        };
+        let mut exceptions = ExceptionHandler::new(cfg.control.clone());
+        exceptions.set_rail_mask(rail_allow_mask);
         let cpu = CpuPool::new(cfg.cluster.node.cores, cfg.alloc);
         let mut fab = Fabric::new(cfg.nodes, rails, cpu, cfg.seed);
         if cfg.deterministic {
@@ -295,7 +314,7 @@ impl MultiRail {
             contexts,
             rendezvous,
             timer: Timer::new(cfg.control.timer_window),
-            exceptions: ExceptionHandler::new(cfg.control.clone()),
+            exceptions,
             partitioner,
             reducer: Box::new(RustReducer),
             planner,
@@ -305,9 +324,20 @@ impl MultiRail {
             quality: PlanQualityReport::default(),
             plan_cache: HashMap::new(),
             replan_error: cfg.control.replan_error,
+            rail_allow_mask,
             scratch: ExecScratch::default(),
             ops_done: 0,
         })
+    }
+
+    /// Healthy rails that every topology group's affinity mask admits —
+    /// the rail set partitioning and planning operate over.
+    fn healthy_allowed_into(&self, out: &mut Vec<usize>) {
+        self.fab.healthy_rails_into(out);
+        if self.rail_allow_mask != u64::MAX {
+            let mask = self.rail_allow_mask;
+            out.retain(|&r| r >= 64 || mask & (1u64 << r) != 0);
+        }
     }
 
     pub fn with_faults(mut self, faults: FaultSchedule) -> Self {
@@ -385,7 +415,7 @@ impl MultiRail {
     /// through feedback).
     pub fn plan_for(&mut self, bytes: u64) -> Option<CollectivePlan> {
         let mut healthy = std::mem::take(&mut self.scratch.healthy);
-        self.fab.healthy_rails_into(&mut healthy);
+        self.healthy_allowed_into(&mut healthy);
         if healthy.is_empty() {
             self.scratch.healthy = healthy;
             return None;
@@ -477,7 +507,7 @@ impl MultiRail {
         // reusable healthy-rail scratch: taken for the op, restored below
         // (error paths drop it; the next op simply re-allocates capacity)
         let mut healthy = std::mem::take(&mut self.scratch.healthy);
-        self.fab.healthy_rails_into(&mut healthy);
+        self.healthy_allowed_into(&mut healthy);
         if healthy.is_empty() {
             self.scratch.healthy = healthy;
             return Err(Error::AllRailsDown(0));
@@ -587,7 +617,7 @@ impl MultiRail {
                 w,
                 self.reducer.as_mut(),
                 elem_bytes,
-                self.planner.intra.as_ref(),
+                &self.planner.topo,
                 scratch,
             ),
         }
@@ -874,7 +904,7 @@ impl MultiRail {
             while scratch.rail_ops.len() < live_a.len() {
                 scratch.rail_ops.push(OpScratch::default());
             }
-            let intra = planner.intra.as_ref();
+            let topo = &planner.topo;
             let views = buf.rail_views(&live_w);
             let mut ctxs = fab.rail_ctxs(&live_r);
             // rail_ctxs returns ascending rail order; re-order to match
@@ -913,7 +943,7 @@ impl MultiRail {
                         w,
                         red.as_mut(),
                         elem_bytes,
-                        intra,
+                        topo,
                         scr,
                     ),
                 });

@@ -25,7 +25,7 @@ use std::collections::HashMap;
 use crate::coordinator::control::size_bucket;
 use crate::coordinator::planner::plan::Schedule;
 use crate::net::simnet::Fabric;
-use crate::net::topology::IntraLink;
+use crate::net::topology::{IntraLink, TopologyTree};
 
 /// Deterministic point-to-point message time on `rail` (us) at the current
 /// core allocation and contention — the α + S/β kernel every schedule cost
@@ -114,6 +114,65 @@ pub fn two_level_us(
     2.0 * intra_phase_us(intra, bytes) + inter
 }
 
+/// One lockstep phase (reduce-scatter or allgather) at `level` of a
+/// multi-level topology: a ring among each group's subgroups on that
+/// level's local fabric. Same algebra as [`intra_phase_us`] applied per
+/// level — `(m − 1) · (setup + (S/C)/bw)` with `m` the largest subgroup
+/// count per group and `C` the largest group (non-uniform levels are
+/// lockstep, so the biggest group is the critical path). Zero for
+/// degenerate levels, so a one-level uniform tree prices bit-identically
+/// to the legacy two-level intra phase.
+pub fn tree_phase_us(tree: &TopologyTree, level: usize, nodes: usize, bytes: f64) -> f64 {
+    let lv = &tree.levels[level];
+    let m = tree.max_subgroups(level, nodes) as f64;
+    if m <= 1.0 {
+        return 0.0;
+    }
+    let c = tree.max_group(level) as f64;
+    (m - 1.0) * (lv.setup_us + (bytes / c) / lv.bw_mbps)
+}
+
+/// N-level hierarchical schedule on one rail, cutting the topology tree
+/// after its innermost `depth` levels: one reduce-scatter + allgather
+/// phase pair per engaged level (local fabrics), with a chunk-pipelined
+/// `2(G−1) + chunks − 1`-round inter-group ring across the `G` outermost
+/// engaged groups on the rail in between.
+///
+/// The win over the two-level cut: each extra level moves another slice
+/// of the volume onto a fabric faster than the rail AND shrinks the
+/// rail's round count (`G` drops from `n/g_rack` to `n/g_pod`). Cut
+/// depth 0 is bit-for-bit the (chunked) flat ring; depth 1 on a uniform
+/// level is bit-for-bit [`two_level_us`]. Caller validates the cut
+/// (`TopologyTree::valid_cut_depth`); invalid cuts fall back to the flat
+/// ring exactly as `run_plan` executes them.
+pub fn multi_level_us(
+    fab: &Fabric,
+    rail: usize,
+    bytes: f64,
+    n: usize,
+    tree: &TopologyTree,
+    depth: usize,
+    chunks: usize,
+) -> f64 {
+    if depth == 0 || tree.is_flat() {
+        return ring_chunked_us(fab, rail, bytes, n, chunks);
+    }
+    let depth = depth.min(tree.depth());
+    debug_assert!(tree.valid_cut_depth(depth, n), "caller must validate the cut");
+    let groups = tree.group_count(depth - 1, n);
+    if groups < 2 {
+        return ring_chunked_us(fab, rail, bytes, n, chunks);
+    }
+    let mut total = 0.0;
+    for lv in 0..depth {
+        total += 2.0 * tree_phase_us(tree, lv, n, bytes);
+    }
+    let chunks = chunks.max(1);
+    let rounds = 2 * (groups - 1) + chunks - 1;
+    let volume = 2.0 * (groups - 1) as f64 * (bytes / n as f64);
+    total + rounds as f64 * msg_us(fab, rail, volume / rounds as f64)
+}
+
 /// In-network tree aggregation (SHARP): the fabric's analytic estimate.
 pub fn tree_us(fab: &Fabric, rail: usize, bytes: f64) -> f64 {
     fab.estimate_allreduce_us(rail, bytes)
@@ -141,6 +200,15 @@ pub fn schedule_rounds(s: Schedule, n: usize) -> usize {
             let g = group.max(1);
             if g > 1 && n % g == 0 && n / g >= 2 {
                 2 * (n / g - 1) + chunks.max(1) - 1
+            } else {
+                // invalid grouping executes as the seed's flat ring
+                2 * (n - 1)
+            }
+        }
+        Schedule::MultiLevel { groups, chunks, .. } => {
+            // inner-level phases ride local fabrics, not the rail
+            if groups >= 2 && groups <= n {
+                2 * (groups - 1) + chunks.max(1) - 1
             } else {
                 // invalid grouping executes as the seed's flat ring
                 2 * (n - 1)
@@ -323,6 +391,54 @@ mod tests {
     }
 
     #[test]
+    fn multi_level_depth1_is_exactly_two_level() {
+        use crate::net::topology::ClusterSpec;
+        let f = fab(&[ProtoKind::Tcp], 16);
+        let tree = &ClusterSpec::pods(4).topo;
+        let link = tree.level_link(0).unwrap();
+        for s in [64.0 * 1024.0, 8.0 * MB, 256.0 * MB] {
+            for chunks in [1usize, 4, 16] {
+                assert_eq!(
+                    multi_level_us(&f, 0, s, 16, tree, 1, chunks),
+                    two_level_us(&f, 0, s, 16, &link, chunks),
+                    "S={s} chunks={chunks}"
+                );
+            }
+            // depth 0 is the (chunked) flat ring, bit-for-bit
+            assert_eq!(multi_level_us(&f, 0, s, 16, tree, 0, 1), flat_ring_us(&f, 0, s, 16));
+        }
+    }
+
+    #[test]
+    fn deeper_cut_beats_two_level_on_racked_pods() {
+        use crate::net::topology::ClusterSpec;
+        let f = fab(&[ProtoKind::Tcp], 32);
+        let tree = &ClusterSpec::racked_pods(4, 16).topo;
+        let s = 64.0 * MB;
+        let flat = flat_ring_us(&f, 0, s, 32);
+        let d1 = multi_level_us(&f, 0, s, 32, tree, 1, 1);
+        let d2 = multi_level_us(&f, 0, s, 32, tree, 2, 1);
+        assert!(d1 < flat, "rack cut {d1} vs flat {flat}");
+        assert!(d2 < d1, "pod cut {d2} vs rack cut {d1}");
+    }
+
+    #[test]
+    fn non_uniform_phase_priced_by_largest_group() {
+        use crate::net::topology::{TopoLevel, TopologyTree};
+        let uneven = TopologyTree {
+            levels: vec![TopoLevel::explicit("group", vec![2, 6, 4, 4], 5000.0, 15.0)],
+        };
+        let even = TopologyTree {
+            levels: vec![TopoLevel::uniform("group", 6, 5000.0, 15.0)],
+        };
+        let s = 8.0 * MB;
+        // lockstep: the 6-node group dominates, so the phase prices as a
+        // uniform 6-node group's would
+        assert_eq!(tree_phase_us(&uneven, 0, 16, s), tree_phase_us(&even, 0, 36, s));
+        assert!(tree_phase_us(&uneven, 0, 16, s) > 0.0);
+    }
+
+    #[test]
     fn tree_cost_is_fabric_estimate() {
         let f = fab(&[ProtoKind::Tcp, ProtoKind::Sharp], 4);
         assert_eq!(tree_us(&f, 1, MB), f.estimate_allreduce_us(1, MB));
@@ -341,6 +457,24 @@ mod tests {
         // degenerate grouping normalizes to the (chunked) flat ring
         assert_eq!(schedule_rounds(Schedule::TwoLevel { group: 1, chunks: 1 }, 8), 14);
         assert_eq!(schedule_rounds(Schedule::Tree, 8), 1);
+        // multi-level counts only its inter-group rail rounds
+        assert_eq!(
+            schedule_rounds(Schedule::MultiLevel { depth: 2, groups: 2, chunks: 1 }, 32),
+            2
+        );
+        assert_eq!(
+            schedule_rounds(Schedule::MultiLevel { depth: 2, groups: 2, chunks: 8 }, 32),
+            9
+        );
+        // degenerate/invalid groupings execute as the flat ring
+        assert_eq!(
+            schedule_rounds(Schedule::MultiLevel { depth: 2, groups: 1, chunks: 1 }, 8),
+            14
+        );
+        assert_eq!(
+            schedule_rounds(Schedule::MultiLevel { depth: 1, groups: 64, chunks: 1 }, 8),
+            14
+        );
     }
 
     #[test]

@@ -11,9 +11,9 @@ use crate::coordinator::buffer::{NodeWindows, UnboundBuffer, Window};
 use crate::coordinator::collective::reducer::Reducer;
 use crate::coordinator::collective::ring::ring_numerics_segs;
 use crate::coordinator::collective::{OpOutcome, OpScratch};
-use crate::coordinator::planner::cost;
+use crate::coordinator::planner::{cost, pipeline};
 use crate::net::simnet::{Fabric, RailDown, RailTimer};
-use crate::net::topology::IntraLink;
+use crate::net::topology::{IntraLink, TopologyTree};
 
 /// Recursive halving/doubling allreduce: `log2(N)` reduce-scatter rounds
 /// with geometrically shrinking exchanges plus the mirrored allgather.
@@ -157,6 +157,110 @@ pub fn two_level_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
     })
 }
 
+/// N-level hierarchical allreduce over a validated topology tree cut at
+/// its innermost `depth` levels: per-level reduce-scatter phases ride the
+/// local fabrics (deterministic, cannot fail), the inter-group ring rides
+/// the rail (fallible, chunk-pipelined, timed before numerics — §4.4
+/// atomicity), then the mirrored allgather phases. Degenerates bit-exactly
+/// to [`two_level_allreduce`] at depth 1 on a uniform level.
+#[allow(clippy::too_many_arguments)]
+pub fn multi_level_allreduce(
+    fab: &mut Fabric,
+    rail: usize,
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    tree: &TopologyTree,
+    depth: usize,
+    chunks: usize,
+) -> Result<OpOutcome, RailDown> {
+    let mut scratch = OpScratch::default();
+    multi_level_allreduce_with(fab, rail, buf, w, red, elem_bytes, tree, depth, chunks, &mut scratch)
+}
+
+/// Scratch-reuse form of [`multi_level_allreduce`].
+#[allow(clippy::too_many_arguments)]
+pub fn multi_level_allreduce_with(
+    fab: &mut Fabric,
+    rail: usize,
+    buf: &mut UnboundBuffer,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    tree: &TopologyTree,
+    depth: usize,
+    chunks: usize,
+    scratch: &mut OpScratch,
+) -> Result<OpOutcome, RailDown> {
+    multi_level_allreduce_on(
+        &mut fab.rail_ctx(rail),
+        buf,
+        w,
+        red,
+        elem_bytes,
+        tree,
+        depth,
+        chunks,
+        scratch,
+    )
+}
+
+/// The generic core of the N-level schedule (timing through any
+/// [`RailTimer`], numerics over any [`NodeWindows`] buffer). Numerics run
+/// the seed's `ring_numerics` over the whole rail window, as every other
+/// schedule family does, so results stay bit-identical across plan types.
+#[allow(clippy::too_many_arguments)]
+pub fn multi_level_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
+    t: &mut T,
+    buf: &mut V,
+    w: Window,
+    red: &mut dyn Reducer,
+    elem_bytes: f64,
+    tree: &TopologyTree,
+    depth: usize,
+    chunks: usize,
+    scratch: &mut OpScratch,
+) -> Result<OpOutcome, RailDown> {
+    let n = t.nodes();
+    if w.is_empty() {
+        return Ok(OpOutcome::default());
+    }
+    // mirror `cost::multi_level_us`: a zero-depth cut or a flat tree is
+    // the (chunked) ring, never a panic
+    if depth == 0 || tree.is_flat() {
+        return pipeline::pipelined_ring_allreduce_on(t, buf, w, red, elem_bytes, chunks, scratch);
+    }
+    debug_assert!(tree.valid_cut_depth(depth, n), "caller must validate the cut");
+    let depth = depth.min(tree.depth());
+    let bytes = w.len as f64 * elem_bytes;
+    // per-level phases ride the local fabrics: deterministic, cannot fail
+    let mut total = 0.0;
+    let mut steps = 0usize;
+    for lv in 0..depth {
+        total += 2.0 * cost::tree_phase_us(tree, lv, n, bytes);
+        steps += 2 * tree.max_subgroups(lv, n).saturating_sub(1);
+    }
+    // inter-group rounds on the rail — fallible, timed before numerics,
+    // same volume-preserving chunk pipelining as the two-level schedule
+    let groups = tree.group_count(depth - 1, n);
+    let mut moved = 0.0f64;
+    if groups >= 2 {
+        let chunks = chunks.max(1);
+        let rounds = 2 * (groups - 1) + (chunks - 1);
+        let volume = 2.0 * (groups - 1) as f64 * (bytes / n as f64);
+        let msg = volume / rounds as f64;
+        for _ in 0..rounds {
+            total += t.ring_step(msg)?;
+        }
+        moved = msg * rounds as f64;
+        steps += rounds;
+    }
+    w.split_uniform_into(n, &mut scratch.segs);
+    ring_numerics_segs(buf, &scratch.segs, red);
+    Ok(OpOutcome { time_us: total, bytes_moved: moved as u64, steps })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -230,6 +334,96 @@ mod tests {
         for n in 0..8 {
             assert_eq!(a.node(n), b.node(n), "node {n} diverged");
         }
+    }
+
+    #[test]
+    fn multi_level_depth1_bitwise_matches_two_level() {
+        use crate::net::topology::ClusterSpec;
+        let tree = ClusterSpec::pods(4).topo.clone();
+        let l = tree.level_link(0).unwrap();
+        for chunks in [1usize, 4] {
+            let mut fab_a = fabric(16, &[ProtoKind::Tcp]);
+            let mut fab_b = fabric(16, &[ProtoKind::Tcp]);
+            let (mut a, expect) = make_buf(16, 513);
+            let (mut b, _) = make_buf(16, 513);
+            let w = a.full_window();
+            let scale = 8.0 * MB / 513.0;
+            let oa =
+                multi_level_allreduce(&mut fab_a, 0, &mut a, w, &mut RustReducer, scale, &tree, 1, chunks)
+                    .unwrap();
+            let ob =
+                two_level_allreduce(&mut fab_b, 0, &mut b, w, &mut RustReducer, scale, &l, chunks)
+                    .unwrap();
+            assert_eq!(oa.time_us, ob.time_us, "chunks {chunks}: modeled time diverged");
+            assert_eq!(oa.bytes_moved, ob.bytes_moved, "chunks {chunks}");
+            assert_eq!(oa.steps, ob.steps, "chunks {chunks}");
+            for n in 0..16 {
+                assert_eq!(a.node(n), b.node(n), "chunks {chunks}: node {n} diverged");
+            }
+            assert_reduced(&a, w, &expect);
+        }
+    }
+
+    #[test]
+    fn multi_level_numerics_correct_and_beats_shallower_cuts_at_32() {
+        use crate::net::topology::ClusterSpec;
+        let tree = ClusterSpec::racked_pods(4, 16).topo.clone();
+        let scale = 64.0 * MB / 1024.0;
+        let run = |depth: usize| {
+            let mut fab = fabric(32, &[ProtoKind::Tcp]);
+            let (mut buf, expect) = make_buf(32, 1024);
+            let w = buf.full_window();
+            let out = multi_level_allreduce(
+                &mut fab,
+                0,
+                &mut buf,
+                w,
+                &mut RustReducer,
+                scale,
+                &tree,
+                depth,
+                1,
+            )
+            .unwrap();
+            assert_reduced(&buf, w, &expect);
+            out.time_us
+        };
+        let t1 = run(1);
+        let t2 = run(2);
+        let t_flat = {
+            let mut fab = fabric(32, &[ProtoKind::Tcp]);
+            let (mut buf, _) = make_buf(32, 1024);
+            let w = buf.full_window();
+            ring_allreduce(&mut fab, 0, &mut buf, w, &mut RustReducer, scale)
+                .unwrap()
+                .time_us
+        };
+        assert!(t1 < t_flat, "rack cut {t1} vs flat {t_flat}");
+        assert!(t2 < t1, "pod cut {t2} vs rack cut {t1}");
+    }
+
+    #[test]
+    fn multi_level_fault_aborts_before_numerics() {
+        use crate::net::topology::ClusterSpec;
+        let tree = ClusterSpec::racked_pods(4, 16).topo.clone();
+        let mut fab = fabric(32, &[ProtoKind::Tcp])
+            .with_faults(FaultSchedule::none().with(0, 0.0, 1e9));
+        let (mut buf, _) = make_buf(32, 64);
+        let w = buf.full_window();
+        let orig = buf.node(0).to_vec();
+        assert!(multi_level_allreduce(
+            &mut fab,
+            0,
+            &mut buf,
+            w,
+            &mut RustReducer,
+            4.0,
+            &tree,
+            2,
+            2
+        )
+        .is_err());
+        assert_eq!(buf.node(0), &orig[..], "payload mutated despite abort");
     }
 
     #[test]

@@ -2,14 +2,18 @@
 //!
 //! The Load Balancer (paper §4.3) decides *how much* of each allreduce
 //! rides each rail; this subsystem decides *how* each rail should move its
-//! slice. Given the fabric state, the cluster's (optional) intra-group
-//! interconnect and the balancer's shares, [`Planner::plan`] emits an
-//! executable [`CollectivePlan`] choosing per rail among:
+//! slice. Given the fabric state, the cluster's hierarchical
+//! [`TopologyTree`] (node < rack < pod levels, possibly non-uniform,
+//! possibly rail-affine) and the balancer's shares, [`Planner::plan`]
+//! emits an executable [`CollectivePlan`] choosing per rail among:
 //!
 //! * flat ring (the seed's fixed dispatch),
 //! * chunk-pipelined ring ([`pipeline`]),
 //! * recursive halving/doubling ([`hierarchical`]),
 //! * hierarchical two-level intra/inter-group schedule ([`hierarchical`]),
+//! * N-level multi-level schedule — one reduce-scatter/allgather phase
+//!   pair per engaged topology level around the inter-group rail ring,
+//!   with the cut depth selected per payload size class ([`hierarchical`]),
 //! * in-network tree (SHARP rails).
 //!
 //! Selection is by the deterministic α-β cost model ([`cost`]), calibrated
@@ -40,7 +44,7 @@ use crate::coordinator::control::load_balancer::sync_overhead_us;
 use crate::coordinator::control::Timer;
 use crate::net::protocol::CollectiveKind;
 use crate::net::simnet::{Fabric, RailDown, RailTimer};
-use crate::net::topology::{ClusterSpec, IntraLink};
+use crate::net::topology::{ClusterSpec, IntraLink, TopologyTree};
 
 /// Pipeline depths the planner evaluates for chunked schedules.
 pub const CHUNK_CANDIDATES: [usize; 4] = [2, 4, 8, 16];
@@ -49,9 +53,12 @@ pub const CHUNK_CANDIDATES: [usize; 4] = [2, 4, 8, 16];
 /// corrected cost state fed back from completed ops.
 #[derive(Debug, Clone)]
 pub struct Planner {
-    /// Intra-group interconnect, when the cluster declares one. `None`
-    /// (all the paper's flat testbeds) disables two-level candidates.
-    pub intra: Option<IntraLink>,
+    /// The cluster's hierarchical topology. No levels (all the paper's
+    /// flat testbeds) disables hierarchical candidates entirely; a single
+    /// uniform level reproduces the legacy two-level candidate set
+    /// bit-for-bit; deeper or non-uniform trees add multi-level
+    /// candidates, one family per valid cut depth.
+    pub topo: TopologyTree,
     /// Timer-fed measurement corrections over the α-β model.
     pub corrections: CorrectedCost,
     /// `false` under `planner = static-cost`: schedules stick to the
@@ -68,9 +75,15 @@ impl Default for Planner {
 }
 
 impl Planner {
+    /// Legacy constructor: an optional single uniform grouping level.
     pub fn new(intra: Option<IntraLink>) -> Planner {
+        Planner::with_tree(TopologyTree::from_intra(intra))
+    }
+
+    /// The general constructor over a full multi-level topology tree.
+    pub fn with_tree(topo: TopologyTree) -> Planner {
         Planner {
-            intra,
+            topo,
             corrections: CorrectedCost::new(),
             use_corrections: true,
             epoch: 0,
@@ -78,7 +91,7 @@ impl Planner {
     }
 
     pub fn from_cluster(cluster: &ClusterSpec) -> Planner {
-        Planner::new(cluster.intra.clone())
+        Planner::with_tree(cluster.topo.clone())
     }
 
     /// Current schedule-selection epoch.
@@ -129,12 +142,13 @@ impl Planner {
         }
     }
 
-    /// Valid grouping for `n` nodes, if any: >1 nodes per group and ≥2
-    /// groups.
-    fn grouping(&self, n: usize) -> Option<&IntraLink> {
-        let link = self.intra.as_ref()?;
-        let g = link.group_size;
-        if g > 1 && n % g == 0 && n / g >= 2 {
+    /// Valid single-level grouping for `n` nodes, if any: a uniform
+    /// innermost level with >1 nodes per group and ≥2 groups — the legacy
+    /// two-level schedule family's domain. Non-uniform innermost levels
+    /// (and deeper cuts) go through the multi-level family instead.
+    fn grouping(&self, n: usize) -> Option<IntraLink> {
+        let link = self.topo.level_link(0)?;
+        if link.group_size > 1 && self.topo.valid_cut_depth(1, n) {
             Some(link)
         } else {
             None
@@ -162,10 +176,20 @@ impl Planner {
             }
             Schedule::TwoLevel { group, chunks } => match self.grouping(n) {
                 Some(link) if link.group_size == group => {
-                    cost::two_level_us(fab, rail, bytes, n, link, chunks)
+                    cost::two_level_us(fab, rail, bytes, n, &link, chunks)
                 }
                 _ => cost::flat_ring_us(fab, rail, bytes, n),
             },
+            Schedule::MultiLevel { depth, groups, chunks } => {
+                if depth >= 1
+                    && self.topo.valid_cut_depth(depth, n)
+                    && self.topo.group_count(depth - 1, n) == groups
+                {
+                    cost::multi_level_us(fab, rail, bytes, n, &self.topo, depth, chunks)
+                } else {
+                    cost::flat_ring_us(fab, rail, bytes, n)
+                }
+            }
         }
     }
 
@@ -217,9 +241,26 @@ impl Planner {
                 if n.is_power_of_two() && n >= 4 {
                     candidates.push(Schedule::HalvingDoubling);
                 }
-                if let Some(link) = self.grouping(n) {
+                let two_level = self.grouping(n);
+                if let Some(link) = &two_level {
                     for c in std::iter::once(1).chain(CHUNK_CANDIDATES) {
                         candidates.push(Schedule::TwoLevel { group: link.group_size, chunks: c });
+                    }
+                }
+                // deeper cuts (and non-uniform innermost levels, which the
+                // two-level family cannot describe): one candidate family
+                // per additional valid cut depth — the best cut per size
+                // class falls out of ordinary α-β cost comparison
+                for d in 1..=self.topo.depth() {
+                    if d == 1 && two_level.is_some() {
+                        continue; // covered by the two-level family above
+                    }
+                    if !self.topo.valid_cut_depth(d, n) {
+                        continue;
+                    }
+                    let groups = self.topo.group_count(d - 1, n);
+                    for c in std::iter::once(1).chain(CHUNK_CANDIDATES) {
+                        candidates.push(Schedule::MultiLevel { depth: d, groups, chunks: c });
                     }
                 }
                 let mut best: Option<(Schedule, f64)> = None;
@@ -366,10 +407,10 @@ pub fn run_plan(
     w: Window,
     red: &mut dyn Reducer,
     elem_bytes: f64,
-    intra: Option<&IntraLink>,
+    topo: &TopologyTree,
 ) -> Result<OpOutcome, RailDown> {
     let mut scratch = OpScratch::default();
-    run_plan_with(schedule, fab, rail, buf, w, red, elem_bytes, intra, &mut scratch)
+    run_plan_with(schedule, fab, rail, buf, w, red, elem_bytes, topo, &mut scratch)
 }
 
 /// Scratch-reuse form of [`run_plan`] — the coordinator's serial per-op
@@ -383,10 +424,10 @@ pub fn run_plan_with(
     w: Window,
     red: &mut dyn Reducer,
     elem_bytes: f64,
-    intra: Option<&IntraLink>,
+    topo: &TopologyTree,
     scratch: &mut OpScratch,
 ) -> Result<OpOutcome, RailDown> {
-    run_plan_on(schedule, &mut fab.rail_ctx(rail), buf, w, red, elem_bytes, intra, scratch)
+    run_plan_on(schedule, &mut fab.rail_ctx(rail), buf, w, red, elem_bytes, topo, scratch)
 }
 
 /// The generic core of schedule execution: timing through any
@@ -402,7 +443,7 @@ pub fn run_plan_on<T: RailTimer, V: NodeWindows + ?Sized>(
     w: Window,
     red: &mut dyn Reducer,
     elem_bytes: f64,
-    intra: Option<&IntraLink>,
+    topo: &TopologyTree,
     scratch: &mut OpScratch,
 ) -> Result<OpOutcome, RailDown> {
     if w.is_empty() {
@@ -422,7 +463,7 @@ pub fn run_plan_on<T: RailTimer, V: NodeWindows + ?Sized>(
                 ring_allreduce_on(t, buf, w, red, elem_bytes, scratch)
             }
         }
-        Schedule::TwoLevel { group, chunks } => match intra {
+        Schedule::TwoLevel { group, chunks } => match topo.level_link(0) {
             Some(link)
                 if link.group_size == group
                     && group > 1
@@ -430,12 +471,25 @@ pub fn run_plan_on<T: RailTimer, V: NodeWindows + ?Sized>(
                     && nodes / group >= 2 =>
             {
                 hierarchical::two_level_allreduce_on(
-                    t, buf, w, red, elem_bytes, link, chunks, scratch,
+                    t, buf, w, red, elem_bytes, &link, chunks, scratch,
                 )
             }
             // defensive: an invalid grouping falls back to the seed ring
             _ => ring_allreduce_on(t, buf, w, red, elem_bytes, scratch),
         },
+        Schedule::MultiLevel { depth, groups, chunks } => {
+            if depth >= 1
+                && topo.valid_cut_depth(depth, nodes)
+                && topo.group_count(depth - 1, nodes) == groups
+            {
+                hierarchical::multi_level_allreduce_on(
+                    t, buf, w, red, elem_bytes, topo, depth, chunks, scratch,
+                )
+            } else {
+                // defensive: an invalid cut falls back to the seed ring
+                ring_allreduce_on(t, buf, w, red, elem_bytes, scratch)
+            }
+        }
     }
 }
 
@@ -468,7 +522,7 @@ mod tests {
     fn flat_cluster_never_schedules_two_level() {
         let c = ClusterSpec::local();
         let p = Planner::from_cluster(&c);
-        assert!(p.intra.is_none());
+        assert!(p.topo.is_flat());
         let f = fab(&[ProtoKind::Tcp], 16, &c);
         for kb in [4.0, 256.0, 16384.0, 262144.0] {
             let (s, _) = p.schedule_for(&f, &cold_timer(), 0, kb * KB);
@@ -494,10 +548,67 @@ mod tests {
     fn grouping_rejects_non_divisible_node_counts() {
         let c = ClusterSpec::pods(4);
         let p = Planner::from_cluster(&c);
-        // 6 nodes don't divide into groups of 4 → no two-level candidates
+        // 6 nodes don't divide into groups of 4 → no hierarchical candidates
         let f = fab(&[ProtoKind::Tcp], 6, &c);
         let (s, _) = p.schedule_for(&f, &cold_timer(), 0, 64.0 * MB);
-        assert!(!matches!(s, Schedule::TwoLevel { .. }), "{s:?}");
+        assert!(
+            !matches!(s, Schedule::TwoLevel { .. } | Schedule::MultiLevel { .. }),
+            "{s:?}"
+        );
+    }
+
+    #[test]
+    fn racked_pods_selects_deeper_cut_for_large_payloads() {
+        let c = ClusterSpec::racked_pods(4, 16);
+        let p = Planner::from_cluster(&c);
+        let f = fab(&[ProtoKind::Tcp], 32, &c);
+        let (s, t_multi) = p.schedule_for(&f, &cold_timer(), 0, 64.0 * MB);
+        assert!(
+            matches!(s, Schedule::MultiLevel { depth: 2, groups: 2, .. }),
+            "64MB on racked pods chose {s:?}"
+        );
+        // the selected cut must beat both the rack-only cut and the flat ring
+        let link = c.topo.level_link(0).unwrap();
+        let two = cost::two_level_us(&f, 0, 64.0 * MB, 32, &link, 1);
+        let flat = cost::flat_ring_us(&f, 0, 64.0 * MB, 32);
+        assert!(t_multi < two, "multi {t_multi} vs two-level {two}");
+        assert!(t_multi < flat, "multi {t_multi} vs flat {flat}");
+    }
+
+    #[test]
+    fn one_level_tree_selection_is_bitwise_identical_to_intralink_planner() {
+        // the pre-PR planner is exactly Planner::new(Some(link)); a
+        // one-level uniform tree must reproduce its plans bit-for-bit
+        let c = ClusterSpec::pods(4);
+        let f = fab(&[ProtoKind::Tcp], 16, &c);
+        let link = IntraLink { group_size: 4, bw_mbps: 5000.0, setup_us: 15.0 };
+        let legacy = Planner::new(Some(link));
+        let tree = Planner::from_cluster(&c);
+        let t = cold_timer();
+        for kb in [4.0, 256.0, 16384.0, 262144.0] {
+            let (sa, ta) = legacy.schedule_for(&f, &t, 0, kb * KB);
+            let (sb, tb) = tree.schedule_for(&f, &t, 0, kb * KB);
+            assert_eq!(sa, sb, "{kb}KB");
+            assert_eq!(ta, tb, "{kb}KB: predicted time diverged");
+        }
+    }
+
+    #[test]
+    fn non_uniform_groups_use_the_multi_level_family() {
+        let c = ClusterSpec::grouped(vec![2, 6, 4, 4]);
+        let p = Planner::from_cluster(&c);
+        let f = fab(&[ProtoKind::Tcp], 16, &c);
+        let (s, t) = p.schedule_for(&f, &cold_timer(), 0, 64.0 * MB);
+        assert!(
+            matches!(s, Schedule::MultiLevel { depth: 1, groups: 4, .. }),
+            "non-uniform grouping chose {s:?}"
+        );
+        assert!(t < cost::flat_ring_us(&f, 0, 64.0 * MB, 16));
+        // and never the two-level family, which cannot describe it
+        for kb in [4.0, 256.0, 65536.0] {
+            let (s, _) = p.schedule_for(&f, &cold_timer(), 0, kb * KB);
+            assert!(!matches!(s, Schedule::TwoLevel { .. }), "{kb}KB chose {s:?}");
+        }
     }
 
     #[test]

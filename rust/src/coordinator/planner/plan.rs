@@ -26,6 +26,14 @@ pub enum Schedule {
     /// intra-group reduce-scatter → inter-group ring allreduce of the
     /// rail-partitioned slice (chunk-pipelined) → intra-group allgather.
     TwoLevel { group: usize, chunks: usize },
+    /// N-level hierarchical schedule over a multi-level topology tree:
+    /// one reduce-scatter phase per engaged level (innermost `depth`
+    /// levels, local fabrics), a chunk-pipelined ring across the `groups`
+    /// outermost engaged groups on the rail, then the mirrored allgather
+    /// phases back down. `depth = 1` on a uniform level is the two-level
+    /// schedule; non-uniform (explicit-size) levels are only expressible
+    /// here.
+    MultiLevel { depth: usize, groups: usize, chunks: usize },
     /// In-network aggregation (SHARP rails).
     Tree,
 }
@@ -37,18 +45,27 @@ impl Schedule {
             Schedule::RingChunked { .. } => "ring-chunked",
             Schedule::HalvingDoubling => "halving-doubling",
             Schedule::TwoLevel { .. } => "two-level",
+            Schedule::MultiLevel { .. } => "multi-level",
             Schedule::Tree => "tree",
         }
     }
 
     /// Collapse degenerate parameterisations: a two-level schedule over
-    /// single-node groups IS a (possibly chunked) flat ring, and one chunk
-    /// is no pipeline at all.
+    /// single-node groups IS a (possibly chunked) flat ring, a multi-level
+    /// schedule with no engaged levels or a single top group likewise, and
+    /// one chunk is no pipeline at all.
     pub fn normalized(self) -> Schedule {
         match self {
             Schedule::TwoLevel { group: 0 | 1, chunks: 0 | 1 } => Schedule::FlatRing,
             Schedule::TwoLevel { group: 0 | 1, chunks } => Schedule::RingChunked { chunks },
             Schedule::TwoLevel { group, chunks: 0 } => Schedule::TwoLevel { group, chunks: 1 },
+            Schedule::MultiLevel { depth: 0, groups: _, chunks }
+            | Schedule::MultiLevel { depth: _, groups: 0 | 1, chunks } => {
+                Schedule::RingChunked { chunks }.normalized()
+            }
+            Schedule::MultiLevel { depth, groups, chunks: 0 } => {
+                Schedule::MultiLevel { depth, groups, chunks: 1 }
+            }
             Schedule::RingChunked { chunks: 0 | 1 } => Schedule::FlatRing,
             s => s,
         }
@@ -231,5 +248,23 @@ mod tests {
             Schedule::TwoLevel { group: 4, chunks: 2 }
         );
         assert_eq!(Schedule::Tree.normalized(), Schedule::Tree);
+        // multi-level degenerates like two-level
+        assert_eq!(
+            Schedule::MultiLevel { depth: 0, groups: 8, chunks: 1 }.normalized(),
+            Schedule::FlatRing
+        );
+        assert_eq!(
+            Schedule::MultiLevel { depth: 2, groups: 1, chunks: 4 }.normalized(),
+            Schedule::RingChunked { chunks: 4 }
+        );
+        assert_eq!(
+            Schedule::MultiLevel { depth: 2, groups: 2, chunks: 0 }.normalized(),
+            Schedule::MultiLevel { depth: 2, groups: 2, chunks: 1 }
+        );
+        assert_eq!(
+            Schedule::MultiLevel { depth: 2, groups: 2, chunks: 4 }.normalized(),
+            Schedule::MultiLevel { depth: 2, groups: 2, chunks: 4 }
+        );
+        assert_eq!(Schedule::MultiLevel { depth: 2, groups: 2, chunks: 4 }.label(), "multi-level");
     }
 }

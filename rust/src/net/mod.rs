@@ -18,4 +18,4 @@ pub use fault::{FaultSchedule, FaultWindow};
 pub use protocol::{CollectiveKind, ProtoKind, Protocol};
 pub use rail::{NicSpec, Rail, RailHealth};
 pub use simnet::Fabric;
-pub use topology::{ClusterSpec, IntraLink, NodeSpec};
+pub use topology::{ClusterSpec, GroupShape, IntraLink, NodeSpec, TopoLevel, TopologyTree};

@@ -1,5 +1,8 @@
 //! Cluster topologies from the paper's Table 2 (local / cloud /
-//! supercomputer testbeds) and rail-set construction rules.
+//! supercomputer testbeds), rail-set construction rules, and the
+//! multi-level [`TopologyTree`] the hierarchical collective planner
+//! consumes (ordered node < rack < pod levels, non-uniform group sizes,
+//! per-group rail-affinity masks).
 
 use crate::net::protocol::ProtoKind;
 use crate::net::rail::{NicSpec, Rail};
@@ -17,11 +20,10 @@ pub struct NodeSpec {
 
 /// An intra-group interconnect: nodes are organised in groups of
 /// `group_size` (a rack / pod / chassis) joined by a full-bisection local
-/// fabric that is much faster than the inter-group rails. The collective
-/// planner (`coordinator::planner`) exploits it with hierarchical
-/// two-level schedules; topologies without one (`intra: None`) always run
-/// single-level collectives, preserving the paper's flat-cluster
-/// behaviour.
+/// fabric that is much faster than the inter-group rails. The legacy
+/// single-level view of a [`TopologyTree`] level — the collective planner
+/// (`coordinator::planner`) still prices its two-level schedules through
+/// it, and a one-level tree degenerates to exactly this.
 #[derive(Debug, Clone, PartialEq)]
 pub struct IntraLink {
     /// Nodes per group; 1 disables grouping (degenerates to flat).
@@ -32,15 +34,517 @@ pub struct IntraLink {
     pub setup_us: f64,
 }
 
+/// How one topology level's groups tile the node set.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GroupShape {
+    /// Every group at this level spans the same number of nodes.
+    Uniform(usize),
+    /// Explicit per-group node counts, in node order (a partially
+    /// populated rack row, a mixed-chassis pod). Must sum to the node
+    /// count the topology is bound to.
+    Explicit(Vec<usize>),
+}
+
+/// One level of a hierarchical topology (innermost first): groups of
+/// nodes joined by a local fabric that is faster than the inter-group
+/// rails, optionally with per-group rail-affinity masks.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopoLevel {
+    pub name: String,
+    pub shape: GroupShape,
+    /// Effective local-fabric bandwidth per node at this level (MB/s).
+    pub bw_mbps: f64,
+    /// Per-message setup latency on this level's fabric (us).
+    pub setup_us: f64,
+    /// Optional per-group rail-affinity bitmasks (one per group, bit `r`
+    /// = rail `r` may carry this group's inter-level traffic). `None`
+    /// means every rail is allowed. Because every rail-borne collective
+    /// spans all nodes, a rail is usable for an op only if EVERY group at
+    /// every level allows it — see [`TopologyTree::allowed_rail_mask`].
+    pub affinity: Option<Vec<u64>>,
+}
+
+impl TopoLevel {
+    pub fn uniform(name: &str, group: usize, bw_mbps: f64, setup_us: f64) -> TopoLevel {
+        TopoLevel {
+            name: name.to_string(),
+            shape: GroupShape::Uniform(group),
+            bw_mbps,
+            setup_us,
+            affinity: None,
+        }
+    }
+
+    pub fn explicit(name: &str, sizes: Vec<usize>, bw_mbps: f64, setup_us: f64) -> TopoLevel {
+        TopoLevel {
+            name: name.to_string(),
+            shape: GroupShape::Explicit(sizes),
+            bw_mbps,
+            setup_us,
+            affinity: None,
+        }
+    }
+
+    /// Number of groups when this level tiles `nodes` exactly; 0 when it
+    /// cannot (non-dividing uniform size, explicit sizes not summing up).
+    fn group_count(&self, nodes: usize) -> usize {
+        match &self.shape {
+            GroupShape::Uniform(g) => {
+                if *g >= 1 && nodes % *g == 0 {
+                    nodes / *g
+                } else {
+                    0
+                }
+            }
+            GroupShape::Explicit(v) => {
+                if !v.is_empty()
+                    && v.iter().all(|&s| s >= 1)
+                    && v.iter().sum::<usize>() == nodes
+                {
+                    v.len()
+                } else {
+                    0
+                }
+            }
+        }
+    }
+}
+
+/// Per-group size iterator for one level (allocation-free: the planner's
+/// hot path walks explicit shapes with cursors, never a scratch vector).
+enum SizeIter<'a> {
+    Uniform { size: usize, left: usize },
+    Explicit(std::slice::Iter<'a, usize>),
+}
+
+impl Iterator for SizeIter<'_> {
+    type Item = usize;
+    fn next(&mut self) -> Option<usize> {
+        match self {
+            SizeIter::Uniform { size, left } => {
+                if *left == 0 {
+                    None
+                } else {
+                    *left -= 1;
+                    Some(*size)
+                }
+            }
+            SizeIter::Explicit(it) => it.next().copied(),
+        }
+    }
+}
+
+/// A validated-on-bind multi-level topology: ordered levels, innermost
+/// (smallest groups) first — e.g. node < rack < pod. No levels = flat
+/// (all the paper's testbeds). The hierarchical planner cuts the tree at
+/// any valid depth: cut 0 is the flat ring, cut 1 the legacy two-level
+/// schedule, deeper cuts stack one reduce-scatter/allgather phase pair
+/// per engaged level around the inter-group rail ring.
+///
+/// The tree itself is node-count agnostic (uniform levels describe any
+/// cluster size); [`TopologyTree::validate`] binds it to a concrete
+/// `(nodes, rails)` pair and is where non-dividing group sizes, broken
+/// nesting and rail-emptying affinity masks are rejected with
+/// `Error::Topology`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TopologyTree {
+    pub levels: Vec<TopoLevel>,
+}
+
+impl TopologyTree {
+    /// The flat (ungrouped) topology.
+    pub fn flat() -> TopologyTree {
+        TopologyTree { levels: Vec::new() }
+    }
+
+    /// Uniform levels, innermost first: `(name, group_size, bw, setup)`.
+    pub fn uniform(levels: &[(&str, usize, f64, f64)]) -> TopologyTree {
+        TopologyTree {
+            levels: levels
+                .iter()
+                .map(|&(name, g, bw, setup)| TopoLevel::uniform(name, g, bw, setup))
+                .collect(),
+        }
+    }
+
+    /// The legacy single-level view (`group_size <= 1` stays flat).
+    pub fn from_intra(intra: Option<IntraLink>) -> TopologyTree {
+        match intra {
+            Some(l) if l.group_size > 1 => TopologyTree {
+                levels: vec![TopoLevel::uniform("group", l.group_size, l.bw_mbps, l.setup_us)],
+            },
+            _ => TopologyTree::flat(),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    pub fn is_flat(&self) -> bool {
+        self.levels.is_empty()
+    }
+
+    fn size_iter(&self, level: usize, nodes: usize) -> SizeIter<'_> {
+        match &self.levels[level].shape {
+            GroupShape::Uniform(g) => SizeIter::Uniform {
+                size: *g,
+                left: if *g >= 1 { nodes / *g } else { 0 },
+            },
+            GroupShape::Explicit(v) => SizeIter::Explicit(v.iter()),
+        }
+    }
+
+    /// Groups at `level` when it tiles `nodes` exactly, else 0.
+    pub fn group_count(&self, level: usize, nodes: usize) -> usize {
+        self.levels[level].group_count(nodes)
+    }
+
+    /// Largest group at `level` (the lockstep phase's critical path).
+    pub fn max_group(&self, level: usize) -> usize {
+        match &self.levels[level].shape {
+            GroupShape::Uniform(g) => *g,
+            GroupShape::Explicit(v) => v.iter().copied().max().unwrap_or(0),
+        }
+    }
+
+    /// Largest number of level-`level - 1` subgroups (single nodes for
+    /// level 0) inside any one group at `level` — the ring length of that
+    /// level's lockstep phase.
+    pub fn max_subgroups(&self, level: usize, nodes: usize) -> usize {
+        if level == 0 {
+            return self.max_group(0);
+        }
+        let mut inner = self.size_iter(level - 1, nodes);
+        let mut best = 0usize;
+        for outer in self.size_iter(level, nodes) {
+            let mut consumed = 0usize;
+            let mut count = 0usize;
+            while consumed < outer {
+                match inner.next() {
+                    Some(s) => {
+                        consumed += s;
+                        count += 1;
+                    }
+                    None => return best.max(count),
+                }
+            }
+            best = best.max(count);
+        }
+        best
+    }
+
+    /// `level` as the legacy [`IntraLink`] view — `Some` only for uniform
+    /// shapes (the two-level schedule family cannot describe non-uniform
+    /// groups; those go through the multi-level family instead).
+    pub fn level_link(&self, level: usize) -> Option<IntraLink> {
+        let lv = self.levels.get(level)?;
+        match lv.shape {
+            GroupShape::Uniform(g) => Some(IntraLink {
+                group_size: g,
+                bw_mbps: lv.bw_mbps,
+                setup_us: lv.setup_us,
+            }),
+            GroupShape::Explicit(_) => None,
+        }
+    }
+
+    /// True when cutting the tree after its innermost `depth` levels is a
+    /// runnable hierarchical schedule on an `nodes`-node fabric: every
+    /// engaged level tiles the node set, each strictly coarsens the one
+    /// below, and at least two top-level groups remain for the inter ring.
+    pub fn valid_cut_depth(&self, depth: usize, nodes: usize) -> bool {
+        if depth == 0 || depth > self.levels.len() || nodes == 0 {
+            return false;
+        }
+        let mut prev_groups = nodes;
+        for lv in 0..depth {
+            let g = self.group_count(lv, nodes);
+            if g == 0 || g >= prev_groups {
+                return false;
+            }
+            prev_groups = g;
+        }
+        prev_groups >= 2
+    }
+
+    /// Deepest valid cut for `nodes` (0 = only flat schedules apply).
+    pub fn max_valid_depth(&self, nodes: usize) -> usize {
+        (1..=self.levels.len())
+            .filter(|&d| self.valid_cut_depth(d, nodes))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// True when any level carries affinity masks (the coordinator skips
+    /// rail filtering entirely for unconstrained trees).
+    pub fn has_affinity(&self) -> bool {
+        self.levels.iter().any(|lv| lv.affinity.is_some())
+    }
+
+    /// Rails allowed by EVERY group at every level (missing affinity =
+    /// all rails). Since a rail-borne collective spans all nodes, this is
+    /// the set the coordinator may assign payload to; 0 means the masks
+    /// are unsatisfiable together.
+    pub fn allowed_rail_mask(&self, n_rails: usize) -> u64 {
+        let mut allow = rails_mask(n_rails);
+        for lv in &self.levels {
+            if let Some(masks) = &lv.affinity {
+                for &m in masks {
+                    allow &= m;
+                }
+            }
+        }
+        allow
+    }
+
+    /// Group start/end offsets at `level` (validation only — allocates).
+    fn boundaries(&self, level: usize, nodes: usize) -> Vec<usize> {
+        let mut b = vec![0usize];
+        let mut acc = 0usize;
+        for s in self.size_iter(level, nodes) {
+            acc += s;
+            b.push(acc);
+        }
+        b
+    }
+
+    /// Bind the tree to a concrete cluster: `nodes` participating nodes on
+    /// `n_rails` rails (`n_rails == 0` = rail count unknown, affinity
+    /// masks checked for non-emptiness only). Every structural invariant
+    /// the planner later relies on is enforced here with a precise
+    /// `Error::Topology`:
+    ///
+    /// * every level's groups cover all nodes exactly (uniform sizes must
+    ///   divide the node count — the old `ClusterSpec::pods` silently
+    ///   accepted non-dividing groups),
+    /// * levels strictly nest (each level's boundaries align with the one
+    ///   below and strictly coarsen it),
+    /// * sane fabric parameters (positive bandwidth, non-negative setup),
+    /// * affinity masks never empty a group's rail set, and some rail is
+    ///   allowed by every group.
+    pub fn validate(&self, nodes: usize, n_rails: usize) -> Result<()> {
+        if nodes == 0 {
+            return Err(Error::Topology("cluster has zero nodes".into()));
+        }
+        let mut prev_bounds: Vec<usize> = (0..=nodes).collect();
+        let mut prev_groups = nodes;
+        for (level_idx, lv) in self.levels.iter().enumerate() {
+            if !lv.bw_mbps.is_finite() || lv.bw_mbps <= 0.0 {
+                return Err(Error::Topology(format!(
+                    "level `{}`: bandwidth must be positive, got {}",
+                    lv.name, lv.bw_mbps
+                )));
+            }
+            if !lv.setup_us.is_finite() || lv.setup_us < 0.0 {
+                return Err(Error::Topology(format!(
+                    "level `{}`: setup latency must be >= 0, got {}",
+                    lv.name, lv.setup_us
+                )));
+            }
+            match &lv.shape {
+                GroupShape::Uniform(g) => {
+                    if *g == 0 {
+                        return Err(Error::Topology(format!(
+                            "level `{}`: zero group size",
+                            lv.name
+                        )));
+                    }
+                    if nodes % *g != 0 {
+                        return Err(Error::Topology(format!(
+                            "level `{}`: group size {} does not divide the {}-node cluster",
+                            lv.name, g, nodes
+                        )));
+                    }
+                }
+                GroupShape::Explicit(v) => {
+                    if v.is_empty() || v.iter().any(|&s| s == 0) {
+                        return Err(Error::Topology(format!(
+                            "level `{}`: explicit group sizes must be non-empty and positive",
+                            lv.name
+                        )));
+                    }
+                    let sum: usize = v.iter().sum();
+                    if sum != nodes {
+                        return Err(Error::Topology(format!(
+                            "level `{}`: group sizes sum to {}, cluster has {} nodes",
+                            lv.name, sum, nodes
+                        )));
+                    }
+                }
+            }
+            let bounds = self.boundaries(level_idx, nodes);
+            let groups = bounds.len() - 1;
+            if groups >= prev_groups {
+                return Err(Error::Topology(format!(
+                    "level `{}` must strictly coarsen the level below it ({} vs {} groups)",
+                    lv.name, groups, prev_groups
+                )));
+            }
+            for b in &bounds {
+                if prev_bounds.binary_search(b).is_err() {
+                    return Err(Error::Topology(format!(
+                        "level `{}`: group boundary at node {} splits an inner group",
+                        lv.name, b
+                    )));
+                }
+            }
+            if let Some(masks) = &lv.affinity {
+                if masks.len() != groups {
+                    return Err(Error::Topology(format!(
+                        "level `{}`: {} affinity masks for {} groups",
+                        lv.name,
+                        masks.len(),
+                        groups
+                    )));
+                }
+                for (gi, &m) in masks.iter().enumerate() {
+                    if m == 0 {
+                        return Err(Error::Topology(format!(
+                            "level `{}` group {}: affinity mask empties the group's rail set",
+                            lv.name, gi
+                        )));
+                    }
+                    if m & rails_mask(n_rails) == 0 {
+                        return Err(Error::Topology(format!(
+                            "level `{}` group {}: affinity mask names no existing rail (cluster has {})",
+                            lv.name, gi, n_rails
+                        )));
+                    }
+                }
+            }
+            prev_bounds = bounds;
+            prev_groups = groups;
+        }
+        if self.allowed_rail_mask(n_rails) == 0 {
+            return Err(Error::Topology(
+                "affinity masks leave no rail usable by every group".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// All-ones mask over the first `n_rails` rails (`0` = unknown count =
+/// unconstrained).
+fn rails_mask(n_rails: usize) -> u64 {
+    if n_rails == 0 || n_rails >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << n_rails) - 1
+    }
+}
+
+/// Parse a `topology=` spec string.
+///
+/// `flat`, or `<`-separated levels innermost first, each
+/// `name:sizes[:bw_mbps:setup_us][@affinity]` where `sizes` is one uint
+/// (uniform groups) or `+`-separated uints (explicit non-uniform sizes),
+/// and `affinity` lists per-group rail sets — groups separated by `;`,
+/// rail ids within a group by `.`. Omitted fabric parameters default by
+/// level position (inner fabrics faster).
+///
+/// Examples: `rack:4<pod:16`, `group:2+6+4+4`, `pod:8@0.1;1.2`,
+/// `rack:4:5000:8<pod:16:2000:12`.
+pub fn parse_topology(s: &str) -> Result<TopologyTree> {
+    let s = s.trim();
+    if s.is_empty() || s.eq_ignore_ascii_case("flat") {
+        return Ok(TopologyTree::flat());
+    }
+    let mut levels = Vec::new();
+    for (li, part) in s.split('<').enumerate() {
+        let part = part.trim();
+        let (core, aff) = match part.split_once('@') {
+            Some((c, a)) => (c.trim(), Some(a.trim())),
+            None => (part, None),
+        };
+        let fields: Vec<&str> = core.split(':').map(|f| f.trim()).collect();
+        if fields.len() != 2 && fields.len() != 4 {
+            return Err(Error::Config(format!(
+                "topology level `{part}`: expected name:sizes[:bw:setup]"
+            )));
+        }
+        let name = fields[0];
+        if name.is_empty() {
+            return Err(Error::Config(format!("topology level `{part}`: empty name")));
+        }
+        let sizes = fields[1]
+            .split('+')
+            .map(|t| {
+                t.trim()
+                    .parse::<usize>()
+                    .map_err(|_| Error::Config(format!("topology level `{name}`: bad size `{t}`")))
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        let (bw_mbps, setup_us) = if fields.len() == 4 {
+            let bw = fields[2].parse::<f64>().map_err(|_| {
+                Error::Config(format!("topology level `{name}`: bad bandwidth `{}`", fields[2]))
+            })?;
+            let setup = fields[3].parse::<f64>().map_err(|_| {
+                Error::Config(format!("topology level `{name}`: bad setup `{}`", fields[3]))
+            })?;
+            (bw, setup)
+        } else {
+            default_level_params(li)
+        };
+        let shape = if sizes.len() == 1 {
+            GroupShape::Uniform(sizes[0])
+        } else {
+            GroupShape::Explicit(sizes)
+        };
+        let affinity = match aff {
+            None => None,
+            Some(a) => {
+                let mut masks = Vec::new();
+                for grp in a.split(';') {
+                    let mut mask = 0u64;
+                    for r in grp.split('.') {
+                        let r: usize = r.trim().parse().map_err(|_| {
+                            Error::Config(format!(
+                                "topology level `{name}`: bad affinity rail `{r}`"
+                            ))
+                        })?;
+                        if r >= 64 {
+                            return Err(Error::Config(format!(
+                                "topology level `{name}`: affinity rail {r} exceeds the 64-rail mask"
+                            )));
+                        }
+                        mask |= 1u64 << r;
+                    }
+                    masks.push(mask);
+                }
+                Some(masks)
+            }
+        };
+        levels.push(TopoLevel {
+            name: name.to_string(),
+            shape,
+            bw_mbps,
+            setup_us,
+            affinity,
+        });
+    }
+    Ok(TopologyTree { levels })
+}
+
+/// Default per-level fabric parameters when the spec omits them (inner
+/// fabrics are faster: NVLink-class rack, electrical pod, optical beyond).
+fn default_level_params(level: usize) -> (f64, f64) {
+    match level {
+        0 => (5000.0, 15.0),
+        1 => (2000.0, 12.0),
+        _ => (1000.0, 20.0),
+    }
+}
+
 /// A named testbed.
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {
     pub name: &'static str,
     pub node: NodeSpec,
     pub max_nodes: usize,
-    /// Optional intra-group fast interconnect (None on the paper's flat
-    /// testbeds).
-    pub intra: Option<IntraLink>,
+    /// Hierarchical grouping (empty = flat: the paper's testbeds).
+    pub topo: TopologyTree,
 }
 
 impl ClusterSpec {
@@ -62,27 +566,73 @@ impl ClusterSpec {
                 ],
             },
             max_nodes: 8,
-            intra: None,
+            topo: TopologyTree::flat(),
         }
     }
 
-    /// Rack-pod variant of the local testbed: same per-node NIC inventory,
-    /// nodes organised in racks of `group` with a full-bisection intra-rack
+    /// Grouped variant of the local testbed: same per-node NIC inventory,
+    /// nodes organised in pods of `group` with a full-bisection intra-pod
     /// interconnect (NVLink-class pooled bandwidth, far faster than any
     /// single rail). This is the topology the hierarchical two-level
-    /// planner targets; `group <= 1` keeps it flat.
+    /// planner targets; `group <= 1` keeps it flat. The group size must
+    /// divide the node count the coordinator is built with —
+    /// [`TopologyTree::validate`] rejects the rest.
     pub fn pods(group: usize) -> ClusterSpec {
         let mut c = ClusterSpec::local();
         c.name = "pods";
         c.max_nodes = 64;
         if group > 1 {
-            c.intra = Some(IntraLink {
-                group_size: group,
-                bw_mbps: 5000.0,
-                setup_us: 15.0,
-            });
+            c.topo = TopologyTree::uniform(&[("pod", group, 5000.0, 15.0)]);
         }
         c
+    }
+
+    /// Two-level hierarchy: racks of `rack` nodes (NVLink-class local
+    /// fabric) inside pods of `pod` nodes (slower electrical pod fabric,
+    /// still far above any rail's CPU-bound collective bandwidth), rails
+    /// crossing pods — the node < rack < pod structure the paper's
+    /// 128-node supercomputer results exploit. Degenerate sizes (≤ 1)
+    /// drop their level.
+    pub fn racked_pods(rack: usize, pod: usize) -> ClusterSpec {
+        let mut c = ClusterSpec::local();
+        c.name = "racked-pods";
+        c.max_nodes = 128;
+        let mut levels = Vec::new();
+        if rack > 1 {
+            levels.push(TopoLevel::uniform("rack", rack, 5000.0, 8.0));
+        }
+        if pod > 1 && pod > rack {
+            levels.push(TopoLevel::uniform("pod", pod, 2000.0, 12.0));
+        }
+        c.topo = TopologyTree { levels };
+        c
+    }
+
+    /// Non-uniform single-level variant: explicit per-group node counts
+    /// (e.g. a partially populated rack row). The sizes must sum to the
+    /// node count the coordinator is built with.
+    pub fn grouped(sizes: Vec<usize>) -> ClusterSpec {
+        let mut c = ClusterSpec::local();
+        c.name = "grouped";
+        c.max_nodes = 64;
+        c.topo = TopologyTree {
+            levels: vec![TopoLevel::explicit("group", sizes, 5000.0, 15.0)],
+        };
+        c
+    }
+
+    /// Attach per-group rail-affinity masks to topology level `level`
+    /// (innermost = 0). Mask sanity is checked at
+    /// [`TopologyTree::validate`] time, when the rail count is known.
+    pub fn with_affinity(mut self, level: usize, masks: Vec<u64>) -> ClusterSpec {
+        self.topo.levels[level].affinity = Some(masks);
+        self
+    }
+
+    /// Legacy single-level view: the innermost topology level as an
+    /// [`IntraLink`] (None on flat clusters and non-uniform levels).
+    pub fn intra(&self) -> Option<IntraLink> {
+        self.topo.level_link(0)
     }
 
     /// 16-node cloud platform: Xeon 5318Y, 1x V100, 1x Eth, 1x IB.
@@ -96,7 +646,7 @@ impl ClusterSpec {
                 nics: vec![NicSpec::MCX623106AN, NicSpec::CONNECTX5],
             },
             max_nodes: 16,
-            intra: None,
+            topo: TopologyTree::flat(),
         }
     }
 
@@ -112,7 +662,7 @@ impl ClusterSpec {
                 nics: vec![NicSpec::BCM5720, NicSpec::CONNECTX3],
             },
             max_nodes: 128,
-            intra: None,
+            topo: TopologyTree::flat(),
         }
     }
 
@@ -224,7 +774,7 @@ mod tests {
     #[test]
     fn pods_topology_declares_intra_link() {
         let c = ClusterSpec::pods(4);
-        let link = c.intra.as_ref().expect("pods must have an intra link");
+        let link = c.intra().expect("pods must have an intra link");
         assert_eq!(link.group_size, 4);
         assert!(link.bw_mbps > NicSpec::MCX623106AN.usable_mbps() / 4.0);
         // same NIC inventory as local: a 4-rail heterogeneous combo builds
@@ -235,8 +785,124 @@ mod tests {
             4
         );
         // degenerate group stays flat
-        assert!(ClusterSpec::pods(1).intra.is_none());
-        assert!(ClusterSpec::local().intra.is_none());
+        assert!(ClusterSpec::pods(1).intra().is_none());
+        assert!(ClusterSpec::local().intra().is_none());
+        assert!(ClusterSpec::local().topo.is_flat());
+    }
+
+    #[test]
+    fn pods_group_must_divide_node_count() {
+        // regression: `pods` used to silently accept non-dividing group
+        // sizes; binding the tree to the cluster now rejects them
+        let topo = &ClusterSpec::pods(4).topo;
+        assert!(topo.validate(16, 2).is_ok());
+        let err = topo.validate(6, 2).unwrap_err();
+        match err {
+            Error::Topology(msg) => {
+                assert!(msg.contains("does not divide"), "{msg}");
+                assert!(msg.contains('6'), "{msg}");
+            }
+            other => panic!("expected Error::Topology, got {other:?}"),
+        }
+        // a single full-cluster group is structurally fine (the planner
+        // just has no valid cut there)
+        assert!(topo.validate(4, 2).is_ok());
+        assert!(!topo.valid_cut_depth(1, 4));
+    }
+
+    #[test]
+    fn racked_pods_tree_nests_and_cuts() {
+        let c = ClusterSpec::racked_pods(4, 16);
+        assert_eq!(c.topo.depth(), 2);
+        assert!(c.topo.validate(32, 2).is_ok());
+        // 32 nodes: 8 racks of 4 inside 2 pods of 16
+        assert_eq!(c.topo.group_count(0, 32), 8);
+        assert_eq!(c.topo.group_count(1, 32), 2);
+        assert_eq!(c.topo.max_subgroups(0, 32), 4);
+        assert_eq!(c.topo.max_subgroups(1, 32), 4); // 4 racks per pod
+        assert!(c.topo.valid_cut_depth(1, 32));
+        assert!(c.topo.valid_cut_depth(2, 32));
+        assert_eq!(c.topo.max_valid_depth(32), 2);
+        // 16 nodes leave a single pod: depth 2 has no inter ring
+        assert!(c.topo.valid_cut_depth(1, 16));
+        assert!(!c.topo.valid_cut_depth(2, 16));
+        // pods must not split racks
+        let broken = TopologyTree::uniform(&[("rack", 4, 5000.0, 8.0), ("pod", 6, 2000.0, 12.0)]);
+        assert!(matches!(broken.validate(12, 2), Err(Error::Topology(_))));
+        // non-coarsening repeat level is rejected
+        let flat2 = TopologyTree::uniform(&[("a", 4, 5000.0, 8.0), ("b", 4, 2000.0, 12.0)]);
+        assert!(matches!(flat2.validate(16, 2), Err(Error::Topology(_))));
+    }
+
+    #[test]
+    fn explicit_groups_validate_and_measure() {
+        let c = ClusterSpec::grouped(vec![2, 6, 4, 4]);
+        assert!(c.topo.validate(16, 2).is_ok());
+        assert_eq!(c.topo.group_count(0, 16), 4);
+        assert_eq!(c.topo.max_group(0), 6);
+        assert_eq!(c.topo.max_subgroups(0, 16), 6);
+        assert!(c.topo.valid_cut_depth(1, 16));
+        // two-level schedules cannot describe non-uniform groups
+        assert!(c.topo.level_link(0).is_none());
+        assert!(c.intra().is_none());
+        // sizes must sum to the node count
+        let err = c.topo.validate(15, 2).unwrap_err();
+        assert!(matches!(err, Error::Topology(ref m) if m.contains("sum to 16")), "{err:?}");
+    }
+
+    #[test]
+    fn affinity_masks_validate_and_intersect() {
+        let ok = ClusterSpec::pods(4).with_affinity(0, vec![0b11, 0b01, 0b11, 0b01]);
+        assert!(ok.topo.validate(16, 2).is_ok());
+        assert_eq!(ok.topo.allowed_rail_mask(2), 0b01);
+        // a zero mask empties its group's rail set
+        let empty = ClusterSpec::pods(4).with_affinity(0, vec![0b11, 0, 0b11, 0b11]);
+        assert!(matches!(empty.topo.validate(16, 2), Err(Error::Topology(ref m)) if m.contains("empties")));
+        // masks that name only nonexistent rails are rejected
+        let ghost = ClusterSpec::pods(4).with_affinity(0, vec![0b100; 4]);
+        assert!(matches!(ghost.topo.validate(16, 2), Err(Error::Topology(_))));
+        // per-group masks with an empty intersection are unsatisfiable
+        let disjoint = ClusterSpec::pods(4).with_affinity(0, vec![0b01, 0b10, 0b01, 0b10]);
+        assert!(matches!(disjoint.topo.validate(16, 2), Err(Error::Topology(ref m)) if m.contains("no rail usable")));
+        // mask count must equal the group count
+        let short = ClusterSpec::pods(4).with_affinity(0, vec![0b11; 3]);
+        assert!(matches!(short.topo.validate(16, 2), Err(Error::Topology(_))));
+    }
+
+    #[test]
+    fn topology_spec_string_parses() {
+        let t = parse_topology("rack:4<pod:16").unwrap();
+        assert_eq!(t.depth(), 2);
+        assert_eq!(t.levels[0].name, "rack");
+        assert_eq!(t.levels[0].shape, GroupShape::Uniform(4));
+        assert_eq!(t.levels[1].shape, GroupShape::Uniform(16));
+        assert!(t.levels[0].bw_mbps > t.levels[1].bw_mbps, "inner fabric faster by default");
+
+        let t = parse_topology("group:2+6+4+4").unwrap();
+        assert_eq!(t.levels[0].shape, GroupShape::Explicit(vec![2, 6, 4, 4]));
+
+        let t = parse_topology("pod:8@0.1;1.2").unwrap();
+        assert_eq!(t.levels[0].affinity, Some(vec![0b011, 0b110]));
+
+        let t = parse_topology("rack:4:5000:8<pod:16:2000:12").unwrap();
+        assert_eq!(t.levels[1].bw_mbps, 2000.0);
+        assert_eq!(t.levels[1].setup_us, 12.0);
+
+        assert!(parse_topology("flat").unwrap().is_flat());
+        assert!(parse_topology("rack").is_err());
+        assert!(parse_topology("rack:x").is_err());
+        assert!(parse_topology("rack:4@0.99").is_err());
+    }
+
+    #[test]
+    fn from_intra_round_trips() {
+        let link = IntraLink { group_size: 4, bw_mbps: 5000.0, setup_us: 15.0 };
+        let t = TopologyTree::from_intra(Some(link.clone()));
+        assert_eq!(t.level_link(0), Some(link));
+        assert!(TopologyTree::from_intra(None).is_flat());
+        // group_size 1 degenerates to flat, like the old Option<IntraLink>
+        let g1 = IntraLink { group_size: 1, bw_mbps: 5000.0, setup_us: 15.0 };
+        assert!(TopologyTree::from_intra(Some(g1)).is_flat());
     }
 
     #[test]

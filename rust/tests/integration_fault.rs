@@ -238,6 +238,73 @@ fn parallel_executor_mid_op_failover_replans_and_recovers() {
 }
 
 #[test]
+fn racked_pods_mid_op_failover_respects_affinity_masks() {
+    use nezha::coordinator::planner::Schedule;
+    // 32-node racked-pods cluster (racks of 4 inside pods of 16), three
+    // TCP rails; both pods' affinity masks allow rails {0, 2} only. Rail 0
+    // dies mid-op while running an inner-level-bearing multi-level
+    // schedule: the §4.4 handler must migrate its window to rail 2 — never
+    // the healthy-but-affinity-excluded rail 1 — replan the survivors at a
+    // fresh selection epoch, and stay inside the 200 ms budget.
+    let mut c = cfg("tcp-tcp-tcp", Policy::Nezha);
+    c.cluster = ClusterSpec::racked_pods(4, 16).with_affinity(1, vec![0b101, 0b101]);
+    c.nodes = 32;
+    let mut mr = MultiRail::new(&c)
+        .unwrap()
+        .with_faults(FaultSchedule::none().with(0, 0.0, 1e12));
+    let len = 1 << 14;
+    let bytes = 256u64 << 20;
+    // what the planner would run on the failing rail: a hierarchical
+    // schedule with inner-level phases (timed before the fallible inter
+    // ring, so the failure surfaces mid-schedule, after the rack/pod
+    // phases were modeled)
+    let preview = mr.plan_for(bytes).unwrap();
+    assert!(
+        preview
+            .assignments
+            .iter()
+            .all(|a| a.rail == 0 || a.rail == 2),
+        "affinity must exclude rail 1 from planning: {preview:?}"
+    );
+    assert!(
+        preview
+            .assignments
+            .iter()
+            .filter(|a| a.bytes > 0)
+            .any(|a| matches!(a.schedule, Schedule::MultiLevel { .. } | Schedule::TwoLevel { .. })),
+        "expected a hierarchical schedule on the racked-pods cluster: {}",
+        preview.label()
+    );
+    let epoch_before = mr.plan_epoch();
+    let mut buf = UnboundBuffer::from_fn(32, len, |n, i| ((n * 5 + i) % 13) as f32);
+    let rep = mr.allreduce_scaled(&mut buf, bytes as f64 / len as f64).unwrap();
+    assert_eq!(rep.failovers, 1);
+    // takeover respected the masks and the budget
+    assert_eq!(mr.exceptions.failover_count(), 1);
+    for ev in &mr.exceptions.events {
+        assert_eq!(ev.failed_rail, 0);
+        assert_eq!(ev.takeover_rail, 2, "takeover must skip affinity-excluded rail 1");
+        assert!(ev.recovery_us < PAPER_RECOVERY_BUDGET_US, "{ev:?}");
+    }
+    assert!(mr.exceptions.all_within_budget());
+    assert!(mr.plan_epoch() > epoch_before, "failover must start a fresh epoch");
+    // rail 1 never carried payload, before or after the failover
+    assert!(rep.per_rail.iter().all(|s| s.rail != 1 || s.bytes == 0), "{rep:?}");
+    // numerics survive the failover + replan
+    for i in (0..len).step_by(2039) {
+        let expect: f32 = (0..32).map(|n| ((n * 5 + i) % 13) as f32).sum();
+        assert_eq!(buf.node(0)[i], expect, "elem {i}");
+    }
+    // the next op proceeds on the allowed survivor only
+    let mut buf2 = UnboundBuffer::from_fn(32, 1024, |n, i| ((n + i) % 7) as f32);
+    let rep2 = mr.allreduce_scaled(&mut buf2, bytes as f64 / 1024.0).unwrap();
+    assert_eq!(rep2.failovers, 0);
+    for s in &rep2.per_rail {
+        assert!(s.rail != 1 || s.bytes == 0, "{rep2:?}");
+    }
+}
+
+#[test]
 fn parallel_executor_all_rails_down_is_an_error() {
     use nezha::net::cpu_pool::ExecMode;
     let mut c = cfg("tcp-tcp", Policy::Nezha);

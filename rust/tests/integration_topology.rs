@@ -1,0 +1,262 @@
+//! Integration: multi-level hierarchical topologies — the scenario
+//! matrix {flat, pods, racked-pods, non-uniform groups} × {planner
+//! auto/static-cost/flat} × {exec serial/parallel}, plan validity on
+//! every cell, bit-identical serial-vs-parallel numerics, the
+//! racked-pods acceptance criterion (auto picks a multi-level cut that
+//! beats two-level and flat), per-group rail-affinity enforcement, and
+//! the `ClusterSpec::pods` divisibility regression.
+
+use nezha::bench::ablation::{multilevel_sweep, multilevel_sweep_json};
+use nezha::config::{Config, PlannerMode, Policy};
+use nezha::coordinator::buffer::{UnboundBuffer, Window};
+use nezha::coordinator::multirail::MultiRail;
+use nezha::coordinator::planner::Schedule;
+use nezha::net::cpu_pool::ExecMode;
+use nezha::net::topology::{parse_combo, ClusterSpec};
+use nezha::util::error::Error;
+
+const LEN: usize = 2048;
+
+fn scenarios() -> Vec<(&'static str, ClusterSpec, usize)> {
+    vec![
+        ("flat", ClusterSpec::local(), 8),
+        ("pods", ClusterSpec::pods(4), 16),
+        ("racked-pods", ClusterSpec::racked_pods(4, 16), 32),
+        ("non-uniform", ClusterSpec::grouped(vec![2, 6, 4, 4]), 16),
+    ]
+}
+
+fn cfg(cluster: ClusterSpec, nodes: usize, mode: PlannerMode, exec: ExecMode) -> Config {
+    let mut c = Config {
+        cluster,
+        nodes,
+        combo: parse_combo("tcp-tcp").unwrap(),
+        policy: Policy::Nezha,
+        // jitter ON: cell identity must hold for sampled times, not just
+        // the deterministic model (fixed seed keeps runs reproducible)
+        deterministic: false,
+        seed: 77,
+        exec,
+        ..Config::default()
+    };
+    c.planner = mode;
+    c
+}
+
+fn fill(salt: usize) -> impl Fn(usize, usize) -> f32 + Copy {
+    move |n: usize, i: usize| ((n * 7 + i * 3 + salt) % 13) as f32
+}
+
+fn check_reduced(buf: &UnboundBuffer, nodes: usize, salt: usize, tag: &str) {
+    let f = fill(salt);
+    for n in 0..nodes {
+        for i in (0..LEN).step_by(251) {
+            let expect: f32 = (0..nodes).map(|m| f(m, i)).sum();
+            assert_eq!(buf.node(n)[i], expect, "{tag}: node {n} elem {i}");
+        }
+    }
+}
+
+/// The matrix: every topology × planner mode runs under BOTH executors
+/// with identical results — modeled times, per-rail shares and payload
+/// bits — and every planner-scheduled cell emits a valid plan (windows
+/// partition the op exactly; shares form a distribution).
+#[test]
+fn scenario_matrix_plans_valid_and_executors_bit_identical() {
+    let modes = [PlannerMode::Auto, PlannerMode::StaticCost, PlannerMode::Flat];
+    for (scen, cluster, nodes) in scenarios() {
+        for mode in modes {
+            let tag = format!("{scen}/{}", mode.name());
+            let mut serial =
+                MultiRail::new(&cfg(cluster.clone(), nodes, mode, ExecMode::Serial)).unwrap();
+            let mut parallel =
+                MultiRail::new(&cfg(cluster.clone(), nodes, mode, ExecMode::Parallel)).unwrap();
+            // hot large ops (multi-rail), then a small op (cold single-rail)
+            for (op, bytes) in [(0u32, 64u64 << 20), (1, 256 << 20), (2, 1 << 20)] {
+                let salt = op as usize + nodes;
+                let mut sb = UnboundBuffer::from_fn(nodes, LEN, fill(salt));
+                let mut pb = UnboundBuffer::from_fn(nodes, LEN, fill(salt));
+                let elem_bytes = bytes as f64 / LEN as f64;
+                let rs = serial.allreduce_scaled(&mut sb, elem_bytes).unwrap();
+                let rp = parallel.allreduce_scaled(&mut pb, elem_bytes).unwrap();
+                assert_eq!(rs.total_us, rp.total_us, "{tag} op {op}: modeled time diverged");
+                assert_eq!(rs.per_rail.len(), rp.per_rail.len(), "{tag} op {op}");
+                for (a, b) in rs.per_rail.iter().zip(&rp.per_rail) {
+                    assert_eq!(a.rail, b.rail, "{tag} op {op}");
+                    assert_eq!(a.bytes, b.bytes, "{tag} op {op} rail {}", a.rail);
+                    assert_eq!(a.time_us, b.time_us, "{tag} op {op} rail {}", a.rail);
+                }
+                for n in 0..nodes {
+                    assert_eq!(sb.node(n), pb.node(n), "{tag} op {op} node {n}: numerics diverged");
+                }
+                check_reduced(&pb, nodes, salt, &tag);
+                // plan validity on planner-scheduled cells (forced flat
+                // dispatch records no plan, by design)
+                if mode == PlannerMode::Flat {
+                    assert!(serial.last_plan.is_none(), "{tag}");
+                } else {
+                    let plan = serial.last_plan.as_ref().unwrap_or_else(|| {
+                        panic!("{tag} op {op}: planner-scheduled op must record a plan")
+                    });
+                    assert!(plan.conserves(Window::new(0, LEN)), "{tag} op {op}: {plan:?}");
+                    assert!(plan.active_rails() >= 1, "{tag} op {op}");
+                    let total: u64 = rs.per_rail.iter().map(|s| s.bytes).sum();
+                    assert_eq!(total, rs.bytes, "{tag} op {op}: share bytes must cover the op");
+                }
+            }
+        }
+    }
+}
+
+/// Acceptance criterion: on the racked-pods cluster the auto planner
+/// selects a multi-level schedule for large payloads whose modeled
+/// completion beats both the two-level (rack-cut-only) planner and the
+/// flat dispatch, as recorded in the ablation sweep/JSON artifact — while
+/// one-level configurations keep emitting plain two-level plans.
+#[test]
+fn racked_pods_multi_level_beats_two_level_and_flat() {
+    // executed-plan check: the large-payload schedule is a depth-2 cut
+    let mut mr = MultiRail::new(&cfg(
+        ClusterSpec::racked_pods(4, 16),
+        32,
+        PlannerMode::Auto,
+        ExecMode::Serial,
+    ))
+    .unwrap();
+    let bytes = 256u64 << 20;
+    for _ in 0..3 {
+        let mut buf = UnboundBuffer::from_fn(32, LEN, fill(1));
+        mr.allreduce_scaled(&mut buf, bytes as f64 / LEN as f64).unwrap();
+    }
+    let plan = mr.last_plan.as_ref().unwrap();
+    assert!(
+        plan.assignments
+            .iter()
+            .filter(|a| a.bytes > 0)
+            .any(|a| matches!(a.schedule, Schedule::MultiLevel { depth: 2, groups: 2, .. })),
+        "expected a depth-2 multi-level assignment, got {}",
+        plan.label()
+    );
+
+    // sweep check: the ablation JSON records the three-way comparison
+    let rows = multilevel_sweep().unwrap();
+    let large = rows.last().unwrap();
+    assert_eq!(large.bytes, 256 << 20);
+    assert!(
+        large.multi_us < large.two_us && large.multi_us < large.flat_us,
+        "multi-level {} must beat two-level {} and flat {}",
+        large.multi_us,
+        large.two_us,
+        large.flat_us
+    );
+    assert!(large.multi_plan.contains("multi-level"), "{}", large.multi_plan);
+    // the rack-only baseline stays in the two-level family (pre-PR space)
+    assert!(large.two_plan.contains("two-level"), "{}", large.two_plan);
+    let j = multilevel_sweep_json(&rows);
+    assert_eq!(j.get("bench").and_then(|v| v.as_str()), Some("multilevel_topology"));
+    assert_eq!(
+        j.get("results").map(|v| match v {
+            nezha::util::json::Json::Arr(a) => a.len(),
+            _ => 0,
+        }),
+        Some(rows.len())
+    );
+}
+
+/// One-level trees are the pre-PR planner: a pods cluster keeps producing
+/// plain two-level plans (never multi-level), preserving seed behaviour.
+#[test]
+fn one_level_cluster_keeps_two_level_plans() {
+    let mut mr = MultiRail::new(&cfg(
+        ClusterSpec::pods(4),
+        16,
+        PlannerMode::Auto,
+        ExecMode::Serial,
+    ))
+    .unwrap();
+    let bytes = 64u64 << 20;
+    for _ in 0..3 {
+        let mut buf = UnboundBuffer::from_fn(16, LEN, fill(2));
+        mr.allreduce_scaled(&mut buf, bytes as f64 / LEN as f64).unwrap();
+    }
+    let plan = mr.last_plan.as_ref().unwrap();
+    assert!(
+        plan.assignments
+            .iter()
+            .filter(|a| a.bytes > 0)
+            .any(|a| matches!(a.schedule, Schedule::TwoLevel { group: 4, .. })),
+        "{}",
+        plan.label()
+    );
+    for a in &plan.assignments {
+        assert!(
+            !matches!(a.schedule, Schedule::MultiLevel { .. }),
+            "one-level tree must never emit multi-level: {}",
+            plan.label()
+        );
+    }
+}
+
+/// Per-group rail affinity: rails excluded by any group's mask never
+/// carry payload, in planning or execution.
+#[test]
+fn affinity_masks_keep_excluded_rails_idle() {
+    // 4 pod groups, every group allows rail 0 only
+    let cluster = ClusterSpec::pods(4).with_affinity(0, vec![0b01; 4]);
+    let mut mr =
+        MultiRail::new(&cfg(cluster, 16, PlannerMode::Auto, ExecMode::Serial)).unwrap();
+    let bytes = 64u64 << 20;
+    for op in 0..6 {
+        let mut buf = UnboundBuffer::from_fn(16, LEN, fill(op));
+        let rep = mr.allreduce_scaled(&mut buf, bytes as f64 / LEN as f64).unwrap();
+        for s in &rep.per_rail {
+            if s.rail == 1 {
+                assert_eq!(s.bytes, 0, "op {op}: affinity-excluded rail carried payload");
+            }
+        }
+        assert!(rep.per_rail.iter().any(|s| s.rail == 0 && s.bytes > 0), "op {op}");
+        check_reduced(&buf, 16, op, "affinity");
+    }
+    // the preview path honours the mask too
+    let plan = mr.plan_for(bytes).unwrap();
+    assert!(plan.rails().iter().all(|&r| r == 0), "{plan:?}");
+}
+
+/// Unsatisfiable or malformed affinity masks are construction errors.
+#[test]
+fn bad_affinity_masks_are_rejected_at_construction() {
+    // empty intersection across groups
+    let disjoint = ClusterSpec::pods(4).with_affinity(0, vec![0b01, 0b10, 0b01, 0b10]);
+    let err = MultiRail::new(&cfg(disjoint, 16, PlannerMode::Auto, ExecMode::Serial))
+        .unwrap_err();
+    assert!(matches!(err, Error::Topology(_)), "{err:?}");
+    // a mask naming only nonexistent rails
+    let ghost = ClusterSpec::pods(4).with_affinity(0, vec![0b1000; 4]);
+    assert!(MultiRail::new(&cfg(ghost, 16, PlannerMode::Auto, ExecMode::Serial)).is_err());
+}
+
+/// Regression: `ClusterSpec::pods` used to silently accept group sizes
+/// that don't divide the node count; the coordinator now rejects them
+/// with a precise `Error::Topology` at construction.
+#[test]
+fn pods_non_dividing_group_is_a_construction_error() {
+    let err = MultiRail::new(&cfg(ClusterSpec::pods(4), 6, PlannerMode::Auto, ExecMode::Serial))
+        .unwrap_err();
+    match err {
+        Error::Topology(msg) => assert!(msg.contains("does not divide"), "{msg}"),
+        other => panic!("expected Error::Topology, got {other:?}"),
+    }
+    // dividing node counts construct fine
+    assert!(
+        MultiRail::new(&cfg(ClusterSpec::pods(4), 16, PlannerMode::Auto, ExecMode::Serial))
+            .is_ok()
+    );
+    // racked-pods with a node count that splits a pod is rejected too
+    assert!(MultiRail::new(&cfg(
+        ClusterSpec::racked_pods(4, 16),
+        24,
+        PlannerMode::Auto,
+        ExecMode::Serial
+    ))
+    .is_err());
+}

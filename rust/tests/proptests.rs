@@ -12,7 +12,7 @@ use nezha::config::ControlConfig;
 use nezha::net::cpu_pool::CpuPool;
 use nezha::net::protocol::ProtoKind;
 use nezha::net::simnet::Fabric;
-use nezha::net::topology::{ClusterSpec, IntraLink};
+use nezha::net::topology::{ClusterSpec, IntraLink, TopoLevel, TopologyTree};
 use nezha::util::json::Json;
 use nezha::util::rng::Pcg;
 
@@ -359,6 +359,162 @@ fn prop_corrected_cost_monotone_in_measured_slowdown() {
                 ts >= tb - 1e-9,
                 "case {case}: slower rail got cheaper ({ts} < {tb}, k={k})"
             );
+        }
+    }
+}
+
+/// Property: `TopologyTree` validation invariants — randomly built
+/// well-nested trees (uniform and explicit levels, optional affinity)
+/// always validate; breaking any single invariant (non-dividing uniform
+/// size, explicit sizes not summing, non-nesting boundary, non-coarsening
+/// level, zero affinity mask, mask-count mismatch, disjoint per-group
+/// masks) is rejected with `Error::Topology`.
+#[test]
+fn prop_topology_tree_validation_invariants() {
+    use nezha::util::error::Error;
+    let mut rng = Pcg::new(6001);
+    for case in 0..CASES {
+        // nested uniform sizes: g0 | g1 | nodes, strictly increasing
+        let g0 = [2usize, 4][rng.below(2) as usize];
+        let mult = 2 + rng.below(3) as usize; // g1 = g0 * (2..=4)
+        let g1 = g0 * mult;
+        let pods = 2 + rng.below(3) as usize;
+        let nodes = g1 * pods;
+        let n_rails = 2 + rng.below(3) as usize;
+        let mut tree = TopologyTree {
+            levels: vec![
+                TopoLevel::uniform("rack", g0, 5000.0, 8.0),
+                TopoLevel::uniform("pod", g1, 2000.0, 12.0),
+            ],
+        };
+        assert!(tree.validate(nodes, n_rails).is_ok(), "case {case}: valid tree rejected");
+        assert_eq!(tree.group_count(0, nodes), nodes / g0, "case {case}");
+        assert_eq!(tree.max_subgroups(1, nodes), mult, "case {case}");
+        assert!(tree.valid_cut_depth(2, nodes), "case {case}");
+
+        // valid affinity: every group allows rail 0 (plus random extras)
+        let groups1 = nodes / g1;
+        let masks: Vec<u64> = (0..groups1)
+            .map(|_| 0b1 | (rng.below(1 << n_rails as u64) & ((1 << n_rails as u64) - 1)))
+            .collect();
+        tree.levels[1].affinity = Some(masks);
+        assert!(tree.validate(nodes, n_rails).is_ok(), "case {case}: valid affinity rejected");
+
+        // each single-invariant break must be rejected
+        let reject = |t: &TopologyTree, what: &str| {
+            match t.validate(nodes, n_rails) {
+                Err(Error::Topology(_)) => {}
+                other => panic!("case {case}: {what} not rejected ({other:?})"),
+            }
+        };
+        // (a) uniform size that doesn't divide the node count
+        let mut t = tree.clone();
+        t.levels[0] = TopoLevel::uniform("rack", g0 + 1, 5000.0, 8.0);
+        if nodes % (g0 + 1) != 0 {
+            reject(&t, "non-dividing uniform size");
+        }
+        // (b) explicit sizes that don't cover all nodes
+        let mut t = tree.clone();
+        t.levels[0] = TopoLevel::explicit("rack", vec![g0; nodes / g0 - 1], 5000.0, 8.0);
+        reject(&t, "explicit sizes not summing to the node count");
+        // (c) an outer level that splits inner groups
+        let mut t = tree.clone();
+        t.levels[1] = TopoLevel::uniform("pod", g1 + g0 / 2, 2000.0, 12.0);
+        reject(&t, "boundary splitting an inner group");
+        // (d) a non-coarsening repeat level
+        let mut t = tree.clone();
+        t.levels[1] = TopoLevel::uniform("pod", g0, 2000.0, 12.0);
+        reject(&t, "non-coarsening level");
+        // (e) a zero affinity mask (empties that group's rail set)
+        let mut t = tree.clone();
+        let mut masks = vec![u64::MAX; groups1];
+        masks[rng.below(groups1 as u64) as usize] = 0;
+        t.levels[1].affinity = Some(masks);
+        reject(&t, "zero affinity mask");
+        // (f) mask count != group count
+        let mut t = tree.clone();
+        t.levels[1].affinity = Some(vec![u64::MAX; groups1 + 1]);
+        reject(&t, "mask-count mismatch");
+        // (g) per-group masks with an empty intersection
+        if groups1 >= 2 && n_rails >= 2 {
+            let mut t = tree.clone();
+            let mut masks = vec![0b01u64; groups1];
+            masks[0] = 0b10;
+            t.levels[1].affinity = Some(masks);
+            reject(&t, "disjoint per-group masks");
+        }
+    }
+}
+
+/// Property: an N-level tree cut at one uniform level is EXACTLY the
+/// two-level schedule — bitwise plan equality (schedule choice, modeled
+/// and predicted times) between the tree planner and the legacy
+/// `IntraLink` planner, and bitwise numerics + modeled-time equality
+/// between `multi_level_allreduce` at depth 1 and `two_level_allreduce`.
+#[test]
+fn prop_one_level_tree_equivalent_to_two_level() {
+    use nezha::coordinator::planner::hierarchical::{
+        multi_level_allreduce, two_level_allreduce,
+    };
+    let mut rng = Pcg::new(6002);
+    for case in 0..CASES {
+        let g = [2usize, 4, 8][rng.below(3) as usize];
+        let groups = 2 + rng.below(3) as usize;
+        let nodes = g * groups;
+        let bw = rng.range_f64(1000.0, 8000.0);
+        let setup = rng.range_f64(1.0, 30.0);
+        let link = IntraLink { group_size: g, bw_mbps: bw, setup_us: setup };
+        let tree = TopologyTree {
+            levels: vec![TopoLevel::uniform("group", g, bw, setup)],
+        };
+
+        // (1) planner equivalence: identical selection and predictions
+        let rails = ClusterSpec::local()
+            .build_rails(&[ProtoKind::Tcp, ProtoKind::Glex])
+            .unwrap();
+        let fab = Fabric::new(nodes, rails, CpuPool::default(), case as u64).deterministic();
+        let legacy = Planner::new(Some(link.clone()));
+        let treed = Planner::with_tree(tree.clone());
+        let timer = Timer::new(100);
+        let bytes = 1u64 << (12 + rng.below(17));
+        for rail in 0..2 {
+            let (sa, ta) = legacy.schedule_for(&fab, &timer, rail, bytes as f64);
+            let (sb, tb) = treed.schedule_for(&fab, &timer, rail, bytes as f64);
+            assert_eq!(sa, sb, "case {case} rail {rail}");
+            assert_eq!(ta, tb, "case {case} rail {rail}: prediction diverged");
+        }
+
+        // (2) executable equivalence: bitwise times + numerics
+        let len = 64 + rng.below(1500) as usize;
+        let elem_bytes = (1u64 << (16 + rng.below(10))) as f64 / len as f64;
+        let chunks = [1usize, 2, 4, 8][rng.below(4) as usize];
+        let salt = rng.below(13) as usize;
+        let fill = move |n: usize, i: usize| ((n * 5 + i + salt) % 11) as f32;
+        let mk_fab = || {
+            let rails = ClusterSpec::local().build_rails(&[ProtoKind::Tcp]).unwrap();
+            // jitter ON: the schedules must draw identical sample streams
+            Fabric::new(nodes, rails, CpuPool::default(), 9000 + case as u64)
+        };
+        let mut fab_a = mk_fab();
+        let mut fab_b = mk_fab();
+        fab_a.begin_op();
+        fab_b.begin_op();
+        let mut a = UnboundBuffer::from_fn(nodes, len, fill);
+        let mut b = UnboundBuffer::from_fn(nodes, len, fill);
+        let w = a.full_window();
+        let oa = multi_level_allreduce(
+            &mut fab_a, 0, &mut a, w, &mut RustReducer, elem_bytes, &tree, 1, chunks,
+        )
+        .unwrap();
+        let ob = two_level_allreduce(
+            &mut fab_b, 0, &mut b, w, &mut RustReducer, elem_bytes, &link, chunks,
+        )
+        .unwrap();
+        assert_eq!(oa.time_us, ob.time_us, "case {case}: modeled time diverged");
+        assert_eq!(oa.bytes_moved, ob.bytes_moved, "case {case}");
+        assert_eq!(oa.steps, ob.steps, "case {case}");
+        for n in 0..nodes {
+            assert_eq!(a.node(n), b.node(n), "case {case} node {n}: numerics diverged");
         }
     }
 }
