@@ -446,6 +446,7 @@ pub fn run(id: &str) -> Result<()> {
         "ablate-multilevel" | "ablate_multilevel" | "multilevel" => {
             super::ablation::ablate_multilevel()
         }
+        "ablate-tenancy" | "ablate_tenancy" | "tenancy" => super::ablation::ablate_tenancy(),
         "plan-quality" | "plan_quality" | "planq" => super::harness::plan_quality_fig(),
         "all" => {
             for id in [
@@ -459,7 +460,7 @@ pub fn run(id: &str) -> Result<()> {
         }
         other => Err(crate::util::error::Error::Config(format!(
             "unknown figure `{other}` (fig2..fig19, table1, headline, plan-quality, \
-             ablate-multilevel, all)"
+             ablate-multilevel, ablate-tenancy, all)"
         ))),
     }
 }

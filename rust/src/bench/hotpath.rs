@@ -33,6 +33,7 @@ use std::time::Instant;
 
 use crate::bench::harness::{bench_wall, mean_allreduce_us};
 use crate::config::{Config, Policy};
+use crate::coordinator::arbiter::{ArbiterMode, FabricArbiter, JobSpec, PriorityClass};
 use crate::coordinator::buffer::{BufferPool, UnboundBuffer};
 use crate::coordinator::collective::reducer::{
     add_into_lanes, reduce_copy_lanes, KERNEL_LANES,
@@ -278,6 +279,46 @@ pub fn policy_sim_wall(quick: bool) -> Result<(f64, u64, f64)> {
     Ok((wall, ops, ops as f64 / wall))
 }
 
+/// Tenant counts of the multi-tenancy wall-clock sweep.
+pub const TENANCY_JOBS: [usize; 3] = [1, 2, 4];
+
+/// Multi-tenant aggregate wall-clock sweep: ops/sec summed over N
+/// concurrent tenants sharing the dual-TCP fabric under the arbiter's
+/// fair-share grants (solo vs 2-job vs 4-job), each tenant running the
+/// canonical 8 MiB modeled payload through its own coordinator. Tracks
+/// the arbiter's per-window orchestration overhead — record, don't gate.
+pub fn tenancy_wall_sweep(quick: bool) -> Result<Vec<(usize, f64)>> {
+    let (warm, reps) = if quick { (5, 40) } else { (20, 200) };
+    let mut out = Vec::with_capacity(TENANCY_JOBS.len());
+    for &jobs in &TENANCY_JOBS {
+        let mut arb = FabricArbiter::new(ArbiterMode::FairShare, 2);
+        for k in 0..jobs {
+            let cfg = Config {
+                nodes: NODES,
+                combo: parse_combo(COMBO)?,
+                policy: Policy::Nezha,
+                deterministic: true,
+                exec: ExecMode::Serial,
+                ..Config::default()
+            };
+            arb.admit(
+                JobSpec::new(&format!("t{k}"), PriorityClass::Standard).payload(8 << 20),
+                NODES,
+                MultiRail::new(&cfg)?,
+            );
+        }
+        for _ in 0..warm {
+            arb.step()?;
+        }
+        let t = Instant::now();
+        for _ in 0..reps {
+            arb.step()?;
+        }
+        out.push((jobs, (reps * jobs) as f64 / t.elapsed().as_secs_f64()));
+    }
+    Ok(out)
+}
+
 /// The full BENCH_hotpath.json document.
 pub fn hotpath_json(quick: bool) -> Result<Json> {
     let rows = sweep(quick)?;
@@ -293,6 +334,7 @@ pub fn hotpath_json(quick: bool) -> Result<Json> {
     let widths = kernel_width_sweep();
     let (add_gbps, rc_gbps) = kernel_gbps();
     let (sim_wall_s, sim_ops, sim_ops_per_sec) = policy_sim_wall(quick)?;
+    let tenancy_rows = tenancy_wall_sweep(quick)?;
     let sweep_json: Vec<Json> = rows
         .iter()
         .map(|r| {
@@ -373,6 +415,29 @@ pub fn hotpath_json(quick: bool) -> Result<Json> {
                 ("wall_seconds", Json::from(sim_wall_s)),
                 ("modeled_ops", Json::from(sim_ops as f64)),
                 ("ops_per_sec", Json::from(sim_ops_per_sec)),
+            ]),
+        ),
+        // multi-tenant arbiter orchestration overhead: aggregate ops/sec
+        // over concurrent fair-share tenants (solo vs 2-job vs 4-job)
+        (
+            "tenancy",
+            Json::obj(vec![
+                ("nodes", Json::from(NODES)),
+                ("combo", Json::from(COMBO)),
+                (
+                    "sweep",
+                    Json::Arr(
+                        tenancy_rows
+                            .iter()
+                            .map(|&(jobs, ops)| {
+                                Json::obj(vec![
+                                    ("jobs", Json::from(jobs)),
+                                    ("aggregate_ops_per_sec", Json::from(ops)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
             ]),
         ),
     ]))

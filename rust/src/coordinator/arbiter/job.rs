@@ -1,0 +1,187 @@
+//! Tenant jobs: what the [`crate::coordinator::arbiter::FabricArbiter`]
+//! admits onto the shared rails.
+//!
+//! A job is a full [`MultiRail`] coordinator (its own fabric clock, RNG
+//! streams, control plane and planner) plus an admission spec: priority
+//! class, fair-share weight, payload profile and the rails it may ride.
+//! Keeping each tenant's fabric state private is what makes per-job
+//! numerics (and, at fixed grants, per-job modeled times) bit-identical
+//! to a solo run — contention enters exclusively through the arbiter's
+//! granted bandwidth shares, never through shared RNG or clocks.
+
+use crate::coordinator::multirail::MultiRail;
+
+/// BytePS-style consumption priority (SNIPPETS.md §2): what the arbiter
+/// protects when rails are oversubscribed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PriorityClass {
+    /// Small, deadline-sensitive collectives (parameter broadcasts, the
+    /// paper's "heavy traffic" foreground) — preempts everything below.
+    Latency,
+    /// Ordinary training jobs.
+    Standard,
+    /// Bulk background transfers (checkpoint shuffles, dataset moves):
+    /// first to be squeezed to the preemption residual.
+    Scavenger,
+}
+
+impl PriorityClass {
+    /// Strict-priority rank: lower = more urgent.
+    pub fn rank(self) -> u8 {
+        match self {
+            PriorityClass::Latency => 0,
+            PriorityClass::Standard => 1,
+            PriorityClass::Scavenger => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PriorityClass::Latency => "latency",
+            PriorityClass::Standard => "standard",
+            PriorityClass::Scavenger => "scavenger",
+        }
+    }
+}
+
+/// Admission spec for one tenant job.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    pub class: PriorityClass,
+    /// Fair-share weight (relative to the other tenants on each rail).
+    pub weight: f64,
+    /// Modeled payload bytes per collective op — the job's traffic
+    /// profile, used by [`super::FabricArbiter::step`] and the tenancy
+    /// ablation to synthesize each tenant's op stream.
+    pub payload_bytes: u64,
+    /// Rails this job may ride (bit `r` = rail `r`); all rails when the
+    /// mask covers them.
+    pub rail_mask: u64,
+    /// Price granted shares through the job's own planner
+    /// ([`crate::coordinator::planner::cost::contended_us`]) so plans
+    /// shift under contention. Contention-blind tenants (the ablation
+    /// baseline) keep static-cost plans and only feel the squeeze
+    /// through their corrected-cost EWMA, several ops late.
+    pub contended_pricing: bool,
+}
+
+impl JobSpec {
+    pub fn new(name: &str, class: PriorityClass) -> JobSpec {
+        JobSpec {
+            name: name.to_string(),
+            class,
+            weight: 1.0,
+            payload_bytes: 4 << 20,
+            rail_mask: u64::MAX,
+            contended_pricing: true,
+        }
+    }
+
+    pub fn weight(mut self, w: f64) -> JobSpec {
+        self.weight = w.max(1e-6);
+        self
+    }
+
+    pub fn payload(mut self, bytes: u64) -> JobSpec {
+        self.payload_bytes = bytes.max(1);
+        self
+    }
+
+    pub fn rails(mut self, mask: u64) -> JobSpec {
+        self.rail_mask = mask;
+        self
+    }
+
+    /// Contention-blind static-cost planning (the ablation baseline).
+    pub fn contention_blind(mut self) -> JobSpec {
+        self.contended_pricing = false;
+        self
+    }
+
+    /// True when this spec admits `rail`.
+    pub fn admits(&self, rail: usize) -> bool {
+        rail >= 64 || self.rail_mask & (1u64 << rail) != 0
+    }
+}
+
+/// Stable tenant identity, assigned at admission in arrival order. All
+/// ledger iteration is keyed by ascending `JobId` — the determinism
+/// anchor for grant recomputation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+/// One admitted tenant: spec + its private coordinator + op history.
+pub struct TenantJob {
+    pub id: JobId,
+    pub spec: JobSpec,
+    /// Participating node count (the `Config::nodes` the coordinator was
+    /// built with) — needed to synthesize this tenant's op stream.
+    pub nodes: usize,
+    pub mr: MultiRail,
+    /// Completed collective ops.
+    pub ops: u64,
+    /// Per-op end-to-end modeled latencies (us), op order.
+    pub latencies_us: Vec<f64>,
+}
+
+impl TenantJob {
+    /// p99 op latency (max of the top percentile; None before any op).
+    pub fn p99_us(&self) -> Option<f64> {
+        percentile(&self.latencies_us, 0.99)
+    }
+
+    pub fn mean_us(&self) -> Option<f64> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        Some(self.latencies_us.iter().sum::<f64>() / self.latencies_us.len() as f64)
+    }
+}
+
+/// Nearest-rank percentile over an unsorted sample set.
+pub fn percentile(samples: &[f64], q: f64) -> Option<f64> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((q * v.len() as f64).ceil() as usize).clamp(1, v.len());
+    Some(v[rank - 1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_order_the_classes() {
+        assert!(PriorityClass::Latency.rank() < PriorityClass::Standard.rank());
+        assert!(PriorityClass::Standard.rank() < PriorityClass::Scavenger.rank());
+    }
+
+    #[test]
+    fn spec_builder_and_admission_mask() {
+        let s = JobSpec::new("bg", PriorityClass::Scavenger)
+            .weight(2.0)
+            .payload(1 << 20)
+            .rails(0b10);
+        assert_eq!(s.weight, 2.0);
+        assert_eq!(s.payload_bytes, 1 << 20);
+        assert!(!s.admits(0));
+        assert!(s.admits(1));
+        assert!(s.contended_pricing);
+        assert!(!s.contention_blind().contended_pricing);
+        // defaults admit everything
+        assert!(JobSpec::new("fg", PriorityClass::Latency).admits(7));
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.99), Some(99.0));
+        assert_eq!(percentile(&v, 0.5), Some(50.0));
+        assert_eq!(percentile(&[7.0], 0.99), Some(7.0));
+        assert_eq!(percentile(&[], 0.99), None);
+    }
+}

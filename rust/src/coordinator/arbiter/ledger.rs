@@ -1,0 +1,248 @@
+//! Grant ledger: per-rail bandwidth-share bookkeeping for the arbiter.
+//!
+//! The ledger is pure arithmetic over `(JobId, JobSpec)` snapshots — no
+//! fabric access, no clocks — so grant recomputation is trivially
+//! deterministic: eligible jobs are visited in ascending [`JobId`] and
+//! shares are closed-form weight ratios. Two invariants the proptests in
+//! `rust/tests/integration_arbiter.rs` hammer on:
+//!
+//! 1. **Conservation:** grants on a rail sum to ≤ 1.0 (+ε). A rail with
+//!    any eligible tenant is fully subscribed (sum == 1.0); an empty
+//!    rail grants nothing.
+//! 2. **Determinism:** recomputing from the same job set reproduces the
+//!    same grants bit-for-bit, independent of arrival history.
+
+use std::collections::HashMap;
+
+use super::job::{JobId, JobSpec};
+
+/// How contended rails are divided between tenants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArbiterMode {
+    /// Weighted max-min: every eligible job gets `w_j / Σw` of each rail
+    /// regardless of class. Simple and work-conserving, but a scavenger
+    /// bulk tenant dilutes latency-class collectives.
+    FairShare,
+    /// The most urgent class present on a rail splits
+    /// `1 − PREEMPTED_RESIDUAL` by weight; all lower classes share the
+    /// residual. Window-boundary preemption: grants change only between
+    /// collectives (ops are atomic in modeled time), so preemption never
+    /// tears an op mid-flight.
+    StrictPriority,
+}
+
+impl ArbiterMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArbiterMode::FairShare => "fair-share",
+            ArbiterMode::StrictPriority => "strict-priority",
+        }
+    }
+}
+
+/// Bandwidth fraction left to preempted (lower-class) tenants under
+/// [`ArbiterMode::StrictPriority`]. Non-zero so scavengers starve slowly
+/// instead of deadlocking, and chosen so that even 3 scavengers splitting
+/// it (0.05/3 ≈ 0.017) stay above the fabric's
+/// [`crate::net::simnet::MIN_RAIL_SHARE`] floor of 0.01.
+pub const PREEMPTED_RESIDUAL: f64 = 0.05;
+
+/// Per-rail grant table, rebuilt on every churn event.
+#[derive(Debug, Clone)]
+pub struct GrantLedger {
+    /// `rails[r]` = (job, share) pairs in ascending JobId order.
+    rails: Vec<Vec<(JobId, f64)>>,
+    /// Jobs squeezed into the preemption residual on at least one rail
+    /// during the latest `recompute` (strict-priority only).
+    preempted: Vec<JobId>,
+}
+
+impl GrantLedger {
+    pub fn new(n_rails: usize) -> GrantLedger {
+        GrantLedger { rails: vec![Vec::new(); n_rails], preempted: Vec::new() }
+    }
+
+    pub fn n_rails(&self) -> usize {
+        self.rails.len()
+    }
+
+    /// Rebuild all grants from the current tenant set. `jobs` must be in
+    /// ascending [`JobId`] order (the arbiter's invariant); the ledger
+    /// preserves that order per rail.
+    pub fn recompute(&mut self, mode: ArbiterMode, jobs: &[(JobId, &JobSpec)]) {
+        debug_assert!(jobs.windows(2).all(|w| w[0].0 < w[1].0));
+        self.preempted.clear();
+        let mut preempted: HashMap<JobId, bool> = HashMap::new();
+        for rail in 0..self.rails.len() {
+            let eligible: Vec<(JobId, &JobSpec)> =
+                jobs.iter().filter(|(_, s)| s.admits(rail)).map(|&(id, s)| (id, s)).collect();
+            let grants = &mut self.rails[rail];
+            grants.clear();
+            if eligible.is_empty() {
+                continue;
+            }
+            match mode {
+                ArbiterMode::FairShare => {
+                    let total: f64 = eligible.iter().map(|(_, s)| s.weight).sum();
+                    for (id, s) in &eligible {
+                        grants.push((*id, s.weight / total));
+                    }
+                }
+                ArbiterMode::StrictPriority => {
+                    let top = eligible.iter().map(|(_, s)| s.class.rank()).min().unwrap();
+                    let has_lower = eligible.iter().any(|(_, s)| s.class.rank() > top);
+                    let residual = if has_lower { PREEMPTED_RESIDUAL } else { 0.0 };
+                    let w_top: f64 = eligible
+                        .iter()
+                        .filter(|(_, s)| s.class.rank() == top)
+                        .map(|(_, s)| s.weight)
+                        .sum();
+                    let w_low: f64 = eligible
+                        .iter()
+                        .filter(|(_, s)| s.class.rank() > top)
+                        .map(|(_, s)| s.weight)
+                        .sum();
+                    for (id, s) in &eligible {
+                        let g = if s.class.rank() == top {
+                            (1.0 - residual) * s.weight / w_top
+                        } else {
+                            preempted.insert(*id, true);
+                            residual * s.weight / w_low
+                        };
+                        grants.push((*id, g));
+                    }
+                }
+            }
+        }
+        self.preempted = preempted.into_keys().collect();
+        self.preempted.sort();
+    }
+
+    /// Granted share of `rail` for `job`; `None` when the job is not
+    /// eligible there (the arbiter then leaves that rail's share alone —
+    /// the job's own mask already keeps it off the rail).
+    pub fn grant(&self, rail: usize, job: JobId) -> Option<f64> {
+        self.rails.get(rail)?.iter().find(|(id, _)| *id == job).map(|&(_, g)| g)
+    }
+
+    /// Sum of grants on `rail` (conservation check; 0.0 for empty rails).
+    pub fn rail_sum(&self, rail: usize) -> f64 {
+        self.rails[rail].iter().map(|&(_, g)| g).sum()
+    }
+
+    /// Jobs preempted to the residual in the latest recompute, ascending.
+    pub fn preempted(&self) -> &[JobId] {
+        &self.preempted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::arbiter::job::PriorityClass;
+
+    fn specs(list: &[(u64, JobSpec)]) -> Vec<(JobId, JobSpec)> {
+        list.iter().map(|(id, s)| (JobId(*id), s.clone())).collect()
+    }
+
+    fn refs(owned: &[(JobId, JobSpec)]) -> Vec<(JobId, &JobSpec)> {
+        owned.iter().map(|(id, s)| (*id, s)).collect()
+    }
+
+    #[test]
+    fn fair_share_splits_by_weight_and_conserves() {
+        let owned = specs(&[
+            (0, JobSpec::new("a", PriorityClass::Standard).weight(1.0)),
+            (1, JobSpec::new("b", PriorityClass::Scavenger).weight(3.0)),
+        ]);
+        let mut l = GrantLedger::new(2);
+        l.recompute(ArbiterMode::FairShare, &refs(&owned));
+        assert!((l.grant(0, JobId(0)).unwrap() - 0.25).abs() < 1e-12);
+        assert!((l.grant(0, JobId(1)).unwrap() - 0.75).abs() < 1e-12);
+        for rail in 0..2 {
+            assert!((l.rail_sum(rail) - 1.0).abs() < 1e-12);
+        }
+        assert!(l.preempted().is_empty(), "fair-share never preempts");
+    }
+
+    #[test]
+    fn strict_priority_preempts_lower_classes_to_residual() {
+        let owned = specs(&[
+            (0, JobSpec::new("fg", PriorityClass::Latency)),
+            (1, JobSpec::new("bg1", PriorityClass::Scavenger)),
+            (2, JobSpec::new("bg2", PriorityClass::Scavenger)),
+            (3, JobSpec::new("bg3", PriorityClass::Scavenger)),
+        ]);
+        let mut l = GrantLedger::new(1);
+        l.recompute(ArbiterMode::StrictPriority, &refs(&owned));
+        let fg = l.grant(0, JobId(0)).unwrap();
+        assert!((fg - (1.0 - PREEMPTED_RESIDUAL)).abs() < 1e-12);
+        for id in 1..4 {
+            let g = l.grant(0, JobId(id)).unwrap();
+            assert!((g - PREEMPTED_RESIDUAL / 3.0).abs() < 1e-12);
+            // residual splits must stay above the fabric's share floor
+            assert!(g >= crate::net::simnet::MIN_RAIL_SHARE);
+        }
+        assert!((l.rail_sum(0) - 1.0).abs() < 1e-12);
+        assert_eq!(l.preempted(), &[JobId(1), JobId(2), JobId(3)]);
+    }
+
+    #[test]
+    fn strict_priority_sole_class_takes_everything() {
+        let owned = specs(&[
+            (0, JobSpec::new("a", PriorityClass::Scavenger).weight(1.0)),
+            (1, JobSpec::new("b", PriorityClass::Scavenger).weight(1.0)),
+        ]);
+        let mut l = GrantLedger::new(1);
+        l.recompute(ArbiterMode::StrictPriority, &refs(&owned));
+        // no lower class present: residual collapses to zero
+        assert!((l.grant(0, JobId(0)).unwrap() - 0.5).abs() < 1e-12);
+        assert!((l.rail_sum(0) - 1.0).abs() < 1e-12);
+        assert!(l.preempted().is_empty());
+    }
+
+    #[test]
+    fn rail_masks_gate_eligibility() {
+        let owned = specs(&[
+            (0, JobSpec::new("a", PriorityClass::Standard).rails(0b01)),
+            (1, JobSpec::new("b", PriorityClass::Standard).rails(0b10)),
+        ]);
+        let mut l = GrantLedger::new(2);
+        l.recompute(ArbiterMode::FairShare, &refs(&owned));
+        assert_eq!(l.grant(0, JobId(0)), Some(1.0));
+        assert_eq!(l.grant(0, JobId(1)), None);
+        assert_eq!(l.grant(1, JobId(0)), None);
+        assert_eq!(l.grant(1, JobId(1)), Some(1.0));
+    }
+
+    #[test]
+    fn empty_rail_grants_nothing() {
+        let owned = specs(&[(0, JobSpec::new("a", PriorityClass::Standard).rails(0b01))]);
+        let mut l = GrantLedger::new(2);
+        l.recompute(ArbiterMode::FairShare, &refs(&owned));
+        assert_eq!(l.rail_sum(1), 0.0);
+        assert_eq!(l.grant(1, JobId(0)), None);
+    }
+
+    #[test]
+    fn recompute_is_deterministic() {
+        let owned = specs(&[
+            (2, JobSpec::new("a", PriorityClass::Latency).weight(1.7)),
+            (5, JobSpec::new("b", PriorityClass::Scavenger).weight(0.3)),
+            (9, JobSpec::new("c", PriorityClass::Standard).weight(2.2).rails(0b01)),
+        ]);
+        let mut a = GrantLedger::new(2);
+        let mut b = GrantLedger::new(2);
+        a.recompute(ArbiterMode::StrictPriority, &refs(&owned));
+        b.recompute(ArbiterMode::StrictPriority, &refs(&owned));
+        for rail in 0..2 {
+            for (id, _) in &owned {
+                assert_eq!(
+                    a.grant(rail, *id).map(f64::to_bits),
+                    b.grant(rail, *id).map(f64::to_bits),
+                    "grant differs at rail {rail} job {id:?}"
+                );
+            }
+        }
+    }
+}

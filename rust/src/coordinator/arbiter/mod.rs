@@ -1,0 +1,360 @@
+//! Multi-tenant fabric arbiter: concurrent [`MultiRail`] jobs sharing
+//! the same physical rails under priority classes and fair-share
+//! weights.
+//!
+//! # Architecture
+//!
+//! Each admitted tenant keeps its **own** coordinator — fabric clock,
+//! RNG streams, planner, control plane — exactly as if it ran solo. The
+//! arbiter owns only the *admission* state: a [`GrantLedger`] mapping
+//! `(rail, job)` to a bandwidth share, recomputed at every churn event
+//! (admit/depart). Grants are applied through
+//! [`MultiRail::set_rail_grant`], which (a) inflates that tenant's
+//! modeled transfer times on the fabric's live sampling paths and
+//! (b) — for contended-pricing tenants — feeds the share into the
+//! planner's [`crate::coordinator::planner::cost::contended_us`] so the
+//! next plan is chosen against *contended* costs, not solo costs.
+//!
+//! # Window-boundary preemption
+//!
+//! Collectives are atomic in modeled time: a grant change takes effect
+//! at the next op, never mid-op. Under
+//! [`ArbiterMode::StrictPriority`] a latency-class arrival therefore
+//! preempts scavenger bulk at the next window boundary — the scavenger
+//! finishes its in-flight collective at the old share and runs every
+//! subsequent one at the [`ledger::PREEMPTED_RESIDUAL`] trickle.
+//!
+//! # Per-job bit-identity
+//!
+//! Because tenants share no RNG, no clock and no buffers, a tenant's
+//! *numerics* (reduced values) are bit-identical to its solo run in
+//! every arbiter configuration — contention scales modeled time only.
+//! And since contended predictions algebraically match contended
+//! measurements, correction EWMAs stay at 1.0, so restoring a grant to
+//! 1.0 reproduces solo modeled times bit-exactly too. The
+//! `integration_arbiter` matrix asserts both properties across
+//! {1,2,4 jobs} x {fair-share, strict-priority} x {serial, parallel}.
+
+pub mod job;
+pub mod ledger;
+
+pub use job::{JobId, JobSpec, PriorityClass, TenantJob};
+pub use ledger::{ArbiterMode, GrantLedger, PREEMPTED_RESIDUAL};
+
+use crate::coordinator::buffer::UnboundBuffer;
+use crate::coordinator::multirail::{MultiRail, OpReport};
+use crate::util::error::Error;
+use crate::Result;
+
+/// Modeled cost charged to every tenant whose grants change at a churn
+/// event: plan-cache flush + first contended replan + rail window
+/// re-registration. Well under the paper's 200 ms recovery budget
+/// ([`crate::coordinator::control::exception::PAPER_RECOVERY_BUDGET_US`]),
+/// which the churn ledger asserts against.
+pub const DEFAULT_MIGRATE_COST_US: f64 = 40_000.0;
+
+/// Buffer length used by [`FabricArbiter::step`]'s synthesized ops; the
+/// spec'd payload is modeled through per-element byte scaling.
+pub const SYNTH_ELEMS: usize = 4096;
+
+/// What happened at a churn event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnKind {
+    Admit,
+    Depart,
+}
+
+/// One admission-state change and the replan cost it induced.
+#[derive(Debug, Clone, Copy)]
+pub struct ChurnEvent {
+    /// Arbiter wall clock (max tenant fabric clock) after the event.
+    pub at_us: f64,
+    /// The job that arrived or departed.
+    pub job: JobId,
+    pub kind: ChurnKind,
+    /// Modeled replan cost charged to each re-granted tenant (0.0 when
+    /// the event changed no grants, e.g. the first solo admission).
+    pub replan_us: f64,
+    /// Tenants whose grants actually changed.
+    pub jobs_replanned: usize,
+}
+
+/// The arbiter: admission control + grant accounting over N tenants.
+pub struct FabricArbiter {
+    mode: ArbiterMode,
+    n_rails: usize,
+    /// Ascending [`JobId`] — the determinism anchor shared with the ledger.
+    jobs: Vec<TenantJob>,
+    next_id: u64,
+    ledger: GrantLedger,
+    /// Per-tenant modeled cost of a grant migration (see
+    /// [`DEFAULT_MIGRATE_COST_US`]); tunable for what-if churn studies.
+    pub migrate_cost_us: f64,
+    churn: Vec<ChurnEvent>,
+}
+
+impl FabricArbiter {
+    pub fn new(mode: ArbiterMode, n_rails: usize) -> FabricArbiter {
+        FabricArbiter {
+            mode,
+            n_rails,
+            jobs: Vec::new(),
+            next_id: 0,
+            ledger: GrantLedger::new(n_rails),
+            migrate_cost_us: DEFAULT_MIGRATE_COST_US,
+            churn: Vec::new(),
+        }
+    }
+
+    pub fn mode(&self) -> ArbiterMode {
+        self.mode
+    }
+
+    pub fn n_rails(&self) -> usize {
+        self.n_rails
+    }
+
+    pub fn jobs(&self) -> &[TenantJob] {
+        &self.jobs
+    }
+
+    pub fn job(&self, id: JobId) -> Option<&TenantJob> {
+        self.jobs.iter().find(|j| j.id == id)
+    }
+
+    pub fn job_mut(&mut self, id: JobId) -> Option<&mut TenantJob> {
+        self.jobs.iter_mut().find(|j| j.id == id)
+    }
+
+    pub fn ledger(&self) -> &GrantLedger {
+        &self.ledger
+    }
+
+    pub fn churn(&self) -> &[ChurnEvent] {
+        &self.churn
+    }
+
+    /// Admit a tenant built for `nodes` participants. The coordinator
+    /// must ride a fabric with the arbiter's rail count; grants across
+    /// all tenants are rebalanced immediately (the new tenant's first
+    /// collectives already run at contended shares).
+    pub fn admit(&mut self, spec: JobSpec, nodes: usize, mr: MultiRail) -> JobId {
+        assert_eq!(
+            mr.fab.rails.len(),
+            self.n_rails,
+            "tenant fabric rail count must match the arbiter"
+        );
+        let id = JobId(self.next_id);
+        self.next_id += 1;
+        self.jobs.push(TenantJob { id, spec, nodes, mr, ops: 0, latencies_us: Vec::new() });
+        self.rebalance(id, ChurnKind::Admit);
+        id
+    }
+
+    /// Remove a tenant, restore its grants to solo (so the returned
+    /// coordinator behaves standalone) and rebalance the survivors.
+    pub fn depart(&mut self, id: JobId) -> Option<TenantJob> {
+        let pos = self.jobs.iter().position(|j| j.id == id)?;
+        let mut gone = self.jobs.remove(pos);
+        for rail in 0..self.n_rails {
+            if gone.spec.admits(rail) {
+                gone.mr.set_rail_grant(rail, 1.0, gone.spec.contended_pricing);
+            }
+        }
+        self.rebalance(id, ChurnKind::Depart);
+        Some(gone)
+    }
+
+    /// Recompute the ledger and push changed grants into each tenant.
+    /// Tenants whose effective share moved pay `migrate_cost_us` on
+    /// their own fabric clock — the modeled price of the plan-cache
+    /// flush and first contended replan.
+    fn rebalance(&mut self, subject: JobId, kind: ChurnKind) {
+        let snapshot: Vec<(JobId, JobSpec)> =
+            self.jobs.iter().map(|j| (j.id, j.spec.clone())).collect();
+        let refs: Vec<(JobId, &JobSpec)> = snapshot.iter().map(|(id, s)| (*id, s)).collect();
+        self.ledger.recompute(self.mode, &refs);
+        let mut replanned = 0usize;
+        for j in self.jobs.iter_mut() {
+            let mut touched = false;
+            for rail in 0..self.n_rails {
+                if let Some(g) = self.ledger.grant(rail, j.id) {
+                    if (g - j.mr.rail_grant(rail)).abs() > 1e-12 {
+                        j.mr.set_rail_grant(rail, g, j.spec.contended_pricing);
+                        touched = true;
+                    }
+                }
+            }
+            if touched {
+                j.mr.fab.advance(self.migrate_cost_us);
+                replanned += 1;
+            }
+        }
+        let at_us = self.wall_us();
+        self.churn.push(ChurnEvent {
+            at_us,
+            job: subject,
+            kind,
+            replan_us: if replanned > 0 { self.migrate_cost_us } else { 0.0 },
+            jobs_replanned: replanned,
+        });
+    }
+
+    /// Run one collective for `id` on the caller's buffer, recording the
+    /// op latency. The report is returned un-recycled (callers verifying
+    /// numerics want `per_rail`; steady-state callers hand it back via
+    /// `job_mut(id).mr.recycle(rep)`).
+    pub fn run_op(&mut self, id: JobId, buf: &mut UnboundBuffer) -> Result<OpReport> {
+        self.run_op_scaled(id, buf, 4.0)
+    }
+
+    /// [`Self::run_op`] with the crate's scaled-op idiom: the op models
+    /// `buf.len() * elem_bytes` payload bytes while numerics run over the
+    /// buffer as-is — big-payload tenancy studies without big buffers.
+    pub fn run_op_scaled(
+        &mut self,
+        id: JobId,
+        buf: &mut UnboundBuffer,
+        elem_bytes: f64,
+    ) -> Result<OpReport> {
+        let j = self
+            .jobs
+            .iter_mut()
+            .find(|j| j.id == id)
+            .ok_or_else(|| Error::msg(format!("arbiter: unknown job {id:?}")))?;
+        let rep = j.mr.allreduce_scaled(buf, elem_bytes)?;
+        j.ops += 1;
+        j.latencies_us.push(rep.total_us);
+        Ok(rep)
+    }
+
+    /// One scheduling window: every tenant (ascending id) runs one
+    /// collective of its spec'd payload on a synthesized
+    /// [`SYNTH_ELEMS`]-element buffer (scaled to the payload). The
+    /// bench/ablation driver for sustained multi-tenant load.
+    pub fn step(&mut self) -> Result<()> {
+        let ids: Vec<JobId> = self.jobs.iter().map(|j| j.id).collect();
+        for id in ids {
+            let (nodes, payload) = {
+                let j = self.job(id).expect("job vanished mid-step");
+                (j.nodes, j.spec.payload_bytes as f64)
+            };
+            let mut buf =
+                UnboundBuffer::from_fn(nodes, SYNTH_ELEMS, |n, i| ((n + 1) * (i % 13 + 1)) as f32);
+            let rep = self.run_op_scaled(id, &mut buf, payload / SYNTH_ELEMS as f64)?;
+            self.job_mut(id).expect("job vanished mid-step").mr.recycle(rep);
+        }
+        Ok(())
+    }
+
+    /// Arbiter wall clock: the furthest tenant fabric clock (tenants
+    /// progress concurrently in modeled time).
+    pub fn wall_us(&self) -> f64 {
+        self.jobs.iter().map(|j| j.mr.fab.now_us()).fold(0.0, f64::max)
+    }
+
+    /// Aggregate modeled goodput across all live tenants (payload bytes
+    /// reduced per wall-clock microsecond, in GB/s).
+    pub fn aggregate_gbps(&self) -> f64 {
+        let bytes: u64 = self.jobs.iter().map(|j| j.spec.payload_bytes * j.ops).sum();
+        let wall = self.wall_us();
+        if wall <= 0.0 {
+            0.0
+        } else {
+            crate::util::bytes::gbps(bytes, wall)
+        }
+    }
+
+    /// p99 op latency for one tenant (None before its first op).
+    pub fn p99_us(&self, id: JobId) -> Option<f64> {
+        self.job(id).and_then(|j| j.p99_us())
+    }
+
+    /// True when every churn event replanned within `budget_us` — the
+    /// paper's recovery-budget check applied to tenancy churn.
+    pub fn all_churn_within(&self, budget_us: f64) -> bool {
+        self.churn.iter().all(|e| e.replan_us <= budget_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, Policy};
+    use crate::net::protocol::ProtoKind;
+
+    fn tenant(nodes: usize) -> MultiRail {
+        let cfg = Config {
+            nodes,
+            combo: vec![ProtoKind::Tcp, ProtoKind::Tcp],
+            policy: Policy::Nezha,
+            deterministic: true,
+            ..Config::default()
+        };
+        MultiRail::new(&cfg).unwrap()
+    }
+
+    #[test]
+    fn admission_rebalances_and_departure_restores_solo_grants() {
+        let mut arb = FabricArbiter::new(ArbiterMode::FairShare, 2);
+        let a = arb.admit(JobSpec::new("a", PriorityClass::Standard), 4, tenant(4));
+        // solo admission: grants are already 1.0, nothing replans
+        assert_eq!(arb.churn()[0].jobs_replanned, 0);
+        assert_eq!(arb.job(a).unwrap().mr.rail_grant(0), 1.0);
+
+        let b = arb.admit(JobSpec::new("b", PriorityClass::Standard), 4, tenant(4));
+        // two equal-weight tenants: both replan to 0.5 on every rail
+        assert_eq!(arb.churn()[1].jobs_replanned, 2);
+        for rail in 0..2 {
+            assert!((arb.job(a).unwrap().mr.rail_grant(rail) - 0.5).abs() < 1e-12);
+            assert!((arb.job(b).unwrap().mr.rail_grant(rail) - 0.5).abs() < 1e-12);
+            assert!((arb.ledger().rail_sum(rail) - 1.0).abs() < 1e-12);
+        }
+
+        let gone = arb.depart(a).unwrap();
+        // departing tenant leaves with solo grants; survivor regains the rail
+        assert_eq!(gone.mr.rail_grant(0), 1.0);
+        assert_eq!(arb.job(b).unwrap().mr.rail_grant(0), 1.0);
+        assert!(arb.job(a).is_none());
+        assert!(arb.all_churn_within(
+            crate::coordinator::control::exception::PAPER_RECOVERY_BUDGET_US
+        ));
+    }
+
+    #[test]
+    fn strict_priority_preempts_scavenger_at_window_boundary() {
+        let mut arb = FabricArbiter::new(ArbiterMode::StrictPriority, 2);
+        let bg = arb.admit(
+            JobSpec::new("bg", PriorityClass::Scavenger).payload(8 << 20),
+            4,
+            tenant(4),
+        );
+        arb.step().unwrap();
+        let t_solo = arb.job(bg).unwrap().latencies_us[0];
+
+        let fg = arb.admit(
+            JobSpec::new("fg", PriorityClass::Latency).payload(1 << 20),
+            4,
+            tenant(4),
+        );
+        assert_eq!(arb.ledger().preempted(), &[bg]);
+        assert!(
+            (arb.job(fg).unwrap().mr.rail_grant(0) - (1.0 - PREEMPTED_RESIDUAL)).abs() < 1e-12
+        );
+        arb.step().unwrap();
+        let t_contended = arb.job(bg).unwrap().latencies_us[1];
+        assert!(
+            t_contended > t_solo * 2.0,
+            "preempted scavenger op should slow well past solo: {t_solo} -> {t_contended}"
+        );
+        assert!(arb.wall_us() > 0.0);
+        assert!(arb.aggregate_gbps() > 0.0);
+    }
+
+    #[test]
+    fn run_op_rejects_unknown_job() {
+        let mut arb = FabricArbiter::new(ArbiterMode::FairShare, 2);
+        let mut buf = UnboundBuffer::from_fn(4, 64, |n, i| (n + i) as f32);
+        assert!(arb.run_op(JobId(7), &mut buf).is_err());
+    }
+}

@@ -118,6 +118,14 @@ pub struct LoadBalancer {
     /// Measurement correction per (rail, bucket): measured/model EMA the
     /// planner applies to the analytic estimates.
     corr: HashMap<(usize, u32), f64>,
+    /// Soft-affinity weight per rail: the fraction of topology groups
+    /// that admit it (absent = 1.0 = universally admitted). A rail only
+    /// some groups can use effectively serves that fraction of the
+    /// cluster, so its estimates inflate by the reciprocal — waterfill
+    /// then hands it proportionally less payload, and a nearly-banned
+    /// rail falls out through the τ efficiency filter instead of the
+    /// all-or-nothing mask intersection.
+    rail_weights: HashMap<usize, f64>,
     scratch: LbScratch,
 }
 
@@ -127,8 +135,25 @@ impl LoadBalancer {
             cfg,
             buckets: HashMap::new(),
             corr: HashMap::new(),
+            rail_weights: HashMap::new(),
             scratch: LbScratch::default(),
         }
+    }
+
+    /// Install soft-affinity weights (see `rail_weights`); entries at (or
+    /// above) 1.0 reset their rail to unweighted. Replaces the previous
+    /// weight set wholesale.
+    pub fn set_rail_weights(&mut self, weights: &[(usize, f64)]) {
+        self.rail_weights.clear();
+        for &(r, w) in weights {
+            if w < 1.0 {
+                self.rail_weights.insert(r, w.max(1e-3));
+            }
+        }
+    }
+
+    fn rail_weight(&self, rail: usize) -> f64 {
+        self.rail_weights.get(&rail).copied().unwrap_or(1.0)
     }
 
     /// Corrected estimate of the FULL-payload single-rail allreduce time.
@@ -139,7 +164,7 @@ impl LoadBalancer {
             .get(&(rail, size_bucket(bytes)))
             .copied()
             .unwrap_or(1.0);
-        model * c
+        model * c / self.rail_weight(rail)
     }
 
     /// Setup-dominated component (payload → 0) of a rail's allreduce.
@@ -587,6 +612,41 @@ mod tests {
                 assert!((sum - 1.0).abs() < 1e-9, "p={p} sum={sum}");
             }
         }
+    }
+
+    #[test]
+    fn soft_affinity_weights_shift_hot_shares() {
+        let f = fab(&[ProtoKind::Tcp, ProtoKind::Tcp], 4);
+        let t = Timer::new(100);
+        let bytes = 8 * MB as u64;
+        // rail 1 admitted by half the groups: estimates double, the
+        // waterfill/Eq. 8 split shifts toward the universal rail
+        let mut b = lb();
+        b.set_rail_weights(&[(0, 1.0), (1, 0.5)]);
+        match b.plan(&f, &t, &[0, 1], bytes) {
+            Plan::Hot { shares } => {
+                let a0 = shares.iter().find(|(r, _)| *r == 0).unwrap().1;
+                let a1 = shares.iter().find(|(r, _)| *r == 1).unwrap().1;
+                assert!(a0 > a1 + 0.1, "{shares:?}");
+            }
+            p => panic!("expected hot: {p:?}"),
+        }
+        // weight 1.0 entries clear back to the unweighted even split
+        let mut c = lb();
+        c.set_rail_weights(&[(0, 1.0), (1, 0.5)]);
+        c.set_rail_weights(&[(0, 1.0), (1, 1.0)]);
+        match c.plan(&f, &t, &[0, 1], bytes) {
+            Plan::Hot { shares } => {
+                for (_, a) in &shares {
+                    assert!((a - 0.5).abs() < 0.05, "{shares:?}");
+                }
+            }
+            p => panic!("expected hot: {p:?}"),
+        }
+        // a nearly-banned rail (5% of groups) exits through the τ filter
+        let mut d = lb();
+        d.set_rail_weights(&[(1, 0.05)]);
+        assert_eq!(d.plan(&f, &t, &[0, 1], bytes), Plan::Cold { rail: 0 });
     }
 
     #[test]

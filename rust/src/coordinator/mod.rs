@@ -16,7 +16,11 @@
 //! * [`multirail`] — the orchestrator that partitions each allreduce
 //!   across rails, runs member-network collectives, handles failover and
 //!   feeds measurements back to the control plane (§4.2, Fig. 7).
+//! * [`arbiter`] — the multi-tenant fabric arbiter: admits concurrent
+//!   coordinators onto shared rails with priority classes, fair-share
+//!   grants and window-boundary preemption (DESIGN.md §9).
 
+pub mod arbiter;
 pub mod buffer;
 pub mod collective;
 pub mod context;
@@ -25,6 +29,7 @@ pub mod multirail;
 pub mod planner;
 pub mod transport;
 
+pub use arbiter::{ArbiterMode, FabricArbiter, JobId, JobSpec, PriorityClass};
 pub use buffer::{UnboundBuffer, Window};
 pub use multirail::{MultiRail, OpReport};
 pub use planner::{CollectivePlan, CorrectedCost, PlanQualityReport, Planner, Schedule};

@@ -101,6 +101,11 @@ pub trait Partitioner: std::fmt::Debug {
     /// Completed-op feedback: per-rail (rail, bytes, time_us).
     fn feedback(&mut self, _fab: &Fabric, _bytes: u64, _shares: &[(usize, u64, f64)]) {}
 
+    /// Soft-affinity rail weights — the fraction of topology groups
+    /// admitting each rail (see [`MultiRail::soft_affinity`]). Policies
+    /// without a weighting notion ignore it.
+    fn set_rail_weights(&mut self, _weights: &[(usize, f64)]) {}
+
     /// Current (rail, α) table for this payload class, if the policy keeps
     /// one (Nezha's data-length table; used by the Fig. 11 report).
     fn alphas(&self, _bytes: u64) -> Option<Vec<(usize, f64)>> {
@@ -134,6 +139,10 @@ impl Partitioner for NezhaPartitioner {
 
     fn feedback(&mut self, fab: &Fabric, bytes: u64, shares: &[(usize, u64, f64)]) {
         self.balancer.feedback(fab, bytes, shares);
+    }
+
+    fn set_rail_weights(&mut self, weights: &[(usize, f64)]) {
+        self.balancer.set_rail_weights(weights);
     }
 
     fn alphas(&self, bytes: u64) -> Option<Vec<(usize, f64)>> {
@@ -383,6 +392,59 @@ impl MultiRail {
     /// are reused.
     pub fn plan_epoch(&self) -> u64 {
         self.planner.epoch()
+    }
+
+    /// Arbiter hook: this job now holds `share` of `rail`'s bandwidth
+    /// (window-boundary grant — takes effect at the next op, never
+    /// mid-collective).
+    ///
+    /// The fabric share always applies (measured transfers stretch by
+    /// `1/share` past their setup term). When `contended_pricing` is set
+    /// the planner is told too, so its cost model prices the contention
+    /// directly and every cached selection made under the old grant is
+    /// flushed — the ISSUE's replan-on-share-change. A contention-blind
+    /// job skips that and only discovers the squeeze through its
+    /// corrected-cost EWMA, several ops late.
+    pub fn set_rail_grant(&mut self, rail: usize, share: f64, contended_pricing: bool) {
+        self.fab.set_rail_share(rail, share);
+        if contended_pricing && self.planner.set_grant(rail, share) {
+            self.plan_cache.clear();
+            self.planner.bump_epoch();
+        }
+    }
+
+    /// The fabric-side share currently granted on `rail`.
+    pub fn rail_grant(&self, rail: usize) -> f64 {
+        self.fab.rail_share(rail)
+    }
+
+    /// Opt into (or out of) soft affinity on affinity-constrained
+    /// topologies. Strict mode (the default) only runs rails EVERY
+    /// group's mask admits; soft mode runs any rail SOME group admits,
+    /// down-weighted in the Load Balancer by the fraction of groups
+    /// admitting it ([`crate::net::topology::TopologyTree::rail_admit_fraction`]) —
+    /// so a rail one pod lacks still carries the rest of the cluster's
+    /// traffic instead of being banned outright. No-op on unconstrained
+    /// trees.
+    pub fn soft_affinity(&mut self, enable: bool) {
+        let n_rails = self.fab.rails.len();
+        let topo = &self.planner.topo;
+        if !topo.has_affinity() {
+            return;
+        }
+        let mask = if enable {
+            topo.union_rail_mask(n_rails)
+        } else {
+            topo.allowed_rail_mask(n_rails)
+        };
+        let weights: Vec<(usize, f64)> = (0..n_rails)
+            .map(|r| (r, if enable { topo.rail_admit_fraction(r) } else { 1.0 }))
+            .collect();
+        self.rail_allow_mask = mask;
+        self.exceptions.set_rail_mask(mask);
+        self.partitioner.set_rail_weights(&weights);
+        // cached selections assumed the old rail set / weights
+        self.plan_cache.clear();
     }
 
     /// Return a finished report's `per_rail` vector to the coordinator's
@@ -1055,41 +1117,81 @@ impl MultiRail {
                 (*r, ps.iter().map(|w| (w.len as f64 * elem_bytes) as u64).sum())
             })
             .collect();
+
+        // Phase 1 — per-subflow stream timing: one collective pass over
+        // each subflow's contiguous-equivalent transfer. Subflows ride
+        // the RailExecutor like planned rails do (concurrent scoped
+        // workers under `exec = parallel`, inline otherwise); per-rail
+        // RNG streams make the modeled times independent of worker
+        // interleaving, so both modes are bit-identical.
+        #[derive(Clone, Copy)]
+        enum SubflowPass {
+            Ring { steps: usize, seg_bytes: f64 },
+            Tree { bytes: f64 },
+        }
+        let nodes = self.fab.nodes;
+        let live: Vec<usize> = assigned
+            .iter()
+            .filter(|(_, ps, _)| !ps.is_empty())
+            .map(|(r, _, _)| *r)
+            .collect();
+        let passes: Vec<SubflowPass> = assigned
+            .iter()
+            .filter(|(_, ps, _)| !ps.is_empty())
+            .map(|(r, ps, _)| {
+                let total_elems: usize = ps.iter().map(|w| w.len).sum();
+                match self.fab.rails[*r].protocol.collective {
+                    crate::net::protocol::CollectiveKind::Ring => SubflowPass::Ring {
+                        steps: 2 * (nodes - 1),
+                        seg_bytes: (total_elems as f64 * elem_bytes / nodes as f64).ceil(),
+                    },
+                    crate::net::protocol::CollectiveKind::Tree => SubflowPass::Tree {
+                        bytes: total_elems as f64 * elem_bytes,
+                    },
+                }
+            })
+            .collect();
+        let timings: Vec<std::result::Result<f64, RailDown>> = {
+            let MultiRail { fab, executor, .. } = self;
+            let mut ctxs = fab.rail_ctxs(&live);
+            // rail_ctxs returns ascending rail order; re-order to match
+            // the subflow assignment order the results iterator uses
+            let mut ordered = Vec::with_capacity(live.len());
+            for &rail in &live {
+                let pos = ctxs
+                    .iter()
+                    .position(|c| c.rail == rail)
+                    .expect("one ctx per live subflow");
+                ordered.push(ctxs.swap_remove(pos));
+            }
+            let mut jobs = Vec::with_capacity(live.len());
+            for (mut ctx, pass) in ordered.into_iter().zip(passes.iter().copied()) {
+                jobs.push(move || match pass {
+                    SubflowPass::Ring { steps, seg_bytes } => {
+                        let mut t = 0.0;
+                        for _ in 0..steps {
+                            t += ctx.ring_step(seg_bytes)?;
+                        }
+                        Ok(t)
+                    }
+                    SubflowPass::Tree { bytes } => ctx.tree_round(bytes),
+                });
+            }
+            executor.run(jobs)
+        };
+
+        // Phase 2 — numerics, shares and failover, in assignment order
+        // (numerics never touch the RNG, so running them after the join
+        // changes nothing).
+        let mut timing_it = timings.into_iter();
         for (rail, ps, _) in &assigned {
             if ps.is_empty() {
                 shares.push(RailShare { rail: *rail, bytes: 0, time_us: 0.0 });
                 continue;
             }
             let rail_bytes: u64 = ps.iter().map(|w| (w.len as f64 * elem_bytes) as u64).sum();
-            let total_elems: usize = ps.iter().map(|w| w.len).sum();
-            // one collective pass over the subflow's stream: time the
-            // contiguous-equivalent transfer, inflated by slicing overhead
-            let mut stream_time = 0.0;
-            let mut failed: Option<RailDown> = None;
-            match self.fab.rails[*rail].protocol.collective {
-                crate::net::protocol::CollectiveKind::Ring => {
-                    let steps = 2 * (self.fab.nodes - 1);
-                    let seg_bytes =
-                        (total_elems as f64 * elem_bytes / self.fab.nodes as f64).ceil();
-                    for _ in 0..steps {
-                        match self.fab.ring_step(*rail, seg_bytes) {
-                            Ok(dt) => stream_time += dt,
-                            Err(e) => {
-                                failed = Some(e);
-                                break;
-                            }
-                        }
-                    }
-                }
-                crate::net::protocol::CollectiveKind::Tree => {
-                    match self.fab.tree_round(*rail, total_elems as f64 * elem_bytes) {
-                        Ok(dt) => stream_time = dt,
-                        Err(e) => failed = Some(e),
-                    }
-                }
-            }
-            match failed {
-                None => {
+            match timing_it.next().expect("one timing per live subflow") {
+                Ok(stream_time) => {
                     // numerics per packet (reassembly order)
                     for p in ps {
                         buf.register(*p);
@@ -1108,7 +1210,7 @@ impl MultiRail {
                             + PER_PACKET_US * ps.len() as f64,
                     });
                 }
-                Some(RailDown(r)) => {
+                Err(RailDown(r)) => {
                     // uncoordinated failover: packets re-run on survivor
                     failovers += 1;
                     let w_all = Window::new(
@@ -1452,5 +1554,85 @@ mod tests {
         assert!(rep2.per_rail.capacity() >= 2);
         assert_eq!(rep2.per_rail.iter().filter(|s| s.bytes > 0).count(), 2);
         mr.recycle(rep2);
+    }
+
+    #[test]
+    fn soft_affinity_admits_partially_allowed_rails() {
+        use crate::net::topology::ClusterSpec;
+        // pod 0 admits both rails, pod 1 only rail 0: the strict
+        // intersection bans rail 1 for every op
+        let mut c = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 8, Policy::Nezha);
+        c.cluster = ClusterSpec::pods(4).with_affinity(0, vec![0b11, 0b01]);
+        let mut mr = MultiRail::new(&c).unwrap();
+        let len = 1 << 21; // 8MB: far into the hot band
+        let rep = mr.allreduce(&mut make(8, len)).unwrap();
+        assert_eq!(
+            rep.per_rail.iter().filter(|s| s.bytes > 0).count(),
+            1,
+            "strict affinity must keep the op off rail 1: {rep:?}"
+        );
+        // soft mode re-admits rail 1 at half weight: it carries payload
+        // again, but less than the universally-admitted rail
+        mr.soft_affinity(true);
+        let mut buf = make(8, len);
+        let rep2 = mr.allreduce(&mut buf).unwrap();
+        let r0 = rep2.per_rail.iter().find(|s| s.rail == 0).unwrap();
+        let r1 = rep2.per_rail.iter().find(|s| s.rail == 1).unwrap();
+        assert!(r1.bytes > 0, "soft affinity must re-admit rail 1: {rep2:?}");
+        assert!(r0.bytes > r1.bytes, "half-admitted rail must carry less: {rep2:?}");
+        reduced_ok(&buf, 8, len);
+        // strict mode restores the ban
+        mr.soft_affinity(false);
+        let rep3 = mr.allreduce(&mut make(8, len)).unwrap();
+        assert_eq!(rep3.per_rail.iter().filter(|s| s.bytes > 0).count(), 1, "{rep3:?}");
+    }
+
+    #[test]
+    fn mptcp_parallel_bit_identical_to_serial_with_jitter() {
+        // subflow stream timing rides the RailExecutor; per-rail RNG
+        // streams keep the sampled times independent of worker
+        // interleaving, so the MPTCP baseline is exec-mode invariant too
+        let mut c = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Mptcp);
+        c.deterministic = false;
+        c.exec = ExecMode::Serial;
+        let mut serial = MultiRail::new(&c).unwrap();
+        c.exec = ExecMode::Parallel;
+        let mut parallel = MultiRail::new(&c).unwrap();
+        let len = 1 << 20;
+        for op in 0..3 {
+            let mut bs = make(4, len);
+            let mut bp = make(4, len);
+            let rs = serial.allreduce(&mut bs).unwrap();
+            let rp = parallel.allreduce(&mut bp).unwrap();
+            assert_eq!(rs.total_us, rp.total_us, "op {op}: modeled time diverged");
+            assert_eq!(rs.per_rail.len(), rp.per_rail.len(), "op {op}");
+            for (a, b) in rs.per_rail.iter().zip(&rp.per_rail) {
+                assert_eq!(a.rail, b.rail, "op {op}");
+                assert_eq!(a.bytes, b.bytes, "op {op}");
+                assert_eq!(a.time_us, b.time_us, "op {op} rail {}", a.rail);
+            }
+            for n in 0..4 {
+                assert_eq!(bs.node(n), bp.node(n), "op {op} node {n} numerics diverged");
+            }
+            reduced_ok(&bp, 4, len);
+        }
+    }
+
+    #[test]
+    fn rail_grants_throttle_ops_and_restore_bit_exactly() {
+        let c = cfg(&[ProtoKind::Tcp], 4, Policy::SingleRail);
+        let mut mr = MultiRail::new(&c).unwrap();
+        let len = 1 << 20;
+        let t_solo = mr.allreduce(&mut make(4, len)).unwrap().total_us;
+        let e = mr.plan_epoch();
+        mr.set_rail_grant(0, 0.5, true);
+        assert_eq!(mr.rail_grant(0), 0.5);
+        assert!(mr.plan_epoch() > e, "a grant change must flush cached plans");
+        let t_half = mr.allreduce(&mut make(4, len)).unwrap().total_us;
+        assert!(t_half > t_solo, "half a rail cannot be as fast: {t_solo} vs {t_half}");
+        // the whole rail back: modeled times return bit-exactly
+        mr.set_rail_grant(0, 1.0, true);
+        let t_back = mr.allreduce(&mut make(4, len)).unwrap().total_us;
+        assert_eq!(t_back, t_solo);
     }
 }

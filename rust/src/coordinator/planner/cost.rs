@@ -178,6 +178,29 @@ pub fn tree_us(fab: &Fabric, rail: usize, bytes: f64) -> f64 {
     fab.estimate_allreduce_us(rail, bytes)
 }
 
+/// Contended cost of a schedule the pure model prices at `model_us`, of
+/// which `fixed_us` is rail-setup and local-fabric time: under an
+/// arbiter grant of `share` of the rail, only the rail's transfer
+/// component — `model_us - fixed_us` — stretches by `1/share`. This is
+/// exactly how the fabric charges contended rounds (setup-preserving
+/// inflation per message), so contended predictions still match
+/// deterministic contended measurements. A whole-rail grant returns
+/// `model_us` bit-exactly, keeping solo pricing byte-identical to the
+/// uncontended planner.
+///
+/// Because the fixed component is round-count-proportional while the
+/// stretched component is volume-proportional, shrinking `share` shifts
+/// the candidate ranking: round-heavy deep-chunk pipelines (whose cost
+/// is setup-rich) fade more slowly than bandwidth-bound flat rings, so
+/// plans genuinely move under contention.
+pub fn contended_us(model_us: f64, fixed_us: f64, share: f64) -> f64 {
+    let share = share.clamp(crate::net::simnet::MIN_RAIL_SHARE, 1.0);
+    if share >= 1.0 {
+        return model_us;
+    }
+    fixed_us + (model_us - fixed_us) / share
+}
+
 /// Lockstep fabric rounds a schedule executes **on the rail** for `n`
 /// nodes — the unit the per-round straggler correction multiplies. Matches
 /// the executable schedules exactly: two-level counts only its inter-group
@@ -475,6 +498,29 @@ mod tests {
             schedule_rounds(Schedule::MultiLevel { depth: 1, groups: 64, chunks: 1 }, 8),
             14
         );
+    }
+
+    #[test]
+    fn contended_cost_stretches_transfer_only() {
+        // share 1.0 is the identity, bit-exactly
+        assert_eq!(contended_us(10_000.0, 1_500.0, 1.0), 10_000.0);
+        assert_eq!(contended_us(10_000.0, 1_500.0, 2.0), 10_000.0);
+        // half the rail: transfer doubles, the fixed part does not
+        let t = contended_us(10_000.0, 1_500.0, 0.5);
+        assert!((t - (1_500.0 + 8_500.0 / 0.5)).abs() < 1e-9, "t {t}");
+        // shares clamp at the preemption floor instead of diverging
+        let floor = contended_us(10_000.0, 1_500.0, 0.0);
+        assert_eq!(floor, contended_us(10_000.0, 1_500.0, crate::net::simnet::MIN_RAIL_SHARE));
+        assert!(floor.is_finite());
+    }
+
+    #[test]
+    fn contention_reranks_setup_heavy_vs_bandwidth_heavy_schedules() {
+        // two candidates equal at solo price: one setup-rich, one
+        // bandwidth-rich — contention must prefer the setup-rich one
+        let setup_rich = contended_us(10_000.0, 6_000.0, 0.25);
+        let bw_rich = contended_us(10_000.0, 1_000.0, 0.25);
+        assert!(setup_rich < bw_rich, "{setup_rich} vs {bw_rich}");
     }
 
     #[test]

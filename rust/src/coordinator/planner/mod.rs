@@ -43,8 +43,10 @@ use crate::coordinator::collective::{OpOutcome, OpScratch};
 use crate::coordinator::control::load_balancer::sync_overhead_us;
 use crate::coordinator::control::Timer;
 use crate::net::protocol::CollectiveKind;
-use crate::net::simnet::{Fabric, RailDown, RailTimer};
+use crate::net::simnet::{Fabric, RailDown, RailTimer, MIN_RAIL_SHARE};
 use crate::net::topology::{ClusterSpec, IntraLink, TopologyTree};
+
+use std::collections::HashMap;
 
 /// Pipeline depths the planner evaluates for chunked schedules.
 pub const CHUNK_CANDIDATES: [usize; 4] = [2, 4, 8, 16];
@@ -66,6 +68,15 @@ pub struct Planner {
     pub use_corrections: bool,
     /// Monotone count of schedule-selection passes (plan epochs).
     epoch: u64,
+    /// Arbiter-granted bandwidth share per rail (absent = whole rail).
+    /// Candidate pricing composes these through [`cost::contended_us`], so
+    /// schedule selection shifts under contention; a planner that is never
+    /// told its grants prices contention-blind.
+    grants: HashMap<usize, f64>,
+    /// Bumped whenever a grant materially changes — the coordinator's
+    /// plan-cache invalidation coordinate (stale schedules were selected
+    /// under different contention).
+    share_epoch: u64,
 }
 
 impl Default for Planner {
@@ -87,6 +98,8 @@ impl Planner {
             corrections: CorrectedCost::new(),
             use_corrections: true,
             epoch: 0,
+            grants: HashMap::new(),
+            share_epoch: 0,
         }
     }
 
@@ -104,6 +117,35 @@ impl Planner {
     pub fn bump_epoch(&mut self) -> u64 {
         self.epoch += 1;
         self.epoch
+    }
+
+    /// The granted bandwidth share this planner prices `rail` at
+    /// (1.0 = sole owner, the uncontended planner bit-exactly).
+    pub fn grant(&self, rail: usize) -> f64 {
+        self.grants.get(&rail).copied().unwrap_or(1.0)
+    }
+
+    /// Record an arbiter grant for `rail`. Returns true (and bumps the
+    /// share epoch) when the grant materially changed — the caller's cue
+    /// to flush cached schedule selections and replan.
+    pub fn set_grant(&mut self, rail: usize, share: f64) -> bool {
+        let share = share.clamp(MIN_RAIL_SHARE, 1.0);
+        if (share - self.grant(rail)).abs() < 1e-12 {
+            return false;
+        }
+        if share >= 1.0 {
+            self.grants.remove(&rail);
+        } else {
+            self.grants.insert(rail, share);
+        }
+        self.share_epoch += 1;
+        true
+    }
+
+    /// Monotone count of material grant changes (cache invalidation
+    /// coordinate).
+    pub fn share_epoch(&self) -> u64 {
+        self.share_epoch
     }
 
     /// True once this (rail, size-class) applies measurement corrections:
@@ -193,6 +235,61 @@ impl Planner {
         }
     }
 
+    /// The share-insensitive component of `schedule`'s model cost: the
+    /// rail rounds' fixed per-message setup plus any intra-group phases
+    /// (which ride local fabrics, not the contended rail). Mirrors the
+    /// fabric's execution exactly — every `ring_step`/`tree_round` pays
+    /// its setup undiluted regardless of the granted share — so contended
+    /// predictions match deterministic contended measurements.
+    fn fixed_us(&self, fab: &Fabric, rail: usize, bytes: f64, schedule: Schedule) -> f64 {
+        let n = fab.nodes;
+        let s = schedule.normalized();
+        if let Schedule::Tree = s {
+            return fab.estimate_allreduce_us(rail, 0.0);
+        }
+        let rail_setup =
+            cost::schedule_rounds(s, n) as f64 * fab.rails[rail].protocol.setup_us;
+        let local = match s {
+            Schedule::TwoLevel { group, .. } => match self.grouping(n) {
+                Some(link) if link.group_size == group => 2.0 * cost::intra_phase_us(&link, bytes),
+                _ => 0.0,
+            },
+            Schedule::MultiLevel { depth, groups, .. } => {
+                if depth >= 1
+                    && self.topo.valid_cut_depth(depth, n)
+                    && self.topo.group_count(depth - 1, n) == groups
+                {
+                    (0..depth.min(self.topo.depth()))
+                        .map(|lv| 2.0 * cost::tree_phase_us(&self.topo, lv, n, bytes))
+                        .sum()
+                } else {
+                    0.0
+                }
+            }
+            _ => 0.0,
+        };
+        rail_setup + local
+    }
+
+    /// Contention-priced model cost of `schedule`: the pure α-β model
+    /// composed with the rail's arbiter grant through
+    /// [`cost::contended_us`]. With a whole-rail grant this IS the pure
+    /// model, bit-exactly.
+    pub fn priced_model_us(
+        &self,
+        fab: &Fabric,
+        rail: usize,
+        bytes: f64,
+        schedule: Schedule,
+    ) -> f64 {
+        let model = self.model_us(fab, rail, bytes, schedule);
+        let share = self.grant(rail);
+        if share >= 1.0 || bytes <= 0.0 {
+            return model;
+        }
+        cost::contended_us(model, self.fixed_us(fab, rail, bytes, schedule), share)
+    }
+
     /// Measurement-corrected cost of `schedule`, given its pure model cost
     /// — the pure model verbatim until the class's corrections are active.
     fn corrected_us(
@@ -227,7 +324,7 @@ impl Planner {
         }
         match fab.rails[rail].protocol.collective {
             CollectiveKind::Tree => {
-                let m = cost::tree_us(fab, rail, bytes);
+                let m = self.priced_model_us(fab, rail, bytes, Schedule::Tree);
                 let t = self.corrected_us(timer, fab, rail, bytes, Schedule::Tree, m);
                 (Schedule::Tree, t)
             }
@@ -265,7 +362,7 @@ impl Planner {
                 }
                 let mut best: Option<(Schedule, f64)> = None;
                 for s in candidates {
-                    let m = self.model_us(fab, rail, bytes, s);
+                    let m = self.priced_model_us(fab, rail, bytes, s);
                     let t = self.corrected_us(timer, fab, rail, bytes, s, m);
                     let better = match best {
                         Some((_, bt)) => t < bt,
@@ -292,7 +389,7 @@ impl Planner {
         rail_bytes: f64,
     ) -> RailPlan {
         let (schedule, predicted_us) = self.schedule_for(fab, timer, rail, rail_bytes);
-        let model_us = self.model_us(fab, rail, rail_bytes, schedule);
+        let model_us = self.priced_model_us(fab, rail, rail_bytes, schedule);
         let rounds = if rail_bytes <= 0.0 {
             0
         } else {
@@ -371,7 +468,7 @@ impl Planner {
                 let rail_bytes = bytes as f64 * share;
                 match cached.iter().find(|&&(r, _)| r == rail) {
                     Some(&(_, schedule)) if rail_bytes > 0.0 => {
-                        let model_us = self.model_us(fab, rail, rail_bytes, schedule);
+                        let model_us = self.priced_model_us(fab, rail, rail_bytes, schedule);
                         let predicted_us =
                             self.corrected_us(timer, fab, rail, rail_bytes, schedule, model_us);
                         RailPlan {
@@ -690,6 +787,83 @@ mod tests {
         let (s2, t2) = p.schedule_for(&f, &timer, 0, bytes);
         assert_eq!(s2, s0);
         assert_eq!(t2, t0);
+    }
+
+    #[test]
+    fn grants_price_contention_and_shift_schedules() {
+        // A slow intra-group fabric gives the hierarchical candidate a
+        // large share-INsensitive cost for a tiny rail volume: solo
+        // pricing rejects it for the ring family, while a heavily
+        // contended rail (transfer stretched by 1/share) must flock to
+        // the schedule that keeps volume off the rail.
+        use crate::net::topology::TopoLevel;
+        let tree = TopologyTree {
+            levels: vec![TopoLevel::uniform("pod", 4, 50.0, 15.0)],
+        };
+        let mut p = Planner::with_tree(tree);
+        let c = ClusterSpec::local();
+        let f = fab(&[ProtoKind::Tcp], 16, &c);
+        let t = cold_timer();
+        let bytes = 8.0 * MB;
+        let (s0, t0) = p.schedule_for(&f, &t, 0, bytes);
+        assert!(
+            !matches!(s0, Schedule::TwoLevel { .. }),
+            "solo pricing should stay on the ring family, got {s0:?}"
+        );
+        // a whole-rail grant is not a change and must not bump the epoch
+        assert!(!p.set_grant(0, 1.0));
+        assert_eq!(p.share_epoch(), 0);
+        assert!(p.set_grant(0, 0.02));
+        assert_eq!(p.share_epoch(), 1);
+        assert!(!p.set_grant(0, 0.02), "unchanged grant bumped the epoch");
+        let (s1, t1) = p.schedule_for(&f, &t, 0, bytes);
+        assert!(t1 > t0, "contended prediction must be slower: {t0} vs {t1}");
+        assert!(
+            matches!(s1, Schedule::TwoLevel { .. }),
+            "contention should shift {s0:?} to the hierarchical schedule, got {s1:?}"
+        );
+        // restoring the whole rail restores solo pricing bit-exactly
+        assert!(p.set_grant(0, 1.0));
+        let (s2, t2) = p.schedule_for(&f, &t, 0, bytes);
+        assert_eq!(s0, s2);
+        assert_eq!(t0, t2);
+    }
+
+    #[test]
+    fn contended_predictions_match_contended_measurements() {
+        use crate::coordinator::collective::RustReducer;
+        let c = ClusterSpec::local();
+        let mut p = Planner::from_cluster(&c);
+        let share = 0.3;
+        for schedule in [
+            Schedule::FlatRing,
+            Schedule::RingChunked { chunks: 8 },
+            Schedule::HalvingDoubling,
+        ] {
+            let mut f = fab(&[ProtoKind::Tcp], 8, &c);
+            f.set_rail_share(0, share);
+            assert!(p.set_grant(0, share) || p.grant(0) == share);
+            let elems = 1024usize;
+            let elem_bytes = 8.0 * MB / elems as f64;
+            let mut buf = UnboundBuffer::from_fn(8, elems, |n, i| (n + i) as f32);
+            let w = buf.full_window();
+            buf.register(w);
+            let out = run_plan(
+                schedule,
+                &mut f,
+                0,
+                &mut buf,
+                w,
+                &mut RustReducer,
+                elem_bytes,
+                &p.topo,
+            )
+            .unwrap();
+            buf.complete(w).unwrap();
+            let predicted = p.priced_model_us(&f, 0, 8.0 * MB, schedule);
+            let rel = (predicted - out.time_us).abs() / out.time_us;
+            assert!(rel < 1e-9, "{schedule:?}: predicted {predicted} measured {}", out.time_us);
+        }
     }
 
     #[test]

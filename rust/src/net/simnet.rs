@@ -33,6 +33,10 @@ use crate::util::rng::Pcg;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RailDown(pub usize);
 
+/// Smallest bandwidth share a rail grant can be clamped to — keeps
+/// contended transfer times finite even for fully preempted tenants.
+pub const MIN_RAIL_SHARE: f64 = 0.01;
+
 /// Persistent per-rail straggler: every message on the rail pays an extra
 /// stall (paper §2.3.3's slow-NIC/incast pathologies). `sigma > 0` samples
 /// the stall log-normally around `stall_us`; `sigma == 0` charges it
@@ -92,6 +96,17 @@ pub struct Fabric {
     op_epoch: u64,
     /// One independent sampling stream per rail.
     streams: Vec<RailStream>,
+    /// Arbiter-granted bandwidth share per rail (1.0 = whole rail). The
+    /// fixed per-message setup is paid regardless of the share; only the
+    /// transfer component stretches by `1/share` — same convention as the
+    /// CPU contention factor. Shares never touch the RNG streams, so a
+    /// job's draw sequences (and therefore its payload numerics) are
+    /// identical at every grant level.
+    shares: Vec<f64>,
+    /// Cumulative modeled busy time charged per rail (the arbiter's
+    /// occupancy ledger input). Deterministic sums of the returned
+    /// per-round times, so serial and parallel execution agree.
+    occupancy: Vec<f64>,
 }
 
 impl Fabric {
@@ -118,7 +133,35 @@ impl Fabric {
                     jitter_buf: Vec::new(),
                 })
                 .collect(),
+            shares: vec![1.0; n_rails],
+            occupancy: vec![0.0; n_rails],
         }
+    }
+
+    /// Grant `rail` a bandwidth share in `(0, 1]` (1.0 restores sole
+    /// ownership). Live transfer times stretch their transfer component by
+    /// `1/share`; the deterministic model paths (`transfer_det_us`,
+    /// `estimate_allreduce_us`) stay share-blind — pricing contention is
+    /// the planner's `cost::contended_us` job, so a contention-blind
+    /// planner genuinely mispredicts.
+    pub fn set_rail_share(&mut self, rail: usize, share: f64) {
+        self.shares[rail] = share.clamp(MIN_RAIL_SHARE, 1.0);
+    }
+
+    /// The currently granted bandwidth share of `rail`.
+    pub fn rail_share(&self, rail: usize) -> f64 {
+        self.shares[rail]
+    }
+
+    /// Cumulative modeled busy time charged on `rail` since construction
+    /// (or the last [`Fabric::reset_occupancy`]).
+    pub fn occupancy_us(&self, rail: usize) -> f64 {
+        self.occupancy[rail]
+    }
+
+    /// Zero the per-rail occupancy ledger.
+    pub fn reset_occupancy(&mut self) {
+        self.occupancy.iter_mut().for_each(|o| *o = 0.0);
     }
 
     pub fn with_faults(mut self, faults: FaultSchedule) -> Fabric {
@@ -305,6 +348,8 @@ impl Fabric {
             jitter_sigma: self.jitter_sigma,
             cores,
             contention,
+            share: self.shares[rail],
+            busy_us: &mut self.occupancy[rail],
         }
     }
 
@@ -323,12 +368,13 @@ impl Fabric {
         let jitter_sigma = self.jitter_sigma;
         let faults = &self.faults;
         let mut out = Vec::with_capacity(wanted.len());
-        for (((i, state), stream), stall) in self
+        for ((((i, state), stream), stall), busy) in self
             .rails
             .iter_mut()
             .enumerate()
             .zip(self.streams.iter_mut())
             .zip(self.stall_table.iter())
+            .zip(self.occupancy.iter_mut())
         {
             if !wanted.contains(&i) {
                 continue;
@@ -344,6 +390,8 @@ impl Fabric {
                 jitter_sigma,
                 cores: cores[i],
                 contention,
+                share: self.shares[i],
+                busy_us: busy,
             });
         }
         out
@@ -402,9 +450,30 @@ pub struct RailCtx<'a> {
     jitter_sigma: f64,
     cores: f64,
     contention: f64,
+    /// Arbiter-granted bandwidth share, frozen at construction (grants
+    /// only change between ops — the arbiter's window-boundary rule).
+    share: f64,
+    /// This rail's slot in the fabric's occupancy ledger.
+    busy_us: &'a mut f64,
 }
 
 impl RailCtx<'_> {
+    /// Stretch a sampled rail time by the granted share: the transfer
+    /// component pays `1/share`, the fixed `setup_us` does not (the same
+    /// setup-preserving convention as cross-member CPU contention). A
+    /// whole-rail grant returns `raw_us` bit-exactly.
+    fn shared(&self, raw_us: f64, setup_us: f64) -> f64 {
+        if self.share >= 1.0 {
+            return raw_us;
+        }
+        setup_us + (raw_us - setup_us) / self.share
+    }
+
+    /// Charge `t` microseconds to the rail's occupancy ledger.
+    fn charge(&mut self, t: f64) -> f64 {
+        *self.busy_us += t;
+        t
+    }
     /// Fault-schedule health poll at the op's virtual time (same
     /// transitions as the fabric-level poll).
     pub fn poll_health(&mut self) -> bool {
@@ -446,13 +515,14 @@ impl RailCtx<'_> {
         if !self.poll_health() {
             return Err(RailDown(self.rail));
         }
-        let base = self.transfer_det_us(bytes);
+        let base = self.shared(self.transfer_det_us(bytes), self.state.protocol.setup_us);
         let j = if self.jitter_sigma > 0.0 {
             self.stream.rng.jitter(self.jitter_sigma)
         } else {
             1.0
         };
-        Ok(base * j + self.straggler_stall_us())
+        let t = base * j + self.straggler_stall_us();
+        Ok(self.charge(t))
     }
 
     /// Analytic single-rail allreduce estimate at the frozen resources.
@@ -485,11 +555,11 @@ impl RailTimer for RailCtx<'_> {
         if !self.poll_health() {
             return Err(RailDown(self.rail));
         }
-        let base = self.transfer_det_us(bytes);
+        let base = self.shared(self.transfer_det_us(bytes), self.state.protocol.setup_us);
         let det_stall = self.stall.det_us;
         let n_stoch = self.stall.stoch.len();
         if self.jitter_sigma == 0.0 && n_stoch == 0 {
-            return Ok(base + det_stall);
+            return Ok(self.charge(base + det_stall));
         }
         let nodes = self.nodes;
         let mut jit = std::mem::take(&mut self.stream.jitter_buf);
@@ -507,20 +577,21 @@ impl RailTimer for RailCtx<'_> {
             worst = worst.max(t);
         }
         self.stream.jitter_buf = jit;
-        Ok(worst)
+        Ok(self.charge(worst))
     }
 
     fn tree_round(&mut self, bytes: f64) -> Result<f64, RailDown> {
         if !self.poll_health() {
             return Err(RailDown(self.rail));
         }
-        let base = self.estimate_allreduce_us(bytes);
+        let base = self.shared(self.estimate_allreduce_us(bytes), self.estimate_allreduce_us(0.0));
         let j = if self.jitter_sigma > 0.0 {
             self.stream.rng.jitter(self.jitter_sigma)
         } else {
             1.0
         };
-        Ok(base * j + self.straggler_stall_us())
+        let t = base * j + self.straggler_stall_us();
+        Ok(self.charge(t))
     }
 }
 
@@ -752,5 +823,61 @@ mod tests {
             total += f.ring_step(0, seg).unwrap();
         }
         assert!((est - total).abs() / est < 0.05, "est={est} total={total}");
+    }
+
+    #[test]
+    fn rail_share_stretches_transfer_but_not_setup() {
+        let mut f = dual_tcp(4);
+        let full = f.ring_step(0, MB).unwrap();
+        f.set_rail_share(0, 0.5);
+        let half = f.ring_step(0, MB).unwrap();
+        let setup = f.rails[0].protocol.setup_us;
+        // setup-preserving inflation: setup + (full - setup) / share
+        assert!((half - (setup + (full - setup) / 0.5)).abs() < 1e-9, "full {full} half {half}");
+        // the analytic model path stays share-blind (contended pricing is
+        // the planner's job)
+        assert_eq!(f.transfer_det_us(0, MB), f.transfer_det_us(1, MB));
+        // restoring the whole rail restores times bit-exactly
+        f.set_rail_share(0, 1.0);
+        assert_eq!(f.ring_step(0, MB).unwrap(), full);
+        // shares clamp to the preemption floor
+        f.set_rail_share(0, 0.0);
+        assert_eq!(f.rail_share(0), MIN_RAIL_SHARE);
+    }
+
+    #[test]
+    fn rail_share_does_not_perturb_rng_streams() {
+        // same seed, different shares: jittered times must differ only by
+        // the deterministic inflation, i.e. the jitter draws are identical
+        let (mut a, mut b) = (dual_tcp(4), dual_tcp(4));
+        a.jitter_sigma = 0.05;
+        b.jitter_sigma = 0.05;
+        b.set_rail_share(0, 0.25);
+        a.begin_op();
+        b.begin_op();
+        let setup = a.rails[0].protocol.setup_us;
+        for _ in 0..8 {
+            let ta = a.transfer(0, MB).unwrap();
+            let tb = b.transfer(0, MB).unwrap();
+            // invert the inflation on the pre-jitter base: both sides drew
+            // the same multiplier iff the ratio of (t) to base matches
+            let base_a = a.transfer_det_us(0, MB);
+            let base_b = setup + (b.transfer_det_us(0, MB) - setup) / 0.25;
+            assert!((ta / base_a - tb / base_b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn occupancy_ledger_accumulates_and_resets() {
+        let mut f = dual_tcp(4);
+        assert_eq!(f.occupancy_us(0), 0.0);
+        let t0 = f.ring_step(0, MB).unwrap();
+        let t1 = f.ring_step(0, MB).unwrap();
+        let u = f.transfer(1, MB).unwrap();
+        assert!((f.occupancy_us(0) - (t0 + t1)).abs() < 1e-9);
+        assert!((f.occupancy_us(1) - u).abs() < 1e-9);
+        f.reset_occupancy();
+        assert_eq!(f.occupancy_us(0), 0.0);
+        assert_eq!(f.occupancy_us(1), 0.0);
     }
 }

@@ -298,6 +298,53 @@ impl TopologyTree {
         allow
     }
 
+    /// Fraction of affinity-carrying groups (across every level) that
+    /// admit `rail` — the soft-affinity weight the Load Balancer scales a
+    /// rail's bandwidth estimate by. 1.0 on unconstrained trees (no group
+    /// objects to the rail) down to 0.0 when no group admits it.
+    pub fn rail_admit_fraction(&self, rail: usize) -> f64 {
+        if rail >= 64 {
+            return 1.0;
+        }
+        let mut total = 0usize;
+        let mut admit = 0usize;
+        for lv in &self.levels {
+            if let Some(masks) = &lv.affinity {
+                for &m in masks {
+                    total += 1;
+                    if m & (1u64 << rail) != 0 {
+                        admit += 1;
+                    }
+                }
+            }
+        }
+        if total == 0 {
+            1.0
+        } else {
+            admit as f64 / total as f64
+        }
+    }
+
+    /// Rails admitted by AT LEAST ONE group somewhere in the tree — the
+    /// soft-affinity rail set. A rail only some groups admit still helps
+    /// the groups that have it (the Load Balancer down-weights it by
+    /// [`TopologyTree::rail_admit_fraction`] instead of banning it the
+    /// way [`TopologyTree::allowed_rail_mask`]'s intersection does).
+    pub fn union_rail_mask(&self, n_rails: usize) -> u64 {
+        if !self.has_affinity() {
+            return rails_mask(n_rails);
+        }
+        let mut union = 0u64;
+        for lv in &self.levels {
+            if let Some(masks) = &lv.affinity {
+                for &m in masks {
+                    union |= m;
+                }
+            }
+        }
+        union & rails_mask(n_rails)
+    }
+
     /// Group start/end offsets at `level` (validation only — allocates).
     fn boundaries(&self, level: usize, nodes: usize) -> Vec<usize> {
         let mut b = vec![0usize];
@@ -867,6 +914,26 @@ mod tests {
         // mask count must equal the group count
         let short = ClusterSpec::pods(4).with_affinity(0, vec![0b11; 3]);
         assert!(matches!(short.topo.validate(16, 2), Err(Error::Topology(_))));
+    }
+
+    #[test]
+    fn soft_affinity_fractions_and_union() {
+        // 3 of 4 pods admit rail 1, all admit rail 0
+        let c = ClusterSpec::pods(4).with_affinity(0, vec![0b11, 0b01, 0b11, 0b11]);
+        assert_eq!(c.topo.rail_admit_fraction(0), 1.0);
+        assert_eq!(c.topo.rail_admit_fraction(1), 0.75);
+        assert_eq!(c.topo.union_rail_mask(2), 0b11);
+        // strict intersection bans rail 1 outright
+        assert_eq!(c.topo.allowed_rail_mask(2), 0b01);
+        // disjoint per-group masks: intersection empty, union keeps both
+        let d = ClusterSpec::pods(4).with_affinity(0, vec![0b01, 0b10, 0b01, 0b10]);
+        assert_eq!(d.topo.allowed_rail_mask(2), 0);
+        assert_eq!(d.topo.union_rail_mask(2), 0b11);
+        assert_eq!(d.topo.rail_admit_fraction(0), 0.5);
+        // unconstrained trees: everything is weight 1 on every rail
+        let f = ClusterSpec::local();
+        assert_eq!(f.topo.rail_admit_fraction(0), 1.0);
+        assert_eq!(f.topo.union_rail_mask(2), 0b11);
     }
 
     #[test]

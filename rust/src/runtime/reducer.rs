@@ -98,6 +98,18 @@ impl Reducer for PjrtReducer {
         }
     }
 
+    /// Forks share the AOT engine (`Arc`) but own fresh persistent
+    /// literals — per-worker scratch, so concurrent `add_block` calls
+    /// never race on the input buffers. Kernel adds are bit-identical to
+    /// the parent's by construction (same compiled executable); a fork
+    /// whose literal allocation fails reports `None` and the coordinator
+    /// falls back to serial execution for the op.
+    fn fork(&self) -> Option<Box<dyn Reducer + Send>> {
+        PjrtReducer::new(self.engine.clone())
+            .ok()
+            .map(|r| Box::new(r) as Box<dyn Reducer + Send>)
+    }
+
     fn name(&self) -> &'static str {
         "pjrt-pallas"
     }
@@ -129,7 +141,37 @@ impl Reducer for PjrtReducer {
         self.fallback.add_into(dst, src);
     }
 
+    /// The stub is stateless beyond its metrics, so a fork is just a
+    /// fresh stub — keeps `exec = parallel` working in dependency-free
+    /// builds exactly as [`RustReducer`] does.
+    fn fork(&self) -> Option<Box<dyn Reducer + Send>> {
+        Some(Box::new(PjrtReducer {
+            fallback: RustReducer,
+            kernel_elems: 0,
+            fallback_elems: 0,
+        }))
+    }
+
     fn name(&self) -> &'static str {
         "pjrt-stub"
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_forks_and_matches_parent_numerics() {
+        let mut parent = PjrtReducer { fallback: RustReducer, kernel_elems: 0, fallback_elems: 0 };
+        let mut fork = parent.fork().expect("stub reducer must fork");
+        assert_eq!(fork.name(), "pjrt-stub");
+        let src: Vec<f32> = (0..515).map(|i| (i % 17) as f32 * 0.25).collect();
+        let mut a: Vec<f32> = (0..515).map(|i| (i % 13) as f32).collect();
+        let mut b = a.clone();
+        parent.add_into(&mut a, &src);
+        fork.add_into(&mut b, &src);
+        assert_eq!(a, b);
+        assert_eq!(parent.fallback_elems, 515);
     }
 }

@@ -74,4 +74,17 @@ fn hotpath_bench_quick_mode_emits_wellformed_json() {
     assert!(sim.get("wall_seconds").unwrap().as_f64().unwrap() > 0.0);
     assert!(sim.get("modeled_ops").unwrap().as_f64().unwrap() > 0.0);
     assert!(sim.get("ops_per_sec").unwrap().as_f64().unwrap() > 0.0);
+
+    // multi-tenant arbiter sweep: solo vs 2-job vs 4-job aggregate
+    // ops/sec (record, don't gate)
+    let tenancy = parsed.get("tenancy").unwrap();
+    let rows = tenancy.get("sweep").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), hotpath::TENANCY_JOBS.len());
+    for (row, &jobs) in rows.iter().zip(&hotpath::TENANCY_JOBS) {
+        assert_eq!(row.get("jobs").unwrap().as_f64(), Some(jobs as f64));
+        assert!(
+            row.get("aggregate_ops_per_sec").unwrap().as_f64().unwrap() > 0.0,
+            "tenancy throughput must be positive"
+        );
+    }
 }
