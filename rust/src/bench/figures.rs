@@ -447,6 +447,7 @@ pub fn run(id: &str) -> Result<()> {
             super::ablation::ablate_multilevel()
         }
         "ablate-tenancy" | "ablate_tenancy" | "tenancy" => super::ablation::ablate_tenancy(),
+        "ablate-churn" | "ablate_churn" | "churn" => super::ablation::ablate_churn(),
         "plan-quality" | "plan_quality" | "planq" => super::harness::plan_quality_fig(),
         "all" => {
             for id in [
@@ -460,7 +461,7 @@ pub fn run(id: &str) -> Result<()> {
         }
         other => Err(crate::util::error::Error::Config(format!(
             "unknown figure `{other}` (fig2..fig19, table1, headline, plan-quality, \
-             ablate-multilevel, ablate-tenancy, all)"
+             ablate-multilevel, ablate-tenancy, ablate-churn, all)"
         ))),
     }
 }

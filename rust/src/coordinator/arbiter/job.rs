@@ -99,9 +99,11 @@ impl JobSpec {
         self
     }
 
-    /// True when this spec admits `rail`.
+    /// True when this spec admits `rail`. Rails beyond the 64-bit mask
+    /// cannot be expressed and are never admitted (they used to slip past
+    /// as "always allowed", bypassing the mask on large fabrics).
     pub fn admits(&self, rail: usize) -> bool {
-        rail >= 64 || self.rail_mask & (1u64 << rail) != 0
+        rail < 64 && self.rail_mask & (1u64 << rail) != 0
     }
 }
 
@@ -170,10 +172,14 @@ mod tests {
         assert_eq!(s.payload_bytes, 1 << 20);
         assert!(!s.admits(0));
         assert!(s.admits(1));
+        // rails the u64 mask cannot express are never admitted
+        // (regression: used to be treated as always-allowed)
+        assert!(!s.admits(64));
         assert!(s.contended_pricing);
         assert!(!s.contention_blind().contended_pricing);
-        // defaults admit everything
+        // defaults admit everything in mask range, never beyond it
         assert!(JobSpec::new("fg", PriorityClass::Latency).admits(7));
+        assert!(!JobSpec::new("fg", PriorityClass::Latency).admits(64));
     }
 
     #[test]

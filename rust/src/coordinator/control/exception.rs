@@ -30,11 +30,32 @@ pub struct FailoverEvent {
 /// task migration must complete within 200 ms.
 pub const PAPER_RECOVERY_BUDGET_US: f64 = 200_000.0;
 
+/// One recorded node-level membership recovery (leave or rejoin) — the
+/// elastic counterpart of [`FailoverEvent`].
+#[derive(Debug, Clone, Copy)]
+pub struct MembershipRecovery {
+    /// Virtual time the recovery completed (us).
+    pub at_us: f64,
+    /// First departed/rejoined node of the batch (original numbering).
+    pub node: usize,
+    /// Nodes in the batch (a rack leave is one recovery, one budget).
+    pub count: usize,
+    /// False = leave, true = rejoin.
+    pub rejoin: bool,
+    /// Detection + migration cost charged (us).
+    pub recovery_us: f64,
+    /// Membership epoch after this recovery.
+    pub epoch: u64,
+}
+
 /// The Exception Handler.
 #[derive(Debug)]
 pub struct ExceptionHandler {
     cfg: ControlConfig,
     pub events: Vec<FailoverEvent>,
+    /// Node-level membership recoveries (leave/rejoin), same budget
+    /// accounting as rail failovers.
+    pub membership: Vec<MembershipRecovery>,
     /// Rails the topology's per-group affinity masks allow (all-ones
     /// without affinity constraints): failover takeover targets must
     /// respect them — migrating a window to a rail some group excludes
@@ -44,7 +65,12 @@ pub struct ExceptionHandler {
 
 impl ExceptionHandler {
     pub fn new(cfg: ControlConfig) -> ExceptionHandler {
-        ExceptionHandler { cfg, events: Vec::new(), rail_mask: u64::MAX }
+        ExceptionHandler {
+            cfg,
+            events: Vec::new(),
+            membership: Vec::new(),
+            rail_mask: u64::MAX,
+        }
     }
 
     /// Restrict takeover targets to `mask` (0 = unconstrained).
@@ -82,7 +108,7 @@ impl ExceptionHandler {
         let mask = self.rail_mask;
         let takeover = fab
             .healthy_rails_iter()
-            .filter(|&r| r >= 64 || mask & (1u64 << r) != 0)
+            .filter(|&r| mask & (1u64 << r) != 0)
             .max_by_key(|&r| {
                 allocated_bytes
                     .iter()
@@ -116,6 +142,70 @@ impl ExceptionHandler {
             }
         }
         back
+    }
+
+    /// Handle the departure of `count` nodes (first id `node`, original
+    /// numbering): the coordinator has already rebound topology, fabric
+    /// and rendezvous over the surviving set — this records the recovery
+    /// and charges ONE detection + migration budget for the whole batch
+    /// (a rack dying is one detection event, exactly like one rail dying;
+    /// the migrated work is every window the departed nodes touched, but
+    /// migration is a bulk (ptr, len) handoff whose cost the paper models
+    /// per event, not per byte).
+    pub fn handle_node_failure(
+        &mut self,
+        fab: &mut Fabric,
+        node: usize,
+        count: usize,
+        epoch: u64,
+    ) -> MembershipRecovery {
+        let recovery = self.recovery_cost_us();
+        fab.advance(recovery);
+        let ev = MembershipRecovery {
+            at_us: fab.now_us(),
+            node,
+            count,
+            rejoin: false,
+            recovery_us: recovery,
+            epoch,
+        };
+        self.membership.push(ev);
+        ev
+    }
+
+    /// Handle a node rejoining: no detection phase (the join is announced,
+    /// not discovered by timeout), so only the migration/reprime cost is
+    /// charged before the restored member carries traffic again.
+    pub fn handle_node_rejoin(
+        &mut self,
+        fab: &mut Fabric,
+        node: usize,
+        epoch: u64,
+    ) -> MembershipRecovery {
+        let recovery = self.cfg.migrate_cost_us;
+        fab.advance(recovery);
+        let ev = MembershipRecovery {
+            at_us: fab.now_us(),
+            node,
+            count: 1,
+            rejoin: true,
+            recovery_us: recovery,
+            epoch,
+        };
+        self.membership.push(ev);
+        ev
+    }
+
+    /// True when every membership recovery stayed inside the paper's
+    /// 200 ms self-recovery budget.
+    pub fn membership_within_budget(&self) -> bool {
+        self.membership
+            .iter()
+            .all(|ev| ev.recovery_us < PAPER_RECOVERY_BUDGET_US)
+    }
+
+    pub fn membership_count(&self) -> usize {
+        self.membership.len()
     }
 
     pub fn failover_count(&self) -> usize {
@@ -207,5 +297,36 @@ mod tests {
         h.handle_failure(&mut fab, 1, Window::new(0, 10), &[(0, 1), (1, 1)]);
         assert!(h.probe_recovery(&mut fab).is_empty());
         assert_eq!(fab.healthy_rails(), vec![0]);
+    }
+
+    #[test]
+    fn node_failure_charges_one_budget_per_batch() {
+        let mut fab = dual_tcp();
+        let mut h = ExceptionHandler::new(ControlConfig::default());
+        // a whole 4-node rack leaving is ONE detection + migration charge
+        let ev = h.handle_node_failure(&mut fab, 0, 4, 1);
+        assert!(!ev.rejoin);
+        assert_eq!(ev.count, 4);
+        assert_eq!(ev.epoch, 1);
+        assert_eq!(ev.recovery_us, h.recovery_cost_us());
+        assert!(ev.recovery_us < PAPER_RECOVERY_BUDGET_US);
+        assert_eq!(fab.now_us(), ev.recovery_us);
+        assert_eq!(h.membership_count(), 1);
+        assert!(h.membership_within_budget());
+        // rail-failover ledger untouched
+        assert_eq!(h.failover_count(), 0);
+    }
+
+    #[test]
+    fn node_rejoin_skips_detection_phase() {
+        let mut fab = dual_tcp();
+        let mut h = ExceptionHandler::new(ControlConfig::default());
+        let leave = h.handle_node_failure(&mut fab, 2, 1, 1);
+        let rejoin = h.handle_node_rejoin(&mut fab, 2, 2);
+        assert!(rejoin.rejoin);
+        assert_eq!(rejoin.epoch, 2);
+        // announced joins skip the detection timeout
+        assert!(rejoin.recovery_us < leave.recovery_us);
+        assert!(h.membership_within_budget());
     }
 }

@@ -7,7 +7,7 @@ pub mod load_balancer;
 pub mod nic_selector;
 pub mod timer;
 
-pub use exception::{ExceptionHandler, FailoverEvent};
+pub use exception::{ExceptionHandler, FailoverEvent, MembershipRecovery};
 pub use load_balancer::{BalancerState, LoadBalancer, Plan, PlanKind};
 pub use nic_selector::NicSelector;
 pub use timer::Timer;

@@ -41,14 +41,17 @@ use crate::coordinator::collective::{
 };
 use crate::coordinator::context::Context;
 use crate::coordinator::control::load_balancer::sync_overhead_us;
-use crate::coordinator::control::{size_bucket, ExceptionHandler, LoadBalancer, NicSelector, Timer};
+use crate::coordinator::control::{
+    size_bucket, ExceptionHandler, LoadBalancer, MembershipRecovery, NicSelector, Timer,
+};
 use crate::coordinator::planner::{
     run_plan_on, run_plan_with, CollectivePlan, PlanQualityReport, Planner, RailPlan, Schedule,
 };
 use crate::coordinator::transport::Rendezvous;
 use crate::net::cpu_pool::{CpuPool, ExecMode, RailExecutor};
-use crate::net::fault::FaultSchedule;
+use crate::net::fault::{FaultSchedule, MembershipEvent, MembershipSchedule};
 use crate::net::simnet::{Fabric, RailDown};
+use crate::net::topology::TopologyTree;
 use crate::util::error::Error;
 use crate::Result;
 
@@ -210,12 +213,14 @@ pub struct MultiRail {
     /// Per-plan predicted-vs-measured samples (planner-scheduled rail-ops
     /// only) — the plan-quality dashboard source.
     pub quality: PlanQualityReport,
-    /// Cached schedule selections keyed by (size bucket, participating
-    /// rail bitmask). Reused until a replan trigger fires: prediction
-    /// error above `replan_error`, or a failover changes the rail set.
-    /// (The rail set is a u64 bitmask so the per-op cache lookup builds no
-    /// key vector.)
-    plan_cache: HashMap<(u32, u64), Vec<(usize, Schedule)>>,
+    /// Cached schedule selections keyed by (membership epoch, size
+    /// bucket, participating rail bitmask). Reused until a replan trigger
+    /// fires: prediction error above `replan_error`, a failover changing
+    /// the rail set, or a membership change making the epoch component
+    /// stale (entries from older epochs describe a cluster that no longer
+    /// exists and are dropped on rebind). (The rail set is a u64 bitmask
+    /// so the per-op cache lookup builds no key vector.)
+    plan_cache: HashMap<(u64, u32, u64), Vec<(usize, Schedule)>>,
     /// The `replan_error` config threshold.
     replan_error: f64,
     /// Rails allowed by every topology group's affinity mask (all-ones
@@ -231,6 +236,23 @@ pub struct MultiRail {
     /// steady-state op path performs no per-op allocation.
     scratch: ExecScratch,
     ops_done: u64,
+    /// Scheduled node join/leave churn, polled at op boundaries (an event
+    /// landing mid-op is detected — like a rail fault — when the next op
+    /// begins).
+    membership: MembershipSchedule,
+    /// Events of `membership` already applied (cursor).
+    membership_applied: usize,
+    /// Bumped on every applied membership change; the plan-cache key's
+    /// epoch component and the planner's rebind coordinate.
+    membership_epoch: u64,
+    /// Currently-departed nodes, original (home) numbering.
+    departed: Vec<usize>,
+    /// The configured full-cluster node count (rebind baseline).
+    home_nodes: usize,
+    /// The configured full-cluster topology (rebind baseline — rebinding
+    /// is always computed from the home tree over the current departed
+    /// set, so leave→rejoin round-trips restore it exactly).
+    home_topo: TopologyTree,
 }
 
 /// The coordinator's reusable per-op scratch space.
@@ -336,6 +358,12 @@ impl MultiRail {
             rail_allow_mask,
             scratch: ExecScratch::default(),
             ops_done: 0,
+            membership: MembershipSchedule::none(),
+            membership_applied: 0,
+            membership_epoch: 0,
+            departed: Vec::new(),
+            home_nodes: cfg.nodes,
+            home_topo: cfg.cluster.topo.clone(),
         })
     }
 
@@ -345,13 +373,192 @@ impl MultiRail {
         self.fab.healthy_rails_into(out);
         if self.rail_allow_mask != u64::MAX {
             let mask = self.rail_allow_mask;
-            out.retain(|&r| r >= 64 || mask & (1u64 << r) != 0);
+            out.retain(|&r| mask & (1u64 << r) != 0);
         }
     }
 
     pub fn with_faults(mut self, faults: FaultSchedule) -> Self {
         self.fab = self.fab.with_faults(faults);
         self
+    }
+
+    /// Attach a node join/leave schedule (builder form). Events are
+    /// applied at op boundaries as the virtual clock passes them.
+    pub fn with_membership(mut self, schedule: MembershipSchedule) -> Self {
+        self.set_membership(schedule);
+        self
+    }
+
+    /// Replace the membership schedule (resets the applied-event cursor;
+    /// already-applied changes are NOT undone).
+    pub fn set_membership(&mut self, schedule: MembershipSchedule) {
+        self.membership = schedule;
+        self.membership_applied = 0;
+    }
+
+    /// The current membership epoch (bumps on every applied join/leave).
+    pub fn membership_epoch(&self) -> u64 {
+        self.membership_epoch
+    }
+
+    /// Nodes currently participating (home count minus departures).
+    pub fn active_nodes(&self) -> usize {
+        self.fab.nodes
+    }
+
+    /// Nodes currently departed, original numbering (sorted not
+    /// guaranteed; insertion order).
+    pub fn departed_nodes(&self) -> &[usize] {
+        &self.departed
+    }
+
+    /// Apply the departure of one node (original numbering) right now:
+    /// rebind the topology over the survivors, bump the membership epoch,
+    /// drop stale cached plans, reprime the measurement layer and charge
+    /// one detection + migration budget.
+    pub fn node_leave(&mut self, node: usize) -> Result<MembershipRecovery> {
+        self.nodes_leave(&[node])
+    }
+
+    /// Apply the simultaneous departure of several nodes (a rack dying is
+    /// ONE detection event): one rebind, one epoch bump, one recovery
+    /// budget for the whole batch. On error (unknown/duplicate node, or
+    /// the departures leave the topology unbindable) nothing changes.
+    pub fn nodes_leave(&mut self, nodes: &[usize]) -> Result<MembershipRecovery> {
+        if nodes.is_empty() {
+            return Err(Error::Topology("empty departure batch".into()));
+        }
+        for &n in nodes {
+            if n >= self.home_nodes {
+                return Err(Error::Topology(format!(
+                    "node {n} outside the {}-node cluster",
+                    self.home_nodes
+                )));
+            }
+            if self.departed.contains(&n) || nodes.iter().filter(|&&m| m == n).count() > 1 {
+                return Err(Error::Topology(format!("node {n} already departed")));
+            }
+        }
+        let restore = self.departed.len();
+        self.departed.extend_from_slice(nodes);
+        if let Err(e) = self.rebind_surviving_set() {
+            self.departed.truncate(restore);
+            return Err(e);
+        }
+        Ok(self.exceptions.handle_node_failure(
+            &mut self.fab,
+            nodes[0],
+            nodes.len(),
+            self.membership_epoch,
+        ))
+    }
+
+    /// A departed node rejoins: rebind back toward the home topology
+    /// (a full round-trip restores it exactly), bump the epoch, reprime,
+    /// and charge the migration (no detection — joins are announced)
+    /// budget. On error nothing changes.
+    pub fn node_rejoin(&mut self, node: usize) -> Result<MembershipRecovery> {
+        let pos = self
+            .departed
+            .iter()
+            .position(|&n| n == node)
+            .ok_or_else(|| Error::Topology(format!("node {node} is not departed")))?;
+        let removed = self.departed.remove(pos);
+        if let Err(e) = self.rebind_surviving_set() {
+            self.departed.insert(pos, removed);
+            return Err(e);
+        }
+        Ok(self
+            .exceptions
+            .handle_node_rejoin(&mut self.fab, node, self.membership_epoch))
+    }
+
+    /// Recompute every membership-dependent structure from the home
+    /// topology and the current departed set. Pure until the rebind
+    /// succeeds — a failed rebind mutates nothing, so callers can roll
+    /// back their `departed` edit and keep running on the old membership.
+    fn rebind_surviving_set(&mut self) -> Result<()> {
+        let survivors = self.home_nodes - self.departed.len();
+        if survivors < 2 {
+            return Err(Error::Topology(format!(
+                "membership change leaves {survivors} node(s); a collective needs 2"
+            )));
+        }
+        let n_rails = self.fab.rails.len();
+        let topo = self
+            .home_topo
+            .rebind(self.home_nodes, &self.departed, n_rails)?;
+        // -- validated: mutate --
+        self.rail_allow_mask = if topo.has_affinity() {
+            topo.allowed_rail_mask(n_rails)
+        } else {
+            u64::MAX
+        };
+        self.exceptions.set_rail_mask(self.rail_allow_mask);
+        self.fab.set_nodes(survivors);
+        self.rendezvous = (0..n_rails)
+            .map(|r| Rendezvous::full_mesh(r, survivors))
+            .collect();
+        self.membership_epoch += 1;
+        // Blink-style re-pack: the planner re-selects over the surviving
+        // links/groups at the next op instead of replaying stale
+        // candidates
+        self.planner.rebind_membership(topo, self.membership_epoch);
+        // reprime the measurement layer: every (rail, size-class) round
+        // count changed with the node count, so old windows/corrections
+        // would mis-price every candidate
+        self.timer = Timer::new(self.timer.window());
+        self.planner.corrections.clear();
+        // epoch-keyed invalidation: only current-epoch entries survive
+        // (none do right after a bump — the keying also bounds cache
+        // growth across long churn histories)
+        let epoch = self.membership_epoch;
+        self.plan_cache.retain(|&(ep, _, _), _| ep == epoch);
+        self.last_plan = None;
+        Ok(())
+    }
+
+    /// Apply every scheduled membership event the virtual clock has
+    /// passed (op-boundary detection: an event landing mid-op is applied
+    /// when the op completes and the next one starts). The allreduce
+    /// entry point calls this itself; it is public so callers that size
+    /// payload buffers by [`MultiRail::active_nodes`] (the trainers) can
+    /// synchronize BEFORE building the next op's buffer — polling twice
+    /// is harmless (the cursor only moves once per event).
+    pub fn poll_membership(&mut self) -> Result<()> {
+        while self.membership_applied < self.membership.len() {
+            let ev = self.membership.event(self.membership_applied);
+            if ev.at_us() > self.fab.now_us() {
+                break;
+            }
+            self.membership_applied += 1;
+            match ev {
+                MembershipEvent::Leave { node, .. } => self.node_leave(node)?,
+                MembershipEvent::Join { node, .. } => self.node_rejoin(node)?,
+            };
+        }
+        Ok(())
+    }
+
+    /// Probe deregistered rails and clear a readmitted rail's failure-era
+    /// state: Timer windows, cost corrections and injected straggler
+    /// stalls all described the broken rail, and keeping them meant a
+    /// healed rail never re-earned round-heavy schedules (it stayed
+    /// priced as broken forever). A readmission also flushes cached
+    /// selections and starts a fresh selection epoch — the rail set
+    /// changed just as it does on failover.
+    fn probe_readmitted(&mut self) -> Vec<usize> {
+        let back = self.exceptions.probe_recovery(&mut self.fab);
+        if !back.is_empty() {
+            for &r in &back {
+                self.timer.forget_rail(r);
+                self.planner.corrections.forget_rail(r);
+                self.fab.clear_straggler(r);
+            }
+            self.plan_cache.clear();
+            self.planner.bump_epoch();
+        }
+        back
     }
 
     /// Inject a persistent straggler on `rail` (see
@@ -500,7 +707,7 @@ impl MultiRail {
     /// predicted-vs-measured error exceeded `replan_error` — the
     /// straggler-aware replan trigger that fires *between* ops/buckets.
     fn plan_shares(&mut self, fracs: &[(usize, f64)], bytes: u64) -> CollectivePlan {
-        let key = (size_bucket(bytes), rail_mask(fracs));
+        let key = (self.membership_epoch, size_bucket(bytes), rail_mask(fracs));
         // Timer/correction classes are keyed by each rail's OWN share
         // size (that's what it measures), so the trigger checks per-rail
         // byte counts, not the op total.
@@ -561,11 +768,14 @@ impl MultiRail {
         full: Window,
         elem_bytes: f64,
     ) -> Result<OpReport> {
+        // op-boundary membership churn first: the node count the buffer
+        // must match is the post-churn surviving set
+        self.poll_membership()?;
         assert_eq!(buf.nodes(), self.fab.nodes, "buffer/fabric node mismatch");
         // fresh per-rail sampling streams for this op epoch — the
         // serial/parallel bit-identity anchor
         self.fab.begin_op();
-        self.exceptions.probe_recovery(&mut self.fab);
+        self.probe_readmitted();
         // reusable healthy-rail scratch: taken for the op, restored below
         // (error paths drop it; the next op simply re-allocates capacity)
         let mut healthy = std::mem::take(&mut self.scratch.healthy);
@@ -1634,5 +1844,140 @@ mod tests {
         mr.set_rail_grant(0, 1.0, true);
         let t_back = mr.allreduce(&mut make(4, len)).unwrap().total_us;
         assert_eq!(t_back, t_solo);
+    }
+
+    #[test]
+    fn probe_readmitted_clears_failure_era_state() {
+        // regression (heal-then-replan): a readmitted rail used to keep
+        // its failure-era Timer windows, cost corrections and straggler
+        // stall table, so it stayed priced as broken and never re-earned
+        // round-heavy schedules
+        let cfgv = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        let mut mr = MultiRail::new(&cfgv)
+            .unwrap()
+            .with_faults(FaultSchedule::none().with(1, 0.0, 50_000.0))
+            .with_straggler(1, 5_000.0, 0.0);
+        let len = 2 * 1024 * 1024; // 8MB → hot → both rails → failover
+        let rep = mr.allreduce(&mut make(4, len)).unwrap();
+        assert_eq!(rep.failovers, 1);
+        assert!(mr.fab.has_straggler(1), "failure-era stall entry installed");
+        assert!(mr.fab.now_us() > 50_000.0, "recovery advanced past the window");
+        let e = mr.plan_epoch();
+        let back = mr.probe_readmitted();
+        assert_eq!(back, vec![1]);
+        assert!(!mr.fab.has_straggler(1), "stall table must be cleared on readmit");
+        assert_eq!(mr.timer.total_ops(1), 0, "Timer history must be forgotten");
+        assert_eq!(mr.planner.corrections.observations(1, (len as u64) * 4), 0);
+        assert!(mr.plan_epoch() > e, "readmission must start a fresh selection epoch");
+        // the healed rail carries payload again
+        let mut buf = make(4, len);
+        let rep2 = mr.allreduce(&mut buf).unwrap();
+        assert_eq!(rep2.per_rail.iter().filter(|s| s.bytes > 0).count(), 2);
+        reduced_ok(&buf, 4, len);
+    }
+
+    #[test]
+    fn node_leave_bumps_epochs_and_invalidates_cache() {
+        let cfgv = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 8, Policy::Nezha);
+        let mut mr = MultiRail::new(&cfgv).unwrap();
+        let len = 1 << 20; // 4MB
+        mr.allreduce(&mut make(8, len)).unwrap();
+        assert_eq!(mr.membership_epoch(), 0);
+        assert!(mr.plan_cache.keys().all(|k| k.0 == 0));
+        let e_plan = mr.plan_epoch();
+        let ev = mr.node_leave(7).unwrap();
+        assert_eq!(mr.membership_epoch(), 1);
+        assert_eq!(ev.epoch, 1);
+        assert!(!ev.rejoin);
+        assert_eq!(mr.active_nodes(), 7);
+        assert!(mr.exceptions.membership_within_budget());
+        assert!(mr.plan_epoch() > e_plan, "rebind must start a fresh selection epoch");
+        assert!(mr.plan_cache.is_empty(), "stale-epoch entries must be dropped");
+        // surviving-set op plans under the new epoch, numerics bit-exact
+        // vs a fresh 7-node coordinator (numerics are plan-independent)
+        let mut survivors = make(7, len);
+        mr.allreduce(&mut survivors).unwrap();
+        assert!(mr.plan_cache.keys().all(|k| k.0 == 1), "cache keys carry the epoch");
+        reduced_ok(&survivors, 7, len);
+        let mut fresh_mr =
+            MultiRail::new(&cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 7, Policy::Nezha)).unwrap();
+        let mut fresh = make(7, len);
+        fresh_mr.allreduce(&mut fresh).unwrap();
+        for n in 0..7 {
+            assert_eq!(survivors.node(n), fresh.node(n), "node {n} numerics diverged");
+        }
+    }
+
+    #[test]
+    fn node_rejoin_restores_membership_bit_exactly() {
+        let cfgv = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 8, Policy::Nezha);
+        let mut mr = MultiRail::new(&cfgv).unwrap();
+        let len = 1 << 20;
+        mr.node_leave(3).unwrap();
+        assert_eq!(mr.active_nodes(), 7);
+        let ev = mr.node_rejoin(3).unwrap();
+        assert!(ev.rejoin);
+        assert_eq!(mr.membership_epoch(), 2);
+        assert_eq!(mr.active_nodes(), 8);
+        assert!(mr.departed_nodes().is_empty());
+        assert_eq!(mr.planner.topo, mr.home_topo, "round-trip restores the home tree");
+        assert!(mr.exceptions.membership_within_budget());
+        // post-rejoin numerics bit-exact vs a never-failed run
+        let mut buf = make(8, len);
+        mr.allreduce(&mut buf).unwrap();
+        reduced_ok(&buf, 8, len);
+        let mut fresh_mr = MultiRail::new(&cfgv).unwrap();
+        let mut fresh = make(8, len);
+        fresh_mr.allreduce(&mut fresh).unwrap();
+        for n in 0..8 {
+            assert_eq!(buf.node(n), fresh.node(n), "node {n} numerics diverged");
+        }
+    }
+
+    #[test]
+    fn scheduled_leave_applies_at_next_op_boundary() {
+        let cfgv = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        let mut mr = MultiRail::new(&cfgv)
+            .unwrap()
+            .with_membership(MembershipSchedule::none().leave(3, 1.0));
+        let len = 1 << 20;
+        // the event lands mid-first-op (at 1us): detected like a rail
+        // fault when the op completes and the next one begins, never
+        // retroactively
+        let mut buf = make(4, len);
+        mr.allreduce(&mut buf).unwrap();
+        assert_eq!(mr.active_nodes(), 4);
+        assert_eq!(mr.membership_epoch(), 0);
+        reduced_ok(&buf, 4, len);
+        // next op: the clock passed the event, the leave applies before
+        // the node-count assert, so the surviving-set buffer matches
+        let mut buf2 = make(3, len);
+        mr.allreduce(&mut buf2).unwrap();
+        assert_eq!(mr.active_nodes(), 3);
+        assert_eq!(mr.membership_epoch(), 1);
+        reduced_ok(&buf2, 3, len);
+    }
+
+    #[test]
+    fn membership_errors_leave_state_untouched() {
+        let cfgv = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        let mut mr = MultiRail::new(&cfgv).unwrap();
+        assert!(mr.node_leave(9).is_err(), "unknown node");
+        assert!(mr.node_rejoin(0).is_err(), "not departed");
+        mr.node_leave(0).unwrap();
+        mr.node_leave(1).unwrap();
+        // dropping below 2 survivors must fail and change nothing
+        let before = mr.membership_epoch();
+        assert!(mr.node_leave(2).is_err());
+        assert_eq!(mr.membership_epoch(), before);
+        assert_eq!(mr.active_nodes(), 2);
+        assert_eq!(mr.departed_nodes(), &[0, 1]);
+        // a batch with an in-batch duplicate is rejected atomically
+        assert!(mr.nodes_leave(&[2, 2]).is_err());
+        assert_eq!(mr.active_nodes(), 2);
+        // ops keep running on the unchanged membership
+        let mut buf = make(2, 1 << 20);
+        mr.allreduce(&mut buf).unwrap();
+        reduced_ok(&buf, 2, 1 << 20);
     }
 }

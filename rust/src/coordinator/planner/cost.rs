@@ -357,6 +357,13 @@ impl CorrectedCost {
     pub fn forget_rail(&mut self, rail: usize) {
         self.classes.retain(|(r, _), _| *r != rail);
     }
+
+    /// Drop every class (membership churn re-primes the whole corrected
+    /// layer: the surviving set's round counts changed on every rail, so
+    /// stale per-class excesses would mis-price every candidate).
+    pub fn clear(&mut self) {
+        self.classes.clear();
+    }
 }
 
 #[cfg(test)]

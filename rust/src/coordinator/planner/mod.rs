@@ -77,6 +77,10 @@ pub struct Planner {
     /// plan-cache invalidation coordinate (stale schedules were selected
     /// under different contention).
     share_epoch: u64,
+    /// The membership epoch this planner's topology was bound under
+    /// (bumped by [`Planner::rebind_membership`]; plans selected under an
+    /// older epoch describe a cluster that no longer exists).
+    membership_epoch: u64,
 }
 
 impl Default for Planner {
@@ -100,6 +104,7 @@ impl Planner {
             epoch: 0,
             grants: HashMap::new(),
             share_epoch: 0,
+            membership_epoch: 0,
         }
     }
 
@@ -146,6 +151,22 @@ impl Planner {
     /// coordinate).
     pub fn share_epoch(&self) -> u64 {
         self.share_epoch
+    }
+
+    /// Rebind the planner onto a membership-rebound topology (Blink-style
+    /// re-packing: the next selection pass re-prices every candidate
+    /// family over whatever links and groups survive instead of replaying
+    /// stale candidates). Bumps the selection epoch so cached schedules
+    /// from the old membership never win again.
+    pub fn rebind_membership(&mut self, topo: TopologyTree, epoch: u64) {
+        self.topo = topo;
+        self.membership_epoch = epoch;
+        self.bump_epoch();
+    }
+
+    /// The membership epoch the current topology was bound under.
+    pub fn membership_epoch(&self) -> u64 {
+        self.membership_epoch
     }
 
     /// True once this (rail, size-class) applies measurement corrections:

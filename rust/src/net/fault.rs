@@ -47,19 +47,108 @@ impl FaultSchedule {
             .any(|w| w.rail == rail && t_us >= w.start_us && t_us < w.end_us)
     }
 
-    /// Next state-change time strictly after `t_us` for `rail` (used by
-    /// recovery probing).
+    /// Next instant strictly after `t_us` at which [`FaultSchedule::is_down`]
+    /// for `rail` actually flips (used by recovery probing).
+    ///
+    /// Windows may overlap or touch (`[0,100)` + `[50,150)`, `[0,100)` +
+    /// `[100,200)`): interior edges inside the union of down-time are not
+    /// transitions, so the walk skips every edge at which the rail's state
+    /// equals its state at `t_us` and returns the first edge where it
+    /// differs. `None` when the state never changes again.
     pub fn next_transition(&self, rail: usize, t_us: f64) -> Option<f64> {
-        self.windows
-            .iter()
-            .filter(|w| w.rail == rail)
-            .flat_map(|w| [w.start_us, w.end_us])
-            .filter(|&t| t > t_us)
-            .min_by(|a, b| a.partial_cmp(b).unwrap())
+        let state = self.is_down(rail, t_us);
+        let mut t = t_us;
+        loop {
+            let edge = self
+                .windows
+                .iter()
+                .filter(|w| w.rail == rail)
+                .flat_map(|w| [w.start_us, w.end_us])
+                .filter(|&e| e > t)
+                .min_by(|a, b| a.partial_cmp(b).unwrap())?;
+            if self.is_down(rail, edge) != state {
+                return Some(edge);
+            }
+            t = edge;
+        }
     }
 
     pub fn is_empty(&self) -> bool {
         self.windows.is_empty()
+    }
+}
+
+/// One node-level membership change on the virtual clock — the elastic
+/// counterpart of a rail-down [`FaultWindow`]. Node ids always refer to
+/// the configured (full) cluster numbering; the coordinator compacts the
+/// surviving set itself.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MembershipEvent {
+    /// `node` departs (crash, drain, thermal power-off) at `at_us`.
+    Leave { node: usize, at_us: f64 },
+    /// `node` comes back at `at_us` (must have departed earlier).
+    Join { node: usize, at_us: f64 },
+}
+
+impl MembershipEvent {
+    pub fn at_us(&self) -> f64 {
+        match *self {
+            MembershipEvent::Leave { at_us, .. } | MembershipEvent::Join { at_us, .. } => at_us,
+        }
+    }
+
+    pub fn node(&self) -> usize {
+        match *self {
+            MembershipEvent::Leave { node, .. } | MembershipEvent::Join { node, .. } => node,
+        }
+    }
+}
+
+/// Schedule of node join/leave churn, kept sorted by event time. The
+/// coordinator polls it at op boundaries: an event landing mid-op is
+/// detected — like a rail fault — when the op completes and the next one
+/// begins.
+#[derive(Debug, Clone, Default)]
+pub struct MembershipSchedule {
+    events: Vec<MembershipEvent>,
+}
+
+impl MembershipSchedule {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Add a leave event (builder form).
+    pub fn leave(mut self, node: usize, at_us: f64) -> Self {
+        self.push(MembershipEvent::Leave { node, at_us });
+        self
+    }
+
+    /// Add a join event (builder form).
+    pub fn join(mut self, node: usize, at_us: f64) -> Self {
+        self.push(MembershipEvent::Join { node, at_us });
+        self
+    }
+
+    fn push(&mut self, ev: MembershipEvent) {
+        assert!(ev.at_us().is_finite() && ev.at_us() >= 0.0);
+        self.events.push(ev);
+        // stable by insertion order at equal times
+        self.events
+            .sort_by(|a, b| a.at_us().partial_cmp(&b.at_us()).unwrap());
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The `i`-th event in time order.
+    pub fn event(&self, i: usize) -> MembershipEvent {
+        self.events[i]
     }
 }
 
@@ -93,5 +182,60 @@ mod tests {
         assert_eq!(f.next_transition(0, 0.0), Some(10.0));
         assert_eq!(f.next_transition(0, 10.0), Some(20.0));
         assert_eq!(f.next_transition(0, 20.0), None);
+    }
+
+    #[test]
+    fn transitions_skip_interior_edges_of_overlapping_windows() {
+        // [0,100) + [50,150): down over the whole union [0,150). The edge
+        // at 100 is inside the union — the rail is still down there, so it
+        // must NOT be reported as a transition (regression: it used to be).
+        let f = FaultSchedule::none().with(0, 0.0, 100.0).with(0, 50.0, 150.0);
+        assert!(f.is_down(0, 100.0), "still down at the interior edge");
+        assert_eq!(f.next_transition(0, 40.0), Some(150.0));
+        assert_eq!(f.next_transition(0, 100.0), Some(150.0));
+        // from healthy time before the union: first flip is the union start
+        let g = FaultSchedule::none().with(0, 10.0, 100.0).with(0, 50.0, 150.0);
+        assert_eq!(g.next_transition(0, 0.0), Some(10.0));
+        assert_eq!(g.next_transition(0, 10.0), Some(150.0));
+    }
+
+    #[test]
+    fn transitions_merge_adjacent_windows() {
+        // [0,100) + [100,200) form one continuous down span: the shared
+        // edge at 100 flips nothing (is_down(100) is true via window 2).
+        let f = FaultSchedule::none().with(1, 0.0, 100.0).with(1, 100.0, 200.0);
+        assert!(f.is_down(1, 100.0));
+        assert_eq!(f.next_transition(1, 0.0), Some(200.0));
+        assert_eq!(f.next_transition(1, 100.0), Some(200.0));
+        assert_eq!(f.next_transition(1, 200.0), None);
+        // other rails are untouched by rail 1's windows
+        assert_eq!(f.next_transition(0, 0.0), None);
+    }
+
+    #[test]
+    fn transitions_with_disjoint_windows_report_each_flip() {
+        let f = FaultSchedule::none().with(0, 10.0, 20.0).with(0, 40.0, 50.0);
+        assert_eq!(f.next_transition(0, 0.0), Some(10.0));
+        assert_eq!(f.next_transition(0, 15.0), Some(20.0));
+        assert_eq!(f.next_transition(0, 20.0), Some(40.0));
+        assert_eq!(f.next_transition(0, 45.0), Some(50.0));
+        assert_eq!(f.next_transition(0, 50.0), None);
+    }
+
+    #[test]
+    fn membership_schedule_sorts_and_exposes_events() {
+        let s = MembershipSchedule::none()
+            .join(3, 500.0)
+            .leave(3, 100.0)
+            .leave(1, 250.0);
+        assert!(!s.is_empty());
+        assert_eq!(s.len(), 3);
+        // events come back in time order regardless of builder order
+        assert_eq!(s.event(0), MembershipEvent::Leave { node: 3, at_us: 100.0 });
+        assert_eq!(s.event(1), MembershipEvent::Leave { node: 1, at_us: 250.0 });
+        assert_eq!(s.event(2), MembershipEvent::Join { node: 3, at_us: 500.0 });
+        assert_eq!(s.event(2).node(), 3);
+        assert_eq!(s.event(2).at_us(), 500.0);
+        assert!(MembershipSchedule::none().is_empty());
     }
 }

@@ -112,6 +112,9 @@ pub struct Fabric {
 impl Fabric {
     pub fn new(nodes: usize, rails: Vec<Rail>, mut cpu: CpuPool, seed: u64) -> Fabric {
         assert!(nodes >= 2, "need at least 2 nodes");
+        // Affinity masks are u64 bitmasks; rails beyond bit 63 used to slip
+        // past every mask check as "always allowed".
+        assert!(rails.len() <= 64, "at most 64 rails (affinity-mask limit)");
         for r in &rails {
             cpu.register(r.kind());
         }
@@ -239,6 +242,22 @@ impl Fabric {
 
     pub fn reset_clock(&mut self) {
         self.clock_us = 0.0;
+    }
+
+    /// Rebind the fabric to a new participating-node count (elastic
+    /// membership: the coordinator compacts the surviving set and the
+    /// fabric only ever sees the contiguous count). Clock, rail state,
+    /// shares and RNG streams are untouched — per-op streams are reseeded
+    /// at the next [`Fabric::begin_op`] anyway.
+    pub fn set_nodes(&mut self, nodes: usize) {
+        assert!(nodes >= 2, "need at least 2 nodes");
+        self.nodes = nodes;
+    }
+
+    /// True when `rail` currently has injected stragglers (failure-era
+    /// state the readmit path must clear).
+    pub fn has_straggler(&self, rail: usize) -> bool {
+        self.stragglers.iter().any(|s| s.rail == rail)
     }
 
     /// Cores effectively granted to `rail` during `phase`.

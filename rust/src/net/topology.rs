@@ -303,16 +303,13 @@ impl TopologyTree {
     /// rail's bandwidth estimate by. 1.0 on unconstrained trees (no group
     /// objects to the rail) down to 0.0 when no group admits it.
     pub fn rail_admit_fraction(&self, rail: usize) -> f64 {
-        if rail >= 64 {
-            return 1.0;
-        }
         let mut total = 0usize;
         let mut admit = 0usize;
         for lv in &self.levels {
             if let Some(masks) = &lv.affinity {
                 for &m in masks {
                     total += 1;
-                    if m & (1u64 << rail) != 0 {
+                    if rail < 64 && m & (1u64 << rail) != 0 {
                         admit += 1;
                     }
                 }
@@ -373,6 +370,14 @@ impl TopologyTree {
     pub fn validate(&self, nodes: usize, n_rails: usize) -> Result<()> {
         if nodes == 0 {
             return Err(Error::Topology("cluster has zero nodes".into()));
+        }
+        if n_rails > 64 {
+            // Affinity masks are u64 bitmasks: rails beyond bit 63 cannot be
+            // expressed, and every consumer used to silently treat them as
+            // always-allowed, bypassing affinity on large fabrics.
+            return Err(Error::Topology(format!(
+                "{n_rails} rails exceed the 64-rail affinity-mask limit"
+            )));
         }
         let mut prev_bounds: Vec<usize> = (0..=nodes).collect();
         let mut prev_groups = nodes;
@@ -469,6 +474,78 @@ impl TopologyTree {
             ));
         }
         Ok(())
+    }
+
+    /// Rebind this tree (bound to `nodes` nodes) over the surviving set
+    /// after `departed` nodes (original numbering) leave. Group sizes
+    /// shrink by their departed members; emptied groups are dropped along
+    /// with their affinity masks; uniform levels whose groups no longer
+    /// share one size degrade to explicit shapes instead of erroring; a
+    /// level that stops coarsening the one below (every surviving group a
+    /// singleton, or as many groups as the level below) is dropped
+    /// entirely. The result is re-validated against the survivor count so
+    /// every planner invariant holds on the new tree.
+    ///
+    /// Pure: `self` is untouched, so a failed rebind (e.g. affinity masks
+    /// left unsatisfiable by the departures) leaves the caller free to
+    /// keep running on the old membership.
+    pub fn rebind(&self, nodes: usize, departed: &[usize], n_rails: usize) -> Result<TopologyTree> {
+        let mut gone = vec![false; nodes];
+        for &d in departed {
+            if d >= nodes {
+                return Err(Error::Topology(format!(
+                    "departed node {d} outside the {nodes}-node cluster"
+                )));
+            }
+            if gone[d] {
+                return Err(Error::Topology(format!("node {d} departed twice")));
+            }
+            gone[d] = true;
+        }
+        let survivors = nodes - departed.len();
+        if survivors == 0 {
+            return Err(Error::Topology("membership change leaves zero nodes".into()));
+        }
+        let mut out = TopologyTree { levels: Vec::new() };
+        let mut prev_groups = survivors;
+        for (li, lv) in self.levels.iter().enumerate() {
+            let bounds = self.boundaries(li, nodes);
+            let mut sizes: Vec<usize> = Vec::new();
+            let mut kept_masks: Vec<u64> = Vec::new();
+            for (gi, w) in bounds.windows(2).enumerate() {
+                let s = (w[0]..w[1]).filter(|&n| !gone[n]).count();
+                if s == 0 {
+                    continue;
+                }
+                sizes.push(s);
+                if let Some(masks) = &lv.affinity {
+                    kept_masks.push(masks[gi]);
+                }
+            }
+            let groups = sizes.len();
+            if groups >= prev_groups {
+                // No longer coarsens what's below (all singletons, or as
+                // many groups as subunits): the level carries no structure
+                // over the surviving set.
+                continue;
+            }
+            let uniform = sizes.windows(2).all(|p| p[0] == p[1]);
+            let shape = if uniform {
+                GroupShape::Uniform(sizes[0])
+            } else {
+                GroupShape::Explicit(sizes)
+            };
+            out.levels.push(TopoLevel {
+                name: lv.name.clone(),
+                shape,
+                bw_mbps: lv.bw_mbps,
+                setup_us: lv.setup_us,
+                affinity: lv.affinity.as_ref().map(|_| kept_masks),
+            });
+            prev_groups = groups;
+        }
+        out.validate(survivors, n_rails)?;
+        Ok(out)
     }
 }
 
@@ -977,5 +1054,80 @@ mod tests {
         let c = ClusterSpec::supercomputer();
         let eth = &c.node.nics[0];
         assert!(eth.usable_mbps() < 120.0);
+    }
+
+    #[test]
+    fn validate_rejects_more_than_64_rails() {
+        // regression: affinity consumers used to treat rails >= 64 as
+        // always-allowed, silently bypassing masks on large fabrics
+        let t = TopologyTree::flat();
+        assert!(t.validate(8, 64).is_ok());
+        let err = t.validate(8, 65).unwrap_err();
+        assert!(
+            matches!(err, Error::Topology(ref m) if m.contains("64-rail")),
+            "{err:?}"
+        );
+        // and the soft-affinity weight no longer reports out-of-range
+        // rails as universally admitted
+        let c = ClusterSpec::pods(4).with_affinity(0, vec![0b11; 4]);
+        assert_eq!(c.topo.rail_admit_fraction(64), 0.0);
+    }
+
+    #[test]
+    fn rebind_degrades_uniform_to_explicit() {
+        // 32 nodes as 8 racks of 4 in 2 pods of 16; node 2 departs
+        let topo = ClusterSpec::racked_pods(4, 16).topo;
+        let r = topo.rebind(32, &[2], 2).unwrap();
+        assert_eq!(r.depth(), 2);
+        assert_eq!(
+            r.levels[0].shape,
+            GroupShape::Explicit(vec![3, 4, 4, 4, 4, 4, 4, 4])
+        );
+        assert_eq!(r.levels[1].shape, GroupShape::Explicit(vec![15, 16]));
+        assert!(r.validate(31, 2).is_ok());
+        assert_eq!(r.max_valid_depth(31), 2);
+    }
+
+    #[test]
+    fn rebind_drops_emptied_groups_and_masks() {
+        // whole first rack [0..4) leaves: rack level stays uniform with one
+        // fewer group, its affinity mask goes with it
+        let topo = ClusterSpec::racked_pods(4, 16)
+            .with_affinity(0, vec![0b01, 0b11, 0b11, 0b11, 0b11, 0b11, 0b11, 0b11])
+            .topo;
+        assert_eq!(topo.allowed_rail_mask(2), 0b01);
+        let r = topo.rebind(32, &[0, 1, 2, 3], 2).unwrap();
+        assert_eq!(r.levels[0].shape, GroupShape::Uniform(4));
+        assert_eq!(r.levels[0].affinity.as_ref().unwrap().len(), 7);
+        // the restrictive mask belonged to the departed rack
+        assert_eq!(r.allowed_rail_mask(2), 0b11);
+        assert_eq!(r.levels[1].shape, GroupShape::Explicit(vec![12, 16]));
+    }
+
+    #[test]
+    fn rebind_drops_non_coarsening_levels() {
+        // pods of 4 at 8 nodes; 3 of one pod's members leave -> groups
+        // [1, 4]; then the other pod shrinks to singletons
+        let topo = ClusterSpec::pods(4).topo;
+        let r = topo.rebind(8, &[1, 2, 3], 2).unwrap();
+        assert_eq!(r.levels[0].shape, GroupShape::Explicit(vec![1, 4]));
+        // 6 of 8 leave, one survivor per pod: level carries no structure
+        let r = topo.rebind(8, &[1, 2, 3, 5, 6, 7], 2).unwrap();
+        assert!(r.is_flat());
+    }
+
+    #[test]
+    fn rebind_rejects_bad_departures() {
+        let topo = ClusterSpec::pods(4).topo;
+        assert!(matches!(topo.rebind(8, &[8], 2), Err(Error::Topology(_))));
+        assert!(matches!(topo.rebind(8, &[1, 1], 2), Err(Error::Topology(_))));
+        assert!(matches!(
+            topo.rebind(2, &[0, 1], 2),
+            Err(Error::Topology(_))
+        ));
+        // failed rebinds leave the original untouched (pure)
+        let before = topo.clone();
+        let _ = topo.rebind(8, &[8], 2);
+        assert_eq!(topo, before);
     }
 }

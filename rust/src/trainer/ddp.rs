@@ -60,6 +60,15 @@ impl DdpSim {
         self
     }
 
+    /// Attach a node join/leave schedule to the underlying coordinator
+    /// (elastic membership: applied at op boundaries as training's
+    /// virtual clock passes each event; bucket payloads automatically
+    /// follow the surviving node count).
+    pub fn with_membership(mut self, schedule: crate::net::fault::MembershipSchedule) -> DdpSim {
+        self.mr.set_membership(schedule);
+        self
+    }
+
     /// Communication time of one full iteration (all profile ops). Each
     /// bucket op reports `(time, planner-scheduled across ≥2 rails)`; with
     /// bucket pipelining on, adjacent such ops earn the planner's overlap
@@ -68,9 +77,15 @@ impl DdpSim {
     pub fn comm_us(&mut self) -> Result<f64> {
         let mut ops: Vec<(f64, bool)> = Vec::with_capacity(self.profile.ops.len());
         for &bytes in &self.profile.ops.clone() {
+            // staging buffers track the coordinator's surviving node set,
+            // not the configured count — membership churn between buckets
+            // shrinks/regrows them transparently (poll first so the
+            // buffer matches the post-churn count)
+            self.mr.poll_membership()?;
+            let nodes = self.mr.active_nodes();
             let mut buf = self
                 .pool
-                .acquire(self.nodes, self.sim_elems, |n, i| ((n + i) % 17) as f32);
+                .acquire(nodes, self.sim_elems, |n, i| ((n + i) % 17) as f32);
             let elem_bytes = bytes as f64 / self.sim_elems as f64;
             let rep = self.mr.allreduce_scaled(&mut buf, elem_bytes)?;
             self.pool.release(buf);
@@ -256,6 +271,37 @@ mod tests {
             sim.plan_epoch() > settled,
             "mid-training straggler must force a replan"
         );
+    }
+
+    #[test]
+    fn node_leave_mid_training_shrinks_set_and_replans() {
+        use crate::net::fault::MembershipSchedule;
+        let mut sim = DdpSim::new(
+            &cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha),
+            CommProfile::alexnet(),
+            1,
+            32,
+        )
+        .unwrap()
+        // node 3 departs 1us into training: the event lands mid-bucket
+        // and is applied at the next bucket boundary
+        .with_membership(MembershipSchedule::none().leave(3, 1.0));
+        assert_eq!(sim.mr.membership_epoch(), 0);
+        let e_plan = sim.plan_epoch();
+        let c1 = sim.comm_us().unwrap();
+        assert!(c1 > 0.0);
+        // the leave applied during the first iteration's bucket stream
+        assert_eq!(sim.mr.active_nodes(), 3);
+        assert_eq!(sim.mr.membership_epoch(), 1);
+        assert!(
+            sim.plan_epoch() > e_plan,
+            "membership rebind must start a fresh selection epoch"
+        );
+        assert!(sim.mr.exceptions.membership_within_budget());
+        // training continues on the surviving set
+        let c2 = sim.comm_us().unwrap();
+        assert!(c2 > 0.0);
+        assert_eq!(sim.mr.active_nodes(), 3);
     }
 
     #[test]

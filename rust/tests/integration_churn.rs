@@ -1,0 +1,248 @@
+//! Integration: elastic membership (node join/leave self-recovery).
+//!
+//! The churn matrix — {node leave, node rejoin, rack leave,
+//! leave-during-op} × {flat, racked-pods} × {serial, parallel} — must
+//! recover inside the paper's 200 ms budget at p99, invalidate cached
+//! plans through the membership epoch, and keep numerics bit-exact: the
+//! surviving set reduces exactly like a fresh run at the survivor count,
+//! and a rejoined cluster exactly like one that never lost the node.
+
+use nezha::config::{Config, Policy};
+use nezha::coordinator::arbiter::job::percentile;
+use nezha::coordinator::buffer::UnboundBuffer;
+use nezha::coordinator::control::exception::PAPER_RECOVERY_BUDGET_US;
+use nezha::coordinator::multirail::MultiRail;
+use nezha::net::cpu_pool::ExecMode;
+use nezha::net::fault::MembershipSchedule;
+use nezha::net::topology::{parse_combo, ClusterSpec};
+
+const LEN: usize = 1 << 12;
+/// Modeled 8MB ops on small real buffers.
+const ELEM_BYTES: f64 = (8 << 20) as f64 / LEN as f64;
+
+fn flat(nodes: usize, exec: ExecMode) -> Config {
+    let mut c = Config {
+        nodes,
+        combo: parse_combo("tcp-tcp").unwrap(),
+        policy: Policy::Nezha,
+        deterministic: true,
+        ..Config::default()
+    };
+    c.exec = exec;
+    c
+}
+
+fn racked(exec: ExecMode) -> Config {
+    let mut c = flat(32, exec);
+    c.cluster = ClusterSpec::racked_pods(4, 16);
+    c
+}
+
+fn make(nodes: usize, len: usize) -> UnboundBuffer {
+    UnboundBuffer::from_fn(nodes, len, |n, i| ((n + 1) * (i % 13 + 1)) as f32)
+}
+
+fn reduced_ok(buf: &UnboundBuffer, nodes: usize, len: usize) {
+    for n in 0..buf.nodes() {
+        for i in (0..len).step_by(499) {
+            let expect: f32 = (0..nodes).map(|m| ((m + 1) * (i % 13 + 1)) as f32).sum();
+            assert_eq!(buf.node(n)[i], expect, "node {n} elem {i}");
+        }
+    }
+}
+
+fn op(mr: &mut MultiRail, nodes: usize) {
+    let mut buf = make(nodes, LEN);
+    mr.allreduce_scaled(&mut buf, ELEM_BYTES).unwrap();
+    reduced_ok(&buf, nodes, LEN);
+}
+
+/// Drive every churn scenario over one cluster shape and collect the
+/// charged recovery times.
+fn churn_scenarios(cfg: &Config, leave_node: usize, rack: &[usize], samples: &mut Vec<f64>) {
+    let nodes = cfg.nodes;
+
+    // -- single node leave mid-training --
+    let mut mr = MultiRail::new(cfg).unwrap();
+    op(&mut mr, nodes);
+    let e_plan = mr.plan_epoch();
+    let rec = mr.node_leave(leave_node).unwrap();
+    assert!(!rec.rejoin);
+    assert_eq!(rec.count, 1);
+    assert_eq!(rec.epoch, 1);
+    assert_eq!(mr.membership_epoch(), 1);
+    assert_eq!(mr.active_nodes(), nodes - 1);
+    op(&mut mr, nodes - 1);
+    assert!(mr.plan_epoch() > e_plan, "leave must force a replan");
+    samples.push(rec.recovery_us);
+
+    // -- leave then rejoin: full round-trip back to the home topology --
+    let mut mr = MultiRail::new(cfg).unwrap();
+    op(&mut mr, nodes);
+    let l = mr.node_leave(leave_node).unwrap();
+    op(&mut mr, nodes - 1);
+    let r = mr.node_rejoin(leave_node).unwrap();
+    assert!(r.rejoin);
+    assert_eq!(r.node, leave_node);
+    assert_eq!(mr.membership_epoch(), 2);
+    assert_eq!(mr.active_nodes(), nodes);
+    assert!(mr.departed_nodes().is_empty());
+    // rejoin skips the detection phase, so it is strictly cheaper
+    assert!(r.recovery_us < l.recovery_us, "{} vs {}", r.recovery_us, l.recovery_us);
+    op(&mut mr, nodes);
+    samples.push(l.recovery_us);
+    samples.push(r.recovery_us);
+
+    // -- a whole rack dying is ONE detection event, one budget --
+    let mut mr = MultiRail::new(cfg).unwrap();
+    op(&mut mr, nodes);
+    let rec = mr.nodes_leave(rack).unwrap();
+    assert_eq!(rec.count, rack.len());
+    assert_eq!(mr.membership_epoch(), 1, "batch leave bumps the epoch once");
+    assert_eq!(mr.exceptions.membership_count(), 1, "batch leave charges once");
+    assert_eq!(mr.active_nodes(), nodes - rack.len());
+    op(&mut mr, nodes - rack.len());
+    samples.push(rec.recovery_us);
+
+    // -- leave lands mid-op: applied at the next op boundary --
+    let mut mr = MultiRail::new(cfg)
+        .unwrap()
+        .with_membership(MembershipSchedule::none().leave(leave_node, 1.0));
+    // the first op starts at t=0, before the event: full membership
+    op(&mut mr, nodes);
+    assert_eq!(mr.membership_epoch(), 0, "mid-op event must wait for the boundary");
+    // the clock passed 1.0 during the op; the next op applies the leave
+    op(&mut mr, nodes - 1);
+    assert_eq!(mr.membership_epoch(), 1);
+    assert_eq!(mr.departed_nodes(), &[leave_node]);
+    for ev in &mr.exceptions.membership {
+        samples.push(ev.recovery_us);
+    }
+}
+
+fn churn_matrix(exec: ExecMode) {
+    let mut samples = Vec::new();
+    churn_scenarios(&flat(8, exec), 2, &[4, 5, 6, 7], &mut samples);
+    // racked-pods: node 2 inside rack 0, then rack 0 (nodes 0..4) at once
+    churn_scenarios(&racked(exec), 2, &[0, 1, 2, 3], &mut samples);
+    assert_eq!(samples.len(), 10, "4 scenarios x 2 shapes: 5 recoveries each");
+    for &s in &samples {
+        assert!(s < PAPER_RECOVERY_BUDGET_US, "recovery {s} over budget");
+    }
+    let p99 = percentile(&samples, 0.99).unwrap();
+    assert!(
+        p99 < PAPER_RECOVERY_BUDGET_US,
+        "p99 recovery {p99} exceeds the {PAPER_RECOVERY_BUDGET_US}us budget"
+    );
+}
+
+#[test]
+fn churn_matrix_recovers_within_budget_serial() {
+    churn_matrix(ExecMode::Serial);
+}
+
+#[test]
+fn churn_matrix_recovers_within_budget_parallel() {
+    churn_matrix(ExecMode::Parallel);
+}
+
+#[test]
+fn survivors_bit_exact_vs_fresh_run_at_survivor_count() {
+    // numerics on the surviving set must match a coordinator that was
+    // BORN with the survivor count — schedules differ (the rebound one
+    // replans over the shrunken topology), results may not
+    let mut churned = MultiRail::new(&flat(8, ExecMode::Serial)).unwrap();
+    op(&mut churned, 8);
+    churned.node_leave(7).unwrap();
+    let mut a = make(7, LEN);
+    churned.allreduce_scaled(&mut a, ELEM_BYTES).unwrap();
+
+    let mut fresh = MultiRail::new(&flat(7, ExecMode::Serial)).unwrap();
+    let mut b = make(7, LEN);
+    fresh.allreduce_scaled(&mut b, ELEM_BYTES).unwrap();
+
+    for n in 0..7 {
+        assert_eq!(a.node(n), b.node(n), "survivor numerics diverge at node {n}");
+    }
+}
+
+#[test]
+fn rejoined_cluster_bit_exact_vs_never_failed_run() {
+    let c = racked(ExecMode::Serial);
+    let mut churned = MultiRail::new(&c).unwrap();
+    op(&mut churned, 32);
+    churned.node_leave(5).unwrap();
+    op(&mut churned, 31);
+    churned.node_rejoin(5).unwrap();
+    let mut a = make(32, LEN);
+    churned.allreduce_scaled(&mut a, ELEM_BYTES).unwrap();
+
+    let mut steady = MultiRail::new(&c).unwrap();
+    let mut b = make(32, LEN);
+    steady.allreduce_scaled(&mut b, ELEM_BYTES).unwrap();
+
+    for n in 0..32 {
+        assert_eq!(a.node(n), b.node(n), "rejoin numerics diverge at node {n}");
+    }
+}
+
+#[test]
+fn membership_epoch_keys_the_plan_cache() {
+    let mut mr = MultiRail::new(&flat(8, ExecMode::Serial)).unwrap();
+    // warm: repeated same-size ops settle onto a cached plan
+    for _ in 0..6 {
+        op(&mut mr, 8);
+    }
+    let settled = mr.plan_epoch();
+    op(&mut mr, 8);
+    assert_eq!(mr.plan_epoch(), settled, "warm cache must be reused");
+    // the leave invalidates every cached plan through the epoch key
+    mr.node_leave(3).unwrap();
+    op(&mut mr, 7);
+    assert!(
+        mr.plan_epoch() > settled,
+        "stale pre-churn plan must not be replayed after the rebind"
+    );
+    // and the post-churn cache settles again at the new epoch
+    for _ in 0..6 {
+        op(&mut mr, 7);
+    }
+    let resettled = mr.plan_epoch();
+    op(&mut mr, 7);
+    assert_eq!(mr.plan_epoch(), resettled, "post-churn cache must be reused");
+}
+
+#[test]
+fn racked_leave_respects_shrunken_affinity_and_keeps_reducing() {
+    // racks of 4 with alternating rail affinity: losing a whole rack drops
+    // its mask; the rebound cluster keeps reducing on the allowed rails
+    let mut c = racked(ExecMode::Serial);
+    c.cluster = ClusterSpec::racked_pods(4, 16)
+        .with_affinity(0, vec![0b01, 0b11, 0b11, 0b11, 0b11, 0b11, 0b11, 0b11]);
+    let mut mr = MultiRail::new(&c).unwrap();
+    op(&mut mr, 32);
+    // rack 0 (the 0b01-constrained one) departs entirely
+    mr.nodes_leave(&[0, 1, 2, 3]).unwrap();
+    assert_eq!(mr.active_nodes(), 28);
+    op(&mut mr, 28);
+    assert!(mr.exceptions.membership_within_budget());
+}
+
+#[test]
+fn membership_errors_are_atomic() {
+    let mut mr = MultiRail::new(&flat(8, ExecMode::Serial)).unwrap();
+    op(&mut mr, 8);
+    assert!(mr.node_leave(8).is_err(), "node outside the cluster");
+    assert!(mr.node_rejoin(0).is_err(), "rejoin of a never-departed node");
+    assert!(mr.nodes_leave(&[1, 1]).is_err(), "duplicate in one batch");
+    // a failed change leaves membership untouched and ops keep working
+    assert_eq!(mr.membership_epoch(), 0);
+    assert_eq!(mr.active_nodes(), 8);
+    assert!(mr.departed_nodes().is_empty());
+    op(&mut mr, 8);
+    // shrinking below two participants is refused, membership unchanged
+    mr.nodes_leave(&[1, 2, 3, 4, 5, 6]).unwrap();
+    assert!(mr.node_leave(7).is_err(), "a collective needs 2 nodes");
+    assert_eq!(mr.active_nodes(), 2);
+    op(&mut mr, 2);
+}
