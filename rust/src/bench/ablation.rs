@@ -793,7 +793,8 @@ pub fn run_all() -> Result<()> {
     ablate_straggler()?;
     ablate_multilevel()?;
     ablate_tenancy()?;
-    ablate_churn()
+    ablate_churn()?;
+    crate::bench::chaos::ablate_grayfault()
 }
 
 #[cfg(test)]

@@ -6,6 +6,7 @@
 //! (rust/benches/).
 
 pub mod ablation;
+pub mod chaos;
 pub mod figures;
 pub mod figures_app;
 pub mod harness;

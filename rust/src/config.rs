@@ -7,7 +7,9 @@
 
 use std::collections::BTreeMap;
 
+use crate::coordinator::control::{HealthConfig, HealthMode};
 use crate::net::cpu_pool::{AllocPolicy, ExecMode};
+use crate::net::fault::{parse_degrade, parse_faults, DegradeSchedule, FaultSchedule};
 use crate::net::protocol::ProtoKind;
 use crate::net::topology::{parse_combo, parse_topology, ClusterSpec};
 use crate::util::cli::Args;
@@ -137,6 +139,14 @@ pub struct Config {
     /// overrides the default so CI can run whole suites under either.
     pub exec: ExecMode,
     pub control: ControlConfig,
+    /// Crash-stop fault windows injected into the fabric (`faults=` spec:
+    /// `rail0:10ms-30ms;rail1:50ms-`).
+    pub faults: FaultSchedule,
+    /// Gray-failure degradation windows (`degrade=` spec:
+    /// `rail0:loss=0.05@10ms-30ms;rail1:brownout=0.5@0-1s`).
+    pub degrade: DegradeSchedule,
+    /// Suspicion-driven rail health tracking (`health= graceful|binary|off`).
+    pub health: HealthConfig,
     pub seed: u64,
     pub deterministic: bool,
     /// Directory holding the AOT artifacts.
@@ -154,6 +164,9 @@ impl Default for Config {
             alloc: AllocPolicy::Adaptive,
             exec: ExecMode::from_env(ExecMode::Serial),
             control: ControlConfig::default(),
+            faults: FaultSchedule::none(),
+            degrade: DegradeSchedule::none(),
+            health: HealthConfig::default(),
             seed: 42,
             deterministic: false,
             artifacts_dir: "artifacts".into(),
@@ -202,6 +215,9 @@ impl Config {
                 "detect_timeout_us" => self.control.detect_timeout_us = parse_f64(k, v)?,
                 "migrate_cost_us" => self.control.migrate_cost_us = parse_f64(k, v)?,
                 "replan_error" => self.control.replan_error = parse_f64(k, v)?,
+                "faults" => self.faults = parse_faults(v)?,
+                "degrade" => self.degrade = parse_degrade(v)?,
+                "health" => self.health.mode = HealthMode::parse(v)?,
                 "seed" => self.seed = parse_f64(k, v)? as u64,
                 "deterministic" => self.deterministic = v == "true" || v == "1",
                 "artifacts_dir" => self.artifacts_dir = v.clone(),
@@ -239,6 +255,7 @@ impl Config {
             "cluster", "topology", "nodes", "combo", "network", "policy", "planner", "exec",
             "alloc", "tau", "eta",
             "timer_window", "detect_timeout_us", "migrate_cost_us", "replan_error",
+            "faults", "degrade", "health",
             "seed", "deterministic", "artifacts_dir",
         ] {
             if let Some(v) = args.get(key) {
@@ -350,6 +367,50 @@ mod tests {
         assert_eq!(c.exec, ExecMode::Serial);
         kv.insert("exec".into(), "sideways".into());
         assert!(c.apply(&kv).is_err());
+    }
+
+    #[test]
+    fn fault_and_degrade_keys_parse() {
+        let mut c = Config::default();
+        assert!(c.faults.is_empty() && c.degrade.is_empty());
+        let mut kv = BTreeMap::new();
+        kv.insert("faults".into(), "1@100ms-200ms;0@2s-3s".into());
+        kv.insert(
+            "degrade".into(),
+            "loss:1:0.05@100ms-300ms;brownout:0:0.5@1s-2s".into(),
+        );
+        kv.insert("health".into(), "binary".into());
+        c.apply(&kv).unwrap();
+        assert!(!c.faults.is_empty());
+        assert!(c.faults.is_down(1, 150_000.0));
+        assert!(!c.faults.is_down(1, 250_000.0));
+        assert!(c.degrade.loss_at(1, 200_000.0) > 0.0);
+        assert!(c.degrade.brownout_at(0, 1_500_000.0) < 1.0);
+        assert_eq!(c.health.mode, HealthMode::Binary);
+        kv.insert("health".into(), "off".into());
+        c.apply(&kv).unwrap();
+        assert_eq!(c.health.mode, HealthMode::Off);
+    }
+
+    #[test]
+    fn bad_fault_specs_are_config_errors() {
+        let mut c = Config::default();
+        for (key, val) in [
+            ("faults", "1@300ms-200ms"),     // end before start
+            ("faults", "x@100ms-200ms"),     // bad rail
+            ("faults", "1:100ms-200ms"),     // missing @
+            ("degrade", "loss:0:1.5@0-1s"),  // rate out of range
+            ("degrade", "brownout:0:0@0-1s"),// factor must be > 0
+            ("degrade", "flap:0:0@0-1s"),    // period must be positive
+            ("degrade", "wobble:0:1@0-1s"),  // unknown kind
+            ("health", "sideways"),
+        ] {
+            let mut kv = BTreeMap::new();
+            kv.insert(key.to_string(), val.to_string());
+            assert!(c.apply(&kv).is_err(), "{key}={val} should be rejected");
+        }
+        // still usable after rejected updates
+        assert!(c.faults.is_empty());
     }
 
     #[test]

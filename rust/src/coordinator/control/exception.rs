@@ -30,6 +30,50 @@ pub struct FailoverEvent {
 /// task migration must complete within 200 ms.
 pub const PAPER_RECOVERY_BUDGET_US: f64 = 200_000.0;
 
+/// A gray-failure health action taken by the control plane (the
+/// `HealthMonitor`'s decisions, executed through the Exception Handler's
+/// budget accounting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GrayAction {
+    /// Healthy → Degraded: soft share demotion, rail keeps serving.
+    Demote,
+    /// Degraded → Healthy: suspicion cleared, full share restored.
+    Restore,
+    /// → Quarantined: deregistered, windows migrated (charges migration).
+    Quarantine,
+    /// Quarantined → Probation: canary readmission at reduced share.
+    Probation,
+    /// Probation → Healthy: clean canary streak, full readmission.
+    Readmit,
+}
+
+impl GrayAction {
+    pub fn name(self) -> &'static str {
+        match self {
+            GrayAction::Demote => "demote",
+            GrayAction::Restore => "restore",
+            GrayAction::Quarantine => "quarantine",
+            GrayAction::Probation => "probation",
+            GrayAction::Readmit => "readmit",
+        }
+    }
+}
+
+/// One recorded gray-failure health transition, for the chaos-campaign
+/// invariants (bounded transitions, recovery budget) and ablation plots.
+#[derive(Debug, Clone, Copy)]
+pub struct GrayEvent {
+    /// Virtual time the action completed (us).
+    pub at_us: f64,
+    pub rail: usize,
+    pub action: GrayAction,
+    /// Modeled cost charged for the action (us) — only quarantines pay
+    /// migration; soft demotions/restores are control-plane-free.
+    pub recovery_us: f64,
+    /// Suspicion score at decision time.
+    pub suspicion: f64,
+}
+
 /// One recorded node-level membership recovery (leave or rejoin) — the
 /// elastic counterpart of [`FailoverEvent`].
 #[derive(Debug, Clone, Copy)]
@@ -56,6 +100,9 @@ pub struct ExceptionHandler {
     /// Node-level membership recoveries (leave/rejoin), same budget
     /// accounting as rail failovers.
     pub membership: Vec<MembershipRecovery>,
+    /// Gray-failure health actions (demote/restore/quarantine/probation/
+    /// readmit), same budget accounting as rail failovers.
+    pub gray: Vec<GrayEvent>,
     /// Rails the topology's per-group affinity masks allow (all-ones
     /// without affinity constraints): failover takeover targets must
     /// respect them — migrating a window to a rail some group excludes
@@ -69,6 +116,7 @@ impl ExceptionHandler {
             cfg,
             events: Vec::new(),
             membership: Vec::new(),
+            gray: Vec::new(),
             rail_mask: u64::MAX,
         }
     }
@@ -129,13 +177,55 @@ impl ExceptionHandler {
         Some(ev)
     }
 
-    /// Probe deregistered rails; re-admit any whose fault window has
-    /// passed. Returns re-admitted rail ids.
+    /// Record a gray-failure health action: quarantines charge the
+    /// migration cost (windows move exactly like a crash failover's, but
+    /// detection already happened — that's what the suspicion score *is*);
+    /// soft demotions, restores and probation canaries are free.
+    pub fn record_gray(
+        &mut self,
+        fab: &mut Fabric,
+        rail: usize,
+        action: GrayAction,
+        suspicion: f64,
+    ) -> GrayEvent {
+        let recovery = match action {
+            GrayAction::Quarantine => self.cfg.migrate_cost_us,
+            _ => 0.0,
+        };
+        if recovery > 0.0 {
+            fab.advance(recovery);
+        }
+        let ev = GrayEvent {
+            at_us: fab.now_us(),
+            rail,
+            action,
+            recovery_us: recovery,
+            suspicion,
+        };
+        self.gray.push(ev);
+        ev
+    }
+
+    /// True when every gray-failure action stayed inside the paper's
+    /// 200 ms self-recovery budget.
+    pub fn gray_within_budget(&self) -> bool {
+        self.gray.iter().all(|ev| ev.recovery_us < PAPER_RECOVERY_BUDGET_US)
+    }
+
+    pub fn gray_count(&self) -> usize {
+        self.gray.len()
+    }
+
+    /// Probe quarantined rails; re-admit any whose fault window has
+    /// passed (trust-on-readmit — the legacy `HealthMode::Off` path; with
+    /// the monitor on, `MultiRail::probe_readmitted` routes readmission
+    /// through Probation instead). Returns re-admitted rail ids.
     pub fn probe_recovery(&mut self, fab: &mut Fabric) -> Vec<usize> {
         let mut back = Vec::new();
         for r in 0..fab.rails.len() {
-            if fab.rails[r].health == crate::net::rail::RailHealth::Deregistered
+            if fab.rails[r].health == crate::net::rail::RailHealth::Quarantined
                 && !fab.faults.is_down(r, fab.now_us())
+                && !fab.degrade.flap_down(r, fab.now_us())
             {
                 fab.readmit(r);
                 back.push(r);
@@ -315,6 +405,21 @@ mod tests {
         assert!(h.membership_within_budget());
         // rail-failover ledger untouched
         assert_eq!(h.failover_count(), 0);
+    }
+
+    #[test]
+    fn gray_ledger_charges_only_quarantine() {
+        let mut fab = dual_tcp();
+        let mut h = ExceptionHandler::new(ControlConfig::default());
+        let d = h.record_gray(&mut fab, 1, GrayAction::Demote, 3.2);
+        assert_eq!(d.recovery_us, 0.0);
+        assert_eq!(fab.now_us(), 0.0, "soft demotion is control-plane-free");
+        let q = h.record_gray(&mut fab, 1, GrayAction::Quarantine, 8.5);
+        assert!(q.recovery_us > 0.0 && q.recovery_us < PAPER_RECOVERY_BUDGET_US);
+        assert_eq!(fab.now_us(), q.recovery_us, "quarantine charges migration");
+        assert_eq!(h.gray_count(), 2);
+        assert!(h.gray_within_budget());
+        assert_eq!(GrayAction::Readmit.name(), "readmit");
     }
 
     #[test]

@@ -1,0 +1,478 @@
+//! Health Monitor: gray-failure detection via per-rail suspicion scores.
+//!
+//! Crash-stop failures announce themselves (a transfer errors, §4.4 takes
+//! over). Gray failures don't: a lossy link retransmits, a brownout
+//! stretches transfers, a flapping NIC wobbles — the rail keeps "working",
+//! just worse. The monitor watches the two signals the control plane
+//! already carries — the Timer's observed-vs-predicted residuals (the
+//! `CorrectedCost` plumbing) and the fabric's retransmit ledger — and
+//! folds them into a per-rail *suspicion score* with hysteresis:
+//!
+//! - score ≥ `degrade_enter` → **Degraded**: soft share demotion + replan
+//!   (graceful degradation; the rail keeps carrying reduced traffic)
+//! - score ≥ `quarantine_enter` → **Quarantined**: deregistered, windows
+//!   migrated via the §4.4 path
+//! - score ≤ `degrade_clear` → back to **Healthy** (full share)
+//!
+//! Quarantined rails re-enter through **Probation**: a dwell time gates
+//! readmission (doubling on every failed probation, so a flapping rail
+//! can't oscillate), then the rail carries canary traffic at
+//! `probation_weight` share; `probation_ops` consecutive clean ops promote
+//! it to Healthy, any dirty op sends it straight back.
+//!
+//! Residual-only suspicion saturates at `residual_cap`, *below* the
+//! quarantine threshold: a pure brownout or straggler — slow but
+//! delivering — demotes and never quarantines in [`HealthMode::Graceful`].
+//! Retry-driven suspicion is uncapped: a loss storm escalates all the way.
+//! [`HealthMode::Binary`] is the ablation baseline that quarantines at the
+//! demotion threshold instead of degrading gracefully.
+
+use crate::net::rail::RailHealth;
+use crate::net::simnet::Fabric;
+
+/// Monitor policy: how suspicion maps to actions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthMode {
+    /// Demote first (soft share), quarantine only on escalation.
+    Graceful,
+    /// Quarantine at the demotion threshold — the binary-failover
+    /// ablation baseline (`fig ablate-grayfault`).
+    Binary,
+    /// Monitor disabled: legacy trust-on-readmit behaviour.
+    Off,
+}
+
+impl HealthMode {
+    pub fn parse(s: &str) -> crate::Result<HealthMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "graceful" | "on" => Ok(HealthMode::Graceful),
+            "binary" => Ok(HealthMode::Binary),
+            "off" | "none" => Ok(HealthMode::Off),
+            other => Err(crate::util::error::Error::Config(format!(
+                "unknown health mode `{other}` (graceful|binary|off)"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthMode::Graceful => "graceful",
+            HealthMode::Binary => "binary",
+            HealthMode::Off => "off",
+        }
+    }
+}
+
+/// Suspicion scoring and hysteresis tunables.
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    pub mode: HealthMode,
+    /// Measured/predicted ratio above which an op counts as dirty.
+    pub residual_trigger: f64,
+    /// Suspicion added per retransmit attempt (per-op contribution is
+    /// capped at 3.0 so one pathological op can't instantly quarantine).
+    pub retry_weight: f64,
+    /// Suspicion added per dirty residual observation.
+    pub dirty_inc: f64,
+    /// Multiplicative decay per clean observation (snaps to 0 < 1e-3).
+    pub clean_decay: f64,
+    /// Ceiling for residual-only suspicion — kept below
+    /// `quarantine_enter` so slow-but-delivering rails never quarantine
+    /// in Graceful mode.
+    pub residual_cap: f64,
+    /// Healthy → Degraded threshold.
+    pub degrade_enter: f64,
+    /// Degraded → Healthy threshold (hysteresis gap vs `degrade_enter`).
+    pub degrade_clear: f64,
+    /// → Quarantined threshold (reachable only via retries in Graceful).
+    pub quarantine_enter: f64,
+    /// Load-Balancer share multiplier for Degraded rails.
+    pub degraded_weight: f64,
+    /// Load-Balancer share multiplier for Probation canaries.
+    pub probation_weight: f64,
+    /// Consecutive clean probation ops required for full readmission.
+    pub probation_ops: usize,
+    /// Dwell before the first re-probation after a probation failure;
+    /// doubles per failure (bounded oscillation under flapping).
+    pub requarantine_dwell_us: f64,
+    /// Dwell growth factor per failed probation.
+    pub dwell_backoff: f64,
+    /// Dwell ceiling.
+    pub max_dwell_us: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            mode: HealthMode::Graceful,
+            residual_trigger: 1.4,
+            retry_weight: 0.5,
+            dirty_inc: 1.0,
+            clean_decay: 0.5,
+            residual_cap: 6.0,
+            degrade_enter: 3.0,
+            degrade_clear: 0.5,
+            quarantine_enter: 8.0,
+            degraded_weight: 0.35,
+            probation_weight: 0.25,
+            probation_ops: 3,
+            requarantine_dwell_us: 50_000.0,
+            dwell_backoff: 2.0,
+            max_dwell_us: 10_000_000.0,
+        }
+    }
+}
+
+/// Per-rail monitor state.
+#[derive(Debug, Clone, Default)]
+struct RailStat {
+    suspicion: f64,
+    /// This op looked dirty (retries or residual blow-up).
+    dirty: bool,
+    /// The rail carried traffic this op (only observed rails are decided).
+    observed: bool,
+    /// Consecutive clean probation ops.
+    clean_streak: usize,
+    /// No re-probation before this virtual time.
+    dwell_until_us: f64,
+    /// Current dwell length (0 until the first failed probation).
+    dwell_us: f64,
+}
+
+/// A decided action, to be executed by the coordinator (share demotion,
+/// §4.4 quarantine, probation promotion).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthAction {
+    /// Healthy → Degraded: demote the Load-Balancer share and replan.
+    Demote(usize),
+    /// Degraded → Healthy or Probation → Healthy: restore the full share.
+    Restore(usize),
+    /// → Quarantined: deregister and migrate via the §4.4 path.
+    Quarantine(usize),
+}
+
+/// One recorded state-machine transition (oscillation-bound invariant).
+#[derive(Debug, Clone, Copy)]
+pub struct HealthTransition {
+    pub at_us: f64,
+    pub rail: usize,
+    pub from: RailHealth,
+    pub to: RailHealth,
+    /// Suspicion at transition time.
+    pub suspicion: f64,
+}
+
+/// The monitor: suspicion scores in, [`HealthAction`]s out.
+#[derive(Debug)]
+pub struct HealthMonitor {
+    pub cfg: HealthConfig,
+    stats: Vec<RailStat>,
+    transitions: Vec<HealthTransition>,
+}
+
+impl HealthMonitor {
+    pub fn new(cfg: HealthConfig, n_rails: usize) -> HealthMonitor {
+        HealthMonitor {
+            cfg,
+            stats: vec![RailStat::default(); n_rails],
+            transitions: Vec::new(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.mode != HealthMode::Off
+    }
+
+    pub fn suspicion(&self, rail: usize) -> f64 {
+        self.stats[rail].suspicion
+    }
+
+    /// Load-Balancer share multiplier for a rail in `health` state.
+    pub fn weight_for(&self, health: RailHealth) -> f64 {
+        match health {
+            RailHealth::Degraded => self.cfg.degraded_weight,
+            RailHealth::Probation => self.cfg.probation_weight,
+            _ => 1.0,
+        }
+    }
+
+    /// Fold one op's observation for `rail` into its suspicion score.
+    /// `predicted_us <= 0` skips the residual check (no prediction
+    /// available — e.g. corrections disabled, or the rail wasn't
+    /// planned); retries always count.
+    pub fn observe(&mut self, rail: usize, predicted_us: f64, measured_us: f64, retries: u64) {
+        let st = &mut self.stats[rail];
+        st.observed = true;
+        let mut inc = 0.0;
+        let mut dirty = false;
+        if retries > 0 {
+            dirty = true;
+            inc += (retries as f64 * self.cfg.retry_weight).min(3.0);
+        }
+        if predicted_us > 0.0 && measured_us > predicted_us * self.cfg.residual_trigger {
+            dirty = true;
+            // saturating: residual evidence alone can't cross the
+            // quarantine threshold
+            inc += self.cfg.dirty_inc.min((self.cfg.residual_cap - st.suspicion).max(0.0));
+        }
+        if dirty {
+            st.dirty = true;
+            st.suspicion += inc;
+        } else {
+            st.suspicion *= self.cfg.clean_decay;
+            if st.suspicion < 1e-3 {
+                st.suspicion = 0.0;
+            }
+        }
+    }
+
+    /// Decide actions for every rail observed since the last call; clears
+    /// the per-op observation flags. Quarantined rails are readmission's
+    /// job ([`Self::probation_eligible`]), not decide's.
+    pub fn decide(&mut self, fab: &Fabric, out: &mut Vec<HealthAction>) {
+        out.clear();
+        if !self.enabled() {
+            return;
+        }
+        for (r, rail) in fab.rails.iter().enumerate() {
+            let st = &mut self.stats[r];
+            if !st.observed {
+                continue;
+            }
+            st.observed = false;
+            let dirty = std::mem::take(&mut st.dirty);
+            let s = st.suspicion;
+            match rail.health {
+                RailHealth::Healthy => {
+                    if s >= self.cfg.quarantine_enter
+                        || (self.cfg.mode == HealthMode::Binary && s >= self.cfg.degrade_enter)
+                    {
+                        out.push(HealthAction::Quarantine(r));
+                    } else if s >= self.cfg.degrade_enter {
+                        out.push(HealthAction::Demote(r));
+                    }
+                }
+                RailHealth::Degraded => {
+                    if s >= self.cfg.quarantine_enter {
+                        out.push(HealthAction::Quarantine(r));
+                    } else if s <= self.cfg.degrade_clear {
+                        out.push(HealthAction::Restore(r));
+                    }
+                }
+                RailHealth::Probation => {
+                    if dirty {
+                        out.push(HealthAction::Quarantine(r));
+                    } else {
+                        st.clean_streak += 1;
+                        if st.clean_streak >= self.cfg.probation_ops {
+                            out.push(HealthAction::Restore(r));
+                        }
+                    }
+                }
+                RailHealth::Quarantined => {}
+            }
+        }
+    }
+
+    /// Note that `rail` was quarantined (by decide, or by a §4.4 crash
+    /// failover). A failed probation escalates the readmission dwell —
+    /// doubling, clamped — so a flapping rail's transition count is
+    /// logarithmic in campaign length, not linear.
+    pub fn note_quarantined(&mut self, rail: usize, now_us: f64, from_probation: bool) {
+        let st = &mut self.stats[rail];
+        if from_probation {
+            st.dwell_us = (st.dwell_us * self.cfg.dwell_backoff)
+                .clamp(self.cfg.requarantine_dwell_us, self.cfg.max_dwell_us);
+        }
+        st.dwell_until_us = now_us + st.dwell_us;
+        st.suspicion = 0.0;
+        st.clean_streak = 0;
+        st.dirty = false;
+        st.observed = false;
+    }
+
+    /// May `rail` start probation at `now_us`? (Its quarantine dwell has
+    /// passed. The caller still checks the physical schedules.)
+    pub fn probation_eligible(&self, rail: usize, now_us: f64) -> bool {
+        now_us >= self.stats[rail].dwell_until_us
+    }
+
+    /// Note that `rail` entered probation: a fresh canary record.
+    pub fn note_probation(&mut self, rail: usize) {
+        let st = &mut self.stats[rail];
+        st.suspicion = 0.0;
+        st.clean_streak = 0;
+        st.dirty = false;
+        st.observed = false;
+    }
+
+    /// Record a state-machine transition for the oscillation invariant.
+    pub fn record_transition(&mut self, at_us: f64, rail: usize, from: RailHealth, to: RailHealth) {
+        let suspicion = self.stats[rail].suspicion;
+        self.transitions.push(HealthTransition { at_us, rail, from, to, suspicion });
+    }
+
+    pub fn transitions(&self) -> &[HealthTransition] {
+        &self.transitions
+    }
+
+    /// Transition count for one rail (bounded-oscillation assertions).
+    pub fn transition_count(&self, rail: usize) -> usize {
+        self.transitions.iter().filter(|t| t.rail == rail).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::cpu_pool::CpuPool;
+    use crate::net::protocol::ProtoKind;
+    use crate::net::topology::ClusterSpec;
+
+    fn dual_tcp() -> Fabric {
+        let rails = ClusterSpec::local()
+            .build_rails(&[ProtoKind::Tcp, ProtoKind::Tcp])
+            .unwrap();
+        Fabric::new(4, rails, CpuPool::default(), 9).deterministic()
+    }
+
+    fn monitor() -> HealthMonitor {
+        HealthMonitor::new(HealthConfig::default(), 2)
+    }
+
+    #[test]
+    fn residual_demotes_then_clean_restores() {
+        let mut fab = dual_tcp();
+        let mut m = monitor();
+        let mut out = Vec::new();
+        // three dirty residual ops cross degrade_enter = 3.0
+        for _ in 0..3 {
+            m.observe(1, 100.0, 200.0, 0);
+            m.decide(&fab, &mut out);
+        }
+        assert_eq!(out, vec![HealthAction::Demote(1)]);
+        assert!(fab.rails[1].transition(RailHealth::Degraded));
+        // clean ops decay ×0.5: 3.0 → 0.375 ≤ degrade_clear after 3
+        for _ in 0..2 {
+            m.observe(1, 100.0, 100.0, 0);
+            m.decide(&fab, &mut out);
+            assert!(out.is_empty(), "hysteresis holds mid-decay");
+        }
+        m.observe(1, 100.0, 100.0, 0);
+        m.decide(&fab, &mut out);
+        assert_eq!(out, vec![HealthAction::Restore(1)]);
+    }
+
+    #[test]
+    fn residual_alone_never_quarantines_in_graceful() {
+        let fab = dual_tcp();
+        let mut m = monitor();
+        let mut out = Vec::new();
+        for _ in 0..50 {
+            m.observe(0, 100.0, 1000.0, 0);
+        }
+        assert!(m.suspicion(0) <= m.cfg.residual_cap);
+        assert!(m.suspicion(0) < m.cfg.quarantine_enter);
+        m.decide(&fab, &mut out);
+        assert_eq!(out, vec![HealthAction::Demote(0)], "slow-but-delivering demotes only");
+    }
+
+    #[test]
+    fn retry_storm_escalates_to_quarantine() {
+        let fab = dual_tcp();
+        let mut m = monitor();
+        let mut out = Vec::new();
+        // 3.0 per op (capped per-op retry contribution), uncapped total
+        for _ in 0..3 {
+            m.observe(0, 0.0, 0.0, 40);
+        }
+        assert!(m.suspicion(0) >= m.cfg.quarantine_enter);
+        m.decide(&fab, &mut out);
+        assert_eq!(out, vec![HealthAction::Quarantine(0)]);
+    }
+
+    #[test]
+    fn binary_mode_quarantines_at_demotion_threshold() {
+        let fab = dual_tcp();
+        let cfg = HealthConfig { mode: HealthMode::Binary, ..HealthConfig::default() };
+        let mut m = HealthMonitor::new(cfg, 2);
+        let mut out = Vec::new();
+        for _ in 0..3 {
+            m.observe(1, 100.0, 200.0, 0);
+        }
+        m.decide(&fab, &mut out);
+        assert_eq!(out, vec![HealthAction::Quarantine(1)], "binary skips Degraded");
+    }
+
+    #[test]
+    fn probation_promotes_on_clean_streak_and_requarantines_on_dirt() {
+        let mut fab = dual_tcp();
+        let mut m = monitor();
+        let mut out = Vec::new();
+        fab.rails[1].health = RailHealth::Probation;
+        m.note_probation(1);
+        for i in 0..3 {
+            m.observe(1, 100.0, 100.0, 0);
+            m.decide(&fab, &mut out);
+            if i < 2 {
+                assert!(out.is_empty(), "streak not complete at op {i}");
+            }
+        }
+        assert_eq!(out, vec![HealthAction::Restore(1)], "3 clean ops promote");
+        // a dirty canary goes straight back
+        m.note_probation(1);
+        m.observe(1, 100.0, 100.0, 2);
+        m.decide(&fab, &mut out);
+        assert_eq!(out, vec![HealthAction::Quarantine(1)]);
+    }
+
+    #[test]
+    fn dwell_escalates_only_on_failed_probation() {
+        let mut m = monitor();
+        // crash failover: immediate readmission allowed (dwell 0)
+        m.note_quarantined(0, 1000.0, false);
+        assert!(m.probation_eligible(0, 1000.0));
+        // failed probation: dwell jumps to the floor, then doubles
+        m.note_quarantined(0, 1000.0, true);
+        assert!(!m.probation_eligible(0, 1000.0 + 49_999.0));
+        assert!(m.probation_eligible(0, 1000.0 + 50_000.0));
+        m.note_quarantined(0, 2000.0, true);
+        assert!(!m.probation_eligible(0, 2000.0 + 99_999.0));
+        assert!(m.probation_eligible(0, 2000.0 + 100_000.0));
+    }
+
+    #[test]
+    fn off_mode_decides_nothing() {
+        let fab = dual_tcp();
+        let cfg = HealthConfig { mode: HealthMode::Off, ..HealthConfig::default() };
+        let mut m = HealthMonitor::new(cfg, 2);
+        assert!(!m.enabled());
+        let mut out = vec![HealthAction::Demote(0)];
+        for _ in 0..10 {
+            m.observe(0, 100.0, 1000.0, 50);
+        }
+        m.decide(&fab, &mut out);
+        assert!(out.is_empty(), "decide clears and stays empty when off");
+    }
+
+    #[test]
+    fn transition_ledger_counts_per_rail() {
+        let mut m = monitor();
+        m.record_transition(0.0, 1, RailHealth::Healthy, RailHealth::Degraded);
+        m.record_transition(5.0, 1, RailHealth::Degraded, RailHealth::Healthy);
+        m.record_transition(9.0, 0, RailHealth::Healthy, RailHealth::Quarantined);
+        assert_eq!(m.transition_count(1), 2);
+        assert_eq!(m.transition_count(0), 1);
+        assert_eq!(m.transitions().len(), 3);
+        assert!(HealthMode::parse("bogus").is_err());
+        assert_eq!(HealthMode::parse("binary").unwrap().name(), "binary");
+    }
+
+    #[test]
+    fn weights_follow_state() {
+        let m = monitor();
+        assert_eq!(m.weight_for(RailHealth::Healthy), 1.0);
+        assert!(m.weight_for(RailHealth::Degraded) < 1.0);
+        assert!(m.weight_for(RailHealth::Probation) < m.weight_for(RailHealth::Degraded));
+    }
+}

@@ -3,11 +3,13 @@
 //! collaboration.
 
 pub mod exception;
+pub mod health;
 pub mod load_balancer;
 pub mod nic_selector;
 pub mod timer;
 
-pub use exception::{ExceptionHandler, FailoverEvent, MembershipRecovery};
+pub use exception::{ExceptionHandler, FailoverEvent, GrayAction, GrayEvent, MembershipRecovery};
+pub use health::{HealthAction, HealthConfig, HealthMode, HealthMonitor, HealthTransition};
 pub use load_balancer::{BalancerState, LoadBalancer, Plan, PlanKind};
 pub use nic_selector::NicSelector;
 pub use timer::Timer;

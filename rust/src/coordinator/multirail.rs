@@ -42,14 +42,16 @@ use crate::coordinator::collective::{
 use crate::coordinator::context::Context;
 use crate::coordinator::control::load_balancer::sync_overhead_us;
 use crate::coordinator::control::{
-    size_bucket, ExceptionHandler, LoadBalancer, MembershipRecovery, NicSelector, Timer,
+    size_bucket, ExceptionHandler, GrayAction, HealthAction, HealthMonitor, LoadBalancer,
+    MembershipRecovery, NicSelector, Timer,
 };
 use crate::coordinator::planner::{
     run_plan_on, run_plan_with, CollectivePlan, PlanQualityReport, Planner, RailPlan, Schedule,
 };
 use crate::coordinator::transport::Rendezvous;
 use crate::net::cpu_pool::{CpuPool, ExecMode, RailExecutor};
-use crate::net::fault::{FaultSchedule, MembershipEvent, MembershipSchedule};
+use crate::net::fault::{DegradeSchedule, FaultSchedule, MembershipEvent, MembershipSchedule};
+use crate::net::rail::RailHealth;
 use crate::net::simnet::{Fabric, RailDown};
 use crate::net::topology::TopologyTree;
 use crate::util::error::Error;
@@ -197,6 +199,15 @@ pub struct MultiRail {
     pub rendezvous: Vec<Rendezvous>,
     pub timer: Timer,
     pub exceptions: ExceptionHandler,
+    /// Gray-failure detector: per-rail suspicion from residuals + retry
+    /// counts, hysteresis-thresholded into demote/quarantine/readmit
+    /// actions applied at op boundaries.
+    pub monitor: HealthMonitor,
+    /// Soft-affinity base weights per rail (1.0 unconstrained). The Load
+    /// Balancer receives the PRODUCT of these and the monitor's health
+    /// weights — `set_rail_weights` is wholesale-replace, so both signals
+    /// must be pushed together.
+    affinity_weights: Vec<f64>,
     pub partitioner: Box<dyn Partitioner>,
     pub reducer: Box<dyn Reducer>,
     /// The topology-aware collective planner (schedules per-rail windows).
@@ -269,6 +280,11 @@ struct ExecScratch {
     live_windows: Vec<Window>,
     live_assigns: Vec<RailPlan>,
     live_rails: Vec<usize>,
+    /// Per-rail retransmit-ledger snapshot at op start (the monitor
+    /// consumes per-op deltas).
+    retry_base: Vec<u64>,
+    /// Reusable monitor-decision buffer.
+    health_actions: Vec<HealthAction>,
     /// Serial-path collective scratch (also the failover takeover's).
     op: OpScratch,
     /// One collective scratch per parallel worker slot.
@@ -323,6 +339,12 @@ impl MultiRail {
         if cfg.deterministic {
             fab = fab.deterministic();
         }
+        if !cfg.faults.is_empty() {
+            fab = fab.with_faults(cfg.faults.clone());
+        }
+        if !cfg.degrade.is_empty() {
+            fab = fab.with_degrade(cfg.degrade.clone());
+        }
         let rendezvous = (0..n_rails)
             .map(|r| Rendezvous::full_mesh(r, cfg.nodes))
             .collect();
@@ -346,6 +368,8 @@ impl MultiRail {
             rendezvous,
             timer: Timer::new(cfg.control.timer_window),
             exceptions,
+            monitor: HealthMonitor::new(cfg.health.clone(), n_rails),
+            affinity_weights: vec![1.0; n_rails],
             partitioner,
             reducer: Box::new(RustReducer),
             planner,
@@ -379,6 +403,14 @@ impl MultiRail {
 
     pub fn with_faults(mut self, faults: FaultSchedule) -> Self {
         self.fab = self.fab.with_faults(faults);
+        self
+    }
+
+    /// Attach a gray-failure degradation schedule (loss / brownout /
+    /// flap / windowed-stall windows — see
+    /// [`crate::net::fault::DegradeSchedule`]).
+    pub fn with_degrade(mut self, degrade: DegradeSchedule) -> Self {
+        self.fab.set_degrade(degrade);
         self
     }
 
@@ -540,25 +572,137 @@ impl MultiRail {
         Ok(())
     }
 
-    /// Probe deregistered rails and clear a readmitted rail's failure-era
+    /// Push the composed per-rail weights (soft-affinity fraction ×
+    /// health-state multiplier) to the partitioner. `set_rail_weights` is
+    /// wholesale-replace, so every transition re-pushes the full product
+    /// vector.
+    fn push_rail_weights(&mut self) {
+        let weights: Vec<(usize, f64)> = (0..self.fab.rails.len())
+            .map(|r| {
+                let h = self.monitor.weight_for(self.fab.rails[r].health);
+                (r, self.affinity_weights[r] * h)
+            })
+            .collect();
+        self.partitioner.set_rail_weights(&weights);
+    }
+
+    /// Probe quarantined rails and clear a readmitted rail's failure-era
     /// state: Timer windows, cost corrections and injected straggler
     /// stalls all described the broken rail, and keeping them meant a
     /// healed rail never re-earned round-heavy schedules (it stayed
     /// priced as broken forever). A readmission also flushes cached
     /// selections and starts a fresh selection epoch — the rail set
     /// changed just as it does on failover.
+    ///
+    /// With the monitor on, readmission goes through **Probation**: the
+    /// quarantine dwell must have passed (doubling after every failed
+    /// probation) and the rail comes back as a canary at
+    /// `probation_weight` share — promoted to Healthy only after
+    /// `probation_ops` clean ops. With the monitor off this is the legacy
+    /// trust-on-readmit path.
     fn probe_readmitted(&mut self) -> Vec<usize> {
-        let back = self.exceptions.probe_recovery(&mut self.fab);
+        let back = if self.monitor.enabled() {
+            let now = self.fab.now_us();
+            let mut back = Vec::new();
+            for r in 0..self.fab.rails.len() {
+                if self.fab.rails[r].health == RailHealth::Quarantined
+                    && !self.fab.faults.is_down(r, now)
+                    && !self.fab.degrade.flap_down(r, now)
+                    && self.monitor.probation_eligible(r, now)
+                {
+                    self.fab.readmit_probation(r);
+                    self.monitor.note_probation(r);
+                    self.monitor
+                        .record_transition(now, r, RailHealth::Quarantined, RailHealth::Probation);
+                    self.exceptions
+                        .record_gray(&mut self.fab, r, GrayAction::Probation, 0.0);
+                    back.push(r);
+                }
+            }
+            back
+        } else {
+            self.exceptions.probe_recovery(&mut self.fab)
+        };
         if !back.is_empty() {
             for &r in &back {
                 self.timer.forget_rail(r);
                 self.planner.corrections.forget_rail(r);
                 self.fab.clear_straggler(r);
             }
+            self.push_rail_weights();
             self.plan_cache.clear();
             self.planner.bump_epoch();
         }
         back
+    }
+
+    /// Execute one monitor decision: soft demotion / restoration adjusts
+    /// the Load-Balancer weights and replans; quarantine rides the §4.4
+    /// deregistration path (charging migration). A quarantine that would
+    /// take out the last usable allowed rail falls back to demotion —
+    /// limping beats dead.
+    fn apply_health_action(&mut self, action: HealthAction) {
+        match action {
+            HealthAction::Demote(r) => self.demote_rail(r),
+            HealthAction::Restore(r) => {
+                let from = self.fab.rails[r].health;
+                if self.fab.rails[r].transition(RailHealth::Healthy) {
+                    let now = self.fab.now_us();
+                    let gray = if from == RailHealth::Probation {
+                        GrayAction::Readmit
+                    } else {
+                        GrayAction::Restore
+                    };
+                    self.monitor.record_transition(now, r, from, RailHealth::Healthy);
+                    let s = self.monitor.suspicion(r);
+                    self.exceptions.record_gray(&mut self.fab, r, gray, s);
+                    self.push_rail_weights();
+                    self.plan_cache.clear();
+                    self.planner.bump_epoch();
+                }
+            }
+            HealthAction::Quarantine(r) => {
+                let mask = self.rail_allow_mask;
+                let survivors = self
+                    .fab
+                    .healthy_rails_iter()
+                    .filter(|&o| o != r && mask & (1u64 << o) != 0)
+                    .count();
+                if survivors == 0 {
+                    self.demote_rail(r);
+                    return;
+                }
+                let from = self.fab.rails[r].health;
+                let s = self.monitor.suspicion(r);
+                self.fab.deregister(r);
+                self.exceptions
+                    .record_gray(&mut self.fab, r, GrayAction::Quarantine, s);
+                let now = self.fab.now_us();
+                self.monitor.record_transition(now, r, from, RailHealth::Quarantined);
+                self.monitor
+                    .note_quarantined(r, now, from == RailHealth::Probation);
+                self.timer.forget_rail(r);
+                self.planner.corrections.forget_rail(r);
+                self.push_rail_weights();
+                self.plan_cache.clear();
+                self.planner.bump_epoch();
+            }
+        }
+    }
+
+    /// Healthy → Degraded (also the last-rail quarantine fallback).
+    fn demote_rail(&mut self, r: usize) {
+        if self.fab.rails[r].transition(RailHealth::Degraded) {
+            let now = self.fab.now_us();
+            self.monitor
+                .record_transition(now, r, RailHealth::Healthy, RailHealth::Degraded);
+            let s = self.monitor.suspicion(r);
+            self.exceptions
+                .record_gray(&mut self.fab, r, GrayAction::Demote, s);
+            self.push_rail_weights();
+            self.plan_cache.clear();
+            self.planner.bump_epoch();
+        }
     }
 
     /// Inject a persistent straggler on `rail` (see
@@ -644,12 +788,14 @@ impl MultiRail {
         } else {
             topo.allowed_rail_mask(n_rails)
         };
-        let weights: Vec<(usize, f64)> = (0..n_rails)
-            .map(|r| (r, if enable { topo.rail_admit_fraction(r) } else { 1.0 }))
+        let fracs: Vec<f64> = (0..n_rails)
+            .map(|r| if enable { topo.rail_admit_fraction(r) } else { 1.0 })
             .collect();
+        self.affinity_weights = fracs;
         self.rail_allow_mask = mask;
         self.exceptions.set_rail_mask(mask);
-        self.partitioner.set_rail_weights(&weights);
+        // the partitioner sees affinity × health as one product vector
+        self.push_rail_weights();
         // cached selections assumed the old rail set / weights
         self.plan_cache.clear();
     }
@@ -776,6 +922,10 @@ impl MultiRail {
         // serial/parallel bit-identity anchor
         self.fab.begin_op();
         self.probe_readmitted();
+        // retransmit-ledger snapshot: the monitor scores this op's deltas
+        let mut retry_base = std::mem::take(&mut self.scratch.retry_base);
+        retry_base.clear();
+        retry_base.extend((0..self.fab.rails.len()).map(|r| self.fab.retries_on(r)));
         // reusable healthy-rail scratch: taken for the op, restored below
         // (error paths drop it; the next op simply re-allocates capacity)
         let mut healthy = std::mem::take(&mut self.scratch.healthy);
@@ -847,6 +997,39 @@ impl MultiRail {
         fb.extend(shares.iter().map(|s| (s.rail, s.bytes, s.time_us)));
         self.partitioner.feedback(&self.fab, bytes, &fb);
         self.scratch.feedback = fb;
+        if self.monitor.enabled() {
+            // Residuals only flow when the corrections layer is live:
+            // static-cost mode must stay measurement-blind end to end (the
+            // ablation baseline), and its raw model predictions would
+            // flag every unmodeled slowdown as suspicion. Retry counts
+            // are a hard dataplane signal and always count.
+            let corrections_on = self.planner.use_corrections;
+            for s in &shares {
+                if s.bytes == 0 {
+                    continue;
+                }
+                let retries = self.fab.retries_on(s.rail).saturating_sub(retry_base[s.rail]);
+                let predicted = if corrections_on {
+                    self.last_plan
+                        .as_ref()
+                        .and_then(|p| {
+                            p.assignments.iter().find(|a| a.rail == s.rail && a.bytes > 0)
+                        })
+                        .map(|a| a.predicted_us)
+                        .unwrap_or(0.0)
+                } else {
+                    0.0
+                };
+                self.monitor.observe(s.rail, predicted, s.time_us, retries);
+            }
+            let mut actions = std::mem::take(&mut self.scratch.health_actions);
+            self.monitor.decide(&self.fab, &mut actions);
+            for &a in &actions {
+                self.apply_health_action(a);
+            }
+            self.scratch.health_actions = actions;
+        }
+        self.scratch.retry_base = retry_base;
         self.ops_done += 1;
         shares.sort_by_key(|s| s.rail);
         Ok(OpReport {
@@ -923,10 +1106,20 @@ impl MultiRail {
         op_scratch: &mut OpScratch,
         shares: &mut Vec<RailShare>,
     ) -> Result<crate::coordinator::control::FailoverEvent> {
+        let prior = self.fab.rails[failed].health;
         let ev = self
             .exceptions
             .handle_failure(&mut self.fab, failed, w, allocated)
             .ok_or(Error::AllRailsDown(failed))?;
+        if self.monitor.enabled() {
+            // a crash failover IS a quarantine: same state machine, and a
+            // rail that died while on probation earns the escalated dwell
+            let now = self.fab.now_us();
+            self.monitor.record_transition(now, failed, prior, RailHealth::Quarantined);
+            self.monitor
+                .note_quarantined(failed, now, prior == RailHealth::Probation);
+            self.push_rail_weights();
+        }
         self.timer.forget_rail(failed);
         self.planner.corrections.forget_rail(failed);
         // every cached selection assumed the old rail set
@@ -1979,5 +2172,163 @@ mod tests {
         let mut buf = make(2, 1 << 20);
         mr.allreduce(&mut buf).unwrap();
         reduced_ok(&buf, 2, 1 << 20);
+    }
+
+    #[test]
+    fn brownout_demotes_rail_then_restores() {
+        // a brownout is a gray failure: the monitor soft-demotes the rail
+        // (it keeps carrying payload at reduced share) and restores it
+        // once corrections absorb the slowdown — it never quarantines
+        let mut c = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        c.health.dirty_inc = 4.0; // one dirty residual crosses degrade_enter
+        let mut mr = MultiRail::new(&c)
+            .unwrap()
+            .with_degrade(DegradeSchedule::none().brownout(1, 0.0, 1e12, 0.45));
+        // fixed shares keep rail 1's size class stable so the clean-decay
+        // sequence (4 → 2 → 1 → 0.5 → restore) is exact
+        mr.partitioner = Box::new(crate::baselines::FixedShares::percent(50, 50));
+        let elem_bytes = (16u64 << 20) as f64 / 1024.0;
+        let mut last = None;
+        for _ in 0..8 {
+            let mut buf = make(4, 1024);
+            last = Some(mr.allreduce_scaled(&mut buf, elem_bytes).unwrap());
+            reduced_ok(&buf, 4, 1024);
+        }
+        let gray = &mr.exceptions.gray;
+        assert!(
+            gray.iter().any(|g| g.rail == 1 && g.action == GrayAction::Demote),
+            "brownout must soft-demote rail 1: {gray:?}"
+        );
+        assert!(
+            !gray.iter().any(|g| g.action == GrayAction::Quarantine),
+            "residual evidence alone must never quarantine in graceful mode: {gray:?}"
+        );
+        assert!(
+            mr.monitor
+                .transitions()
+                .iter()
+                .any(|t| t.rail == 1 && t.from == RailHealth::Degraded && t.to == RailHealth::Healthy),
+            "clean ops must restore the demoted rail: {:?}",
+            mr.monitor.transitions()
+        );
+        assert_eq!(mr.fab.rails[1].health, RailHealth::Healthy);
+        // the restored rail carries payload on the final op
+        let rep = last.unwrap();
+        assert_eq!(rep.per_rail.iter().filter(|s| s.bytes > 0).count(), 2, "{rep:?}");
+    }
+
+    #[test]
+    fn crash_failover_readmits_through_probation() {
+        // with the monitor on, a recovered rail is a canary first: Q → P
+        // at probation_weight share, promoted H only after probation_ops
+        // clean ops — replacing the legacy trust-on-readmit probe
+        let mut c = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        c.faults = FaultSchedule::none().with(1, 0.0, 50_000.0);
+        let mut mr = MultiRail::new(&c).unwrap();
+        let len = 2 * 1024 * 1024; // 8MB → hot → both rails → failover
+        let rep = mr.allreduce(&mut make(4, len)).unwrap();
+        assert_eq!(rep.failovers, 1);
+        assert_eq!(mr.fab.rails[1].health, RailHealth::Quarantined);
+        for _ in 0..4 {
+            let mut buf = make(4, len);
+            let rep = mr.allreduce(&mut buf).unwrap();
+            assert_eq!(rep.failovers, 0);
+            reduced_ok(&buf, 4, len);
+        }
+        let ts = mr.monitor.transitions();
+        let hops: Vec<(RailHealth, RailHealth)> = ts
+            .iter()
+            .filter(|t| t.rail == 1)
+            .map(|t| (t.from, t.to))
+            .collect();
+        assert!(
+            hops.contains(&(RailHealth::Healthy, RailHealth::Quarantined)),
+            "failover must register as a quarantine: {hops:?}"
+        );
+        assert!(
+            hops.contains(&(RailHealth::Quarantined, RailHealth::Probation)),
+            "readmission must pass through probation: {hops:?}"
+        );
+        assert!(
+            hops.contains(&(RailHealth::Probation, RailHealth::Healthy)),
+            "a clean streak must promote the canary: {hops:?}"
+        );
+        assert_eq!(mr.fab.rails[1].health, RailHealth::Healthy);
+        let gray = &mr.exceptions.gray;
+        assert!(gray.iter().any(|g| g.action == GrayAction::Probation));
+        assert!(gray.iter().any(|g| g.action == GrayAction::Readmit));
+        assert!(mr.exceptions.gray_within_budget());
+    }
+
+    #[test]
+    fn loss_storm_quarantines_noisy_rail() {
+        // sustained heavy loss: retry suspicion is uncapped in total, so
+        // the rail escalates Degraded → Quarantined (or blows the retry
+        // cap and rides the §4.4 failover — same terminal state); the
+        // loss-free rail never transitions
+        let cfgv = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        let mut mr = MultiRail::new(&cfgv)
+            .unwrap()
+            .with_degrade(DegradeSchedule::none().loss(1, 0.0, 1e12, 0.2));
+        let len = 2 * 1024 * 1024;
+        for _ in 0..8 {
+            let mut buf = make(4, len);
+            mr.allreduce(&mut buf).unwrap();
+            reduced_ok(&buf, 4, len);
+        }
+        assert!(
+            mr.monitor
+                .transitions()
+                .iter()
+                .any(|t| t.rail == 1 && t.to == RailHealth::Quarantined),
+            "a loss storm must quarantine the rail: {:?}",
+            mr.monitor.transitions()
+        );
+        assert_eq!(mr.monitor.transition_count(0), 0, "the clean rail must not flap");
+        assert!(
+            mr.monitor.transition_count(1) <= 12,
+            "dwell backoff must bound oscillation: {:?}",
+            mr.monitor.transitions()
+        );
+    }
+
+    #[test]
+    fn last_usable_rail_is_demoted_not_quarantined() {
+        // quarantining the only remaining allowed rail would kill the job;
+        // the monitor falls back to demotion — limping beats dead
+        let mut mr =
+            MultiRail::new(&cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha)).unwrap();
+        mr.fab.deregister(1);
+        let mut actions = Vec::new();
+        for _ in 0..4 {
+            mr.monitor.observe(0, 100.0, 10_000.0, 20);
+            mr.monitor.decide(&mr.fab, &mut actions);
+            for &a in &actions {
+                mr.apply_health_action(a);
+            }
+        }
+        assert!(mr.monitor.suspicion(0) >= mr.monitor.cfg.quarantine_enter);
+        assert_eq!(mr.fab.rails[0].health, RailHealth::Degraded, "fallback is demotion");
+        assert!(mr.fab.rails[0].is_usable());
+        let mut buf = make(4, 1 << 20);
+        mr.allreduce(&mut buf).unwrap();
+        reduced_ok(&buf, 4, 1 << 20);
+    }
+
+    #[test]
+    fn monitor_off_keeps_legacy_trust_on_readmit() {
+        let mut c = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        c.health.mode = crate::coordinator::control::HealthMode::Off;
+        c.faults = FaultSchedule::none().with(1, 0.0, 50_000.0);
+        let mut mr = MultiRail::new(&c).unwrap();
+        let len = 2 * 1024 * 1024;
+        let rep = mr.allreduce(&mut make(4, len)).unwrap();
+        assert_eq!(rep.failovers, 1);
+        // legacy path: straight back to Healthy, no probation canary
+        let rep2 = mr.allreduce(&mut make(4, len)).unwrap();
+        assert_eq!(rep2.failovers, 0);
+        assert_eq!(mr.fab.rails[1].health, RailHealth::Healthy);
+        assert!(mr.monitor.transitions().is_empty(), "monitor off records nothing");
+        assert!(mr.exceptions.gray.is_empty());
     }
 }

@@ -5,6 +5,16 @@
 //! virtual clock. The Exception Handler (coordinator/control) detects a
 //! failed rail through transfer errors/heartbeat timeout and migrates its
 //! (ptr, len) work to the surviving optimal rail within the 200 ms budget.
+//!
+//! Beyond crash-stop [`FaultWindow`]s, [`DegradeWindow`]s model *gray*
+//! failures — the dominant production mode on the paper's aging
+//! Ethernet/IB fabrics: lossy links that retransmit, bandwidth brownouts,
+//! flapping NICs and time-varying stragglers. These never announce
+//! themselves: the fabric charges their cost into modeled time and the
+//! `HealthMonitor` (coordinator/control/health) has to *detect* them from
+//! residuals and retry counts.
+
+use crate::util::error::Error;
 
 /// One rail-down window in virtual time.
 #[derive(Debug, Clone, Copy)]
@@ -76,6 +86,310 @@ impl FaultSchedule {
     pub fn is_empty(&self) -> bool {
         self.windows.is_empty()
     }
+}
+
+/// What a [`DegradeWindow`] does to its rail while active.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DegradeKind {
+    /// Per-message packet-loss probability in `[0, 1)`: every lost
+    /// attempt is recharged as a retransmit with exponential backoff.
+    Loss { rate: f64 },
+    /// Bandwidth brownout: wire throughput multiplied by `factor` in
+    /// `(0, 1]`, composed with rail shares like `set_rail_share` —
+    /// invisible to the static cost model.
+    Brownout { factor: f64 },
+    /// Flapping NIC: alternates up/down half-periods of `period_us`,
+    /// starting up at the window's start. Down phases behave like a
+    /// crash-stop fault (transfer errors → §4.4 failover).
+    Flap { period_us: f64 },
+    /// Time-varying straggler: per-message stall of `stall_us`
+    /// (log-normal jitter of `sigma` when > 0), the windowed form of
+    /// `Fabric::inject_straggler`.
+    Stall { stall_us: f64, sigma: f64 },
+}
+
+/// One gray-degradation window in virtual time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DegradeWindow {
+    pub rail: usize,
+    pub start_us: f64,
+    pub end_us: f64,
+    pub kind: DegradeKind,
+}
+
+impl DegradeWindow {
+    fn active(&self, rail: usize, t_us: f64) -> bool {
+        self.rail == rail && t_us >= self.start_us && t_us < self.end_us
+    }
+}
+
+/// Schedule of gray-failure degradations, queried by the fabric at the
+/// (frozen, per-op) virtual clock. Overlapping windows compose: loss
+/// rates combine as independent drops, brownout factors multiply, any
+/// active down half-period of a flap wins.
+#[derive(Debug, Clone, Default)]
+pub struct DegradeSchedule {
+    windows: Vec<DegradeWindow>,
+}
+
+impl DegradeSchedule {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Add a packet-loss window (builder form).
+    pub fn loss(mut self, rail: usize, start_us: f64, end_us: f64, rate: f64) -> Self {
+        assert!((0.0..1.0).contains(&rate), "loss rate must be in [0,1)");
+        self.push(rail, start_us, end_us, DegradeKind::Loss { rate });
+        self
+    }
+
+    /// Add a bandwidth-brownout window (builder form).
+    pub fn brownout(mut self, rail: usize, start_us: f64, end_us: f64, factor: f64) -> Self {
+        assert!(factor > 0.0 && factor <= 1.0, "brownout factor must be in (0,1]");
+        self.push(rail, start_us, end_us, DegradeKind::Brownout { factor });
+        self
+    }
+
+    /// Add a flapping-NIC window (builder form).
+    pub fn flap(mut self, rail: usize, start_us: f64, end_us: f64, period_us: f64) -> Self {
+        assert!(period_us > 0.0, "flap period must be positive");
+        self.push(rail, start_us, end_us, DegradeKind::Flap { period_us });
+        self
+    }
+
+    /// Add a time-varying straggler window (builder form).
+    pub fn stall(
+        mut self,
+        rail: usize,
+        start_us: f64,
+        end_us: f64,
+        stall_us: f64,
+        sigma: f64,
+    ) -> Self {
+        assert!(stall_us >= 0.0 && sigma >= 0.0);
+        self.push(rail, start_us, end_us, DegradeKind::Stall { stall_us, sigma });
+        self
+    }
+
+    fn push(&mut self, rail: usize, start_us: f64, end_us: f64, kind: DegradeKind) {
+        assert!(end_us > start_us, "degrade window must be non-empty");
+        self.windows.push(DegradeWindow { rail, start_us, end_us, kind });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    pub fn windows(&self) -> &[DegradeWindow] {
+        &self.windows
+    }
+
+    /// Effective packet-loss probability on `rail` at `t_us` — overlapping
+    /// loss windows drop independently: `1 - Π(1 - rate)`.
+    pub fn loss_at(&self, rail: usize, t_us: f64) -> f64 {
+        let mut keep = 1.0;
+        for w in &self.windows {
+            if let DegradeKind::Loss { rate } = w.kind {
+                if w.active(rail, t_us) {
+                    keep *= 1.0 - rate;
+                }
+            }
+        }
+        1.0 - keep
+    }
+
+    /// Effective brownout bandwidth multiplier on `rail` at `t_us`
+    /// (product of active factors, floored so modeled time stays finite).
+    pub fn brownout_at(&self, rail: usize, t_us: f64) -> f64 {
+        let mut f = 1.0;
+        for w in &self.windows {
+            if let DegradeKind::Brownout { factor } = w.kind {
+                if w.active(rail, t_us) {
+                    f *= factor;
+                }
+            }
+        }
+        f.max(0.01)
+    }
+
+    /// Is `rail` inside the down half-period of an active flap at `t_us`?
+    /// Pure function of the clock: the first half-period after a flap
+    /// window opens is up, the second down, alternating.
+    pub fn flap_down(&self, rail: usize, t_us: f64) -> bool {
+        self.windows.iter().any(|w| {
+            if let DegradeKind::Flap { period_us } = w.kind {
+                w.active(rail, t_us)
+                    && (((t_us - w.start_us) / period_us).floor() as u64) % 2 == 1
+            } else {
+                false
+            }
+        })
+    }
+
+    /// Sum of deterministic (sigma == 0) stall windows active on `rail`.
+    pub fn stall_det_us(&self, rail: usize, t_us: f64) -> f64 {
+        self.windows
+            .iter()
+            .filter(|w| w.active(rail, t_us))
+            .filter_map(|w| match w.kind {
+                DegradeKind::Stall { stall_us, sigma } if sigma == 0.0 => Some(stall_us),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// The stochastic (sigma > 0) stall windows active on `rail` — each
+    /// contributes `stall_us * lognormal(sigma)` per message, drawn from
+    /// the rail's own stream.
+    pub fn stall_stoch_at(
+        &self,
+        rail: usize,
+        t_us: f64,
+    ) -> impl Iterator<Item = (f64, f64)> + '_ {
+        self.windows
+            .iter()
+            .filter(move |w| w.active(rail, t_us))
+            .filter_map(|w| match w.kind {
+                DegradeKind::Stall { stall_us, sigma } if sigma > 0.0 => Some((stall_us, sigma)),
+                _ => None,
+            })
+    }
+
+    /// Any window (of any kind) active on `rail` at `t_us`?
+    pub fn active_on(&self, rail: usize, t_us: f64) -> bool {
+        self.windows.iter().any(|w| w.active(rail, t_us))
+    }
+}
+
+/// Parse a duration with `us`/`ms`/`s`/`min` suffix (plain numbers are
+/// microseconds): `"150ms"` → `150_000.0`.
+pub fn parse_duration_us(s: &str) -> crate::Result<f64> {
+    let s = s.trim();
+    let (num, mult) = if let Some(p) = s.strip_suffix("us") {
+        (p, 1.0)
+    } else if let Some(p) = s.strip_suffix("ms") {
+        (p, 1e3)
+    } else if let Some(p) = s.strip_suffix("min") {
+        (p, 60.0 * 1e6)
+    } else if let Some(p) = s.strip_suffix('s') {
+        (p, 1e6)
+    } else {
+        (s, 1.0)
+    };
+    let v: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| Error::Config(format!("bad duration '{s}'")))?;
+    if !v.is_finite() || v < 0.0 {
+        return Err(Error::Config(format!("duration '{s}' must be finite and >= 0")));
+    }
+    Ok(v * mult)
+}
+
+fn parse_span(span: &str, spec: &str) -> crate::Result<(f64, f64)> {
+    let (a, b) = span
+        .split_once('-')
+        .ok_or_else(|| Error::Config(format!("'{spec}': window must be start-end")))?;
+    let (start, end) = (parse_duration_us(a)?, parse_duration_us(b)?);
+    if end <= start {
+        return Err(Error::Config(format!("'{spec}': window end must be after start")));
+    }
+    Ok((start, end))
+}
+
+fn parse_rail(s: &str, spec: &str) -> crate::Result<usize> {
+    s.trim()
+        .parse()
+        .map_err(|_| Error::Config(format!("'{spec}': bad rail index '{s}'")))
+}
+
+/// Parse a crash-stop fault spec string (the `faults=` config key):
+/// `"rail@start-end[;...]"`, e.g. `"1@100ms-200ms;0@2s-3s"`. Also accepts
+/// `"fig8"` (the paper's Fig. 8 scenario) and `"none"`/`""`.
+pub fn parse_faults(spec: &str) -> crate::Result<FaultSchedule> {
+    let spec = spec.trim();
+    match spec {
+        "" | "none" => return Ok(FaultSchedule::none()),
+        "fig8" => return Ok(FaultSchedule::fig8()),
+        _ => {}
+    }
+    let mut out = FaultSchedule::none();
+    for part in spec.split(';').filter(|p| !p.trim().is_empty()) {
+        let part = part.trim();
+        let (rail, span) = part
+            .split_once('@')
+            .ok_or_else(|| Error::Config(format!("'{part}': fault must be rail@start-end")))?;
+        let rail = parse_rail(rail, part)?;
+        let (start, end) = parse_span(span, part)?;
+        out = out.with(rail, start, end);
+    }
+    Ok(out)
+}
+
+/// Parse a gray-degradation spec string (the `degrade=` config key):
+/// `kind:rail:params@start-end` terms joined by `;`, where kind is one of
+/// - `loss:RAIL:RATE` — packet-loss probability,
+/// - `brownout:RAIL:FACTOR` — bandwidth multiplier,
+/// - `flap:RAIL:PERIOD` — up/down half-period (duration),
+/// - `stall:RAIL:STALL[:SIGMA]` — per-message straggler stall (duration).
+///
+/// Example: `"loss:1:0.05@100ms-300ms;brownout:0:0.5@1s-2s"`.
+pub fn parse_degrade(spec: &str) -> crate::Result<DegradeSchedule> {
+    let spec = spec.trim();
+    if spec.is_empty() || spec == "none" {
+        return Ok(DegradeSchedule::none());
+    }
+    let mut out = DegradeSchedule::none();
+    for part in spec.split(';').filter(|p| !p.trim().is_empty()) {
+        let part = part.trim();
+        let (head, span) = part
+            .split_once('@')
+            .ok_or_else(|| Error::Config(format!("'{part}': degrade must be kind:rail:params@start-end")))?;
+        let (start, end) = parse_span(span, part)?;
+        let fields: Vec<&str> = head.split(':').map(str::trim).collect();
+        let bad = |what: &str| Error::Config(format!("'{part}': {what}"));
+        match fields.as_slice() {
+            ["loss", rail, rate] => {
+                let rail = parse_rail(rail, part)?;
+                let rate: f64 = rate.parse().map_err(|_| bad("bad loss rate"))?;
+                if !(0.0..1.0).contains(&rate) {
+                    return Err(bad("loss rate must be in [0,1)"));
+                }
+                out = out.loss(rail, start, end, rate);
+            }
+            ["brownout", rail, factor] => {
+                let rail = parse_rail(rail, part)?;
+                let factor: f64 = factor.parse().map_err(|_| bad("bad brownout factor"))?;
+                if !(factor > 0.0 && factor <= 1.0) {
+                    return Err(bad("brownout factor must be in (0,1]"));
+                }
+                out = out.brownout(rail, start, end, factor);
+            }
+            ["flap", rail, period] => {
+                let rail = parse_rail(rail, part)?;
+                let period = parse_duration_us(period)?;
+                if period <= 0.0 {
+                    return Err(bad("flap period must be positive"));
+                }
+                out = out.flap(rail, start, end, period);
+            }
+            ["stall", rail, stall] => {
+                let rail = parse_rail(rail, part)?;
+                out = out.stall(rail, start, end, parse_duration_us(stall)?, 0.0);
+            }
+            ["stall", rail, stall, sigma] => {
+                let rail = parse_rail(rail, part)?;
+                let sigma: f64 = sigma.parse().map_err(|_| bad("bad stall sigma"))?;
+                if sigma < 0.0 {
+                    return Err(bad("stall sigma must be >= 0"));
+                }
+                out = out.stall(rail, start, end, parse_duration_us(stall)?, sigma);
+            }
+            _ => return Err(bad("unknown degrade kind (loss/brownout/flap/stall)")),
+        }
+    }
+    Ok(out)
 }
 
 /// One node-level membership change on the virtual clock — the elastic
@@ -220,6 +534,99 @@ mod tests {
         assert_eq!(f.next_transition(0, 20.0), Some(40.0));
         assert_eq!(f.next_transition(0, 45.0), Some(50.0));
         assert_eq!(f.next_transition(0, 50.0), None);
+    }
+
+    #[test]
+    fn degrade_windows_compose_and_expire() {
+        let d = DegradeSchedule::none()
+            .loss(1, 100.0, 200.0, 0.1)
+            .loss(1, 150.0, 250.0, 0.5)
+            .brownout(0, 0.0, 100.0, 0.5)
+            .brownout(0, 50.0, 100.0, 0.4);
+        assert_eq!(d.loss_at(1, 99.0), 0.0);
+        assert!((d.loss_at(1, 120.0) - 0.1).abs() < 1e-12);
+        // overlapping losses drop independently: 1 - 0.9*0.5
+        assert!((d.loss_at(1, 180.0) - 0.55).abs() < 1e-12);
+        assert!((d.loss_at(1, 220.0) - 0.5).abs() < 1e-12);
+        assert_eq!(d.loss_at(1, 250.0), 0.0);
+        assert_eq!(d.loss_at(0, 180.0), 0.0);
+        // brownout factors multiply inside the overlap
+        assert!((d.brownout_at(0, 25.0) - 0.5).abs() < 1e-12);
+        assert!((d.brownout_at(0, 75.0) - 0.2).abs() < 1e-12);
+        assert_eq!(d.brownout_at(0, 100.0), 1.0);
+        assert!(d.active_on(0, 25.0) && !d.active_on(0, 100.0));
+    }
+
+    #[test]
+    fn flap_alternates_half_periods() {
+        let d = DegradeSchedule::none().flap(2, 1000.0, 5000.0, 500.0);
+        // up for the first half-period, down for the second, alternating
+        assert!(!d.flap_down(2, 999.0), "outside the window");
+        assert!(!d.flap_down(2, 1000.0));
+        assert!(!d.flap_down(2, 1499.0));
+        assert!(d.flap_down(2, 1500.0));
+        assert!(d.flap_down(2, 1999.0));
+        assert!(!d.flap_down(2, 2000.0));
+        assert!(d.flap_down(2, 2600.0));
+        assert!(!d.flap_down(2, 5000.0), "window over");
+        assert!(!d.flap_down(1, 1500.0), "other rails untouched");
+    }
+
+    #[test]
+    fn stall_windows_split_det_and_stoch() {
+        let d = DegradeSchedule::none()
+            .stall(0, 0.0, 100.0, 500.0, 0.0)
+            .stall(0, 50.0, 150.0, 200.0, 0.0)
+            .stall(0, 0.0, 100.0, 300.0, 0.4);
+        assert_eq!(d.stall_det_us(0, 25.0), 500.0);
+        assert_eq!(d.stall_det_us(0, 75.0), 700.0);
+        assert_eq!(d.stall_det_us(0, 120.0), 200.0);
+        assert_eq!(d.stall_det_us(0, 150.0), 0.0);
+        let stoch: Vec<_> = d.stall_stoch_at(0, 25.0).collect();
+        assert_eq!(stoch, vec![(300.0, 0.4)]);
+        assert!(d.stall_stoch_at(0, 120.0).next().is_none());
+    }
+
+    #[test]
+    fn duration_suffixes() {
+        assert_eq!(parse_duration_us("150").unwrap(), 150.0);
+        assert_eq!(parse_duration_us("150us").unwrap(), 150.0);
+        assert_eq!(parse_duration_us("1.5ms").unwrap(), 1500.0);
+        assert_eq!(parse_duration_us("2s").unwrap(), 2e6);
+        assert_eq!(parse_duration_us("1min").unwrap(), 60e6);
+        assert!(parse_duration_us("abc").is_err());
+        assert!(parse_duration_us("-5ms").is_err());
+    }
+
+    #[test]
+    fn fault_spec_round_trip() {
+        let f = parse_faults("1@100ms-200ms; 0@2s-3s").unwrap();
+        assert!(f.is_down(1, 150_000.0));
+        assert!(!f.is_down(1, 250_000.0));
+        assert!(f.is_down(0, 2.5e6));
+        assert!(parse_faults("none").unwrap().is_empty());
+        assert!(parse_faults("").unwrap().is_empty());
+        assert!(parse_faults("fig8").unwrap().is_down(1, 90e6));
+        assert!(parse_faults("1@200ms-100ms").is_err(), "inverted window");
+        assert!(parse_faults("x@1-2").is_err(), "bad rail");
+        assert!(parse_faults("1:100-200").is_err(), "missing @");
+    }
+
+    #[test]
+    fn degrade_spec_round_trip() {
+        let d = parse_degrade(
+            "loss:1:0.05@100ms-300ms;brownout:0:0.5@1s-2s;flap:1:50ms@3s-5s;stall:0:500us:0.3@1s-2s",
+        )
+        .unwrap();
+        assert!((d.loss_at(1, 200_000.0) - 0.05).abs() < 1e-12);
+        assert!((d.brownout_at(0, 1.5e6) - 0.5).abs() < 1e-12);
+        assert!(d.flap_down(1, 3.05e6 + 25_000.0));
+        assert_eq!(d.stall_stoch_at(0, 1.5e6).collect::<Vec<_>>(), vec![(500.0, 0.3)]);
+        assert!(parse_degrade("none").unwrap().is_empty());
+        assert!(parse_degrade("loss:1:1.5@0-1").is_err(), "rate out of range");
+        assert!(parse_degrade("brownout:0:0@0-1").is_err(), "zero factor");
+        assert!(parse_degrade("fade:0:0.5@0-1").is_err(), "unknown kind");
+        assert!(parse_degrade("loss:1:0.1").is_err(), "missing window");
     }
 
     #[test]

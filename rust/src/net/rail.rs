@@ -33,14 +33,68 @@ impl NicSpec {
     }
 }
 
-/// Health state of a rail.
+/// Health state of a rail — the gray-failure state machine driven by the
+/// `HealthMonitor` (coordinator/control/health) and the §4.4 Exception
+/// Handler. This unifies the old dead `Failed` vs `Deregistered` split
+/// (`Failed` was set on transfer errors but never read by the exception
+/// path, which keyed everything off `Deregistered`).
+///
+/// ```text
+///  Healthy ⇄ Degraded          (suspicion hysteresis, soft-demoted share)
+///     │         │
+///     └────┬────┘
+///          ▼
+///    Quarantined  ⇄  Probation (canary traffic at reduced share)
+///          ▲              │
+///          └──────────────┘    (dirty canary → back, with dwell backoff)
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RailHealth {
+    /// Full trust, full Load-Balancer share.
     Healthy,
-    /// Failed at the given virtual time (us) — awaiting detection.
-    Failed,
-    /// Removed from service by the Exception Handler.
-    Deregistered,
+    /// Suspicious but serviceable: soft-demoted share, still carrying
+    /// payload (graceful degradation instead of binary failover).
+    Degraded,
+    /// Removed from service (crash failover or suspicion escalation);
+    /// windows migrated via the §4.4 path.
+    Quarantined,
+    /// Readmission canary: carries reduced-share traffic; promoted to
+    /// `Healthy` only after a clean streak, re-quarantined on any dirt.
+    Probation,
+}
+
+impl RailHealth {
+    /// May the rail carry traffic in this state? Degraded and Probation
+    /// rails still serve (at reduced share); only Quarantined rails are
+    /// out of the dataplane.
+    pub fn usable(self) -> bool {
+        self != RailHealth::Quarantined
+    }
+
+    /// Is `self -> to` a legal edge of the state machine?
+    pub fn can_transition(self, to: RailHealth) -> bool {
+        use RailHealth::*;
+        matches!(
+            (self, to),
+            (Healthy, Degraded)
+                | (Healthy, Quarantined)
+                | (Degraded, Healthy)
+                | (Degraded, Quarantined)
+                | (Quarantined, Probation)
+                | (Quarantined, Healthy) // legacy trust-on-readmit (HealthMode::Off)
+                | (Probation, Healthy)
+                | (Probation, Quarantined)
+        )
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RailHealth::Healthy => "healthy",
+            RailHealth::Degraded => "degraded",
+            RailHealth::Quarantined => "quarantined",
+            RailHealth::Probation => "probation",
+        }
+    }
 }
 
 /// One plane of the multi-rail network: a protocol bound to (a share of) a
@@ -86,6 +140,23 @@ impl Rail {
         self.health == RailHealth::Healthy
     }
 
+    /// May this rail carry traffic (anything but Quarantined)?
+    pub fn is_usable(&self) -> bool {
+        self.health.usable()
+    }
+
+    /// Apply a state-machine transition; returns `false` (and leaves the
+    /// rail untouched) on an illegal edge, so callers can treat repeated
+    /// quarantines/readmits as idempotent.
+    pub fn transition(&mut self, to: RailHealth) -> bool {
+        if self.health.can_transition(to) {
+            self.health = to;
+            true
+        } else {
+            false
+        }
+    }
+
     /// Wire cap available to this rail in MB/s.
     pub fn wire_cap_mbps(&self) -> f64 {
         self.nic.usable_mbps() / self.nic_sharing as f64
@@ -115,8 +186,28 @@ mod tests {
     #[test]
     fn health_transitions() {
         let mut r = Rail::new(0, NicSpec::CONNECTX5, ProtoKind::Sharp);
-        assert!(r.is_healthy());
-        r.health = RailHealth::Failed;
-        assert!(!r.is_healthy());
+        assert!(r.is_healthy() && r.is_usable());
+        // the full gray-failure round trip
+        assert!(r.transition(RailHealth::Degraded));
+        assert!(!r.is_healthy() && r.is_usable(), "degraded rails still serve");
+        assert!(r.transition(RailHealth::Quarantined));
+        assert!(!r.is_usable());
+        assert!(r.transition(RailHealth::Probation));
+        assert!(r.is_usable() && !r.is_healthy(), "canary carries traffic");
+        assert!(r.transition(RailHealth::Quarantined), "dirty canary goes back");
+        assert!(r.transition(RailHealth::Healthy), "legacy trust-on-readmit edge");
+    }
+
+    #[test]
+    fn illegal_transitions_are_rejected() {
+        let mut r = Rail::new(0, NicSpec::CONNECTX5, ProtoKind::Tcp);
+        assert!(!r.transition(RailHealth::Probation), "healthy can't enter probation");
+        assert!(!r.transition(RailHealth::Healthy), "self-transition is not an edge");
+        assert_eq!(r.health, RailHealth::Healthy);
+        r.health = RailHealth::Quarantined;
+        assert!(!r.transition(RailHealth::Degraded), "quarantine exits via probation");
+        assert!(!r.transition(RailHealth::Quarantined));
+        assert_eq!(r.health, RailHealth::Quarantined);
+        assert_eq!(r.health.name(), "quarantined");
     }
 }

@@ -24,7 +24,7 @@
 //! serial and parallel paths share one implementation by construction.
 
 use crate::net::cpu_pool::{CpuPool, Phase};
-use crate::net::fault::FaultSchedule;
+use crate::net::fault::{DegradeSchedule, FaultSchedule};
 use crate::net::protocol::CollectiveKind;
 use crate::net::rail::{Rail, RailHealth};
 use crate::util::rng::Pcg;
@@ -36,6 +36,14 @@ pub struct RailDown(pub usize);
 /// Smallest bandwidth share a rail grant can be clamped to — keeps
 /// contended transfer times finite even for fully preempted tenants.
 pub const MIN_RAIL_SHARE: f64 = 0.01;
+
+/// Max retransmit attempts per message on a lossy link before the rail is
+/// declared dead (surfaces as [`RailDown`] → §4.4 crash failover).
+pub const RETRY_CAP: u32 = 5;
+
+/// Base exponential-backoff pause (us) charged per retransmit attempt —
+/// doubles with each further attempt on the same message.
+pub const RETRY_BACKOFF_US: f64 = 50.0;
 
 /// Persistent per-rail straggler: every message on the rail pays an extra
 /// stall (paper §2.3.3's slow-NIC/incast pathologies). `sigma > 0` samples
@@ -81,6 +89,10 @@ pub struct Fabric {
     pub rails: Vec<Rail>,
     pub cpu: CpuPool,
     pub faults: FaultSchedule,
+    /// Gray-failure schedule: loss/brownout/flap/windowed-stall windows.
+    /// Like the fault schedule it is environmental — queried at the per-op
+    /// frozen clock, invisible to the analytic model paths.
+    pub degrade: DegradeSchedule,
     /// Injected per-rail stragglers (unmodeled per-message stalls) — the
     /// source of truth behind `stall_table`.
     stragglers: Vec<Straggler>,
@@ -107,6 +119,10 @@ pub struct Fabric {
     /// occupancy ledger input). Deterministic sums of the returned
     /// per-round times, so serial and parallel execution agree.
     occupancy: Vec<f64>,
+    /// Cumulative retransmit attempts charged per rail by the loss model —
+    /// the `HealthMonitor`'s per-op suspicion input (it consumes deltas).
+    /// Deterministic per-rail counts, so serial and parallel agree.
+    retries: Vec<u64>,
 }
 
 impl Fabric {
@@ -124,6 +140,7 @@ impl Fabric {
             rails,
             cpu,
             faults: FaultSchedule::none(),
+            degrade: DegradeSchedule::none(),
             stragglers: Vec::new(),
             stall_table: vec![RailStall::default(); n_rails],
             clock_us: 0.0,
@@ -138,6 +155,7 @@ impl Fabric {
                 .collect(),
             shares: vec![1.0; n_rails],
             occupancy: vec![0.0; n_rails],
+            retries: vec![0; n_rails],
         }
     }
 
@@ -172,6 +190,24 @@ impl Fabric {
         self
     }
 
+    /// Builder form of [`Fabric::set_degrade`].
+    pub fn with_degrade(mut self, degrade: DegradeSchedule) -> Fabric {
+        self.degrade = degrade;
+        self
+    }
+
+    /// Install a gray-degradation schedule (loss, brownouts, flaps,
+    /// windowed stalls).
+    pub fn set_degrade(&mut self, degrade: DegradeSchedule) {
+        self.degrade = degrade;
+    }
+
+    /// Cumulative retransmit attempts charged on `rail` by the loss
+    /// model since construction.
+    pub fn retries_on(&self, rail: usize) -> u64 {
+        self.retries[rail]
+    }
+
     /// Builder form of [`Fabric::inject_straggler`].
     pub fn with_straggler(mut self, rail: usize, stall_us: f64, sigma: f64) -> Fabric {
         self.inject_straggler(rail, stall_us, sigma);
@@ -190,6 +226,22 @@ impl Fabric {
     pub fn clear_straggler(&mut self, rail: usize) {
         self.stragglers.retain(|s| s.rail != rail);
         self.rebuild_stall(rail);
+    }
+
+    /// Time-varying straggler: like [`Fabric::inject_straggler`] but only
+    /// active while the virtual clock is inside `[start_us, end_us)` —
+    /// sugar over a [`crate::net::fault::DegradeKind::Stall`] window, so
+    /// it expires on its own instead of needing `clear_straggler`.
+    pub fn inject_straggler_window(
+        &mut self,
+        rail: usize,
+        stall_us: f64,
+        sigma: f64,
+        start_us: f64,
+        end_us: f64,
+    ) {
+        self.degrade =
+            std::mem::take(&mut self.degrade).stall(rail, start_us, end_us, stall_us, sigma);
     }
 
     /// Recompute `rail`'s precomputed stall entry from the straggler list
@@ -265,31 +317,52 @@ impl Fabric {
         self.cpu.cores_for(self.rails[rail].kind(), phase)
     }
 
-    /// Check the fault schedule and update the rail's health. Returns true
-    /// if the rail is usable at the current virtual time.
+    /// Check the fault + degrade schedules at the current virtual time.
+    /// Returns true if the rail is usable (in the dataplane and not
+    /// crash-down or in a flap's down half-period).
     pub fn poll_health(&mut self, rail: usize) -> bool {
         self.rail_ctx(rail).poll_health()
     }
 
+    /// Quarantine `rail` (remove it from the dataplane) and free its CPU
+    /// cores for the survivors. Idempotent: an already-quarantined rail is
+    /// left alone (no double unregister).
     pub fn deregister(&mut self, rail: usize) {
-        self.rails[rail].health = RailHealth::Deregistered;
+        if self.rails[rail].health == RailHealth::Quarantined {
+            return;
+        }
+        self.rails[rail].health = RailHealth::Quarantined;
         // free this member thread's cores for the survivors
         self.cpu.unregister(self.rails[rail].kind());
     }
 
+    /// Readmit a quarantined rail at full trust (the legacy
+    /// trust-on-readmit path, used when the health monitor is off).
     pub fn readmit(&mut self, rail: usize) {
-        self.rails[rail].health = RailHealth::Healthy;
-        self.cpu.register(self.rails[rail].kind());
+        if self.rails[rail].transition(RailHealth::Healthy) {
+            self.cpu.register(self.rails[rail].kind());
+        }
+    }
+
+    /// Readmit a quarantined rail on probation: it re-enters the dataplane
+    /// (cores re-registered) but the coordinator routes only reduced-share
+    /// canary traffic until it earns `Healthy` back.
+    pub fn readmit_probation(&mut self, rail: usize) {
+        if self.rails[rail].transition(RailHealth::Probation) {
+            self.cpu.register(self.rails[rail].kind());
+        }
     }
 
     /// Allocation-free form of [`Fabric::healthy_rails`] — the
     /// coordinator's per-op loop uses this (or
-    /// [`Fabric::healthy_rails_into`] when a slice is needed).
+    /// [`Fabric::healthy_rails_into`] when a slice is needed). "Healthy"
+    /// here means *usable*: Degraded and Probation rails still carry
+    /// payload (at soft-demoted share); only Quarantined rails are out.
     pub fn healthy_rails_iter(&self) -> impl Iterator<Item = usize> + '_ {
         self.rails
             .iter()
             .enumerate()
-            .filter(|(_, r)| r.health == RailHealth::Healthy)
+            .filter(|(_, r)| r.health.usable())
             .map(|(i, _)| i)
     }
 
@@ -362,6 +435,10 @@ impl Fabric {
             stream: &mut self.streams[rail],
             stall: &self.stall_table[rail],
             faults: &self.faults,
+            degrade: &self.degrade,
+            loss: self.degrade.loss_at(rail, self.clock_us),
+            brownout: self.degrade.brownout_at(rail, self.clock_us),
+            win_stall_us: self.degrade.stall_det_us(rail, self.clock_us),
             nodes: self.nodes,
             clock_us: self.clock_us,
             jitter_sigma: self.jitter_sigma,
@@ -369,6 +446,7 @@ impl Fabric {
             contention,
             share: self.shares[rail],
             busy_us: &mut self.occupancy[rail],
+            retries: &mut self.retries[rail],
         }
     }
 
@@ -386,14 +464,16 @@ impl Fabric {
         let clock_us = self.clock_us;
         let jitter_sigma = self.jitter_sigma;
         let faults = &self.faults;
+        let degrade = &self.degrade;
         let mut out = Vec::with_capacity(wanted.len());
-        for ((((i, state), stream), stall), busy) in self
+        for (((((i, state), stream), stall), busy), retries) in self
             .rails
             .iter_mut()
             .enumerate()
             .zip(self.streams.iter_mut())
             .zip(self.stall_table.iter())
             .zip(self.occupancy.iter_mut())
+            .zip(self.retries.iter_mut())
         {
             if !wanted.contains(&i) {
                 continue;
@@ -404,6 +484,10 @@ impl Fabric {
                 stream,
                 stall,
                 faults,
+                degrade,
+                loss: degrade.loss_at(i, clock_us),
+                brownout: degrade.brownout_at(i, clock_us),
+                win_stall_us: degrade.stall_det_us(i, clock_us),
                 nodes,
                 clock_us,
                 jitter_sigma,
@@ -411,6 +495,7 @@ impl Fabric {
                 contention,
                 share: self.shares[i],
                 busy_us: busy,
+                retries,
             });
         }
         out
@@ -464,6 +549,17 @@ pub struct RailCtx<'a> {
     stream: &'a mut RailStream,
     stall: &'a RailStall,
     faults: &'a FaultSchedule,
+    degrade: &'a DegradeSchedule,
+    /// Packet-loss probability at the op's frozen clock (0 = lossless; a
+    /// zero-loss op draws nothing extra, keeping fault-free sequences
+    /// bit-exactly unchanged).
+    loss: f64,
+    /// Brownout bandwidth multiplier at the op's frozen clock (1 = full
+    /// wire), composed with `share` under the same setup-preserving
+    /// convention.
+    brownout: f64,
+    /// Deterministic windowed-stall component active at the frozen clock.
+    win_stall_us: f64,
     nodes: usize,
     clock_us: f64,
     jitter_sigma: f64,
@@ -474,18 +570,22 @@ pub struct RailCtx<'a> {
     share: f64,
     /// This rail's slot in the fabric's occupancy ledger.
     busy_us: &'a mut f64,
+    /// This rail's slot in the fabric's retransmit ledger.
+    retries: &'a mut u64,
 }
 
 impl RailCtx<'_> {
-    /// Stretch a sampled rail time by the granted share: the transfer
-    /// component pays `1/share`, the fixed `setup_us` does not (the same
-    /// setup-preserving convention as cross-member CPU contention). A
-    /// whole-rail grant returns `raw_us` bit-exactly.
+    /// Stretch a sampled rail time by the granted share AND any active
+    /// brownout: the transfer component pays `1/(share*brownout)`, the
+    /// fixed `setup_us` does not (the same setup-preserving convention as
+    /// cross-member CPU contention). A whole, un-browned rail returns
+    /// `raw_us` bit-exactly.
     fn shared(&self, raw_us: f64, setup_us: f64) -> f64 {
-        if self.share >= 1.0 {
+        let f = self.share * self.brownout;
+        if f >= 1.0 {
             return raw_us;
         }
-        setup_us + (raw_us - setup_us) / self.share
+        setup_us + (raw_us - setup_us) / f
     }
 
     /// Charge `t` microseconds to the rail's occupancy ledger.
@@ -493,23 +593,39 @@ impl RailCtx<'_> {
         *self.busy_us += t;
         t
     }
-    /// Fault-schedule health poll at the op's virtual time (same
-    /// transitions as the fabric-level poll).
+
+    /// Health poll at the op's frozen virtual time: usable state machine
+    /// position AND neither crash-down (fault schedule) nor in a flap's
+    /// down half-period. Pure — environmental downtime never mutates the
+    /// state machine; quarantining is the Exception Handler's decision.
     pub fn poll_health(&mut self) -> bool {
-        if self.state.health == RailHealth::Deregistered {
-            return false;
+        self.state.health.usable()
+            && !self.faults.is_down(self.rail, self.clock_us)
+            && !self.degrade.flap_down(self.rail, self.clock_us)
+    }
+
+    /// Sample the retransmit penalty for one message whose clean time is
+    /// `msg_us` on a lossy link: each dropped attempt recharges the
+    /// message plus an exponentially growing backoff pause, drawn from
+    /// THIS rail's stream (serial ≡ parallel bit-exactly; lossless ops
+    /// draw nothing). Past [`RETRY_CAP`] the link is declared dead and
+    /// the §4.4 crash path takes over.
+    fn retransmit_extra_us(&mut self, msg_us: f64) -> Result<f64, RailDown> {
+        if self.loss <= 0.0 {
+            return Ok(0.0);
         }
-        if self.faults.is_down(self.rail, self.clock_us) {
-            self.state.health = RailHealth::Failed;
-            false
-        } else {
-            if self.state.health == RailHealth::Failed {
-                // fault window passed; rail is physically back (the Control
-                // module decides when to re-admit it)
-                self.state.health = RailHealth::Healthy;
+        let mut extra = 0.0;
+        let mut attempt = 0u32;
+        while self.stream.rng.f64() < self.loss {
+            attempt += 1;
+            if attempt > RETRY_CAP {
+                *self.retries += attempt as u64;
+                return Err(RailDown(self.rail));
             }
-            self.state.health == RailHealth::Healthy
+            extra += msg_us + RETRY_BACKOFF_US * (1u64 << (attempt - 1)) as f64;
         }
+        *self.retries += attempt as u64;
+        Ok(extra)
     }
 
     /// Deterministic point-to-point message time (us) at the frozen
@@ -519,17 +635,22 @@ impl RailCtx<'_> {
     }
 
     /// Sampled extra stall for one message (0 when healthy): table read
-    /// for the deterministic part, one draw per stochastic entry.
+    /// for the deterministic parts (persistent + windowed), one draw per
+    /// stochastic entry — persistent first, then active windows.
     fn straggler_stall_us(&mut self) -> f64 {
-        let mut stall = self.stall.det_us;
+        let mut stall = self.stall.det_us + self.win_stall_us;
         for &(stall_us, sigma) in &self.stall.stoch {
+            stall += stall_us * self.stream.rng.jitter(sigma);
+        }
+        let degrade = self.degrade;
+        for (stall_us, sigma) in degrade.stall_stoch_at(self.rail, self.clock_us) {
             stall += stall_us * self.stream.rng.jitter(sigma);
         }
         stall
     }
 
-    /// Single point-to-point message time (us), with jitter. Fails if the
-    /// rail is down at the op's virtual time.
+    /// Single point-to-point message time (us), with jitter and loss
+    /// retransmits. Fails if the rail is down at the op's virtual time.
     pub fn transfer(&mut self, bytes: f64) -> Result<f64, RailDown> {
         if !self.poll_health() {
             return Err(RailDown(self.rail));
@@ -540,7 +661,8 @@ impl RailCtx<'_> {
         } else {
             1.0
         };
-        let t = base * j + self.straggler_stall_us();
+        let mut t = base * j + self.straggler_stall_us();
+        t += self.retransmit_extra_us(base * j)?;
         Ok(self.charge(t))
     }
 
@@ -575,9 +697,11 @@ impl RailTimer for RailCtx<'_> {
             return Err(RailDown(self.rail));
         }
         let base = self.shared(self.transfer_det_us(bytes), self.state.protocol.setup_us);
-        let det_stall = self.stall.det_us;
-        let n_stoch = self.stall.stoch.len();
-        if self.jitter_sigma == 0.0 && n_stoch == 0 {
+        let det_stall = self.stall.det_us + self.win_stall_us;
+        let degrade = self.degrade;
+        let n_stoch =
+            self.stall.stoch.len() + degrade.stall_stoch_at(self.rail, self.clock_us).count();
+        if self.jitter_sigma == 0.0 && n_stoch == 0 && self.loss <= 0.0 {
             return Ok(self.charge(base + det_stall));
         }
         let nodes = self.nodes;
@@ -588,14 +712,32 @@ impl RailTimer for RailCtx<'_> {
             self.stream.rng.fill_jitter(self.jitter_sigma, &mut jit);
         }
         let mut worst = 0.0f64;
-        for &j in jit.iter() {
+        let mut down = None;
+        for n in 0..nodes {
+            let j = jit[n];
             let mut t = base * j + det_stall;
             for &(stall_us, sigma) in &self.stall.stoch {
                 t += stall_us * self.stream.rng.jitter(sigma);
             }
+            for (stall_us, sigma) in degrade.stall_stoch_at(self.rail, self.clock_us) {
+                t += stall_us * self.stream.rng.jitter(sigma);
+            }
+            // lossy link: each node's message pays its retransmits; a
+            // retry-cap blowout kills the whole round (deterministically —
+            // the draw sequence is a pure function of the rail stream)
+            match self.retransmit_extra_us(base * j) {
+                Ok(extra) => t += extra,
+                Err(e) => {
+                    down = Some(e);
+                    break;
+                }
+            }
             worst = worst.max(t);
         }
         self.stream.jitter_buf = jit;
+        if let Some(e) = down {
+            return Err(e);
+        }
         Ok(self.charge(worst))
     }
 
@@ -609,7 +751,8 @@ impl RailTimer for RailCtx<'_> {
         } else {
             1.0
         };
-        let t = base * j + self.straggler_stall_us();
+        let mut t = base * j + self.straggler_stall_us();
+        t += self.retransmit_extra_us(base * j)?;
         Ok(self.charge(t))
     }
 }
@@ -898,5 +1041,122 @@ mod tests {
         f.reset_occupancy();
         assert_eq!(f.occupancy_us(0), 0.0);
         assert_eq!(f.occupancy_us(1), 0.0);
+    }
+
+    #[test]
+    fn loss_charges_retransmits_reproducibly() {
+        let mk = || dual_tcp(4).with_degrade(DegradeSchedule::none().loss(0, 0.0, 1e9, 0.3));
+        let (mut a, mut b) = (mk(), mk());
+        let mut retried = false;
+        for _ in 0..32 {
+            let ta = a.transfer(0, MB).unwrap();
+            assert_eq!(ta, b.transfer(0, MB).unwrap());
+            if ta > a.transfer_det_us(0, MB) {
+                retried = true;
+            }
+        }
+        assert!(retried, "0.3 loss over 32 messages must retransmit at least once");
+        assert_eq!(a.retries_on(0), b.retries_on(0));
+        assert!(a.retries_on(0) > 0);
+        // the lossless rail drew nothing and charged nothing extra
+        assert_eq!(a.retries_on(1), 0);
+        assert_eq!(a.transfer(1, MB).unwrap(), a.transfer_det_us(1, MB));
+    }
+
+    #[test]
+    fn zero_loss_leaves_sequences_bit_exact() {
+        // a schedule whose windows are all elsewhere must not perturb the
+        // RNG stream of an unaffected rail — fault-free runs stay bit-exact
+        let mk = |sched: DegradeSchedule| {
+            let mut f = dual_tcp(4).with_degrade(sched);
+            f.jitter_sigma = 0.05;
+            f
+        };
+        let mut clean = mk(DegradeSchedule::none());
+        let mut other = mk(DegradeSchedule::none().loss(1, 0.0, 1e9, 0.5));
+        clean.begin_op();
+        other.begin_op();
+        for _ in 0..8 {
+            assert_eq!(clean.ring_step(0, MB).unwrap(), other.ring_step(0, MB).unwrap());
+        }
+    }
+
+    #[test]
+    fn brownout_stretches_transfer_not_setup_and_expires() {
+        let mut f = dual_tcp(4);
+        let full = f.ring_step(0, MB).unwrap();
+        let now = f.now_us();
+        f.set_degrade(DegradeSchedule::none().brownout(0, now, now + 1e6, 0.5));
+        let dim = f.ring_step(0, MB).unwrap();
+        let setup = f.rails[0].protocol.setup_us;
+        // same setup-preserving algebra as set_rail_share
+        assert!((dim - (setup + (full - setup) / 0.5)).abs() < 1e-9, "full {full} dim {dim}");
+        // invisible to the static cost model
+        assert_eq!(f.transfer_det_us(0, MB), f.transfer_det_us(1, MB));
+        // window over: bit-exact restoration
+        f.advance(2e6);
+        assert_eq!(f.ring_step(0, MB).unwrap(), full);
+    }
+
+    #[test]
+    fn flap_downs_rail_on_odd_half_periods() {
+        let mut f = dual_tcp(4).with_degrade(DegradeSchedule::none().flap(1, 0.0, 1e9, 1e6));
+        // first half-period: up
+        assert!(f.transfer(1, MB).is_ok());
+        f.advance(1.5e6 - f.now_us());
+        // second half-period: down, crash-like
+        assert!(f.transfer(1, MB).is_err());
+        assert!(f.transfer(0, MB).is_ok(), "other rail unaffected");
+        f.advance(2.5e6 - f.now_us());
+        assert!(f.transfer(1, MB).is_ok(), "back up on the next period");
+    }
+
+    #[test]
+    fn windowed_straggler_active_only_inside_window() {
+        let mut f = dual_tcp(4);
+        let clean = f.transfer(1, MB).unwrap();
+        let now = f.now_us();
+        f.inject_straggler_window(1, 400.0, 0.0, now + 1e5, now + 2e5);
+        // before the window: untouched
+        assert_eq!(f.transfer(1, MB).unwrap(), clean);
+        f.advance(now + 1.5e5 - f.now_us());
+        let stalled = f.transfer(1, MB).unwrap();
+        assert!((stalled - clean - 400.0).abs() < 1e-6, "clean {clean} stalled {stalled}");
+        // the batched ring step pays the same windowed stall
+        let r0 = f.ring_step(0, MB).unwrap();
+        let r1 = f.ring_step(1, MB).unwrap();
+        assert!((r1 - r0 - 400.0).abs() < 1e-6);
+        f.advance(now + 3e5 - f.now_us());
+        assert_eq!(f.transfer(1, MB).unwrap(), clean);
+    }
+
+    #[test]
+    fn retry_cap_blowout_declares_rail_down() {
+        let mut f = dual_tcp(4).with_degrade(DegradeSchedule::none().loss(0, 0.0, 1e9, 0.999));
+        // at 99.9% loss the cap is exhausted essentially immediately
+        let mut died = false;
+        for _ in 0..4 {
+            if f.transfer(0, MB).is_err() {
+                died = true;
+                break;
+            }
+        }
+        assert!(died, "retry cap must eventually declare the rail down");
+        assert!(f.retries_on(0) > RETRY_CAP as u64);
+    }
+
+    #[test]
+    fn probation_rail_serves_traffic() {
+        let mut f = dual_tcp(4);
+        f.deregister(1);
+        assert!(f.transfer(1, MB).is_err());
+        assert_eq!(f.healthy_rails(), vec![0]);
+        f.readmit_probation(1);
+        assert_eq!(f.healthy_rails(), vec![0, 1], "canary is back in the dataplane");
+        assert!(f.transfer(1, MB).is_ok());
+        // double-deregister is idempotent (no double cpu.unregister)
+        f.deregister(1);
+        f.deregister(1);
+        assert!(f.transfer(1, MB).is_err());
     }
 }

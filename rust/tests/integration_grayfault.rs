@@ -1,0 +1,219 @@
+//! Integration: gray-failure resilience (DESIGN.md §11) — seeded chaos
+//! campaigns composing loss, brownouts, flaps, windowed stragglers,
+//! crash-stop windows and node churn, held to the three campaign
+//! invariants (bit-exact numerics vs a fault-free twin, recovery within
+//! the paper's 200 ms budget, bounded health-transition oscillation) on
+//! both executors, plus targeted loss-determinism and flap tests.
+
+use nezha::bench::chaos::{campaign, run_campaign, CHAOS_OSC_BOUND};
+use nezha::config::{Config, Policy};
+use nezha::coordinator::buffer::UnboundBuffer;
+use nezha::coordinator::control::HealthMode;
+use nezha::coordinator::multirail::MultiRail;
+use nezha::net::cpu_pool::ExecMode;
+use nezha::net::fault::DegradeSchedule;
+use nezha::net::protocol::ProtoKind;
+use nezha::net::rail::RailHealth;
+
+const SEEDS: [u64; 8] = [1, 2, 3, 5, 8, 13, 21, 34];
+
+fn cfg(exec: ExecMode) -> Config {
+    let mut c = Config {
+        nodes: 4,
+        combo: vec![ProtoKind::Tcp, ProtoKind::Tcp],
+        policy: Policy::Nezha,
+        deterministic: true,
+        ..Config::default()
+    };
+    c.exec = exec;
+    c
+}
+
+fn make(nodes: usize, len: usize) -> UnboundBuffer {
+    UnboundBuffer::from_fn(nodes, len, |n, i| ((n + 1) * (i % 13 + 1)) as f32)
+}
+
+/// The chaos matrix: every seed, both executors, all three invariants.
+#[test]
+fn chaos_campaign_matrix_holds_all_invariants() {
+    for &seed in &SEEDS {
+        let c = campaign(seed);
+        for exec in [ExecMode::Serial, ExecMode::Parallel] {
+            let o = run_campaign(&c, exec, HealthMode::Graceful).unwrap();
+            assert!(
+                o.bit_exact,
+                "seed {seed} {}: numerics diverged from the fault-free twin ({})",
+                o.exec, o.label
+            );
+            assert!(
+                o.within_budget,
+                "seed {seed} {}: recovery budget blown ({})",
+                o.exec, o.label
+            );
+            assert!(
+                o.max_rail_transitions <= CHAOS_OSC_BOUND,
+                "seed {seed} {}: oscillation {} > {CHAOS_OSC_BOUND} ({})",
+                o.exec, o.max_rail_transitions, o.label
+            );
+        }
+    }
+}
+
+/// Campaign verdicts are themselves executor-invariant: the serial and
+/// parallel runs of the same seed see identical failover and gray-event
+/// counts, not just identical numerics.
+#[test]
+fn chaos_campaign_bookkeeping_is_executor_invariant() {
+    for &seed in &[1u64, 5, 21] {
+        let c = campaign(seed);
+        let s = run_campaign(&c, ExecMode::Serial, HealthMode::Graceful).unwrap();
+        let p = run_campaign(&c, ExecMode::Parallel, HealthMode::Graceful).unwrap();
+        assert_eq!(s.failovers, p.failovers, "seed {seed}");
+        assert_eq!(s.gray_events, p.gray_events, "seed {seed}");
+        assert_eq!(s.max_rail_transitions, p.max_rail_transitions, "seed {seed}");
+    }
+}
+
+/// Retry sampling rides the per-rail RNG streams: with loss active the
+/// sampled retransmit charges — and therefore every modeled time — are
+/// bit-identical between the serial and parallel executors.
+#[test]
+fn loss_retransmits_bit_identical_across_executors() {
+    let degrade = DegradeSchedule::none().loss(1, 0.0, 1e12, 0.08);
+    let mut serial = MultiRail::new(&cfg(ExecMode::Serial))
+        .unwrap()
+        .with_degrade(degrade.clone());
+    let mut parallel = MultiRail::new(&cfg(ExecMode::Parallel))
+        .unwrap()
+        .with_degrade(degrade);
+    let len = 1 << 20; // 4MB: hot → both rails
+    for op in 0..6 {
+        let mut bs = make(4, len);
+        let mut bp = make(4, len);
+        let rs = serial.allreduce(&mut bs).unwrap();
+        let rp = parallel.allreduce(&mut bp).unwrap();
+        assert_eq!(rs.total_us, rp.total_us, "op {op}: sampled retransmits diverged");
+        for (a, b) in rs.per_rail.iter().zip(&rp.per_rail) {
+            assert_eq!(a.time_us, b.time_us, "op {op} rail {}", a.rail);
+            assert_eq!(a.bytes, b.bytes, "op {op} rail {}", a.rail);
+        }
+        for n in 0..4 {
+            assert_eq!(bs.node(n), bp.node(n), "op {op} node {n}");
+        }
+    }
+    assert_eq!(
+        serial.fab.retries_on(1),
+        parallel.fab.retries_on(1),
+        "retry ledgers must match"
+    );
+    assert!(serial.fab.retries_on(1) > 0, "loss must actually charge retries");
+}
+
+/// Loss and brownouts stretch modeled time but never touch payload bytes:
+/// a degraded run reduces bit-exactly like a clean one.
+#[test]
+fn degradation_never_corrupts_numerics() {
+    let degrade = DegradeSchedule::none()
+        .loss(1, 0.0, 1e12, 0.1)
+        .brownout(0, 0.0, 1e12, 0.6)
+        .stall(1, 0.0, 1e12, 3_000.0, 0.2);
+    let mut dirty = MultiRail::new(&cfg(ExecMode::Serial))
+        .unwrap()
+        .with_degrade(degrade);
+    let mut clean = MultiRail::new(&cfg(ExecMode::Serial)).unwrap();
+    let len = 1 << 20;
+    for op in 0..4 {
+        let mut a = make(4, len);
+        let mut b = make(4, len);
+        let rep_dirty = dirty.allreduce(&mut a).unwrap();
+        let rep_clean = clean.allreduce(&mut b).unwrap();
+        for n in 0..4 {
+            assert_eq!(a.node(n), b.node(n), "op {op} node {n}");
+        }
+        assert!(
+            rep_dirty.total_us > rep_clean.total_us,
+            "op {op}: degradation must cost time ({} vs {})",
+            rep_dirty.total_us,
+            rep_clean.total_us
+        );
+    }
+}
+
+/// A flapping rail is crash-like in its down half-periods: it rides the
+/// §4.4 failover, is barred from readmission while down, and the
+/// quarantine dwell backoff keeps the transition count bounded — then it
+/// settles back to Healthy once the flap window ends.
+#[test]
+fn flapping_rail_is_bounded_and_settles() {
+    // 60ms half-periods over a 480ms window, then permanently clean
+    let degrade = DegradeSchedule::none().flap(1, 0.0, 480_000.0, 60_000.0);
+    let mut mr = MultiRail::new(&cfg(ExecMode::Serial))
+        .unwrap()
+        .with_degrade(degrade);
+    let len = 1 << 20;
+    let mut failovers = 0;
+    for _ in 0..40 {
+        let mut buf = make(4, len);
+        let rep = mr.allreduce(&mut buf).unwrap();
+        failovers += rep.failovers;
+        if mr.fab.now_us() > 1_000_000.0 {
+            break;
+        }
+    }
+    assert!(failovers >= 1, "a flap down-phase must trigger a failover");
+    assert!(
+        mr.monitor.transition_count(1) <= CHAOS_OSC_BOUND,
+        "flap oscillation must stay bounded: {:?}",
+        mr.monitor.transitions()
+    );
+    // past the window: keep running until the quarantine dwell expires
+    // and the canary is promoted
+    for _ in 0..30 {
+        let mut buf = make(4, len);
+        mr.allreduce(&mut buf).unwrap();
+        if mr.fab.rails[1].health == RailHealth::Healthy {
+            break;
+        }
+    }
+    assert_eq!(
+        mr.fab.rails[1].health,
+        RailHealth::Healthy,
+        "the rail must settle once the flap window ends: {:?}",
+        mr.monitor.transitions()
+    );
+    assert!(mr.exceptions.all_within_budget());
+    assert!(mr.exceptions.gray_within_budget());
+}
+
+/// Graceful demotion under a brownout beats binary quarantine end to end
+/// (the integration-level restatement of the grayfault ablation's
+/// acceptance row).
+#[test]
+fn graceful_soft_demotion_beats_binary_on_brownout() {
+    let mean = |mode: HealthMode| {
+        let mut c = cfg(ExecMode::Serial);
+        c.health.mode = mode;
+        c.health.dirty_inc = 4.0; // first dirty residual crosses degrade_enter
+        let mut mr = MultiRail::new(&c)
+            .unwrap()
+            .with_degrade(DegradeSchedule::none().brownout(1, 0.0, 1e12, 0.5));
+        let elem_bytes = (16u64 << 20) as f64 / 2048.0;
+        let mut total = 0.0;
+        let mut counted = 0;
+        for op in 0..12 {
+            let mut buf = make(4, 2048);
+            let rep = mr.allreduce_scaled(&mut buf, elem_bytes).unwrap();
+            if op >= 2 {
+                total += rep.total_us;
+                counted += 1;
+            }
+        }
+        total / counted as f64
+    };
+    let graceful = mean(HealthMode::Graceful);
+    let binary = mean(HealthMode::Binary);
+    assert!(
+        graceful < binary,
+        "soft demotion must beat quarantine-everything: graceful {graceful} vs binary {binary}"
+    );
+}

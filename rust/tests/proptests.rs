@@ -746,6 +746,204 @@ fn prop_parallel_exec_bit_identical_to_serial() {
     }
 }
 
+/// Property: a rail that is BOTH crash-downed and degraded behaves
+/// bit-identically to the same rail crash-downed alone. Degradation
+/// inside a down window is unobservable — `poll_health` short-circuits
+/// before any loss/brownout/stall sampling — so composing hazards never
+/// changes failover timing, health bookkeeping or numerics.
+#[test]
+fn prop_down_plus_degraded_equals_down() {
+    use nezha::config::{Config, Policy};
+    use nezha::coordinator::multirail::MultiRail;
+    use nezha::net::fault::{DegradeSchedule, FaultSchedule};
+    let mut rng = Pcg::new(7001);
+    for case in 0..12 {
+        let start = rng.range_f64(0.0, 100_000.0);
+        let dur = rng.range_f64(100_000.0, 300_000.0);
+        // the degrade window sits strictly inside the down window, so
+        // every instant with degradation active is also a down instant
+        let (ds, de) = (start + 0.1 * dur, start + 0.9 * dur);
+        let degrade = match rng.below(3) {
+            0 => DegradeSchedule::none().loss(1, ds, de, rng.range_f64(0.05, 0.5)),
+            1 => DegradeSchedule::none().brownout(1, ds, de, rng.range_f64(0.3, 0.9)),
+            _ => DegradeSchedule::none().stall(1, ds, de, rng.range_f64(1_000.0, 5_000.0), 0.2),
+        };
+        let cfg = Config {
+            nodes: 4,
+            combo: vec![ProtoKind::Tcp, ProtoKind::Tcp],
+            policy: Policy::Nezha,
+            deterministic: case % 2 == 0, // half the cases keep jitter ON
+            seed: 7100 + case as u64,
+            faults: FaultSchedule::none().with(1, start, start + dur),
+            ..Config::default()
+        };
+        let mut down = MultiRail::new(&cfg).unwrap();
+        let mut both = MultiRail::new(&cfg).unwrap().with_degrade(degrade);
+        let len = 2048;
+        let elem_bytes = (8u64 << 20) as f64 / len as f64;
+        let fill = |n: usize, i: usize| ((n + 1) * (i % 13 + 1)) as f32;
+        for op in 0..10 {
+            let mut a = UnboundBuffer::from_fn(4, len, fill);
+            let mut b = UnboundBuffer::from_fn(4, len, fill);
+            let ra = down.allreduce_scaled(&mut a, elem_bytes).unwrap();
+            let rb = both.allreduce_scaled(&mut b, elem_bytes).unwrap();
+            assert_eq!(ra.total_us, rb.total_us, "case {case} op {op}: modeled time diverged");
+            assert_eq!(ra.failovers, rb.failovers, "case {case} op {op}");
+            for (x, y) in ra.per_rail.iter().zip(&rb.per_rail) {
+                assert_eq!(x.time_us, y.time_us, "case {case} op {op} rail {}", x.rail);
+                assert_eq!(x.bytes, y.bytes, "case {case} op {op} rail {}", x.rail);
+            }
+            for n in 0..4 {
+                assert_eq!(a.node(n), b.node(n), "case {case} op {op} node {n}");
+            }
+        }
+        assert_eq!(down.fab.rails[1].health, both.fab.rails[1].health, "case {case}");
+        assert_eq!(
+            down.exceptions.failover_count(),
+            both.exceptions.failover_count(),
+            "case {case}"
+        );
+        assert_eq!(down.exceptions.gray_count(), both.exceptions.gray_count(), "case {case}");
+        assert_eq!(
+            down.fab.retries_on(1),
+            both.fab.retries_on(1),
+            "case {case}: retries were sampled inside a down window"
+        );
+    }
+}
+
+/// Property: retransmit sampling is a pure function of (seed, rail,
+/// op_epoch) — identically-configured runs draw identical retry
+/// sequences, and the serial and parallel executors agree bit-for-bit
+/// on modeled times, retry ledgers and reduced buffers, for random
+/// seeds and loss rates.
+#[test]
+fn prop_retry_sampling_deterministic_and_exec_invariant() {
+    use nezha::config::{Config, Policy};
+    use nezha::coordinator::multirail::MultiRail;
+    use nezha::net::cpu_pool::ExecMode;
+    use nezha::net::fault::DegradeSchedule;
+    let mut rng = Pcg::new(7002);
+    for case in 0..10 {
+        let seed = rng.next_u64();
+        // rail 1 always lossy; rail 0 mildly lossy half the time (it
+        // must stay alive as the failover survivor)
+        let mut degrade = DegradeSchedule::none().loss(1, 0.0, 1e12, rng.range_f64(0.02, 0.15));
+        if rng.f64() < 0.5 {
+            degrade = degrade.loss(0, 0.0, 1e12, rng.range_f64(0.005, 0.05));
+        }
+        let mut cfg = Config {
+            nodes: [2usize, 4][rng.below(2) as usize],
+            combo: vec![ProtoKind::Tcp, ProtoKind::Tcp],
+            policy: Policy::Nezha,
+            deterministic: rng.f64() < 0.5,
+            seed,
+            exec: ExecMode::Serial,
+            ..Config::default()
+        };
+        let len = 2048;
+        let elem_bytes = (8u64 << 20) as f64 / len as f64;
+        let nodes = cfg.nodes;
+        let run = |cfg: &Config| {
+            let mut mr = MultiRail::new(cfg).unwrap().with_degrade(degrade.clone());
+            let mut trace = Vec::new();
+            let mut node0 = Vec::new();
+            for _ in 0..5 {
+                let mut buf =
+                    UnboundBuffer::from_fn(nodes, len, |n, i| ((n + 1) * (i % 13 + 1)) as f32);
+                let rep = mr.allreduce_scaled(&mut buf, elem_bytes).unwrap();
+                trace.push((rep.total_us, mr.fab.retries_on(0), mr.fab.retries_on(1)));
+                node0 = buf.node(0).to_vec();
+            }
+            (trace, node0)
+        };
+        let first = run(&cfg);
+        let second = run(&cfg);
+        assert_eq!(first, second, "case {case} (seed {seed}): reruns diverged");
+        cfg.exec = ExecMode::Parallel;
+        let parallel = run(&cfg);
+        assert_eq!(first, parallel, "case {case} (seed {seed}): executors diverged");
+        let (_, r0, r1) = *first.0.last().unwrap();
+        assert!(r0 + r1 > 0, "case {case}: loss never charged a retry");
+    }
+}
+
+/// Property: a quarantine that lands mid-run on an affinity-constrained
+/// pods cluster never routes payload outside the strict per-pod rail
+/// intersection — before, during or after the §4.4 failover and the
+/// probationary readmission — and the quarantined rail rejoins the plan
+/// once it settles back to Healthy.
+#[test]
+fn prop_quarantine_respects_affinity_masks() {
+    use nezha::config::{Config, Policy};
+    use nezha::coordinator::multirail::MultiRail;
+    use nezha::net::fault::FaultSchedule;
+    use nezha::net::rail::RailHealth;
+    let mut rng = Pcg::new(7003);
+    for case in 0..8 {
+        // 2 pods of 4 nodes on 3 rails; every pod admits rails {0, 2},
+        // rail 1 per-pod at random — rail 0 survives every hazard, and
+        // the crash window quarantines rail 2 mid-campaign
+        let masks: Vec<u64> = (0..2).map(|_| 0b101 | (rng.below(2) << 1)).collect();
+        let allowed: u64 = masks.iter().fold(0b111, |a, m| a & m);
+        let start = rng.range_f64(0.0, 30_000.0);
+        let end = start + rng.range_f64(60_000.0, 160_000.0);
+        let mut cfg = Config {
+            nodes: 8,
+            combo: vec![ProtoKind::Tcp; 3],
+            policy: Policy::Nezha,
+            deterministic: true,
+            seed: 7300 + case as u64,
+            faults: FaultSchedule::none().with(2, start, end),
+            ..Config::default()
+        };
+        cfg.cluster = ClusterSpec::pods(4).with_affinity(0, masks);
+        let mut mr = MultiRail::new(&cfg).unwrap();
+        let len = 2048;
+        let elem_bytes = (24u64 << 20) as f64 / len as f64; // hot on every admitted rail
+        let fill = |n: usize, i: usize| ((n + 1) * (i % 13 + 1)) as f32;
+        let mut saw_quarantine = false;
+        let mut settled = false;
+        for op in 0..24 {
+            let before = mr.fab.rails[2].health;
+            let mut buf = UnboundBuffer::from_fn(8, len, fill);
+            let rep = mr.allreduce_scaled(&mut buf, elem_bytes).unwrap();
+            for i in 0..len {
+                // sum over nodes of (n+1) = 36 for 8 nodes
+                assert_eq!(buf.node(0)[i], (36 * (i % 13 + 1)) as f32, "case {case} op {op}");
+            }
+            let after = mr.fab.rails[2].health;
+            for s in rep.per_rail.iter().filter(|s| s.bytes > 0) {
+                assert!(
+                    allowed & (1 << s.rail) != 0,
+                    "case {case} op {op}: rail {} carried payload outside the affinity intersection",
+                    s.rail
+                );
+                if before == RailHealth::Quarantined && after == RailHealth::Quarantined {
+                    assert_ne!(s.rail, 2, "case {case} op {op}: quarantined rail carried payload");
+                }
+            }
+            if after == RailHealth::Quarantined {
+                saw_quarantine = true;
+            }
+            if saw_quarantine && after == RailHealth::Healthy && mr.fab.now_us() > end {
+                settled = true;
+                break;
+            }
+        }
+        assert!(saw_quarantine, "case {case}: the crash window must quarantine rail 2");
+        assert!(settled, "case {case}: rail 2 never readmitted to Healthy");
+        // the readmitted rail rejoins the plan within a few hot ops
+        let mut carried = false;
+        for _ in 0..3 {
+            let mut buf = UnboundBuffer::from_fn(8, len, fill);
+            let rep = mr.allreduce_scaled(&mut buf, elem_bytes).unwrap();
+            carried |= rep.per_rail.iter().any(|s| s.rail == 2 && s.bytes > 0);
+        }
+        assert!(carried, "case {case}: the readmitted rail never rejoined the plan");
+    }
+}
+
 /// Property: run-to-run determinism of the parallel executor — two
 /// identically-seeded coordinators produce identical modeled-time
 /// sequences under jitter, however the OS schedules the worker threads
