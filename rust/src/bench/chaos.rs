@@ -13,7 +13,14 @@
 //! 3. **Stability**: no demote/readmit oscillation — per-rail health
 //!    transitions stay bounded (the quarantine dwell backs off).
 //!
-//! Run: `cargo run --release -- fig ablate-grayfault`
+//! The corruption family (DESIGN.md §12) composes silent wire corruption
+//! with those gray hazards: with integrity on the wire checksums must keep
+//! every campaign bit-exact and quarantine the persistently-corrupting
+//! rail; with integrity off the same campaigns measure the corruption
+//! escape rate against the fault-free twin.
+//!
+//! Run: `cargo run --release -- fig ablate-grayfault` /
+//! `fig ablate-integrity`
 
 use crate::config::{Config, Policy};
 use crate::coordinator::buffer::UnboundBuffer;
@@ -21,8 +28,9 @@ use crate::coordinator::control::exception::PAPER_RECOVERY_BUDGET_US;
 use crate::coordinator::control::HealthMode;
 use crate::coordinator::multirail::MultiRail;
 use crate::net::cpu_pool::ExecMode;
-use crate::net::fault::{DegradeSchedule, FaultSchedule};
+use crate::net::fault::{CorruptSchedule, DegradeSchedule, FaultSchedule};
 use crate::net::protocol::ProtoKind;
+use crate::net::rail::RailHealth;
 use crate::util::json::Json;
 use crate::util::rng::Pcg;
 use crate::util::table::Table;
@@ -65,6 +73,7 @@ pub struct Campaign {
     pub seed: u64,
     pub faults: FaultSchedule,
     pub degrade: DegradeSchedule,
+    pub corrupt: CorruptSchedule,
     pub label: String,
     /// Node that leaves and rejoins, and the op indices where it does.
     pub churn_node: usize,
@@ -136,11 +145,99 @@ pub fn campaign(seed: u64) -> Campaign {
         seed,
         faults,
         degrade,
+        corrupt: CorruptSchedule::none(),
         label: parts.join("+"),
         churn_node,
         leave_op,
         rejoin_op,
     }
+}
+
+/// Generate the corruption campaign for `seed`: a persistent bit-flip
+/// storm on one rail (strong enough that the suspicion ledger must
+/// quarantine it) plus a windowed second corruption of a random kind,
+/// composed with the gray hazards — loss, brownout, a coin-flip crash
+/// window — and node churn. Pure function of the seed.
+pub fn corruption_campaign(seed: u64) -> Campaign {
+    let mut rng = Pcg::new(seed ^ 0xC044_B1D5);
+    let mut corrupt = CorruptSchedule::none();
+    let mut degrade = DegradeSchedule::none();
+    let mut faults = FaultSchedule::none();
+    let mut parts: Vec<String> = Vec::new();
+    let pick_rail = |rng: &mut Pcg| 1 + rng.below((CHAOS_RAILS - 1) as u64) as usize;
+
+    // the persistent storm: rail must walk to Quarantined with integrity on
+    let storm_rail = pick_rail(&mut rng);
+    let p = rng.range_f64(0.10, 0.20);
+    corrupt = corrupt.flip(storm_rail, 0.0, 1e12, p);
+    parts.push(format!("flip:{storm_rail}:{p:.2}"));
+
+    // a windowed second corruption of a random kind
+    let rail = pick_rail(&mut rng);
+    let p2 = rng.range_f64(0.02, 0.08);
+    let start = rng.range_f64(0.0, 80_000.0);
+    let end = start + rng.range_f64(80_000.0, 250_000.0);
+    corrupt = match rng.below(3) {
+        0 => {
+            parts.push(format!("dup:{rail}:{p2:.2}"));
+            corrupt.dup(rail, start, end, p2)
+        }
+        1 => {
+            parts.push(format!("trunc:{rail}:{p2:.2}"));
+            corrupt.trunc(rail, start, end, p2)
+        }
+        _ => {
+            parts.push(format!("stuck:{rail}:{p2:.2}"));
+            corrupt.stuck(rail, start, end, p2)
+        }
+    };
+
+    // gray hazards ride along: loss burst + brownout
+    let rail = pick_rail(&mut rng);
+    let rate = rng.range_f64(0.02, 0.10);
+    let start = rng.range_f64(0.0, 50_000.0);
+    let end = start + rng.range_f64(100_000.0, 300_000.0);
+    degrade = degrade.loss(rail, start, end, rate);
+    parts.push(format!("loss:{rail}:{rate:.2}"));
+
+    let rail = pick_rail(&mut rng);
+    let factor = rng.range_f64(0.4, 0.8);
+    let start = rng.range_f64(0.0, 80_000.0);
+    let end = start + rng.range_f64(100_000.0, 300_000.0);
+    degrade = degrade.brownout(rail, start, end, factor);
+    parts.push(format!("brownout:{rail}:{factor:.2}"));
+
+    // coin-flip crash-stop window
+    if rng.f64() < 0.5 {
+        let rail = pick_rail(&mut rng);
+        let start = rng.range_f64(20_000.0, 80_000.0);
+        let end = start + rng.range_f64(50_000.0, 120_000.0);
+        faults = faults.with(rail, start, end);
+        parts.push(format!("crash:{rail}"));
+    }
+
+    // one node leave + rejoin
+    let churn_node = 1 + rng.below((CHAOS_NODES - 1) as u64) as usize;
+    let leave_op = 2 + rng.below(3) as usize;
+    let rejoin_op = leave_op + 2 + rng.below(3) as usize;
+    parts.push(format!("churn:n{churn_node}"));
+
+    Campaign {
+        seed,
+        faults,
+        degrade,
+        corrupt,
+        label: parts.join("+"),
+        churn_node,
+        leave_op,
+        rejoin_op,
+    }
+}
+
+/// The rail carrying a corruption campaign's persistent storm (the first
+/// scheduled window by construction).
+pub fn storm_rail(c: &Campaign) -> usize {
+    c.corrupt.windows().first().map(|w| w.rail).unwrap_or(0)
 }
 
 /// One campaign run's verdicts against the three invariants.
@@ -168,6 +265,7 @@ pub fn run_campaign(c: &Campaign, exec: ExecMode, mode: HealthMode) -> Result<Ca
     cfg.health.mode = mode;
     cfg.faults = c.faults.clone();
     cfg.degrade = c.degrade.clone();
+    cfg.corrupt = c.corrupt.clone();
     let mut mr = MultiRail::new(&cfg)?;
     // the twin shares ONLY the membership churn
     let mut twin = MultiRail::new(&chaos_cfg(exec))?;
@@ -207,6 +305,89 @@ pub fn run_campaign(c: &Campaign, exec: ExecMode, mode: HealthMode) -> Result<Ca
         max_rail_transitions,
         failovers: mr.exceptions.failover_count(),
         gray_events: mr.exceptions.gray_count(),
+    })
+}
+
+/// One corruption campaign run's verdicts (DESIGN.md §12).
+#[derive(Debug, Clone)]
+pub struct IntegrityOutcome {
+    pub seed: u64,
+    pub exec: &'static str,
+    pub label: String,
+    /// Wire checksums on?
+    pub integrity: bool,
+    pub bit_exact: bool,
+    /// Ops whose reduced values diverged from the fault-free twin.
+    pub escaped_ops: usize,
+    /// Corruption events logged across rails: detected-and-recharged with
+    /// integrity on, silently delivered with integrity off.
+    pub injected: u64,
+    pub within_budget: bool,
+    pub max_rail_transitions: usize,
+    /// Did the persistent-storm rail reach Quarantined at some point?
+    pub storm_quarantined: bool,
+}
+
+/// Run one corruption campaign under `exec` with the wire checksums on or
+/// off, next to a fault-free twin that shares only the membership churn.
+pub fn run_integrity_campaign(
+    c: &Campaign,
+    exec: ExecMode,
+    integrity: bool,
+) -> Result<IntegrityOutcome> {
+    let mut cfg = chaos_cfg(exec);
+    cfg.faults = c.faults.clone();
+    cfg.degrade = c.degrade.clone();
+    cfg.corrupt = c.corrupt.clone();
+    cfg.integrity = integrity;
+    let mut mr = MultiRail::new(&cfg)?;
+    let mut twin = MultiRail::new(&chaos_cfg(exec))?;
+    let mut escaped_ops = 0usize;
+    for op in 0..CHAOS_OPS {
+        if op == c.leave_op {
+            mr.node_leave(c.churn_node)?;
+            twin.node_leave(c.churn_node)?;
+        }
+        if op == c.rejoin_op {
+            mr.node_rejoin(c.churn_node)?;
+            twin.node_rejoin(c.churn_node)?;
+        }
+        let nodes = mr.active_nodes();
+        let mut same = nodes == twin.active_nodes();
+        let mut a = UnboundBuffer::from_fn(nodes, CHAOS_LEN, chaos_fill);
+        let mut b = UnboundBuffer::from_fn(nodes, CHAOS_LEN, chaos_fill);
+        mr.allreduce_scaled(&mut a, CHAOS_ELEM_BYTES)?;
+        twin.allreduce_scaled(&mut b, CHAOS_ELEM_BYTES)?;
+        for n in 0..nodes {
+            same &= a.node(n) == b.node(n);
+        }
+        if !same {
+            escaped_ops += 1;
+        }
+    }
+    let storm = storm_rail(c);
+    let storm_quarantined = mr
+        .monitor
+        .transitions()
+        .iter()
+        .any(|t| t.rail == storm && t.to == RailHealth::Quarantined);
+    let within_budget = mr.exceptions.all_within_budget()
+        && mr.exceptions.membership_within_budget()
+        && mr.exceptions.gray_within_budget();
+    Ok(IntegrityOutcome {
+        seed: c.seed,
+        exec: exec.name(),
+        label: c.label.clone(),
+        integrity,
+        bit_exact: escaped_ops == 0,
+        escaped_ops,
+        injected: (0..CHAOS_RAILS).map(|r| mr.fab.corruptions_on(r)).sum(),
+        within_budget,
+        max_rail_transitions: (0..CHAOS_RAILS)
+            .map(|r| mr.monitor.transition_count(r))
+            .max()
+            .unwrap_or(0),
+        storm_quarantined,
     })
 }
 
@@ -349,6 +530,169 @@ pub fn ablate_grayfault() -> Result<()> {
     Ok(())
 }
 
+/// Host-side wall clock per clean allreduce with the wire checksums on or
+/// off. The modeled time is identical by design (checksums charge no
+/// virtual time), so the difference is the real compute cost of the
+/// send/verify passes — the clean-path overhead `BENCH_hotpath.json`
+/// records alongside this ablation.
+fn clean_wall_us(integrity: bool, ops: usize) -> Result<f64> {
+    let mut cfg = chaos_cfg(ExecMode::Serial);
+    cfg.integrity = integrity;
+    let mut mr = MultiRail::new(&cfg)?;
+    // untimed warm pass: planner and allocations settle
+    let mut warm = UnboundBuffer::from_fn(CHAOS_NODES, CHAOS_LEN, chaos_fill);
+    mr.allreduce_scaled(&mut warm, CHAOS_ELEM_BYTES)?;
+    let start = std::time::Instant::now();
+    for _ in 0..ops {
+        let mut buf = UnboundBuffer::from_fn(CHAOS_NODES, CHAOS_LEN, chaos_fill);
+        mr.allreduce_scaled(&mut buf, CHAOS_ELEM_BYTES)?;
+    }
+    Ok(start.elapsed().as_secs_f64() * 1e6 / ops as f64)
+}
+
+/// The full data-plane integrity study as one JSON document (uploaded as
+/// the `integrity_ablation.json` CI artifact): every corruption campaign
+/// in the seed × executor matrix, run with the wire checksums on (must be
+/// bit-exact, in budget, storm rail quarantined) and off (measures the
+/// corruption escape rate), plus the clean-path checksum overhead.
+pub fn integrity_sweep_json() -> Result<Json> {
+    let mut rows = Vec::new();
+    let mut on_bit_exact = true;
+    let mut on_within_budget = true;
+    let mut on_quarantined = true;
+    let mut oscillation_bounded = true;
+    let mut on_detected: u64 = 0;
+    let mut on_escaped = 0usize;
+    let mut off_silent: u64 = 0;
+    let mut off_escaped = 0usize;
+    let mut side_ops = 0usize;
+    for &seed in &CHAOS_SWEEP_SEEDS {
+        let c = corruption_campaign(seed);
+        for exec in [ExecMode::Serial, ExecMode::Parallel] {
+            for integrity in [true, false] {
+                let o = run_integrity_campaign(&c, exec, integrity)?;
+                if integrity {
+                    on_bit_exact &= o.bit_exact;
+                    on_within_budget &= o.within_budget;
+                    on_quarantined &= o.storm_quarantined;
+                    oscillation_bounded &= o.max_rail_transitions <= CHAOS_OSC_BOUND;
+                    on_detected += o.injected;
+                    on_escaped += o.escaped_ops;
+                } else {
+                    off_silent += o.injected;
+                    off_escaped += o.escaped_ops;
+                    side_ops += CHAOS_OPS;
+                }
+                rows.push(Json::obj(vec![
+                    ("seed", Json::from(o.seed as f64)),
+                    ("exec", Json::from(o.exec)),
+                    ("hazards", Json::from(o.label.clone())),
+                    ("integrity", Json::Bool(o.integrity)),
+                    ("bit_exact_vs_fault_free", Json::Bool(o.bit_exact)),
+                    ("escaped_ops", Json::from(o.escaped_ops)),
+                    ("corruption_events", Json::from(o.injected as f64)),
+                    ("within_recovery_budget", Json::Bool(o.within_budget)),
+                    ("storm_rail_quarantined", Json::Bool(o.storm_quarantined)),
+                    ("max_rail_transitions", Json::from(o.max_rail_transitions)),
+                ]));
+            }
+        }
+    }
+    let detection_rate = 1.0 - on_escaped as f64 / side_ops as f64;
+    let escape_rate = off_escaped as f64 / side_ops as f64;
+    let on_wall = clean_wall_us(true, 48)?;
+    let off_wall = clean_wall_us(false, 48)?;
+    Ok(Json::obj(vec![
+        ("bench", Json::from("integrity")),
+        ("budget_us", Json::from(PAPER_RECOVERY_BUDGET_US)),
+        ("ops_per_campaign", Json::from(CHAOS_OPS)),
+        ("oscillation_bound", Json::from(CHAOS_OSC_BOUND)),
+        ("campaigns", Json::Arr(rows)),
+        (
+            "integrity_on",
+            Json::obj(vec![
+                ("all_bit_exact", Json::Bool(on_bit_exact)),
+                ("all_within_budget", Json::Bool(on_within_budget)),
+                ("storm_rail_always_quarantined", Json::Bool(on_quarantined)),
+                ("oscillation_bounded", Json::Bool(oscillation_bounded)),
+                ("corruption_events_detected", Json::from(on_detected as f64)),
+                ("detection_rate", Json::from(detection_rate)),
+            ]),
+        ),
+        (
+            "integrity_off",
+            Json::obj(vec![
+                ("corruption_events_silent", Json::from(off_silent as f64)),
+                ("escaped_ops", Json::from(off_escaped)),
+                ("escape_rate", Json::from(escape_rate)),
+            ]),
+        ),
+        (
+            "clean_path",
+            Json::obj(vec![
+                (
+                    "scenario",
+                    Json::from("clean modeled-8MB ops, serial executor, host wall clock per op"),
+                ),
+                ("checksum_on_wall_us", Json::from(on_wall)),
+                ("checksum_off_wall_us", Json::from(off_wall)),
+                (
+                    "overhead_pct",
+                    Json::from((on_wall / off_wall - 1.0) * 100.0),
+                ),
+            ]),
+        ),
+    ]))
+}
+
+/// Data-plane integrity ablation: the corruption-campaign matrix with the
+/// wire checksums on vs off — detection rate, escape rate, quarantine and
+/// budget verdicts — plus the clean-path checksum overhead. The JSON
+/// document is the last printed line (CI captures it as the
+/// `integrity_ablation.json` artifact).
+pub fn ablate_integrity() -> Result<()> {
+    println!("\n=== Ablation: data-plane integrity under corruption campaigns ===");
+    let doc = integrity_sweep_json()?;
+    let mut t = Table::new(&[
+        "seed", "exec", "hazards", "integrity", "bit-exact", "escaped", "events", "quarantined",
+    ]);
+    if let Some(Json::Arr(rows)) = doc.get("campaigns") {
+        for r in rows {
+            t.row(vec![
+                format!("{:.0}", r.get("seed").and_then(Json::as_f64).unwrap_or(0.0)),
+                r.get("exec").and_then(Json::as_str).unwrap_or("-").to_string(),
+                r.get("hazards").and_then(Json::as_str).unwrap_or("-").to_string(),
+                r.get("integrity").map(|j| j.to_string()).unwrap_or_default(),
+                r.get("bit_exact_vs_fault_free").map(|j| j.to_string()).unwrap_or_default(),
+                format!("{:.0}", r.get("escaped_ops").and_then(Json::as_f64).unwrap_or(0.0)),
+                format!("{:.0}", r.get("corruption_events").and_then(Json::as_f64).unwrap_or(0.0)),
+                r.get("storm_rail_quarantined").map(|j| j.to_string()).unwrap_or_default(),
+            ]);
+        }
+    }
+    t.print();
+    if let (Some(on), Some(off), Some(clean)) = (
+        doc.get("integrity_on"),
+        doc.get("integrity_off"),
+        doc.get("clean_path"),
+    ) {
+        println!(
+            "detection rate (checksums on): {:.3}; escape rate (checksums off): {:.3}",
+            on.get("detection_rate").and_then(Json::as_f64).unwrap_or(0.0),
+            off.get("escape_rate").and_then(Json::as_f64).unwrap_or(0.0),
+        );
+        println!(
+            "clean-path checksum overhead: {:.1}% wall ({:.0}us vs {:.0}us per op)",
+            clean.get("overhead_pct").and_then(Json::as_f64).unwrap_or(0.0),
+            clean.get("checksum_on_wall_us").and_then(Json::as_f64).unwrap_or(0.0),
+            clean.get("checksum_off_wall_us").and_then(Json::as_f64).unwrap_or(0.0),
+        );
+    }
+    println!("(wire checksums keep every corruption campaign bit-exact and quarantine the storm rail; ablating them lets poison reach the reduction)");
+    println!("{}", doc.to_string());
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -397,6 +741,59 @@ mod tests {
             Some(&Json::Bool(true)),
             "soft demotion must out-run binary quarantine on a brownout: {}",
             b.to_string()
+        );
+    }
+
+    #[test]
+    fn corruption_campaign_is_deterministic_and_spares_rail0() {
+        let a = corruption_campaign(7);
+        let b = corruption_campaign(7);
+        assert_eq!(a.label, b.label);
+        assert_eq!(storm_rail(&a), storm_rail(&b));
+        assert_eq!((a.leave_op, a.rejoin_op), (b.leave_op, b.rejoin_op));
+        for seed in 1..=16 {
+            let c = corruption_campaign(seed);
+            assert!(!c.corrupt.is_empty(), "seed {seed}: corruption is the point");
+            assert!(storm_rail(&c) >= 1, "seed {seed}: rail 0 is the anchor");
+            for t in [0.0, 1e4, 1e5, 3e5, 1e6] {
+                assert!(!c.faults.is_down(0, t), "seed {seed}: rail 0 must stay up");
+                assert!(!c.degrade.active_on(0, t), "seed {seed}: rail 0 must stay clean");
+                assert_eq!(c.corrupt.corrupt_at(0, t), 0.0, "seed {seed}: rail 0 must stay clean");
+            }
+            // the storm is persistent: active from the first op to the last
+            assert!(c.corrupt.corrupt_at(storm_rail(&c), 0.0) > 0.0);
+            assert!(c.corrupt.corrupt_at(storm_rail(&c), 1e9) > 0.0);
+        }
+        assert_ne!(corruption_campaign(1).label, corruption_campaign(2).label);
+    }
+
+    /// The data-plane integrity acceptance criteria, read straight off
+    /// the artifact document: with checksums on every corruption campaign
+    /// is bit-exact, in budget and quarantines the storm rail; with
+    /// checksums off the measured escape rate is nonzero.
+    #[test]
+    fn integrity_acceptance_criteria_hold() {
+        let doc = integrity_sweep_json().unwrap();
+        let on = doc.get("integrity_on").unwrap();
+        assert_eq!(on.get("all_bit_exact"), Some(&Json::Bool(true)), "{}", doc.to_string());
+        assert_eq!(on.get("all_within_budget"), Some(&Json::Bool(true)), "{}", doc.to_string());
+        assert_eq!(
+            on.get("storm_rail_always_quarantined"),
+            Some(&Json::Bool(true)),
+            "{}",
+            doc.to_string()
+        );
+        assert_eq!(on.get("oscillation_bounded"), Some(&Json::Bool(true)), "{}", doc.to_string());
+        assert_eq!(on.get("detection_rate").and_then(Json::as_f64), Some(1.0));
+        assert!(
+            on.get("corruption_events_detected").and_then(Json::as_f64).unwrap_or(0.0) > 0.0,
+            "storms must actually inject"
+        );
+        let off = doc.get("integrity_off").unwrap();
+        assert!(
+            off.get("escape_rate").and_then(Json::as_f64).unwrap_or(0.0) > 0.0,
+            "ablated checksums must leak a measurable escape rate: {}",
+            off.to_string()
         );
     }
 }

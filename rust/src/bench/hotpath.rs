@@ -23,7 +23,11 @@
 //!   lanes; the shipped [`KERNEL_LANES`] is the swept winner;
 //! * **policy sim** — wall-clock of the canonical `bench_allreduce`-style
 //!   modeled sweep, so policy-simulation regressions surface in the same
-//!   tracked document as kernel ones.
+//!   tracked document as kernel ones;
+//! * **integrity** — the FNV-1a window-checksum kernel's GB/s and the
+//!   clean-path cost of the collective cores' send/verify passes
+//!   (checksums on vs off), so the data-plane integrity overhead is
+//!   tracked per commit.
 //!
 //! Record, don't gate: CI uploads the JSON as a workflow artifact and the
 //! tier-1 smoke test checks only that the benchmark runs and the document
@@ -279,6 +283,54 @@ pub fn policy_sim_wall(quick: bool) -> Result<(f64, u64, f64)> {
     Ok((wall, ops, ops as f64 / wall))
 }
 
+/// Integrity cost probe: `(checksum_gbps, on_ops_per_sec,
+/// off_ops_per_sec)` — the FNV-1a window-checksum kernel's bandwidth over
+/// a 1M-word payload, and the clean-path cost of the collective cores'
+/// send/verify passes measured as pooled modeled-allreduce ops/sec with
+/// the wire checksums on vs off (the modeled times are identical by
+/// design, so the ratio isolates the real checksum compute). Record,
+/// don't gate.
+pub fn integrity_overhead(quick: bool) -> Result<(f64, f64, f64)> {
+    const N: usize = 1 << 20;
+    let data = vec![1.5f32; N];
+    let s = bench_wall("checksum_1M", 5, 50, || {
+        std::hint::black_box(crate::coordinator::collective::checksum(
+            std::hint::black_box(&data),
+        ));
+    });
+    let checksum_gbps = (N * 4) as f64 / s.mean_us / 1e3;
+    let ops = |integrity: bool| -> Result<f64> {
+        let (warm, reps) = if quick { (10, 100) } else { (50, 1000) };
+        let mut cfg = Config {
+            nodes: NODES,
+            combo: parse_combo(COMBO)?,
+            policy: Policy::Nezha,
+            deterministic: true,
+            exec: ExecMode::Serial,
+            ..Config::default()
+        };
+        cfg.integrity = integrity;
+        let mut mr = MultiRail::new(&cfg)?;
+        let mut pool = BufferPool::new();
+        let elem_bytes = (8u64 << 20) as f64 / ELEMS as f64;
+        for _ in 0..warm {
+            let mut buf = pool.acquire(NODES, ELEMS, fill);
+            let rep = mr.allreduce_scaled(&mut buf, elem_bytes)?;
+            pool.release(buf);
+            mr.recycle(rep);
+        }
+        let t = Instant::now();
+        for _ in 0..reps {
+            let mut buf = pool.acquire(NODES, ELEMS, fill);
+            let rep = mr.allreduce_scaled(&mut buf, elem_bytes)?;
+            pool.release(buf);
+            mr.recycle(rep);
+        }
+        Ok(reps as f64 / t.elapsed().as_secs_f64())
+    };
+    Ok((checksum_gbps, ops(true)?, ops(false)?))
+}
+
 /// Tenant counts of the multi-tenancy wall-clock sweep.
 pub const TENANCY_JOBS: [usize; 3] = [1, 2, 4];
 
@@ -335,6 +387,7 @@ pub fn hotpath_json(quick: bool) -> Result<Json> {
     let (add_gbps, rc_gbps) = kernel_gbps();
     let (sim_wall_s, sim_ops, sim_ops_per_sec) = policy_sim_wall(quick)?;
     let tenancy_rows = tenancy_wall_sweep(quick)?;
+    let (checksum_gbps, on_ops, off_ops) = integrity_overhead(quick)?;
     let sweep_json: Vec<Json> = rows
         .iter()
         .map(|r| {
@@ -415,6 +468,18 @@ pub fn hotpath_json(quick: bool) -> Result<Json> {
                 ("wall_seconds", Json::from(sim_wall_s)),
                 ("modeled_ops", Json::from(sim_ops as f64)),
                 ("ops_per_sec", Json::from(sim_ops_per_sec)),
+            ]),
+        ),
+        // data-plane integrity: the FNV-1a checksum kernel's bandwidth
+        // and the clean-path cost of the collective cores' send/verify
+        // passes (checksums on vs off; record, don't gate)
+        (
+            "integrity",
+            Json::obj(vec![
+                ("checksum_gbps", Json::from(checksum_gbps)),
+                ("clean_on_ops_per_sec", Json::from(on_ops)),
+                ("clean_off_ops_per_sec", Json::from(off_ops)),
+                ("clean_overhead_pct", Json::from((off_ops / on_ops - 1.0) * 100.0)),
             ]),
         ),
         // multi-tenant arbiter orchestration overhead: aggregate ops/sec

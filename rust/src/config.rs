@@ -9,7 +9,9 @@ use std::collections::BTreeMap;
 
 use crate::coordinator::control::{HealthConfig, HealthMode};
 use crate::net::cpu_pool::{AllocPolicy, ExecMode};
-use crate::net::fault::{parse_degrade, parse_faults, DegradeSchedule, FaultSchedule};
+use crate::net::fault::{
+    parse_corrupt, parse_degrade, parse_faults, CorruptSchedule, DegradeSchedule, FaultSchedule,
+};
 use crate::net::protocol::ProtoKind;
 use crate::net::topology::{parse_combo, parse_topology, ClusterSpec};
 use crate::util::cli::Args;
@@ -145,6 +147,13 @@ pub struct Config {
     /// Gray-failure degradation windows (`degrade=` spec:
     /// `rail0:loss=0.05@10ms-30ms;rail1:brownout=0.5@0-1s`).
     pub degrade: DegradeSchedule,
+    /// Silent-corruption windows (`corrupt=` spec:
+    /// `flip:1:0.05@100ms-300ms;stuck:0:0.2@1s-2s`).
+    pub corrupt: CorruptSchedule,
+    /// Checksum-verified data plane (`integrity= on|off`, default on):
+    /// when off, corruption events escape the wire checks and poison the
+    /// reduction — the ablation baseline.
+    pub integrity: bool,
     /// Suspicion-driven rail health tracking (`health= graceful|binary|off`).
     pub health: HealthConfig,
     pub seed: u64,
@@ -166,6 +175,8 @@ impl Default for Config {
             control: ControlConfig::default(),
             faults: FaultSchedule::none(),
             degrade: DegradeSchedule::none(),
+            corrupt: CorruptSchedule::none(),
+            integrity: true,
             health: HealthConfig::default(),
             seed: 42,
             deterministic: false,
@@ -217,6 +228,18 @@ impl Config {
                 "replan_error" => self.control.replan_error = parse_f64(k, v)?,
                 "faults" => self.faults = parse_faults(v)?,
                 "degrade" => self.degrade = parse_degrade(v)?,
+                "corrupt" => self.corrupt = parse_corrupt(v)?,
+                "integrity" => {
+                    self.integrity = match v.as_str() {
+                        "on" | "true" | "1" => true,
+                        "off" | "false" | "0" => false,
+                        other => {
+                            return Err(Error::Config(format!(
+                                "integrity must be on/off, got `{other}`"
+                            )))
+                        }
+                    }
+                }
                 "health" => self.health.mode = HealthMode::parse(v)?,
                 "seed" => self.seed = parse_f64(k, v)? as u64,
                 "deterministic" => self.deterministic = v == "true" || v == "1",
@@ -255,7 +278,7 @@ impl Config {
             "cluster", "topology", "nodes", "combo", "network", "policy", "planner", "exec",
             "alloc", "tau", "eta",
             "timer_window", "detect_timeout_us", "migrate_cost_us", "replan_error",
-            "faults", "degrade", "health",
+            "faults", "degrade", "corrupt", "integrity", "health",
             "seed", "deterministic", "artifacts_dir",
         ] {
             if let Some(v) = args.get(key) {
@@ -380,12 +403,19 @@ mod tests {
             "loss:1:0.05@100ms-300ms;brownout:0:0.5@1s-2s".into(),
         );
         kv.insert("health".into(), "binary".into());
+        kv.insert("corrupt".into(), "flip:1:0.05@100ms-300ms".into());
         c.apply(&kv).unwrap();
         assert!(!c.faults.is_empty());
         assert!(c.faults.is_down(1, 150_000.0));
         assert!(!c.faults.is_down(1, 250_000.0));
         assert!(c.degrade.loss_at(1, 200_000.0) > 0.0);
         assert!(c.degrade.brownout_at(0, 1_500_000.0) < 1.0);
+        assert!(c.corrupt.corrupt_at(1, 200_000.0) > 0.0);
+        assert_eq!(c.corrupt.corrupt_at(1, 400_000.0), 0.0);
+        assert!(c.integrity, "integrity defaults on");
+        kv.insert("integrity".into(), "off".into());
+        c.apply(&kv).unwrap();
+        assert!(!c.integrity);
         assert_eq!(c.health.mode, HealthMode::Binary);
         kv.insert("health".into(), "off".into());
         c.apply(&kv).unwrap();
@@ -404,6 +434,14 @@ mod tests {
             ("degrade", "flap:0:0@0-1s"),    // period must be positive
             ("degrade", "wobble:0:1@0-1s"),  // unknown kind
             ("health", "sideways"),
+            ("corrupt", "flip:0:1.5@0-1s"),  // probability out of range
+            ("corrupt", "smear:0:0.1@0-1s"), // unknown kind
+            ("corrupt", "flip:0:0.1"),       // missing window
+            ("integrity", "sideways"),
+            // silently-last-wins duplicates are rejected in every family
+            ("faults", "1@100ms-200ms;1@100ms-200ms"),
+            ("degrade", "loss:1:0.05@0-1s;loss:1:0.05@0-1s"),
+            ("corrupt", "flip:1:0.05@0-1s;flip:1:0.05@0-1s"),
         ] {
             let mut kv = BTreeMap::new();
             kv.insert(key.to_string(), val.to_string());

@@ -1,0 +1,144 @@
+//! Data-plane integrity: window checksums and poison containment.
+//!
+//! The corruption hazard family ([`crate::net::fault::CorruptSchedule`])
+//! models silent wire corruption — the one fault class latency- and
+//! retry-based detectors cannot see. The defense is a per-window checksum
+//! computed on send and verified on merge by every collective core:
+//!
+//! * **Integrity ON** (default): every corrupted delivery is caught by the
+//!   wire checksum inside the timer layer and recharged as a retransmit on
+//!   the unified retry ledger (same accounting path as loss), so a
+//!   persistently-corrupting rail raises `HealthMonitor` suspicion and
+//!   walks the existing Healthy → Degraded → Quarantined → Probation
+//!   machine. The cores' send/verify checksum passes here are the *real
+//!   compute* whose clean-path overhead `BENCH_hotpath.json` records; the
+//!   merge-side verify doubles as a §4.4 atomicity guard (the timing phase
+//!   must never touch payload).
+//! * **Integrity OFF** (ablation): corrupted deliveries arrive silently and
+//!   are queued as pending poison on the rail context; the cores drain the
+//!   queue between timing and numerics and flip payload bits
+//!   deterministically, so the corruption reaches the reduction and the
+//!   fault-free-twin comparison measures the escape rate.
+//!
+//! The checksum is 64-bit FNV-1a over the window's `f32::to_bits` words.
+//! For equal-length windows every absorb step `h -> (h ^ w) * p` is a
+//! bijection in `h` (odd prime, invertible mod 2^64) and in `w`, so two
+//! windows differing in exactly one word — in particular by any single bit
+//! flip — hash differently. That detection guarantee is property-tested up
+//! to 64 MiB windows.
+
+use crate::coordinator::buffer::{NodeWindows, Window};
+use crate::net::simnet::RailTimer;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// 64-bit FNV-1a over the slice's `f32::to_bits` words. Detects every
+/// single-bit flip between equal-length slices (see module docs).
+pub fn checksum(data: &[f32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &x in data {
+        h = (h ^ x.to_bits() as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Send-side checksum of window `w` across every node's payload: the
+/// per-node sums are absorbed in node order, so any single-bit flip in any
+/// node's window changes the result.
+pub fn window_checksum<V: NodeWindows + ?Sized>(buf: &V, w: Window) -> u64 {
+    let mut h = FNV_OFFSET;
+    for n in 0..buf.nodes() {
+        h = (h ^ checksum(buf.window(n, w))).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Merge-side verification: the pre-reduction payload must hash to the
+/// send-side checksum. With integrity on this cannot fail in-model (every
+/// detected corruption was already recharged on the wire), so a mismatch
+/// here means the timing phase mutated payload — a §4.4 atomicity
+/// violation worth crashing on in any build.
+pub fn verify_window<V: NodeWindows + ?Sized>(buf: &V, w: Window, sent: u64) {
+    let got = window_checksum(buf, w);
+    assert_eq!(
+        got, sent,
+        "integrity violation: window payload changed between send and merge"
+    );
+}
+
+/// The mantissa bit silent poison flips: the top fraction bit, so the
+/// upset perturbs any nonzero value by ≥25% of its magnitude and can
+/// never round away below the accumulation ulp of a later reduction —
+/// escapes stay observable at the fault-free-twin comparison.
+const POISON_BIT: u32 = 22;
+
+/// Drain the rail's pending silent-corruption events (nonzero only when
+/// fabric integrity is OFF) and apply them to the window as deterministic
+/// single-bit flips of [`POISON_BIT`], spread across nodes and elements so
+/// repeated events never cancel on the same bit twice in a row. Called by
+/// every collective core between timing and numerics, per §4.4: an aborted
+/// op has already returned before any poison lands.
+pub fn apply_pending_poison<T: RailTimer, V: NodeWindows + ?Sized>(
+    t: &mut T,
+    buf: &mut V,
+    w: Window,
+) {
+    let events = t.drain_corruption();
+    if events == 0 || w.is_empty() {
+        return;
+    }
+    let nodes = buf.nodes();
+    for k in 0..events {
+        let node = (k as usize) % nodes;
+        let idx = (k as usize).wrapping_mul(7919) % w.len;
+        let win = buf.window_mut(node, w);
+        win[idx] = f32::from_bits(win[idx].to_bits() ^ (1 << POISON_BIT));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::buffer::UnboundBuffer;
+
+    #[test]
+    fn checksum_detects_any_single_bit_flip() {
+        let data: Vec<f32> = (0..257).map(|i| (i % 13 + 1) as f32).collect();
+        let base = checksum(&data);
+        for elem in [0, 1, 100, 256] {
+            for bit in [0u32, 1, 7, 22, 31] {
+                let mut d = data.clone();
+                d[elem] = f32::from_bits(d[elem].to_bits() ^ (1 << bit));
+                assert_ne!(checksum(&d), base, "flip elem {elem} bit {bit} undetected");
+            }
+        }
+    }
+
+    #[test]
+    fn checksum_is_length_and_position_sensitive() {
+        assert_ne!(checksum(&[1.0, 2.0]), checksum(&[2.0, 1.0]));
+        assert_ne!(checksum(&[1.0]), checksum(&[1.0, 1.0]));
+        assert_eq!(checksum(&[]), FNV_OFFSET);
+    }
+
+    #[test]
+    fn window_checksum_covers_every_node() {
+        let mk = || UnboundBuffer::from_fn(4, 32, |n, i| ((n + 1) * (i % 13 + 1)) as f32);
+        let a = mk();
+        let w = a.full_window();
+        let base = window_checksum(&a, w);
+        for node in 0..4 {
+            let mut b = mk();
+            let v = b.node_mut(node)[17];
+            b.node_mut(node)[17] = f32::from_bits(v.to_bits() ^ 1);
+            assert_ne!(window_checksum(&b, w), base, "node {node} flip undetected");
+        }
+        // outside the window: invisible
+        let mut c = mk();
+        let sub = Window::new(0, 16);
+        let subsum = window_checksum(&c, sub);
+        c.node_mut(0)[20] = 999.0;
+        assert_eq!(window_checksum(&c, sub), subsum);
+    }
+}

@@ -10,10 +10,12 @@
 //! large-payload *timing* sweeps (benches) can run on small real buffers;
 //! the default of 4.0 (f32) keeps time and data exactly coupled.
 
+pub mod integrity;
 pub mod reducer;
 pub mod ring;
 pub mod tree;
 
+pub use integrity::{checksum, window_checksum};
 pub use reducer::{Reducer, RustReducer};
 pub use ring::{ring_allreduce, ring_chunked_allreduce};
 pub use tree::tree_allreduce;

@@ -18,6 +18,7 @@
 //! implementation, so the two paths cannot diverge.
 
 use crate::coordinator::buffer::{NodeWindows, UnboundBuffer, Window};
+use crate::coordinator::collective::integrity;
 use crate::coordinator::collective::reducer::Reducer;
 use crate::coordinator::collective::{OpOutcome, OpScratch};
 use crate::net::simnet::{Fabric, RailDown, RailTimer};
@@ -134,12 +135,17 @@ pub fn ring_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
     debug_assert_eq!(buf.nodes(), n);
     let steps = 2 * (n - 1);
     let seg_bytes = (w.len as f64 / n as f64).ceil() * elem_bytes;
+    let sent = t.integrity_on().then(|| integrity::window_checksum(buf, w));
     // time first: if the rail dies mid-operation the payload must NOT have
     // been half-reduced (packet-level atomicity, §4.4)
     let mut total = 0.0;
     for _ in 0..steps {
         let dt = t.ring_step(seg_bytes)?;
         total += dt;
+    }
+    integrity::apply_pending_poison(t, buf, w);
+    if let Some(sum) = sent {
+        integrity::verify_window(buf, w, sum);
     }
     w.split_uniform_into(n, &mut scratch.segs);
     ring_numerics_segs(buf, &scratch.segs, red);
@@ -210,6 +216,7 @@ pub fn ring_chunked_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
     w.split_chunks_into(chunk_elems.max(1), &mut scratch.chunks);
     let rounds = 2 * (n - 1) + scratch.chunks.len() - 1;
     let seg_bytes = |c: Window| (c.len as f64 / n as f64).ceil() * elem_bytes;
+    let sent = t.integrity_on().then(|| integrity::window_checksum(buf, w));
     let mut total = 0.0;
     let mut moved = 0.0;
     let first = seg_bytes(scratch.chunks[0]);
@@ -221,6 +228,10 @@ pub fn ring_chunked_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
         let b = seg_bytes(*c);
         total += t.ring_step(b)?;
         moved += b;
+    }
+    integrity::apply_pending_poison(t, buf, w);
+    if let Some(sum) = sent {
+        integrity::verify_window(buf, w, sum);
     }
     for c in &scratch.chunks {
         c.split_uniform_into(n, &mut scratch.segs);

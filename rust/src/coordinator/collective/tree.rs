@@ -6,6 +6,7 @@
 //! and completion time is nearly node-count independent.
 
 use crate::coordinator::buffer::{NodeWindows, UnboundBuffer, Window};
+use crate::coordinator::collective::integrity;
 use crate::coordinator::collective::reducer::Reducer;
 use crate::coordinator::collective::{OpOutcome, OpScratch};
 use crate::net::simnet::{Fabric, RailDown, RailTimer};
@@ -51,8 +52,13 @@ pub fn tree_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
     scratch: &mut OpScratch,
 ) -> Result<OpOutcome, RailDown> {
     let bytes = w.len as f64 * elem_bytes;
+    let sent = t.integrity_on().then(|| integrity::window_checksum(buf, w));
     // timing first — atomicity on failure (§4.4)
     let time = t.tree_round(bytes)?;
+    integrity::apply_pending_poison(t, buf, w);
+    if let Some(sum) = sent {
+        integrity::verify_window(buf, w, sum);
+    }
 
     // switch aggregation: reduce all node windows into the scratch buffer
     // (copy-then-fold, bit-identical to the Reducer::reduce_n default)...

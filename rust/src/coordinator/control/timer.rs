@@ -90,6 +90,24 @@ impl Timer {
         self.accs.remove(&(rail, size_bucket(bytes)));
     }
 
+    /// Warm-start repricing through a membership rebind: the collective
+    /// round count scales with the node count (a ring runs `2(n-1)`
+    /// rounds), so carried windows are rescaled by `factor` (new rounds /
+    /// old rounds) instead of being wiped — every surviving rail keeps a
+    /// live prior priced for the new membership and re-converges from it
+    /// rather than from cold. Both the reported window averages and the
+    /// in-flight accumulation scale; lifetime op counts are history and
+    /// stay.
+    pub fn rescale(&mut self, factor: f64) {
+        debug_assert!(factor.is_finite() && factor > 0.0);
+        for acc in self.accs.values_mut() {
+            acc.sum *= factor;
+            if let Some(r) = acc.reported.as_mut() {
+                *r *= factor;
+            }
+        }
+    }
+
     /// The averaging window length (paper default: 100).
     pub fn window(&self) -> usize {
         self.window
@@ -150,6 +168,19 @@ mod tests {
         assert!(t.cost(0, 1024).is_none());
         assert_eq!(t.cost(0, 4096), Some(9.0));
         assert_eq!(t.window(), 1);
+    }
+
+    #[test]
+    fn rescale_reprices_reported_and_running_windows() {
+        let mut t = Timer::new(2);
+        t.record(0, 1024, 100.0);
+        t.record(0, 1024, 200.0); // reported = 150
+        t.record(0, 4096, 80.0); // running only
+        t.rescale(0.5);
+        assert_eq!(t.cost(0, 1024), Some(75.0));
+        assert_eq!(t.cost(0, 4096), Some(40.0));
+        assert!(t.warmed_up(0, 1024), "warm state survives the repricing");
+        assert_eq!(t.total_ops(0), 3, "lifetime counts are history, not priced");
     }
 
     #[test]

@@ -50,7 +50,9 @@ use crate::coordinator::planner::{
 };
 use crate::coordinator::transport::Rendezvous;
 use crate::net::cpu_pool::{CpuPool, ExecMode, RailExecutor};
-use crate::net::fault::{DegradeSchedule, FaultSchedule, MembershipEvent, MembershipSchedule};
+use crate::net::fault::{
+    CorruptSchedule, DegradeSchedule, FaultSchedule, MembershipEvent, MembershipSchedule,
+};
 use crate::net::rail::RailHealth;
 use crate::net::simnet::{Fabric, RailDown};
 use crate::net::topology::TopologyTree;
@@ -345,6 +347,10 @@ impl MultiRail {
         if !cfg.degrade.is_empty() {
             fab = fab.with_degrade(cfg.degrade.clone());
         }
+        if !cfg.corrupt.is_empty() {
+            fab = fab.with_corrupt(cfg.corrupt.clone());
+        }
+        fab = fab.with_integrity(cfg.integrity);
         let rendezvous = (0..n_rails)
             .map(|r| Rendezvous::full_mesh(r, cfg.nodes))
             .collect();
@@ -411,6 +417,21 @@ impl MultiRail {
     /// [`crate::net::fault::DegradeSchedule`]).
     pub fn with_degrade(mut self, degrade: DegradeSchedule) -> Self {
         self.fab.set_degrade(degrade);
+        self
+    }
+
+    /// Attach a silent-corruption schedule (bit-flip / duplicate /
+    /// truncate / stuck-at windows — see
+    /// [`crate::net::fault::CorruptSchedule`]).
+    pub fn with_corrupt(mut self, corrupt: CorruptSchedule) -> Self {
+        self.fab.set_corrupt(corrupt);
+        self
+    }
+
+    /// Enable or disable the checksum-verified data plane (default on);
+    /// off is the escape-rate ablation baseline.
+    pub fn with_integrity(mut self, on: bool) -> Self {
+        self.fab = self.fab.with_integrity(on);
         self
     }
 
@@ -527,6 +548,7 @@ impl MultiRail {
             u64::MAX
         };
         self.exceptions.set_rail_mask(self.rail_allow_mask);
+        let prev_nodes = self.fab.nodes;
         self.fab.set_nodes(survivors);
         self.rendezvous = (0..n_rails)
             .map(|r| Rendezvous::full_mesh(r, survivors))
@@ -536,10 +558,17 @@ impl MultiRail {
         // links/groups at the next op instead of replaying stale
         // candidates
         self.planner.rebind_membership(topo, self.membership_epoch);
-        // reprime the measurement layer: every (rail, size-class) round
-        // count changed with the node count, so old windows/corrections
-        // would mis-price every candidate
-        self.timer = Timer::new(self.timer.window());
+        // warm-start rebinding: the per-(rail, size-class) round count
+        // scaled with the node count (a ring runs 2(n-1) rounds), so the
+        // carried Timer windows are repriced by the round ratio instead of
+        // being wiped — surviving rails keep live priors through the
+        // rebind and re-converge from them. Corrections are
+        // model-vs-measured residuals against a baseline that just
+        // changed, so those still clear and re-learn.
+        if prev_nodes > 1 {
+            self.timer
+                .rescale((survivors - 1) as f64 / (prev_nodes - 1) as f64);
+        }
         self.planner.corrections.clear();
         // epoch-keyed invalidation: only current-epoch entries survive
         // (none do right after a bump — the keying also bounds cache
@@ -2313,6 +2342,106 @@ mod tests {
         let mut buf = make(4, 1 << 20);
         mr.allreduce(&mut buf).unwrap();
         reduced_ok(&buf, 4, 1 << 20);
+    }
+
+    #[test]
+    fn corruption_storm_quarantines_rail_and_stays_bit_exact() {
+        // integrity ON: persistent corruption is recharged on the unified
+        // retry ledger, so suspicion escalates the rail through the SAME
+        // Healthy → Degraded → Quarantined machine a loss storm rides —
+        // no corruption-specific recovery path — while numerics stay
+        // bit-exact vs a fault-free twin
+        let cfgv = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        let mut mr = MultiRail::new(&cfgv)
+            .unwrap()
+            .with_corrupt(CorruptSchedule::none().flip(1, 0.0, 1e12, 0.2));
+        let mut twin = MultiRail::new(&cfgv).unwrap();
+        let len = 2 * 1024 * 1024;
+        for op in 0..8 {
+            let mut buf = make(4, len);
+            let mut clean = make(4, len);
+            mr.allreduce(&mut buf).unwrap();
+            twin.allreduce(&mut clean).unwrap();
+            for n in 0..4 {
+                assert_eq!(buf.node(n), clean.node(n), "op {op} node {n} diverged");
+            }
+            reduced_ok(&buf, 4, len);
+        }
+        assert!(mr.fab.corruptions_on(1) > 0, "the injector must actually fire");
+        assert!(
+            mr.monitor
+                .transitions()
+                .iter()
+                .any(|t| t.rail == 1 && t.to == RailHealth::Quarantined),
+            "a corruption storm must quarantine the rail: {:?}",
+            mr.monitor.transitions()
+        );
+        assert_eq!(mr.monitor.transition_count(0), 0, "the clean rail must not flap");
+        assert!(
+            mr.monitor.transition_count(1) <= 12,
+            "dwell backoff must bound oscillation: {:?}",
+            mr.monitor.transitions()
+        );
+    }
+
+    #[test]
+    fn corruption_without_integrity_poisons_the_reduction() {
+        // integrity OFF: the same schedule escapes the wire checks and
+        // reaches the numerics — the ablation's measurable escape
+        let cfgv = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        let mut mr = MultiRail::new(&cfgv)
+            .unwrap()
+            .with_corrupt(CorruptSchedule::none().flip(1, 0.0, 1e12, 0.5))
+            .with_integrity(false);
+        let mut twin = MultiRail::new(&cfgv).unwrap();
+        let len = 2 * 1024 * 1024;
+        let mut diverged = false;
+        for _ in 0..4 {
+            let mut buf = make(4, len);
+            let mut clean = make(4, len);
+            mr.allreduce(&mut buf).unwrap();
+            twin.allreduce(&mut clean).unwrap();
+            if (0..4).any(|n| buf.node(n) != clean.node(n)) {
+                diverged = true;
+            }
+        }
+        assert!(mr.fab.corruptions_on(1) > 0, "the injector must actually fire");
+        assert!(diverged, "unchecked corruption must reach the reduced values");
+        // silent: nothing hit the unified retry ledger, so the monitor
+        // never saw the rail misbehave
+        assert_eq!(mr.fab.retries_on(1), 0);
+    }
+
+    #[test]
+    fn rebind_carries_timer_windows_warm() {
+        // warm-start rebinding (PR 7 follow-on): a membership rebind
+        // reprices the carried Timer windows by the round ratio instead of
+        // wiping them — the surviving set keeps live priors
+        let cfgv = cfg(&[ProtoKind::Tcp], 8, Policy::SingleRail);
+        let mut mr = MultiRail::new(&cfgv).unwrap();
+        let len = 1 << 20; // 4MB, all on rail 0
+        for _ in 0..4 {
+            mr.allreduce(&mut make(8, len)).unwrap();
+        }
+        let class = (len as u64) * 4;
+        let before = mr.timer.cost(0, class).expect("warm-up must price the class");
+        let ops = mr.timer.total_ops(0);
+        assert!(ops > 0);
+        mr.node_leave(7).unwrap();
+        let after = mr
+            .timer
+            .cost(0, class)
+            .expect("the window must survive the rebind");
+        let expect = before * 6.0 / 7.0; // 2(n-1)-round ratio: 8 -> 7 nodes
+        assert!(
+            (after - expect).abs() < 1e-6 * before,
+            "carried window must be repriced by the round ratio: before {before} after {after}"
+        );
+        assert_eq!(mr.timer.total_ops(0), ops, "history carried, not wiped");
+        // the carried prior keeps pricing ops for the surviving set
+        let mut buf = make(7, len);
+        mr.allreduce(&mut buf).unwrap();
+        reduced_ok(&buf, 7, len);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! schedule family.
 
 use crate::coordinator::buffer::{NodeWindows, UnboundBuffer, Window};
+use crate::coordinator::collective::integrity;
 use crate::coordinator::collective::reducer::Reducer;
 use crate::coordinator::collective::ring::ring_numerics_segs;
 use crate::coordinator::collective::{OpOutcome, OpScratch};
@@ -60,6 +61,7 @@ pub fn halving_doubling_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
         return Ok(OpOutcome::default());
     }
     let bytes = w.len as f64 * elem_bytes;
+    let sent = t.integrity_on().then(|| integrity::window_checksum(buf, w));
     let mut total = 0.0;
     let mut moved = 0.0;
     let mut steps = 0;
@@ -73,6 +75,10 @@ pub fn halving_doubling_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
         moved += 2.0 * b;
         steps += 2;
         divisor *= 2.0;
+    }
+    integrity::apply_pending_poison(t, buf, w);
+    if let Some(sum) = sent {
+        integrity::verify_window(buf, w, sum);
     }
     w.split_uniform_into(n, &mut scratch.segs);
     ring_numerics_segs(buf, &scratch.segs, red);
@@ -135,6 +141,7 @@ pub fn two_level_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
     let groups = n / g;
     let chunks = chunks.max(1);
     let bytes = w.len as f64 * elem_bytes;
+    let sent = t.integrity_on().then(|| integrity::window_checksum(buf, w));
 
     // intra-group phases are local-fabric only: deterministic, cannot fail
     let mut total = 2.0 * cost::intra_phase_us(intra, bytes);
@@ -147,6 +154,10 @@ pub fn two_level_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
     let msg = volume / rounds as f64;
     for _ in 0..rounds {
         total += t.ring_step(msg)?;
+    }
+    integrity::apply_pending_poison(t, buf, w);
+    if let Some(sum) = sent {
+        integrity::verify_window(buf, w, sum);
     }
     w.split_uniform_into(n, &mut scratch.segs);
     ring_numerics_segs(buf, &scratch.segs, red);
@@ -234,6 +245,7 @@ pub fn multi_level_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
     debug_assert!(tree.valid_cut_depth(depth, n), "caller must validate the cut");
     let depth = depth.min(tree.depth());
     let bytes = w.len as f64 * elem_bytes;
+    let sent = t.integrity_on().then(|| integrity::window_checksum(buf, w));
     // per-level phases ride the local fabrics: deterministic, cannot fail
     let mut total = 0.0;
     let mut steps = 0usize;
@@ -255,6 +267,10 @@ pub fn multi_level_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
         }
         moved = msg * rounds as f64;
         steps += rounds;
+    }
+    integrity::apply_pending_poison(t, buf, w);
+    if let Some(sum) = sent {
+        integrity::verify_window(buf, w, sum);
     }
     w.split_uniform_into(n, &mut scratch.segs);
     ring_numerics_segs(buf, &scratch.segs, red);

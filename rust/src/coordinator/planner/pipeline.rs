@@ -9,6 +9,7 @@
 //! trainer models that with a bounded overlap credit.
 
 use crate::coordinator::buffer::{NodeWindows, UnboundBuffer, Window};
+use crate::coordinator::collective::integrity;
 use crate::coordinator::collective::reducer::Reducer;
 use crate::coordinator::collective::ring::ring_numerics_segs;
 use crate::coordinator::collective::{OpOutcome, OpScratch};
@@ -79,9 +80,14 @@ pub fn pipelined_ring_allreduce_on<T: RailTimer, V: NodeWindows + ?Sized>(
     let bytes = w.len as f64 * elem_bytes;
     let volume = 2.0 * (n - 1) as f64 * (bytes / n as f64);
     let msg = volume / rounds as f64;
+    let sent = t.integrity_on().then(|| integrity::window_checksum(buf, w));
     let mut total = 0.0;
     for _ in 0..rounds {
         total += t.ring_step(msg)?;
+    }
+    integrity::apply_pending_poison(t, buf, w);
+    if let Some(sum) = sent {
+        integrity::verify_window(buf, w, sum);
     }
     w.split_uniform_into(n, &mut scratch.segs);
     ring_numerics_segs(buf, &scratch.segs, red);

@@ -17,7 +17,7 @@
 use crate::util::error::Error;
 
 /// One rail-down window in virtual time.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FaultWindow {
     pub rail: usize,
     pub start_us: f64,
@@ -262,6 +262,128 @@ impl DegradeSchedule {
     }
 }
 
+/// What a [`CorruptWindow`] does to messages on its rail while active.
+///
+/// Every kind is a *silent* correctness fault: the message arrives on
+/// time (no latency signal, no retry signal of its own) but carries wrong
+/// payload. In the simulation all kinds manifest as per-message
+/// corruption events sampled at `prob` on the rail's deterministic
+/// stream; the kinds exist so campaigns can mix hazard flavors and the
+/// spec layer can audit them precisely. With integrity verification ON
+/// the wire checksum catches the event and charges a retransmit; OFF,
+/// the poisoned payload reaches the reduction (the measurable escape).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CorruptKind {
+    /// Random single-bit flip in the payload, probability per message.
+    BitFlip { prob: f64 },
+    /// Payload duplication (a stale segment replayed over a fresh one).
+    Duplicate { prob: f64 },
+    /// Payload truncation (tail of the message dropped, junk merged).
+    Truncate { prob: f64 },
+    /// Stuck-at corruption (a lane wedged at a constant value).
+    StuckAt { prob: f64 },
+}
+
+impl CorruptKind {
+    /// Per-message corruption probability of this kind.
+    pub fn prob(&self) -> f64 {
+        match *self {
+            CorruptKind::BitFlip { prob }
+            | CorruptKind::Duplicate { prob }
+            | CorruptKind::Truncate { prob }
+            | CorruptKind::StuckAt { prob } => prob,
+        }
+    }
+}
+
+/// One silent-corruption window in virtual time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CorruptWindow {
+    pub rail: usize,
+    pub start_us: f64,
+    pub end_us: f64,
+    pub kind: CorruptKind,
+}
+
+impl CorruptWindow {
+    fn active(&self, rail: usize, t_us: f64) -> bool {
+        self.rail == rail && t_us >= self.start_us && t_us < self.end_us
+    }
+}
+
+/// Schedule of silent-corruption windows, queried by the fabric at the
+/// (frozen, per-op) virtual clock exactly like [`DegradeSchedule`].
+/// Overlapping windows compose as independent corruption sources:
+/// `1 - Π(1 - prob)`.
+#[derive(Debug, Clone, Default)]
+pub struct CorruptSchedule {
+    windows: Vec<CorruptWindow>,
+}
+
+impl CorruptSchedule {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Add a bit-flip window (builder form).
+    pub fn flip(mut self, rail: usize, start_us: f64, end_us: f64, prob: f64) -> Self {
+        self.push(rail, start_us, end_us, CorruptKind::BitFlip { prob });
+        self
+    }
+
+    /// Add a payload-duplication window (builder form).
+    pub fn dup(mut self, rail: usize, start_us: f64, end_us: f64, prob: f64) -> Self {
+        self.push(rail, start_us, end_us, CorruptKind::Duplicate { prob });
+        self
+    }
+
+    /// Add a payload-truncation window (builder form).
+    pub fn trunc(mut self, rail: usize, start_us: f64, end_us: f64, prob: f64) -> Self {
+        self.push(rail, start_us, end_us, CorruptKind::Truncate { prob });
+        self
+    }
+
+    /// Add a stuck-at window (builder form).
+    pub fn stuck(mut self, rail: usize, start_us: f64, end_us: f64, prob: f64) -> Self {
+        self.push(rail, start_us, end_us, CorruptKind::StuckAt { prob });
+        self
+    }
+
+    fn push(&mut self, rail: usize, start_us: f64, end_us: f64, kind: CorruptKind) {
+        assert!(end_us > start_us, "corrupt window must be non-empty");
+        assert!(
+            (0.0..1.0).contains(&kind.prob()),
+            "corruption probability must be in [0,1)"
+        );
+        self.windows.push(CorruptWindow { rail, start_us, end_us, kind });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    pub fn windows(&self) -> &[CorruptWindow] {
+        &self.windows
+    }
+
+    /// Effective per-message corruption probability on `rail` at `t_us` —
+    /// overlapping windows corrupt independently: `1 - Π(1 - prob)`.
+    pub fn corrupt_at(&self, rail: usize, t_us: f64) -> f64 {
+        let mut keep = 1.0;
+        for w in &self.windows {
+            if w.active(rail, t_us) {
+                keep *= 1.0 - w.kind.prob();
+            }
+        }
+        1.0 - keep
+    }
+
+    /// Any corruption window active on `rail` at `t_us`?
+    pub fn active_on(&self, rail: usize, t_us: f64) -> bool {
+        self.windows.iter().any(|w| w.active(rail, t_us))
+    }
+}
+
 /// Parse a duration with `us`/`ms`/`s`/`min` suffix (plain numbers are
 /// microseconds): `"150ms"` → `150_000.0`.
 pub fn parse_duration_us(s: &str) -> crate::Result<f64> {
@@ -322,6 +444,16 @@ pub fn parse_faults(spec: &str) -> crate::Result<FaultSchedule> {
             .ok_or_else(|| Error::Config(format!("'{part}': fault must be rail@start-end")))?;
         let rail = parse_rail(rail, part)?;
         let (start, end) = parse_span(span, part)?;
+        let wdw = FaultWindow { rail, start_us: start, end_us: end };
+        // a repeated identical term is almost always a copy-paste slip in
+        // a long spec; silently accepting it would double nothing here but
+        // would silently last-win in keyed stores — reject it precisely
+        if out.windows.contains(&wdw) {
+            return Err(Error::Config(format!(
+                "'{part}': duplicate fault window for rail {rail} (identical rail and span \
+                 already declared earlier in the spec)"
+            )));
+        }
         out = out.with(rail, start, end);
     }
     Ok(out)
@@ -349,14 +481,14 @@ pub fn parse_degrade(spec: &str) -> crate::Result<DegradeSchedule> {
         let (start, end) = parse_span(span, part)?;
         let fields: Vec<&str> = head.split(':').map(str::trim).collect();
         let bad = |what: &str| Error::Config(format!("'{part}': {what}"));
-        match fields.as_slice() {
+        let (rail, kind) = match fields.as_slice() {
             ["loss", rail, rate] => {
                 let rail = parse_rail(rail, part)?;
                 let rate: f64 = rate.parse().map_err(|_| bad("bad loss rate"))?;
                 if !(0.0..1.0).contains(&rate) {
                     return Err(bad("loss rate must be in [0,1)"));
                 }
-                out = out.loss(rail, start, end, rate);
+                (rail, DegradeKind::Loss { rate })
             }
             ["brownout", rail, factor] => {
                 let rail = parse_rail(rail, part)?;
@@ -364,7 +496,7 @@ pub fn parse_degrade(spec: &str) -> crate::Result<DegradeSchedule> {
                 if !(factor > 0.0 && factor <= 1.0) {
                     return Err(bad("brownout factor must be in (0,1]"));
                 }
-                out = out.brownout(rail, start, end, factor);
+                (rail, DegradeKind::Brownout { factor })
             }
             ["flap", rail, period] => {
                 let rail = parse_rail(rail, part)?;
@@ -372,11 +504,11 @@ pub fn parse_degrade(spec: &str) -> crate::Result<DegradeSchedule> {
                 if period <= 0.0 {
                     return Err(bad("flap period must be positive"));
                 }
-                out = out.flap(rail, start, end, period);
+                (rail, DegradeKind::Flap { period_us: period })
             }
             ["stall", rail, stall] => {
                 let rail = parse_rail(rail, part)?;
-                out = out.stall(rail, start, end, parse_duration_us(stall)?, 0.0);
+                (rail, DegradeKind::Stall { stall_us: parse_duration_us(stall)?, sigma: 0.0 })
             }
             ["stall", rail, stall, sigma] => {
                 let rail = parse_rail(rail, part)?;
@@ -384,10 +516,72 @@ pub fn parse_degrade(spec: &str) -> crate::Result<DegradeSchedule> {
                 if sigma < 0.0 {
                     return Err(bad("stall sigma must be >= 0"));
                 }
-                out = out.stall(rail, start, end, parse_duration_us(stall)?, sigma);
+                (rail, DegradeKind::Stall { stall_us: parse_duration_us(stall)?, sigma })
             }
             _ => return Err(bad("unknown degrade kind (loss/brownout/flap/stall)")),
+        };
+        let wdw = DegradeWindow { rail, start_us: start, end_us: end, kind };
+        // overlapping DISTINCT windows compose by design; an identical
+        // repeated term is a spec slip — the compose rules would silently
+        // square its effect (loss/brownout) instead of last-winning
+        if out.windows.contains(&wdw) {
+            return Err(Error::Config(format!(
+                "'{part}': duplicate degrade term for rail {rail} (identical kind, params \
+                 and span already declared earlier in the spec)"
+            )));
         }
+        out.windows.push(wdw);
+    }
+    Ok(out)
+}
+
+/// Parse a silent-corruption spec string (the `corrupt=` config key):
+/// `kind:rail:prob@start-end` terms joined by `;`, where kind is one of
+/// - `flip:RAIL:PROB` — per-message single-bit-flip probability,
+/// - `dup:RAIL:PROB` — payload duplication (stale replay),
+/// - `trunc:RAIL:PROB` — payload truncation,
+/// - `stuck:RAIL:PROB` — stuck-at lane corruption.
+///
+/// Example: `"flip:1:0.05@100ms-300ms;stuck:2:0.2@1s-2s"`.
+pub fn parse_corrupt(spec: &str) -> crate::Result<CorruptSchedule> {
+    let spec = spec.trim();
+    if spec.is_empty() || spec == "none" {
+        return Ok(CorruptSchedule::none());
+    }
+    let mut out = CorruptSchedule::none();
+    for part in spec.split(';').filter(|p| !p.trim().is_empty()) {
+        let part = part.trim();
+        let (head, span) = part.split_once('@').ok_or_else(|| {
+            Error::Config(format!("'{part}': corrupt must be kind:rail:prob@start-end"))
+        })?;
+        let (start, end) = parse_span(span, part)?;
+        let fields: Vec<&str> = head.split(':').map(str::trim).collect();
+        let bad = |what: &str| Error::Config(format!("'{part}': {what}"));
+        let (rail, kind) = match fields.as_slice() {
+            [kind @ ("flip" | "dup" | "trunc" | "stuck"), rail, prob] => {
+                let rail = parse_rail(rail, part)?;
+                let prob: f64 = prob.parse().map_err(|_| bad("bad corruption probability"))?;
+                if !(0.0..1.0).contains(&prob) {
+                    return Err(bad("corruption probability must be in [0,1)"));
+                }
+                let kind = match *kind {
+                    "flip" => CorruptKind::BitFlip { prob },
+                    "dup" => CorruptKind::Duplicate { prob },
+                    "trunc" => CorruptKind::Truncate { prob },
+                    _ => CorruptKind::StuckAt { prob },
+                };
+                (rail, kind)
+            }
+            _ => return Err(bad("unknown corrupt kind (flip/dup/trunc/stuck)")),
+        };
+        let wdw = CorruptWindow { rail, start_us: start, end_us: end, kind };
+        if out.windows.contains(&wdw) {
+            return Err(Error::Config(format!(
+                "'{part}': duplicate corrupt term for rail {rail} (identical kind, prob \
+                 and span already declared earlier in the spec)"
+            )));
+        }
+        out.windows.push(wdw);
     }
     Ok(out)
 }
@@ -610,6 +804,10 @@ mod tests {
         assert!(parse_faults("1@200ms-100ms").is_err(), "inverted window");
         assert!(parse_faults("x@1-2").is_err(), "bad rail");
         assert!(parse_faults("1:100-200").is_err(), "missing @");
+        // identical repeated terms are rejected, overlap of distinct ones is fine
+        assert!(parse_faults("1@100ms-200ms;1@100ms-200ms").is_err(), "duplicate term");
+        assert!(parse_faults("1@100ms-200ms;1@150ms-250ms").is_ok(), "overlap is legal");
+        assert!(parse_faults("1@100ms-200ms;0@100ms-200ms").is_ok(), "other rail is legal");
     }
 
     #[test]
@@ -627,6 +825,56 @@ mod tests {
         assert!(parse_degrade("brownout:0:0@0-1").is_err(), "zero factor");
         assert!(parse_degrade("fade:0:0.5@0-1").is_err(), "unknown kind");
         assert!(parse_degrade("loss:1:0.1").is_err(), "missing window");
+        // identical repeated terms are rejected, distinct overlaps compose
+        assert!(parse_degrade("loss:1:0.05@0-1s;loss:1:0.05@0-1s").is_err(), "duplicate");
+        assert!(parse_degrade("loss:1:0.05@0-1s;loss:1:0.1@0-1s").is_ok(), "distinct rate");
+        assert!(parse_degrade("loss:1:0.05@0-1s;brownout:1:0.5@0-1s").is_ok(), "distinct kind");
+    }
+
+    #[test]
+    fn corrupt_windows_compose_and_expire() {
+        let c = CorruptSchedule::none()
+            .flip(1, 100.0, 200.0, 0.1)
+            .stuck(1, 150.0, 250.0, 0.5)
+            .dup(0, 0.0, 100.0, 0.2);
+        assert_eq!(c.corrupt_at(1, 99.0), 0.0);
+        assert!((c.corrupt_at(1, 120.0) - 0.1).abs() < 1e-12);
+        // overlapping windows corrupt independently: 1 - 0.9*0.5
+        assert!((c.corrupt_at(1, 180.0) - 0.55).abs() < 1e-12);
+        assert!((c.corrupt_at(1, 220.0) - 0.5).abs() < 1e-12);
+        assert_eq!(c.corrupt_at(1, 250.0), 0.0);
+        assert!((c.corrupt_at(0, 50.0) - 0.2).abs() < 1e-12);
+        assert!(c.active_on(0, 50.0) && !c.active_on(0, 100.0));
+        assert_eq!(c.windows().len(), 3);
+        assert!(CorruptSchedule::none().is_empty());
+    }
+
+    #[test]
+    fn corrupt_spec_round_trip() {
+        let c = parse_corrupt(
+            "flip:1:0.05@100ms-300ms;dup:0:0.2@1s-2s;trunc:2:0.1@0-1s;stuck:1:0.3@3s-4s",
+        )
+        .unwrap();
+        assert!((c.corrupt_at(1, 200_000.0) - 0.05).abs() < 1e-12);
+        assert!((c.corrupt_at(0, 1.5e6) - 0.2).abs() < 1e-12);
+        assert!((c.corrupt_at(2, 500_000.0) - 0.1).abs() < 1e-12);
+        assert!((c.corrupt_at(1, 3.5e6) - 0.3).abs() < 1e-12);
+        assert_eq!(
+            c.windows()[0].kind,
+            CorruptKind::BitFlip { prob: 0.05 },
+            "kinds survive the round trip"
+        );
+        assert!(parse_corrupt("none").unwrap().is_empty());
+        assert!(parse_corrupt("").unwrap().is_empty());
+        assert!(parse_corrupt("flip:1:1.5@0-1").is_err(), "prob out of range");
+        assert!(parse_corrupt("smear:1:0.5@0-1").is_err(), "unknown kind");
+        assert!(parse_corrupt("flip:1:0.1").is_err(), "missing window");
+        assert!(parse_corrupt("flip:x:0.1@0-1").is_err(), "bad rail");
+        assert!(parse_corrupt("flip:1:0.1@2s-1s").is_err(), "inverted window");
+        // identical repeated terms are rejected, distinct overlaps compose
+        assert!(parse_corrupt("flip:1:0.1@0-1s;flip:1:0.1@0-1s").is_err(), "duplicate");
+        assert!(parse_corrupt("flip:1:0.1@0-1s;flip:1:0.2@0-1s").is_ok(), "distinct prob");
+        assert!(parse_corrupt("flip:1:0.1@0-1s;stuck:1:0.1@0-1s").is_ok(), "distinct kind");
     }
 
     #[test]

@@ -24,7 +24,7 @@
 //! serial and parallel paths share one implementation by construction.
 
 use crate::net::cpu_pool::{CpuPool, Phase};
-use crate::net::fault::{DegradeSchedule, FaultSchedule};
+use crate::net::fault::{CorruptSchedule, DegradeSchedule, FaultSchedule};
 use crate::net::protocol::CollectiveKind;
 use crate::net::rail::{Rail, RailHealth};
 use crate::util::rng::Pcg;
@@ -93,6 +93,16 @@ pub struct Fabric {
     /// Like the fault schedule it is environmental — queried at the per-op
     /// frozen clock, invisible to the analytic model paths.
     pub degrade: DegradeSchedule,
+    /// Silent-corruption schedule: bit-flip/duplicate/truncate/stuck-at
+    /// windows. Environmental like the degrade schedule; sampled on the
+    /// per-rail streams at the per-op frozen clock.
+    pub corrupt: CorruptSchedule,
+    /// Checksum-verified data plane on/off (default ON). With integrity
+    /// on, every corrupted arrival is caught at the merge and recharged as
+    /// a retransmit on the unified retry ledger; off, corruption is silent
+    /// — it arrives on time and the poisoned payload reaches the
+    /// reduction (the measurable escape the ablation quantifies).
+    pub integrity: bool,
     /// Injected per-rail stragglers (unmodeled per-message stalls) — the
     /// source of truth behind `stall_table`.
     stragglers: Vec<Straggler>,
@@ -123,6 +133,10 @@ pub struct Fabric {
     /// the `HealthMonitor`'s per-op suspicion input (it consumes deltas).
     /// Deterministic per-rail counts, so serial and parallel agree.
     retries: Vec<u64>,
+    /// Cumulative corruption events sampled per rail (detected or not) —
+    /// the injection ledger the ablation's detection rate divides by.
+    /// Deterministic per-rail counts, so serial and parallel agree.
+    corruptions: Vec<u64>,
 }
 
 impl Fabric {
@@ -141,6 +155,8 @@ impl Fabric {
             cpu,
             faults: FaultSchedule::none(),
             degrade: DegradeSchedule::none(),
+            corrupt: CorruptSchedule::none(),
+            integrity: true,
             stragglers: Vec::new(),
             stall_table: vec![RailStall::default(); n_rails],
             clock_us: 0.0,
@@ -156,6 +172,7 @@ impl Fabric {
             shares: vec![1.0; n_rails],
             occupancy: vec![0.0; n_rails],
             retries: vec![0; n_rails],
+            corruptions: vec![0; n_rails],
         }
     }
 
@@ -202,10 +219,35 @@ impl Fabric {
         self.degrade = degrade;
     }
 
+    /// Builder form of [`Fabric::set_corrupt`].
+    pub fn with_corrupt(mut self, corrupt: CorruptSchedule) -> Fabric {
+        self.corrupt = corrupt;
+        self
+    }
+
+    /// Install a silent-corruption schedule (bit flips, duplication,
+    /// truncation, stuck-at lanes).
+    pub fn set_corrupt(&mut self, corrupt: CorruptSchedule) {
+        self.corrupt = corrupt;
+    }
+
+    /// Builder: enable/disable the checksum-verified data plane
+    /// (default on).
+    pub fn with_integrity(mut self, on: bool) -> Fabric {
+        self.integrity = on;
+        self
+    }
+
     /// Cumulative retransmit attempts charged on `rail` by the loss
     /// model since construction.
     pub fn retries_on(&self, rail: usize) -> u64 {
         self.retries[rail]
+    }
+
+    /// Cumulative corruption events sampled on `rail` since construction
+    /// (detected-and-recharged under integrity, silently escaped without).
+    pub fn corruptions_on(&self, rail: usize) -> u64 {
+        self.corruptions[rail]
     }
 
     /// Builder form of [`Fabric::inject_straggler`].
@@ -439,6 +481,9 @@ impl Fabric {
             loss: self.degrade.loss_at(rail, self.clock_us),
             brownout: self.degrade.brownout_at(rail, self.clock_us),
             win_stall_us: self.degrade.stall_det_us(rail, self.clock_us),
+            corrupt_p: self.corrupt.corrupt_at(rail, self.clock_us),
+            integrity: self.integrity,
+            pending_poison: 0,
             nodes: self.nodes,
             clock_us: self.clock_us,
             jitter_sigma: self.jitter_sigma,
@@ -447,6 +492,7 @@ impl Fabric {
             share: self.shares[rail],
             busy_us: &mut self.occupancy[rail],
             retries: &mut self.retries[rail],
+            corruptions: &mut self.corruptions[rail],
         }
     }
 
@@ -465,8 +511,10 @@ impl Fabric {
         let jitter_sigma = self.jitter_sigma;
         let faults = &self.faults;
         let degrade = &self.degrade;
+        let corrupt = &self.corrupt;
+        let integrity = self.integrity;
         let mut out = Vec::with_capacity(wanted.len());
-        for (((((i, state), stream), stall), busy), retries) in self
+        for ((((((i, state), stream), stall), busy), retries), corruptions) in self
             .rails
             .iter_mut()
             .enumerate()
@@ -474,6 +522,7 @@ impl Fabric {
             .zip(self.stall_table.iter())
             .zip(self.occupancy.iter_mut())
             .zip(self.retries.iter_mut())
+            .zip(self.corruptions.iter_mut())
         {
             if !wanted.contains(&i) {
                 continue;
@@ -488,6 +537,9 @@ impl Fabric {
                 loss: degrade.loss_at(i, clock_us),
                 brownout: degrade.brownout_at(i, clock_us),
                 win_stall_us: degrade.stall_det_us(i, clock_us),
+                corrupt_p: corrupt.corrupt_at(i, clock_us),
+                integrity,
+                pending_poison: 0,
                 nodes,
                 clock_us,
                 jitter_sigma,
@@ -496,6 +548,7 @@ impl Fabric {
                 share: self.shares[i],
                 busy_us: busy,
                 retries,
+                corruptions,
             });
         }
         out
@@ -534,6 +587,22 @@ pub trait RailTimer {
     fn ring_step(&mut self, bytes: f64) -> Result<f64, RailDown>;
     /// One in-network aggregation traversal of `bytes`.
     fn tree_round(&mut self, bytes: f64) -> Result<f64, RailDown>;
+    /// Is the checksum-verified data plane active on this timer? Cores
+    /// compute/verify the per-window checksum only when it is (the
+    /// clean-path overhead the hot-path bench records). Default: off —
+    /// only [`RailCtx`] carries a fabric integrity setting.
+    fn integrity_on(&self) -> bool {
+        false
+    }
+    /// Take the corruption events that escaped wire verification during
+    /// the timing calls since the last drain (nonzero only when the
+    /// fabric's integrity verification is OFF). The collective core
+    /// applies them to the payload between timing and numerics — timing
+    /// always precedes numerics (§4.4), so an aborted op never poisons.
+    /// Default: nothing pending (plain timers never corrupt).
+    fn drain_corruption(&mut self) -> u64 {
+        0
+    }
 }
 
 /// One rail's complete timing state, borrow-split out of the [`Fabric`]:
@@ -560,6 +629,16 @@ pub struct RailCtx<'a> {
     brownout: f64,
     /// Deterministic windowed-stall component active at the frozen clock.
     win_stall_us: f64,
+    /// Per-message silent-corruption probability at the op's frozen clock
+    /// (0 = clean; a clean op draws nothing extra, keeping fault-free
+    /// sequences bit-exactly unchanged).
+    corrupt_p: f64,
+    /// Checksum-verified data plane active (frozen at construction).
+    integrity: bool,
+    /// Corruption events that escaped wire verification (integrity off)
+    /// since the last [`RailTimer::drain_corruption`] — the collective
+    /// core turns these into deterministic payload poison.
+    pending_poison: u64,
     nodes: usize,
     clock_us: f64,
     jitter_sigma: f64,
@@ -572,6 +651,8 @@ pub struct RailCtx<'a> {
     busy_us: &'a mut f64,
     /// This rail's slot in the fabric's retransmit ledger.
     retries: &'a mut u64,
+    /// This rail's slot in the fabric's corruption-injection ledger.
+    corruptions: &'a mut u64,
 }
 
 impl RailCtx<'_> {
@@ -628,6 +709,44 @@ impl RailCtx<'_> {
         Ok(extra)
     }
 
+    /// Sample the silent-corruption outcome for one message whose clean
+    /// time is `msg_us`, drawn from THIS rail's stream (serial ≡ parallel
+    /// bit-exactly; corruption-free ops draw nothing).
+    ///
+    /// With integrity ON every corrupted arrival is caught by the merge
+    /// checksum and recharged exactly like a lost packet — message +
+    /// exponential backoff, counted on the SAME retry ledger the
+    /// `HealthMonitor` scores, with the same [`RETRY_CAP`] blowout into
+    /// the §4.4 crash path (one accounting path, no second ledger). With
+    /// integrity OFF the message arrives on time, costs nothing, and the
+    /// corruption is queued as pending payload poison instead.
+    fn corrupt_extra_us(&mut self, msg_us: f64) -> Result<f64, RailDown> {
+        if self.corrupt_p <= 0.0 {
+            return Ok(0.0);
+        }
+        if !self.integrity {
+            if self.stream.rng.f64() < self.corrupt_p {
+                *self.corruptions += 1;
+                self.pending_poison += 1;
+            }
+            return Ok(0.0);
+        }
+        let mut extra = 0.0;
+        let mut attempt = 0u32;
+        while self.stream.rng.f64() < self.corrupt_p {
+            attempt += 1;
+            if attempt > RETRY_CAP {
+                *self.retries += attempt as u64;
+                *self.corruptions += attempt as u64;
+                return Err(RailDown(self.rail));
+            }
+            extra += msg_us + RETRY_BACKOFF_US * (1u64 << (attempt - 1)) as f64;
+        }
+        *self.retries += attempt as u64;
+        *self.corruptions += attempt as u64;
+        Ok(extra)
+    }
+
     /// Deterministic point-to-point message time (us) at the frozen
     /// resource state.
     pub fn transfer_det_us(&self, bytes: f64) -> f64 {
@@ -663,6 +782,7 @@ impl RailCtx<'_> {
         };
         let mut t = base * j + self.straggler_stall_us();
         t += self.retransmit_extra_us(base * j)?;
+        t += self.corrupt_extra_us(base * j)?;
         Ok(self.charge(t))
     }
 
@@ -701,7 +821,7 @@ impl RailTimer for RailCtx<'_> {
         let degrade = self.degrade;
         let n_stoch =
             self.stall.stoch.len() + degrade.stall_stoch_at(self.rail, self.clock_us).count();
-        if self.jitter_sigma == 0.0 && n_stoch == 0 && self.loss <= 0.0 {
+        if self.jitter_sigma == 0.0 && n_stoch == 0 && self.loss <= 0.0 && self.corrupt_p <= 0.0 {
             return Ok(self.charge(base + det_stall));
         }
         let nodes = self.nodes;
@@ -732,6 +852,16 @@ impl RailTimer for RailCtx<'_> {
                     break;
                 }
             }
+            // corrupted link: checksum-detected corruption pays the same
+            // retransmit shape on the same ledger; a cap blowout likewise
+            // kills the round deterministically
+            match self.corrupt_extra_us(base * j) {
+                Ok(extra) => t += extra,
+                Err(e) => {
+                    down = Some(e);
+                    break;
+                }
+            }
             worst = worst.max(t);
         }
         self.stream.jitter_buf = jit;
@@ -753,7 +883,18 @@ impl RailTimer for RailCtx<'_> {
         };
         let mut t = base * j + self.straggler_stall_us();
         t += self.retransmit_extra_us(base * j)?;
+        t += self.corrupt_extra_us(base * j)?;
         Ok(self.charge(t))
+    }
+
+    fn integrity_on(&self) -> bool {
+        self.integrity
+    }
+
+    fn drain_corruption(&mut self) -> u64 {
+        let n = self.pending_poison;
+        self.pending_poison = 0;
+        n
     }
 }
 
@@ -1143,6 +1284,101 @@ mod tests {
         }
         assert!(died, "retry cap must eventually declare the rail down");
         assert!(f.retries_on(0) > RETRY_CAP as u64);
+    }
+
+    #[test]
+    fn corruption_charges_retransmits_reproducibly() {
+        // integrity ON: every detected corruption is recharged like a lost
+        // packet, on the SAME unified retry ledger (satellite: one
+        // accounting path), plus the injection ledger for the ablation
+        let mk = || dual_tcp(4).with_corrupt(CorruptSchedule::none().flip(0, 0.0, 1e9, 0.3));
+        let (mut a, mut b) = (mk(), mk());
+        let mut retried = false;
+        for _ in 0..32 {
+            let ta = a.transfer(0, MB).unwrap();
+            assert_eq!(ta, b.transfer(0, MB).unwrap());
+            if ta > a.transfer_det_us(0, MB) {
+                retried = true;
+            }
+        }
+        assert!(retried, "0.3 corruption over 32 messages must retransmit at least once");
+        assert_eq!(a.retries_on(0), b.retries_on(0));
+        assert_eq!(a.corruptions_on(0), b.corruptions_on(0));
+        assert!(a.retries_on(0) > 0);
+        assert_eq!(
+            a.retries_on(0),
+            a.corruptions_on(0),
+            "with zero loss, every retry on the unified ledger is a corruption recharge"
+        );
+        // the clean rail drew nothing and charged nothing extra
+        assert_eq!(a.retries_on(1), 0);
+        assert_eq!(a.corruptions_on(1), 0);
+        assert_eq!(a.transfer(1, MB).unwrap(), a.transfer_det_us(1, MB));
+    }
+
+    #[test]
+    fn corruption_without_integrity_is_silent_but_counted() {
+        // integrity OFF: messages arrive on time, nothing hits the retry
+        // ledger, but the injection ledger still counts every event so the
+        // ablation can measure the escape rate
+        let mut f = dual_tcp(4)
+            .with_corrupt(CorruptSchedule::none().flip(0, 0.0, 1e9, 0.5))
+            .with_integrity(false);
+        for _ in 0..32 {
+            assert_eq!(f.transfer(0, MB).unwrap(), f.transfer_det_us(0, MB));
+        }
+        assert_eq!(f.retries_on(0), 0, "silent corruption must not charge retransmits");
+        assert!(f.corruptions_on(0) > 0, "0.5 corruption over 32 messages must inject");
+    }
+
+    #[test]
+    fn zero_corruption_leaves_sequences_bit_exact() {
+        // a schedule whose windows are all elsewhere must not perturb the
+        // RNG stream of an unaffected rail — clean runs stay bit-exact
+        let mk = |sched: CorruptSchedule| {
+            let mut f = dual_tcp(4).with_corrupt(sched);
+            f.jitter_sigma = 0.05;
+            f
+        };
+        let mut clean = mk(CorruptSchedule::none());
+        let mut other = mk(CorruptSchedule::none().flip(1, 0.0, 1e9, 0.5));
+        clean.begin_op();
+        other.begin_op();
+        for _ in 0..8 {
+            assert_eq!(clean.ring_step(0, MB).unwrap(), other.ring_step(0, MB).unwrap());
+        }
+    }
+
+    #[test]
+    fn corruption_retry_cap_blowout_declares_rail_down() {
+        let mut f = dual_tcp(4).with_corrupt(CorruptSchedule::none().stuck(0, 0.0, 1e9, 0.999));
+        // at 99.9% corruption the unified cap is exhausted immediately
+        let mut died = false;
+        for _ in 0..4 {
+            if f.transfer(0, MB).is_err() {
+                died = true;
+                break;
+            }
+        }
+        assert!(died, "corruption recharges must hit the same retry-cap crash path");
+        assert!(f.retries_on(0) > RETRY_CAP as u64);
+    }
+
+    #[test]
+    fn pending_poison_drains_once_per_op() {
+        let mut f = dual_tcp(4)
+            .with_corrupt(CorruptSchedule::none().flip(0, 0.0, 1e9, 0.9))
+            .with_integrity(false);
+        f.begin_op();
+        let mut ctxs = f.rail_ctxs(&[0]);
+        let ctx = &mut ctxs[0];
+        assert!(!ctx.integrity_on());
+        for _ in 0..8 {
+            let _ = ctx.ring_step(MB).unwrap();
+        }
+        let n = ctx.drain_corruption();
+        assert!(n > 0, "0.9 corruption over 8 rounds must queue poison");
+        assert_eq!(ctx.drain_corruption(), 0, "drain must clear the pending queue");
     }
 
     #[test]

@@ -9,9 +9,37 @@
 //! (see `coordinator::planner::pipeline` and `DdpSim`'s bucket
 //! pipelining).
 
-use crate::coordinator::buffer::Window;
+use crate::coordinator::buffer::{NodeWindows, Window};
+use crate::coordinator::collective::integrity;
 use crate::coordinator::multirail::MultiRail;
 use crate::coordinator::planner::CollectivePlan;
+
+/// Per-bucket gradient fingerprint: the integrity checksum of the bucket
+/// payload across every node. Computed on the reduced buffer it is the
+/// trainer-level containment check — corruption that slipped past the
+/// wire checksums (integrity off, or a future hole) still changes the
+/// fingerprint and is caught before the gradient touches weights.
+pub fn bucket_fingerprint<V: NodeWindows + ?Sized>(buf: &V, w: Window) -> u64 {
+    integrity::window_checksum(buf, w)
+}
+
+/// Trainer-level containment guard: expected per-bucket fingerprints from
+/// a fault-free oracle (a twin run with no corruption schedule), plus the
+/// count of buckets that failed the check and were recomputed and
+/// retransmitted over the checksum-verified plane.
+#[derive(Debug, Clone, Default)]
+pub struct BucketGuard {
+    /// Oracle fingerprints, one per bucket op in iteration order.
+    pub expected: Vec<u64>,
+    /// Buckets caught corrupted and recovered this run.
+    pub recomputes: u64,
+}
+
+impl BucketGuard {
+    pub fn new(expected: Vec<u64>) -> BucketGuard {
+        BucketGuard { expected, recomputes: 0 }
+    }
+}
 
 /// Split a flat parameter/gradient vector of `total` elements into fusion
 /// buckets of at most `bucket_elems` elements.

@@ -11,6 +11,7 @@ use crate::config::Config;
 use crate::coordinator::buffer::BufferPool;
 use crate::coordinator::multirail::MultiRail;
 use crate::coordinator::planner::pipeline::{pipelined_total_us, BUCKET_OVERLAP};
+use crate::trainer::bucket::{bucket_fingerprint, BucketGuard};
 use crate::trainer::comm_profile::CommProfile;
 use crate::Result;
 
@@ -36,6 +37,15 @@ pub struct DdpSim {
     /// Recycled staging buffers: every bucket op re-fills one pooled
     /// buffer in place instead of allocating nodes × sim_elems per op.
     pool: BufferPool,
+    /// Trainer-level containment guard: each reduced bucket's gradient
+    /// fingerprint is checked against a fault-free oracle; a mismatch
+    /// triggers a recompute-and-retransmit of that bucket over the
+    /// checksum-verified plane before the gradient touches weights.
+    pub guard: Option<BucketGuard>,
+    /// Fingerprints of the reduced buckets from the most recent
+    /// [`DdpSim::comm_us`] call, in iteration order — a clean run's record
+    /// serves as the guard's oracle.
+    last_fingerprints: Vec<u64>,
 }
 
 impl DdpSim {
@@ -51,7 +61,26 @@ impl DdpSim {
             bucket_pipelining: false,
             sim_elems: 1024,
             pool: BufferPool::new(),
+            guard: None,
+            last_fingerprints: Vec::new(),
         })
+    }
+
+    /// Arm the containment guard with per-bucket oracle fingerprints
+    /// (typically [`DdpSim::last_fingerprints`] of a fault-free twin).
+    pub fn with_fingerprint_guard(mut self, expected: Vec<u64>) -> DdpSim {
+        self.guard = Some(BucketGuard::new(expected));
+        self
+    }
+
+    /// Per-bucket gradient fingerprints from the latest `comm_us` call.
+    pub fn last_fingerprints(&self) -> &[u64] {
+        &self.last_fingerprints
+    }
+
+    /// Buckets the containment guard caught corrupted and recovered.
+    pub fn guard_recomputes(&self) -> u64 {
+        self.guard.as_ref().map(|g| g.recomputes).unwrap_or(0)
     }
 
     /// Enable/disable cross-bucket chunk pipelining.
@@ -76,7 +105,8 @@ impl DdpSim {
     /// (`last_plan` is None there — nothing chunk-pipelines).
     pub fn comm_us(&mut self) -> Result<f64> {
         let mut ops: Vec<(f64, bool)> = Vec::with_capacity(self.profile.ops.len());
-        for &bytes in &self.profile.ops.clone() {
+        self.last_fingerprints.clear();
+        for (op_idx, &bytes) in self.profile.ops.clone().iter().enumerate() {
             // staging buffers track the coordinator's surviving node set,
             // not the configured count — membership churn between buckets
             // shrinks/regrows them transparently (poll first so the
@@ -87,7 +117,33 @@ impl DdpSim {
                 .pool
                 .acquire(nodes, self.sim_elems, |n, i| ((n + i) % 17) as f32);
             let elem_bytes = bytes as f64 / self.sim_elems as f64;
-            let rep = self.mr.allreduce_scaled(&mut buf, elem_bytes)?;
+            let mut rep = self.mr.allreduce_scaled(&mut buf, elem_bytes)?;
+            let mut fp = bucket_fingerprint(&buf, buf.full_window());
+            let want = self
+                .guard
+                .as_ref()
+                .and_then(|g| g.expected.get(op_idx).copied());
+            if want.is_some() && want != Some(fp) {
+                // containment: the reduced gradient diverged from the
+                // fault-free oracle — recompute the bucket from source and
+                // retransmit it with the wire checksums forced on,
+                // charging the retried op's full modeled time
+                self.pool.release(buf);
+                let was_integrity = self.mr.fab.integrity;
+                self.mr.fab.integrity = true;
+                buf = self
+                    .pool
+                    .acquire(nodes, self.sim_elems, |n, i| ((n + i) % 17) as f32);
+                let retry = self.mr.allreduce_scaled(&mut buf, elem_bytes)?;
+                self.mr.fab.integrity = was_integrity;
+                rep.total_us += retry.total_us;
+                self.mr.recycle(retry);
+                fp = bucket_fingerprint(&buf, buf.full_window());
+                if let Some(g) = self.guard.as_mut() {
+                    g.recomputes += 1;
+                }
+            }
+            self.last_fingerprints.push(fp);
             self.pool.release(buf);
             let planned_multirail = self
                 .mr
@@ -302,6 +358,74 @@ mod tests {
         let c2 = sim.comm_us().unwrap();
         assert!(c2 > 0.0);
         assert_eq!(sim.mr.active_nodes(), 3);
+    }
+
+    #[test]
+    fn fingerprint_guard_contains_poisoned_buckets() {
+        use crate::net::fault::CorruptSchedule;
+        // fault-free oracle records the per-bucket gradient fingerprints
+        let mut oracle = DdpSim::new(
+            &cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha),
+            CommProfile::alexnet(),
+            1,
+            32,
+        )
+        .unwrap();
+        oracle.comm_us().unwrap();
+        let expect = oracle.last_fingerprints().to_vec();
+        assert!(!expect.is_empty());
+
+        // corrupted fabric with the wire checksums ablated: poison reaches
+        // the reduction, and only the trainer guard stands before weights
+        let mut c = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        c.corrupt = CorruptSchedule::none().flip(1, 0.0, 1e12, 0.35);
+        c.integrity = false;
+
+        // unguarded twin of the corrupted config diverges from the oracle
+        let mut bare = DdpSim::new(&c, CommProfile::alexnet(), 1, 32).unwrap();
+        bare.comm_us().unwrap();
+        assert_ne!(
+            bare.last_fingerprints(),
+            &expect[..],
+            "silent corruption must poison some reduced bucket"
+        );
+
+        // guarded run: every poisoned bucket is caught, recomputed, and
+        // retransmitted over the checksum-verified plane
+        let mut sim = DdpSim::new(&c, CommProfile::alexnet(), 1, 32)
+            .unwrap()
+            .with_fingerprint_guard(expect.clone());
+        let t = sim.comm_us().unwrap();
+        assert!(t > 0.0);
+        assert!(sim.guard_recomputes() > 0, "poison must trip the guard");
+        assert_eq!(
+            sim.last_fingerprints(),
+            &expect[..],
+            "containment must restore every bucket to the oracle gradient"
+        );
+    }
+
+    #[test]
+    fn fingerprint_guard_is_idle_on_clean_runs() {
+        let mk = || {
+            DdpSim::new(
+                &cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha),
+                CommProfile::vgg11(),
+                1,
+                64,
+            )
+            .unwrap()
+        };
+        let mut oracle = mk();
+        oracle.comm_us().unwrap();
+        let expect = oracle.last_fingerprints().to_vec();
+        let mut guarded = mk().with_fingerprint_guard(expect.clone());
+        let mut plain = mk();
+        let tg = guarded.comm_us().unwrap();
+        let tp = plain.comm_us().unwrap();
+        assert_eq!(guarded.guard_recomputes(), 0, "clean run must not trip");
+        assert_eq!(guarded.last_fingerprints(), &expect[..]);
+        assert_eq!(tg, tp, "an idle guard must not perturb modeled time");
     }
 
     #[test]

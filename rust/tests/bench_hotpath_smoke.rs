@@ -75,6 +75,19 @@ fn hotpath_bench_quick_mode_emits_wellformed_json() {
     assert!(sim.get("modeled_ops").unwrap().as_f64().unwrap() > 0.0);
     assert!(sim.get("ops_per_sec").unwrap().as_f64().unwrap() > 0.0);
 
+    // data-plane integrity: checksum kernel bandwidth + clean-path cost
+    // of the send/verify passes (record, don't gate)
+    let integrity = parsed.get("integrity").unwrap();
+    assert!(integrity.get("checksum_gbps").unwrap().as_f64().unwrap() > 0.0);
+    let on = integrity.get("clean_on_ops_per_sec").unwrap().as_f64().unwrap();
+    let off = integrity.get("clean_off_ops_per_sec").unwrap().as_f64().unwrap();
+    let pct = integrity.get("clean_overhead_pct").unwrap().as_f64().unwrap();
+    assert!(on > 0.0 && off > 0.0, "integrity throughputs must be positive");
+    assert!(
+        (pct - (off / on - 1.0) * 100.0).abs() < 1e-9,
+        "overhead field inconsistent with the recorded throughputs"
+    );
+
     // multi-tenant arbiter sweep: solo vs 2-job vs 4-job aggregate
     // ops/sec (record, don't gate)
     let tenancy = parsed.get("tenancy").unwrap();

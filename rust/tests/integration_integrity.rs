@@ -1,0 +1,209 @@
+//! Integration: end-to-end data-plane integrity (DESIGN.md §12) — seeded
+//! corruption campaigns composed with loss, brownouts, crash windows and
+//! node churn. With the wire checksums on, every campaign must stay
+//! bit-exact vs a fault-free twin, hold the 200 ms recovery budget, and
+//! quarantine the persistently-corrupting rail with bounded oscillation;
+//! with the checksums ablated, the same campaigns must leak a measurable
+//! escape rate. Plus targeted executor-invariance and trainer-guard
+//! containment tests.
+
+use nezha::bench::chaos::{
+    corruption_campaign, run_integrity_campaign, storm_rail, CHAOS_OSC_BOUND,
+};
+use nezha::config::{Config, Policy};
+use nezha::coordinator::buffer::UnboundBuffer;
+use nezha::coordinator::multirail::MultiRail;
+use nezha::net::cpu_pool::ExecMode;
+use nezha::net::fault::CorruptSchedule;
+use nezha::net::protocol::ProtoKind;
+use nezha::net::rail::RailHealth;
+use nezha::trainer::comm_profile::CommProfile;
+use nezha::trainer::ddp::DdpSim;
+
+const SEEDS: [u64; 8] = [1, 2, 3, 5, 8, 13, 21, 34];
+
+fn cfg(exec: ExecMode) -> Config {
+    let mut c = Config {
+        nodes: 4,
+        combo: vec![ProtoKind::Tcp, ProtoKind::Tcp],
+        policy: Policy::Nezha,
+        deterministic: true,
+        ..Config::default()
+    };
+    c.exec = exec;
+    c
+}
+
+fn make(nodes: usize, len: usize) -> UnboundBuffer {
+    UnboundBuffer::from_fn(nodes, len, |n, i| ((n + 1) * (i % 13 + 1)) as f32)
+}
+
+/// The corruption matrix with checksums ON: every seed, both executors,
+/// all integrity invariants.
+#[test]
+fn corruption_campaign_matrix_holds_integrity_invariants() {
+    for &seed in &SEEDS {
+        let c = corruption_campaign(seed);
+        for exec in [ExecMode::Serial, ExecMode::Parallel] {
+            let o = run_integrity_campaign(&c, exec, true).unwrap();
+            assert!(
+                o.bit_exact,
+                "seed {seed} {}: checksummed run diverged from the fault-free twin ({})",
+                o.exec, o.label
+            );
+            assert!(o.injected > 0, "seed {seed} {}: storm must inject ({})", o.exec, o.label);
+            assert!(
+                o.within_budget,
+                "seed {seed} {}: recovery budget blown ({})",
+                o.exec, o.label
+            );
+            assert!(
+                o.storm_quarantined,
+                "seed {seed} {}: persistently-corrupting rail {} never quarantined ({})",
+                o.exec,
+                storm_rail(&c),
+                o.label
+            );
+            assert!(
+                o.max_rail_transitions <= CHAOS_OSC_BOUND,
+                "seed {seed} {}: oscillation {} > {CHAOS_OSC_BOUND} ({})",
+                o.exec, o.max_rail_transitions, o.label
+            );
+        }
+    }
+}
+
+/// The same matrix with checksums ABLATED: poison reaches the reduction
+/// and the measured escape rate is nonzero (per the acceptance criterion),
+/// while the silent path charges no retransmits.
+#[test]
+fn ablated_checksums_leak_measured_escapes() {
+    let mut escaped_total = 0usize;
+    for &seed in &SEEDS {
+        let c = corruption_campaign(seed);
+        for exec in [ExecMode::Serial, ExecMode::Parallel] {
+            let o = run_integrity_campaign(&c, exec, false).unwrap();
+            assert!(o.injected > 0, "seed {seed} {}: storm must inject ({})", o.exec, o.label);
+            escaped_total += o.escaped_ops;
+        }
+    }
+    assert!(
+        escaped_total > 0,
+        "with checksums off, some corrupted op must escape into the reduction"
+    );
+}
+
+/// Corruption sampling rides the per-rail RNG streams: with a storm
+/// active the recharged retransmits — and therefore every modeled time —
+/// are bit-identical between the serial and parallel executors, as are
+/// the unified retry and corruption ledgers.
+#[test]
+fn corruption_retransmits_bit_identical_across_executors() {
+    let corrupt = CorruptSchedule::none().flip(1, 0.0, 1e12, 0.08);
+    let mut serial = MultiRail::new(&cfg(ExecMode::Serial))
+        .unwrap()
+        .with_corrupt(corrupt.clone());
+    let mut parallel = MultiRail::new(&cfg(ExecMode::Parallel))
+        .unwrap()
+        .with_corrupt(corrupt);
+    let len = 1 << 20; // 4MB: hot → both rails
+    for op in 0..6 {
+        let mut bs = make(4, len);
+        let mut bp = make(4, len);
+        let rs = serial.allreduce(&mut bs).unwrap();
+        let rp = parallel.allreduce(&mut bp).unwrap();
+        assert_eq!(rs.total_us, rp.total_us, "op {op}: sampled recharges diverged");
+        for n in 0..4 {
+            assert_eq!(bs.node(n), bp.node(n), "op {op} node {n}");
+        }
+    }
+    assert_eq!(
+        serial.fab.corruptions_on(1),
+        parallel.fab.corruptions_on(1),
+        "corruption ledgers must match"
+    );
+    assert_eq!(
+        serial.fab.retries_on(1),
+        parallel.fab.retries_on(1),
+        "corruption recharges feed the same retry ledger on both executors"
+    );
+    assert!(serial.fab.corruptions_on(1) > 0, "the storm must actually corrupt");
+}
+
+/// Corruption composed with a crash window on the same rail behaves
+/// exactly like the crash alone: a down rail carries nothing, so there is
+/// nothing to corrupt, and the survivors keep the reduction bit-exact.
+#[test]
+fn corrupt_on_crashed_rail_composes_to_down() {
+    let mk = |corrupt: CorruptSchedule| {
+        let mut c = cfg(ExecMode::Serial);
+        c.faults = nezha::net::fault::FaultSchedule::none().with(1, 0.0, 1e12);
+        c.corrupt = corrupt;
+        MultiRail::new(&c).unwrap()
+    };
+    let mut down = mk(CorruptSchedule::none());
+    let mut both = mk(CorruptSchedule::none().flip(1, 0.0, 1e12, 0.5));
+    let len = 1 << 20;
+    for op in 0..4 {
+        let mut a = make(4, len);
+        let mut b = make(4, len);
+        let ra = down.allreduce(&mut a).unwrap();
+        let rb = both.allreduce(&mut b).unwrap();
+        assert_eq!(ra.total_us, rb.total_us, "op {op}");
+        for n in 0..4 {
+            assert_eq!(a.node(n), b.node(n), "op {op} node {n}");
+        }
+    }
+    assert_eq!(both.fab.corruptions_on(1), 0, "a down rail has nothing to corrupt");
+}
+
+/// A persistent storm walks the gray state machine: the rail reaches
+/// Quarantined, every gray action stays inside the 200 ms budget, and
+/// the clean anchor rail never transitions.
+#[test]
+fn storm_rail_quarantined_within_budget() {
+    let mut mr = MultiRail::new(&cfg(ExecMode::Serial))
+        .unwrap()
+        .with_corrupt(CorruptSchedule::none().flip(1, 0.0, 1e12, 0.2));
+    let len = 1 << 20;
+    for _ in 0..8 {
+        let mut buf = make(4, len);
+        mr.allreduce(&mut buf).unwrap();
+    }
+    assert!(
+        mr.monitor
+            .transitions()
+            .iter()
+            .any(|t| t.rail == 1 && t.to == RailHealth::Quarantined),
+        "storm rail must be quarantined: {:?}",
+        mr.monitor.transitions()
+    );
+    assert_eq!(mr.monitor.transition_count(0), 0, "anchor rail must stay Healthy");
+    assert!(mr.exceptions.gray_within_budget(), "quarantine must land inside 200 ms");
+    assert!(mr.exceptions.all_within_budget());
+}
+
+/// Trainer-level containment end to end: with the wire checksums ablated,
+/// the per-bucket fingerprint guard catches the poisoned buckets and its
+/// recompute-and-retransmit fallback restores every bucket to the
+/// fault-free oracle's gradient.
+#[test]
+fn trainer_guard_contains_escaped_corruption() {
+    let mut oracle = DdpSim::new(&cfg(ExecMode::Serial), CommProfile::alexnet(), 1, 32).unwrap();
+    oracle.comm_us().unwrap();
+    let expect = oracle.last_fingerprints().to_vec();
+
+    let mut c = cfg(ExecMode::Serial);
+    c.corrupt = CorruptSchedule::none().flip(1, 0.0, 1e12, 0.35);
+    c.integrity = false;
+    let mut guarded = DdpSim::new(&c, CommProfile::alexnet(), 1, 32)
+        .unwrap()
+        .with_fingerprint_guard(expect.clone());
+    guarded.comm_us().unwrap();
+    assert!(guarded.guard_recomputes() > 0, "poison must trip the guard");
+    assert_eq!(
+        guarded.last_fingerprints(),
+        &expect[..],
+        "containment must restore the oracle gradients"
+    );
+}

@@ -983,3 +983,160 @@ fn prop_parallel_exec_deterministic_across_runs() {
         assert!(a.iter().all(|t| *t > 0.0), "case {case}");
     }
 }
+
+/// Property: a rail that is BOTH crash-downed and corrupting behaves
+/// bit-identically to the same rail crash-downed alone. A down rail
+/// transfers nothing, so there is nothing to corrupt — the down check
+/// precedes every corruption draw — and that holds with the wire
+/// checksums on or off.
+#[test]
+fn prop_down_plus_corrupt_equals_down() {
+    use nezha::config::{Config, Policy};
+    use nezha::coordinator::multirail::MultiRail;
+    use nezha::net::fault::{CorruptSchedule, FaultSchedule};
+    let mut rng = Pcg::new(8001);
+    for case in 0..12 {
+        let start = rng.range_f64(0.0, 100_000.0);
+        let dur = rng.range_f64(100_000.0, 300_000.0);
+        // the corrupt window sits strictly inside the down window, so
+        // every instant with corruption active is also a down instant
+        let (cs, ce) = (start + 0.1 * dur, start + 0.9 * dur);
+        let p = rng.range_f64(0.1, 0.9);
+        let corrupt = match rng.below(4) {
+            0 => CorruptSchedule::none().flip(1, cs, ce, p),
+            1 => CorruptSchedule::none().dup(1, cs, ce, p),
+            2 => CorruptSchedule::none().trunc(1, cs, ce, p),
+            _ => CorruptSchedule::none().stuck(1, cs, ce, p),
+        };
+        let mut cfg = Config {
+            nodes: 4,
+            combo: vec![ProtoKind::Tcp, ProtoKind::Tcp],
+            policy: Policy::Nezha,
+            deterministic: case % 2 == 0, // half the cases keep jitter ON
+            seed: 8100 + case as u64,
+            faults: FaultSchedule::none().with(1, start, start + dur),
+            ..Config::default()
+        };
+        cfg.integrity = case % 3 != 0; // exercise both checksum modes
+        let mut down = MultiRail::new(&cfg).unwrap();
+        let mut both = MultiRail::new(&cfg).unwrap().with_corrupt(corrupt);
+        let len = 2048;
+        let elem_bytes = (8u64 << 20) as f64 / len as f64;
+        let fill = |n: usize, i: usize| ((n + 1) * (i % 13 + 1)) as f32;
+        for op in 0..10 {
+            let mut a = UnboundBuffer::from_fn(4, len, fill);
+            let mut b = UnboundBuffer::from_fn(4, len, fill);
+            let ra = down.allreduce_scaled(&mut a, elem_bytes).unwrap();
+            let rb = both.allreduce_scaled(&mut b, elem_bytes).unwrap();
+            assert_eq!(ra.total_us, rb.total_us, "case {case} op {op}: modeled time diverged");
+            assert_eq!(ra.failovers, rb.failovers, "case {case} op {op}");
+            for n in 0..4 {
+                assert_eq!(a.node(n), b.node(n), "case {case} op {op} node {n}");
+            }
+        }
+        assert_eq!(down.fab.rails[1].health, both.fab.rails[1].health, "case {case}");
+        assert_eq!(
+            down.exceptions.failover_count(),
+            both.exceptions.failover_count(),
+            "case {case}"
+        );
+        assert_eq!(
+            both.fab.corruptions_on(1),
+            0,
+            "case {case}: corruption was sampled inside a down window"
+        );
+        assert_eq!(
+            down.fab.retries_on(1),
+            both.fab.retries_on(1),
+            "case {case}: retransmits were recharged inside a down window"
+        );
+    }
+}
+
+/// Property: corruption sampling is a pure function of (seed, rail,
+/// op_epoch) — identically-configured runs draw identical corruption
+/// sequences, and the serial and parallel executors agree bit-for-bit on
+/// modeled times, the unified retry ledger, the corruption ledger and the
+/// reduced buffers, with the wire checksums on or off.
+#[test]
+fn prop_corruption_sampling_deterministic_and_exec_invariant() {
+    use nezha::config::{Config, Policy};
+    use nezha::coordinator::multirail::MultiRail;
+    use nezha::net::cpu_pool::ExecMode;
+    use nezha::net::fault::CorruptSchedule;
+    let mut rng = Pcg::new(8002);
+    for case in 0..10 {
+        let seed = rng.next_u64();
+        let integrity = rng.f64() < 0.5;
+        // rail 1 carries a persistent storm, sometimes with a second
+        // windowed kind composed on top
+        let mut corrupt = CorruptSchedule::none().flip(1, 0.0, 1e12, rng.range_f64(0.02, 0.12));
+        if rng.f64() < 0.5 {
+            corrupt = corrupt.dup(1, rng.range_f64(0.0, 50_000.0), 1e9, rng.range_f64(0.01, 0.05));
+        }
+        let mut cfg = Config {
+            nodes: [2usize, 4][rng.below(2) as usize],
+            combo: vec![ProtoKind::Tcp, ProtoKind::Tcp],
+            policy: Policy::Nezha,
+            deterministic: rng.f64() < 0.5,
+            seed,
+            exec: ExecMode::Serial,
+            ..Config::default()
+        };
+        cfg.integrity = integrity;
+        let len = 2048;
+        let elem_bytes = (8u64 << 20) as f64 / len as f64;
+        let nodes = cfg.nodes;
+        let run = |cfg: &Config| {
+            let mut mr = MultiRail::new(cfg).unwrap().with_corrupt(corrupt.clone());
+            let mut trace = Vec::new();
+            let mut node0 = Vec::new();
+            for _ in 0..5 {
+                let mut buf =
+                    UnboundBuffer::from_fn(nodes, len, |n, i| ((n + 1) * (i % 13 + 1)) as f32);
+                let rep = mr.allreduce_scaled(&mut buf, elem_bytes).unwrap();
+                trace.push((rep.total_us, mr.fab.retries_on(1), mr.fab.corruptions_on(1)));
+                node0 = buf.node(0).to_vec();
+            }
+            (trace, node0)
+        };
+        let first = run(&cfg);
+        let second = run(&cfg);
+        assert_eq!(first, second, "case {case} (seed {seed}): reruns diverged");
+        cfg.exec = ExecMode::Parallel;
+        let parallel = run(&cfg);
+        assert_eq!(first, parallel, "case {case} (seed {seed}): executors diverged");
+        let (_, retries, corruptions) = *first.0.last().unwrap();
+        assert!(corruptions > 0, "case {case} (seed {seed}): the storm never corrupted");
+        if integrity {
+            assert!(
+                retries > 0,
+                "case {case}: detected corruption must recharge retransmits"
+            );
+        } else {
+            assert_eq!(retries, 0, "case {case}: silent corruption must not charge retries");
+        }
+    }
+}
+
+/// Property: the FNV-1a integrity checksum detects every single-bit flip
+/// at any position, for windows up to 64 MiB (16M f32 words). Each absorb
+/// step is a bijection in the running hash, so one changed word always
+/// changes the digest — this samples that guarantee across the ladder.
+#[test]
+fn prop_checksum_detects_single_bit_flips_to_64mib() {
+    use nezha::coordinator::collective::checksum;
+    let mut rng = Pcg::new(8003);
+    for &len in &[1usize, 5, 1 << 10, (1 << 14) + 3, 1 << 20, 1 << 24] {
+        let data: Vec<f32> = (0..len).map(|i| ((i % 251) as f32) * 0.5 - 31.0).collect();
+        let base = checksum(&data);
+        let flips = if len >= 1 << 20 { 4 } else { 16 };
+        for _ in 0..flips {
+            let elem = rng.below(len as u64) as usize;
+            let bit = rng.below(32) as u32;
+            let mut d = data.clone();
+            d[elem] = f32::from_bits(d[elem].to_bits() ^ (1 << bit));
+            assert_ne!(checksum(&d), base, "len {len} elem {elem} bit {bit} undetected");
+        }
+    }
+}
