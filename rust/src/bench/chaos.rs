@@ -27,10 +27,11 @@ use crate::coordinator::buffer::UnboundBuffer;
 use crate::coordinator::control::exception::PAPER_RECOVERY_BUDGET_US;
 use crate::coordinator::control::HealthMode;
 use crate::coordinator::multirail::MultiRail;
-use crate::net::cpu_pool::ExecMode;
+use crate::net::cpu_pool::{ExecMode, SchedMode};
 use crate::net::fault::{CorruptSchedule, DegradeSchedule, FaultSchedule};
 use crate::net::protocol::ProtoKind;
 use crate::net::rail::RailHealth;
+use crate::trainer::{CommProfile, DdpSim};
 use crate::util::json::Json;
 use crate::util::rng::Pcg;
 use crate::util::table::Table;
@@ -388,6 +389,94 @@ pub fn run_integrity_campaign(
             .max()
             .unwrap_or(0),
         storm_quarantined,
+    })
+}
+
+/// Training iterations per scheduler-composition campaign.
+const SCHED_CHAOS_ITERS: usize = 6;
+/// Iterations (not op indices) where the churn node leaves and rejoins —
+/// early enough that several iterations train on the shrunken set.
+const SCHED_LEAVE_ITER: usize = 1;
+const SCHED_REJOIN_ITER: usize = 3;
+
+/// Synthetic DDP model for scheduler chaos: six 8 MB buckets per
+/// iteration at a modest compute speed, comm-bound enough that ops are
+/// genuinely in flight across iteration boundaries.
+fn sched_chaos_profile() -> CommProfile {
+    CommProfile::synthetic("chaos-ddp", vec![8 << 20; 6], 400.0)
+}
+
+/// One scheduler-composition campaign run's verdicts (DESIGN.md §13):
+/// barrier and priority DDP twins trained under the SAME composed hazards
+/// and churn. Timing hazards reorder and stretch wire time but never touch
+/// program order, so the twins must stay gradient-bit-exact; a hazard
+/// hitting a cross-iteration in-flight op must recover in budget and the
+/// wire timeline must drain without deadlock.
+#[derive(Debug, Clone)]
+pub struct SchedulerChaosOutcome {
+    pub seed: u64,
+    pub exec: &'static str,
+    pub label: String,
+    /// Priority gradients bit-exact vs the barrier twin, every iteration.
+    pub bit_exact: bool,
+    /// Failovers, membership changes and gray actions all inside budget
+    /// (both twins).
+    pub within_budget: bool,
+    /// The priority wire timeline fully drained after the campaign.
+    pub queue_drained: bool,
+    /// At least one op was in flight across an iteration boundary.
+    pub overlapped: bool,
+    pub failovers: usize,
+}
+
+impl SchedulerChaosOutcome {
+    pub fn passed(&self) -> bool {
+        self.bit_exact && self.within_budget && self.queue_drained && self.overlapped
+    }
+}
+
+/// Run one campaign's hazards under both trainer scheduling modes:
+/// barrier and priority twins share the config (hazards, executor) and
+/// the iteration-indexed churn, diverging only in `sched`.
+pub fn run_scheduler_campaign(c: &Campaign, exec: ExecMode) -> Result<SchedulerChaosOutcome> {
+    let mut cfg = chaos_cfg(exec);
+    cfg.faults = c.faults.clone();
+    cfg.degrade = c.degrade.clone();
+    cfg.corrupt = c.corrupt.clone();
+    let mut barrier = DdpSim::new(&cfg, sched_chaos_profile(), 1, 32)?;
+    cfg.sched = SchedMode::Priority;
+    let mut priority = DdpSim::new(&cfg, sched_chaos_profile(), 1, 32)?;
+    let mut bit_exact = true;
+    for it in 0..SCHED_CHAOS_ITERS {
+        if it == SCHED_LEAVE_ITER {
+            barrier.mr.node_leave(c.churn_node)?;
+            priority.mr.node_leave(c.churn_node)?;
+        }
+        if it == SCHED_REJOIN_ITER {
+            barrier.mr.node_rejoin(c.churn_node)?;
+            priority.mr.node_rejoin(c.churn_node)?;
+        }
+        let bt = barrier.iter_time_us()?;
+        let pt = priority.iter_time_us()?;
+        bit_exact &= bt > 0.0 && pt > 0.0;
+        bit_exact &= barrier.last_fingerprints() == priority.last_fingerprints();
+    }
+    let overlapped = priority.sched_stats().cross_boundary_ops >= 1;
+    let queue_drained = priority.drain_queue();
+    let budget = |mr: &MultiRail| {
+        mr.exceptions.all_within_budget()
+            && mr.exceptions.membership_within_budget()
+            && mr.exceptions.gray_within_budget()
+    };
+    Ok(SchedulerChaosOutcome {
+        seed: c.seed,
+        exec: exec.name(),
+        label: c.label.clone(),
+        bit_exact,
+        within_budget: budget(&barrier.mr) && budget(&priority.mr),
+        queue_drained,
+        overlapped,
+        failovers: priority.mr.exceptions.failover_count(),
     })
 }
 

@@ -448,6 +448,9 @@ pub fn run(id: &str) -> Result<()> {
         }
         "ablate-tenancy" | "ablate_tenancy" | "tenancy" => super::ablation::ablate_tenancy(),
         "ablate-churn" | "ablate_churn" | "churn" => super::ablation::ablate_churn(),
+        "ablate-scheduler" | "ablate_scheduler" | "scheduler" => {
+            super::ablation::ablate_scheduler()
+        }
         "ablate-grayfault" | "ablate_grayfault" | "grayfault" => super::chaos::ablate_grayfault(),
         "ablate-integrity" | "ablate_integrity" | "integrity" => super::chaos::ablate_integrity(),
         "plan-quality" | "plan_quality" | "planq" => super::harness::plan_quality_fig(),
@@ -463,8 +466,8 @@ pub fn run(id: &str) -> Result<()> {
         }
         other => Err(crate::util::error::Error::Config(format!(
             "unknown figure `{other}` (fig2..fig19, table1, headline, plan-quality, \
-             ablate-multilevel, ablate-tenancy, ablate-churn, ablate-grayfault, \
-             ablate-integrity, all)"
+             ablate-multilevel, ablate-tenancy, ablate-churn, ablate-scheduler, \
+             ablate-grayfault, ablate-integrity, all)"
         ))),
     }
 }

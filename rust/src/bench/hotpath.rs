@@ -27,7 +27,11 @@
 //! * **integrity** — the FNV-1a window-checksum kernel's GB/s and the
 //!   clean-path cost of the collective cores' send/verify passes
 //!   (checksums on vs off), so the data-plane integrity overhead is
-//!   tracked per commit.
+//!   tracked per commit;
+//! * **scheduler** — modeled barrier vs priority-op-queue DDP iteration
+//!   time on the paper's models with per-iteration gradient bit-identity
+//!   (deterministic modeled times, so this section's speedup IS
+//!   machine-comparable).
 //!
 //! Record, don't gate: CI uploads the JSON as a workflow artifact and the
 //! tier-1 smoke test checks only that the benchmark runs and the document
@@ -43,8 +47,9 @@ use crate::coordinator::collective::reducer::{
     add_into_lanes, reduce_copy_lanes, KERNEL_LANES,
 };
 use crate::coordinator::multirail::MultiRail;
-use crate::net::cpu_pool::ExecMode;
+use crate::net::cpu_pool::{ExecMode, SchedMode};
 use crate::net::topology::parse_combo;
+use crate::trainer::{CommProfile, DdpSim};
 use crate::util::bytes::fmt_bytes;
 use crate::util::json::Json;
 use crate::Result;
@@ -331,6 +336,71 @@ pub fn integrity_overhead(quick: bool) -> Result<(f64, f64, f64)> {
     Ok((checksum_gbps, ops(true)?, ops(false)?))
 }
 
+/// Models of the scheduler section (model, batch/GPU) — the paper's DDP
+/// evaluation pair.
+pub const SCHED_MODELS: [(&str, usize); 2] = [("alexnet", 32), ("vgg11", 64)];
+
+/// Barrier-free scheduler section (DESIGN.md §13): modeled barrier vs
+/// priority-op-queue iteration time per model on the 4-node dual-TCP
+/// fabric, with per-iteration gradient bit-identity. Unlike the
+/// wall-clock sections these are deterministic MODELED times, so the
+/// recorded speedup is comparable across machines; the smoke test may
+/// gate bit-identity (a correctness invariant), never the ratio.
+pub fn scheduler_section() -> Result<Json> {
+    let mut rows = Vec::new();
+    let mut all_bit_identical = true;
+    let mut all_improved = true;
+    for &(model, batch) in &SCHED_MODELS {
+        let mk = |sched: SchedMode| -> Result<DdpSim> {
+            let mut cfg = Config {
+                nodes: 4,
+                combo: parse_combo(COMBO)?,
+                policy: Policy::Nezha,
+                deterministic: true,
+                exec: ExecMode::Serial,
+                ..Config::default()
+            };
+            cfg.sched = sched;
+            DdpSim::new(&cfg, CommProfile::by_name(model).expect("known model"), 1, batch)
+        };
+        let mut barrier = mk(SchedMode::Barrier)?;
+        let mut priority = mk(SchedMode::Priority)?;
+        barrier.warmup(2)?;
+        priority.warmup(2)?;
+        let (mut bt, mut pt) = (0.0f64, 0.0f64);
+        let mut bit_identical = true;
+        const REPS: usize = 3;
+        for _ in 0..REPS {
+            bt += barrier.iter_time_us()?;
+            pt += priority.iter_time_us()?;
+            bit_identical &= barrier.last_fingerprints() == priority.last_fingerprints();
+        }
+        bt /= REPS as f64;
+        pt /= REPS as f64;
+        let overlap = priority.sched_stats().boundary_in_flight_max;
+        let drained = priority.drain_queue();
+        all_bit_identical &= bit_identical;
+        all_improved &= pt < bt;
+        rows.push(Json::obj(vec![
+            ("model", Json::from(model)),
+            ("batch_per_gpu", Json::from(batch)),
+            ("barrier_iter_us", Json::from(bt)),
+            ("priority_iter_us", Json::from(pt)),
+            ("speedup", Json::from(bt / pt)),
+            ("bit_identical", Json::Bool(bit_identical)),
+            ("boundary_in_flight_max", Json::from(overlap)),
+            ("queue_drained", Json::Bool(drained)),
+        ]));
+    }
+    Ok(Json::obj(vec![
+        ("nodes", Json::from(4usize)),
+        ("combo", Json::from(COMBO)),
+        ("sweep", Json::Arr(rows)),
+        ("all_bit_identical", Json::Bool(all_bit_identical)),
+        ("all_improved", Json::Bool(all_improved)),
+    ]))
+}
+
 /// Tenant counts of the multi-tenancy wall-clock sweep.
 pub const TENANCY_JOBS: [usize; 3] = [1, 2, 4];
 
@@ -388,6 +458,7 @@ pub fn hotpath_json(quick: bool) -> Result<Json> {
     let (sim_wall_s, sim_ops, sim_ops_per_sec) = policy_sim_wall(quick)?;
     let tenancy_rows = tenancy_wall_sweep(quick)?;
     let (checksum_gbps, on_ops, off_ops) = integrity_overhead(quick)?;
+    let scheduler = scheduler_section()?;
     let sweep_json: Vec<Json> = rows
         .iter()
         .map(|r| {
@@ -482,6 +553,10 @@ pub fn hotpath_json(quick: bool) -> Result<Json> {
                 ("clean_overhead_pct", Json::from((off_ops / on_ops - 1.0) * 100.0)),
             ]),
         ),
+        // barrier-free scheduling: modeled barrier vs priority op-queue
+        // iteration time per model (deterministic — the one section whose
+        // ratio IS machine-comparable), with gradient bit-identity
+        ("scheduler", scheduler),
         // multi-tenant arbiter orchestration overhead: aggregate ops/sec
         // over concurrent fair-share tenants (solo vs 2-job vs 4-job)
         (

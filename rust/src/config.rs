@@ -8,7 +8,7 @@
 use std::collections::BTreeMap;
 
 use crate::coordinator::control::{HealthConfig, HealthMode};
-use crate::net::cpu_pool::{AllocPolicy, ExecMode};
+use crate::net::cpu_pool::{AllocPolicy, ExecMode, SchedMode};
 use crate::net::fault::{
     parse_corrupt, parse_degrade, parse_faults, CorruptSchedule, DegradeSchedule, FaultSchedule,
 };
@@ -140,6 +140,13 @@ pub struct Config {
     /// bit-identical). Ablatable per run; the `NEZHA_EXEC` env var
     /// overrides the default so CI can run whole suites under either.
     pub exec: ExecMode,
+    /// Trainer op scheduling: `barrier` (every bucket's allreduce done
+    /// before the next forward, the legacy behaviour) or `priority`
+    /// (barrier-free cross-iteration scheduling: buckets enqueued at
+    /// backward, awaited at the consuming forward step next iteration,
+    /// early-forward buckets preempting late ones at window boundaries;
+    /// numerics stay bit-identical — see DESIGN.md §13).
+    pub sched: SchedMode,
     pub control: ControlConfig,
     /// Crash-stop fault windows injected into the fabric (`faults=` spec:
     /// `rail0:10ms-30ms;rail1:50ms-`).
@@ -172,6 +179,7 @@ impl Default for Config {
             planner: PlannerMode::Auto,
             alloc: AllocPolicy::Adaptive,
             exec: ExecMode::from_env(ExecMode::Serial),
+            sched: SchedMode::Barrier,
             control: ControlConfig::default(),
             faults: FaultSchedule::none(),
             degrade: DegradeSchedule::none(),
@@ -213,6 +221,7 @@ impl Config {
                 "policy" => self.policy = Policy::parse(v)?,
                 "planner" => self.planner = PlannerMode::parse(v)?,
                 "exec" => self.exec = ExecMode::parse(v)?,
+                "sched" => self.sched = SchedMode::parse(v)?,
                 "alloc" => {
                     self.alloc = match v.as_str() {
                         "static" => AllocPolicy::StaticEqual,
@@ -276,7 +285,7 @@ impl Config {
         let mut kv = BTreeMap::new();
         for key in [
             "cluster", "topology", "nodes", "combo", "network", "policy", "planner", "exec",
-            "alloc", "tau", "eta",
+            "sched", "alloc", "tau", "eta",
             "timer_window", "detect_timeout_us", "migrate_cost_us", "replan_error",
             "faults", "degrade", "corrupt", "integrity", "health",
             "seed", "deterministic", "artifacts_dir",
@@ -389,6 +398,21 @@ mod tests {
         c.apply(&kv).unwrap();
         assert_eq!(c.exec, ExecMode::Serial);
         kv.insert("exec".into(), "sideways".into());
+        assert!(c.apply(&kv).is_err());
+    }
+
+    #[test]
+    fn sched_mode_key_parses() {
+        let mut c = Config::default();
+        assert_eq!(c.sched, SchedMode::Barrier, "barrier is the default");
+        let mut kv = BTreeMap::new();
+        kv.insert("sched".into(), "priority".into());
+        c.apply(&kv).unwrap();
+        assert_eq!(c.sched, SchedMode::Priority);
+        kv.insert("sched".into(), "barrier".into());
+        c.apply(&kv).unwrap();
+        assert_eq!(c.sched, SchedMode::Barrier);
+        kv.insert("sched".into(), "sideways".into());
         assert!(c.apply(&kv).is_err());
     }
 

@@ -216,6 +216,12 @@ pub struct MultiRail {
     pub planner: Planner,
     /// The cross-rail execution engine (`exec = serial | parallel`).
     pub executor: RailExecutor,
+    /// Host-pool drain priority for the NEXT op's per-rail jobs (0 =
+    /// drain first). The trainer's barrier-free scheduler sets it to the
+    /// bucket's next-forward consumption priority before each collective;
+    /// it reorders worker pickup only — results stay submission-ordered,
+    /// so numerics and modeled times are unaffected.
+    pub op_priority: u32,
     /// When set, bypasses the planner with the seed's fixed dispatch
     /// (`Algo::Ring` / `Algo::RingChunked`) on every ring-capable rail.
     forced_algo: Option<Algo>,
@@ -380,6 +386,7 @@ impl MultiRail {
             reducer: Box::new(RustReducer),
             planner,
             executor: RailExecutor::new(cfg.exec),
+            op_priority: 0,
             forced_algo,
             last_plan: None,
             quality: PlanQualityReport::default(),
@@ -772,6 +779,25 @@ impl MultiRail {
     /// are reused.
     pub fn plan_epoch(&self) -> u64 {
         self.planner.epoch()
+    }
+
+    /// Rail-round count of the most recent planner-scheduled op (the max
+    /// across its payload-carrying rails) — the preemption-window count
+    /// the trainer's barrier-free wire timeline uses (an op yields the
+    /// wire only at round boundaries). 1 after forced-dispatch or sliced
+    /// ops, where no planner schedule executed.
+    pub fn last_plan_rounds(&self) -> usize {
+        self.last_plan
+            .as_ref()
+            .and_then(|p| {
+                p.assignments
+                    .iter()
+                    .filter(|a| a.bytes > 0)
+                    .map(|a| a.rounds)
+                    .max()
+            })
+            .unwrap_or(1)
+            .max(1)
     }
 
     /// Arbiter hook: this job now holds `share` of `rail`'s bandwidth
@@ -1390,6 +1416,7 @@ impl MultiRail {
         let forced = self.forced_algo;
         let planner_scheduled = forced.is_none();
 
+        let prio = self.op_priority;
         let results: Vec<std::result::Result<OpOutcome, RailDown>> = {
             // borrow-split the coordinator: fabric → per-rail timing
             // contexts, buffer → disjoint per-rail views, scratch → one
@@ -1420,7 +1447,7 @@ impl MultiRail {
                 .zip(live_a.iter().copied())
             {
                 let w = view.window_of_view();
-                jobs.push(move || match forced {
+                jobs.push((prio, move || match forced {
                     Some(algo) => run_allreduce_on(
                         algo,
                         &mut ctx,
@@ -1440,9 +1467,9 @@ impl MultiRail {
                         topo,
                         scr,
                     ),
-                });
+                }));
             }
-            executor.run(jobs)
+            executor.run_prioritized(jobs)
         };
 
         // deterministic merge in assignment order (thread scheduling can
@@ -1583,6 +1610,7 @@ impl MultiRail {
                 }
             })
             .collect();
+        let prio = self.op_priority;
         let timings: Vec<std::result::Result<f64, RailDown>> = {
             let MultiRail { fab, executor, .. } = self;
             let mut ctxs = fab.rail_ctxs(&live);
@@ -1598,7 +1626,7 @@ impl MultiRail {
             }
             let mut jobs = Vec::with_capacity(live.len());
             for (mut ctx, pass) in ordered.into_iter().zip(passes.iter().copied()) {
-                jobs.push(move || match pass {
+                jobs.push((prio, move || match pass {
                     SubflowPass::Ring { steps, seg_bytes } => {
                         let mut t = 0.0;
                         for _ in 0..steps {
@@ -1607,9 +1635,9 @@ impl MultiRail {
                         Ok(t)
                     }
                     SubflowPass::Tree { bytes } => ctx.tree_round(bytes),
-                });
+                }));
             }
-            executor.run(jobs)
+            executor.run_prioritized(jobs)
         };
 
         // Phase 2 — numerics, shares and failover, in assignment order

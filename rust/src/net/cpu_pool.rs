@@ -8,7 +8,14 @@
 //! the computation phase full cores and releases them during I/O and
 //! transfer phases.
 
-use std::collections::BTreeMap;
+//!
+//! The bottom half of this module is the *host-side* execution engine: the
+//! persistent [`WorkerPool`] behind [`RailExecutor`] (DESIGN.md §13) that
+//! runs one op's per-rail schedule jobs, optionally priority-ordered so the
+//! trainer's barrier-free scheduler can drain early-consumed buckets first.
+
+use std::collections::{BTreeMap, BinaryHeap};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use crate::net::protocol::ProtoKind;
 
@@ -180,15 +187,265 @@ impl ExecMode {
     }
 }
 
+/// How the trainer sequences collective ops across iterations
+/// (`sched = barrier | priority`, DESIGN.md §13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedMode {
+    /// The legacy per-iteration barrier: every bucket's allreduce must
+    /// finish before the next forward pass starts.
+    Barrier,
+    /// Barrier-free cross-iteration scheduling: buckets are enqueued as
+    /// the backward pass produces them and awaited only at the forward
+    /// step that consumes them next iteration, priority-ordered by
+    /// consumption order so early-forward buckets preempt late ones at
+    /// window boundaries.
+    Priority,
+}
+
+impl SchedMode {
+    pub fn parse(s: &str) -> crate::Result<SchedMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "barrier" | "sync" => Ok(SchedMode::Barrier),
+            "priority" | "async" => Ok(SchedMode::Priority),
+            other => Err(crate::util::error::Error::Config(format!(
+                "unknown sched mode `{other}`"
+            ))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedMode::Barrier => "barrier",
+            SchedMode::Priority => "priority",
+        }
+    }
+}
+
+/// One queued pool task: a lifetime-erased job plus its (priority, FIFO
+/// sequence) drain key. The heap is a max-heap, so `Ord` is inverted to
+/// pop the *lowest* (priority, seq) pair first — priority 0 drains before
+/// priority 1, submission order breaks ties.
+struct PoolTask {
+    prio: u32,
+    seq: u64,
+    job: Box<dyn FnOnce() + Send + 'static>,
+}
+
+impl PartialEq for PoolTask {
+    fn eq(&self, other: &Self) -> bool {
+        (self.prio, self.seq) == (other.prio, other.seq)
+    }
+}
+impl Eq for PoolTask {}
+impl PartialOrd for PoolTask {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for PoolTask {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // inverted: BinaryHeap pops max, we want min-(prio, seq)
+        (other.prio, other.seq).cmp(&(self.prio, self.seq))
+    }
+}
+
+struct PoolState {
+    queue: BinaryHeap<PoolTask>,
+    next_seq: u64,
+    shutdown: bool,
+}
+
+struct PoolInner {
+    state: Mutex<PoolState>,
+    /// Signalled when tasks are enqueued (workers) or shutdown is set.
+    available: Condvar,
+}
+
+/// Completion latch for one `run_prioritized` batch: the caller blocks
+/// until every job has run (so borrows into its stack frame stay valid),
+/// and learns whether any job panicked.
+struct Latch {
+    state: Mutex<(usize, bool)>,
+    all_done: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { state: Mutex::new((n, false)), all_done: Condvar::new() }
+    }
+
+    fn arrive(&self, panicked: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.0 -= 1;
+        st.1 |= panicked;
+        if st.0 == 0 {
+            self.all_done.notify_all();
+        }
+    }
+
+    /// Block until every job arrived; true if any panicked.
+    fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.0 > 0 {
+            st = self.all_done.wait(st).unwrap();
+        }
+        st.1
+    }
+}
+
+/// Raw result-slot pointer smuggled into a worker job. Soundness comes
+/// from `run_prioritized`: slots are disjoint, outlive the batch (the
+/// caller blocks on the latch), and each is written by exactly one job.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+
+fn worker_loop(inner: Arc<PoolInner>) {
+    loop {
+        let task = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if let Some(t) = st.queue.pop() {
+                    break t;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = inner.available.wait(st).unwrap();
+            }
+        };
+        // the job itself catches panics and reports through its latch
+        (task.job)();
+    }
+}
+
+/// A persistent priority worker pool: worker threads live for the process
+/// (amortizing the old per-op `thread::scope` spawn) and drain a shared
+/// queue in ascending (priority, submission) order.
+///
+/// Deadlock freedom: jobs are plain closures that never enqueue further
+/// work or block on other jobs, the caller enqueues its whole batch under
+/// one lock hold *before* waiting, and workers always drain the queue
+/// ahead of checking shutdown — so every enqueued job is eventually run by
+/// some worker and every latch is eventually released (DESIGN.md §13).
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> WorkerPool {
+        let inner = Arc::new(PoolInner {
+            state: Mutex::new(PoolState {
+                queue: BinaryHeap::new(),
+                next_seq: 0,
+                shutdown: false,
+            }),
+            available: Condvar::new(),
+        });
+        let handles = (0..workers.max(1))
+            .map(|k| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("nezha-rail-{k}"))
+                    .spawn(move || worker_loop(inner))
+                    .expect("spawn rail worker")
+            })
+            .collect();
+        WorkerPool { inner, handles }
+    }
+
+    /// The process-wide pool every parallel `RailExecutor` shares. Sized
+    /// to the host (clamped to [2, 8] — rails, the unit of parallelism
+    /// here, never exceed a handful) and never torn down.
+    pub fn shared() -> &'static WorkerPool {
+        static SHARED: OnceLock<WorkerPool> = OnceLock::new();
+        SHARED.get_or_init(|| {
+            let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+            WorkerPool::new(n.clamp(2, 8))
+        })
+    }
+
+    /// Run one batch of `(priority, job)` pairs on the pool and return
+    /// the results in **submission order** (priorities reorder execution,
+    /// never results). Blocks until the whole batch has run; if any job
+    /// panicked, panics with the executor's message after the rest of the
+    /// batch drained (workers survive — panics are caught per job).
+    pub fn run_prioritized<T, F>(&self, jobs: Vec<(u32, F)>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut results: Vec<Option<T>> = Vec::with_capacity(n);
+        results.resize_with(n, || None);
+        let latch = Arc::new(Latch::new(n));
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            for (i, (prio, f)) in jobs.into_iter().enumerate() {
+                let slot = SendPtr(&mut results[i] as *mut Option<T>);
+                let latch = Arc::clone(&latch);
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+                    match out {
+                        Ok(v) => {
+                            // SAFETY: `slot` points into `results`, which
+                            // the caller keeps alive (and unmoved) until
+                            // the latch releases; slot `i` is written by
+                            // this job only.
+                            unsafe { *slot.0 = Some(v) };
+                            latch.arrive(false);
+                        }
+                        Err(_) => latch.arrive(true),
+                    }
+                });
+                // SAFETY: the closure borrows only `results` slots; the
+                // latch wait below keeps this stack frame alive until
+                // every job has finished, so erasing the lifetime never
+                // lets a borrow dangle.
+                let job: Box<dyn FnOnce() + Send + 'static> =
+                    unsafe { std::mem::transmute(job) };
+                let seq = st.next_seq;
+                st.next_seq += 1;
+                st.queue.push(PoolTask { prio, seq, job });
+            }
+            self.inner.available.notify_all();
+        }
+        if latch.wait() {
+            panic!("rail worker panicked");
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every pool job fills its slot"))
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 /// The cross-rail execution engine: runs one op's per-rail jobs either
-/// in order on the calling thread or concurrently on scoped worker
-/// threads (one thread per participating rail — rails are the unit of
+/// in order on the calling thread or concurrently on the persistent
+/// [`WorkerPool`] (one job per participating rail — rails are the unit of
 /// hardware parallelism here, mirroring the paper's one-protocol-thread-
 /// per-member-network deployment).
 ///
 /// Results always come back in job submission order, so the coordinator's
 /// merge (shares, Timer feedback, failover handling) is deterministic
-/// regardless of thread scheduling.
+/// regardless of thread scheduling — and regardless of the priorities the
+/// barrier-free scheduler attaches.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RailExecutor {
     pub mode: ExecMode,
@@ -200,22 +457,29 @@ impl RailExecutor {
     }
 
     /// Run the jobs and collect their results in submission order. A
-    /// single job never pays thread-spawn overhead, even in parallel mode.
+    /// single job never pays queue overhead, even in parallel mode.
     pub fn run<T, F>(&self, jobs: Vec<F>) -> Vec<T>
     where
         T: Send,
         F: FnOnce() -> T + Send,
     {
+        self.run_prioritized(jobs.into_iter().map(|j| (0, j)).collect())
+    }
+
+    /// Run `(priority, job)` pairs: parallel mode drains them through the
+    /// shared pool in ascending (priority, submission) order, serial mode
+    /// runs them inline in submission order (priorities only ever reorder
+    /// *execution start*, never results — both modes return submission
+    /// order, keeping serial/parallel bit-identity).
+    pub fn run_prioritized<T, F>(&self, jobs: Vec<(u32, F)>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce() -> T + Send,
+    {
         match self.mode {
-            _ if jobs.len() <= 1 => jobs.into_iter().map(|j| j()).collect(),
-            ExecMode::Serial => jobs.into_iter().map(|j| j()).collect(),
-            ExecMode::Parallel => std::thread::scope(|s| {
-                let handles: Vec<_> = jobs.into_iter().map(|j| s.spawn(j)).collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("rail worker panicked"))
-                    .collect()
-            }),
+            _ if jobs.len() <= 1 => jobs.into_iter().map(|(_, j)| j()).collect(),
+            ExecMode::Serial => jobs.into_iter().map(|(_, j)| j()).collect(),
+            ExecMode::Parallel => WorkerPool::shared().run_prioritized(jobs),
         }
     }
 }
@@ -332,6 +596,113 @@ mod tests {
         assert_eq!(ExecMode::parse("on").unwrap(), ExecMode::Parallel);
         assert!(ExecMode::parse("bogus").is_err());
         assert_eq!(ExecMode::Parallel.name(), "parallel");
+    }
+
+    #[test]
+    fn sched_mode_parses() {
+        assert_eq!(SchedMode::parse("barrier").unwrap(), SchedMode::Barrier);
+        assert_eq!(SchedMode::parse("priority").unwrap(), SchedMode::Priority);
+        assert_eq!(SchedMode::parse("async").unwrap(), SchedMode::Priority);
+        assert!(SchedMode::parse("bogus").is_err());
+        assert_eq!(SchedMode::Priority.name(), "priority");
+        assert_eq!(SchedMode::Barrier.name(), "barrier");
+    }
+
+    #[test]
+    fn pool_drains_by_priority_but_returns_submission_order() {
+        // one worker → execution order IS heap order: the whole batch is
+        // enqueued under a single lock hold before the worker can pop
+        let pool = WorkerPool::new(1);
+        let ran = Arc::new(Mutex::new(Vec::new()));
+        let prios = [3u32, 0, 2, 1];
+        let jobs: Vec<_> = prios
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| {
+                let ran = Arc::clone(&ran);
+                (p, move || {
+                    ran.lock().unwrap().push(p);
+                    i * 10
+                })
+            })
+            .collect();
+        let out = pool.run_prioritized(jobs);
+        // results in submission order, regardless of drain order
+        assert_eq!(out, vec![0, 10, 20, 30]);
+        // execution in ascending priority order
+        assert_eq!(*ran.lock().unwrap(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn pool_equal_priorities_drain_fifo() {
+        let pool = WorkerPool::new(1);
+        let ran = Arc::new(Mutex::new(Vec::new()));
+        let jobs: Vec<_> = (0..5)
+            .map(|i| {
+                let ran = Arc::clone(&ran);
+                (7u32, move || ran.lock().unwrap().push(i))
+            })
+            .collect();
+        pool.run_prioritized(jobs);
+        assert_eq!(*ran.lock().unwrap(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn pool_results_are_deterministic_across_runs() {
+        let pool = WorkerPool::new(3);
+        for _ in 0..10 {
+            let jobs: Vec<_> = (0..8u64)
+                .map(|i| (((i * 13) % 5) as u32, move || i * i + 1))
+                .collect();
+            let out = pool.run_prioritized(jobs);
+            assert_eq!(out, (0..8u64).map(|i| i * i + 1).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn executor_prioritized_matches_plain_run() {
+        for mode in [ExecMode::Serial, ExecMode::Parallel] {
+            let ex = RailExecutor::new(mode);
+            let jobs: Vec<_> = (0..6).map(|i| (5 - i as u32, move || i * 10)).collect();
+            assert_eq!(ex.run_prioritized(jobs), vec![0, 10, 20, 30, 40, 50], "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn pool_jobs_can_mutate_disjoint_borrows() {
+        // same contract as the executor test: jobs hold &mut into the
+        // caller's stack; the latch keeps the frame alive until all ran
+        let pool = WorkerPool::new(2);
+        let mut data = vec![0u64; 4];
+        {
+            let jobs: Vec<_> = data
+                .iter_mut()
+                .enumerate()
+                .map(|(i, slot)| {
+                    (i as u32, move || {
+                        *slot = i as u64 + 1;
+                        i
+                    })
+                })
+                .collect();
+            assert_eq!(pool.run_prioritized(jobs), vec![0, 1, 2, 3]);
+        }
+        assert_eq!(data, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_job_and_stays_usable() {
+        let pool = WorkerPool::new(2);
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_prioritized(vec![
+                (0u32, Box::new(|| 1) as Box<dyn FnOnce() -> i32 + Send>),
+                (1u32, Box::new(|| panic!("job blew up"))),
+            ])
+        }));
+        assert!(boom.is_err(), "batch with a panicking job must panic");
+        // workers caught the panic; the pool still runs new batches
+        let out = pool.run_prioritized(vec![(0u32, || 41), (0u32, || 42)]);
+        assert_eq!(out, vec![41, 42]);
     }
 
     #[test]

@@ -41,6 +41,47 @@ impl BucketGuard {
     }
 }
 
+/// Layer-wise cross-iteration dependency of one fusion bucket: backward
+/// produces buckets in issue order (output layers first), while the next
+/// iteration's forward consumes them in *reverse* (input layers first).
+/// The bucket produced LAST is therefore needed FIRST — its wire priority
+/// is its consumption position, so the barrier-free scheduler drains
+/// early-forward buckets ahead of late ones (DESIGN.md §13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BucketDep {
+    /// Backward production index (bucket issue order, 0 = first produced).
+    pub produced: usize,
+    /// Forward step of the *next* iteration that consumes this bucket.
+    pub consumed_at: usize,
+    /// Wire priority (= `consumed_at`; 0 drains first).
+    pub priority: u32,
+}
+
+/// Forward step of the next iteration that consumes the bucket produced
+/// at backward index `produced` (of `n_buckets`): consumption order is
+/// the reverse of production order.
+pub fn consumed_at_step(produced: usize, n_buckets: usize) -> usize {
+    n_buckets.saturating_sub(1).saturating_sub(produced)
+}
+
+/// Wire priority of the bucket produced at backward index `produced`
+/// (lower drains first): its consumption position in the next forward.
+pub fn consume_priority(produced: usize, n_buckets: usize) -> u32 {
+    consumed_at_step(produced, n_buckets) as u32
+}
+
+/// The full dependency table for an `n_buckets`-bucket iteration, in
+/// production order.
+pub fn bucket_deps(n_buckets: usize) -> Vec<BucketDep> {
+    (0..n_buckets)
+        .map(|produced| BucketDep {
+            produced,
+            consumed_at: consumed_at_step(produced, n_buckets),
+            priority: consume_priority(produced, n_buckets),
+        })
+        .collect()
+}
+
 /// Split a flat parameter/gradient vector of `total` elements into fusion
 /// buckets of at most `bucket_elems` elements.
 #[derive(Debug, Clone)]
@@ -102,11 +143,18 @@ impl Bucketizer {
     /// to modeled wire bytes; 4.0 = physical f32). Plans are `None` under
     /// MPTCP-style slicing policies.
     pub fn annotate(&self, mr: &mut MultiRail, elem_bytes: f64) -> Vec<BucketPlan> {
+        let n = self.windows.len();
         self.windows
             .iter()
-            .map(|w| BucketPlan {
+            .enumerate()
+            .map(|(i, w)| BucketPlan {
                 window: *w,
                 plan: mr.plan_for((w.len as f64 * elem_bytes) as u64),
+                dep: BucketDep {
+                    produced: i,
+                    consumed_at: consumed_at_step(i, n),
+                    priority: consume_priority(i, n),
+                },
             })
             .collect()
     }
@@ -117,6 +165,9 @@ impl Bucketizer {
 pub struct BucketPlan {
     pub window: Window,
     pub plan: Option<CollectivePlan>,
+    /// Cross-iteration consumption dependency (which next-forward step
+    /// needs this bucket, and hence its wire priority).
+    pub dep: BucketDep,
 }
 
 impl BucketPlan {
@@ -179,6 +230,29 @@ mod tests {
     }
 
     #[test]
+    fn consumption_order_reverses_production_order() {
+        // 5 buckets: produced 0 (output layers) is consumed LAST next
+        // forward; produced 4 (input layers) is consumed FIRST
+        assert_eq!(consumed_at_step(0, 5), 4);
+        assert_eq!(consumed_at_step(4, 5), 0);
+        assert_eq!(consume_priority(4, 5), 0, "last-produced drains first");
+        assert_eq!(consume_priority(0, 5), 4);
+        let deps = bucket_deps(5);
+        assert_eq!(deps.len(), 5);
+        for d in &deps {
+            assert_eq!(d.priority as usize, d.consumed_at);
+            assert_eq!(d.produced + d.consumed_at, 4);
+        }
+        // every forward step is covered exactly once
+        let mut steps: Vec<_> = deps.iter().map(|d| d.consumed_at).collect();
+        steps.sort_unstable();
+        assert_eq!(steps, vec![0, 1, 2, 3, 4]);
+        // degenerate sizes don't underflow
+        assert_eq!(consumed_at_step(0, 1), 0);
+        assert!(bucket_deps(0).is_empty());
+    }
+
+    #[test]
     fn annotate_covers_all_buckets_with_plans() {
         use crate::config::{Config, Policy};
         use crate::net::protocol::ProtoKind;
@@ -201,6 +275,11 @@ mod tests {
             assert!(bp.is_multirail(), "{plan:?}");
             // annotation previews never start a selection epoch
             assert_eq!(bp.plan_epoch(), Some(mr.plan_epoch()));
+        }
+        // the dependency annotation mirrors bucket_deps
+        for (i, bp) in annotated.iter().enumerate() {
+            assert_eq!(bp.dep.produced, i);
+            assert_eq!(bp.dep.consumed_at, annotated.len() - 1 - i);
         }
     }
 

@@ -26,7 +26,7 @@ pub struct CommProfile {
     /// Single-V100 compute throughput (samples/s) by batch size — the
     /// compute side of the DDP simulator, anchored to the paper's G1N1
     /// baselines (Fig. 16).
-    compute_sps: &'static [(usize, f64)],
+    compute_sps: Vec<(usize, f64)>,
 }
 
 impl CommProfile {
@@ -43,7 +43,7 @@ impl CommProfile {
             name: "AlexNet",
             ops,
             n_params: 61_000_000,
-            compute_sps: &[(32, 380.0), (64, 700.0)],
+            compute_sps: vec![(32, 380.0), (64, 700.0)],
         }
     }
 
@@ -60,8 +60,16 @@ impl CommProfile {
             name: "VGG-11",
             ops,
             n_params: 132_900_000,
-            compute_sps: &[(32, 190.0), (64, 330.0)],
+            compute_sps: vec![(32, 190.0), (64, 330.0)],
         }
+    }
+
+    /// A synthetic profile for tests and chaos harnesses: `ops` payloads
+    /// issued in backprop order, with a flat samples/s compute anchor at
+    /// batch 32.
+    pub fn synthetic(name: &'static str, ops: Vec<u64>, sps: f64) -> CommProfile {
+        let n_params = ops.iter().sum::<u64>() / 4;
+        CommProfile { name, ops, n_params, compute_sps: vec![(32, sps)] }
     }
 
     pub fn by_name(name: &str) -> Option<CommProfile> {

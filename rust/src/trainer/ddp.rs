@@ -11,13 +11,25 @@ use crate::config::Config;
 use crate::coordinator::buffer::BufferPool;
 use crate::coordinator::multirail::MultiRail;
 use crate::coordinator::planner::pipeline::{pipelined_total_us, BUCKET_OVERLAP};
-use crate::trainer::bucket::{bucket_fingerprint, BucketGuard};
+use crate::net::cpu_pool::SchedMode;
+use crate::trainer::bucket::{bucket_fingerprint, consume_priority, BucketGuard};
 use crate::trainer::comm_profile::CommProfile;
+use crate::trainer::sched::{OpDesc, OpQueue, OpTiming, SchedStats};
 use crate::Result;
 
 /// Fraction of compute time allreduce can hide behind (tensor-fusion
 /// pipelining in Horovod/DDP).
 pub const DEFAULT_OVERLAP: f64 = 0.5;
+
+/// Forward share of one iteration's compute (backward ≈ 2× forward, the
+/// standard DDP rule of thumb) — how the barrier-free scheduler splits
+/// [`CommProfile::compute_us`] into awaited forward steps and producing
+/// backward steps.
+pub const FWD_FRACTION: f64 = 1.0 / 3.0;
+
+/// Preemption-window cap per op (plans with more rounds still only yield
+/// the wire this many times — bounds timeline work on huge plans).
+const MAX_WINDOWS: usize = 64;
 
 /// Data-parallel training-speed simulator.
 pub struct DdpSim {
@@ -46,6 +58,18 @@ pub struct DdpSim {
     /// [`DdpSim::comm_us`] call, in iteration order — a clean run's record
     /// serves as the guard's oracle.
     last_fingerprints: Vec<u64>,
+    /// Trainer op scheduling (`sched = barrier | priority`).
+    pub sched: SchedMode,
+    /// The barrier-free wire timeline (priority mode only): ops enqueued
+    /// at backward, awaited at the consuming forward step next iteration.
+    queue: OpQueue,
+    /// Training iterations completed in priority mode.
+    iter_idx: u64,
+    /// Priority-mode training clock (us): end of the last iteration.
+    clock_us: f64,
+    /// Per-op (duration, plan rounds, plan epoch) from the most recent
+    /// `comm_us` call — the timeline inputs.
+    last_timings: Vec<OpTiming>,
 }
 
 impl DdpSim {
@@ -63,7 +87,21 @@ impl DdpSim {
             pool: BufferPool::new(),
             guard: None,
             last_fingerprints: Vec::new(),
+            sched: cfg.sched,
+            queue: OpQueue::new(cfg.sched),
+            iter_idx: 0,
+            clock_us: 0.0,
+            last_timings: Vec::new(),
         })
+    }
+
+    /// Switch the trainer's op scheduling (resets the wire timeline).
+    pub fn with_sched(mut self, mode: SchedMode) -> DdpSim {
+        self.sched = mode;
+        self.queue = OpQueue::new(mode);
+        self.iter_idx = 0;
+        self.clock_us = 0.0;
+        self
     }
 
     /// Arm the containment guard with per-bucket oracle fingerprints
@@ -104,9 +142,19 @@ impl DdpSim {
     /// credit. Forced-dispatch and MPTCP-sliced ops never qualify
     /// (`last_plan` is None there — nothing chunk-pipelines).
     pub fn comm_us(&mut self) -> Result<f64> {
-        let mut ops: Vec<(f64, bool)> = Vec::with_capacity(self.profile.ops.len());
+        let n_ops = self.profile.ops.len();
+        let mut ops: Vec<(f64, bool)> = Vec::with_capacity(n_ops);
         self.last_fingerprints.clear();
+        self.last_timings.clear();
         for (op_idx, &bytes) in self.profile.ops.clone().iter().enumerate() {
+            // priority mode tags each collective's host-pool jobs with the
+            // bucket's next-forward consumption priority; the tag reorders
+            // worker drain only — results stay submission-ordered, so
+            // numerics and modeled times are untouched
+            self.mr.op_priority = match self.sched {
+                SchedMode::Priority => consume_priority(op_idx, n_ops),
+                SchedMode::Barrier => 0,
+            };
             // staging buffers track the coordinator's surviving node set,
             // not the configured count — membership churn between buckets
             // shrinks/regrows them transparently (poll first so the
@@ -152,8 +200,14 @@ impl DdpSim {
                 .map(|p| p.active_rails() >= 2)
                 .unwrap_or(false);
             ops.push((rep.total_us, planned_multirail));
+            self.last_timings.push(OpTiming {
+                dur_us: rep.total_us,
+                rounds: self.mr.last_plan_rounds(),
+                epoch: self.mr.plan_epoch(),
+            });
             self.mr.recycle(rep);
         }
+        self.mr.op_priority = 0;
         if self.bucket_pipelining {
             Ok(pipelined_total_us(&ops, BUCKET_OVERLAP))
         } else {
@@ -162,10 +216,21 @@ impl DdpSim {
     }
 
     /// Warm the Load Balancer's data-length table (the paper reports
-    /// convergence within the first 100 iterations).
+    /// convergence within the first 100 iterations). In priority mode
+    /// this runs full barrier-free iterations so the wire timeline
+    /// reaches steady state too — either way, exactly one collective
+    /// sequence per iteration, keeping warmed twins comparable
+    /// fingerprint-for-fingerprint.
     pub fn warmup(&mut self, iters: usize) -> Result<()> {
         for _ in 0..iters {
-            self.comm_us()?;
+            match self.sched {
+                SchedMode::Barrier => {
+                    self.comm_us()?;
+                }
+                SchedMode::Priority => {
+                    self.priority_iter_us()?;
+                }
+            }
         }
         Ok(())
     }
@@ -177,12 +242,107 @@ impl DdpSim {
         self.mr.plan_epoch()
     }
 
-    /// One training iteration time (us): compute + exposed communication.
+    /// One training iteration time (us). Barrier mode: compute + exposed
+    /// communication, with every bucket done before the iteration ends.
+    /// Priority mode: the barrier-free span (forward awaits last
+    /// iteration's in-flight buckets, backward enqueues this iteration's)
+    /// — measure after [`DdpSim::warmup`] for steady-state numbers, since
+    /// iteration 0 awaits nothing.
     pub fn iter_time_us(&mut self) -> Result<f64> {
+        match self.sched {
+            SchedMode::Barrier => {
+                let compute = self.profile.compute_us(self.batch_per_gpu);
+                let comm = self.comm_us()?;
+                let exposed = (comm - self.overlap * compute).max(0.0);
+                Ok(compute + exposed)
+            }
+            SchedMode::Priority => self.priority_iter_us(),
+        }
+    }
+
+    /// One barrier-free iteration (DESIGN.md §13). The forward pass awaits
+    /// the previous iteration's buckets at their consuming steps (bucket
+    /// produced at backward index j is needed at forward step K-1-j); the
+    /// backward pass runs the REAL collectives — in the exact program
+    /// order of the barrier baseline, so op epochs, per-rail RNG streams,
+    /// numerics and per-op durations are bit-identical — and enqueues each
+    /// on the wire timeline at its production instant. Cross-bucket chunk
+    /// pipelining is inert here: overlap comes from the timeline itself.
+    fn priority_iter_us(&mut self) -> Result<f64> {
         let compute = self.profile.compute_us(self.batch_per_gpu);
-        let comm = self.comm_us()?;
-        let exposed = (comm - self.overlap * compute).max(0.0);
-        Ok(compute + exposed)
+        let fwd = FWD_FRACTION * compute;
+        let bwd = compute - fwd;
+        let k = self.profile.ops.len().max(1);
+        let iter = self.iter_idx;
+        let fwd_start = self.clock_us;
+
+        // ---- forward: await last iteration's buckets in consumption order
+        let mut t = fwd_start;
+        let step = fwd / k as f64;
+        let mut stall = 0.0;
+        if iter > 0 {
+            for s in 0..k {
+                let produced = k - 1 - s;
+                if let Some(done) = self.queue.completion_us(iter - 1, produced) {
+                    if done > t {
+                        stall += done - t;
+                        t = done;
+                    }
+                }
+                t += step;
+            }
+        } else {
+            t += fwd;
+        }
+        let fwd_end = t;
+
+        // ---- backward: run the collectives, enqueue them as produced
+        self.comm_us()?;
+        let timings = std::mem::take(&mut self.last_timings);
+        for (j, timing) in timings.iter().enumerate() {
+            self.queue.enqueue(OpDesc {
+                iter,
+                bucket: j,
+                priority: consume_priority(j, k),
+                epoch: timing.epoch,
+                // gradients stream out through the backward pass; bucket j
+                // of K is produced (j+1)/K of the way through it
+                ready_us: fwd_end + bwd * (j + 1) as f64 / k as f64,
+                dur_us: timing.dur_us,
+                windows: timing.rounds.clamp(1, MAX_WINDOWS),
+            });
+        }
+        self.last_timings = timings;
+
+        let bwd_end = fwd_end + bwd;
+        self.queue.note_boundary(bwd_end, iter);
+        self.queue.stats.stall_us_last = stall;
+        self.queue.stats.stall_us_total += stall;
+        self.clock_us = bwd_end;
+        self.iter_idx += 1;
+        Ok(bwd_end - fwd_start)
+    }
+
+    /// Scheduler observability (priority mode; zeros under barrier).
+    pub fn sched_stats(&self) -> &SchedStats {
+        &self.queue.stats
+    }
+
+    /// The wire timeline's live ops (priority mode).
+    pub fn queued_ops(&self) -> &[crate::trainer::sched::QueuedOp] {
+        self.queue.ops()
+    }
+
+    /// Per-op (duration, rounds, epoch) of the latest collective sequence.
+    pub fn last_timings(&self) -> &[OpTiming] {
+        &self.last_timings
+    }
+
+    /// Complete everything still on the wire timeline; true when the
+    /// queue fully drained (anything else is a stuck op).
+    pub fn drain_queue(&mut self) -> bool {
+        self.queue.quiesce();
+        self.queue.all_done()
     }
 
     /// Paper Fig. 12/16/17 metric: samples processed per second per node.
@@ -426,6 +586,34 @@ mod tests {
         assert_eq!(guarded.guard_recomputes(), 0, "clean run must not trip");
         assert_eq!(guarded.last_fingerprints(), &expect[..]);
         assert_eq!(tg, tp, "an idle guard must not perturb modeled time");
+    }
+
+    #[test]
+    fn priority_sched_bit_identical_and_faster_than_barrier() {
+        let base = cfg(&[ProtoKind::Tcp, ProtoKind::Tcp], 4, Policy::Nezha);
+        let mut pcfg = base.clone();
+        pcfg.sched = SchedMode::Priority;
+        let mut barrier = DdpSim::new(&base, CommProfile::alexnet(), 1, 32).unwrap();
+        let mut priority = DdpSim::new(&pcfg, CommProfile::alexnet(), 1, 32).unwrap();
+        barrier.warmup(3).unwrap();
+        priority.warmup(3).unwrap();
+        let (mut bt, mut pt) = (0.0, 0.0);
+        for it in 0..3 {
+            bt += barrier.iter_time_us().unwrap();
+            pt += priority.iter_time_us().unwrap();
+            assert_eq!(
+                barrier.last_fingerprints(),
+                priority.last_fingerprints(),
+                "gradients diverged at measured iteration {it}"
+            );
+        }
+        // alexnet at 4 nodes on tcp-tcp is comm-bound: the barrier-free
+        // span must beat compute + exposed-comm
+        assert!(pt < bt, "priority {pt} vs barrier {bt}");
+        // the win is real overlap: ops in flight across a boundary
+        assert!(priority.sched_stats().boundary_in_flight_max >= 1);
+        assert!(priority.sched_stats().cross_boundary_ops >= 1);
+        assert!(priority.drain_queue(), "wire timeline must drain");
     }
 
     #[test]

@@ -4,6 +4,9 @@
 //!   (Fig. 15) driving the application-level studies.
 //! * [`bucket`] — gradient bucketing/fusion for the real training loop.
 //! * [`ddp`] — the DDP iteration-time simulator behind Fig. 12/16/17.
+//! * [`sched`] — the barrier-free cross-iteration op-queue (§13):
+//!   enqueue-at-backward / await-at-next-forward wire timeline with
+//!   priority preemption at window boundaries.
 //! * [`e2e`] — the REAL end-to-end loop: AOT train step (PJRT) +
 //!   multi-rail allreduce with real gradient bytes + Pallas SGD update.
 //! * [`vtrain`] — the vTrain-style GPT-3 schedule replay (Table 3,
@@ -13,9 +16,11 @@ pub mod bucket;
 pub mod comm_profile;
 pub mod ddp;
 pub mod e2e;
+pub mod sched;
 pub mod vtrain;
 
 pub use comm_profile::CommProfile;
 pub use ddp::DdpSim;
+pub use sched::{OpQueue, SchedStats};
 pub use e2e::{train_e2e, E2EConfig, StepLog};
 pub use vtrain::{GptModel, VtrainSim};

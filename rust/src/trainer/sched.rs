@@ -1,0 +1,372 @@
+//! Barrier-free cross-iteration op scheduling (DESIGN.md §13).
+//!
+//! The [`OpQueue`] is the trainer's modeled wire-occupancy timeline: the
+//! backward pass *enqueues* each bucket's collective at its production
+//! instant, the next iteration's forward pass *awaits* each bucket at the
+//! step that consumes it, and in between the wire serves ops one window
+//! quantum at a time in ascending (priority, submission) order — so an
+//! early-forward (late-produced) bucket preempts a late-forward one at
+//! the next window boundary instead of waiting behind it.
+//!
+//! Crucially the queue only re-composes *when* already-determined per-op
+//! durations occupy the wire: the collectives themselves run in the same
+//! program order as the barrier baseline (identical op epochs, identical
+//! per-rail RNG streams, identical numerics AND per-op durations), so
+//! preemption reorders wire time, never reduction results.
+
+use crate::net::cpu_pool::SchedMode;
+
+/// Completion-time comparison slack (timeline values are O(1e5) us).
+const EPS_US: f64 = 1e-9;
+
+/// One collective op's timing inputs, as measured by the coordinator
+/// (`DdpSim` collects one per bucket per iteration).
+#[derive(Debug, Clone, Copy)]
+pub struct OpTiming {
+    /// Full modeled duration of the op (us), including retries/failover.
+    pub dur_us: f64,
+    /// Rail rounds of the plan behind it — the preemption window count.
+    pub rounds: usize,
+    /// Plan-cache selection epoch the op executed under.
+    pub epoch: u64,
+}
+
+/// Enqueue descriptor for one bucket's collective.
+#[derive(Debug, Clone, Copy)]
+pub struct OpDesc {
+    /// Training iteration that produced the bucket.
+    pub iter: u64,
+    /// Bucket production index within the iteration.
+    pub bucket: usize,
+    /// Wire priority (= consumption position next forward; 0 first).
+    pub priority: u32,
+    /// Plan-cache selection epoch the collective executed under.
+    pub epoch: u64,
+    /// Wire-time instant the bucket's gradient is produced (us).
+    pub ready_us: f64,
+    /// Modeled duration on the wire (us).
+    pub dur_us: f64,
+    /// Preemption windows (plan rounds): the op yields the wire at each
+    /// window boundary, never inside one.
+    pub windows: usize,
+}
+
+/// One op on the modeled wire.
+#[derive(Debug, Clone)]
+pub struct QueuedOp {
+    pub seq: u64,
+    pub iter: u64,
+    pub bucket: usize,
+    pub priority: u32,
+    pub epoch: u64,
+    pub ready_us: f64,
+    pub dur_us: f64,
+    quantum_us: f64,
+    remaining_us: f64,
+    pub done_us: Option<f64>,
+}
+
+/// Scheduler observability: enough to assert overlap is real.
+#[derive(Debug, Clone, Default)]
+pub struct SchedStats {
+    pub ops_enqueued: u64,
+    /// Window boundaries where a different op took the wire while another
+    /// was mid-flight.
+    pub preemptions: u64,
+    /// Ops still in flight at the most recent iteration boundary.
+    pub boundary_in_flight_last: usize,
+    /// Max of the above over the run — ≥ 1 proves cross-iteration overlap.
+    pub boundary_in_flight_max: usize,
+    /// Total ops that were in flight across some iteration boundary.
+    pub cross_boundary_ops: u64,
+    /// Forward-stall time waiting on awaited buckets, last iteration (us).
+    pub stall_us_last: f64,
+    /// Cumulative forward-stall time (us).
+    pub stall_us_total: f64,
+}
+
+/// The modeled wire timeline (see module docs). `Barrier` mode serves ops
+/// strictly FIFO — useful for invariant tests; the trainer's barrier path
+/// doesn't build a queue at all.
+#[derive(Debug, Clone)]
+pub struct OpQueue {
+    pub mode: SchedMode,
+    wire_now_us: f64,
+    ops: Vec<QueuedOp>,
+    next_seq: u64,
+    /// Seq of the op that held the wire at the last served quantum.
+    running: Option<u64>,
+    pub stats: SchedStats,
+}
+
+impl OpQueue {
+    pub fn new(mode: SchedMode) -> OpQueue {
+        OpQueue {
+            mode,
+            wire_now_us: 0.0,
+            ops: Vec::new(),
+            next_seq: 0,
+            running: None,
+            stats: SchedStats::default(),
+        }
+    }
+
+    /// Put one bucket's collective on the wire timeline.
+    pub fn enqueue(&mut self, d: OpDesc) {
+        let windows = d.windows.max(1);
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.stats.ops_enqueued += 1;
+        let done_us = if d.dur_us <= 0.0 { Some(d.ready_us) } else { None };
+        self.ops.push(QueuedOp {
+            seq,
+            iter: d.iter,
+            bucket: d.bucket,
+            priority: d.priority,
+            epoch: d.epoch,
+            ready_us: d.ready_us,
+            dur_us: d.dur_us,
+            quantum_us: d.dur_us / windows as f64,
+            remaining_us: d.dur_us,
+            done_us,
+        });
+    }
+
+    /// Serve one window quantum (or jump the idle wire to the earliest
+    /// readiness instant). Returns false once every op is complete.
+    fn step(&mut self) -> bool {
+        let mut pick: Option<usize> = None;
+        let mut next_ready = f64::INFINITY;
+        for (i, o) in self.ops.iter().enumerate() {
+            if o.done_us.is_some() {
+                continue;
+            }
+            if o.ready_us > self.wire_now_us + EPS_US {
+                next_ready = next_ready.min(o.ready_us);
+                continue;
+            }
+            let better = match pick {
+                None => true,
+                Some(p) => {
+                    let p = &self.ops[p];
+                    match self.mode {
+                        SchedMode::Priority => (o.priority, o.seq) < (p.priority, p.seq),
+                        SchedMode::Barrier => o.seq < p.seq,
+                    }
+                }
+            };
+            if better {
+                pick = Some(i);
+            }
+        }
+        match pick {
+            Some(i) => {
+                let seq = self.ops[i].seq;
+                if self.running != Some(seq) {
+                    // another op takes the wire at this window boundary;
+                    // it's a preemption when some op sits mid-flight
+                    let mid_flight = self.ops.iter().any(|o| {
+                        o.done_us.is_none() && o.remaining_us < o.dur_us && o.seq != seq
+                    });
+                    if mid_flight {
+                        self.stats.preemptions += 1;
+                    }
+                    self.running = Some(seq);
+                }
+                let o = &mut self.ops[i];
+                let dt = o.quantum_us.min(o.remaining_us);
+                self.wire_now_us += dt;
+                o.remaining_us -= dt;
+                if o.remaining_us <= EPS_US {
+                    o.remaining_us = 0.0;
+                    o.done_us = Some(self.wire_now_us);
+                    self.running = None;
+                }
+                true
+            }
+            None if next_ready.is_finite() => {
+                self.wire_now_us = next_ready;
+                self.running = None;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Completion time of `(iter, bucket)`, serving the wire as far as
+    /// needed. None if the op was never enqueued (e.g. iteration 0's
+    /// forward awaits nothing).
+    pub fn completion_us(&mut self, iter: u64, bucket: usize) -> Option<f64> {
+        loop {
+            match self.ops.iter().find(|o| o.iter == iter && o.bucket == bucket) {
+                None => return None,
+                Some(o) => {
+                    if let Some(t) = o.done_us {
+                        return Some(t);
+                    }
+                }
+            }
+            if !self.step() {
+                return None;
+            }
+        }
+    }
+
+    /// Serve the wire up to instant `t` (it may overrun `t` by less than
+    /// one window — preemption never lands inside a quantum).
+    fn advance_to(&mut self, t: f64) {
+        while self.wire_now_us < t {
+            let has_work = self
+                .ops
+                .iter()
+                .any(|o| o.done_us.is_none() && o.ready_us < t);
+            if !has_work || !self.step() {
+                break;
+            }
+        }
+        if self.wire_now_us < t {
+            self.wire_now_us = t;
+        }
+    }
+
+    /// Record overlap stats at the boundary ending iteration `iter` (at
+    /// wire instant `t` = backward end) and retire ops no future forward
+    /// can await (completed, produced before `iter`).
+    pub fn note_boundary(&mut self, t: f64, iter: u64) {
+        self.advance_to(t);
+        let still_open = |o: &QueuedOp| match o.done_us {
+            None => true,
+            Some(d) => d > t + EPS_US,
+        };
+        let in_flight = self.ops.iter().filter(|o| still_open(o)).count();
+        let crossing = self
+            .ops
+            .iter()
+            .filter(|o| o.iter == iter && still_open(o))
+            .count();
+        self.stats.boundary_in_flight_last = in_flight;
+        self.stats.boundary_in_flight_max = self.stats.boundary_in_flight_max.max(in_flight);
+        self.stats.cross_boundary_ops += crossing as u64;
+        self.ops.retain(|o| o.done_us.is_none() || o.iter >= iter);
+    }
+
+    /// Complete every queued op; returns the final wire instant.
+    pub fn quiesce(&mut self) -> f64 {
+        while self.step() {}
+        self.ops
+            .iter()
+            .filter_map(|o| o.done_us)
+            .fold(self.wire_now_us, f64::max)
+    }
+
+    /// True when no op is left incomplete (after [`OpQueue::quiesce`],
+    /// anything else is a stuck queue).
+    pub fn all_done(&self) -> bool {
+        self.ops.iter().all(|o| o.done_us.is_some())
+    }
+
+    /// Ops not yet complete on the modeled wire.
+    pub fn in_flight(&self) -> usize {
+        self.ops.iter().filter(|o| o.done_us.is_none()).count()
+    }
+
+    /// The ops currently tracked (completed-but-awaitable and in-flight).
+    pub fn ops(&self) -> &[QueuedOp] {
+        &self.ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn desc(iter: u64, bucket: usize, priority: u32, ready: f64, dur: f64, windows: usize) -> OpDesc {
+        OpDesc { iter, bucket, priority, epoch: 0, ready_us: ready, dur_us: dur, windows }
+    }
+
+    #[test]
+    fn priority_mode_reorders_barrier_mode_is_fifo() {
+        // two ops ready together: priority 0 (enqueued second) first
+        let mut q = OpQueue::new(SchedMode::Priority);
+        q.enqueue(desc(0, 0, 5, 0.0, 100.0, 4));
+        q.enqueue(desc(0, 1, 0, 0.0, 50.0, 2));
+        assert_eq!(q.completion_us(0, 1), Some(50.0));
+        assert_eq!(q.completion_us(0, 0), Some(150.0));
+
+        let mut q = OpQueue::new(SchedMode::Barrier);
+        q.enqueue(desc(0, 0, 5, 0.0, 100.0, 4));
+        q.enqueue(desc(0, 1, 0, 0.0, 50.0, 2));
+        assert_eq!(q.completion_us(0, 0), Some(100.0));
+        assert_eq!(q.completion_us(0, 1), Some(150.0));
+    }
+
+    #[test]
+    fn preemption_happens_only_at_window_boundaries() {
+        // A: prio 5, dur 100 in 10-us windows, ready at 0
+        // B: prio 0, dur 50, ready at 25 → takes the wire at the t=30
+        //    boundary, NOT at 25 (no mid-window preemption)
+        let mut q = OpQueue::new(SchedMode::Priority);
+        q.enqueue(desc(0, 0, 5, 0.0, 100.0, 10));
+        q.enqueue(desc(0, 1, 0, 25.0, 50.0, 5));
+        assert_eq!(q.completion_us(0, 1), Some(80.0), "30 + 50");
+        assert_eq!(q.completion_us(0, 0), Some(150.0), "resumes after B");
+        assert!(q.stats.preemptions >= 1);
+    }
+
+    #[test]
+    fn total_wire_time_is_priority_invariant() {
+        // same ops, any priorities: the wire finishes at the same instant
+        // (preemption reorders occupancy, never total work)
+        let durs = [40.0, 25.0, 60.0, 10.0];
+        let mut ends = Vec::new();
+        for mode in [SchedMode::Barrier, SchedMode::Priority] {
+            let mut q = OpQueue::new(mode);
+            for (i, &d) in durs.iter().enumerate() {
+                q.enqueue(desc(0, i, (durs.len() - i) as u32, 0.0, d, 4));
+            }
+            ends.push(q.quiesce());
+            assert!(q.all_done());
+        }
+        assert!((ends[0] - ends[1]).abs() < 1e-6);
+        assert!((ends[0] - durs.iter().sum::<f64>()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn idle_wire_jumps_to_next_ready() {
+        let mut q = OpQueue::new(SchedMode::Priority);
+        q.enqueue(desc(0, 0, 0, 100.0, 20.0, 2));
+        assert_eq!(q.completion_us(0, 0), Some(120.0));
+        // zero-duration ops complete at their readiness instant
+        q.enqueue(desc(0, 1, 0, 200.0, 0.0, 1));
+        assert_eq!(q.completion_us(0, 1), Some(200.0));
+    }
+
+    #[test]
+    fn boundary_counts_cross_iteration_overlap_and_prunes() {
+        let mut q = OpQueue::new(SchedMode::Priority);
+        q.enqueue(desc(0, 0, 1, 0.0, 30.0, 3));
+        q.enqueue(desc(0, 1, 0, 10.0, 80.0, 4));
+        // boundary at t=50: bucket 0 done (t=30..? — bucket 1 preempts at
+        // t=10? no: prio 0 ready at 10, boundary windows at 10,20,30) —
+        // regardless, bucket 1 (dur 80) cannot be done by t=50
+        q.note_boundary(50.0, 0);
+        assert!(q.stats.boundary_in_flight_last >= 1);
+        assert!(q.stats.boundary_in_flight_max >= 1);
+        assert!(q.stats.cross_boundary_ops >= 1);
+        // awaiting the in-flight op after the boundary still resolves
+        let done = q.completion_us(0, 1).unwrap();
+        assert!(done > 50.0);
+        // a later boundary retires completed older-iteration ops (bucket 1
+        // was done by then and vanishes; bucket 0 may still be mid-window)
+        q.note_boundary(done + 1.0, 1);
+        assert!(!q.ops().iter().any(|o| o.bucket == 1 && o.done_us.is_some()));
+        q.quiesce();
+        assert!(q.all_done());
+    }
+
+    #[test]
+    fn completion_of_unknown_op_is_none() {
+        let mut q = OpQueue::new(SchedMode::Priority);
+        assert_eq!(q.completion_us(3, 7), None);
+    }
+}

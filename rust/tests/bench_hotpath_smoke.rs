@@ -88,6 +88,42 @@ fn hotpath_bench_quick_mode_emits_wellformed_json() {
         "overhead field inconsistent with the recorded throughputs"
     );
 
+    // barrier-free scheduler: modeled barrier vs priority iteration time
+    // per model. The times are deterministic modeled quantities, so here
+    // (unlike the wall-clock sections) the invariants ARE gated:
+    // bit-identical gradients, real overlap, drained queue, priority wins.
+    let scheduler = parsed.get("scheduler").unwrap();
+    assert_eq!(
+        scheduler.get("all_bit_identical").unwrap(),
+        &Json::Bool(true),
+        "priority gradients must match barrier bit-for-bit"
+    );
+    assert_eq!(
+        scheduler.get("all_improved").unwrap(),
+        &Json::Bool(true),
+        "priority must beat barrier on the comm-bound paper models"
+    );
+    let sched_rows = scheduler.get("sweep").unwrap().as_arr().unwrap();
+    assert_eq!(sched_rows.len(), hotpath::SCHED_MODELS.len());
+    for (row, &(model, batch)) in sched_rows.iter().zip(&hotpath::SCHED_MODELS) {
+        assert_eq!(row.get("model").unwrap().as_str(), Some(model));
+        assert_eq!(row.get("batch_per_gpu").unwrap().as_f64(), Some(batch as f64));
+        let bt = row.get("barrier_iter_us").unwrap().as_f64().unwrap();
+        let pt = row.get("priority_iter_us").unwrap().as_f64().unwrap();
+        let speedup = row.get("speedup").unwrap().as_f64().unwrap();
+        assert!(bt > 0.0 && pt > 0.0, "iteration times must be positive");
+        assert!(
+            (speedup - bt / pt).abs() < 1e-9,
+            "scheduler speedup field inconsistent with the recorded times"
+        );
+        assert_eq!(row.get("bit_identical").unwrap(), &Json::Bool(true));
+        assert!(
+            row.get("boundary_in_flight_max").unwrap().as_f64().unwrap() >= 1.0,
+            "{model}: at least one op must be in flight across an iteration boundary"
+        );
+        assert_eq!(row.get("queue_drained").unwrap(), &Json::Bool(true));
+    }
+
     // multi-tenant arbiter sweep: solo vs 2-job vs 4-job aggregate
     // ops/sec (record, don't gate)
     let tenancy = parsed.get("tenancy").unwrap();

@@ -305,6 +305,58 @@ fn racked_pods_mid_op_failover_respects_affinity_masks() {
 }
 
 #[test]
+fn priority_sched_failover_of_cross_iteration_in_flight_op_within_budget() {
+    use nezha::net::cpu_pool::SchedMode;
+    use nezha::trainer::{CommProfile, DdpSim};
+    // Barrier-free training (DESIGN.md §13) keeps collectives in flight
+    // across iteration boundaries; a rail dying mid-run hits one of those
+    // in-flight ops. The §4.4 handler must still recover inside the 200 ms
+    // budget, the reduced gradients must stay bit-identical to a
+    // fault-free twin (failover migrates windows, never changes sums),
+    // and the wire timeline must drain without deadlock.
+    let mk = || {
+        let mut c = cfg("tcp-tcp", Policy::Nezha);
+        c.sched = SchedMode::Priority;
+        DdpSim::new(&c, CommProfile::alexnet(), 1, 32).unwrap()
+    };
+    let mut clean = mk();
+    let mut faulty = mk();
+    clean.warmup(3).unwrap();
+    faulty.warmup(3).unwrap();
+    assert!(
+        faulty.sched_stats().cross_boundary_ops >= 1,
+        "no op was in flight across a boundary before the fault"
+    );
+    // rail 1 goes down from the current fabric instant — the next ops
+    // (including buckets already priced into the in-flight timeline's
+    // successors) hit the window mid-op
+    let t0 = faulty.mr.fab.now_us();
+    faulty.mr.fab.faults = FaultSchedule::none().with(1, t0, t0 + 2e6);
+    for it in 0..3 {
+        let tc = clean.iter_time_us().unwrap();
+        let tf = faulty.iter_time_us().unwrap();
+        assert!(tc > 0.0 && tf > 0.0);
+        assert_eq!(
+            clean.last_fingerprints(),
+            faulty.last_fingerprints(),
+            "failover changed gradient numerics at iteration {it}"
+        );
+    }
+    assert!(
+        faulty.mr.exceptions.failover_count() >= 1,
+        "the down window never tripped a failover"
+    );
+    assert!(faulty.mr.exceptions.all_within_budget());
+    for ev in &faulty.mr.exceptions.events {
+        assert!(ev.recovery_us < PAPER_RECOVERY_BUDGET_US, "{ev:?}");
+        assert_eq!(ev.failed_rail, 1);
+    }
+    // the timeline never wedges: every enqueued op completes
+    assert!(faulty.drain_queue(), "in-flight op stuck after failover");
+    assert!(clean.drain_queue());
+}
+
+#[test]
 fn parallel_executor_all_rails_down_is_an_error() {
     use nezha::net::cpu_pool::ExecMode;
     let mut c = cfg("tcp-tcp", Policy::Nezha);

@@ -185,6 +185,43 @@ fn flapping_rail_is_bounded_and_settles() {
     assert!(mr.exceptions.gray_within_budget());
 }
 
+/// Gray hazards compose with the barrier-free scheduler (DESIGN.md §13):
+/// barrier/priority DDP twins trained under the SAME campaign stay
+/// gradient-bit-exact every iteration, hazards that hit cross-iteration
+/// in-flight ops recover inside the 200 ms budget, real overlap still
+/// happens, and the priority wire timeline drains without deadlock.
+#[test]
+fn chaos_composes_with_priority_scheduler() {
+    use nezha::bench::chaos::run_scheduler_campaign;
+    for &seed in &[1u64, 5, 21, 34] {
+        let c = campaign(seed);
+        for exec in [ExecMode::Serial, ExecMode::Parallel] {
+            let o = run_scheduler_campaign(&c, exec).unwrap();
+            assert!(
+                o.bit_exact,
+                "seed {seed} {}: priority gradients diverged from barrier under hazards ({})",
+                o.exec, o.label
+            );
+            assert!(
+                o.within_budget,
+                "seed {seed} {}: recovery budget blown mid-training ({})",
+                o.exec, o.label
+            );
+            assert!(
+                o.queue_drained,
+                "seed {seed} {}: the wire timeline wedged under hazards ({})",
+                o.exec, o.label
+            );
+            assert!(
+                o.overlapped,
+                "seed {seed} {}: hazards killed all cross-iteration overlap ({})",
+                o.exec, o.label
+            );
+            assert!(o.passed());
+        }
+    }
+}
+
 /// Graceful demotion under a brownout beats binary quarantine end to end
 /// (the integration-level restatement of the grayfault ablation's
 /// acceptance row).

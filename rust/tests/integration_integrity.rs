@@ -183,6 +183,44 @@ fn storm_rail_quarantined_within_budget() {
     assert!(mr.exceptions.all_within_budget());
 }
 
+/// Corruption campaigns compose with the barrier-free scheduler
+/// (DESIGN.md §13): with the wire checksums on, barrier/priority DDP
+/// twins under the SAME corruption storm stay gradient-bit-exact (every
+/// detected corruption recharges identically in both modes), the storm
+/// rail's quarantine can land while ops are in flight across an iteration
+/// boundary without wedging the wire timeline, and recovery stays inside
+/// the 200 ms budget.
+#[test]
+fn corruption_composes_with_priority_scheduler() {
+    use nezha::bench::chaos::run_scheduler_campaign;
+    for &seed in &[1u64, 5, 21] {
+        let c = corruption_campaign(seed);
+        for exec in [ExecMode::Serial, ExecMode::Parallel] {
+            let o = run_scheduler_campaign(&c, exec).unwrap();
+            assert!(
+                o.bit_exact,
+                "seed {seed} {}: priority gradients diverged from barrier under corruption ({})",
+                o.exec, o.label
+            );
+            assert!(
+                o.within_budget,
+                "seed {seed} {}: recovery budget blown mid-training ({})",
+                o.exec, o.label
+            );
+            assert!(
+                o.queue_drained,
+                "seed {seed} {}: quarantine wedged the wire timeline ({})",
+                o.exec, o.label
+            );
+            assert!(
+                o.overlapped,
+                "seed {seed} {}: no cross-iteration overlap survived ({})",
+                o.exec, o.label
+            );
+        }
+    }
+}
+
 /// Trainer-level containment end to end: with the wire checksums ablated,
 /// the per-bucket fingerprint guard catches the poisoned buckets and its
 /// recompute-and-retransmit fallback restores every bucket to the

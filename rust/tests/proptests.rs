@@ -1119,6 +1119,82 @@ fn prop_corruption_sampling_deterministic_and_exec_invariant() {
     }
 }
 
+/// Property: the persistent worker pool's prioritized drain is
+/// result-deterministic — for random job counts and random priorities,
+/// results always come back in submission order with the right values,
+/// run after run, however the OS schedules the workers.
+#[test]
+fn prop_pool_prioritized_results_submission_ordered_and_deterministic() {
+    use nezha::net::cpu_pool::{ExecMode, RailExecutor};
+    let mut rng = Pcg::new(9001);
+    let ex = RailExecutor::new(ExecMode::Parallel);
+    for case in 0..CASES {
+        let n = 1 + rng.below(24) as usize;
+        let prios: Vec<u32> = (0..n).map(|_| rng.below(8) as u32).collect();
+        let run = |prios: &[u32]| -> Vec<usize> {
+            let jobs: Vec<(u32, _)> = prios
+                .iter()
+                .enumerate()
+                .map(|(i, &p)| (p, move || i * 7 + 1))
+                .collect();
+            ex.run_prioritized(jobs)
+        };
+        let expect: Vec<usize> = (0..n).map(|i| i * 7 + 1).collect();
+        let a = run(&prios);
+        assert_eq!(a, expect, "case {case}: results left submission order");
+        let b = run(&prios);
+        assert_eq!(a, b, "case {case}: reruns diverged");
+    }
+}
+
+/// Property: priority scheduling is bit-identical to the barrier baseline
+/// on random synthetic models — random bucket counts, random bucket
+/// sizes, random compute speeds. The collectives run in the same program
+/// order either way (same op epochs, same per-rail RNG streams), so every
+/// measured iteration's gradient fingerprints must match exactly, and the
+/// wire timeline must always drain. (No time-ordering claim here: random
+/// profiles may be compute-bound, where barrier's overlap credit wins.)
+#[test]
+fn prop_priority_sched_bit_identical_on_random_profiles() {
+    use nezha::config::{Config, Policy};
+    use nezha::net::cpu_pool::SchedMode;
+    use nezha::trainer::{CommProfile, DdpSim};
+    let mut rng = Pcg::new(9002);
+    for case in 0..12 {
+        let k = 2 + rng.below(8) as usize;
+        let ops: Vec<u64> = (0..k).map(|_| 1u64 << (18 + rng.below(6))).collect();
+        let sps = rng.range_f64(50.0, 2000.0);
+        let jitter = rng.f64() < 0.5;
+        let mut cfg = Config {
+            nodes: [2usize, 4][rng.below(2) as usize],
+            combo: vec![ProtoKind::Tcp, ProtoKind::Tcp],
+            policy: Policy::Nezha,
+            deterministic: !jitter, // half the cases keep jitter ON
+            seed: 9100 + case as u64,
+            ..Config::default()
+        };
+        let mut barrier =
+            DdpSim::new(&cfg, CommProfile::synthetic("fuzz", ops.clone(), sps), 1, 32).unwrap();
+        cfg.sched = SchedMode::Priority;
+        let mut priority =
+            DdpSim::new(&cfg, CommProfile::synthetic("fuzz", ops, sps), 1, 32).unwrap();
+        barrier.warmup(2).unwrap();
+        priority.warmup(2).unwrap();
+        for it in 0..3 {
+            let bt = barrier.iter_time_us().unwrap();
+            let pt = priority.iter_time_us().unwrap();
+            assert!(bt > 0.0 && pt > 0.0, "case {case} iter {it}");
+            assert_eq!(
+                barrier.last_fingerprints(),
+                priority.last_fingerprints(),
+                "case {case} iter {it} (k={k}): gradients diverged"
+            );
+        }
+        assert_eq!(priority.sched_stats().ops_enqueued, 5 * k as u64, "case {case}");
+        assert!(priority.drain_queue(), "case {case}: timeline left a stuck op");
+    }
+}
+
 /// Property: the FNV-1a integrity checksum detects every single-bit flip
 /// at any position, for windows up to 64 MiB (16M f32 words). Each absorb
 /// step is a bijection in the running hash, so one changed word always
